@@ -1,0 +1,169 @@
+//! E2 — the end-to-end driver: distributed online stream clustering
+//! (Fig. 3b) with the numeric hot-spots running as **AOT-compiled
+//! JAX/Pallas kernels through PJRT** — all three layers composing on a
+//! real workload.
+//!
+//! Streams synthetic topic-mixture posts through
+//! TextCleaning → Bucketizer (XLA LSH) → ClusterSearch (XLA distance) →
+//! Aggregator (XLA centroid update + feedback loop), reports throughput /
+//! latency, and checks clustering quality (same-topic posts co-cluster
+//! better than chance).
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example stream_clustering
+//! ```
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use floe::apps::clustering::{self, text};
+use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::{Landmark, Message};
+use floe::pellet::builtins::CollectSink;
+use floe::pellet::PelletRegistry;
+use floe::runtime::{default_artifact_dir, XlaRuntime};
+
+const POSTS: usize = 4096;
+
+fn main() {
+    floe::util::logging::init();
+
+    // Load the AOT artifacts (L1 Pallas kernels lowered through the L2
+    // JAX model into HLO text, compiled here by PJRT).
+    let rt = Arc::new(
+        XlaRuntime::load(default_artifact_dir())
+            .expect("run `make artifacts` first"),
+    );
+    println!(
+        "runtime: {} kernels on {}",
+        rt.kernel_names().len(),
+        rt.platform_name()
+    );
+    let params =
+        clustering::ClusterParams::from_manifest(&rt.manifest).unwrap();
+    println!(
+        "model: batch={} dim={} bands={}x{} clusters={}",
+        params.batch,
+        params.dim,
+        params.n_bands,
+        params.band_width,
+        params.n_clusters
+    );
+    let model = clustering::ClusterModel::new_random(params, 7);
+
+    let registry = PelletRegistry::with_builtins();
+    clustering::register(&registry, Arc::clone(&rt), Arc::clone(&model));
+    let assignments = Arc::new(Mutex::new(Vec::new()));
+    let a2 = Arc::clone(&assignments);
+    registry.register("demo.Collect", move || {
+        Box::new(CollectSink { collected: Arc::clone(&a2) })
+    });
+
+    let coord = Coordinator::new(
+        ResourceManager::new(SimulatedCloud::tsangpo()),
+        registry,
+    );
+    // Fig. 3b topology: 2 bucketizers, 3 cluster-search pellets.
+    let mut graph =
+        clustering::clustering_graph(params.batch, 2, 3).unwrap();
+    // Tap the aggregator output into a collecting sink.
+    graph.pellets.push({
+        let mut p = floe::graph::PelletSpec::new("tap", "demo.Collect");
+        p.inputs.push(floe::graph::InPortSpec {
+            name: "in".into(),
+            window: floe::graph::WindowSpec::None,
+        });
+        p
+    });
+    graph.edges.push(floe::graph::EdgeSpec::new(
+        "aggregate",
+        "out",
+        "tap",
+        "in",
+    ));
+    let run = coord.launch(graph, LaunchOptions::default()).expect("launch");
+
+    // Stream posts, remembering each post's true topic (generation order
+    // == aggregator processing order is NOT guaranteed, so tag via text).
+    let mut gen = clustering::PostGen::new(99);
+    let mut truth: Vec<usize> = Vec::with_capacity(POSTS);
+    let start = Instant::now();
+    for _ in 0..POSTS {
+        let (topic, post) = gen.post();
+        truth.push(topic);
+        run.inject("clean", "in", Message::text(post)).unwrap();
+    }
+    run.inject(
+        "clean",
+        "in",
+        Message::landmark(Landmark::WindowEnd("flush".into())),
+    )
+    .unwrap();
+    let drained = run.drain(Duration::from_secs(180));
+    let secs = start.elapsed().as_secs_f64();
+
+    let assigned = assignments
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .count();
+    println!(
+        "clustered {assigned}/{POSTS} posts in {secs:.2}s \
+         ({:.0} posts/s), {} model updates, drained={drained}",
+        assigned as f64 / secs,
+        model.update_count()
+    );
+    assert!(drained && assigned == POSTS, "posts lost in flight");
+
+    // Quality check: re-assign a fresh sample of posts per topic through
+    // the trained model and measure intra-topic cluster agreement.
+    let mut per_topic: HashMap<usize, Vec<usize>> = HashMap::new();
+    let mut gen2 = clustering::PostGen::new(1234);
+    let mut sample: Vec<(usize, Vec<f32>)> = Vec::new();
+    while sample.len() < 256 {
+        let (topic, post) = gen2.post();
+        sample.push((topic, text::featurize(&post, params.dim)));
+    }
+    for chunk in sample.chunks(params.batch) {
+        let xs: Vec<Vec<f32>> =
+            chunk.iter().map(|(_, v)| v.clone()).collect();
+        let assigns = model.assign(&rt, &xs).unwrap();
+        for ((topic, _), (cluster, _)) in chunk.iter().zip(assigns) {
+            per_topic.entry(*topic).or_default().push(cluster);
+        }
+    }
+    // For each topic: fraction of posts landing in that topic's modal
+    // cluster.  Random assignment would give ~1/n_clusters.
+    let mut purity_sum = 0.0;
+    let mut topics = 0;
+    for (topic, clusters) in &per_topic {
+        let mut freq: HashMap<usize, usize> = HashMap::new();
+        for c in clusters {
+            *freq.entry(*c).or_default() += 1;
+        }
+        let modal = freq.values().max().copied().unwrap_or(0);
+        let purity = modal as f64 / clusters.len() as f64;
+        purity_sum += purity;
+        topics += 1;
+        println!(
+            "  topic {topic}: {} posts, modal-cluster purity {purity:.2}",
+            clusters.len()
+        );
+    }
+    let mean_purity = purity_sum / topics as f64;
+    let chance = 1.0 / params.n_clusters as f64;
+    println!(
+        "mean intra-topic purity {mean_purity:.2} (chance {chance:.2})"
+    );
+    assert!(
+        mean_purity > 3.0 * chance,
+        "clustering no better than chance"
+    );
+    run.stop();
+    println!("stream_clustering OK");
+}

@@ -1,0 +1,6 @@
+"""Build-time-only package: JAX/Pallas model + AOT lowering for Floe.
+
+Nothing in here is imported at runtime — ``make artifacts`` runs
+``compile.aot`` once to emit ``artifacts/*.hlo.txt`` and the Rust
+coordinator loads those via PJRT.
+"""

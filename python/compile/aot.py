@@ -1,0 +1,58 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts for the Rust PJRT
+runtime.
+
+HLO text (NOT ``.serialize()``): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published ``xla``
+crate binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/load_hlo and README there.
+
+Usage (from the repo's ``python/`` directory, via ``make artifacts``)::
+
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import CONFIG, entry_specs, manifest
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, fn, args in entry_specs(CONFIG):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"aot: wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(CONFIG), f, indent=2)
+    print(f"aot: wrote {mpath}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

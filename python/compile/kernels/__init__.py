@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for the Floe stream-clustering hot-spot + jnp oracles."""
+
+from .distance import MASKED_DIST, pairwise_dist
+from .lsh import lsh_hash
+from . import ref
+
+__all__ = ["MASKED_DIST", "pairwise_dist", "lsh_hash", "ref"]

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: masked pairwise squared-L2 distances.
+
+Compute hot-spot of the ClusterSearch pellets (Fig. 3b, T3..T5): for a batch
+of posts ``x`` ([B, D]) and cluster centroids ``c`` ([K, D]) compute the
+``[B, K]`` squared distances, masking out centroids that are not candidates
+for a given post (the Bucketizer only routes a post to clusters sharing an
+LSH bucket)::
+
+    d2[b, k] = |x_b|^2 - 2 x_b . c_k + |c_k|^2     if mask[b, k] > 0
+             = +BIG                                  otherwise
+
+TPU mapping: row blocks of ``x`` stream through VMEM; the centroid matrix is
+small (K*D*4 bytes) and stays VMEM-resident; the cross term is an MXU matmul
+against ``c^T`` and the norm/epilogue runs on the VPU.  interpret=True for
+CPU-PJRT execution; oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pairwise_dist", "MASKED_DIST", "DEFAULT_BLOCK_ROWS"]
+
+# Finite sentinel for masked-out centroids: +inf does not survive some CPU
+# reductions cleanly and the Rust side compares against this value.
+MASKED_DIST = 3.0e38
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _dist_kernel(x_ref, c_ref, m_ref, o_ref):
+    x = x_ref[...]  # [bm, D]
+    c = c_ref[...]  # [K, D]
+    m = m_ref[...]  # [bm, K]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # [bm, 1]
+    cc = jnp.sum(c * c, axis=1)[None, :]  # [1, K]
+    # MXU: cross term.
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # [bm, K]
+    d2 = xx - 2.0 * xc + cc
+    # Distances are >= 0 up to rounding; clamp tiny negatives from the
+    # expanded form so downstream sqrt/compare is safe.
+    d2 = jnp.maximum(d2, 0.0)
+    o_ref[...] = jnp.where(m > 0.0, d2, MASKED_DIST)
+
+
+def pairwise_dist(
+    x: jax.Array,
+    centroids: jax.Array,
+    mask: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Masked squared-L2 distances: ([B, D], [K, D], [B, K]) -> [B, K] f32."""
+    b, d = x.shape
+    k, dc = centroids.shape
+    if dc != d:
+        raise ValueError(f"centroid dim {dc} != post dim {d}")
+    if mask.shape != (b, k):
+        raise ValueError(f"mask shape {mask.shape} != ({b}, {k})")
+    if b % block_rows != 0:
+        raise ValueError(f"batch {b} not a multiple of block_rows {block_rows}")
+
+    return pl.pallas_call(
+        _dist_kernel,
+        grid=(b // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(x, centroids, mask)

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: locality-sensitive hashing by signed random projection.
+
+This is the compute hot-spot of the Bucketizer pellet (Fig. 3b, T1/T2) in the
+Floe stream-clustering application.  Given a batch of post feature vectors
+``x`` of shape ``[B, D]`` and a projection matrix ``proj`` of shape
+``[D, L*K]`` (``L`` hash bands/tables, ``K`` sign bits per band), it produces
+per-band integer bucket ids of shape ``[B, L]``::
+
+    s       = x @ proj                      # [B, L*K] projections (MXU)
+    bits    = (s >= 0)                      # sign bits (VPU)
+    bucket  = sum_k bits[.., k] * 2**k      # per-band packed id (VPU)
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the post
+batch into ``block_rows`` row blocks resident in VMEM; the projection matrix
+is small (D*L*K * 4 bytes, e.g. 64*128*4 = 32 KiB) and is kept whole in VMEM
+across grid steps.  The matmul targets the MXU; the sign/pack epilogue is a
+vectorized weighted sum on the VPU.  We run with ``interpret=True`` because
+the CPU PJRT plugin cannot execute Mosaic custom-calls; numerics are verified
+against :mod:`python.compile.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lsh_hash", "DEFAULT_BLOCK_ROWS"]
+
+# Rows of the post batch processed per grid step.  8 keeps the x-block tiny
+# for the small-batch streaming case; callers with bigger batches can pass a
+# larger block.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _lsh_kernel(x_ref, r_ref, o_ref, *, n_bands: int, band_width: int):
+    """Single grid step: hash one row-block of posts against the whole
+    projection matrix."""
+    x = x_ref[...]  # [bm, D]
+    r = r_ref[...]  # [D, L*K]
+    # MXU: projections for this row block.
+    s = jnp.dot(x, r, preferred_element_type=jnp.float32)  # [bm, L*K]
+    bits = (s >= 0.0).astype(jnp.int32)
+    bits = bits.reshape(x.shape[0], n_bands, band_width)
+    # VPU: pack K sign bits into one integer bucket id per band.
+    weights = (1 << jnp.arange(band_width, dtype=jnp.int32))  # [K]
+    o_ref[...] = jnp.sum(bits * weights[None, None, :], axis=-1)
+
+
+def lsh_hash(
+    x: jax.Array,
+    proj: jax.Array,
+    *,
+    n_bands: int,
+    band_width: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """Hash ``x`` ([B, D] float32) with ``proj`` ([D, n_bands*band_width])
+    into per-band bucket ids ([B, n_bands] int32).
+
+    ``B`` must be a multiple of ``block_rows`` (AOT shapes are static; the
+    Rust flake pads its message batch).  ``band_width`` must be < 31 so the
+    packed id fits an int32.
+    """
+    b, d = x.shape
+    lk = n_bands * band_width
+    if proj.shape != (d, lk):
+        raise ValueError(f"proj shape {proj.shape} != ({d}, {lk})")
+    if band_width >= 31:
+        raise ValueError("band_width must fit an int32 bucket id")
+    if b % block_rows != 0:
+        raise ValueError(f"batch {b} not a multiple of block_rows {block_rows}")
+
+    kernel = functools.partial(
+        _lsh_kernel, n_bands=n_bands, band_width=band_width
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_rows,),
+        in_specs=[
+            # Row block of posts: HBM -> VMEM per grid step.
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            # Whole projection matrix stays VMEM-resident.
+            pl.BlockSpec((d, lk), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n_bands), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_bands), jnp.int32),
+        interpret=interpret,
+    )(x, proj)

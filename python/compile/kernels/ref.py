@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: the pytest suite sweeps shapes with
+hypothesis and asserts the Pallas kernels (interpret=True) match these
+reference implementations exactly (integer outputs) or to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .distance import MASKED_DIST
+
+__all__ = ["lsh_hash_ref", "pairwise_dist_ref", "cluster_assign_ref"]
+
+
+def lsh_hash_ref(x: jax.Array, proj: jax.Array, *, n_bands: int, band_width: int) -> jax.Array:
+    """Signed-random-projection LSH: [B, D] x [D, L*K] -> [B, L] int32."""
+    s = x @ proj  # [B, L*K]
+    bits = (s >= 0.0).astype(jnp.int32).reshape(x.shape[0], n_bands, band_width)
+    weights = (1 << jnp.arange(band_width, dtype=jnp.int32))
+    return jnp.sum(bits * weights[None, None, :], axis=-1)
+
+
+def pairwise_dist_ref(x: jax.Array, centroids: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked squared-L2 distances: -> [B, K] f32, MASKED_DIST where mask==0."""
+    diff = x[:, None, :] - centroids[None, :, :]  # [B, K, D]
+    d2 = jnp.sum(diff * diff, axis=-1)  # [B, K]
+    return jnp.where(mask > 0.0, d2, MASKED_DIST)
+
+
+def cluster_assign_ref(x: jax.Array, centroids: jax.Array, mask: jax.Array):
+    """Best (masked) centroid per post: -> (idx [B] i32, dist [B] f32)."""
+    d2 = pairwise_dist_ref(x, centroids, mask)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return idx, jnp.min(d2, axis=1)

@@ -1,0 +1,130 @@
+"""L2: JAX compute graph for the Floe stream-clustering pellets (Fig. 3b).
+
+Three AOT entry points, each lowered to one HLO artifact that a Rust flake
+executes via PJRT on the request path:
+
+* ``bucketize``       — Bucketizer pellet (T1/T2): LSH bucket ids per band.
+* ``cluster_assign``  — ClusterSearch pellets (T3..T5): masked nearest
+                        centroid among the candidate clusters.
+* ``centroid_update`` — feedback-loop pellet: streaming centroid update for
+                        the posts just assigned (the "notify Cluster Search
+                        of the updated post in its bucket" loop).
+
+Shapes are static for AOT (see :data:`CONFIG`); the Rust side pads the final
+partial batch and masks padded rows out with ``valid``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lsh_hash, pairwise_dist
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Static AOT shape configuration shared with the Rust runtime via
+    ``artifacts/manifest.json``."""
+
+    batch: int = 32        # posts per XLA call (flake micro-batch)
+    dim: int = 64          # feature-vector dimensionality (topic dictionary)
+    n_bands: int = 8       # LSH bands (hash tables)
+    band_width: int = 12   # sign bits per band -> 4096 buckets/band
+    n_clusters: int = 16   # cluster centroids
+
+
+CONFIG = ClusterConfig()
+
+
+def bucketize(x: jax.Array, proj: jax.Array) -> tuple[jax.Array]:
+    """[B, D] posts -> ([B, L] int32 bucket ids,). Calls the L1 LSH kernel."""
+    return (
+        lsh_hash(
+            x, proj, n_bands=CONFIG.n_bands, band_width=CONFIG.band_width
+        ),
+    )
+
+
+def cluster_assign(
+    x: jax.Array, centroids: jax.Array, mask: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked nearest-centroid search.
+
+    Returns ``(best_idx [B] i32, best_d2 [B] f32, d2 [B, K] f32)``; rows whose
+    mask is all-zero get ``best_d2 == MASKED_DIST`` which the Rust pellet
+    treats as "no candidate, fall back to global search".
+    """
+    d2 = pairwise_dist(x, centroids, mask)  # L1 kernel
+    best_idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    best_d2 = jnp.min(d2, axis=1)
+    return best_idx, best_d2, d2
+
+
+def centroid_update(
+    x: jax.Array,
+    centroids: jax.Array,
+    counts: jax.Array,
+    assign_idx: jax.Array,
+    valid: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming (running-mean) centroid update for one assigned batch.
+
+    ``assign_idx`` is the Aggregator's final per-post cluster, ``valid`` masks
+    padded rows.  Returns ``(new_centroids [K, D], new_counts [K])``.
+    """
+    k = centroids.shape[0]
+    onehot = (assign_idx[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(jnp.float32) * valid[:, None]  # [B, K]
+    added = onehot.T @ x  # [K, D] sum of newly assigned posts
+    n_new = jnp.sum(onehot, axis=0)  # [K]
+    new_counts = counts + n_new
+    merged = centroids * counts[:, None] + added
+    safe = jnp.maximum(new_counts, 1.0)[:, None]
+    new_centroids = jnp.where(
+        (new_counts > 0.0)[:, None], merged / safe, centroids
+    )
+    return new_centroids, new_counts
+
+
+def entry_specs(cfg: ClusterConfig = CONFIG):
+    """(name, fn, arg ShapeDtypeStructs) for every AOT entry point."""
+    f32, i32 = jnp.float32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    b, d, l, k = cfg.batch, cfg.dim, cfg.n_bands, cfg.n_clusters
+    lk = cfg.n_bands * cfg.band_width
+    return [
+        ("bucketize", bucketize, (s((b, d), f32), s((d, lk), f32))),
+        (
+            "cluster_assign",
+            cluster_assign,
+            (s((b, d), f32), s((k, d), f32), s((b, k), f32)),
+        ),
+        (
+            "centroid_update",
+            centroid_update,
+            (
+                s((b, d), f32),
+                s((k, d), f32),
+                s((k,), f32),
+                s((b,), i32),
+                s((b,), f32),
+            ),
+        ),
+    ]
+
+
+def manifest(cfg: ClusterConfig = CONFIG) -> dict:
+    """JSON-serializable manifest the Rust runtime reads next to the HLO
+    artifacts."""
+    entries = {}
+    for name, _fn, args in entry_specs(cfg):
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+            ],
+        }
+    return {"config": asdict(cfg), "entries": entries}

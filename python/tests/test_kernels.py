@@ -1,0 +1,174 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes (batch, dim, bands, band width, clusters) and data;
+the Pallas kernels run under interpret=True and must match the pure-jnp
+oracles exactly (integer bucket ids) / to float tolerance (distances).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import MASKED_DIST, lsh_hash, pairwise_dist
+from compile.kernels.ref import (
+    cluster_assign_ref,
+    lsh_hash_ref,
+    pairwise_dist_ref,
+)
+
+# Deterministic data from a seeded numpy generator; hypothesis drives shapes
+# and the seed.
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# LSH kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block_rows=st.sampled_from([1, 2, 4, 8]),
+    dim=st.sampled_from([3, 8, 17, 64]),
+    n_bands=st.integers(1, 6),
+    band_width=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lsh_matches_ref(blocks, block_rows, dim, n_bands, band_width, seed):
+    b = blocks * block_rows
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((b, dim)), jnp.float32)
+    proj = jnp.asarray(
+        r.standard_normal((dim, n_bands * band_width)), jnp.float32
+    )
+    got = lsh_hash(
+        x, proj, n_bands=n_bands, band_width=band_width, block_rows=block_rows
+    )
+    want = lsh_hash_ref(x, proj, n_bands=n_bands, band_width=band_width)
+    assert got.shape == (b, n_bands)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 100.0))
+def test_lsh_invariant_positive_scaling(seed, scale):
+    """Sign-projection hashes are invariant under positive scaling of the
+    input vector — the LSH property the Bucketizer relies on."""
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((8, 16)), jnp.float32)
+    proj = jnp.asarray(r.standard_normal((16, 4 * 8)), jnp.float32)
+    h1 = lsh_hash(x, proj, n_bands=4, band_width=8)
+    h2 = lsh_hash(x * scale, proj, n_bands=4, band_width=8)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+
+
+def test_lsh_identical_rows_same_bucket():
+    r = _rng(7)
+    row = r.standard_normal((1, 32)).astype(np.float32)
+    x = jnp.asarray(np.repeat(row, 8, axis=0))
+    proj = jnp.asarray(r.standard_normal((32, 3 * 10)), jnp.float32)
+    h = np.asarray(lsh_hash(x, proj, n_bands=3, band_width=10))
+    assert (h == h[0]).all()
+
+
+def test_lsh_bucket_range():
+    r = _rng(11)
+    x = jnp.asarray(r.standard_normal((16, 8)), jnp.float32)
+    proj = jnp.asarray(r.standard_normal((8, 2 * 5)), jnp.float32)
+    h = np.asarray(lsh_hash(x, proj, n_bands=2, band_width=5))
+    assert (h >= 0).all() and (h < 2**5).all()
+
+
+def test_lsh_rejects_bad_shapes():
+    x = jnp.zeros((8, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        lsh_hash(x, jnp.zeros((4, 7), jnp.float32), n_bands=2, band_width=4)
+    with pytest.raises(ValueError):
+        lsh_hash(
+            jnp.zeros((5, 4), jnp.float32),
+            jnp.zeros((4, 8), jnp.float32),
+            n_bands=2,
+            band_width=4,
+            block_rows=2,
+        )
+    with pytest.raises(ValueError):
+        lsh_hash(
+            x, jnp.zeros((4, 2 * 31), jnp.float32), n_bands=2, band_width=31
+        )
+
+
+# ---------------------------------------------------------------------------
+# Distance kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.integers(1, 4),
+    block_rows=st.sampled_from([1, 2, 4, 8]),
+    dim=st.sampled_from([2, 7, 32, 64]),
+    k=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dist_matches_ref(blocks, block_rows, dim, k, seed):
+    b = blocks * block_rows
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((b, dim)), jnp.float32)
+    c = jnp.asarray(r.standard_normal((k, dim)), jnp.float32)
+    mask = jnp.asarray((r.random((b, k)) > 0.3).astype(np.float32))
+    got = np.asarray(pairwise_dist(x, c, mask, block_rows=block_rows))
+    want = np.asarray(pairwise_dist_ref(x, c, mask))
+    masked = np.asarray(mask) == 0.0
+    assert (got[masked] == MASKED_DIST).all()
+    np.testing.assert_allclose(
+        got[~masked], want[~masked], rtol=2e-4, atol=2e-4
+    )
+
+
+def test_dist_zero_distance_to_self():
+    r = _rng(3)
+    c = jnp.asarray(r.standard_normal((8, 16)), jnp.float32)
+    mask = jnp.ones((8, 8), jnp.float32)
+    d = np.asarray(pairwise_dist(c, c, mask))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+
+
+def test_dist_nonnegative():
+    r = _rng(5)
+    x = jnp.asarray(100.0 * r.standard_normal((16, 8)), jnp.float32)
+    c = jnp.asarray(100.0 * r.standard_normal((4, 8)), jnp.float32)
+    d = np.asarray(pairwise_dist(x, c, jnp.ones((16, 4), jnp.float32)))
+    assert (d >= 0.0).all()
+
+
+def test_dist_rejects_bad_shapes():
+    f = jnp.float32
+    with pytest.raises(ValueError):
+        pairwise_dist(jnp.zeros((8, 4), f), jnp.zeros((3, 5), f), jnp.ones((8, 3), f))
+    with pytest.raises(ValueError):
+        pairwise_dist(jnp.zeros((8, 4), f), jnp.zeros((3, 4), f), jnp.ones((8, 2), f))
+    with pytest.raises(ValueError):
+        pairwise_dist(
+            jnp.zeros((6, 4), f), jnp.zeros((3, 4), f), jnp.ones((6, 3), f),
+            block_rows=4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Assignment property: kernel argmin == brute force
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_assign_matches_bruteforce(seed):
+    r = _rng(seed)
+    x = jnp.asarray(r.standard_normal((16, 12)), jnp.float32)
+    c = jnp.asarray(r.standard_normal((6, 12)), jnp.float32)
+    mask = jnp.ones((16, 6), jnp.float32)
+    d = pairwise_dist(x, c, mask)
+    idx = np.asarray(jnp.argmin(d, axis=1))
+    want_idx, _ = cluster_assign_ref(x, c, mask)
+    np.testing.assert_array_equal(idx, np.asarray(want_idx))

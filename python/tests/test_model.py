@@ -1,0 +1,134 @@
+"""L2 model tests: entry-point shapes, assignment semantics, streaming
+centroid-update invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import MASKED_DIST
+from compile.model import (
+    CONFIG,
+    bucketize,
+    centroid_update,
+    cluster_assign,
+    entry_specs,
+    manifest,
+)
+
+
+def _rand(shape, seed=0, dtype=np.float32):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal(shape), dtype
+    )
+
+
+def test_entry_shapes():
+    """Every AOT entry runs at its declared static shapes."""
+    for name, fn, args in entry_specs():
+        concrete = [
+            jnp.zeros(a.shape, a.dtype)
+            if a.dtype == jnp.float32
+            else jnp.zeros(a.shape, a.dtype)
+            for a in args
+        ]
+        out = fn(*concrete)
+        assert isinstance(out, tuple), name
+
+
+def test_bucketize_shape_and_dtype():
+    b, d = CONFIG.batch, CONFIG.dim
+    lk = CONFIG.n_bands * CONFIG.band_width
+    (ids,) = bucketize(_rand((b, d), 1), _rand((d, lk), 2))
+    assert ids.shape == (b, CONFIG.n_bands)
+    assert ids.dtype == jnp.int32
+    assert (np.asarray(ids) < 2**CONFIG.band_width).all()
+
+
+def test_cluster_assign_all_masked_row():
+    b, d, k = CONFIG.batch, CONFIG.dim, CONFIG.n_clusters
+    x = _rand((b, d), 3)
+    c = _rand((k, d), 4)
+    mask = jnp.ones((b, k), jnp.float32).at[0].set(0.0)
+    idx, best, d2 = cluster_assign(x, c, mask)
+    assert best[0] == MASKED_DIST  # "no candidate" sentinel row
+    assert (np.asarray(d2)[0] == MASKED_DIST).all()
+    assert idx.shape == (b,)
+
+
+def test_cluster_assign_picks_true_nearest():
+    b, d, k = CONFIG.batch, CONFIG.dim, CONFIG.n_clusters
+    c = _rand((k, d), 5)
+    # Each post IS one of the centroids -> must be assigned to it.
+    rows = np.random.default_rng(6).integers(0, k, size=b)
+    x = jnp.asarray(np.asarray(c)[rows])
+    idx, best, _ = cluster_assign(x, c, jnp.ones((b, k), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(idx), rows.astype(np.int32))
+    np.testing.assert_allclose(np.asarray(best), 0.0, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_centroid_update_running_mean(seed):
+    """After updating from zero counts, each centroid equals the mean of the
+    posts assigned to it (running-mean invariant)."""
+    b, d, k = CONFIG.batch, CONFIG.dim, CONFIG.n_clusters
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((b, d)), jnp.float32)
+    c0 = jnp.asarray(r.standard_normal((k, d)), jnp.float32)
+    counts0 = jnp.zeros((k,), jnp.float32)
+    assign = jnp.asarray(r.integers(0, k, size=b), jnp.int32)
+    valid = jnp.ones((b,), jnp.float32)
+    c1, counts1 = centroid_update(x, c0, counts0, assign, valid)
+    xa = np.asarray(x)
+    an = np.asarray(assign)
+    for j in range(k):
+        sel = xa[an == j]
+        if len(sel) == 0:
+            np.testing.assert_allclose(
+                np.asarray(c1)[j], np.asarray(c0)[j], atol=1e-5
+            )
+        else:
+            np.testing.assert_allclose(
+                np.asarray(c1)[j], sel.mean(axis=0), rtol=1e-4, atol=1e-4
+            )
+    assert float(jnp.sum(counts1)) == float(b)
+
+
+def test_centroid_update_respects_valid_mask():
+    b, d, k = CONFIG.batch, CONFIG.dim, CONFIG.n_clusters
+    x = _rand((b, d), 8)
+    c0 = _rand((k, d), 9)
+    counts0 = jnp.zeros((k,), jnp.float32)
+    assign = jnp.zeros((b,), jnp.int32)
+    valid = jnp.zeros((b,), jnp.float32)  # everything padded
+    c1, counts1 = centroid_update(x, c0, counts0, assign, valid)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c0), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(counts1), 0.0)
+
+
+def test_centroid_update_weighted_merge():
+    """Counts weight old centroids: one new point moves a count-3 centroid by
+    a quarter of the difference."""
+    d, k, b = CONFIG.dim, CONFIG.n_clusters, CONFIG.batch
+    c0 = jnp.zeros((k, d), jnp.float32)
+    counts0 = jnp.full((k,), 3.0, jnp.float32)
+    x = jnp.zeros((b, d), jnp.float32).at[0].set(4.0)
+    assign = jnp.zeros((b,), jnp.int32)
+    valid = jnp.zeros((b,), jnp.float32).at[0].set(1.0)
+    c1, counts1 = centroid_update(x, c0, counts0, assign, valid)
+    np.testing.assert_allclose(np.asarray(c1)[0], 1.0, atol=1e-5)  # 4/4
+    assert float(counts1[0]) == 4.0
+
+
+def test_manifest_consistent_with_entries():
+    m = manifest()
+    names = {n for n, _f, _a in entry_specs()}
+    assert set(m["entries"]) == names
+    for name, _fn, args in entry_specs():
+        ins = m["entries"][name]["inputs"]
+        assert len(ins) == len(args)
+        for spec, a in zip(ins, args):
+            assert tuple(spec["shape"]) == a.shape
+            assert spec["dtype"] == a.dtype.name
+    assert m["config"]["batch"] == CONFIG.batch

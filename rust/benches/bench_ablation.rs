@@ -1,0 +1,165 @@
+//! Ablations for the design choices called out in DESIGN.md §6, over the
+//! Fig. 4 simulator (spikes profile — the discriminating workload):
+//!
+//! * α (instances per core) — 1/2/4/8
+//! * dynamic-strategy sampling interval — responsiveness vs flutter
+//! * scale-down hysteresis (Algorithm 1's second check) on/off
+//! * hybrid deviation threshold — when it escapes to dynamic
+
+use floe::adaptation::{
+    AdaptationStrategy, DynamicStrategy, HybridStrategy,
+};
+use floe::flake::FlakeObservation;
+use floe::sim::{
+    simulate, SimConfig, StrategyKind, WorkloadGen, WorkloadProfile,
+};
+
+fn cfg(alpha: usize, sample: f64) -> SimConfig {
+    SimConfig {
+        duration: 3000.0,
+        alpha,
+        sample_interval: sample,
+        ..SimConfig::default()
+    }
+}
+
+fn main() {
+    println!("# Ablations over the spikes profile (3000s sim)");
+
+    // --- alpha sweep --------------------------------------------------
+    println!("\n## alpha (instances per core), dynamic strategy");
+    println!(
+        "{:>6} {:>12} {:>6} {:>11} {:>9}",
+        "alpha", "core-secs", "peak", "violations", "peak-q"
+    );
+    for &alpha in &[1usize, 2, 4, 8] {
+        let r = simulate(
+            WorkloadProfile::spikes_default(100.0),
+            StrategyKind::Dynamic,
+            &cfg(alpha, 5.0),
+        );
+        println!(
+            "{alpha:>6} {:>12.0} {:>6} {:>11} {:>9.0}",
+            r.core_seconds, r.peak_cores, r.latency_violations, r.peak_queue
+        );
+    }
+
+    // --- sampling interval sweep ---------------------------------------
+    println!("\n## dynamic sampling interval (s)");
+    println!(
+        "{:>9} {:>12} {:>6} {:>11} {:>9}",
+        "interval", "core-secs", "peak", "violations", "peak-q"
+    );
+    for &s in &[1.0f64, 2.0, 5.0, 15.0, 30.0] {
+        let r = simulate(
+            WorkloadProfile::spikes_default(100.0),
+            StrategyKind::Dynamic,
+            &cfg(4, s),
+        );
+        println!(
+            "{s:>9} {:>12.0} {:>6} {:>11} {:>9.0}",
+            r.core_seconds, r.peak_cores, r.latency_violations, r.peak_queue
+        );
+    }
+
+    // --- hysteresis on/off ----------------------------------------------
+    // Replayed directly against the strategy (no hysteresis = scale down
+    // whenever demand < current capacity), measuring allocation changes
+    // per simulated hour — the flutter Algorithm 1's second check avoids.
+    println!("\n## scale-down hysteresis (allocation changes per 3000s)");
+    for &hysteresis in &[true, false] {
+        let mut gen =
+            WorkloadGen::new(WorkloadProfile::spikes_default(100.0), 42);
+        let mut d = DynamicStrategy::default();
+        let mut cores = 0usize;
+        let mut changes = 0usize;
+        let mut queue = 0.0f64;
+        for t in 0..3000 {
+            let arr = gen.arrivals(t as f64, 1.0);
+            queue += arr;
+            let cap = (cores * 4) as f64 / 0.1;
+            queue -= queue.min(cap);
+            if t % 5 == 0 {
+                let obs = FlakeObservation {
+                    queue_len: queue as usize,
+                    arrival_rate: arr,
+                    completion_rate: 0.0,
+                    service_latency: 0.1,
+                    selectivity: 1.0,
+                    cores,
+                    instances: cores * 4,
+                };
+                let want = if hysteresis {
+                    d.decide(&obs, t as f64)
+                } else {
+                    // naive: match capacity to instantaneous demand
+                    ((arr * 0.1 / 4.0).ceil() as usize).min(64)
+                };
+                if want != cores {
+                    changes += 1;
+                    cores = want;
+                }
+            }
+        }
+        println!(
+            "  hysteresis={hysteresis:<5} allocation changes: {changes}"
+        );
+    }
+
+    // --- hybrid deviation threshold --------------------------------------
+    println!("\n## hybrid deviation threshold");
+    println!(
+        "{:>10} {:>12} {:>6} {:>11} {:>14}",
+        "deviation", "core-secs", "peak", "violations", "dynamic-mode?"
+    );
+    for &dev in &[0.1f64, 0.25, 0.5, 1.0] {
+        // Rebuild the hybrid manually so we can vary the threshold.
+        let profile = WorkloadProfile::spikes_default(100.0);
+        let mut gen = WorkloadGen::new(profile.clone(), 42);
+        let mut h = HybridStrategy::new(2, profile.burst_rate(), dev);
+        let mut cores = 0usize;
+        let mut core_secs = 0.0;
+        let mut peak = 0usize;
+        let mut queue = 0.0f64;
+        let mut went_dynamic = false;
+        let mut window: Vec<(f64, f64)> = Vec::new();
+        let mut cum = 0.0;
+        for t in 0..3000 {
+            let arr = gen.arrivals(t as f64, 1.0);
+            cum += arr;
+            queue += arr;
+            let cap = (cores * 4) as f64 / 0.1;
+            queue -= queue.min(cap);
+            window.push((t as f64, cum));
+            if window.len() > 5 {
+                window.remove(0);
+            }
+            if t % 5 == 0 {
+                let rate = if window.len() >= 2 {
+                    let (t0, a0) = window[0];
+                    let (t1, a1) = window[window.len() - 1];
+                    if t1 > t0 { (a1 - a0) / (t1 - t0) } else { 0.0 }
+                } else {
+                    0.0
+                };
+                let obs = FlakeObservation {
+                    queue_len: queue as usize,
+                    arrival_rate: rate,
+                    completion_rate: 0.0,
+                    service_latency: 0.1,
+                    selectivity: 1.0,
+                    cores,
+                    instances: cores * 4,
+                };
+                cores = h.decide(&obs, t as f64);
+                went_dynamic |= h.is_dynamic();
+            }
+            core_secs += cores as f64;
+            peak = peak.max(cores);
+        }
+        println!(
+            "{dev:>10} {core_secs:>12.0} {peak:>6} {:>11} {went_dynamic:>14}",
+            "-"
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Micro: transport throughput — in-proc bounded queue vs framed TCP —
+//! plus the message codec, the framework's per-message floor.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use floe::channel::{SyncQueue, TcpReceiver, TcpSender, Transport};
+use floe::message::Message;
+
+fn bench_inproc(n: usize, payload: usize) -> f64 {
+    let q = Arc::new(SyncQueue::new(8192));
+    let q2 = Arc::clone(&q);
+    let consumer = thread::spawn(move || {
+        let mut got = 0;
+        while got < n {
+            if q2.pop().is_ok() {
+                got += 1;
+            }
+        }
+    });
+    let msg = Message::f32s(vec![0.5; payload / 4]);
+    let start = Instant::now();
+    for _ in 0..n {
+        q.push(msg.clone()).unwrap();
+    }
+    consumer.join().unwrap();
+    n as f64 / start.elapsed().as_secs_f64()
+}
+
+fn bench_tcp(n: usize, payload: usize) -> f64 {
+    let q = Arc::new(SyncQueue::new(8192));
+    let mut ports = HashMap::new();
+    ports.insert("in".to_string(), Arc::clone(&q));
+    let mut rx = TcpReceiver::start(0, ports).unwrap();
+    let tx = TcpSender::connect(&rx.endpoint(), "in").unwrap();
+    let q2 = Arc::clone(&q);
+    let consumer = thread::spawn(move || {
+        let mut got = 0;
+        while got < n {
+            if q2.pop().is_ok() {
+                got += 1;
+            }
+        }
+    });
+    let msg = Message::f32s(vec![0.5; payload / 4]);
+    let start = Instant::now();
+    for _ in 0..n {
+        tx.send(msg.clone()).unwrap();
+    }
+    consumer.join().unwrap();
+    let rate = n as f64 / start.elapsed().as_secs_f64();
+    rx.shutdown();
+    rate
+}
+
+fn bench_codec(n: usize, payload: usize) -> (f64, f64) {
+    let msg = Message::f32s(vec![0.5; payload / 4]).with_key("k");
+    let start = Instant::now();
+    let mut bytes = 0usize;
+    let mut enc = Vec::new();
+    for _ in 0..n {
+        enc = msg.encode();
+        bytes += enc.len();
+    }
+    let enc_rate = n as f64 / start.elapsed().as_secs_f64();
+    let start = Instant::now();
+    for _ in 0..n {
+        let _ = Message::decode(&enc).unwrap();
+    }
+    let dec_rate = n as f64 / start.elapsed().as_secs_f64();
+    let _ = bytes;
+    (enc_rate, dec_rate)
+}
+
+fn main() {
+    println!("# Channel transports — messages/second");
+    println!(
+        "{:>10} {:>14} {:>14} {:>14} {:>14}",
+        "payload", "inproc", "tcp", "encode", "decode"
+    );
+    for &payload in &[64usize, 1024, 16384] {
+        let inproc = bench_inproc(200_000, payload);
+        let tcp = bench_tcp(50_000, payload);
+        let (enc, dec) = bench_codec(200_000, payload);
+        println!(
+            "{payload:>10} {inproc:>14.0} {tcp:>14.0} {enc:>14.0} {dec:>14.0}"
+        );
+    }
+}

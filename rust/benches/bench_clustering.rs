@@ -1,0 +1,70 @@
+//! E2: end-to-end throughput of the Fig. 3b stream-clustering dataflow
+//! with AOT XLA kernels on the hot path, swept over topology (bucketizer /
+//! search parallelism).  Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use floe::apps::clustering;
+use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::{Landmark, Message};
+use floe::pellet::PelletRegistry;
+use floe::runtime::{default_artifact_dir, XlaRuntime};
+
+fn run_once(
+    rt: &Arc<XlaRuntime>,
+    posts: usize,
+    buckets: usize,
+    searchers: usize,
+) -> (f64, u64) {
+    let params =
+        clustering::ClusterParams::from_manifest(&rt.manifest).unwrap();
+    let model = clustering::ClusterModel::new_random(params, 7);
+    let registry = PelletRegistry::with_builtins();
+    clustering::register(&registry, Arc::clone(rt), Arc::clone(&model));
+    let coord = Coordinator::new(
+        ResourceManager::new(SimulatedCloud::tsangpo()),
+        registry,
+    );
+    let graph =
+        clustering::clustering_graph(params.batch, buckets, searchers)
+            .unwrap();
+    let run = coord.launch(graph, LaunchOptions::default()).unwrap();
+    let mut gen = clustering::PostGen::new(5);
+    let start = Instant::now();
+    for _ in 0..posts {
+        let (_, text) = gen.post();
+        run.inject("clean", "in", Message::text(text)).unwrap();
+    }
+    run.inject(
+        "clean",
+        "in",
+        Message::landmark(Landmark::WindowEnd("f".into())),
+    )
+    .unwrap();
+    assert!(run.drain(Duration::from_secs(300)));
+    let secs = start.elapsed().as_secs_f64();
+    let updates = model.update_count();
+    run.stop();
+    (posts as f64 / secs, updates)
+}
+
+fn main() {
+    let rt = Arc::new(
+        XlaRuntime::load(default_artifact_dir())
+            .expect("run `make artifacts` first"),
+    );
+    println!("# Fig. 3b stream clustering — end-to-end throughput (XLA hot path)");
+    println!(
+        "{:>8} {:>12} {:>10} {:>12} {:>9}",
+        "posts", "bucketizers", "searchers", "posts/s", "updates"
+    );
+    for &(buckets, searchers) in &[(1usize, 1usize), (2, 3), (4, 6)] {
+        let (rate, updates) = run_once(&rt, 2048, buckets, searchers);
+        println!(
+            "{:>8} {buckets:>12} {searchers:>10} {rate:>12.0} {updates:>9}",
+            2048
+        );
+    }
+}

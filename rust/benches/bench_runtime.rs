@@ -1,0 +1,75 @@
+//! E10: AOT kernel execution latency through PJRT — the per-batch cost of
+//! the L1 Pallas kernels on the Rust hot path, plus the implied
+//! posts/second ceiling of the XLA stage.  Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use floe::apps::clustering::{make_projection, ClusterModel, ClusterParams};
+use floe::runtime::{default_artifact_dir, XlaRuntime};
+use floe::util::rng::Rng;
+
+fn main() {
+    let rt = Arc::new(
+        XlaRuntime::load(default_artifact_dir())
+            .expect("run `make artifacts` first"),
+    );
+    let p = ClusterParams::from_manifest(&rt.manifest).unwrap();
+    let model = ClusterModel::new_random(p, 1);
+    let proj = make_projection(&p, 2);
+    let mut rng = Rng::new(3);
+    let xs: Vec<Vec<f32>> = (0..p.batch)
+        .map(|_| (0..p.dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let assigns: Vec<usize> =
+        (0..p.batch).map(|i| i % p.n_clusters).collect();
+
+    println!(
+        "# AOT kernel latency (batch={}, dim={}, clusters={})",
+        p.batch, p.dim, p.n_clusters
+    );
+    println!(
+        "{:>16} {:>12} {:>14} {:>14}",
+        "kernel", "iters", "us/call", "posts/s"
+    );
+
+    let iters = 300;
+    // Warmup.
+    for _ in 0..10 {
+        model.bucketize(&rt, &proj, &xs).unwrap();
+        model.assign(&rt, &xs).unwrap();
+    }
+
+    let t = Instant::now();
+    for _ in 0..iters {
+        model.bucketize(&rt, &proj, &xs).unwrap();
+    }
+    let us = t.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    println!(
+        "{:>16} {iters:>12} {us:>14.1} {:>14.0}",
+        "bucketize",
+        p.batch as f64 / (us / 1e6)
+    );
+
+    let t = Instant::now();
+    for _ in 0..iters {
+        model.assign(&rt, &xs).unwrap();
+    }
+    let us = t.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    println!(
+        "{:>16} {iters:>12} {us:>14.1} {:>14.0}",
+        "cluster_assign",
+        p.batch as f64 / (us / 1e6)
+    );
+
+    let t = Instant::now();
+    for _ in 0..iters {
+        model.update(&rt, &xs, &assigns).unwrap();
+    }
+    let us = t.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    println!(
+        "{:>16} {iters:>12} {us:>14.1} {:>14.0}",
+        "centroid_update",
+        p.batch as f64 / (us / 1e6)
+    );
+}

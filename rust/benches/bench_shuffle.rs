@@ -1,0 +1,116 @@
+//! E8 micro: output-router throughput per split mode — the per-message
+//! cost of the dynamic key-hash port mapping (MapReduce shuffle) vs
+//! round-robin and duplicate.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use floe::channel::{SyncQueue, Transport};
+use floe::flake::OutputRouter;
+use floe::graph::SplitMode;
+use floe::message::Message;
+
+struct NullTransport;
+
+impl Transport for NullTransport {
+    fn send(&self, _msg: Message) -> floe::Result<()> {
+        Ok(())
+    }
+    fn describe(&self) -> String {
+        "null".into()
+    }
+}
+
+fn bench_split(split: SplitMode, sinks: usize, n: usize, keyed: bool) -> f64 {
+    let mut r = OutputRouter::new();
+    r.add_port("out", split);
+    for _ in 0..sinks {
+        r.add_target("out", Arc::new(NullTransport)).unwrap();
+    }
+    let msgs: Vec<Message> = (0..256)
+        .map(|i| {
+            let m = Message::text("payload");
+            if keyed {
+                m.with_key(format!("key-{}", i % 64))
+            } else {
+                m
+            }
+        })
+        .collect();
+    let start = Instant::now();
+    for i in 0..n {
+        r.route("out", msgs[i % msgs.len()].clone()).unwrap();
+    }
+    n as f64 / start.elapsed().as_secs_f64()
+}
+
+fn bench_queue_fanin(sinks: usize, n: usize) -> f64 {
+    // Realistic sink: bounded queues, drained by a thread each.
+    let mut r = OutputRouter::new();
+    r.add_port("out", SplitMode::KeyHash);
+    let mut joins = Vec::new();
+    for _ in 0..sinks {
+        let q = Arc::new(SyncQueue::new(4096));
+        let q2 = Arc::clone(&q);
+        joins.push(std::thread::spawn(move || {
+            let mut seen = 0usize;
+            while q2.pop().is_ok() {
+                seen += 1;
+            }
+            seen
+        }));
+        r.add_target(
+            "out",
+            Arc::new(floe::channel::InProcTransport {
+                queue: q,
+                label: "s".into(),
+            }),
+        )
+        .unwrap();
+    }
+    let start = Instant::now();
+    for i in 0..n {
+        r.route(
+            "out",
+            Message::text("v").with_key(format!("k{}", i % 128)),
+        )
+        .unwrap();
+    }
+    let rate = n as f64 / start.elapsed().as_secs_f64();
+    drop(r);
+    // Close queues by dropping router transports; threads exit on close.
+    // (Transports hold the queues; dropping the router drops them.)
+    rate
+}
+
+fn main() {
+    println!("# Output router — messages/second per split mode");
+    println!(
+        "{:>12} {:>6} {:>14}",
+        "split", "sinks", "msg/s"
+    );
+    let n = 2_000_000;
+    for &sinks in &[2usize, 8, 32] {
+        println!(
+            "{:>12} {sinks:>6} {:>14.0}",
+            "roundrobin",
+            bench_split(SplitMode::RoundRobin, sinks, n, false)
+        );
+        println!(
+            "{:>12} {sinks:>6} {:>14.0}",
+            "keyhash",
+            bench_split(SplitMode::KeyHash, sinks, n, true)
+        );
+        println!(
+            "{:>12} {sinks:>6} {:>14.0}",
+            "duplicate",
+            bench_split(SplitMode::Duplicate, sinks, n / 10, false)
+        );
+    }
+    println!(
+        "{:>12} {:>6} {:>14.0}   (bounded queues + drain threads)",
+        "keyhash+q",
+        8,
+        bench_queue_fanin(8, 500_000)
+    );
+}

@@ -1,0 +1,519 @@
+//! Resource-adaptation strategies (§III "Resource Adaptation Strategies").
+//!
+//! Three strategies decide per-flake core allocations from flake
+//! instrumentation:
+//!
+//! * [`StaticLookAhead`] — the "oracle user" allocation: fixed cores per
+//!   pellet computed from hinted latency/selectivity/rate:
+//!   `P_i ≈ (l_i × m_i)/(t + ε)`, `m_i = m_{i-1} × s_i`, `C_i = ⌈P_i/α⌉`.
+//! * [`DynamicStrategy`] — Algorithm 1: compares the instantaneous arrival
+//!   rate with the processing capacity and scales cores up/down, with a
+//!   hysteresis check so the allocation does not flutter.
+//! * [`HybridStrategy`] — takes the static hints but does not trust the
+//!   oracle: switches to dynamic when the observed rate deviates beyond a
+//!   threshold, and back when it stabilizes near the hint with an empty
+//!   queue.
+//!
+//! Strategies are pure decision functions over [`FlakeObservation`]s, so
+//! the same code drives live flakes (via [`Monitor`]) and the Fig. 4
+//! simulator ([`crate::sim`]).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::container::Container;
+use crate::flake::{Flake, FlakeObservation};
+use crate::util::time::Clock;
+use crate::ALPHA;
+
+/// A per-flake core-allocation policy.
+pub trait AdaptationStrategy: Send {
+    /// Desired core count given the latest observation at time `t`
+    /// (seconds).  Return the current count for "no change".
+    fn decide(&mut self, obs: &FlakeObservation, t: f64) -> usize;
+
+    /// Strategy name for logs/CSV.
+    fn name(&self) -> &'static str;
+}
+
+/// Profile of one pellet on the critical path, for the static plan.
+#[derive(Debug, Clone)]
+pub struct PelletProfile {
+    pub id: String,
+    /// Per-message processing latency with one instance, seconds (`l_i`).
+    pub latency: f64,
+    /// Output messages per input message (`s_i`).
+    pub selectivity: f64,
+}
+
+/// Compute the static look-ahead allocation for a critical path.
+///
+/// `m1` messages arrive at the first pellet within each period `t`
+/// seconds; `epsilon` is the user's latency tolerance.  Returns
+/// `(pellet id, instances P_i, cores C_i)` per pellet.
+pub fn static_plan(
+    path: &[PelletProfile],
+    m1: f64,
+    t: f64,
+    epsilon: f64,
+    alpha: usize,
+) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::with_capacity(path.len());
+    let mut m_i = m1;
+    for (i, p) in path.iter().enumerate() {
+        if i > 0 {
+            m_i *= path[i - 1].selectivity;
+        }
+        let p_i = ((p.latency * m_i) / (t + epsilon)).ceil().max(1.0);
+        let c_i =
+            ((p_i / alpha as f64).ceil() as usize).max(1);
+        out.push((p.id.clone(), p_i as usize, c_i));
+    }
+    out
+}
+
+/// Fixed allocation from the static plan.
+pub struct StaticLookAhead {
+    pub cores: usize,
+}
+
+impl StaticLookAhead {
+    /// Allocation for one pellet using the paper's formula.
+    pub fn for_pellet(
+        latency: f64,
+        messages_per_period: f64,
+        period: f64,
+        epsilon: f64,
+        alpha: usize,
+    ) -> StaticLookAhead {
+        let p = ((latency * messages_per_period) / (period + epsilon))
+            .ceil()
+            .max(1.0);
+        StaticLookAhead {
+            cores: ((p / alpha as f64).ceil() as usize).max(1),
+        }
+    }
+}
+
+impl AdaptationStrategy for StaticLookAhead {
+    fn decide(&mut self, _obs: &FlakeObservation, _t: f64) -> usize {
+        self.cores
+    }
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// Algorithm 1: dynamic adaptation of cores for a flake.
+pub struct DynamicStrategy {
+    /// Relative threshold before scaling (e.g. 0.1 = 10%).
+    pub threshold: f64,
+    /// Instances granted per core (α).
+    pub alpha: usize,
+    /// Lower bound (0 lets an idle flake quiesce completely, as the
+    /// paper's simulation shows for the dynamic strategy).
+    pub min_cores: usize,
+    pub max_cores: usize,
+    /// Queue length that always forces a scale-up check.
+    pub backlog_threshold: usize,
+}
+
+impl Default for DynamicStrategy {
+    fn default() -> Self {
+        DynamicStrategy {
+            threshold: 0.10,
+            alpha: ALPHA,
+            min_cores: 0,
+            max_cores: 64,
+            backlog_threshold: 16,
+        }
+    }
+}
+
+impl DynamicStrategy {
+    /// Messages/sec a given core count can sustain at the observed
+    /// per-message latency.
+    fn capacity(&self, cores: usize, latency: f64) -> f64 {
+        if latency <= 0.0 {
+            return f64::INFINITY;
+        }
+        (cores * self.alpha) as f64 / latency
+    }
+}
+
+impl AdaptationStrategy for DynamicStrategy {
+    fn decide(&mut self, obs: &FlakeObservation, _t: f64) -> usize {
+        let cores = obs.cores;
+        let latency = obs.service_latency;
+        // Demand: what must be processed to keep up — arrivals plus a
+        // drain term for any backlog.
+        let demand = obs.arrival_rate
+            + if obs.queue_len > self.backlog_threshold {
+                obs.queue_len as f64 * 0.1 // drain backlog over ~10 samples
+            } else {
+                0.0
+            };
+        let cap_now = self.capacity(cores.max(1), latency);
+        if demand > cap_now * (1.0 + self.threshold)
+            || (cores == 0 && demand > 0.0)
+        {
+            return (cores + 1).min(self.max_cores);
+        }
+        // Scale down only if the reduced allocation still covers demand
+        // (the second check in Algorithm 1, preventing fluctuation).
+        if cores > self.min_cores {
+            let cap_less = self.capacity(cores.saturating_sub(1), latency);
+            let idle = demand <= 0.0 && obs.queue_len == 0;
+            if idle
+                || (demand < cap_less * (1.0 - self.threshold)
+                    && obs.queue_len <= self.backlog_threshold)
+            {
+                return cores - 1;
+            }
+        }
+        cores
+    }
+
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+}
+
+/// Hybrid mode marker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HybridMode {
+    Static,
+    Dynamic,
+}
+
+/// Hinted static allocation with a dynamic escape hatch.
+pub struct HybridStrategy {
+    /// Static allocation while the hint holds.
+    pub static_cores: usize,
+    /// Expected (hinted) average arrival rate, msg/s.
+    pub expected_rate: f64,
+    /// Relative deviation that triggers the switch to dynamic.
+    pub deviation: f64,
+    /// Queue length that must be reached again before switching back.
+    pub settle_queue: usize,
+    inner: DynamicStrategy,
+    mode: HybridMode,
+}
+
+impl HybridStrategy {
+    pub fn new(
+        static_cores: usize,
+        expected_rate: f64,
+        deviation: f64,
+    ) -> HybridStrategy {
+        HybridStrategy {
+            static_cores,
+            expected_rate,
+            deviation,
+            settle_queue: 8,
+            inner: DynamicStrategy::default(),
+            mode: HybridMode::Static,
+        }
+    }
+
+    /// Current mode, for tests and CSV annotation.
+    pub fn is_dynamic(&self) -> bool {
+        self.mode == HybridMode::Dynamic
+    }
+}
+
+impl AdaptationStrategy for HybridStrategy {
+    fn decide(&mut self, obs: &FlakeObservation, t: f64) -> usize {
+        let rel_dev = if self.expected_rate > 0.0 {
+            (obs.arrival_rate - self.expected_rate).abs()
+                / self.expected_rate
+        } else {
+            if obs.arrival_rate > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        };
+        // An idle flake (no arrivals, empty queue) means the period's data
+        // is fully processed — quiesce rather than treating the zero rate
+        // as a deviation.  The paper notes hybrid "additionally quiesces
+        // to 0 cores once done processing, like the dynamic strategy".
+        if obs.arrival_rate <= 0.0 && obs.queue_len == 0 {
+            self.mode = HybridMode::Static;
+            return 0;
+        }
+        match self.mode {
+            HybridMode::Static => {
+                if rel_dev > self.deviation {
+                    log::debug!(
+                        "hybrid: rate {:.1} deviates from hint {:.1}, \
+                         switching to dynamic",
+                        obs.arrival_rate,
+                        self.expected_rate
+                    );
+                    self.mode = HybridMode::Dynamic;
+                    self.inner.decide(obs, t)
+                } else {
+                    self.static_cores
+                }
+            }
+            HybridMode::Dynamic => {
+                if rel_dev <= self.deviation
+                    && obs.queue_len <= self.settle_queue
+                {
+                    log::debug!("hybrid: rate stabilized, back to static");
+                    self.mode = HybridMode::Static;
+                    self.static_cores
+                } else {
+                    self.inner.decide(obs, t)
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+}
+
+/// One flake under adaptive control.
+pub struct MonitoredFlake {
+    pub flake: Arc<Flake>,
+    pub container: Arc<Container>,
+    pub strategy: Box<dyn AdaptationStrategy>,
+}
+
+/// One recorded monitor sample — the live-runtime analogue of the Fig. 4
+/// simulator series.
+#[derive(Debug, Clone)]
+pub struct AdaptationSample {
+    pub t: f64,
+    pub pellet_id: String,
+    pub strategy: &'static str,
+    pub queue_len: usize,
+    pub arrival_rate: f64,
+    pub cores_before: usize,
+    pub cores_after: usize,
+}
+
+/// Shared, append-only history of monitor decisions.
+#[derive(Clone, Default)]
+pub struct AdaptationHistory {
+    samples: Arc<std::sync::Mutex<Vec<AdaptationSample>>>,
+}
+
+impl AdaptationHistory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&self, s: AdaptationSample) {
+        self.samples.lock().expect("history poisoned").push(s);
+    }
+
+    pub fn snapshot(&self) -> Vec<AdaptationSample> {
+        self.samples.lock().expect("history poisoned").clone()
+    }
+
+    /// Export as CSV with the same columns as the Fig. 4 simulator series
+    /// (plus pellet/strategy labels).
+    pub fn to_csv(&self) -> crate::util::csv::CsvTable {
+        let mut t = crate::util::csv::CsvTable::new(&[
+            "t", "pellet", "strategy", "queue", "arrival_rate", "cores",
+        ]);
+        for s in self.snapshot() {
+            t.push(vec![
+                format!("{:.3}", s.t),
+                s.pellet_id.clone(),
+                s.strategy.to_string(),
+                s.queue_len.to_string(),
+                format!("{:.2}", s.arrival_rate),
+                s.cores_after.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Background monitor: samples flake probes at a fixed interval and applies
+/// the strategies through the owning containers.
+pub struct Monitor {
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+    history: AdaptationHistory,
+}
+
+impl Monitor {
+    pub fn start(
+        mut entries: Vec<MonitoredFlake>,
+        clock: Arc<dyn Clock>,
+        interval: Duration,
+    ) -> Monitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let history = AdaptationHistory::new();
+        let history2 = history.clone();
+        let join = thread::Builder::new()
+            .name("floe-monitor".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    let t = clock.now();
+                    for e in entries.iter_mut() {
+                        let obs = e.flake.observe(t);
+                        let want = e.strategy.decide(&obs, t);
+                        // Live flakes need >= 1 core to keep draining.
+                        let want = want.max(1);
+                        if want != obs.cores {
+                            if let Err(err) = e
+                                .container
+                                .set_flake_cores(e.flake.pellet_id(), want)
+                            {
+                                log::warn!(
+                                    "monitor: resize {} -> {want}: {err}",
+                                    e.flake.pellet_id()
+                                );
+                            } else {
+                                log::debug!(
+                                    "monitor[{}]: {} cores {} -> {want}",
+                                    e.strategy.name(),
+                                    e.flake.pellet_id(),
+                                    obs.cores
+                                );
+                            }
+                        }
+                        history2.push(AdaptationSample {
+                            t,
+                            pellet_id: e.flake.pellet_id().to_string(),
+                            strategy: e.strategy.name(),
+                            queue_len: obs.queue_len,
+                            arrival_rate: obs.arrival_rate,
+                            cores_before: obs.cores,
+                            cores_after: e.flake.cores(),
+                        });
+                    }
+                    thread::sleep(interval);
+                }
+            })
+            .expect("spawn monitor");
+        Monitor { stop, join: Some(join), history }
+    }
+
+    /// The decision history recorded so far (live Fig. 4 series).
+    pub fn history(&self) -> &AdaptationHistory {
+        &self.history
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(
+        queue: usize,
+        arr: f64,
+        lat: f64,
+        cores: usize,
+    ) -> FlakeObservation {
+        FlakeObservation {
+            queue_len: queue,
+            arrival_rate: arr,
+            completion_rate: 0.0,
+            service_latency: lat,
+            selectivity: 1.0,
+            cores,
+            instances: cores * ALPHA,
+        }
+    }
+
+    #[test]
+    fn static_plan_matches_formula() {
+        // l=0.1s, 1200 msgs per 60s period, eps=20 -> P = ceil(120/80)=2,
+        // C = ceil(2/4)=1.  Next pellet sees m*selectivity.
+        let path = vec![
+            PelletProfile {
+                id: "a".into(),
+                latency: 0.1,
+                selectivity: 2.0,
+            },
+            PelletProfile {
+                id: "b".into(),
+                latency: 0.5,
+                selectivity: 1.0,
+            },
+        ];
+        let plan = static_plan(&path, 1200.0, 60.0, 20.0, 4);
+        assert_eq!(plan[0], ("a".to_string(), 2, 1));
+        // m2 = 2400, P = ceil(0.5*2400/80) = 15, C = ceil(15/4) = 4
+        assert_eq!(plan[1], ("b".to_string(), 15, 4));
+    }
+
+    #[test]
+    fn static_strategy_is_constant() {
+        let mut s = StaticLookAhead { cores: 3 };
+        assert_eq!(s.decide(&obs(100, 1000.0, 0.1, 1), 0.0), 3);
+        assert_eq!(s.decide(&obs(0, 0.0, 0.1, 3), 1.0), 3);
+    }
+
+    #[test]
+    fn dynamic_scales_up_under_load() {
+        let mut d = DynamicStrategy::default();
+        // capacity at 1 core = 4/0.1 = 40 msg/s; arrivals 100 -> scale up
+        assert_eq!(d.decide(&obs(0, 100.0, 0.1, 1), 0.0), 2);
+        // from 0 cores any demand scales up
+        assert_eq!(d.decide(&obs(5, 1.0, 0.1, 0), 0.0), 1);
+    }
+
+    #[test]
+    fn dynamic_scales_down_with_hysteresis() {
+        let mut d = DynamicStrategy::default();
+        // capacity at 3 cores = 120; at 2 cores = 80; arrivals 50 < 80*0.9
+        // -> safe to drop one.
+        assert_eq!(d.decide(&obs(0, 50.0, 0.1, 3), 0.0), 2);
+        // arrivals 75 is within 10% of 80 -> hold (no flutter).
+        assert_eq!(d.decide(&obs(0, 75.0, 0.1, 2), 0.0), 2);
+        // idle -> quiesce toward min_cores
+        assert_eq!(d.decide(&obs(0, 0.0, 0.1, 1), 0.0), 0);
+    }
+
+    #[test]
+    fn dynamic_drains_backlog() {
+        let mut d = DynamicStrategy::default();
+        // low arrivals but big queue -> demand includes drain term
+        let got = d.decide(&obs(1000, 10.0, 0.1, 1), 0.0);
+        assert_eq!(got, 2);
+    }
+
+    #[test]
+    fn hybrid_switches_modes() {
+        let mut h = HybridStrategy::new(2, 100.0, 0.25);
+        // near hint -> static cores
+        assert_eq!(h.decide(&obs(0, 110.0, 0.01, 2), 0.0), 2);
+        assert!(!h.is_dynamic());
+        // spike -> dynamic takes over and scales
+        let c = h.decide(&obs(500, 400.0, 0.05, 2), 1.0);
+        assert!(h.is_dynamic());
+        assert!(c >= 3, "cores {c}");
+        // settle -> back to static
+        let c = h.decide(&obs(0, 100.0, 0.01, c), 2.0);
+        assert!(!h.is_dynamic());
+        assert_eq!(c, 2);
+        // idle -> quiesce to 0 like dynamic
+        assert_eq!(h.decide(&obs(0, 0.0, 0.01, 2), 3.0), 0);
+    }
+}

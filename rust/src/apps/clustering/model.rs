@@ -1,0 +1,255 @@
+//! Shared cluster model and typed wrappers over the AOT XLA kernels
+//! (`bucketize`, `cluster_assign`, `centroid_update`) for the
+//! stream-clustering pellets.
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{FloeError, Result};
+use crate::runtime::{Manifest, Tensor, XlaRuntime};
+use crate::util::rng::Rng;
+
+/// Static shape parameters shared with `python/compile/model.py` through
+/// `artifacts/manifest.json`.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterParams {
+    pub batch: usize,
+    pub dim: usize,
+    pub n_bands: usize,
+    pub band_width: usize,
+    pub n_clusters: usize,
+}
+
+impl ClusterParams {
+    pub fn from_manifest(m: &Manifest) -> Result<ClusterParams> {
+        Ok(ClusterParams {
+            batch: m.config_usize("batch")?,
+            dim: m.config_usize("dim")?,
+            n_bands: m.config_usize("n_bands")?,
+            band_width: m.config_usize("band_width")?,
+            n_clusters: m.config_usize("n_clusters")?,
+        })
+    }
+}
+
+/// Random LSH projection matrix `[dim, n_bands × band_width]`, seeded so
+/// every bucketizer pellet instance agrees.
+pub fn make_projection(p: &ClusterParams, seed: u64) -> Arc<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let n = p.dim * p.n_bands * p.band_width;
+    Arc::new((0..n).map(|_| rng.normal() as f32).collect())
+}
+
+/// The shared, continuously updated cluster state (centroids + counts).
+pub struct ClusterModel {
+    pub params: ClusterParams,
+    inner: Mutex<ModelState>,
+}
+
+struct ModelState {
+    /// `[n_clusters × dim]`, row-major.
+    centroids: Vec<f32>,
+    /// `[n_clusters]` assigned-post counts.
+    counts: Vec<f32>,
+    updates: u64,
+}
+
+impl ClusterModel {
+    /// Random unit-vector centroids.
+    pub fn new_random(params: ClusterParams, seed: u64) -> Arc<ClusterModel> {
+        let mut rng = Rng::new(seed);
+        let mut centroids = vec![0f32; params.n_clusters * params.dim];
+        for row in centroids.chunks_mut(params.dim) {
+            let mut norm = 0f32;
+            for x in row.iter_mut() {
+                *x = rng.normal() as f32;
+                norm += *x * *x;
+            }
+            let norm = norm.sqrt().max(1e-6);
+            for x in row.iter_mut() {
+                *x /= norm;
+            }
+        }
+        Arc::new(ClusterModel {
+            params,
+            inner: Mutex::new(ModelState {
+                centroids,
+                counts: vec![0f32; params.n_clusters],
+                updates: 0,
+            }),
+        })
+    }
+
+    pub fn centroids_snapshot(&self) -> (Vec<f32>, Vec<f32>) {
+        let g = self.inner.lock().expect("model poisoned");
+        (g.centroids.clone(), g.counts.clone())
+    }
+
+    pub fn update_count(&self) -> u64 {
+        self.inner.lock().expect("model poisoned").updates
+    }
+
+    /// Pad a partial batch of `dim`-length vectors to the static batch
+    /// shape; returns (flat x, valid count).
+    fn pad_batch(&self, xs: &[Vec<f32>]) -> Result<(Vec<f32>, usize)> {
+        let p = &self.params;
+        if xs.len() > p.batch {
+            return Err(FloeError::Runtime(format!(
+                "batch {} exceeds static batch {}",
+                xs.len(),
+                p.batch
+            )));
+        }
+        let mut flat = vec![0f32; p.batch * p.dim];
+        for (i, x) in xs.iter().enumerate() {
+            if x.len() != p.dim {
+                return Err(FloeError::Runtime(format!(
+                    "vector {i} has dim {}, expected {}",
+                    x.len(),
+                    p.dim
+                )));
+            }
+            flat[i * p.dim..(i + 1) * p.dim].copy_from_slice(x);
+        }
+        Ok((flat, xs.len()))
+    }
+
+    /// LSH bucket ids per band for each vector (bucketize kernel).
+    pub fn bucketize(
+        &self,
+        rt: &XlaRuntime,
+        proj: &[f32],
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<i32>>> {
+        let p = &self.params;
+        let (flat, n) = self.pad_batch(xs)?;
+        let lk = p.n_bands * p.band_width;
+        let out = rt.execute("bucketize", &[
+            Tensor::f32(&[p.batch, p.dim], flat),
+            Tensor::f32(&[p.dim, lk], proj.to_vec()),
+        ])?;
+        let ids = out[0].as_i32().ok_or_else(|| {
+            FloeError::Runtime("bucketize: expected i32 output".into())
+        })?;
+        Ok((0..n)
+            .map(|i| ids[i * p.n_bands..(i + 1) * p.n_bands].to_vec())
+            .collect())
+    }
+
+    /// Nearest-centroid assignment (cluster_assign kernel).  Returns
+    /// `(cluster idx, squared distance)` per input vector.
+    pub fn assign(
+        &self,
+        rt: &XlaRuntime,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<(usize, f32)>> {
+        let p = &self.params;
+        let (flat, n) = self.pad_batch(xs)?;
+        let (centroids, _) = self.centroids_snapshot();
+        let mask = vec![1f32; p.batch * p.n_clusters];
+        let out = rt.execute("cluster_assign", &[
+            Tensor::f32(&[p.batch, p.dim], flat),
+            Tensor::f32(&[p.n_clusters, p.dim], centroids),
+            Tensor::f32(&[p.batch, p.n_clusters], mask),
+        ])?;
+        let idx = out[0].as_i32().ok_or_else(|| {
+            FloeError::Runtime("cluster_assign: expected i32".into())
+        })?;
+        let dist = out[1].as_f32().ok_or_else(|| {
+            FloeError::Runtime("cluster_assign: expected f32".into())
+        })?;
+        Ok((0..n).map(|i| (idx[i] as usize, dist[i])).collect())
+    }
+
+    /// Streaming centroid update (centroid_update kernel) — the feedback
+    /// loop that folds newly assigned posts into the shared model.
+    pub fn update(
+        &self,
+        rt: &XlaRuntime,
+        xs: &[Vec<f32>],
+        assigns: &[usize],
+    ) -> Result<()> {
+        if xs.len() != assigns.len() {
+            return Err(FloeError::Runtime(
+                "update: xs/assigns length mismatch".into(),
+            ));
+        }
+        let p = &self.params;
+        let (flat, n) = self.pad_batch(xs)?;
+        let mut idx = vec![0i32; p.batch];
+        let mut valid = vec![0f32; p.batch];
+        for i in 0..n {
+            idx[i] = assigns[i] as i32;
+            valid[i] = 1.0;
+        }
+        let mut g = self.inner.lock().expect("model poisoned");
+        let out = rt.execute("centroid_update", &[
+            Tensor::f32(&[p.batch, p.dim], flat),
+            Tensor::f32(&[p.n_clusters, p.dim], g.centroids.clone()),
+            Tensor::f32(&[p.n_clusters], g.counts.clone()),
+            Tensor::i32(&[p.batch], idx),
+            Tensor::f32(&[p.batch], valid),
+        ])?;
+        g.centroids = out[0]
+            .as_f32()
+            .ok_or_else(|| {
+                FloeError::Runtime("centroid_update: expected f32".into())
+            })?
+            .to_vec();
+        g.counts = out[1]
+            .as_f32()
+            .ok_or_else(|| {
+                FloeError::Runtime("centroid_update: expected f32".into())
+            })?
+            .to_vec();
+        g.updates += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ClusterParams {
+        ClusterParams {
+            batch: 32,
+            dim: 64,
+            n_bands: 8,
+            band_width: 12,
+            n_clusters: 16,
+        }
+    }
+
+    #[test]
+    fn projection_is_seeded() {
+        let p = params();
+        let a = make_projection(&p, 7);
+        let b = make_projection(&p, 7);
+        assert_eq!(a.len(), 64 * 8 * 12);
+        assert_eq!(*a, *b);
+        let c = make_projection(&p, 8);
+        assert_ne!(*a, *c);
+    }
+
+    #[test]
+    fn centroids_are_unit_norm() {
+        let m = ClusterModel::new_random(params(), 3);
+        let (c, counts) = m.centroids_snapshot();
+        assert_eq!(c.len(), 16 * 64);
+        assert!(counts.iter().all(|&x| x == 0.0));
+        for row in c.chunks(64) {
+            let n: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pad_batch_validates() {
+        let m = ClusterModel::new_random(params(), 3);
+        let ok = m.pad_batch(&vec![vec![0.0; 64]; 5]).unwrap();
+        assert_eq!(ok.0.len(), 32 * 64);
+        assert_eq!(ok.1, 5);
+        assert!(m.pad_batch(&[vec![0.0; 63]]).is_err());
+        assert!(m.pad_batch(&vec![vec![0.0; 64]; 40]).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Text cleaning (Fig. 3b, T0): stop-word removal, light suffix stemming
+//! and dictionary-hash feature vectors — plus the synthetic topic-mixture
+//! post generator standing in for the paper's news/microblog feeds.
+
+use crate::message::key_hash;
+use crate::util::rng::Rng;
+
+/// Common English stop words (enough for the synthetic corpus).
+const STOPWORDS: &[&str] = &[
+    "a", "an", "the", "is", "are", "was", "were", "be", "been", "to", "of",
+    "and", "or", "in", "on", "at", "for", "with", "it", "this", "that",
+    "from", "by", "as", "but", "not", "they", "we", "you", "i", "he",
+    "she", "its", "their", "our", "your", "my", "so", "do", "does", "did",
+];
+
+/// Light suffix stemmer (Porter-inspired, first pass only).
+pub fn stem(word: &str) -> String {
+    let w = word.to_lowercase();
+    for suffix in ["ments", "ment", "ings", "ing", "edly", "ed", "ies", "es", "s"]
+    {
+        if let Some(base) = w.strip_suffix(suffix) {
+            if base.len() >= 3 {
+                return base.to_string();
+            }
+        }
+    }
+    w
+}
+
+/// Tokenize, drop stop words and punctuation, stem.
+pub fn clean_tokens(text: &str) -> Vec<String> {
+    text.split(|c: char| !c.is_alphanumeric())
+        .filter(|t| t.len() > 1)
+        .map(|t| t.to_lowercase())
+        .filter(|t| !STOPWORDS.contains(&t.as_str()))
+        .map(|t| stem(&t))
+        .collect()
+}
+
+/// Dictionary-hash featurizer: token counts hashed into `dim` buckets,
+/// L2-normalized — "a feature vector based on dictionary of topic words"
+/// (§IV-B).  Normalization makes the LSH sign-projection scale-invariant.
+pub fn featurize(text: &str, dim: usize) -> Vec<f32> {
+    let mut v = vec![0f32; dim];
+    for tok in clean_tokens(text) {
+        let idx = (key_hash(&tok) % dim as u64) as usize;
+        v[idx] += 1.0;
+    }
+    let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    v
+}
+
+/// Topic vocabularies for the synthetic post stream.
+const TOPICS: &[&[&str]] = &[
+    &["energy", "power", "grid", "meter", "kilowatt", "voltage", "demand",
+      "outage", "transformer", "utility"],
+    &["solar", "panel", "rooftop", "inverter", "sunlight", "renewable",
+      "battery", "storage", "charge", "cell"],
+    &["price", "market", "tariff", "billing", "cost", "saving", "rebate",
+      "discount", "payment", "budget"],
+    &["weather", "storm", "heat", "temperature", "forecast", "wind",
+      "humidity", "rain", "cloud", "front"],
+    &["campus", "building", "classroom", "laboratory", "dorm", "office",
+      "facility", "renovation", "hvac", "lighting"],
+    &["football", "game", "score", "team", "season", "coach", "stadium",
+      "playoff", "touchdown", "fans"],
+    &["movie", "film", "actor", "premiere", "trailer", "studio", "scene",
+      "director", "cinema", "award"],
+    &["traffic", "freeway", "commute", "accident", "lane", "downtown",
+      "transit", "parking", "detour", "rush"],
+];
+
+/// Number of distinct topics in the generator.
+pub fn topic_count() -> usize {
+    TOPICS.len()
+}
+
+/// Synthetic microblog post generator: each post mixes words from one
+/// dominant topic with a little noise from others.
+pub struct PostGen {
+    rng: Rng,
+}
+
+impl PostGen {
+    pub fn new(seed: u64) -> PostGen {
+        PostGen { rng: Rng::new(seed) }
+    }
+
+    /// Generate `(topic id, post text)`.
+    pub fn post(&mut self) -> (usize, String) {
+        let topic = self.rng.range(0, TOPICS.len());
+        let words = 6 + self.rng.range(0, 8);
+        let mut out = Vec::with_capacity(words);
+        for _ in 0..words {
+            let from = if self.rng.chance(0.85) {
+                TOPICS[topic]
+            } else {
+                TOPICS[self.rng.range(0, TOPICS.len())]
+            };
+            out.push(*self.rng.pick(from));
+            if self.rng.chance(0.3) {
+                out.push(*self.rng.pick(STOPWORDS));
+            }
+        }
+        (topic, out.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stemming_examples() {
+        assert_eq!(stem("charging"), "charg");
+        assert_eq!(stem("batteries"), "batter");
+        assert_eq!(stem("meters"), "meter");
+        assert_eq!(stem("payment"), "pay");
+        assert_eq!(stem("grid"), "grid");
+        // too-short bases keep the suffix
+        assert_eq!(stem("es"), "es");
+    }
+
+    #[test]
+    fn clean_drops_stopwords_and_punct() {
+        let toks = clean_tokens("The grid is down, and the METERS are out!");
+        assert!(toks.contains(&"grid".to_string()));
+        assert!(toks.contains(&"meter".to_string()));
+        assert!(!toks.iter().any(|t| t == "the" || t == "is" || t == "and"));
+    }
+
+    #[test]
+    fn featurize_normalized_and_scale_invariant() {
+        let v = featurize("solar panel rooftop solar", 64);
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+        // Same tokens -> same vector.
+        let w = featurize("solar panel rooftop solar", 64);
+        assert_eq!(v, w);
+        // Empty text -> zero vector, no NaN.
+        let z = featurize("", 64);
+        assert!(z.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn same_topic_posts_are_closer() {
+        let mut g = PostGen::new(42);
+        // Collect a few posts per topic.
+        let mut by_topic: Vec<Vec<Vec<f32>>> = vec![vec![]; topic_count()];
+        for _ in 0..400 {
+            let (t, text) = g.post();
+            by_topic[t].push(featurize(&text, 64));
+        }
+        let dot = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| x * y).sum()
+        };
+        // Average intra-topic similarity should beat inter-topic.
+        let t0 = &by_topic[0];
+        let t5 = &by_topic[5];
+        assert!(t0.len() > 5 && t5.len() > 5);
+        let intra: f32 = dot(&t0[0], &t0[1]);
+        let inter: f32 = dot(&t0[0], &t5[0]);
+        assert!(
+            intra > inter,
+            "intra {intra} should exceed inter {inter}"
+        );
+    }
+}

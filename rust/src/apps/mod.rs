@@ -1,0 +1,13 @@
+//! The paper's two case-study applications (§IV):
+//!
+//! * [`smartgrid`] — the Smart Grid information-integration pipeline
+//!   (Fig. 3a): meter/sensor event streams, bulk CSV archives and
+//!   NOAA-style XML weather documents parsed, semantically annotated and
+//!   inserted into a triple store.
+//! * [`clustering`] — distributed online stream clustering with LSH
+//!   (Fig. 3b): text cleaning → LSH bucketizer → cluster search →
+//!   aggregator with a feedback loop; the numeric hot-spots run as
+//!   AOT-compiled JAX/Pallas kernels through PJRT.
+
+pub mod clustering;
+pub mod smartgrid;

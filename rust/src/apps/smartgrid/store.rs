@@ -1,0 +1,174 @@
+//! In-memory semantic triple store — the offline substitute for the 4Store
+//! database the paper's pipeline inserts into (I4, I8, I9).  Supports
+//! insert, upsert-by-subject-predicate and wildcard pattern queries, which
+//! is the full surface the pipeline pellets need.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// An RDF-ish triple.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Triple {
+    pub subject: String,
+    pub predicate: String,
+    pub object: String,
+}
+
+impl Triple {
+    pub fn new(
+        s: impl Into<String>,
+        p: impl Into<String>,
+        o: impl Into<String>,
+    ) -> Triple {
+        Triple { subject: s.into(), predicate: p.into(), object: o.into() }
+    }
+}
+
+/// Thread-safe triple store with subject indexing.
+pub struct TripleStore {
+    inner: Mutex<Store>,
+}
+
+struct Store {
+    triples: Vec<Triple>,
+    /// subject -> indices (accelerates the pipeline's upsert path).
+    by_subject: HashMap<String, Vec<usize>>,
+}
+
+impl TripleStore {
+    pub fn new() -> TripleStore {
+        TripleStore {
+            inner: Mutex::new(Store {
+                triples: Vec::new(),
+                by_subject: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Append a triple.
+    pub fn insert(&self, t: Triple) {
+        let mut g = self.inner.lock().expect("store poisoned");
+        let idx = g.triples.len();
+        g.by_subject
+            .entry(t.subject.clone())
+            .or_default()
+            .push(idx);
+        g.triples.push(t);
+    }
+
+    /// Replace the object of an existing (subject, predicate) pair or
+    /// insert — the "insert/update these semantic triples" path (§IV-A).
+    pub fn upsert(&self, t: Triple) {
+        let mut g = self.inner.lock().expect("store poisoned");
+        if let Some(indices) = g.by_subject.get(&t.subject) {
+            for &i in indices {
+                if g.triples[i].predicate == t.predicate {
+                    g.triples[i].object = t.object;
+                    return;
+                }
+            }
+        }
+        let idx = g.triples.len();
+        g.by_subject
+            .entry(t.subject.clone())
+            .or_default()
+            .push(idx);
+        g.triples.push(t);
+    }
+
+    /// Wildcard query: None matches anything.
+    pub fn query(
+        &self,
+        s: Option<&str>,
+        p: Option<&str>,
+        o: Option<&str>,
+    ) -> Vec<Triple> {
+        let g = self.inner.lock().expect("store poisoned");
+        // Use the subject index when possible.
+        let candidates: Vec<&Triple> = match s {
+            Some(subj) => g
+                .by_subject
+                .get(subj)
+                .map(|idx| idx.iter().map(|&i| &g.triples[i]).collect())
+                .unwrap_or_default(),
+            None => g.triples.iter().collect(),
+        };
+        candidates
+            .into_iter()
+            .filter(|t| p.map(|p| t.predicate == p).unwrap_or(true))
+            .filter(|t| o.map(|o| t.object == o).unwrap_or(true))
+            .cloned()
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("store poisoned").triples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for TripleStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_query() {
+        let s = TripleStore::new();
+        s.insert(Triple::new("bldg:12", "grid:kwh", "4.2"));
+        s.insert(Triple::new("bldg:12", "grid:temp", "71"));
+        s.insert(Triple::new("bldg:13", "grid:kwh", "3.0"));
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.query(Some("bldg:12"), None, None).len(), 2);
+        assert_eq!(s.query(None, Some("grid:kwh"), None).len(), 2);
+        assert_eq!(
+            s.query(Some("bldg:13"), Some("grid:kwh"), None)[0].object,
+            "3.0"
+        );
+        assert_eq!(s.query(None, None, Some("71")).len(), 1);
+        assert!(s.query(Some("nope"), None, None).is_empty());
+    }
+
+    #[test]
+    fn upsert_replaces_object() {
+        let s = TripleStore::new();
+        s.upsert(Triple::new("bldg:1", "grid:kwh", "1.0"));
+        s.upsert(Triple::new("bldg:1", "grid:kwh", "2.0"));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.query(Some("bldg:1"), None, None)[0].object, "2.0");
+        s.upsert(Triple::new("bldg:1", "grid:temp", "70"));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn concurrent_inserts() {
+        use std::sync::Arc;
+        let s = Arc::new(TripleStore::new());
+        let handles: Vec<_> = (0..4)
+            .map(|k| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        s.insert(Triple::new(
+                            format!("s{k}-{i}"),
+                            "p",
+                            "o",
+                        ));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 400);
+    }
+}

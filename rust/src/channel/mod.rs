@@ -1,0 +1,69 @@
+//! Data channels between flakes.
+//!
+//! §III: "Floe offers multiple transport channels, including direct socket
+//! connections between flakes".  Two transports share one [`Transport`]
+//! trait: in-process bounded queues (flakes co-located in a container) and
+//! framed TCP sockets (flakes on different VMs).  The bounded queue is the
+//! backpressure mechanism: senders block when a sink pellet falls behind.
+
+mod queue;
+mod tcp;
+
+pub use queue::{QueueClosed, SyncQueue};
+pub use tcp::{TcpReceiver, TcpSender};
+
+use std::sync::Arc;
+
+use crate::error::{FloeError, Result};
+use crate::message::Message;
+
+/// A one-way message transport from an output port to one sink flake's
+/// input port.
+pub trait Transport: Send + Sync {
+    /// Deliver one message.  Blocks on backpressure.
+    fn send(&self, msg: Message) -> Result<()>;
+
+    /// Human-readable description for diagnostics.
+    fn describe(&self) -> String;
+}
+
+/// In-process transport: pushes straight into the sink flake's input queue.
+pub struct InProcTransport {
+    pub queue: Arc<SyncQueue<Message>>,
+    pub label: String,
+}
+
+impl Transport for InProcTransport {
+    fn send(&self, msg: Message) -> Result<()> {
+        self.queue
+            .push(msg)
+            .map_err(|_| FloeError::Channel(format!("{} closed", self.label)))
+    }
+
+    fn describe(&self) -> String {
+        format!("inproc:{}", self.label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_transport_delivers() {
+        let q = Arc::new(SyncQueue::new(16));
+        let t = InProcTransport { queue: Arc::clone(&q), label: "t".into() };
+        t.send(Message::text("a")).unwrap();
+        t.send(Message::text("b")).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().as_text(), Some("a"));
+    }
+
+    #[test]
+    fn inproc_transport_errors_after_close() {
+        let q = Arc::new(SyncQueue::new(4));
+        let t = InProcTransport { queue: Arc::clone(&q), label: "t".into() };
+        q.close();
+        assert!(t.send(Message::empty()).is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! Bounded blocking MPMC queue — the flake input/output buffer (§III: "a
+//! flake has an input and an output queue for buffering de/serialized
+//! messages") and the framework's backpressure primitive.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Error: the queue was closed.
+#[derive(Debug, PartialEq, Eq)]
+pub struct QueueClosed;
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded blocking queue usable from any number of producer/consumer
+/// threads.  `push` blocks when full (backpressure), `pop` blocks when
+/// empty.  `close()` wakes everyone; a closed queue still drains remaining
+/// items before `pop` reports [`QueueClosed`].
+pub struct SyncQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> SyncQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        SyncQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity.min(1024)),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Blocking push; waits while full. Err if closed.
+    pub fn push(&self, item: T) -> Result<(), QueueClosed> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Non-blocking push; Err(item) when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        if g.closed || g.items.len() >= self.capacity {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; drains remaining items after close, then Err.
+    pub fn pop(&self) -> Result<T, QueueClosed> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            g = self.not_empty.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Pop with a timeout. `Ok(None)` on timeout.
+    pub fn pop_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<Option<T>, QueueClosed> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .expect("queue poisoned");
+            g = guard;
+            if res.timed_out() && g.items.is_empty() {
+                if g.closed {
+                    return Err(QueueClosed);
+                }
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        let item = g.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Current number of buffered items.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue poisoned").closed
+    }
+
+    /// Close the queue: producers fail immediately, consumers drain whatever
+    /// remains and then fail.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().expect("queue poisoned");
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = SyncQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn blocks_on_full_until_pop() {
+        let q = Arc::new(SyncQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(q.try_push(3).is_err());
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.push(3));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop().unwrap(), 1); // unblocks producer
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop().unwrap(), 2);
+        assert_eq!(q.pop().unwrap(), 3);
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let q = SyncQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.push(3).is_err());
+        assert_eq!(q.pop().unwrap(), 1);
+        assert_eq!(q.pop().unwrap(), 2);
+        assert_eq!(q.pop(), Err(QueueClosed));
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q = Arc::new(SyncQueue::<i32>::new(4));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(QueueClosed));
+    }
+
+    #[test]
+    fn pop_timeout_returns_none() {
+        let q = SyncQueue::<i32>::new(4);
+        let got = q.pop_timeout(Duration::from_millis(10)).unwrap();
+        assert!(got.is_none());
+        q.push(7).unwrap();
+        assert_eq!(
+            q.pop_timeout(Duration::from_millis(10)).unwrap(),
+            Some(7)
+        );
+    }
+
+    #[test]
+    fn mpmc_stress_preserves_all_items() {
+        let q = Arc::new(SyncQueue::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    for i in 0..250 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort();
+        let mut want: Vec<i32> =
+            (0..4).flat_map(|p| (0..250).map(move |i| p * 1000 + i)).collect();
+        want.sort();
+        assert_eq!(all, want);
+    }
+}

@@ -1,0 +1,314 @@
+//! TCP transport between flakes on different VMs/containers.
+//!
+//! Wire format per message frame:
+//! `[u32 total_len][u16 port_len][port name bytes][message bytes]` with the
+//! message encoded by [`Message::encode`].  A [`TcpReceiver`] listens on the
+//! flake's endpoint, decodes frames and pushes them into the named input
+//! port queue; a [`TcpSender`] holds one connection per (sink, port) pair.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::channel::{SyncQueue, Transport};
+use crate::error::{FloeError, Result};
+use crate::message::Message;
+
+/// Listens for framed messages and pushes them into per-port input queues.
+pub struct TcpReceiver {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl TcpReceiver {
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and route incoming frames into
+    /// `ports` by port name.  Unknown ports are dropped with a log line.
+    pub fn start(
+        port: u16,
+        ports: HashMap<String, Arc<SyncQueue<Message>>>,
+    ) -> Result<TcpReceiver> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let ports = Arc::new(ports);
+        let join = thread::Builder::new()
+            .name(format!("flake-rx-{}", addr.port()))
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let ports = Arc::clone(&ports);
+                            let stop3 = Arc::clone(&stop2);
+                            thread::spawn(move || {
+                                let _ = serve_stream(stream, &ports, &stop3);
+                            });
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn tcp receiver");
+        Ok(TcpReceiver { addr, stop, join: Some(join) })
+    }
+
+    /// `host:port` of this receiver.
+    pub fn endpoint(&self) -> String {
+        self.addr.to_string()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for TcpReceiver {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn serve_stream(
+    mut stream: TcpStream,
+    ports: &HashMap<String, Arc<SyncQueue<Message>>>,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut len_buf = [0u8; 4];
+    while !stop.load(Ordering::SeqCst) {
+        match stream.read_exact(&mut len_buf) {
+            Ok(()) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => return Ok(()), // peer closed
+        }
+        let total = u32::from_le_bytes(len_buf) as usize;
+        if total < 2 || total > 64 << 20 {
+            return Err(FloeError::Channel(format!(
+                "tcp: bad frame length {total}"
+            )));
+        }
+        let mut frame = vec![0u8; total];
+        read_fully(&mut stream, &mut frame, stop)?;
+        let port_len =
+            u16::from_le_bytes([frame[0], frame[1]]) as usize;
+        if 2 + port_len > frame.len() {
+            return Err(FloeError::Channel("tcp: bad port length".into()));
+        }
+        let port =
+            String::from_utf8_lossy(&frame[2..2 + port_len]).into_owned();
+        let msg = Message::decode(&frame[2 + port_len..])?;
+        match ports.get(&port) {
+            Some(q) => {
+                if q.push(msg).is_err() {
+                    return Ok(()); // flake shut down
+                }
+            }
+            None => {
+                log::warn!("tcp: dropping message for unknown port {port}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_fully(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> Result<()> {
+    let mut read = 0;
+    while read < buf.len() {
+        if stop.load(Ordering::SeqCst) {
+            return Err(FloeError::Channel("tcp: shutdown mid-frame".into()));
+        }
+        match stream.read(&mut buf[read..]) {
+            Ok(0) => {
+                return Err(FloeError::Channel(
+                    "tcp: peer closed mid-frame".into(),
+                ))
+            }
+            Ok(n) => read += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Sends framed messages to one sink flake's input port over TCP.
+pub struct TcpSender {
+    endpoint: String,
+    port_name: String,
+    stream: Mutex<Option<TcpStream>>,
+}
+
+impl TcpSender {
+    pub fn connect(endpoint: &str, port_name: &str) -> Result<TcpSender> {
+        let stream = TcpStream::connect(endpoint)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpSender {
+            endpoint: endpoint.to_string(),
+            port_name: port_name.to_string(),
+            stream: Mutex::new(Some(stream)),
+        })
+    }
+
+    fn frame(&self, msg: &Message) -> Vec<u8> {
+        let body = msg.encode();
+        let port = self.port_name.as_bytes();
+        let total = 2 + port.len() + body.len();
+        let mut out = Vec::with_capacity(4 + total);
+        out.extend_from_slice(&(total as u32).to_le_bytes());
+        out.extend_from_slice(&(port.len() as u16).to_le_bytes());
+        out.extend_from_slice(port);
+        out.extend_from_slice(&body);
+        out
+    }
+}
+
+impl Transport for TcpSender {
+    fn send(&self, msg: Message) -> Result<()> {
+        let frame = self.frame(&msg);
+        let mut guard = self.stream.lock().expect("tcp sender poisoned");
+        // One reconnect attempt on a broken pipe.
+        for attempt in 0..2 {
+            if guard.is_none() {
+                *guard = Some(
+                    TcpStream::connect(&self.endpoint).map_err(|e| {
+                        FloeError::Channel(format!(
+                            "tcp reconnect to {}: {e}",
+                            self.endpoint
+                        ))
+                    })?,
+                );
+            }
+            let stream = guard.as_mut().expect("just set");
+            match stream.write_all(&frame).and_then(|_| stream.flush()) {
+                Ok(()) => return Ok(()),
+                Err(e) if attempt == 0 => {
+                    log::debug!("tcp send failed ({e}), reconnecting");
+                    *guard = None;
+                }
+                Err(e) => {
+                    return Err(FloeError::Channel(format!(
+                        "tcp send to {}: {e}",
+                        self.endpoint
+                    )))
+                }
+            }
+        }
+        unreachable!()
+    }
+
+    fn describe(&self) -> String {
+        format!("tcp:{}#{}", self.endpoint, self.port_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start_pair() -> (TcpReceiver, Arc<SyncQueue<Message>>, String) {
+        let q = Arc::new(SyncQueue::new(64));
+        let mut ports = HashMap::new();
+        ports.insert("in".to_string(), Arc::clone(&q));
+        let rx = TcpReceiver::start(0, ports).unwrap();
+        let ep = rx.endpoint();
+        (rx, q, ep)
+    }
+
+    #[test]
+    fn roundtrip_over_tcp() {
+        let (mut rx, q, ep) = start_pair();
+        let tx = TcpSender::connect(&ep, "in").unwrap();
+        tx.send(Message::text("one").with_key("k")).unwrap();
+        tx.send(Message::f32s(vec![1.0, 2.0, 3.0])).unwrap();
+        let a = q.pop().unwrap();
+        assert_eq!(a.as_text(), Some("one"));
+        assert_eq!(a.key.as_deref(), Some("k"));
+        let b = q.pop().unwrap();
+        assert_eq!(b.as_f32s(), Some(&[1.0f32, 2.0, 3.0][..]));
+        rx.shutdown();
+    }
+
+    #[test]
+    fn many_messages_in_order() {
+        let (mut rx, q, ep) = start_pair();
+        let tx = TcpSender::connect(&ep, "in").unwrap();
+        for i in 0..500 {
+            tx.send(Message::text(format!("m{i}"))).unwrap();
+        }
+        for i in 0..500 {
+            assert_eq!(q.pop().unwrap().as_text(), Some(&*format!("m{i}")));
+        }
+        rx.shutdown();
+    }
+
+    #[test]
+    fn unknown_port_dropped_known_delivered() {
+        let (mut rx, q, ep) = start_pair();
+        let bad = TcpSender::connect(&ep, "nope").unwrap();
+        bad.send(Message::text("lost")).unwrap();
+        let good = TcpSender::connect(&ep, "in").unwrap();
+        good.send(Message::text("kept")).unwrap();
+        assert_eq!(q.pop().unwrap().as_text(), Some("kept"));
+        assert!(q.is_empty());
+        rx.shutdown();
+    }
+
+    #[test]
+    fn concurrent_senders() {
+        let (mut rx, q, ep) = start_pair();
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let ep = ep.clone();
+                thread::spawn(move || {
+                    let tx = TcpSender::connect(&ep, "in").unwrap();
+                    for i in 0..100 {
+                        tx.send(Message::text(format!("{t}-{i}"))).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..400 {
+            got.push(q.pop().unwrap().as_text().unwrap().to_string());
+        }
+        got.sort();
+        got.dedup();
+        assert_eq!(got.len(), 400);
+        rx.shutdown();
+    }
+}

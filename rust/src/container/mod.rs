@@ -1,0 +1,333 @@
+//! Containers: VM-granularity resource runtime (§III).
+//!
+//! A container manages the flakes placed on one (simulated) VM, accounts
+//! the VM's cores across them, and exposes the fine-grained control used
+//! by the coordinator and the adaptation strategies: spawn flake, change a
+//! flake's core allocation, pause/resume/update.  An optional REST control
+//! endpoint mirrors the paper's management interface.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{FloeError, Result};
+use crate::flake::{Flake, FlakeConfig};
+use crate::pellet::PelletFactory;
+use crate::util::http::{HttpServer, Request, Response};
+use crate::util::json::Json;
+
+/// A container bound to one VM's cores.
+pub struct Container {
+    pub id: String,
+    total_cores: usize,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    flakes: HashMap<String, Arc<Flake>>,
+    /// Cores currently granted per flake.
+    grants: HashMap<String, usize>,
+}
+
+impl Container {
+    pub fn new(id: impl Into<String>, total_cores: usize) -> Arc<Container> {
+        Arc::new(Container {
+            id: id.into(),
+            total_cores,
+            inner: Mutex::new(Inner {
+                flakes: HashMap::new(),
+                grants: HashMap::new(),
+            }),
+        })
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.total_cores
+    }
+
+    /// Cores not granted to any flake.
+    pub fn free_cores(&self) -> usize {
+        let inner = self.inner.lock().expect("container poisoned");
+        self.total_cores
+            .saturating_sub(inner.grants.values().sum::<usize>())
+    }
+
+    pub fn flake_count(&self) -> usize {
+        self.inner.lock().expect("container poisoned").flakes.len()
+    }
+
+    /// Spawn a flake with `cfg.cores` cores from this container's budget.
+    pub fn spawn_flake(
+        &self,
+        cfg: FlakeConfig,
+        factory: PelletFactory,
+    ) -> Result<Arc<Flake>> {
+        let want = cfg.cores.max(1);
+        let mut inner = self.inner.lock().expect("container poisoned");
+        let used: usize = inner.grants.values().sum();
+        if used + want > self.total_cores {
+            return Err(FloeError::Resource(format!(
+                "container {}: need {want} cores, {} free",
+                self.id,
+                self.total_cores - used
+            )));
+        }
+        if inner.flakes.contains_key(&cfg.pellet_id) {
+            return Err(FloeError::Resource(format!(
+                "container {}: flake '{}' already exists",
+                self.id, cfg.pellet_id
+            )));
+        }
+        let id = cfg.pellet_id.clone();
+        let flake = Flake::start(cfg, factory);
+        inner.grants.insert(id.clone(), want);
+        inner.flakes.insert(id, Arc::clone(&flake));
+        Ok(flake)
+    }
+
+    /// Look up a hosted flake.
+    pub fn flake(&self, pellet_id: &str) -> Option<Arc<Flake>> {
+        self.inner
+            .lock()
+            .expect("container poisoned")
+            .flakes
+            .get(pellet_id)
+            .cloned()
+    }
+
+    pub fn flake_ids(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .expect("container poisoned")
+            .flakes
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    /// Re-grant cores to a flake (dynamic adaptation).  Fails if the
+    /// container cannot cover the increase — cross-VM elasticity is the
+    /// manager's job.
+    pub fn set_flake_cores(&self, pellet_id: &str, cores: usize) -> Result<()> {
+        let cores = cores.max(1);
+        let mut inner = self.inner.lock().expect("container poisoned");
+        let current =
+            *inner.grants.get(pellet_id).ok_or_else(|| {
+                FloeError::Resource(format!(
+                    "container {}: no flake '{pellet_id}'",
+                    self.id
+                ))
+            })?;
+        let others: usize = inner
+            .grants
+            .iter()
+            .filter(|(k, _)| k.as_str() != pellet_id)
+            .map(|(_, v)| *v)
+            .sum();
+        if others + cores > self.total_cores {
+            return Err(FloeError::Resource(format!(
+                "container {}: cannot grow '{pellet_id}' to {cores} cores \
+                 ({} total, {others} used by others)",
+                self.id, self.total_cores
+            )));
+        }
+        if cores != current {
+            inner.grants.insert(pellet_id.to_string(), cores);
+            inner.flakes[pellet_id].set_cores(cores);
+        }
+        Ok(())
+    }
+
+    /// Remove and stop a flake, freeing its cores (sub-graph removal).
+    pub fn remove_flake(&self, pellet_id: &str) -> Result<()> {
+        let mut inner = self.inner.lock().expect("container poisoned");
+        let flake = inner.flakes.remove(pellet_id).ok_or_else(|| {
+            FloeError::Resource(format!(
+                "container {}: no flake '{pellet_id}'",
+                self.id
+            ))
+        })?;
+        inner.grants.remove(pellet_id);
+        drop(inner);
+        flake.shutdown();
+        Ok(())
+    }
+
+    /// Stop everything.
+    pub fn shutdown(&self) {
+        let mut inner = self.inner.lock().expect("container poisoned");
+        for (_, f) in inner.flakes.drain() {
+            f.shutdown();
+        }
+        inner.grants.clear();
+    }
+
+    /// JSON status document (also served by the REST endpoint).
+    pub fn status_json(&self) -> Json {
+        let inner = self.inner.lock().expect("container poisoned");
+        let mut flakes = Vec::new();
+        for (id, f) in &inner.flakes {
+            flakes.push(Json::obj(vec![
+                ("id", Json::str(id.clone())),
+                ("class", Json::str(f.class())),
+                ("cores", Json::num(inner.grants[id] as f64)),
+                ("instances", Json::num(f.instances() as f64)),
+                ("queue", Json::num(f.queue_len() as f64)),
+                ("version", Json::num(f.version() as f64)),
+            ]));
+        }
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("total_cores", Json::num(self.total_cores as f64)),
+            (
+                "used_cores",
+                Json::num(inner.grants.values().sum::<usize>() as f64),
+            ),
+            ("flakes", Json::Arr(flakes)),
+        ])
+    }
+
+    /// Start the REST control endpoint:
+    /// `GET /status`, `POST /flake/{id}/cores?n=`, `POST /flake/{id}/pause`,
+    /// `POST /flake/{id}/resume`.
+    pub fn serve(self: &Arc<Self>, port: u16) -> Result<HttpServer> {
+        let me = Arc::clone(self);
+        HttpServer::start(port, move |req| me.handle(req))
+    }
+
+    fn handle(&self, req: &Request) -> Response {
+        let parts: Vec<&str> =
+            req.path.split('/').filter(|s| !s.is_empty()).collect();
+        match (req.method.as_str(), parts.as_slice()) {
+            ("GET", ["status"]) => {
+                Response::ok_json(self.status_json().to_string())
+            }
+            ("POST", ["flake", id, "cores"]) => {
+                let n = req
+                    .query_get("n")
+                    .and_then(|v| v.parse::<usize>().ok());
+                match n {
+                    None => Response::error(400, "missing ?n="),
+                    Some(n) => match self.set_flake_cores(id, n) {
+                        Ok(()) => Response::ok_json("{\"ok\":true}"),
+                        Err(e) => Response::error(409, e.to_string()),
+                    },
+                }
+            }
+            ("POST", ["flake", id, "pause"]) => match self.flake(id) {
+                Some(f) => {
+                    f.pause();
+                    Response::ok_json("{\"ok\":true}")
+                }
+                None => Response::error(404, "no such flake"),
+            },
+            ("POST", ["flake", id, "resume"]) => match self.flake(id) {
+                Some(f) => {
+                    f.resume();
+                    Response::ok_json("{\"ok\":true}")
+                }
+                None => Response::error(404, "no such flake"),
+            },
+            _ => Response::error(404, "unknown control path"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{
+        InPortSpec, MergeMode, OutPortSpec, SplitMode, TriggerMode,
+        WindowSpec,
+    };
+    use std::sync::Arc;
+
+    fn cfg(id: &str, cores: usize) -> FlakeConfig {
+        FlakeConfig {
+            pellet_id: id.into(),
+            class: "floe.builtin.Identity".into(),
+            inputs: vec![InPortSpec {
+                name: "in".into(),
+                window: WindowSpec::None,
+            }],
+            outputs: vec![OutPortSpec {
+                name: "out".into(),
+                split: SplitMode::RoundRobin,
+            }],
+            merge: MergeMode::Interleaved,
+            trigger: TriggerMode::Push,
+            sequential: false,
+            stateful: false,
+            cores,
+            alpha: 2,
+            queue_capacity: 64,
+        }
+    }
+
+    fn factory() -> PelletFactory {
+        Arc::new(|| Box::new(crate::pellet::builtins::Identity))
+    }
+
+    #[test]
+    fn core_accounting() {
+        let c = Container::new("vm0", 8);
+        assert_eq!(c.free_cores(), 8);
+        c.spawn_flake(cfg("a", 3), factory()).unwrap();
+        c.spawn_flake(cfg("b", 4), factory()).unwrap();
+        assert_eq!(c.free_cores(), 1);
+        // over-subscription rejected
+        assert!(c.spawn_flake(cfg("c", 2), factory()).is_err());
+        // duplicate id rejected
+        assert!(c.spawn_flake(cfg("a", 1), factory()).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn regrant_cores_within_budget() {
+        let c = Container::new("vm0", 8);
+        c.spawn_flake(cfg("a", 2), factory()).unwrap();
+        c.set_flake_cores("a", 6).unwrap();
+        assert_eq!(c.free_cores(), 2);
+        assert_eq!(c.flake("a").unwrap().cores(), 6);
+        assert!(c.set_flake_cores("a", 9).is_err());
+        assert!(c.set_flake_cores("ghost", 1).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn remove_frees_cores() {
+        let c = Container::new("vm0", 4);
+        c.spawn_flake(cfg("a", 4), factory()).unwrap();
+        assert_eq!(c.free_cores(), 0);
+        c.remove_flake("a").unwrap();
+        assert_eq!(c.free_cores(), 4);
+        assert_eq!(c.flake_count(), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn rest_control_plane() {
+        let c = Container::new("vm0", 8);
+        c.spawn_flake(cfg("a", 2), factory()).unwrap();
+        let mut srv = c.serve(0).unwrap();
+        let addr = srv.addr();
+        let status =
+            crate::util::http::http_get(&addr, "/status").unwrap();
+        let j = Json::parse(&status).unwrap();
+        assert_eq!(j.get("total_cores").unwrap().as_usize(), Some(8));
+        crate::util::http::http_post(&addr, "/flake/a/cores?n=5", "")
+            .unwrap();
+        assert_eq!(c.flake("a").unwrap().cores(), 5);
+        assert!(crate::util::http::http_post(
+            &addr,
+            "/flake/a/cores?n=99",
+            ""
+        )
+        .is_err());
+        crate::util::http::http_post(&addr, "/flake/a/pause", "").unwrap();
+        assert!(c.flake("a").unwrap().is_paused());
+        crate::util::http::http_post(&addr, "/flake/a/resume", "").unwrap();
+        assert!(!c.flake("a").unwrap().is_paused());
+        srv.shutdown();
+        c.shutdown();
+    }
+}

@@ -1,0 +1,464 @@
+//! The coordinator (§III): parses the Floe graph, negotiates cores with the
+//! resource manager, places flakes in containers (best fit), wires the
+//! dataflow **bottom-up** so upstream pellets never emit into unwired
+//! sinks, activates the graph, and orchestrates application dynamism —
+//! in-place task updates, coordinated sub-graph updates, and the
+//! cascading "wave" update the paper sketches as future work.
+
+mod server;
+
+pub use server::CoordinatorServer;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::adaptation::{Monitor, MonitoredFlake};
+use crate::channel::{InProcTransport, Transport};
+use crate::error::{FloeError, Result};
+use crate::flake::{Flake, FlakeConfig};
+use crate::graph::DataflowGraph;
+use crate::manager::ResourceManager;
+use crate::message::Message;
+use crate::pellet::PelletRegistry;
+use crate::util::json::Json;
+use crate::util::time::{Clock, WallClock};
+
+/// Launch options.
+pub struct LaunchOptions {
+    /// Instances per core.
+    pub alpha: usize,
+    /// Input queue capacity per port.
+    pub queue_capacity: usize,
+    /// Adaptation strategy factory per pellet id; None = no monitor.
+    pub adaptation: Option<AdaptationSetup>,
+}
+
+/// Monitor configuration for a launch.
+pub struct AdaptationSetup {
+    /// Build a strategy for a pellet id.
+    pub make: Box<
+        dyn Fn(&str) -> Box<dyn crate::adaptation::AdaptationStrategy>
+            + Send,
+    >,
+    /// Sampling interval.
+    pub interval: Duration,
+}
+
+impl Default for LaunchOptions {
+    fn default() -> Self {
+        LaunchOptions {
+            alpha: crate::ALPHA,
+            queue_capacity: 4096,
+            adaptation: None,
+        }
+    }
+}
+
+/// A launched continuous dataflow.
+pub struct RunningDataflow {
+    pub graph: DataflowGraph,
+    flakes: HashMap<String, Arc<Flake>>,
+    containers: HashMap<String, Arc<crate::container::Container>>,
+    registry: PelletRegistry,
+    monitor: Mutex<Option<Monitor>>,
+    clock: Arc<dyn Clock>,
+}
+
+impl RunningDataflow {
+    /// The container hosting a pellet's flake (for manual core regrants).
+    pub fn container(
+        &self,
+        pellet_id: &str,
+    ) -> Result<Arc<crate::container::Container>> {
+        self.containers.get(pellet_id).cloned().ok_or_else(|| {
+            FloeError::Graph(format!("no container for pellet '{pellet_id}'"))
+        })
+    }
+
+    /// The flake executing a pellet.
+    pub fn flake(&self, pellet_id: &str) -> Result<Arc<Flake>> {
+        self.flakes.get(pellet_id).cloned().ok_or_else(|| {
+            FloeError::Graph(format!("no flake for pellet '{pellet_id}'"))
+        })
+    }
+
+    pub fn pellet_ids(&self) -> Vec<String> {
+        self.flakes.keys().cloned().collect()
+    }
+
+    /// Inject a message into a source pellet's input port (the paper's
+    /// "initial inputs" entry point returned by the coordinator).
+    pub fn inject(
+        &self,
+        pellet_id: &str,
+        port: &str,
+        msg: Message,
+    ) -> Result<()> {
+        self.flake(pellet_id)?.inject(port, msg)
+    }
+
+    /// Wait for all flakes to drain (tests, graceful stop).  The idle
+    /// condition must hold across consecutive checks because a message
+    /// can transiently be in neither a queue nor an in-flight counter
+    /// while a thread moves it between flakes.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut idle_streak = 0;
+        loop {
+            let busy = self.flakes.values().any(|f| {
+                f.queue_len() > 0
+                    || f.ready_len() > 0
+                    || f.probes()
+                        .inflight
+                        .load(std::sync::atomic::Ordering::SeqCst)
+                        > 0
+            });
+            if !busy {
+                idle_streak += 1;
+                if idle_streak >= 3 {
+                    return true;
+                }
+            } else {
+                idle_streak = 0;
+            }
+            if std::time::Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// **Dynamic task update** by pellet id: re-resolve the pellet's class
+    /// (or a new class) in the registry and swap in place (§II-B).
+    pub fn update_pellet(
+        &self,
+        pellet_id: &str,
+        new_class: Option<&str>,
+        sync: bool,
+        landmark: bool,
+    ) -> Result<u64> {
+        let flake = self.flake(pellet_id)?;
+        let class = new_class.unwrap_or_else(|| flake.class());
+        let factory = self.registry.resolve(class)?;
+        flake.update_pellet(factory, sync, landmark)
+    }
+
+    /// **Dynamic dataflow (sub-graph) update**: update several pellets in a
+    /// coordinated manner — all intake paused, all swapped, all resumed —
+    /// so downstream pellets see a consistent cut-over (§II-B).
+    pub fn update_subgraph(
+        &self,
+        updates: &[(String, String)],
+        landmark: bool,
+    ) -> Result<()> {
+        // Validate everything first so we never pause on a bad request.
+        let mut planned = Vec::new();
+        for (pellet_id, class) in updates {
+            let flake = self.flake(pellet_id)?;
+            let factory = self.registry.resolve(class)?;
+            planned.push((flake, factory));
+        }
+        for (flake, _) in &planned {
+            flake.pause();
+        }
+        let result: Result<()> = (|| {
+            for (flake, factory) in &planned {
+                // Synchronous per-flake swap; intake already paused for the
+                // whole sub-graph, so the slowest drain gates the cut-over.
+                flake.update_pellet(Arc::clone(factory), true, landmark)?;
+            }
+            Ok(())
+        })();
+        for (flake, _) in &planned {
+            flake.resume();
+        }
+        result
+    }
+
+    /// **Cascading "wave" update** (§II-B future work, implemented):
+    /// updates pellets one by one in upstream→downstream order, emitting an
+    /// Update landmark at each hop, so a clear wavefront separates
+    /// pre-update from post-update streams without a global pause.
+    pub fn wave_update(
+        &self,
+        updates: &[(String, String)],
+    ) -> Result<Vec<u64>> {
+        let order = self.graph.wiring_order()?; // downstream-first
+        let mut versions = Vec::new();
+        // Reverse = upstream-first traversal of the sub-graph.
+        for id in order.iter().rev() {
+            if let Some((_, class)) =
+                updates.iter().find(|(p, _)| p == id)
+            {
+                let flake = self.flake(id)?;
+                let factory = self.registry.resolve(class)?;
+                versions.push(flake.update_pellet(factory, true, true)?);
+            }
+        }
+        if versions.len() != updates.len() {
+            return Err(FloeError::Graph(
+                "wave_update: some pellets not in graph".into(),
+            ));
+        }
+        Ok(versions)
+    }
+
+    /// Snapshot of the adaptation monitor's decision history (the live
+    /// Fig. 4 series); empty when no adaptation was configured.
+    pub fn adaptation_history(
+        &self,
+    ) -> Vec<crate::adaptation::AdaptationSample> {
+        self.monitor
+            .lock()
+            .expect("monitor poisoned")
+            .as_ref()
+            .map(|m| m.history().snapshot())
+            .unwrap_or_default()
+    }
+
+    /// Aggregated stats document (served by the coordinator endpoint).
+    pub fn stats_json(&self) -> Json {
+        let t = self.clock.now();
+        let mut pellets = Vec::new();
+        for (id, f) in &self.flakes {
+            let obs = f.observe(t);
+            pellets.push(Json::obj(vec![
+                ("id", Json::str(id.clone())),
+                ("class", Json::str(f.class())),
+                ("cores", Json::num(obs.cores as f64)),
+                ("instances", Json::num(obs.instances as f64)),
+                ("queue", Json::num(obs.queue_len as f64)),
+                ("arrival_rate", Json::num(obs.arrival_rate)),
+                ("latency", Json::num(obs.service_latency)),
+                ("selectivity", Json::num(obs.selectivity)),
+                ("version", Json::num(f.version() as f64)),
+            ]));
+        }
+        Json::obj(vec![
+            ("graph", Json::str(self.graph.name.clone())),
+            ("t", Json::num(t)),
+            ("pellets", Json::Arr(pellets)),
+        ])
+    }
+
+    /// Stop the monitor and all flakes.
+    pub fn stop(&self) {
+        if let Some(mut m) =
+            self.monitor.lock().expect("monitor poisoned").take()
+        {
+            m.stop();
+        }
+        // Stop sources first (wiring order reversed = sources first), so
+        // downstream flakes drain naturally before shutdown.
+        if let Ok(order) = self.graph.wiring_order() {
+            for id in order.iter().rev() {
+                if let Some(f) = self.flakes.get(id) {
+                    f.shutdown();
+                }
+            }
+        }
+        for f in self.flakes.values() {
+            f.shutdown();
+        }
+    }
+}
+
+impl Drop for RunningDataflow {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    manager: Arc<ResourceManager>,
+    registry: PelletRegistry,
+}
+
+impl Coordinator {
+    pub fn new(
+        manager: Arc<ResourceManager>,
+        registry: PelletRegistry,
+    ) -> Coordinator {
+        Coordinator { manager, registry }
+    }
+
+    /// Parse, place, wire (bottom-up BFS ignoring loops) and activate a
+    /// graph.  Returns the running dataflow handle with ingress access.
+    pub fn launch(
+        &self,
+        graph: DataflowGraph,
+        options: LaunchOptions,
+    ) -> Result<RunningDataflow> {
+        graph.validate()?;
+        let order = graph.wiring_order()?;
+        log::info!(
+            "coordinator: launching '{}' ({} pellets), wiring order {:?}",
+            graph.name,
+            graph.pellets.len(),
+            order
+        );
+
+        // 1. Instantiate flakes bottom-up so every sink exists before any
+        //    upstream pellet could emit.
+        let mut flakes: HashMap<String, Arc<Flake>> = HashMap::new();
+        let mut containers = HashMap::new();
+        for id in &order {
+            let spec = graph
+                .pellet(id)
+                .ok_or_else(|| {
+                    FloeError::Graph(format!("missing pellet '{id}'"))
+                })?
+                .clone();
+            let factory = self.registry.resolve(&spec.class)?;
+            let mut cfg = FlakeConfig::from_spec(&spec);
+            cfg.alpha = options.alpha;
+            cfg.queue_capacity = options.queue_capacity;
+            let container = self.manager.allocate(cfg.cores)?;
+            let flake = container.spawn_flake(cfg, factory)?;
+            containers.insert(id.clone(), Arc::clone(&container));
+            flakes.insert(id.clone(), flake);
+        }
+
+        // 2. Wire edges, still bottom-up by source pellet.
+        for id in &order {
+            let spec = graph.pellet(id).expect("validated");
+            for out in &spec.outputs {
+                for edge in graph.edges_from(id, &out.name) {
+                    let sink = &flakes[&edge.to_pellet];
+                    let queue = sink.input_queue(&edge.to_port)?;
+                    let transport: Arc<dyn Transport> =
+                        Arc::new(InProcTransport {
+                            queue,
+                            label: format!(
+                                "{}.{} -> {}.{}",
+                                edge.from_pellet,
+                                edge.from_port,
+                                edge.to_pellet,
+                                edge.to_port
+                            ),
+                        });
+                    flakes[id].wire_output(&out.name, transport)?;
+                }
+            }
+        }
+
+        let clock: Arc<dyn Clock> = Arc::new(WallClock::new());
+
+        // 3. Optional adaptation monitor.
+        let monitor = options.adaptation.map(|setup| {
+            let entries = flakes
+                .iter()
+                .map(|(id, f)| MonitoredFlake {
+                    flake: Arc::clone(f),
+                    container: Arc::clone(&containers[id]),
+                    strategy: (setup.make)(id),
+                })
+                .collect();
+            Monitor::start(entries, Arc::clone(&clock), setup.interval)
+        });
+
+        Ok(RunningDataflow {
+            graph,
+            flakes,
+            containers,
+            registry: self.registry.clone(),
+            monitor: Mutex::new(monitor),
+            clock,
+        })
+    }
+
+    pub fn registry(&self) -> &PelletRegistry {
+        &self.registry
+    }
+
+    pub fn manager(&self) -> &Arc<ResourceManager> {
+        &self.manager
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, SplitMode};
+    use crate::manager::SimulatedCloud;
+    use crate::pellet::builtins::CollectSink;
+    use std::sync::Mutex as StdMutex;
+
+    fn coordinator() -> Coordinator {
+        let cloud = SimulatedCloud::new(256, Duration::ZERO);
+        let mgr = ResourceManager::new(cloud);
+        Coordinator::new(mgr, PelletRegistry::with_builtins())
+    }
+
+    fn collect_class(
+        reg: &PelletRegistry,
+        class: &str,
+    ) -> Arc<StdMutex<Vec<Message>>> {
+        let sink = Arc::new(StdMutex::new(Vec::new()));
+        let s2 = Arc::clone(&sink);
+        reg.register(class, move || {
+            Box::new(CollectSink { collected: Arc::clone(&s2) })
+        });
+        sink
+    }
+
+    #[test]
+    fn launch_linear_pipeline_end_to_end() {
+        let coord = coordinator();
+        let sink = collect_class(coord.registry(), "test.Collect");
+
+        let mut g = GraphBuilder::new("lin");
+        g.pellet("up", "floe.builtin.Uppercase")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin);
+        g.pellet("sink", "test.Collect").in_port("in");
+        g.edge("up", "out", "sink", "in");
+        let run = coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap();
+
+        for i in 0..20 {
+            run.inject("up", "in", Message::text(format!("m{i}"))).unwrap();
+        }
+        assert!(run.drain(Duration::from_secs(5)));
+        let got = sink.lock().unwrap();
+        assert_eq!(got.len(), 20);
+        assert!(got.iter().all(|m| m.as_text().unwrap().starts_with('M')));
+        drop(got);
+        run.stop();
+    }
+
+    #[test]
+    fn launch_rejects_unknown_class() {
+        let coord = coordinator();
+        let mut g = GraphBuilder::new("bad");
+        g.pellet("x", "no.such.Class");
+        let err =
+            coord.launch(g.build().unwrap(), LaunchOptions::default());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn stats_json_lists_pellets() {
+        let coord = coordinator();
+        let mut g = GraphBuilder::new("s");
+        g.pellet("id1", "floe.builtin.Identity")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin);
+        let run = coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap();
+        let stats = run.stats_json();
+        assert_eq!(
+            stats.get("graph").unwrap().as_str().unwrap(),
+            "s"
+        );
+        assert_eq!(
+            stats.get("pellets").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        run.stop();
+    }
+}

@@ -1,0 +1,99 @@
+//! Coordinator REST endpoint (§III: "the coordinator, manager, container
+//! and flake expose REST web service endpoints").
+//!
+//! Routes:
+//! * `GET  /graph`                       — the graph's XML description
+//! * `GET  /stats`                       — per-pellet runtime stats (JSON)
+//! * `POST /inject/{pellet}/{port}`      — inject a text message (body)
+//! * `POST /update/{pellet}?class=&mode=sync|async` — dynamic task update
+//! * `POST /pause/{pellet}` / `POST /resume/{pellet}`
+//! * `POST /cores/{pellet}?n=`           — manual core regrant
+
+use std::sync::Arc;
+
+use super::RunningDataflow;
+use crate::error::Result;
+use crate::message::Message;
+use crate::util::http::{HttpServer, Request, Response};
+
+/// HTTP facade over a running dataflow.
+pub struct CoordinatorServer {
+    server: HttpServer,
+}
+
+impl CoordinatorServer {
+    /// Serve `run` on `127.0.0.1:port` (0 = ephemeral).
+    pub fn start(
+        run: Arc<RunningDataflow>,
+        port: u16,
+    ) -> Result<CoordinatorServer> {
+        let server = HttpServer::start(port, move |req| handle(&run, req))?;
+        Ok(CoordinatorServer { server })
+    }
+
+    pub fn addr(&self) -> String {
+        self.server.addr()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.server.shutdown();
+    }
+}
+
+fn handle(run: &RunningDataflow, req: &Request) -> Response {
+    let parts: Vec<&str> =
+        req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), parts.as_slice()) {
+        ("GET", ["graph"]) => Response {
+            status: 200,
+            content_type: "application/xml".into(),
+            body: run.graph.to_xml().into_bytes(),
+        },
+        ("GET", ["stats"]) => {
+            Response::ok_json(run.stats_json().to_string())
+        }
+        ("POST", ["inject", pellet, port]) => {
+            match run.inject(pellet, port, Message::text(req.body_str())) {
+                Ok(()) => Response::ok_json("{\"ok\":true}"),
+                Err(e) => Response::error(404, e.to_string()),
+            }
+        }
+        ("POST", ["update", pellet]) => {
+            let class = req.query_get("class");
+            let sync = req.query_get("mode") != Some("async");
+            let landmark = req.query_get("landmark") == Some("true");
+            match run.update_pellet(pellet, class, sync, landmark) {
+                Ok(v) => {
+                    Response::ok_json(format!("{{\"version\":{v}}}"))
+                }
+                Err(e) => Response::error(409, e.to_string()),
+            }
+        }
+        ("POST", ["pause", pellet]) => match run.flake(pellet) {
+            Ok(f) => {
+                f.pause();
+                Response::ok_json("{\"ok\":true}")
+            }
+            Err(e) => Response::error(404, e.to_string()),
+        },
+        ("POST", ["resume", pellet]) => match run.flake(pellet) {
+            Ok(f) => {
+                f.resume();
+                Response::ok_json("{\"ok\":true}")
+            }
+            Err(e) => Response::error(404, e.to_string()),
+        },
+        ("POST", ["cores", pellet]) => {
+            let n = req.query_get("n").and_then(|v| v.parse::<usize>().ok());
+            match (run.flake(pellet), n) {
+                (Ok(f), Some(n)) => {
+                    f.set_cores(n);
+                    Response::ok_json("{\"ok\":true}")
+                }
+                (Err(e), _) => Response::error(404, e.to_string()),
+                (_, None) => Response::error(400, "missing ?n="),
+            }
+        }
+        _ => Response::error(404, "unknown coordinator path"),
+    }
+}

@@ -1,0 +1,47 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the Floe framework.
+#[derive(Error, Debug)]
+pub enum FloeError {
+    /// Dataflow graph is malformed (unknown pellet, dangling port, ...).
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    /// A pellet failed during setup, compute or teardown.
+    #[error("pellet error: {0}")]
+    Pellet(String),
+
+    /// A data channel failed (peer gone, framing error, backpressure abort).
+    #[error("channel error: {0}")]
+    Channel(String),
+
+    /// Resource allocation failed (no cores, no VMs, bad request).
+    #[error("resource error: {0}")]
+    Resource(String),
+
+    /// XLA/PJRT runtime failure (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Text parsing failure (JSON, XML, CSV, HTTP, graph files).
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Control-plane failure (REST endpoint, coordinator RPC).
+    #[error("control error: {0}")]
+    Control(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for FloeError {
+    fn from(e: xla::Error) -> Self {
+        FloeError::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, FloeError>;

@@ -1,0 +1,952 @@
+//! The flake: per-pellet executor (§III).
+//!
+//! A flake owns the input queues of one pellet, aligns/windows arriving
+//! messages according to the pellet's design-pattern annotations, runs
+//! data-parallel pellet instances on a core-bounded [`CorePool`]
+//! (`cores × α` instances), routes outputs through the split-mode
+//! [`OutputRouter`], and supports **in-place dynamic task update** — the
+//! paper's headline application-dynamism mechanism — in both synchronous
+//! and asynchronous flavors.
+//!
+//! Threads: one *dispatcher* drains input queues and forms [`PortIo`] work
+//! items; `cores × α` *workers* each own a pellet instance and execute work
+//! items.  Backpressure propagates through the bounded queues.
+
+mod checkpoint;
+mod pool;
+mod probes;
+mod router;
+
+pub use checkpoint::FlakeCheckpoint;
+pub use pool::{CorePool, WorkerBody};
+pub use probes::{FlakeObservation, Probes};
+pub use router::OutputRouter;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::channel::{SyncQueue, Transport};
+use crate::error::{FloeError, Result};
+use crate::graph::{
+    InPortSpec, MergeMode, OutPortSpec, PelletSpec, TriggerMode, WindowSpec,
+};
+use crate::message::{Landmark, Message};
+use crate::pellet::{
+    Pellet, PelletContext, PelletFactory, PortIo, StateObject,
+};
+use crate::ALPHA;
+
+/// Flake construction parameters, usually derived from a [`PelletSpec`].
+#[derive(Clone)]
+pub struct FlakeConfig {
+    pub pellet_id: String,
+    pub class: String,
+    pub inputs: Vec<InPortSpec>,
+    pub outputs: Vec<OutPortSpec>,
+    pub merge: MergeMode,
+    pub trigger: TriggerMode,
+    pub sequential: bool,
+    pub stateful: bool,
+    /// Initial core allocation.
+    pub cores: usize,
+    /// Instances per core (paper: α = 4).
+    pub alpha: usize,
+    /// Input queue capacity per port (backpressure bound).
+    pub queue_capacity: usize,
+}
+
+impl FlakeConfig {
+    pub fn from_spec(spec: &PelletSpec) -> FlakeConfig {
+        FlakeConfig {
+            pellet_id: spec.id.clone(),
+            class: spec.class.clone(),
+            inputs: spec.inputs.clone(),
+            outputs: spec.outputs.clone(),
+            merge: spec.merge,
+            trigger: spec.trigger,
+            sequential: spec.sequential,
+            stateful: spec.stateful,
+            cores: spec.cores.unwrap_or(1),
+            alpha: ALPHA,
+            queue_capacity: 4096,
+        }
+    }
+
+    fn instances_for(&self, cores: usize) -> usize {
+        if self.sequential {
+            1
+        } else {
+            (cores * self.alpha).max(1)
+        }
+    }
+}
+
+struct Shared {
+    cfg: FlakeConfig,
+    ports: HashMap<String, Arc<SyncQueue<Message>>>,
+    port_order: Vec<String>,
+    ready: Arc<SyncQueue<PortIo>>,
+    router: RwLock<OutputRouter>,
+    state: StateObject,
+    factory: RwLock<PelletFactory>,
+    version: AtomicU64,
+    probes: Probes,
+    paused: AtomicBool,
+    interrupt: Arc<AtomicBool>,
+    stop: AtomicBool,
+    cores: AtomicUsize,
+    active_instances: AtomicUsize,
+}
+
+impl Shared {
+    /// Execute one work item on a pellet instance, routing its emissions.
+    fn run_item(
+        &self,
+        pellet: &mut Box<dyn Pellet>,
+        ctx: &mut PelletContext,
+        item: PortIo,
+    ) {
+        let msgs = item.messages().len() as u64;
+        self.probes.inflight.fetch_add(1, Ordering::SeqCst);
+        let start = Instant::now();
+        let result = pellet.compute(item, ctx);
+        let nanos = start.elapsed().as_nanos() as u64;
+        self.probes.record_completion(msgs, nanos);
+        match result {
+            Ok(()) => self.flush_emissions(ctx),
+            Err(e) => {
+                log::error!(
+                    "pellet {} compute failed: {e}",
+                    self.cfg.pellet_id
+                );
+            }
+        }
+        self.probes.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    fn flush_emissions(&self, ctx: &mut PelletContext) {
+        let emitted = ctx.take_emitted();
+        if !emitted.is_empty() {
+            self.route_emissions(emitted);
+        }
+    }
+
+    fn route_emissions(&self, emitted: Vec<(String, Message)>) {
+        let router = self.router.read().expect("router poisoned");
+        for (port, msg) in emitted {
+            self.probes.record_emission(1);
+            if let Err(e) = router.route(&port, msg) {
+                log::error!(
+                    "pellet {} route to '{port}' failed: {e}",
+                    self.cfg.pellet_id
+                );
+            }
+        }
+    }
+
+    fn queue_len(&self) -> usize {
+        self.ports.values().map(|q| q.len()).sum::<usize>()
+            + self.ready.len()
+    }
+}
+
+/// A running flake.  Cheap to clone handles are not provided; the
+/// coordinator owns flakes via `Arc<Flake>`.
+pub struct Flake {
+    shared: Arc<Shared>,
+    pool: CorePool,
+    dispatcher: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl Flake {
+    /// Build and start a flake: spawns the dispatcher and the initial
+    /// worker pool.  Wiring of outputs happens afterwards via
+    /// [`Flake::wire_output`] — the coordinator activates sources last, so
+    /// a flake may run before its upstream is wired but never emits before
+    /// its own outputs are wired.
+    pub fn start(cfg: FlakeConfig, factory: PelletFactory) -> Arc<Flake> {
+        let mut ports = HashMap::new();
+        let mut port_order = Vec::new();
+        for p in &cfg.inputs {
+            ports.insert(
+                p.name.clone(),
+                Arc::new(SyncQueue::new(cfg.queue_capacity)),
+            );
+            port_order.push(p.name.clone());
+        }
+        let mut router = OutputRouter::new();
+        for o in &cfg.outputs {
+            router.add_port(&o.name, o.split);
+        }
+        let ready = Arc::new(SyncQueue::new((cfg.alpha * 4).max(16)));
+        let cores = cfg.cores.max(1);
+        let shared = Arc::new(Shared {
+            ports,
+            port_order,
+            ready,
+            router: RwLock::new(router),
+            state: StateObject::new(),
+            factory: RwLock::new(factory),
+            version: AtomicU64::new(1),
+            probes: Probes::new(),
+            paused: AtomicBool::new(false),
+            interrupt: Arc::new(AtomicBool::new(false)),
+            stop: AtomicBool::new(false),
+            cores: AtomicUsize::new(cores),
+            active_instances: AtomicUsize::new(0),
+            cfg,
+        });
+
+        // Worker body: owns a pellet instance, re-created when the logic
+        // version changes (dynamic task update).
+        let worker_shared = Arc::clone(&shared);
+        let body: WorkerBody = Arc::new(move |index, stop_flag| {
+            worker_loop(&worker_shared, index, stop_flag);
+        });
+        let instances = shared.cfg.instances_for(cores);
+        let pool =
+            CorePool::new(&format!("flake-{}", shared.cfg.pellet_id), instances, body);
+
+        // Dispatcher thread.
+        let disp_shared = Arc::clone(&shared);
+        let dispatcher = thread::Builder::new()
+            .name(format!("flake-{}-disp", shared.cfg.pellet_id))
+            .spawn(move || dispatcher_loop(&disp_shared))
+            .expect("spawn dispatcher");
+
+        Arc::new(Flake {
+            shared,
+            pool,
+            dispatcher: Mutex::new(Some(dispatcher)),
+        })
+    }
+
+    /// Convenience: start from a graph spec with the default config.
+    pub fn from_spec(spec: &PelletSpec, factory: PelletFactory) -> Arc<Flake> {
+        Flake::start(FlakeConfig::from_spec(spec), factory)
+    }
+
+    pub fn pellet_id(&self) -> &str {
+        &self.shared.cfg.pellet_id
+    }
+
+    pub fn class(&self) -> &str {
+        &self.shared.cfg.class
+    }
+
+    /// Input queue for a port — the coordinator wires upstream transports
+    /// to this, and tests/apps inject messages directly.
+    pub fn input_queue(&self, port: &str) -> Result<Arc<SyncQueue<Message>>> {
+        self.shared.ports.get(port).cloned().ok_or_else(|| {
+            FloeError::Graph(format!(
+                "flake {}: no input port '{port}'",
+                self.shared.cfg.pellet_id
+            ))
+        })
+    }
+
+    /// Inject a message into an input port (graph ingress).
+    pub fn inject(&self, port: &str, msg: Message) -> Result<()> {
+        self.shared.probes.record_arrival(1);
+        self.input_queue(port)?
+            .push(msg)
+            .map_err(|_| FloeError::Channel("flake input closed".into()))
+    }
+
+    /// Wire an outgoing edge from `port` to a sink transport.
+    pub fn wire_output(
+        &self,
+        port: &str,
+        transport: Arc<dyn Transport>,
+    ) -> Result<()> {
+        self.shared
+            .router
+            .write()
+            .expect("router poisoned")
+            .add_target(port, transport)
+    }
+
+    /// The pellet's state object (survives updates; pre-seed configuration
+    /// like `floe.builtin.Delay`'s `delay_secs` here).
+    pub fn state(&self) -> &StateObject {
+        &self.shared.state
+    }
+
+    /// Current logic version (starts at 1, +1 per dynamic update).
+    pub fn version(&self) -> u64 {
+        self.shared.version.load(Ordering::SeqCst)
+    }
+
+    /// Currently allocated cores.
+    pub fn cores(&self) -> usize {
+        self.shared.cores.load(Ordering::SeqCst)
+    }
+
+    /// Number of live pellet instances.
+    pub fn instances(&self) -> usize {
+        self.shared.active_instances.load(Ordering::SeqCst)
+    }
+
+    /// Total buffered input messages.
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue_len()
+    }
+
+    /// Work items dispatched but not yet picked up by an instance.
+    pub fn ready_len(&self) -> usize {
+        self.shared.ready.len()
+    }
+
+    /// Names of this flake's input ports.
+    pub fn input_ports(&self) -> Vec<String> {
+        self.shared.port_order.clone()
+    }
+
+    /// Change the core allocation at runtime (adaptation strategies call
+    /// this through the container).  Instances scale by α.
+    pub fn set_cores(&self, cores: usize) {
+        let cores = cores.max(1);
+        self.shared.cores.store(cores, Ordering::SeqCst);
+        self.pool.resize(self.shared.cfg.instances_for(cores));
+    }
+
+    /// Pause intake (dispatcher stops forming work items; queues buffer).
+    pub fn pause(&self) {
+        self.shared.paused.store(true, Ordering::SeqCst);
+    }
+
+    /// Resume intake.
+    pub fn resume(&self) {
+        self.shared.paused.store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_paused(&self) -> bool {
+        self.shared.paused.load(Ordering::SeqCst)
+    }
+
+    /// Observation snapshot for adaptation strategies.
+    pub fn observe(&self, t: f64) -> FlakeObservation {
+        self.shared.probes.observe(
+            t,
+            self.queue_len(),
+            self.cores(),
+            self.instances(),
+        )
+    }
+
+    /// Probe counters (tests, metrics endpoints).
+    pub fn probes(&self) -> &Probes {
+        &self.shared.probes
+    }
+
+    /// **Dynamic task update** (§II-B).  Swap the pellet logic in place.
+    ///
+    /// * `sync = false` (asynchronous): zero downtime — the new factory is
+    ///   published immediately; each instance switches after finishing its
+    ///   current message.  Old and new outputs may interleave.
+    /// * `sync = true` (synchronous): intake pauses, in-flight messages run
+    ///   to completion (long-running instances see `ctx.interrupted()`),
+    ///   the swap happens, then intake resumes.  Downtime is bounded by the
+    ///   in-flight work.
+    ///
+    /// Pending input messages are retained; the state object survives.
+    /// With `landmark = true` the new logic announces itself downstream
+    /// with an `Update` landmark.
+    pub fn update_pellet(
+        &self,
+        new_factory: PelletFactory,
+        sync: bool,
+        landmark: bool,
+    ) -> Result<u64> {
+        let new_version;
+        if sync {
+            self.pause();
+            self.shared.interrupt.store(true, Ordering::SeqCst);
+            // Drain: dispatcher is paused, wait for ready queue + in-flight.
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while self.shared.ready.len() > 0
+                || self.shared.probes.inflight.load(Ordering::SeqCst) > 0
+            {
+                if Instant::now() > deadline {
+                    self.shared.interrupt.store(false, Ordering::SeqCst);
+                    self.resume();
+                    return Err(FloeError::Pellet(format!(
+                        "flake {}: sync update drain timed out",
+                        self.shared.cfg.pellet_id
+                    )));
+                }
+                thread::sleep(Duration::from_millis(1));
+            }
+            *self.shared.factory.write().expect("factory poisoned") =
+                new_factory;
+            new_version =
+                self.shared.version.fetch_add(1, Ordering::SeqCst) + 1;
+            self.shared.interrupt.store(false, Ordering::SeqCst);
+            self.resume();
+        } else {
+            *self.shared.factory.write().expect("factory poisoned") =
+                new_factory;
+            new_version =
+                self.shared.version.fetch_add(1, Ordering::SeqCst) + 1;
+        }
+        if landmark {
+            let router = self.shared.router.read().expect("router poisoned");
+            for o in &self.shared.cfg.outputs {
+                let _ = router.route(
+                    &o.name,
+                    Message::landmark(Landmark::Update {
+                        version: new_version,
+                    }),
+                );
+            }
+        }
+        log::info!(
+            "flake {}: updated to version {new_version} ({})",
+            self.shared.cfg.pellet_id,
+            if sync { "sync" } else { "async" }
+        );
+        Ok(new_version)
+    }
+
+    /// Wait until all input queues and in-flight work are empty (tests and
+    /// graceful drains).  Returns false on timeout.  The idle condition
+    /// must hold across consecutive checks: a message can transiently be
+    /// in neither a queue nor the in-flight counter while a thread moves
+    /// it between the two.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut idle_streak = 0;
+        loop {
+            let idle = self.queue_len() == 0
+                && self.shared.probes.inflight.load(Ordering::SeqCst) == 0;
+            if idle {
+                idle_streak += 1;
+                if idle_streak >= 3 {
+                    return true;
+                }
+            } else {
+                idle_streak = 0;
+            }
+            if Instant::now() > deadline {
+                return false;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Stop the flake: close queues, stop dispatcher and workers.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for q in self.shared.ports.values() {
+            q.close();
+        }
+        self.shared.ready.close();
+        if let Some(j) =
+            self.dispatcher.lock().expect("dispatcher poisoned").take()
+        {
+            let _ = j.join();
+        }
+        self.pool.shutdown();
+    }
+}
+
+impl Drop for Flake {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+fn dispatcher_loop(shared: &Shared) {
+    let mut windows: BTreeMap<String, (Vec<Message>, Instant)> =
+        BTreeMap::new();
+    let mut rr_port = 0usize;
+    // Fast paths: one interleaved input port — block directly on the
+    // queue instead of polling.  Covers the plain and count-window cases.
+    let single_port = shared.cfg.merge == MergeMode::Interleaved
+        && shared.port_order.len() == 1;
+    let single_window = if single_port {
+        Some(shared.cfg.inputs[0].window)
+    } else {
+        None
+    };
+    let mut batch: Vec<Message> = Vec::new();
+    let mut idle_polls = 0u32;
+    while !shared.stop.load(Ordering::SeqCst) {
+        if shared.paused.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        match single_window {
+            Some(WindowSpec::None) => {
+                let port = &shared.port_order[0];
+                match shared.ports[port]
+                    .pop_timeout(Duration::from_millis(10))
+                {
+                    Ok(Some(msg)) => {
+                        shared.probes.record_arrival(1);
+                        if shared
+                            .ready
+                            .push(PortIo::Single(port.clone(), msg))
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Ok(None) => {}
+                    Err(_) => return, // input closed
+                }
+                continue;
+            }
+            Some(WindowSpec::Count(n)) => {
+                let port = &shared.port_order[0];
+                match shared.ports[port]
+                    .pop_timeout(Duration::from_millis(10))
+                {
+                    Ok(Some(msg)) => {
+                        idle_polls = 0;
+                        shared.probes.record_arrival(1);
+                        let flush = msg.is_landmark();
+                        batch.push(msg);
+                        if batch.len() >= n || flush {
+                            let b = std::mem::take(&mut batch);
+                            if shared
+                                .ready
+                                .push(PortIo::Window(port.clone(), b))
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                    }
+                    Ok(None) => {
+                        // Sustained idle: flush a partial batch so tail
+                        // messages are not held indefinitely, but give
+                        // bursts a few polls to refill the window first
+                        // (bigger batches amortize the XLA call).
+                        idle_polls += 1;
+                        if idle_polls >= 3 && !batch.is_empty() {
+                            let b = std::mem::take(&mut batch);
+                            if shared
+                                .ready
+                                .push(PortIo::Window(port.clone(), b))
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        if !batch.is_empty() {
+                            let b = std::mem::take(&mut batch);
+                            let _ = shared
+                                .ready
+                                .push(PortIo::Window(port.clone(), b));
+                        }
+                        return;
+                    }
+                }
+                continue;
+            }
+            _ => {}
+        }
+        let made_progress = match shared.cfg.merge {
+            MergeMode::Synchronous => dispatch_synchronous(shared),
+            MergeMode::Interleaved => {
+                dispatch_interleaved(shared, &mut windows, &mut rr_port)
+            }
+        };
+        if !made_progress {
+            thread::sleep(Duration::from_micros(200));
+            // Flush expired time windows even without new arrivals.
+            flush_expired_windows(shared, &mut windows);
+        }
+    }
+}
+
+/// Synchronous merge: form a tuple once every port has a message (P5).
+fn dispatch_synchronous(shared: &Shared) -> bool {
+    let all_ready = shared
+        .port_order
+        .iter()
+        .all(|p| !shared.ports[p].is_empty());
+    if !all_ready {
+        return false;
+    }
+    let mut tuple = BTreeMap::new();
+    for p in &shared.port_order {
+        match shared.ports[p].try_pop() {
+            Some(m) => {
+                shared.probes.record_arrival(1);
+                tuple.insert(p.clone(), m);
+            }
+            None => {
+                // Lost a race; push back what we took and retry later.
+                for (port, msg) in tuple {
+                    let _ = shared.ports[&port].push(msg);
+                }
+                return false;
+            }
+        }
+    }
+    shared.ready.push(PortIo::Tuple(tuple)).is_ok()
+}
+
+/// Interleaved merge: deliver per-port messages as they arrive, applying
+/// window annotations (P3/P6).
+fn dispatch_interleaved(
+    shared: &Shared,
+    windows: &mut BTreeMap<String, (Vec<Message>, Instant)>,
+    rr_port: &mut usize,
+) -> bool {
+    let nports = shared.port_order.len();
+    if nports == 0 {
+        return false;
+    }
+    let mut progressed = false;
+    for k in 0..nports {
+        let pi = (*rr_port + k) % nports;
+        let port = &shared.port_order[pi];
+        let Some(msg) = shared.ports[port].try_pop() else {
+            continue;
+        };
+        shared.probes.record_arrival(1);
+        progressed = true;
+        let spec = shared
+            .cfg
+            .inputs
+            .iter()
+            .find(|i| &i.name == port)
+            .expect("port spec");
+        match spec.window {
+            WindowSpec::None => {
+                if shared
+                    .ready
+                    .push(PortIo::Single(port.clone(), msg))
+                    .is_err()
+                {
+                    return progressed;
+                }
+            }
+            WindowSpec::Count(n) => {
+                let entry = windows
+                    .entry(port.clone())
+                    .or_insert_with(|| (Vec::new(), Instant::now()));
+                // Landmarks flush the window early so reducers see them.
+                let is_landmark = msg.is_landmark();
+                entry.0.push(msg);
+                if entry.0.len() >= n || is_landmark {
+                    let batch = std::mem::take(&mut entry.0);
+                    let _ = shared
+                        .ready
+                        .push(PortIo::Window(port.clone(), batch));
+                }
+            }
+            WindowSpec::Time(_) => {
+                let entry = windows
+                    .entry(port.clone())
+                    .or_insert_with(|| (Vec::new(), Instant::now()));
+                if entry.0.is_empty() {
+                    entry.1 = Instant::now();
+                }
+                entry.0.push(msg);
+            }
+        }
+    }
+    *rr_port = (*rr_port + 1) % nports;
+    flush_expired_windows(shared, windows);
+    progressed
+}
+
+fn flush_expired_windows(
+    shared: &Shared,
+    windows: &mut BTreeMap<String, (Vec<Message>, Instant)>,
+) {
+    for (port, (buf, started)) in windows.iter_mut() {
+        if buf.is_empty() {
+            continue;
+        }
+        let spec = shared
+            .cfg
+            .inputs
+            .iter()
+            .find(|i| &i.name == port)
+            .expect("port spec");
+        if let WindowSpec::Time(secs) = spec.window {
+            if started.elapsed().as_secs_f64() >= secs {
+                let batch = std::mem::take(buf);
+                let _ =
+                    shared.ready.push(PortIo::Window(port.clone(), batch));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+/// Create a fresh pellet instance at the current logic version.
+fn make_instance(
+    shared: &Shared,
+    index: usize,
+) -> (u64, Box<dyn Pellet>, PelletContext) {
+    let version = shared.version.load(Ordering::SeqCst);
+    let factory = shared.factory.read().expect("factory poisoned").clone();
+    let mut pellet = factory();
+    let mut ctx = PelletContext::new(
+        shared.cfg.pellet_id.clone(),
+        index,
+        version,
+        shared.state.clone(),
+        Arc::clone(&shared.interrupt),
+    );
+    if let Err(e) = pellet.setup(&mut ctx) {
+        log::error!("pellet {} setup failed: {e}", shared.cfg.pellet_id);
+    }
+    shared.flush_emissions(&mut ctx);
+    (version, pellet, ctx)
+}
+
+fn worker_loop(shared: &Shared, index: usize, stop_flag: &AtomicBool) {
+    shared.active_instances.fetch_add(1, Ordering::SeqCst);
+    let mut instance: Option<(u64, Box<dyn Pellet>, PelletContext)> = None;
+
+    while !stop_flag.load(Ordering::SeqCst)
+        && !shared.stop.load(Ordering::SeqCst)
+    {
+        let version = shared.version.load(Ordering::SeqCst);
+        // (Re)create the instance when missing or stale (dynamic update).
+        let stale = instance
+            .as_ref()
+            .map(|(v, _, _)| *v != version)
+            .unwrap_or(true);
+        if stale {
+            if let Some((_, mut old, mut ctx)) = instance.take() {
+                old.teardown(&mut ctx);
+                shared.flush_emissions(&mut ctx);
+            }
+            instance = Some(make_instance(shared, index));
+        }
+        let (ver, pellet, ctx) = instance.as_mut().expect("instance set");
+        let version = *ver;
+
+        match shared.cfg.trigger {
+            TriggerMode::Push => {
+                match shared.ready.pop_timeout(Duration::from_millis(20)) {
+                    Ok(Some(item)) => {
+                        // A dynamic update may have landed while this
+                        // worker was blocked waiting for the item: a
+                        // synchronous update's guarantee is that messages
+                        // dispatched after the swap run on the new logic,
+                        // so re-check before computing.
+                        if shared.version.load(Ordering::SeqCst) != version
+                        {
+                            if let Some((_, mut old, mut octx)) =
+                                instance.take()
+                            {
+                                old.teardown(&mut octx);
+                                shared.flush_emissions(&mut octx);
+                            }
+                            instance = Some(make_instance(shared, index));
+                        }
+                        let (_, pellet, ctx) =
+                            instance.as_mut().expect("instance set");
+                        shared.run_item(pellet, ctx, item);
+                    }
+                    Ok(None) => {}
+                    Err(_) => break, // queue closed
+                }
+            }
+            TriggerMode::Pull => {
+                // Feed the pull pellet until it must yield (stop, update,
+                // pause).  The source blocks in short slices so the worker
+                // can re-check flags, and flushes the pellet's pending
+                // emissions on every poll — pull pellets run indefinitely,
+                // so output cannot wait for compute_pull to return.
+                let emissions = ctx.emission_buffer();
+                let mut source = || -> Option<PortIo> {
+                    loop {
+                        let pending = std::mem::take(
+                            &mut *emissions
+                                .lock()
+                                .expect("emit buffer poisoned"),
+                        );
+                        if !pending.is_empty() {
+                            shared.route_emissions(pending);
+                        }
+                        if stop_flag.load(Ordering::SeqCst)
+                            || shared.stop.load(Ordering::SeqCst)
+                            || shared.version.load(Ordering::SeqCst)
+                                != version
+                            || shared.interrupt.load(Ordering::SeqCst)
+                        {
+                            return None;
+                        }
+                        match shared
+                            .ready
+                            .pop_timeout(Duration::from_millis(20))
+                        {
+                            Ok(Some(item)) => return Some(item),
+                            Ok(None) => continue,
+                            Err(_) => return None,
+                        }
+                    }
+                };
+                shared.probes.inflight.fetch_add(1, Ordering::SeqCst);
+                let start = Instant::now();
+                let before =
+                    shared.probes.completions.load(Ordering::Relaxed);
+                let result = pellet.compute_pull(&mut source, ctx);
+                // Pull pellets account their own messages poorly; estimate
+                // completions as messages consumed since entry.
+                let nanos = start.elapsed().as_nanos() as u64;
+                let after =
+                    shared.probes.completions.load(Ordering::Relaxed);
+                if after == before {
+                    // compute_pull consumed without per-item accounting.
+                    shared.probes.record_completion(1, nanos.min(1_000_000));
+                }
+                if let Err(e) = result {
+                    log::error!(
+                        "pellet {} pull failed: {e}",
+                        shared.cfg.pellet_id
+                    );
+                }
+                shared.flush_emissions(ctx);
+                shared.probes.inflight.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+    if let Some((_, mut old, mut ctx)) = instance.take() {
+        old.teardown(&mut ctx);
+        shared.flush_emissions(&mut ctx);
+    }
+    shared.active_instances.fetch_sub(1, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::InProcTransport;
+    use crate::graph::SplitMode;
+
+    fn collect_transport(
+    ) -> (Arc<SyncQueue<Message>>, Arc<dyn Transport>) {
+        let q = Arc::new(SyncQueue::new(4096));
+        let t: Arc<dyn Transport> = Arc::new(InProcTransport {
+            queue: Arc::clone(&q),
+            label: "out".into(),
+        });
+        (q, t)
+    }
+
+    fn upper_cfg() -> FlakeConfig {
+        FlakeConfig {
+            pellet_id: "upper".into(),
+            class: "floe.builtin.Uppercase".into(),
+            inputs: vec![InPortSpec {
+                name: "in".into(),
+                window: WindowSpec::None,
+            }],
+            outputs: vec![OutPortSpec {
+                name: "out".into(),
+                split: SplitMode::RoundRobin,
+            }],
+            merge: MergeMode::Interleaved,
+            trigger: TriggerMode::Push,
+            sequential: false,
+            stateful: false,
+            cores: 1,
+            alpha: 2,
+            queue_capacity: 1024,
+        }
+    }
+
+    fn upper_factory() -> PelletFactory {
+        Arc::new(|| Box::new(crate::pellet::builtins::Uppercase))
+    }
+
+    #[test]
+    fn push_flake_processes_messages() {
+        let flake = Flake::start(upper_cfg(), upper_factory());
+        let (outq, t) = collect_transport();
+        flake.wire_output("out", t).unwrap();
+        for i in 0..50 {
+            flake.inject("in", Message::text(format!("m{i}"))).unwrap();
+        }
+        assert!(flake.drain(Duration::from_secs(5)));
+        let mut got = Vec::new();
+        while let Some(m) = outq.try_pop() {
+            got.push(m.as_text().unwrap().to_string());
+        }
+        got.sort();
+        assert_eq!(got.len(), 50);
+        assert!(got.contains(&"M0".to_string()));
+        flake.shutdown();
+    }
+
+    #[test]
+    fn sequential_flake_preserves_order() {
+        let mut cfg = upper_cfg();
+        cfg.sequential = true;
+        let flake = Flake::start(cfg, upper_factory());
+        let (outq, t) = collect_transport();
+        flake.wire_output("out", t).unwrap();
+        for i in 0..100 {
+            flake.inject("in", Message::text(format!("{i:03}"))).unwrap();
+        }
+        assert!(flake.drain(Duration::from_secs(5)));
+        let mut got = Vec::new();
+        while let Some(m) = outq.try_pop() {
+            got.push(m.as_text().unwrap().to_string());
+        }
+        let want: Vec<String> = (0..100).map(|i| format!("{i:03}")).collect();
+        assert_eq!(got, want);
+        flake.shutdown();
+    }
+
+    #[test]
+    fn set_cores_scales_instances() {
+        let flake = Flake::start(upper_cfg(), upper_factory());
+        assert_eq!(flake.cores(), 1);
+        flake.set_cores(3);
+        assert_eq!(flake.cores(), 3);
+        // alpha=2 -> 6 instances, give workers a moment to spawn
+        for _ in 0..100 {
+            if flake.instances() == 6 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(flake.instances(), 6);
+        flake.shutdown();
+    }
+
+    #[test]
+    fn count_window_batches() {
+        let mut cfg = upper_cfg();
+        cfg.inputs[0].window = WindowSpec::Count(10);
+        cfg.class = "floe.builtin.CountSink".into();
+        cfg.outputs.clear();
+        let flake = Flake::start(
+            cfg,
+            Arc::new(|| Box::new(crate::pellet::builtins::CountSink)),
+        );
+        for i in 0..30 {
+            flake.inject("in", Message::text(format!("{i}"))).unwrap();
+        }
+        assert!(flake.drain(Duration::from_secs(5)));
+        assert_eq!(
+            flake.state().get("count"),
+            Some(crate::util::json::Json::Num(30.0))
+        );
+        flake.shutdown();
+    }
+}

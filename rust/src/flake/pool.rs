@@ -1,0 +1,215 @@
+//! Core-bounded worker pool — the paper's Java `ForkJoinPool` analogue.
+//!
+//! A container grants a flake `cores` cores; the flake runs up to
+//! `cores × α` data-parallel pellet instances (§III, α = 4).  Each worker
+//! thread owns one pellet instance.  The pool is resizable at runtime:
+//! growing spawns workers, shrinking signals individual workers to exit
+//! after their current work item — this is the mechanism behind the
+//! dynamic adaptation strategy's core scaling.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// The per-worker body: loops until the passed flag is set.  Index is the
+/// worker's instance number (stable for its lifetime).
+pub type WorkerBody = Arc<dyn Fn(usize, &AtomicBool) + Send + Sync>;
+
+struct Worker {
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+/// Resizable worker pool.
+pub struct CorePool {
+    body: WorkerBody,
+    workers: Mutex<Vec<Worker>>,
+    next_index: Mutex<usize>,
+    label: String,
+}
+
+impl CorePool {
+    /// Create a pool with `n` workers running `body`.
+    pub fn new(label: &str, n: usize, body: WorkerBody) -> CorePool {
+        let pool = CorePool {
+            body,
+            workers: Mutex::new(Vec::new()),
+            next_index: Mutex::new(0),
+            label: label.to_string(),
+        };
+        pool.resize(n);
+        pool
+    }
+
+    /// Current worker count (including workers winding down).
+    pub fn size(&self) -> usize {
+        self.workers
+            .lock()
+            .expect("pool poisoned")
+            .iter()
+            .filter(|w| !w.stop.load(Ordering::SeqCst))
+            .count()
+    }
+
+    /// Grow or shrink to `n` active workers.  Shrinking is cooperative:
+    /// signalled workers finish their current item first.
+    pub fn resize(&self, n: usize) {
+        let mut workers = self.workers.lock().expect("pool poisoned");
+        // Reap finished workers.
+        workers.retain_mut(|w| {
+            if w.stop.load(Ordering::SeqCst) {
+                if let Some(j) = w.join.take() {
+                    if j.is_finished() {
+                        let _ = j.join();
+                        return false;
+                    }
+                    w.join = Some(j);
+                }
+            }
+            true
+        });
+        let active: Vec<usize> = workers
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| !w.stop.load(Ordering::SeqCst))
+            .map(|(i, _)| i)
+            .collect();
+        if active.len() < n {
+            for _ in active.len()..n {
+                let stop = Arc::new(AtomicBool::new(false));
+                let stop2 = Arc::clone(&stop);
+                let body = Arc::clone(&self.body);
+                let mut idx_guard =
+                    self.next_index.lock().expect("pool poisoned");
+                let index = *idx_guard;
+                *idx_guard += 1;
+                drop(idx_guard);
+                let join = thread::Builder::new()
+                    .name(format!("{}-w{}", self.label, index))
+                    .spawn(move || body(index, &stop2))
+                    .expect("spawn pool worker");
+                workers.push(Worker { stop, join: Some(join) });
+            }
+        } else if active.len() > n {
+            for &i in active.iter().rev().take(active.len() - n) {
+                workers[i].stop.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Stop all workers and join them.
+    pub fn shutdown(&self) {
+        let mut workers = self.workers.lock().expect("pool poisoned");
+        for w in workers.iter() {
+            w.stop.store(true, Ordering::SeqCst);
+        }
+        for w in workers.iter_mut() {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+        workers.clear();
+    }
+}
+
+impl Drop for CorePool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    fn counting_body(
+        running: Arc<AtomicUsize>,
+        peak: Arc<AtomicUsize>,
+    ) -> WorkerBody {
+        Arc::new(move |_idx, stop| {
+            let n = running.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(n, Ordering::SeqCst);
+            while !stop.load(Ordering::SeqCst) {
+                thread::sleep(Duration::from_millis(1));
+            }
+            running.fetch_sub(1, Ordering::SeqCst);
+        })
+    }
+
+    #[test]
+    fn spawns_n_workers() {
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let pool = CorePool::new(
+            "t",
+            4,
+            counting_body(Arc::clone(&running), Arc::clone(&peak)),
+        );
+        // Wait for workers to come up.
+        for _ in 0..100 {
+            if running.load(Ordering::SeqCst) == 4 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(running.load(Ordering::SeqCst), 4);
+        assert_eq!(pool.size(), 4);
+        pool.shutdown();
+        assert_eq!(running.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn resize_up_and_down() {
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let pool = CorePool::new(
+            "t",
+            2,
+            counting_body(Arc::clone(&running), Arc::clone(&peak)),
+        );
+        pool.resize(6);
+        for _ in 0..100 {
+            if running.load(Ordering::SeqCst) == 6 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(running.load(Ordering::SeqCst), 6);
+        pool.resize(1);
+        for _ in 0..200 {
+            if running.load(Ordering::SeqCst) == 1 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(running.load(Ordering::SeqCst), 1);
+        assert_eq!(pool.size(), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_indexes_are_unique() {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = Arc::clone(&seen);
+        let pool = CorePool::new(
+            "t",
+            3,
+            Arc::new(move |idx, stop| {
+                seen2.lock().unwrap().push(idx);
+                while !stop.load(Ordering::SeqCst) {
+                    thread::sleep(Duration::from_millis(1));
+                }
+            }),
+        );
+        thread::sleep(Duration::from_millis(30));
+        pool.resize(5);
+        thread::sleep(Duration::from_millis(30));
+        pool.shutdown();
+        let mut got = seen.lock().unwrap().clone();
+        got.sort();
+        got.dedup();
+        assert_eq!(got.len(), 5, "{got:?}");
+    }
+}

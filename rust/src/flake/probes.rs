@@ -1,0 +1,207 @@
+//! Flake instrumentation (§III: "instrumentation present within flakes for
+//! monitoring their queue lengths and average message latencies") — the
+//! observations that drive the resource-adaptation strategies.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Lock-free counters plus a small locked window for rate estimation.
+pub struct Probes {
+    /// Messages that arrived on any input port.
+    pub arrivals: AtomicU64,
+    /// Messages fully processed by a pellet instance.
+    pub completions: AtomicU64,
+    /// Messages emitted on output ports.
+    pub emissions: AtomicU64,
+    /// Work items currently being computed.
+    pub inflight: AtomicUsize,
+    /// Cumulative busy nanoseconds across instances.
+    pub busy_nanos: AtomicU64,
+    /// EMA of per-message service latency, nanoseconds (α = 0.2).
+    latency_ema_nanos: AtomicU64,
+    /// (t, arrivals, completions) snapshots for instantaneous rates.
+    window: Mutex<Vec<(f64, u64, u64)>>,
+}
+
+/// A point-in-time view handed to adaptation strategies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlakeObservation {
+    /// Messages waiting in input queues.
+    pub queue_len: usize,
+    /// Instantaneous arrival rate (msg/s) over the sampling window.
+    pub arrival_rate: f64,
+    /// Instantaneous completion rate (msg/s) over the sampling window.
+    pub completion_rate: f64,
+    /// EMA service latency per message, seconds.
+    pub service_latency: f64,
+    /// Output/input selectivity observed so far.
+    pub selectivity: f64,
+    /// Currently allocated cores.
+    pub cores: usize,
+    /// Currently running instances.
+    pub instances: usize,
+}
+
+impl Probes {
+    pub fn new() -> Probes {
+        Probes {
+            arrivals: AtomicU64::new(0),
+            completions: AtomicU64::new(0),
+            emissions: AtomicU64::new(0),
+            inflight: AtomicUsize::new(0),
+            busy_nanos: AtomicU64::new(0),
+            latency_ema_nanos: AtomicU64::new(0),
+            window: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn record_arrival(&self, n: u64) {
+        self.arrivals.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record a completed work item covering `msgs` messages that took
+    /// `nanos` to compute.
+    pub fn record_completion(&self, msgs: u64, nanos: u64) {
+        self.completions.fetch_add(msgs, Ordering::Relaxed);
+        self.busy_nanos.fetch_add(nanos, Ordering::Relaxed);
+        if msgs > 0 {
+            let per_msg = nanos / msgs;
+            // EMA with α=0.2 in fixed point.
+            let prev = self.latency_ema_nanos.load(Ordering::Relaxed);
+            let next = if prev == 0 {
+                per_msg
+            } else {
+                (prev * 4 + per_msg) / 5
+            };
+            self.latency_ema_nanos.store(next, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_emission(&self, n: u64) {
+        self.emissions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// EMA service latency in seconds.
+    pub fn latency_secs(&self) -> f64 {
+        self.latency_ema_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Observed selectivity (emissions per completion); 1.0 before data.
+    pub fn selectivity(&self) -> f64 {
+        let c = self.completions.load(Ordering::Relaxed);
+        if c == 0 {
+            return 1.0;
+        }
+        self.emissions.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Take a rate sample at time `t` (seconds) and return
+    /// (arrival_rate, completion_rate) over the last window (up to 5
+    /// samples retained).
+    pub fn sample_rates(&self, t: f64) -> (f64, f64) {
+        let a = self.arrivals.load(Ordering::Relaxed);
+        let c = self.completions.load(Ordering::Relaxed);
+        let mut w = self.window.lock().expect("probe window poisoned");
+        w.push((t, a, c));
+        if w.len() > 5 {
+            let drop = w.len() - 5;
+            w.drain(..drop);
+        }
+        if w.len() < 2 {
+            return (0.0, 0.0);
+        }
+        let (t0, a0, c0) = w[0];
+        let dt = t - t0;
+        if dt <= 0.0 {
+            return (0.0, 0.0);
+        }
+        (
+            (a.saturating_sub(a0)) as f64 / dt,
+            (c.saturating_sub(c0)) as f64 / dt,
+        )
+    }
+
+    /// Build a strategy observation.
+    pub fn observe(
+        &self,
+        t: f64,
+        queue_len: usize,
+        cores: usize,
+        instances: usize,
+    ) -> FlakeObservation {
+        let (arrival_rate, completion_rate) = self.sample_rates(t);
+        FlakeObservation {
+            queue_len,
+            arrival_rate,
+            completion_rate,
+            service_latency: self.latency_secs(),
+            selectivity: self.selectivity(),
+            cores,
+            instances,
+        }
+    }
+}
+
+impl Default for Probes {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_ema_converges() {
+        let p = Probes::new();
+        for _ in 0..50 {
+            p.record_completion(1, 1_000_000); // 1ms
+        }
+        let l = p.latency_secs();
+        assert!((l - 0.001).abs() < 0.0005, "latency {l}");
+    }
+
+    #[test]
+    fn selectivity_ratio() {
+        let p = Probes::new();
+        assert_eq!(p.selectivity(), 1.0);
+        p.record_completion(10, 1000);
+        p.record_emission(25);
+        assert!((p.selectivity() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates_from_window() {
+        let p = Probes::new();
+        p.record_arrival(0);
+        let _ = p.sample_rates(0.0);
+        p.record_arrival(100);
+        p.record_completion(50, 1000);
+        let (ar, cr) = p.sample_rates(1.0);
+        assert!((ar - 100.0).abs() < 1e-6, "{ar}");
+        assert!((cr - 50.0).abs() < 1e-6, "{cr}");
+        // Window slides: very old samples dropped after 5.
+        for i in 2..10 {
+            let _ = p.sample_rates(i as f64);
+        }
+        let w = p.window.lock().unwrap();
+        assert!(w.len() <= 5);
+    }
+
+    #[test]
+    fn observation_bundles_fields() {
+        let p = Probes::new();
+        p.record_arrival(10);
+        let _ = p.sample_rates(0.0);
+        p.record_completion(4, 8_000_000);
+        p.record_emission(8);
+        p.record_arrival(10);
+        let obs = p.observe(2.0, 7, 2, 8);
+        assert_eq!(obs.queue_len, 7);
+        assert_eq!(obs.cores, 2);
+        assert_eq!(obs.instances, 8);
+        assert!(obs.arrival_rate > 0.0);
+        assert!((obs.selectivity - 2.0).abs() < 1e-9);
+    }
+}

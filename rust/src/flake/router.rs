@@ -1,0 +1,230 @@
+//! Output routing: applies the split annotation of each output port
+//! (duplicate / round-robin / key-hash, Fig. 1 P7–P9) to pick the outgoing
+//! edge(s) for every emitted message.
+//!
+//! Landmark control messages are always broadcast to *every* edge of the
+//! port regardless of split mode — a WindowEnd or Update landmark must
+//! reach all downstream reducers/pellets to be meaningful.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::channel::Transport;
+use crate::error::{FloeError, Result};
+use crate::graph::SplitMode;
+use crate::message::{key_hash, Message};
+
+struct PortRoutes {
+    split: SplitMode,
+    targets: Vec<Arc<dyn Transport>>,
+    rr: AtomicUsize,
+}
+
+/// Per-flake output router.
+pub struct OutputRouter {
+    ports: HashMap<String, PortRoutes>,
+    /// Messages routed (for probes).
+    pub routed: AtomicUsize,
+    /// Messages emitted on ports with no outgoing edges (sinks) — dropped.
+    pub dropped: AtomicUsize,
+}
+
+impl OutputRouter {
+    pub fn new() -> OutputRouter {
+        OutputRouter {
+            ports: HashMap::new(),
+            routed: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+        }
+    }
+
+    /// Declare an output port with its split mode.
+    pub fn add_port(&mut self, name: &str, split: SplitMode) {
+        self.ports.insert(
+            name.to_string(),
+            PortRoutes { split, targets: Vec::new(), rr: AtomicUsize::new(0) },
+        );
+    }
+
+    /// Wire one outgoing edge (coordinator does this bottom-up).
+    pub fn add_target(
+        &mut self,
+        port: &str,
+        transport: Arc<dyn Transport>,
+    ) -> Result<()> {
+        self.ports
+            .get_mut(port)
+            .ok_or_else(|| {
+                FloeError::Graph(format!("router: unknown out port '{port}'"))
+            })?
+            .targets
+            .push(transport);
+        Ok(())
+    }
+
+    pub fn has_port(&self, port: &str) -> bool {
+        self.ports.contains_key(port)
+    }
+
+    pub fn target_count(&self, port: &str) -> usize {
+        self.ports.get(port).map(|p| p.targets.len()).unwrap_or(0)
+    }
+
+    /// Route one message according to the port's split annotation.
+    pub fn route(&self, port: &str, msg: Message) -> Result<()> {
+        let routes = self.ports.get(port).ok_or_else(|| {
+            FloeError::Channel(format!("router: no out port '{port}'"))
+        })?;
+        if routes.targets.is_empty() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        if msg.is_landmark() {
+            // Control messages reach every downstream pellet.
+            for t in &routes.targets {
+                t.send(msg.clone())?;
+            }
+            return Ok(());
+        }
+        match routes.split {
+            SplitMode::Duplicate => {
+                for t in &routes.targets {
+                    t.send(msg.clone())?;
+                }
+            }
+            SplitMode::RoundRobin => {
+                let i = routes.rr.fetch_add(1, Ordering::Relaxed)
+                    % routes.targets.len();
+                routes.targets[i].send(msg)?;
+            }
+            SplitMode::KeyHash => {
+                // Hash the explicit key; fall back to text payload so
+                // un-keyed messages still route deterministically.
+                let key = msg
+                    .key
+                    .as_deref()
+                    .or_else(|| msg.as_text())
+                    .unwrap_or("");
+                let i =
+                    (key_hash(key) % routes.targets.len() as u64) as usize;
+                routes.targets[i].send(msg)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for OutputRouter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{InProcTransport, SyncQueue};
+    use crate::message::Landmark;
+
+    fn sink() -> (Arc<SyncQueue<Message>>, Arc<dyn Transport>) {
+        let q = Arc::new(SyncQueue::new(1024));
+        let t: Arc<dyn Transport> = Arc::new(InProcTransport {
+            queue: Arc::clone(&q),
+            label: "t".into(),
+        });
+        (q, t)
+    }
+
+    fn router_with(
+        split: SplitMode,
+        n: usize,
+    ) -> (OutputRouter, Vec<Arc<SyncQueue<Message>>>) {
+        let mut r = OutputRouter::new();
+        r.add_port("out", split);
+        let mut queues = Vec::new();
+        for _ in 0..n {
+            let (q, t) = sink();
+            r.add_target("out", t).unwrap();
+            queues.push(q);
+        }
+        (r, queues)
+    }
+
+    #[test]
+    fn duplicate_copies_to_all() {
+        let (r, qs) = router_with(SplitMode::Duplicate, 3);
+        r.route("out", Message::text("x")).unwrap();
+        for q in &qs {
+            assert_eq!(q.len(), 1);
+        }
+    }
+
+    #[test]
+    fn round_robin_balances() {
+        let (r, qs) = router_with(SplitMode::RoundRobin, 3);
+        for i in 0..9 {
+            r.route("out", Message::text(format!("{i}"))).unwrap();
+        }
+        for q in &qs {
+            assert_eq!(q.len(), 3);
+        }
+        // Order preserved per target.
+        assert_eq!(qs[0].pop().unwrap().as_text(), Some("0"));
+        assert_eq!(qs[0].pop().unwrap().as_text(), Some("3"));
+    }
+
+    #[test]
+    fn key_hash_groups_keys() {
+        let (r, qs) = router_with(SplitMode::KeyHash, 4);
+        for i in 0..100 {
+            let key = format!("key-{}", i % 10);
+            r.route("out", Message::text("v").with_key(&key)).unwrap();
+        }
+        // Re-route the same keys: distribution must be identical, i.e. all
+        // messages with one key land in one queue.
+        let total: usize = qs.iter().map(|q| q.len()).sum();
+        assert_eq!(total, 100);
+        // Each of the 10 keys maps to exactly one queue; with 10 keys over
+        // 4 queues each queue holds a multiple of 10.
+        for q in &qs {
+            assert_eq!(q.len() % 10, 0, "len={}", q.len());
+        }
+    }
+
+    #[test]
+    fn keyhash_falls_back_to_text() {
+        let (r, qs) = router_with(SplitMode::KeyHash, 2);
+        r.route("out", Message::text("same")).unwrap();
+        r.route("out", Message::text("same")).unwrap();
+        let lens: Vec<usize> = qs.iter().map(|q| q.len()).collect();
+        assert!(lens.contains(&2), "{lens:?}"); // same text -> same target
+    }
+
+    #[test]
+    fn landmarks_broadcast_on_any_split() {
+        for split in
+            [SplitMode::RoundRobin, SplitMode::KeyHash, SplitMode::Duplicate]
+        {
+            let (r, qs) = router_with(split, 3);
+            r.route(
+                "out",
+                Message::landmark(Landmark::WindowEnd("w".into())),
+            )
+            .unwrap();
+            for q in &qs {
+                assert_eq!(q.len(), 1, "split {split:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sink_port_drops_and_counts() {
+        let mut r = OutputRouter::new();
+        r.add_port("out", SplitMode::RoundRobin);
+        r.route("out", Message::text("gone")).unwrap();
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 1);
+        assert!(r.route("missing", Message::text("x")).is_err());
+    }
+}

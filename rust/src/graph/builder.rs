@@ -1,0 +1,166 @@
+//! Fluent builder for [`DataflowGraph`]s — the programmatic alternative to
+//! the XML description.
+
+use super::{
+    DataflowGraph, EdgeSpec, InPortSpec, MergeMode, OutPortSpec, PelletSpec,
+    SplitMode, TriggerMode, WindowSpec,
+};
+use crate::error::Result;
+
+/// Builder handle for one pellet being configured.
+pub struct PelletBuilder<'a> {
+    spec: &'a mut PelletSpec,
+}
+
+impl<'a> PelletBuilder<'a> {
+    /// Add an input port (no window).
+    pub fn in_port(self, name: &str) -> Self {
+        self.spec
+            .inputs
+            .push(InPortSpec { name: name.into(), window: WindowSpec::None });
+        self
+    }
+
+    /// Add an input port with a window annotation.
+    pub fn in_port_windowed(self, name: &str, window: WindowSpec) -> Self {
+        self.spec.inputs.push(InPortSpec { name: name.into(), window });
+        self
+    }
+
+    /// Add an output port with a split annotation.
+    pub fn out_port(self, name: &str, split: SplitMode) -> Self {
+        self.spec.outputs.push(OutPortSpec { name: name.into(), split });
+        self
+    }
+
+    /// Static core allocation annotation.
+    pub fn cores(self, n: usize) -> Self {
+        self.spec.cores = Some(n);
+        self
+    }
+
+    /// Mark stateful (state object survives dynamic updates).
+    pub fn stateful(self) -> Self {
+        self.spec.stateful = true;
+        self
+    }
+
+    /// Force sequential (in-order) execution.
+    pub fn sequential(self) -> Self {
+        self.spec.sequential = true;
+        self
+    }
+
+    /// Input merge behaviour across ports.
+    pub fn merge(self, mode: MergeMode) -> Self {
+        self.spec.merge = mode;
+        self
+    }
+
+    /// Push or pull triggering.
+    pub fn trigger(self, mode: TriggerMode) -> Self {
+        self.spec.trigger = mode;
+        self
+    }
+
+    /// Per-message latency hint (seconds) for the static look-ahead
+    /// strategy.
+    pub fn latency_hint(self, secs: f64) -> Self {
+        self.spec.latency_hint = Some(secs);
+        self
+    }
+
+    /// Selectivity (outputs per input) hint for the static look-ahead.
+    pub fn selectivity_hint(self, ratio: f64) -> Self {
+        self.spec.selectivity_hint = Some(ratio);
+        self
+    }
+}
+
+/// Fluent graph builder.
+///
+/// ```no_run
+/// use floe::graph::{GraphBuilder, SplitMode};
+/// let mut g = GraphBuilder::new("demo");
+/// g.pellet("src", "app.Source").out_port("out", SplitMode::RoundRobin);
+/// g.pellet("sink", "app.Sink").in_port("in");
+/// g.edge("src", "out", "sink", "in");
+/// let graph = g.build().unwrap();
+/// assert_eq!(graph.pellets.len(), 2);
+/// ```
+pub struct GraphBuilder {
+    name: String,
+    pellets: Vec<PelletSpec>,
+    edges: Vec<EdgeSpec>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        GraphBuilder { name: name.into(), pellets: vec![], edges: vec![] }
+    }
+
+    /// Add a pellet and return its configuration handle.
+    pub fn pellet(&mut self, id: &str, class: &str) -> PelletBuilder<'_> {
+        self.pellets.push(PelletSpec::new(id, class));
+        PelletBuilder { spec: self.pellets.last_mut().expect("just pushed") }
+    }
+
+    /// Wire `from.port -> to.port`.
+    pub fn edge(
+        &mut self,
+        from: &str,
+        from_port: &str,
+        to: &str,
+        to_port: &str,
+    ) -> &mut Self {
+        self.edges.push(EdgeSpec::new(from, from_port, to, to_port));
+        self
+    }
+
+    /// Finish and validate.
+    pub fn build(self) -> Result<DataflowGraph> {
+        let g = DataflowGraph {
+            name: self.name,
+            pellets: self.pellets,
+            edges: self.edges,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_annotations() {
+        let mut b = GraphBuilder::new("g");
+        b.pellet("p", "C")
+            .in_port_windowed("in", WindowSpec::Count(5))
+            .out_port("out", SplitMode::KeyHash)
+            .cores(3)
+            .stateful()
+            .sequential()
+            .merge(MergeMode::Synchronous)
+            .trigger(TriggerMode::Pull)
+            .latency_hint(0.25)
+            .selectivity_hint(2.0);
+        b.pellet("q", "C").in_port("in");
+        b.edge("p", "out", "q", "in");
+        // p's sync merge requires its (only) input port wired:
+        b.edge("q", "out", "p", "in"); // invalid: q has no out port
+        assert!(b.build().is_err());
+
+        let mut b = GraphBuilder::new("g");
+        b.pellet("p", "C")
+            .out_port("out", SplitMode::KeyHash)
+            .cores(3)
+            .latency_hint(0.25);
+        let g = b.build().unwrap();
+        let p = g.pellet("p").unwrap();
+        assert_eq!(p.cores, Some(3));
+        assert_eq!(p.out_port("out").unwrap().split, SplitMode::KeyHash);
+        assert_eq!(p.latency_hint, Some(0.25));
+    }
+}

@@ -1,0 +1,567 @@
+//! Dataflow graph model: pellet/edge specifications, design-pattern
+//! annotations (§II-A, Fig. 1), a fluent builder, the XML loader (§III:
+//! graphs are "described in XML"), validation and the bottom-up wiring
+//! order used by the coordinator.
+
+mod builder;
+pub mod patterns;
+mod xml_io;
+
+pub use builder::GraphBuilder;
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+use crate::error::{FloeError, Result};
+
+/// How messages on one output port are distributed over multiple outgoing
+/// edges (Fig. 1, P7/P8/P9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitMode {
+    /// Copy every message to all edges (P7).
+    Duplicate,
+    /// Round-robin load balancing over edges (P8, the default).
+    RoundRobin,
+    /// Hash the message key to pick the edge — the dynamic port mapping
+    /// that generalizes the MapReduce shuffle (P9).
+    KeyHash,
+}
+
+impl Default for SplitMode {
+    fn default() -> Self {
+        SplitMode::RoundRobin
+    }
+}
+
+/// How messages arriving on *different* input ports are combined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeMode {
+    /// Each port's messages are delivered independently as they arrive;
+    /// multiple edges wired to one port interleave (P6).
+    Interleaved,
+    /// Align one message from every input port into a port-name-indexed
+    /// tuple before triggering the pellet (P5).
+    Synchronous,
+}
+
+impl Default for MergeMode {
+    fn default() -> Self {
+        MergeMode::Interleaved
+    }
+}
+
+/// Message windowing on an input port (Fig. 1, P3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WindowSpec {
+    /// Deliver messages one at a time.
+    None,
+    /// Collect `n` messages per invocation.
+    Count(usize),
+    /// Collect messages arriving within a time span (seconds).
+    Time(f64),
+}
+
+impl Default for WindowSpec {
+    fn default() -> Self {
+        WindowSpec::None
+    }
+}
+
+/// Push or pull triggering (§II-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TriggerMode {
+    /// Framework invokes `compute()` once per available message.
+    Push,
+    /// Pellet iterates over an input stream; may consume zero or more
+    /// messages per emit and retain local state.
+    Pull,
+}
+
+impl Default for TriggerMode {
+    fn default() -> Self {
+        TriggerMode::Push
+    }
+}
+
+/// An input port declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InPortSpec {
+    pub name: String,
+    pub window: WindowSpec,
+}
+
+/// An output port declaration with its split annotation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutPortSpec {
+    pub name: String,
+    pub split: SplitMode,
+}
+
+/// A pellet (vertex) specification.
+#[derive(Debug, Clone)]
+pub struct PelletSpec {
+    /// Unique id within the graph.
+    pub id: String,
+    /// Qualified pellet class name resolved through the
+    /// [`PelletRegistry`](crate::pellet::PelletRegistry).
+    pub class: String,
+    pub inputs: Vec<InPortSpec>,
+    pub outputs: Vec<OutPortSpec>,
+    /// Static core-count annotation (§III "statically annotated with the
+    /// number of CPU cores"); None = 1 core until adaptation changes it.
+    pub cores: Option<usize>,
+    /// Stateful pellets keep their state object across updates.
+    pub stateful: bool,
+    /// Force sequential execution (no data-parallel instances) to preserve
+    /// message order (§II-A).
+    pub sequential: bool,
+    pub merge: MergeMode,
+    pub trigger: TriggerMode,
+    /// Per-message processing latency hint, seconds (static look-ahead).
+    pub latency_hint: Option<f64>,
+    /// Output/input selectivity ratio hint (static look-ahead).
+    pub selectivity_hint: Option<f64>,
+}
+
+impl PelletSpec {
+    pub fn new(id: impl Into<String>, class: impl Into<String>) -> Self {
+        PelletSpec {
+            id: id.into(),
+            class: class.into(),
+            inputs: vec![],
+            outputs: vec![],
+            cores: None,
+            stateful: false,
+            sequential: false,
+            merge: MergeMode::default(),
+            trigger: TriggerMode::default(),
+            latency_hint: None,
+            selectivity_hint: None,
+        }
+    }
+
+    pub fn in_port(&self, name: &str) -> Option<&InPortSpec> {
+        self.inputs.iter().find(|p| p.name == name)
+    }
+
+    pub fn out_port(&self, name: &str) -> Option<&OutPortSpec> {
+        self.outputs.iter().find(|p| p.name == name)
+    }
+}
+
+/// A directed edge between an output port and an input port.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeSpec {
+    pub from_pellet: String,
+    pub from_port: String,
+    pub to_pellet: String,
+    pub to_port: String,
+}
+
+impl EdgeSpec {
+    pub fn new(
+        from_pellet: impl Into<String>,
+        from_port: impl Into<String>,
+        to_pellet: impl Into<String>,
+        to_port: impl Into<String>,
+    ) -> Self {
+        EdgeSpec {
+            from_pellet: from_pellet.into(),
+            from_port: from_port.into(),
+            to_pellet: to_pellet.into(),
+            to_port: to_port.into(),
+        }
+    }
+}
+
+/// A complete continuous-dataflow application graph.
+#[derive(Debug, Clone)]
+pub struct DataflowGraph {
+    pub name: String,
+    pub pellets: Vec<PelletSpec>,
+    pub edges: Vec<EdgeSpec>,
+}
+
+impl DataflowGraph {
+    pub fn pellet(&self, id: &str) -> Option<&PelletSpec> {
+        self.pellets.iter().find(|p| p.id == id)
+    }
+
+    pub fn pellet_mut(&mut self, id: &str) -> Option<&mut PelletSpec> {
+        self.pellets.iter_mut().find(|p| p.id == id)
+    }
+
+    /// Edges leaving a given output port.
+    pub fn edges_from<'a>(
+        &'a self,
+        pellet: &'a str,
+        port: &'a str,
+    ) -> impl Iterator<Item = &'a EdgeSpec> + 'a {
+        self.edges.iter().filter(move |e| {
+            e.from_pellet == pellet && e.from_port == port
+        })
+    }
+
+    /// Edges entering a given pellet.
+    pub fn edges_into<'a>(
+        &'a self,
+        pellet: &'a str,
+    ) -> impl Iterator<Item = &'a EdgeSpec> + 'a {
+        self.edges.iter().filter(move |e| e.to_pellet == pellet)
+    }
+
+    /// Pellets with no incoming edges (stream sources).
+    pub fn sources(&self) -> Vec<&PelletSpec> {
+        self.pellets
+            .iter()
+            .filter(|p| self.edges_into(&p.id).next().is_none())
+            .collect()
+    }
+
+    /// Validate structural invariants: unique ids, edges reference existing
+    /// pellets and ports, sync-merge pellets have all ports wired.
+    pub fn validate(&self) -> Result<()> {
+        let mut ids = HashSet::new();
+        for p in &self.pellets {
+            if !ids.insert(p.id.as_str()) {
+                return Err(FloeError::Graph(format!(
+                    "duplicate pellet id '{}'",
+                    p.id
+                )));
+            }
+            // Port names must be unique per direction (an input and an
+            // output may share a name, e.g. BSP's "peers" loopback).
+            let mut in_names = HashSet::new();
+            for port in p.inputs.iter().map(|i| &i.name) {
+                if !in_names.insert(port.as_str()) {
+                    return Err(FloeError::Graph(format!(
+                        "pellet '{}' reuses input port name '{port}'",
+                        p.id
+                    )));
+                }
+            }
+            let mut out_names = HashSet::new();
+            for port in p.outputs.iter().map(|o| &o.name) {
+                if !out_names.insert(port.as_str()) {
+                    return Err(FloeError::Graph(format!(
+                        "pellet '{}' reuses output port name '{port}'",
+                        p.id
+                    )));
+                }
+            }
+        }
+        if self.pellets.is_empty() {
+            return Err(FloeError::Graph("graph has no pellets".into()));
+        }
+        for e in &self.edges {
+            let from = self.pellet(&e.from_pellet).ok_or_else(|| {
+                FloeError::Graph(format!(
+                    "edge from unknown pellet '{}'",
+                    e.from_pellet
+                ))
+            })?;
+            if from.out_port(&e.from_port).is_none() {
+                return Err(FloeError::Graph(format!(
+                    "edge from unknown port '{}.{}'",
+                    e.from_pellet, e.from_port
+                )));
+            }
+            let to = self.pellet(&e.to_pellet).ok_or_else(|| {
+                FloeError::Graph(format!(
+                    "edge to unknown pellet '{}'",
+                    e.to_pellet
+                ))
+            })?;
+            if to.in_port(&e.to_port).is_none() {
+                return Err(FloeError::Graph(format!(
+                    "edge to unknown port '{}.{}'",
+                    e.to_pellet, e.to_port
+                )));
+            }
+        }
+        for p in &self.pellets {
+            if p.merge == MergeMode::Synchronous {
+                for ip in &p.inputs {
+                    let wired = self.edges.iter().any(|e| {
+                        e.to_pellet == p.id && e.to_port == ip.name
+                    });
+                    if !wired {
+                        return Err(FloeError::Graph(format!(
+                            "sync-merge pellet '{}' port '{}' is unwired",
+                            p.id, ip.name
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Back edges (loops, Fig. 1 P4/P10) found by DFS — ignored when
+    /// computing the wiring order.
+    pub fn back_edges(&self) -> HashSet<usize> {
+        #[derive(Clone, Copy, PartialEq)]
+        enum State {
+            New,
+            Active,
+            Done,
+        }
+        let idx: HashMap<&str, usize> = self
+            .pellets
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.id.as_str(), i))
+            .collect();
+        let mut out_edges: Vec<Vec<usize>> =
+            vec![Vec::new(); self.pellets.len()];
+        for (ei, e) in self.edges.iter().enumerate() {
+            if let Some(&fi) = idx.get(e.from_pellet.as_str()) {
+                out_edges[fi].push(ei);
+            }
+        }
+        let mut state = vec![State::New; self.pellets.len()];
+        let mut back = HashSet::new();
+        // Iterative DFS with an explicit stack of (node, next edge index).
+        for start in 0..self.pellets.len() {
+            if state[start] != State::New {
+                continue;
+            }
+            let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+            state[start] = State::Active;
+            while let Some(&mut (node, ref mut next)) = stack.last_mut() {
+                if *next < out_edges[node].len() {
+                    let ei = out_edges[node][*next];
+                    *next += 1;
+                    let to =
+                        idx[self.edges[ei].to_pellet.as_str()];
+                    match state[to] {
+                        State::Active => {
+                            back.insert(ei);
+                        }
+                        State::New => {
+                            state[to] = State::Active;
+                            stack.push((to, 0));
+                        }
+                        State::Done => {}
+                    }
+                } else {
+                    state[node] = State::Done;
+                    stack.pop();
+                }
+            }
+        }
+        back
+    }
+
+    /// Bottom-up wiring order (§III): downstream pellets first, so upstream
+    /// pellets never emit into unwired sinks.  Loops are ignored via
+    /// [`Self::back_edges`].  This is a reverse topological order.
+    pub fn wiring_order(&self) -> Result<Vec<String>> {
+        let back = self.back_edges();
+        let idx: HashMap<&str, usize> = self
+            .pellets
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.id.as_str(), i))
+            .collect();
+        // out_degree over forward edges; wire nodes whose successors are all
+        // wired (Kahn's algorithm on the reversed DAG = bottom-up BFS).
+        let mut out_deg = vec![0usize; self.pellets.len()];
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); self.pellets.len()];
+        for (ei, e) in self.edges.iter().enumerate() {
+            if back.contains(&ei) {
+                continue;
+            }
+            let f = idx[e.from_pellet.as_str()];
+            let t = idx[e.to_pellet.as_str()];
+            if f == t {
+                continue; // self loop
+            }
+            out_deg[f] += 1;
+            preds[t].push(f);
+        }
+        let mut queue: VecDeque<usize> = (0..self.pellets.len())
+            .filter(|&i| out_deg[i] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(self.pellets.len());
+        while let Some(n) = queue.pop_front() {
+            order.push(self.pellets[n].id.clone());
+            for &p in &preds[n] {
+                out_deg[p] -= 1;
+                if out_deg[p] == 0 {
+                    queue.push_back(p);
+                }
+            }
+        }
+        if order.len() != self.pellets.len() {
+            return Err(FloeError::Graph(
+                "cycle remains after removing back edges".into(),
+            ));
+        }
+        Ok(order)
+    }
+
+    /// Per-pellet fan-out targets: `(pellet, out port) -> [(sink pellet,
+    /// sink port)]` in edge declaration order (stable round-robin).
+    pub fn fanout(&self) -> BTreeMap<(String, String), Vec<(String, String)>> {
+        let mut map: BTreeMap<(String, String), Vec<(String, String)>> =
+            BTreeMap::new();
+        for p in &self.pellets {
+            for o in &p.outputs {
+                map.entry((p.id.clone(), o.name.clone())).or_default();
+            }
+        }
+        for e in &self.edges {
+            map.entry((e.from_pellet.clone(), e.from_port.clone()))
+                .or_default()
+                .push((e.to_pellet.clone(), e.to_port.clone()));
+        }
+        map
+    }
+
+    /// The longest source→sink path by hop count over forward edges — a
+    /// proxy for the paper's "critical path" when hints are absent.
+    pub fn critical_path(&self) -> Vec<String> {
+        let order = match self.wiring_order() {
+            Ok(o) => o,
+            Err(_) => return vec![],
+        };
+        let back = self.back_edges();
+        // order is reverse-topological: process in that order, longest path
+        // to a sink.
+        let idx: HashMap<&str, usize> = self
+            .pellets
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.id.as_str(), i))
+            .collect();
+        let mut best_len = vec![1usize; self.pellets.len()];
+        let mut best_next: Vec<Option<usize>> =
+            vec![None; self.pellets.len()];
+        for id in &order {
+            let i = idx[id.as_str()];
+            for (ei, e) in self.edges.iter().enumerate() {
+                if back.contains(&ei) || e.from_pellet != *id {
+                    continue;
+                }
+                let t = idx[e.to_pellet.as_str()];
+                if best_len[t] + 1 > best_len[i] {
+                    best_len[i] = best_len[t] + 1;
+                    best_next[i] = Some(t);
+                }
+            }
+        }
+        let mut cur = match (0..self.pellets.len())
+            .max_by_key(|&i| best_len[i])
+        {
+            Some(i) => i,
+            None => return vec![],
+        };
+        let mut path = vec![self.pellets[cur].id.clone()];
+        while let Some(n) = best_next[cur] {
+            path.push(self.pellets[n].id.clone());
+            cur = n;
+        }
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn linear3() -> DataflowGraph {
+        let mut g = GraphBuilder::new("lin");
+        g.pellet("a", "C").out_port("out", SplitMode::RoundRobin);
+        g.pellet("b", "C").in_port("in").out_port("out", SplitMode::RoundRobin);
+        g.pellet("c", "C").in_port("in");
+        g.edge("a", "out", "b", "in");
+        g.edge("b", "out", "c", "in");
+        g.build().unwrap()
+    }
+
+    #[test]
+    fn validate_accepts_linear() {
+        linear3().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_duplicates_and_dangling() {
+        let mut g = GraphBuilder::new("bad");
+        g.pellet("a", "C").out_port("out", SplitMode::RoundRobin);
+        g.pellet("a", "C");
+        assert!(g.build().is_err());
+
+        let mut g = GraphBuilder::new("bad2");
+        g.pellet("a", "C").out_port("out", SplitMode::RoundRobin);
+        g.edge("a", "out", "ghost", "in");
+        assert!(g.build().is_err());
+
+        let mut g = GraphBuilder::new("bad3");
+        g.pellet("a", "C").out_port("out", SplitMode::RoundRobin);
+        g.pellet("b", "C").in_port("in");
+        g.edge("a", "wrong", "b", "in");
+        assert!(g.build().is_err());
+    }
+
+    #[test]
+    fn wiring_order_is_bottom_up() {
+        let g = linear3();
+        let order = g.wiring_order().unwrap();
+        let pos = |id: &str| order.iter().position(|x| x == id).unwrap();
+        assert!(pos("c") < pos("b"));
+        assert!(pos("b") < pos("a"));
+    }
+
+    #[test]
+    fn cycles_are_ignored_for_wiring() {
+        // a -> b -> c -> b (feedback loop, Fig. 1 P4)
+        let mut g = GraphBuilder::new("loop");
+        g.pellet("a", "C").out_port("out", SplitMode::RoundRobin);
+        g.pellet("b", "C")
+            .in_port("in")
+            .in_port("fb")
+            .out_port("out", SplitMode::RoundRobin);
+        g.pellet("c", "C").in_port("in").out_port("back", SplitMode::RoundRobin);
+        g.edge("a", "out", "b", "in");
+        g.edge("b", "out", "c", "in");
+        g.edge("c", "back", "b", "fb");
+        let g = g.build().unwrap();
+        assert_eq!(g.back_edges().len(), 1);
+        let order = g.wiring_order().unwrap();
+        assert_eq!(order.len(), 3);
+        let pos = |id: &str| order.iter().position(|x| x == id).unwrap();
+        assert!(pos("c") < pos("b"), "{order:?}");
+    }
+
+    #[test]
+    fn sources_and_fanout() {
+        let g = linear3();
+        let s = g.sources();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].id, "a");
+        let f = g.fanout();
+        assert_eq!(
+            f[&("a".to_string(), "out".to_string())],
+            vec![("b".to_string(), "in".to_string())]
+        );
+    }
+
+    #[test]
+    fn critical_path_linear() {
+        let g = linear3();
+        assert_eq!(g.critical_path(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn sync_merge_requires_all_ports_wired() {
+        let mut g = GraphBuilder::new("sync");
+        g.pellet("a", "C").out_port("out", SplitMode::RoundRobin);
+        g.pellet("m", "C")
+            .in_port("x")
+            .in_port("y")
+            .merge(MergeMode::Synchronous);
+        g.edge("a", "out", "m", "x");
+        assert!(g.build().is_err()); // port y unwired
+    }
+}

@@ -1,0 +1,218 @@
+//! Advanced dataflow pattern compositions (§II-A): streaming MapReduce+ via
+//! key-hash dynamic port mapping (Fig. 1, P9) and BSP with a superstep
+//! manager pellet (Fig. 1, P10) — both built purely from the basic
+//! patterns, as the paper describes.
+
+use super::{GraphBuilder, MergeMode, SplitMode};
+
+/// Names generated for a MapReduce stage.
+#[derive(Debug, Clone)]
+pub struct MapReduceIds {
+    pub mappers: Vec<String>,
+    pub reducers: Vec<String>,
+}
+
+/// Compose a streaming MapReduce bipartite stage into `g`.
+///
+/// `m` mapper pellets of class `map_class` each get an input port `in` and a
+/// `KeyHash`-split output port wired to every one of the `r` reducer pellets
+/// of class `reduce_class` (input port `in`, interleaved merge).  The key
+/// hash guarantees messages with equal keys from *any* mapper reach the same
+/// reducer — the shuffle.  Reducers also get an `out` port (RoundRobin) so
+/// stages can be chained into MapReduce+ / iterative MapReduce.
+pub fn map_reduce(
+    g: &mut GraphBuilder,
+    prefix: &str,
+    map_class: &str,
+    reduce_class: &str,
+    m: usize,
+    r: usize,
+) -> MapReduceIds {
+    let mut ids = MapReduceIds { mappers: vec![], reducers: vec![] };
+    for i in 0..m {
+        let id = format!("{prefix}-map-{i}");
+        g.pellet(&id, map_class)
+            .in_port("in")
+            .out_port("out", SplitMode::KeyHash);
+        ids.mappers.push(id);
+    }
+    for j in 0..r {
+        let id = format!("{prefix}-red-{j}");
+        g.pellet(&id, reduce_class)
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin)
+            .stateful();
+        ids.reducers.push(id);
+    }
+    for mid in &ids.mappers {
+        for rid in &ids.reducers {
+            g.edge(mid, "out", rid, "in");
+        }
+    }
+    ids
+}
+
+/// Names generated for a BSP stage.
+#[derive(Debug, Clone)]
+pub struct BspIds {
+    pub workers: Vec<String>,
+    pub manager: String,
+}
+
+/// Compose a Bulk Synchronous Parallel stage into `g`.
+///
+/// `s` worker pellets of class `worker_class` are fully connected:
+/// each worker's `peers` output port (KeyHash — vertex-id routing, as in
+/// Pregel) is wired to every worker's `peers` input port.  A manager pellet
+/// of class `manager_class` gates supersteps: workers report superstep
+/// completion on their `done` port to the manager; the manager broadcasts a
+/// "tick" control message (Duplicate split) to every worker's `tick` port
+/// when all reports arrive.  Data messages are thus gated by control
+/// messages, exactly as §II-A describes.
+pub fn bsp(
+    g: &mut GraphBuilder,
+    prefix: &str,
+    worker_class: &str,
+    manager_class: &str,
+    s: usize,
+) -> BspIds {
+    let manager = format!("{prefix}-bsp-mgr");
+    let mut workers = Vec::new();
+    for i in 0..s {
+        let id = format!("{prefix}-bsp-w{i}");
+        g.pellet(&id, worker_class)
+            .in_port("peers")
+            .in_port("tick")
+            .out_port("peers", SplitMode::KeyHash)
+            .out_port("done", SplitMode::RoundRobin)
+            .stateful();
+        workers.push(id);
+    }
+    g.pellet(&manager, manager_class)
+        .in_port("done")
+        .out_port("tick", SplitMode::Duplicate)
+        .stateful()
+        .sequential();
+    for w in &workers {
+        for w2 in &workers {
+            g.edge(w, "peers", w2, "peers");
+        }
+        g.edge(w, "done", &manager, "done");
+        g.edge(&manager, "tick", w, "tick");
+    }
+    BspIds { workers, manager }
+}
+
+/// Compose a linear pipeline of `classes` with RoundRobin links; returns
+/// pellet ids.  Convenience for tests and examples.
+pub fn pipeline(
+    g: &mut GraphBuilder,
+    prefix: &str,
+    classes: &[&str],
+) -> Vec<String> {
+    let mut ids = Vec::new();
+    for (i, class) in classes.iter().enumerate() {
+        let id = format!("{prefix}-{i}");
+        let b = g.pellet(&id, class);
+        let b = if i > 0 { b.in_port("in") } else { b };
+        if i + 1 < classes.len() {
+            b.out_port("out", SplitMode::RoundRobin);
+        }
+        ids.push(id);
+    }
+    for w in ids.windows(2) {
+        g.edge(&w[0], "out", &w[1], "in");
+    }
+    ids
+}
+
+/// Synchronous-merge join helper: creates a pellet with one input port per
+/// upstream `(pellet, port)` pair, wired with MergeMode::Synchronous so the
+/// pellet receives aligned tuples (Fig. 1, P5).
+pub fn sync_join(
+    g: &mut GraphBuilder,
+    id: &str,
+    class: &str,
+    upstreams: &[(&str, &str)],
+) {
+    {
+        let mut b = g.pellet(id, class).merge(MergeMode::Synchronous);
+        for (i, _) in upstreams.iter().enumerate() {
+            b = b.in_port(&format!("in{i}"));
+        }
+        b.out_port("out", SplitMode::RoundRobin);
+    }
+    for (i, (up, port)) in upstreams.iter().enumerate() {
+        g.edge(up, port, id, &format!("in{i}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::SplitMode;
+
+    #[test]
+    fn map_reduce_is_bipartite_keyhash() {
+        let mut g = GraphBuilder::new("mr");
+        g.pellet("src", "S").out_port("out", SplitMode::RoundRobin);
+        let ids = map_reduce(&mut g, "wc", "app.Map", "app.Reduce", 3, 2);
+        for m in &ids.mappers {
+            g.edge("src", "out", m, "in");
+        }
+        let graph = g.build().unwrap();
+        // every mapper connects to every reducer
+        for m in &ids.mappers {
+            let outs: Vec<_> = graph.edges_from(m, "out").collect();
+            assert_eq!(outs.len(), 2);
+            assert_eq!(
+                graph.pellet(m).unwrap().out_port("out").unwrap().split,
+                SplitMode::KeyHash
+            );
+        }
+        for r in &ids.reducers {
+            assert_eq!(graph.edges_into(r).count(), 3);
+            assert!(graph.pellet(r).unwrap().stateful);
+        }
+    }
+
+    #[test]
+    fn bsp_full_mesh_with_manager() {
+        let mut g = GraphBuilder::new("bsp");
+        let ids = bsp(&mut g, "pr", "app.Worker", "app.Mgr", 3);
+        let graph = g.build().unwrap();
+        for w in &ids.workers {
+            // peers port reaches all 3 workers (incl. self)
+            assert_eq!(graph.edges_from(w, "peers").count(), 3);
+            assert_eq!(graph.edges_from(w, "done").count(), 1);
+        }
+        // manager broadcast is duplicate split to all workers
+        let mgr = graph.pellet(&ids.manager).unwrap();
+        assert_eq!(mgr.out_port("tick").unwrap().split, SplitMode::Duplicate);
+        assert_eq!(graph.edges_from(&ids.manager, "tick").count(), 3);
+        // loops exist (worker->mgr->worker) but wiring order still works
+        assert!(graph.wiring_order().is_ok());
+    }
+
+    #[test]
+    fn pipeline_chains() {
+        let mut g = GraphBuilder::new("p");
+        let ids = pipeline(&mut g, "st", &["A", "B", "C"]);
+        let graph = g.build().unwrap();
+        assert_eq!(ids.len(), 3);
+        assert_eq!(graph.edges.len(), 2);
+        assert_eq!(graph.critical_path().len(), 3);
+    }
+
+    #[test]
+    fn sync_join_wires_all_ports() {
+        let mut g = GraphBuilder::new("j");
+        g.pellet("a", "A").out_port("out", SplitMode::RoundRobin);
+        g.pellet("b", "B").out_port("out", SplitMode::RoundRobin);
+        sync_join(&mut g, "join", "app.Join", &[("a", "out"), ("b", "out")]);
+        let graph = g.build().unwrap();
+        let j = graph.pellet("join").unwrap();
+        assert_eq!(j.inputs.len(), 2);
+        assert_eq!(graph.edges_into("join").count(), 2);
+    }
+}

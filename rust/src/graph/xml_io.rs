@@ -1,0 +1,329 @@
+//! XML description of Floe graphs (§III) — loader and writer.
+//!
+//! ```xml
+//! <floe name="pipeline">
+//!   <pellet id="src" class="app.MeterSource" cores="2">
+//!     <out port="out" split="roundrobin"/>
+//!   </pellet>
+//!   <pellet id="parse" class="app.Parse" stateful="true" merge="sync"
+//!           trigger="pull" latency="0.05" selectivity="1.0">
+//!     <in port="in" window="count:10"/>
+//!     <out port="ok" split="keyhash"/>
+//!     <out port="err" split="duplicate"/>
+//!   </pellet>
+//!   <edge from="src.out" to="parse.in"/>
+//! </floe>
+//! ```
+
+use super::{
+    DataflowGraph, EdgeSpec, InPortSpec, MergeMode, OutPortSpec, PelletSpec,
+    SplitMode, TriggerMode, WindowSpec,
+};
+use crate::error::{FloeError, Result};
+use crate::util::xml::XmlNode;
+
+impl DataflowGraph {
+    /// Parse a graph from its XML description.
+    pub fn from_xml(text: &str) -> Result<DataflowGraph> {
+        let root = XmlNode::parse(text)?;
+        if root.name != "floe" {
+            return Err(FloeError::Parse(format!(
+                "graph xml: expected <floe> root, got <{}>",
+                root.name
+            )));
+        }
+        let name = root.attr("name").unwrap_or("unnamed").to_string();
+        let mut pellets = Vec::new();
+        let mut edges = Vec::new();
+        for child in &root.children {
+            match child.name.as_str() {
+                "pellet" => pellets.push(parse_pellet(child)?),
+                "edge" => edges.push(parse_edge(child)?),
+                other => {
+                    return Err(FloeError::Parse(format!(
+                        "graph xml: unexpected element <{other}>"
+                    )))
+                }
+            }
+        }
+        let g = DataflowGraph { name, pellets, edges };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Serialize to the XML description (round-trips through
+    /// [`DataflowGraph::from_xml`]).
+    pub fn to_xml(&self) -> String {
+        let mut root = XmlNode {
+            name: "floe".into(),
+            attrs: vec![("name".into(), self.name.clone())],
+            children: vec![],
+            text: String::new(),
+        };
+        for p in &self.pellets {
+            let mut attrs = vec![
+                ("id".to_string(), p.id.clone()),
+                ("class".to_string(), p.class.clone()),
+            ];
+            if let Some(c) = p.cores {
+                attrs.push(("cores".into(), c.to_string()));
+            }
+            if p.stateful {
+                attrs.push(("stateful".into(), "true".into()));
+            }
+            if p.sequential {
+                attrs.push(("sequential".into(), "true".into()));
+            }
+            if p.merge == MergeMode::Synchronous {
+                attrs.push(("merge".into(), "sync".into()));
+            }
+            if p.trigger == TriggerMode::Pull {
+                attrs.push(("trigger".into(), "pull".into()));
+            }
+            if let Some(l) = p.latency_hint {
+                attrs.push(("latency".into(), l.to_string()));
+            }
+            if let Some(s) = p.selectivity_hint {
+                attrs.push(("selectivity".into(), s.to_string()));
+            }
+            let mut node = XmlNode {
+                name: "pellet".into(),
+                attrs,
+                children: vec![],
+                text: String::new(),
+            };
+            for i in &p.inputs {
+                let mut a = vec![("port".to_string(), i.name.clone())];
+                match i.window {
+                    WindowSpec::None => {}
+                    WindowSpec::Count(n) => {
+                        a.push(("window".into(), format!("count:{n}")))
+                    }
+                    WindowSpec::Time(t) => {
+                        a.push(("window".into(), format!("time:{t}")))
+                    }
+                }
+                node.children.push(XmlNode {
+                    name: "in".into(),
+                    attrs: a,
+                    children: vec![],
+                    text: String::new(),
+                });
+            }
+            for o in &p.outputs {
+                let split = match o.split {
+                    SplitMode::Duplicate => "duplicate",
+                    SplitMode::RoundRobin => "roundrobin",
+                    SplitMode::KeyHash => "keyhash",
+                };
+                node.children.push(XmlNode {
+                    name: "out".into(),
+                    attrs: vec![
+                        ("port".into(), o.name.clone()),
+                        ("split".into(), split.into()),
+                    ],
+                    children: vec![],
+                    text: String::new(),
+                });
+            }
+            root.children.push(node);
+        }
+        for e in &self.edges {
+            root.children.push(XmlNode {
+                name: "edge".into(),
+                attrs: vec![
+                    (
+                        "from".into(),
+                        format!("{}.{}", e.from_pellet, e.from_port),
+                    ),
+                    ("to".into(), format!("{}.{}", e.to_pellet, e.to_port)),
+                ],
+                children: vec![],
+                text: String::new(),
+            });
+        }
+        root.to_xml()
+    }
+}
+
+fn parse_pellet(node: &XmlNode) -> Result<PelletSpec> {
+    let mut spec = PelletSpec::new(
+        node.req_attr("id")?.to_string(),
+        node.req_attr("class")?.to_string(),
+    );
+    if let Some(c) = node.attr("cores") {
+        spec.cores = Some(c.parse().map_err(|_| {
+            FloeError::Parse(format!("graph xml: bad cores '{c}'"))
+        })?);
+    }
+    spec.stateful = node.attr("stateful") == Some("true");
+    spec.sequential = node.attr("sequential") == Some("true");
+    spec.merge = match node.attr("merge") {
+        Some("sync") | Some("synchronous") => MergeMode::Synchronous,
+        Some("interleaved") | None => MergeMode::Interleaved,
+        Some(other) => {
+            return Err(FloeError::Parse(format!(
+                "graph xml: unknown merge '{other}'"
+            )))
+        }
+    };
+    spec.trigger = match node.attr("trigger") {
+        Some("pull") => TriggerMode::Pull,
+        Some("push") | None => TriggerMode::Push,
+        Some(other) => {
+            return Err(FloeError::Parse(format!(
+                "graph xml: unknown trigger '{other}'"
+            )))
+        }
+    };
+    if let Some(l) = node.attr("latency") {
+        spec.latency_hint = Some(l.parse().map_err(|_| {
+            FloeError::Parse(format!("graph xml: bad latency '{l}'"))
+        })?);
+    }
+    if let Some(s) = node.attr("selectivity") {
+        spec.selectivity_hint = Some(s.parse().map_err(|_| {
+            FloeError::Parse(format!("graph xml: bad selectivity '{s}'"))
+        })?);
+    }
+    for child in &node.children {
+        match child.name.as_str() {
+            "in" => {
+                let window = match child.attr("window") {
+                    None => WindowSpec::None,
+                    Some(w) => parse_window(w)?,
+                };
+                spec.inputs.push(InPortSpec {
+                    name: child.req_attr("port")?.to_string(),
+                    window,
+                });
+            }
+            "out" => {
+                let split = match child.attr("split") {
+                    Some("duplicate") => SplitMode::Duplicate,
+                    Some("keyhash") => SplitMode::KeyHash,
+                    Some("roundrobin") | None => SplitMode::RoundRobin,
+                    Some(other) => {
+                        return Err(FloeError::Parse(format!(
+                            "graph xml: unknown split '{other}'"
+                        )))
+                    }
+                };
+                spec.outputs.push(OutPortSpec {
+                    name: child.req_attr("port")?.to_string(),
+                    split,
+                });
+            }
+            other => {
+                return Err(FloeError::Parse(format!(
+                    "graph xml: unexpected <{other}> in pellet"
+                )))
+            }
+        }
+    }
+    Ok(spec)
+}
+
+fn parse_window(w: &str) -> Result<WindowSpec> {
+    let (kind, val) = w.split_once(':').ok_or_else(|| {
+        FloeError::Parse(format!("graph xml: bad window '{w}'"))
+    })?;
+    match kind {
+        "count" => Ok(WindowSpec::Count(val.parse().map_err(|_| {
+            FloeError::Parse(format!("graph xml: bad window '{w}'"))
+        })?)),
+        "time" => Ok(WindowSpec::Time(val.parse().map_err(|_| {
+            FloeError::Parse(format!("graph xml: bad window '{w}'"))
+        })?)),
+        _ => Err(FloeError::Parse(format!(
+            "graph xml: unknown window kind '{kind}'"
+        ))),
+    }
+}
+
+fn parse_edge(node: &XmlNode) -> Result<EdgeSpec> {
+    let from = node.req_attr("from")?;
+    let to = node.req_attr("to")?;
+    let (fp, fport) = from.split_once('.').ok_or_else(|| {
+        FloeError::Parse(format!("graph xml: bad edge from '{from}'"))
+    })?;
+    let (tp, tport) = to.split_once('.').ok_or_else(|| {
+        FloeError::Parse(format!("graph xml: bad edge to '{to}'"))
+    })?;
+    Ok(EdgeSpec::new(fp, fport, tp, tport))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+        <floe name="pipeline">
+          <pellet id="src" class="app.MeterSource" cores="2">
+            <out port="out" split="roundrobin"/>
+          </pellet>
+          <pellet id="parse" class="app.Parse" stateful="true" merge="sync"
+                  trigger="pull" latency="0.05" selectivity="1.5">
+            <in port="in" window="count:10"/>
+            <in port="aux" window="time:2.5"/>
+            <out port="ok" split="keyhash"/>
+            <out port="err" split="duplicate"/>
+          </pellet>
+          <pellet id="sink" class="app.Sink">
+            <in port="in"/>
+          </pellet>
+          <edge from="src.out" to="parse.in"/>
+          <edge from="src.out" to="parse.aux"/>
+          <edge from="parse.ok" to="sink.in"/>
+        </floe>"#;
+
+    #[test]
+    fn parses_full_document() {
+        let g = DataflowGraph::from_xml(DOC).unwrap();
+        assert_eq!(g.name, "pipeline");
+        assert_eq!(g.pellets.len(), 3);
+        assert_eq!(g.edges.len(), 3);
+        let p = g.pellet("parse").unwrap();
+        assert!(p.stateful);
+        assert_eq!(p.merge, MergeMode::Synchronous);
+        assert_eq!(p.trigger, TriggerMode::Pull);
+        assert_eq!(p.latency_hint, Some(0.05));
+        assert_eq!(p.selectivity_hint, Some(1.5));
+        assert_eq!(p.in_port("in").unwrap().window, WindowSpec::Count(10));
+        assert_eq!(p.in_port("aux").unwrap().window, WindowSpec::Time(2.5));
+        assert_eq!(p.out_port("ok").unwrap().split, SplitMode::KeyHash);
+        assert_eq!(p.out_port("err").unwrap().split, SplitMode::Duplicate);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let g = DataflowGraph::from_xml(DOC).unwrap();
+        let xml = g.to_xml();
+        let g2 = DataflowGraph::from_xml(&xml).unwrap();
+        assert_eq!(g.name, g2.name);
+        assert_eq!(g.pellets.len(), g2.pellets.len());
+        assert_eq!(g.edges, g2.edges);
+        let p = g2.pellet("parse").unwrap();
+        assert_eq!(p.in_port("in").unwrap().window, WindowSpec::Count(10));
+        assert_eq!(p.out_port("ok").unwrap().split, SplitMode::KeyHash);
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(DataflowGraph::from_xml("<nope/>").is_err());
+        assert!(DataflowGraph::from_xml(
+            r#"<floe name="g"><pellet id="p"/></floe>"#
+        )
+        .is_err()); // missing class
+        assert!(DataflowGraph::from_xml(
+            r#"<floe name="g"><pellet id="p" class="C">
+               <in port="i" window="bogus"/></pellet></floe>"#
+        )
+        .is_err());
+        assert!(DataflowGraph::from_xml(
+            r#"<floe name="g"><pellet id="p" class="C"/>
+               <edge from="p" to="p.in"/></floe>"#
+        )
+        .is_err()); // edge missing port
+    }
+}

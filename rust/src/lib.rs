@@ -1,0 +1,56 @@
+//! # Floe-RS — a continuous dataflow framework for dynamic cloud applications
+//!
+//! Rust reproduction of *"Floe: A Continuous Dataflow Framework for Dynamic
+//! Cloud Applications"* (Simmhan & Kumbhare, 2014), with the stream-clustering
+//! numeric hot-spot AOT-compiled from JAX/Pallas and executed through PJRT.
+//!
+//! Applications are directed (possibly cyclic) graphs of **pellets** — user
+//! tasks implementing push or pull [`pellet::Pellet`] interfaces — connected
+//! by data channels.  The runtime maps each pellet onto a [`flake::Flake`]
+//! (per-pellet executor with data-parallel instances), flakes onto
+//! [`container::Container`]s (VM-granularity core accounting), and adapts the
+//! per-flake core allocation at runtime with the strategies in
+//! [`adaptation`] (static look-ahead / dynamic / hybrid).  The
+//! [`coordinator::Coordinator`] parses graphs, places flakes via the
+//! [`manager`] resource manager, wires them bottom-up, and orchestrates
+//! in-place dynamic task and dataflow updates without stopping the stream.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
+//! reproduced evaluation.
+
+pub mod adaptation;
+pub mod apps;
+pub mod channel;
+pub mod container;
+pub mod coordinator;
+pub mod error;
+pub mod flake;
+pub mod graph;
+pub mod manager;
+pub mod message;
+pub mod pellet;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{FloeError, Result};
+
+/// Instances-per-core ratio α from the paper (§III): each core granted to a
+/// flake runs up to α data-parallel pellet instances.
+pub const ALPHA: usize = 4;
+
+/// One-stop imports for applications and examples.
+pub mod prelude {
+    pub use crate::adaptation::{
+        AdaptationStrategy, DynamicStrategy, HybridStrategy, StaticLookAhead,
+    };
+    pub use crate::coordinator::Coordinator;
+    pub use crate::error::{FloeError, Result};
+    pub use crate::graph::{DataflowGraph, GraphBuilder, SplitMode};
+    pub use crate::manager::{ResourceManager, SimulatedCloud};
+    pub use crate::message::Message;
+    pub use crate::pellet::{
+        Pellet, PelletContext, PelletFactory, PelletRegistry, PortIo,
+    };
+    pub use crate::ALPHA;
+}

@@ -1,0 +1,325 @@
+//! Resource manager (§III): acquires and releases VMs from a cloud
+//! provider on demand and hands containers to the coordinator using a
+//! best-fit packing policy.
+//!
+//! The paper ran on a Eucalyptus private cloud; offline we substitute
+//! [`SimulatedCloud`] — same acquire/release surface, configurable node
+//! inventory (default: the paper's Tsangpo cloud, 16 nodes × 8 cores) and
+//! provisioning delay, so every coordinator/adaptation decision path is
+//! exercised identically (see DESIGN.md §Environment-substitutions).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::container::Container;
+use crate::error::{FloeError, Result};
+use crate::util::json::Json;
+
+/// VM classes mirroring the paper's Eucalyptus instance types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VmClass {
+    /// 2 cores, paper's small instance.
+    Small,
+    /// 4 cores.
+    Large,
+    /// 8 cores, 16 GB — the paper's Extra Large used for the pipeline.
+    ExtraLarge,
+}
+
+impl VmClass {
+    pub fn cores(&self) -> usize {
+        match self {
+            VmClass::Small => 2,
+            VmClass::Large => 4,
+            VmClass::ExtraLarge => 8,
+        }
+    }
+}
+
+/// A granted VM.
+#[derive(Debug, Clone)]
+pub struct VmHandle {
+    pub id: String,
+    pub class: VmClass,
+}
+
+/// Cloud fabric abstraction (Eucalyptus/AWS in the paper).
+pub trait CloudProvider: Send + Sync {
+    /// Acquire a VM of the class, blocking for the provisioning delay.
+    fn acquire_vm(&self, class: VmClass) -> Result<VmHandle>;
+
+    /// Release a VM back to the fabric.
+    fn release_vm(&self, id: &str) -> Result<()>;
+
+    /// VMs currently provisioned.
+    fn active_vms(&self) -> usize;
+
+    /// Total cores in the fabric.
+    fn capacity_cores(&self) -> usize;
+}
+
+/// Simulated private cloud: fixed node inventory, optional provisioning
+/// delay, acquisition failure when capacity is exhausted.
+pub struct SimulatedCloud {
+    total_cores: usize,
+    used_cores: Mutex<HashMap<String, usize>>,
+    provisioning_delay: Duration,
+    next_id: AtomicUsize,
+}
+
+impl SimulatedCloud {
+    /// The paper's testbed: 16 nodes × 8 cores = 128 cores.
+    pub fn tsangpo() -> Arc<SimulatedCloud> {
+        SimulatedCloud::new(16 * 8, Duration::from_millis(0))
+    }
+
+    pub fn new(
+        total_cores: usize,
+        provisioning_delay: Duration,
+    ) -> Arc<SimulatedCloud> {
+        Arc::new(SimulatedCloud {
+            total_cores,
+            used_cores: Mutex::new(HashMap::new()),
+            provisioning_delay,
+            next_id: AtomicUsize::new(0),
+        })
+    }
+}
+
+impl CloudProvider for SimulatedCloud {
+    fn acquire_vm(&self, class: VmClass) -> Result<VmHandle> {
+        let mut used = self.used_cores.lock().expect("cloud poisoned");
+        let in_use: usize = used.values().sum();
+        if in_use + class.cores() > self.total_cores {
+            return Err(FloeError::Resource(format!(
+                "cloud: capacity exhausted ({in_use}/{} cores in use)",
+                self.total_cores
+            )));
+        }
+        let id = format!("vm-{}", self.next_id.fetch_add(1, Ordering::SeqCst));
+        used.insert(id.clone(), class.cores());
+        drop(used);
+        if !self.provisioning_delay.is_zero() {
+            std::thread::sleep(self.provisioning_delay);
+        }
+        log::info!("cloud: provisioned {id} ({:?})", class);
+        Ok(VmHandle { id, class })
+    }
+
+    fn release_vm(&self, id: &str) -> Result<()> {
+        let mut used = self.used_cores.lock().expect("cloud poisoned");
+        used.remove(id).ok_or_else(|| {
+            FloeError::Resource(format!("cloud: unknown vm '{id}'"))
+        })?;
+        log::info!("cloud: released {id}");
+        Ok(())
+    }
+
+    fn active_vms(&self) -> usize {
+        self.used_cores.lock().expect("cloud poisoned").len()
+    }
+
+    fn capacity_cores(&self) -> usize {
+        self.total_cores
+    }
+}
+
+/// The manager: owns containers on acquired VMs and serves the
+/// coordinator's core requests with best-fit packing (§III: "request
+/// existing or newly instantiated containers from the manager using a
+/// best-fit algorithm").
+pub struct ResourceManager {
+    cloud: Arc<dyn CloudProvider>,
+    default_class: VmClass,
+    inner: Mutex<MgrInner>,
+}
+
+struct MgrInner {
+    /// (vm id, container) pairs.
+    containers: Vec<(String, Arc<Container>)>,
+}
+
+impl ResourceManager {
+    pub fn new(cloud: Arc<dyn CloudProvider>) -> Arc<ResourceManager> {
+        Arc::new(ResourceManager {
+            cloud,
+            default_class: VmClass::ExtraLarge,
+            inner: Mutex::new(MgrInner { containers: Vec::new() }),
+        })
+    }
+
+    /// Find the container whose free-core count is the *smallest* that
+    /// still fits `cores` (best fit).  Acquires a new VM when nothing
+    /// fits.
+    pub fn allocate(&self, cores: usize) -> Result<Arc<Container>> {
+        let mut inner = self.inner.lock().expect("manager poisoned");
+        let best = inner
+            .containers
+            .iter()
+            .filter(|(_, c)| c.free_cores() >= cores)
+            .min_by_key(|(_, c)| c.free_cores())
+            .map(|(_, c)| Arc::clone(c));
+        if let Some(c) = best {
+            return Ok(c);
+        }
+        // Need a new VM; pick a class large enough.
+        let class = if cores <= self.default_class.cores() {
+            self.default_class
+        } else {
+            return Err(FloeError::Resource(format!(
+                "manager: no VM class with {cores} cores"
+            )));
+        };
+        let vm = self.cloud.acquire_vm(class)?;
+        let container = Container::new(
+            format!("container-{}", vm.id),
+            class.cores(),
+        );
+        inner.containers.push((vm.id, Arc::clone(&container)));
+        Ok(container)
+    }
+
+    /// All live containers.
+    pub fn containers(&self) -> Vec<Arc<Container>> {
+        self.inner
+            .lock()
+            .expect("manager poisoned")
+            .containers
+            .iter()
+            .map(|(_, c)| Arc::clone(c))
+            .collect()
+    }
+
+    /// Release empty containers back to the cloud (scale-in).
+    pub fn release_idle(&self) -> Result<usize> {
+        let mut inner = self.inner.lock().expect("manager poisoned");
+        let mut released = 0;
+        let mut keep = Vec::new();
+        for (vm, c) in inner.containers.drain(..) {
+            if c.flake_count() == 0 {
+                self.cloud.release_vm(&vm)?;
+                released += 1;
+            } else {
+                keep.push((vm, c));
+            }
+        }
+        inner.containers = keep;
+        Ok(released)
+    }
+
+    /// Tear down every container and release every VM.
+    pub fn shutdown(&self) {
+        let mut inner = self.inner.lock().expect("manager poisoned");
+        for (vm, c) in inner.containers.drain(..) {
+            c.shutdown();
+            let _ = self.cloud.release_vm(&vm);
+        }
+    }
+
+    /// JSON status for the REST endpoint / CLI.
+    pub fn status_json(&self) -> Json {
+        let inner = self.inner.lock().expect("manager poisoned");
+        Json::obj(vec![
+            (
+                "containers",
+                Json::Arr(
+                    inner
+                        .containers
+                        .iter()
+                        .map(|(_, c)| c.status_json())
+                        .collect(),
+                ),
+            ),
+            ("active_vms", Json::num(self.cloud.active_vms() as f64)),
+            (
+                "capacity_cores",
+                Json::num(self.cloud.capacity_cores() as f64),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloud_capacity_enforced() {
+        let cloud = SimulatedCloud::new(8, Duration::ZERO);
+        let a = cloud.acquire_vm(VmClass::Large).unwrap();
+        let _b = cloud.acquire_vm(VmClass::Large).unwrap();
+        assert!(cloud.acquire_vm(VmClass::Small).is_err());
+        assert_eq!(cloud.active_vms(), 2);
+        cloud.release_vm(&a.id).unwrap();
+        assert!(cloud.acquire_vm(VmClass::Small).is_ok());
+        assert!(cloud.release_vm("vm-999").is_err());
+    }
+
+    #[test]
+    fn best_fit_prefers_fullest_container() {
+        let cloud = SimulatedCloud::new(128, Duration::ZERO);
+        let mgr = ResourceManager::new(cloud);
+        // First allocation provisions a VM (8 cores).
+        let c1 = mgr.allocate(5).unwrap();
+        let _f = spawn_dummy(&c1, "a", 5);
+        // 3 cores free on c1; a 2-core ask should best-fit onto c1, not a
+        // fresh container.
+        let c2 = mgr.allocate(2).unwrap();
+        assert!(Arc::ptr_eq(&c1, &c2));
+        // A 4-core ask does not fit c1 -> new VM.
+        let c3 = mgr.allocate(4).unwrap();
+        assert!(!Arc::ptr_eq(&c1, &c3));
+        assert_eq!(mgr.containers().len(), 2);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn release_idle_returns_vms() {
+        let cloud = SimulatedCloud::new(64, Duration::ZERO);
+        let mgr = ResourceManager::new(Arc::clone(&cloud) as Arc<dyn CloudProvider>);
+        let c = mgr.allocate(2).unwrap();
+        assert_eq!(cloud.active_vms(), 1);
+        // Container is empty -> released.
+        assert_eq!(mgr.release_idle().unwrap(), 1);
+        assert_eq!(cloud.active_vms(), 0);
+        drop(c);
+        mgr.shutdown();
+    }
+
+    fn spawn_dummy(
+        c: &Arc<Container>,
+        id: &str,
+        cores: usize,
+    ) -> Arc<crate::flake::Flake> {
+        use crate::graph::{
+            InPortSpec, MergeMode, OutPortSpec, SplitMode, TriggerMode,
+            WindowSpec,
+        };
+        let cfg = crate::flake::FlakeConfig {
+            pellet_id: id.into(),
+            class: "floe.builtin.Identity".into(),
+            inputs: vec![InPortSpec {
+                name: "in".into(),
+                window: WindowSpec::None,
+            }],
+            outputs: vec![OutPortSpec {
+                name: "out".into(),
+                split: SplitMode::RoundRobin,
+            }],
+            merge: MergeMode::Interleaved,
+            trigger: TriggerMode::Push,
+            sequential: false,
+            stateful: false,
+            cores,
+            alpha: 1,
+            queue_capacity: 16,
+        };
+        c.spawn_flake(
+            cfg,
+            Arc::new(|| Box::new(crate::pellet::builtins::Identity)),
+        )
+        .unwrap()
+    }
+}

@@ -1,0 +1,443 @@
+//! Messages flowing on Floe data channels.
+//!
+//! Messages are small serialized objects or large payloads (§II-A).  Payloads
+//! are reference-counted so the *duplicate* split pattern (Fig. 1, P7) clones
+//! envelopes, not bytes.  A message optionally carries a routing `key`
+//! (dynamic key-hash port mapping — the streaming MapReduce shuffle) and a
+//! `landmark` marker ("landmark" window delimiters and "update landmark"
+//! notifications from dynamic task updates).
+//!
+//! The binary framing here is the wire format of the TCP transport in
+//! [`crate::channel`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{FloeError, Result};
+
+/// Message payload variants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Control-only message (landmarks often carry no data).
+    Empty,
+    /// UTF-8 text (posts, CSV lines, XML documents).
+    Text(Arc<str>),
+    /// Opaque bytes (serialized objects, file chunks).
+    Bytes(Arc<[u8]>),
+    /// Dense f32 vector (feature vectors handed to the XLA kernels).
+    F32s(Arc<Vec<f32>>),
+    /// Port-name-indexed tuple produced by a synchronous merge (Fig. 1, P5).
+    Tuple(Arc<BTreeMap<String, Message>>),
+}
+
+/// Landmark markers (§II-A / §II-B).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Landmark {
+    /// End of a logical message window, e.g. so streaming reducers emit
+    /// their aggregate.
+    WindowEnd(String),
+    /// Notification that an upstream pellet's logic changed in-place.
+    Update { version: u64 },
+    /// Application-defined marker.
+    Custom(String),
+}
+
+static SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// A message envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub payload: Payload,
+    /// Routing key for the key-hash split (MapReduce shuffle).
+    pub key: Option<String>,
+    /// Landmark marker, if this is a control message.
+    pub landmark: Option<Landmark>,
+    /// Creation timestamp, microseconds since process start (end-to-end
+    /// latency accounting).
+    pub created_us: u64,
+    /// Process-wide sequence number (monotone, for ordering diagnostics).
+    pub seq: u64,
+}
+
+fn now_us() -> u64 {
+    use std::sync::OnceLock;
+    use std::time::Instant;
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+impl Message {
+    fn with_payload(payload: Payload) -> Message {
+        Message {
+            payload,
+            key: None,
+            landmark: None,
+            created_us: now_us(),
+            seq: SEQ.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    /// Empty control message.
+    pub fn empty() -> Message {
+        Message::with_payload(Payload::Empty)
+    }
+
+    /// Text message.
+    pub fn text(s: impl Into<String>) -> Message {
+        Message::with_payload(Payload::Text(Arc::from(s.into())))
+    }
+
+    /// Byte message.
+    pub fn bytes(b: impl Into<Vec<u8>>) -> Message {
+        Message::with_payload(Payload::Bytes(Arc::from(
+            b.into().into_boxed_slice(),
+        )))
+    }
+
+    /// Dense f32 vector message.
+    pub fn f32s(v: Vec<f32>) -> Message {
+        Message::with_payload(Payload::F32s(Arc::new(v)))
+    }
+
+    /// Tuple message from a synchronous merge.
+    pub fn tuple(map: BTreeMap<String, Message>) -> Message {
+        Message::with_payload(Payload::Tuple(Arc::new(map)))
+    }
+
+    /// Landmark control message.
+    pub fn landmark(l: Landmark) -> Message {
+        let mut m = Message::empty();
+        m.landmark = Some(l);
+        m
+    }
+
+    /// Set the routing key (builder style).
+    pub fn with_key(mut self, key: impl Into<String>) -> Message {
+        self.key = Some(key.into());
+        self
+    }
+
+    pub fn is_landmark(&self) -> bool {
+        self.landmark.is_some()
+    }
+
+    /// Text payload if present.
+    pub fn as_text(&self) -> Option<&str> {
+        match &self.payload {
+            Payload::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32s(&self) -> Option<&[f32]> {
+        match &self.payload {
+            Payload::F32s(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bytes(&self) -> Option<&[u8]> {
+        match &self.payload {
+            Payload::Bytes(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    pub fn as_tuple(&self) -> Option<&BTreeMap<String, Message>> {
+        match &self.payload {
+            Payload::Tuple(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Age of this message in seconds (for latency metrics).
+    pub fn age_secs(&self) -> f64 {
+        (now_us().saturating_sub(self.created_us)) as f64 / 1e6
+    }
+
+    // --- wire format ------------------------------------------------------
+
+    /// Serialize to the TCP wire format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(32);
+        self.encode_into(&mut out);
+        out
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&self.created_us.to_le_bytes());
+        match &self.key {
+            None => out.push(0),
+            Some(k) => {
+                out.push(1);
+                put_str(out, k);
+            }
+        }
+        match &self.landmark {
+            None => out.push(0),
+            Some(Landmark::WindowEnd(s)) => {
+                out.push(1);
+                put_str(out, s);
+            }
+            Some(Landmark::Update { version }) => {
+                out.push(2);
+                out.extend_from_slice(&version.to_le_bytes());
+            }
+            Some(Landmark::Custom(s)) => {
+                out.push(3);
+                put_str(out, s);
+            }
+        }
+        match &self.payload {
+            Payload::Empty => out.push(0),
+            Payload::Text(s) => {
+                out.push(1);
+                put_bytes(out, s.as_bytes());
+            }
+            Payload::Bytes(b) => {
+                out.push(2);
+                put_bytes(out, b);
+            }
+            Payload::F32s(v) => {
+                out.push(3);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for f in v.iter() {
+                    out.extend_from_slice(&f.to_le_bytes());
+                }
+            }
+            Payload::Tuple(map) => {
+                out.push(4);
+                out.extend_from_slice(&(map.len() as u16).to_le_bytes());
+                for (k, m) in map.iter() {
+                    put_str(out, k);
+                    m.encode_into(out);
+                }
+            }
+        }
+    }
+
+    /// Deserialize from the TCP wire format.
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut cur = Cursor { buf, pos: 0 };
+        let m = Message::decode_from(&mut cur)?;
+        if cur.pos != buf.len() {
+            return Err(FloeError::Parse("message: trailing bytes".into()));
+        }
+        Ok(m)
+    }
+
+    fn decode_from(c: &mut Cursor) -> Result<Message> {
+        let seq = c.u64()?;
+        let created_us = c.u64()?;
+        let key = match c.u8()? {
+            0 => None,
+            1 => Some(c.string()?),
+            t => {
+                return Err(FloeError::Parse(format!(
+                    "message: bad key tag {t}"
+                )))
+            }
+        };
+        let landmark = match c.u8()? {
+            0 => None,
+            1 => Some(Landmark::WindowEnd(c.string()?)),
+            2 => Some(Landmark::Update { version: c.u64()? }),
+            3 => Some(Landmark::Custom(c.string()?)),
+            t => {
+                return Err(FloeError::Parse(format!(
+                    "message: bad landmark tag {t}"
+                )))
+            }
+        };
+        let payload = match c.u8()? {
+            0 => Payload::Empty,
+            1 => {
+                let b = c.bytes()?;
+                Payload::Text(Arc::from(String::from_utf8(b).map_err(
+                    |_| FloeError::Parse("message: invalid utf8".into()),
+                )?))
+            }
+            2 => Payload::Bytes(Arc::from(c.bytes()?.into_boxed_slice())),
+            3 => {
+                let n = c.u32()? as usize;
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(f32::from_le_bytes(c.array::<4>()?));
+                }
+                Payload::F32s(Arc::new(v))
+            }
+            4 => {
+                let n = c.u16()? as usize;
+                let mut map = BTreeMap::new();
+                for _ in 0..n {
+                    let k = c.string()?;
+                    map.insert(k, Message::decode_from(c)?);
+                }
+                Payload::Tuple(Arc::new(map))
+            }
+            t => {
+                return Err(FloeError::Parse(format!(
+                    "message: bad payload tag {t}"
+                )))
+            }
+        };
+        Ok(Message { payload, key, landmark, created_us, seq })
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_bytes(out, s.as_bytes());
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn array<const N: usize>(&mut self) -> Result<[u8; N]> {
+        if self.pos + N > self.buf.len() {
+            return Err(FloeError::Parse("message: truncated".into()));
+        }
+        let mut a = [0u8; N];
+        a.copy_from_slice(&self.buf[self.pos..self.pos + N]);
+        self.pos += N;
+        Ok(a)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.array::<1>()?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.array::<2>()?))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.array::<4>()?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.array::<8>()?))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        if self.pos + n > self.buf.len() {
+            return Err(FloeError::Parse("message: truncated".into()));
+        }
+        let v = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?)
+            .map_err(|_| FloeError::Parse("message: invalid utf8".into()))
+    }
+}
+
+/// FNV-1a hash of a routing key — the "hash on the key" of the dynamic port
+/// mapping (§II-A).  Stable across processes so distributed shuffles agree.
+pub fn key_hash(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = Message::text("hello");
+        assert_eq!(t.as_text(), Some("hello"));
+        assert!(t.as_f32s().is_none());
+        let f = Message::f32s(vec![1.0, 2.0]);
+        assert_eq!(f.as_f32s(), Some(&[1.0f32, 2.0][..]));
+        let b = Message::bytes(vec![1, 2, 3]);
+        assert_eq!(b.as_bytes(), Some(&[1u8, 2, 3][..]));
+        assert!(Message::empty().key.is_none());
+    }
+
+    #[test]
+    fn seq_is_monotonic() {
+        let a = Message::empty();
+        let b = Message::empty();
+        assert!(b.seq > a.seq);
+    }
+
+    #[test]
+    fn clone_shares_payload() {
+        let m = Message::f32s(vec![0.0; 1024]);
+        let c = m.clone();
+        if let (Payload::F32s(a), Payload::F32s(b)) = (&m.payload, &c.payload)
+        {
+            assert!(Arc::ptr_eq(a, b));
+        } else {
+            panic!("expected f32 payloads");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut map = BTreeMap::new();
+        map.insert("a".to_string(), Message::text("x").with_key("k1"));
+        map.insert("b".to_string(), Message::f32s(vec![1.5, -2.5]));
+        let cases = vec![
+            Message::empty(),
+            Message::text("héllo wörld"),
+            Message::bytes(vec![0, 255, 128]),
+            Message::f32s(vec![f32::MIN, 0.0, f32::MAX]),
+            Message::tuple(map),
+            Message::landmark(Landmark::WindowEnd("w1".into())),
+            Message::landmark(Landmark::Update { version: 7 }),
+            Message::landmark(Landmark::Custom("mark".into())),
+            Message::text("keyed").with_key("route-me"),
+        ];
+        for m in cases {
+            let enc = m.encode();
+            let dec = Message::decode(&enc).unwrap();
+            assert_eq!(m, dec);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_garbage() {
+        let enc = Message::text("hello").encode();
+        for cut in [0, 1, enc.len() / 2, enc.len() - 1] {
+            assert!(Message::decode(&enc[..cut]).is_err(), "cut={cut}");
+        }
+        let mut bad = enc.clone();
+        bad.push(0); // trailing byte
+        assert!(Message::decode(&bad).is_err());
+        let mut badtag = enc;
+        badtag[17] = 99; // landmark tag byte: seq(8)+ts(8)+keytag(1)
+        assert!(Message::decode(&badtag).is_err());
+    }
+
+    #[test]
+    fn key_hash_stable_and_spread() {
+        assert_eq!(key_hash("abc"), key_hash("abc"));
+        assert_ne!(key_hash("abc"), key_hash("abd"));
+        let r = 4u64;
+        let mut counts = [0usize; 4];
+        for i in 0..1000 {
+            counts[(key_hash(&format!("key-{i}")) % r) as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > 150, "skewed shuffle: {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,467 @@
+//! Built-in pellet classes (`floe.builtin.*`): identity/relay, map/filter
+//! over text and vectors, key extraction, rate metering, sequence sources
+//! and collecting sinks.  They serve examples, tests and as reference
+//! implementations of the push/pull interfaces.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use super::{Pellet, PelletContext, PelletRegistry, PortIo, PullSource};
+use crate::error::Result;
+use crate::message::{Landmark, Message};
+use crate::util::json::Json;
+
+/// Forward every message unchanged (`floe.builtin.Identity`).
+pub struct Identity;
+
+impl Pellet for Identity {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        match input {
+            PortIo::Single(_, m) => ctx.emit("out", m),
+            PortIo::Tuple(t) => {
+                for (_, m) in t.iter() {
+                    ctx.emit("out", m.clone());
+                }
+            }
+            PortIo::Window(_, v) => {
+                for m in v {
+                    ctx.emit("out", m);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Uppercase text messages (`floe.builtin.Uppercase`).
+pub struct Uppercase;
+
+impl Pellet for Uppercase {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        for m in input.messages() {
+            if let Some(t) = m.as_text() {
+                let mut out = Message::text(t.to_uppercase());
+                out.key = m.key.clone();
+                ctx.emit("out", out);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Double every f32 element (`floe.builtin.MapDouble`).
+pub struct MapDouble;
+
+impl Pellet for MapDouble {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        for m in input.messages() {
+            if let Some(v) = m.as_f32s() {
+                ctx.emit(
+                    "out",
+                    Message::f32s(v.iter().map(|x| x * 2.0).collect()),
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Drop messages whose text does not contain the configured needle
+/// (`floe.builtin.FilterContains`; needle in state key `needle`).
+pub struct FilterContains;
+
+impl Pellet for FilterContains {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        let needle = ctx
+            .state()
+            .get("needle")
+            .and_then(|j| j.as_str().map(|s| s.to_string()))
+            .unwrap_or_default();
+        for m in input.messages() {
+            if m.as_text().map(|t| t.contains(&needle)).unwrap_or(false) {
+                ctx.emit("out", m.clone());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split text into words and emit each keyed by the word — the mapper half
+/// of streaming word count (`floe.builtin.WordSplit`).
+pub struct WordSplit;
+
+impl Pellet for WordSplit {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        for m in input.messages() {
+            if m.is_landmark() {
+                ctx.emit("out", m.clone());
+                continue;
+            }
+            if let Some(t) = m.as_text() {
+                for w in t.split_whitespace() {
+                    let word = w.to_lowercase();
+                    ctx.emit("out", Message::text(word.clone()).with_key(word));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Count keyed messages; on a WindowEnd landmark emit `key=count` text
+/// lines — the reducer half of streaming word count
+/// (`floe.builtin.KeyCount`).  Stateful.
+pub struct KeyCount;
+
+impl Pellet for KeyCount {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        for m in input.messages() {
+            if let Some(Landmark::WindowEnd(_)) = m.landmark {
+                // Drain-and-emit: counts are per window, and draining keeps
+                // totals correct when landmarks arrive once per upstream
+                // mapper rather than once per window.
+                let snap = ctx.state().snapshot();
+                for (k, v) in snap {
+                    if let Some(n) = v.as_f64() {
+                        if n > 0.0 {
+                            ctx.emit(
+                                "out",
+                                Message::text(format!("{k}={n}"))
+                                    .with_key(k.clone()),
+                            );
+                        }
+                        ctx.state().remove(&k);
+                    }
+                }
+                continue;
+            }
+            if let Some(k) = m.key.clone() {
+                ctx.state().update_num(&k, |c| c + 1.0);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Pull-mode running mean over f32 vectors: consumes the whole stream,
+/// emits one mean vector per WindowEnd landmark
+/// (`floe.builtin.RunningMean`).
+pub struct RunningMean {
+    sum: Vec<f32>,
+    n: usize,
+}
+
+impl RunningMean {
+    pub fn new() -> Self {
+        RunningMean { sum: vec![], n: 0 }
+    }
+}
+
+impl Pellet for RunningMean {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        for m in input.messages() {
+            if m.is_landmark() {
+                if self.n > 0 {
+                    let mean: Vec<f32> = self
+                        .sum
+                        .iter()
+                        .map(|s| s / self.n as f32)
+                        .collect();
+                    ctx.emit("out", Message::f32s(mean));
+                    self.sum.clear();
+                    self.n = 0;
+                }
+                continue;
+            }
+            if let Some(v) = m.as_f32s() {
+                if self.sum.len() < v.len() {
+                    self.sum.resize(v.len(), 0.0);
+                }
+                for (s, x) in self.sum.iter_mut().zip(v) {
+                    *s += x;
+                }
+                self.n += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn compute_pull(
+        &mut self,
+        source: &mut dyn PullSource,
+        ctx: &mut PelletContext,
+    ) -> Result<()> {
+        while let Some(io) = source.next() {
+            self.compute(io, ctx)?;
+            if ctx.interrupted() {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Collecting sink: appends message text/len to a shared vector for test
+/// and example inspection (`floe.builtin.Collect` via [`CollectSink`]).
+pub struct CollectSink {
+    pub collected: Arc<Mutex<Vec<Message>>>,
+}
+
+impl Pellet for CollectSink {
+    fn compute(&mut self, input: PortIo, _ctx: &mut PelletContext) -> Result<()> {
+        let mut g = self.collected.lock().expect("collect poisoned");
+        match input {
+            PortIo::Single(_, m) => g.push(m),
+            PortIo::Tuple(t) => g.extend(t.values().cloned()),
+            PortIo::Window(_, v) => g.extend(v),
+        }
+        Ok(())
+    }
+}
+
+/// Counting sink that tracks messages seen in its state object
+/// (`floe.builtin.CountSink`); useful when only totals matter.
+pub struct CountSink;
+
+impl Pellet for CountSink {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        let n = input.messages().len() as f64;
+        ctx.state().update_num("count", |c| c + n);
+        Ok(())
+    }
+}
+
+/// Emit `n` sequence text messages `0..n` when triggered by any input
+/// message (`floe.builtin.Sequence`; n from state key `n`, default 10).
+pub struct Sequence;
+
+impl Pellet for Sequence {
+    fn compute(&mut self, _input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        let n = ctx
+            .state()
+            .get("n")
+            .and_then(|j| j.as_f64())
+            .unwrap_or(10.0) as usize;
+        for i in 0..n {
+            ctx.emit("out", Message::text(i.to_string()));
+        }
+        Ok(())
+    }
+}
+
+/// Sleep for a configured time per message then forward — used to emulate
+/// compute-heavy pellets in benchmarks (`floe.builtin.Delay`; seconds in
+/// state key `delay_secs`, default 0.001).
+pub struct Delay;
+
+impl Pellet for Delay {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        let d = ctx
+            .state()
+            .get("delay_secs")
+            .and_then(|j| j.as_f64())
+            .unwrap_or(0.001);
+        std::thread::sleep(std::time::Duration::from_secs_f64(d));
+        for m in input.messages() {
+            ctx.emit("out", m.clone());
+        }
+        Ok(())
+    }
+}
+
+/// Global emission counter used by RateMeter tests.
+pub static METER_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Count throughput into the state object and a process-global counter
+/// (`floe.builtin.RateMeter`).
+pub struct RateMeter;
+
+impl Pellet for RateMeter {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        let n = input.messages().len() as u64;
+        METER_TOTAL.fetch_add(n, Ordering::Relaxed);
+        ctx.state().update_num("seen", |c| c + n as f64);
+        for m in input.messages() {
+            ctx.emit("out", m.clone());
+        }
+        Ok(())
+    }
+}
+
+/// Register every `floe.builtin.*` class into a registry.
+pub fn register_builtins(r: &PelletRegistry) {
+    r.register("floe.builtin.Identity", || Box::new(Identity));
+    r.register("floe.builtin.Uppercase", || Box::new(Uppercase));
+    r.register("floe.builtin.MapDouble", || Box::new(MapDouble));
+    r.register("floe.builtin.FilterContains", || Box::new(FilterContains));
+    r.register("floe.builtin.WordSplit", || Box::new(WordSplit));
+    r.register("floe.builtin.KeyCount", || Box::new(KeyCount));
+    r.register("floe.builtin.RunningMean", || Box::new(RunningMean::new()));
+    r.register("floe.builtin.CountSink", || Box::new(CountSink));
+    r.register("floe.builtin.Sequence", || Box::new(Sequence));
+    r.register("floe.builtin.Delay", || Box::new(Delay));
+    r.register("floe.builtin.RateMeter", || Box::new(RateMeter));
+}
+
+/// Set up `floe.builtin.FilterContains` state: store the needle.
+pub fn configure_filter(state: &super::StateObject, needle: &str) {
+    state.set("needle", Json::str(needle));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pellet::StateObject;
+    use std::sync::atomic::AtomicBool;
+
+    fn ctx_with(state: StateObject) -> PelletContext {
+        PelletContext::new(
+            "p",
+            0,
+            1,
+            state,
+            Arc::new(AtomicBool::new(false)),
+        )
+    }
+
+    fn push1(p: &mut dyn Pellet, m: Message) -> Vec<(String, Message)> {
+        let mut c = ctx_with(StateObject::new());
+        p.compute(PortIo::Single("in".into(), m), &mut c).unwrap();
+        c.take_emitted()
+    }
+
+    #[test]
+    fn identity_forwards() {
+        let out = push1(&mut Identity, Message::text("x"));
+        assert_eq!(out[0].1.as_text(), Some("x"));
+    }
+
+    #[test]
+    fn uppercase_keeps_key() {
+        let out = push1(&mut Uppercase, Message::text("abc").with_key("k"));
+        assert_eq!(out[0].1.as_text(), Some("ABC"));
+        assert_eq!(out[0].1.key.as_deref(), Some("k"));
+    }
+
+    #[test]
+    fn word_split_emits_keyed_words() {
+        let out = push1(&mut WordSplit, Message::text("To be OR not"));
+        let words: Vec<_> =
+            out.iter().map(|(_, m)| m.as_text().unwrap()).collect();
+        assert_eq!(words, vec!["to", "be", "or", "not"]);
+        assert!(out.iter().all(|(_, m)| m.key.is_some()));
+    }
+
+    #[test]
+    fn key_count_aggregates_until_landmark() {
+        let mut p = KeyCount;
+        let state = StateObject::new();
+        let mut c = ctx_with(state.clone());
+        for k in ["a", "b", "a"] {
+            p.compute(
+                PortIo::Single("in".into(), Message::text(k).with_key(k)),
+                &mut c,
+            )
+            .unwrap();
+        }
+        assert!(c.take_emitted().is_empty());
+        p.compute(
+            PortIo::Single(
+                "in".into(),
+                Message::landmark(Landmark::WindowEnd("w".into())),
+            ),
+            &mut c,
+        )
+        .unwrap();
+        let mut lines: Vec<_> = c
+            .take_emitted()
+            .iter()
+            .map(|(_, m)| m.as_text().unwrap().to_string())
+            .collect();
+        lines.sort();
+        assert_eq!(lines, vec!["a=2", "b=1"]);
+    }
+
+    #[test]
+    fn running_mean_on_landmark() {
+        let mut p = RunningMean::new();
+        let mut c = ctx_with(StateObject::new());
+        p.compute(
+            PortIo::Single("in".into(), Message::f32s(vec![1.0, 2.0])),
+            &mut c,
+        )
+        .unwrap();
+        p.compute(
+            PortIo::Single("in".into(), Message::f32s(vec![3.0, 4.0])),
+            &mut c,
+        )
+        .unwrap();
+        p.compute(
+            PortIo::Single(
+                "in".into(),
+                Message::landmark(Landmark::WindowEnd("w".into())),
+            ),
+            &mut c,
+        )
+        .unwrap();
+        let out = c.take_emitted();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.as_f32s(), Some(&[2.0f32, 3.0][..]));
+    }
+
+    #[test]
+    fn filter_contains_uses_state() {
+        let mut p = FilterContains;
+        let state = StateObject::new();
+        configure_filter(&state, "keep");
+        let mut c = ctx_with(state);
+        p.compute(
+            PortIo::Single("in".into(), Message::text("keep me")),
+            &mut c,
+        )
+        .unwrap();
+        p.compute(
+            PortIo::Single("in".into(), Message::text("drop me")),
+            &mut c,
+        )
+        .unwrap();
+        assert_eq!(c.take_emitted().len(), 1);
+    }
+
+    #[test]
+    fn count_sink_counts() {
+        let mut p = CountSink;
+        let state = StateObject::new();
+        let mut c = ctx_with(state.clone());
+        p.compute(
+            PortIo::Window(
+                "in".into(),
+                vec![Message::empty(), Message::empty()],
+            ),
+            &mut c,
+        )
+        .unwrap();
+        assert_eq!(state.get("count"), Some(Json::Num(2.0)));
+    }
+
+    #[test]
+    fn builtins_all_registered() {
+        let r = PelletRegistry::with_builtins();
+        for class in [
+            "floe.builtin.Identity",
+            "floe.builtin.Uppercase",
+            "floe.builtin.MapDouble",
+            "floe.builtin.FilterContains",
+            "floe.builtin.WordSplit",
+            "floe.builtin.KeyCount",
+            "floe.builtin.RunningMean",
+            "floe.builtin.CountSink",
+            "floe.builtin.Sequence",
+            "floe.builtin.Delay",
+            "floe.builtin.RateMeter",
+        ] {
+            assert!(r.resolve(class).is_ok(), "{class}");
+        }
+    }
+}

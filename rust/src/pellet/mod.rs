@@ -1,0 +1,448 @@
+//! Pellets: the user's application logic (§II-A).
+//!
+//! A pellet implements [`Pellet`] with either push triggering (the framework
+//! calls [`Pellet::compute`] once per input) or pull triggering
+//! ([`Pellet::compute_pull`] iterates over the input stream and may consume
+//! zero or more messages per emit).  Pellets see their inputs as [`PortIo`]
+//! values — a single message, a port-indexed tuple from a synchronous
+//! merge, or a window of messages.
+//!
+//! State is kept in an explicit [`StateObject`] that the framework retains
+//! across invocations *and across in-place dynamic updates*, enabling the
+//! paper's zero-downtime task swap and (future) checkpoint-based resilience.
+
+pub mod builtins;
+
+pub use builtins::register_builtins;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::error::{FloeError, Result};
+use crate::message::Message;
+use crate::util::json::Json;
+
+/// Input delivered to a pellet invocation.
+#[derive(Debug, Clone)]
+pub enum PortIo {
+    /// One message from one input port: `(port name, message)`.
+    Single(String, Message),
+    /// Synchronous merge: one message per input port, indexed by port name
+    /// (Fig. 1, P5).
+    Tuple(BTreeMap<String, Message>),
+    /// A count/time window of messages from one port (Fig. 1, P3).
+    Window(String, Vec<Message>),
+}
+
+impl PortIo {
+    /// The messages inside, regardless of shape.
+    pub fn messages(&self) -> Vec<&Message> {
+        match self {
+            PortIo::Single(_, m) => vec![m],
+            PortIo::Tuple(t) => t.values().collect(),
+            PortIo::Window(_, v) => v.iter().collect(),
+        }
+    }
+
+    /// Port name for Single/Window inputs.
+    pub fn port(&self) -> Option<&str> {
+        match self {
+            PortIo::Single(p, _) | PortIo::Window(p, _) => Some(p),
+            PortIo::Tuple(_) => None,
+        }
+    }
+
+    /// Convenience for the common Single case.
+    pub fn single(self) -> Option<Message> {
+        match self {
+            PortIo::Single(_, m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// Explicit pellet state (§II-A): a JSON-valued key-value object shared by
+/// all data-parallel instances of a pellet and surviving dynamic updates.
+#[derive(Clone, Default)]
+pub struct StateObject {
+    inner: Arc<Mutex<BTreeMap<String, Json>>>,
+}
+
+impl StateObject {
+    pub fn new() -> Self {
+        StateObject::default()
+    }
+
+    pub fn get(&self, key: &str) -> Option<Json> {
+        self.inner.lock().expect("state poisoned").get(key).cloned()
+    }
+
+    pub fn set(&self, key: &str, value: Json) {
+        self.inner
+            .lock()
+            .expect("state poisoned")
+            .insert(key.to_string(), value);
+    }
+
+    pub fn remove(&self, key: &str) -> Option<Json> {
+        self.inner.lock().expect("state poisoned").remove(key)
+    }
+
+    /// Numeric read-modify-write (counters, running sums).
+    pub fn update_num(&self, key: &str, f: impl FnOnce(f64) -> f64) -> f64 {
+        let mut g = self.inner.lock().expect("state poisoned");
+        let cur = g.get(key).and_then(|j| j.as_f64()).unwrap_or(0.0);
+        let next = f(cur);
+        g.insert(key.to_string(), Json::Num(next));
+        next
+    }
+
+    /// Snapshot for checkpointing (future resilience work) and tests.
+    pub fn snapshot(&self) -> BTreeMap<String, Json> {
+        self.inner.lock().expect("state poisoned").clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("state poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Execution context handed to every pellet invocation: output emission,
+/// the state object, interrupt checks, and identity.
+pub struct PelletContext {
+    /// Pellet id in the graph.
+    pub pellet_id: String,
+    /// Data-parallel instance index.
+    pub instance: usize,
+    /// Logic version (bumped by dynamic updates).
+    pub version: u64,
+    state: StateObject,
+    interrupted: Arc<AtomicBool>,
+    /// Fast path for push pellets: plain buffer, no locking.
+    emitted_local: Vec<(String, Message)>,
+    /// Opt-in shared buffer (see [`PelletContext::emission_buffer`]) so
+    /// the flake can flush a long-running pull pellet's output while
+    /// `compute_pull` is still iterating.
+    emitted_shared: Option<Arc<Mutex<Vec<(String, Message)>>>>,
+}
+
+impl PelletContext {
+    pub fn new(
+        pellet_id: impl Into<String>,
+        instance: usize,
+        version: u64,
+        state: StateObject,
+        interrupted: Arc<AtomicBool>,
+    ) -> Self {
+        PelletContext {
+            pellet_id: pellet_id.into(),
+            instance,
+            version,
+            state,
+            interrupted,
+            emitted_local: Vec::new(),
+            emitted_shared: None,
+        }
+    }
+
+    /// Emit a message on a named output port.
+    pub fn emit(&mut self, port: impl Into<String>, msg: Message) {
+        match &self.emitted_shared {
+            None => self.emitted_local.push((port.into(), msg)),
+            Some(s) => s
+                .lock()
+                .expect("emit buffer poisoned")
+                .push((port.into(), msg)),
+        }
+    }
+
+    /// The pellet's state object (stateful pellets).
+    pub fn state(&self) -> &StateObject {
+        &self.state
+    }
+
+    /// True when the framework asks this instance to wrap up (synchronous
+    /// dynamic update of a long-running pellet — the paper's
+    /// `InterruptException` equivalent).
+    pub fn interrupted(&self) -> bool {
+        self.interrupted.load(Ordering::Relaxed)
+    }
+
+    /// Drain emitted messages (framework side).
+    pub fn take_emitted(&mut self) -> Vec<(String, Message)> {
+        match &self.emitted_shared {
+            None => std::mem::take(&mut self.emitted_local),
+            Some(s) => {
+                let mut out = std::mem::take(
+                    &mut *s.lock().expect("emit poisoned"),
+                );
+                if !self.emitted_local.is_empty() {
+                    out.append(&mut self.emitted_local);
+                }
+                out
+            }
+        }
+    }
+
+    /// Switch this context to a shared emission buffer and return the
+    /// handle — lets the flake flush output from a pull pellet that is
+    /// still inside `compute_pull`.  Push pellets never pay the lock.
+    pub fn emission_buffer(
+        &mut self,
+    ) -> Arc<Mutex<Vec<(String, Message)>>> {
+        let shared = self
+            .emitted_shared
+            .get_or_insert_with(|| Arc::new(Mutex::new(Vec::new())));
+        if !self.emitted_local.is_empty() {
+            shared
+                .lock()
+                .expect("emit poisoned")
+                .append(&mut self.emitted_local);
+        }
+        Arc::clone(shared)
+    }
+}
+
+/// Provider of input for pull pellets: blocks for the next input, returns
+/// `None` when the stream ends or the framework needs the instance to yield
+/// (pause, update, shutdown).
+pub trait PullSource {
+    fn next(&mut self) -> Option<PortIo>;
+}
+
+impl<F: FnMut() -> Option<PortIo>> PullSource for F {
+    fn next(&mut self) -> Option<PortIo> {
+        self()
+    }
+}
+
+/// The pellet interface (§II-A's family of `compute()` interfaces).
+///
+/// Push pellets implement [`Pellet::compute`]; pull pellets implement
+/// [`Pellet::compute_pull`].  The default `compute_pull` drains the source
+/// through `compute`, so a push pellet works under either trigger mode.
+pub trait Pellet: Send {
+    /// One-time setup when an instance is created (open connections, load
+    /// dictionaries...).
+    fn setup(&mut self, _ctx: &mut PelletContext) -> Result<()> {
+        Ok(())
+    }
+
+    /// Push triggering: handle one input, emit via `ctx.emit`.
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext)
+        -> Result<()>;
+
+    /// Pull triggering: iterate the stream.  Instances should poll
+    /// `ctx.interrupted()` between messages and return promptly when set.
+    fn compute_pull(
+        &mut self,
+        source: &mut dyn PullSource,
+        ctx: &mut PelletContext,
+    ) -> Result<()> {
+        while let Some(input) = source.next() {
+            self.compute(input, ctx)?;
+            if ctx.interrupted() {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Teardown before the instance is dropped (including on update).
+    fn teardown(&mut self, _ctx: &mut PelletContext) {}
+}
+
+/// Factory producing pellet instances — the unit swapped by dynamic task
+/// updates.  Qualified class names (paper: Java class names) map to
+/// factories through the [`PelletRegistry`].
+pub type PelletFactory = Arc<dyn Fn() -> Box<dyn Pellet> + Send + Sync>;
+
+/// Registry of pellet classes by qualified name.
+#[derive(Clone, Default)]
+pub struct PelletRegistry {
+    inner: Arc<RwLock<BTreeMap<String, PelletFactory>>>,
+}
+
+impl PelletRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        PelletRegistry::default()
+    }
+
+    /// Registry pre-loaded with `floe.builtin.*` classes.
+    pub fn with_builtins() -> Self {
+        let r = PelletRegistry::new();
+        register_builtins(&r);
+        r
+    }
+
+    /// Register (or replace) a class.  Replacement is the mechanism behind
+    /// dynamic task updates driven by class name.
+    pub fn register<F>(&self, class: &str, factory: F)
+    where
+        F: Fn() -> Box<dyn Pellet> + Send + Sync + 'static,
+    {
+        self.inner
+            .write()
+            .expect("registry poisoned")
+            .insert(class.to_string(), Arc::new(factory));
+    }
+
+    /// Look up a class factory.
+    pub fn resolve(&self, class: &str) -> Result<PelletFactory> {
+        self.inner
+            .read()
+            .expect("registry poisoned")
+            .get(class)
+            .cloned()
+            .ok_or_else(|| {
+                FloeError::Graph(format!("unknown pellet class '{class}'"))
+            })
+    }
+
+    pub fn classes(&self) -> Vec<String> {
+        self.inner
+            .read()
+            .expect("registry poisoned")
+            .keys()
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Doubler;
+    impl Pellet for Doubler {
+        fn compute(
+            &mut self,
+            input: PortIo,
+            ctx: &mut PelletContext,
+        ) -> Result<()> {
+            if let PortIo::Single(_, m) = input {
+                let v: Vec<f32> = m
+                    .as_f32s()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|x| x * 2.0)
+                    .collect();
+                ctx.emit("out", Message::f32s(v));
+            }
+            Ok(())
+        }
+    }
+
+    fn ctx() -> PelletContext {
+        PelletContext::new(
+            "p",
+            0,
+            1,
+            StateObject::new(),
+            Arc::new(AtomicBool::new(false)),
+        )
+    }
+
+    #[test]
+    fn push_compute_emits() {
+        let mut p = Doubler;
+        let mut c = ctx();
+        p.compute(
+            PortIo::Single("in".into(), Message::f32s(vec![1.0, 2.0])),
+            &mut c,
+        )
+        .unwrap();
+        let out = c.take_emitted();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, "out");
+        assert_eq!(out[0].1.as_f32s(), Some(&[2.0f32, 4.0][..]));
+        assert!(c.take_emitted().is_empty());
+    }
+
+    #[test]
+    fn default_pull_drains_source() {
+        let mut p = Doubler;
+        let mut c = ctx();
+        let mut items = vec![
+            PortIo::Single("in".into(), Message::f32s(vec![1.0])),
+            PortIo::Single("in".into(), Message::f32s(vec![3.0])),
+        ]
+        .into_iter();
+        let mut source = || items.next();
+        p.compute_pull(&mut source, &mut c).unwrap();
+        assert_eq!(c.take_emitted().len(), 2);
+    }
+
+    #[test]
+    fn pull_respects_interrupt() {
+        let mut p = Doubler;
+        let flag = Arc::new(AtomicBool::new(false));
+        let mut c = PelletContext::new(
+            "p",
+            0,
+            1,
+            StateObject::new(),
+            Arc::clone(&flag),
+        );
+        flag.store(true, Ordering::Relaxed);
+        let mut _count = 0;
+        let mut source = move || {
+            _count += 1;
+            Some(PortIo::Single("in".into(), Message::f32s(vec![1.0])))
+        };
+        p.compute_pull(&mut source, &mut c).unwrap();
+        // interrupted after the first message
+        assert_eq!(c.take_emitted().len(), 1);
+    }
+
+    #[test]
+    fn state_object_shared_and_updatable() {
+        let s = StateObject::new();
+        let s2 = s.clone();
+        s.set("k", Json::Num(1.0));
+        assert_eq!(s2.get("k"), Some(Json::Num(1.0)));
+        let v = s2.update_num("k", |x| x + 2.0);
+        assert_eq!(v, 3.0);
+        assert_eq!(s.get("k"), Some(Json::Num(3.0)));
+        assert_eq!(s.snapshot().len(), 1);
+        s.remove("k");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn registry_resolves_and_replaces() {
+        let r = PelletRegistry::new();
+        r.register("t.Doubler", || Box::new(Doubler));
+        let f = r.resolve("t.Doubler").unwrap();
+        let _p = f();
+        assert!(r.resolve("t.Nope").is_err());
+        // replacement (dynamic task update by class)
+        r.register("t.Doubler", || Box::new(Doubler));
+        assert_eq!(r.classes(), vec!["t.Doubler"]);
+    }
+
+    #[test]
+    fn portio_accessors() {
+        let s = PortIo::Single("a".into(), Message::text("x"));
+        assert_eq!(s.port(), Some("a"));
+        assert_eq!(s.messages().len(), 1);
+        let mut map = BTreeMap::new();
+        map.insert("p1".to_string(), Message::text("1"));
+        map.insert("p2".to_string(), Message::text("2"));
+        let t = PortIo::Tuple(map);
+        assert_eq!(t.port(), None);
+        assert_eq!(t.messages().len(), 2);
+        let w = PortIo::Window(
+            "w".into(),
+            vec![Message::empty(), Message::empty()],
+        );
+        assert_eq!(w.messages().len(), 2);
+        assert!(w.single().is_none());
+    }
+}

@@ -1,0 +1,368 @@
+//! PJRT runtime bridge: load the AOT artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust request path.
+//!
+//! Interchange is HLO **text** (`artifacts/*.hlo.txt`): jax ≥ 0.5 serializes
+//! `HloModuleProto`s with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids.  `manifest.json` (parsed
+//! with [`crate::util::json`]) names each entry point and its input shapes
+//! so callers can validate before dispatch.
+//!
+//! One [`LoadedKernel`] per entry point; compilation happens once at load,
+//! execution is thread-safe behind an internal mutex (the PJRT CPU client is
+//! not documented re-entrant through this binding, and the flake layer
+//! provides the parallelism we need across pellet instances).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{FloeError, Result};
+use crate::util::json::Json;
+
+/// Tensor metadata from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point description from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: Vec<EntrySpec>,
+    /// Model configuration (batch, dim, n_bands, band_width, n_clusters).
+    pub config: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let mut config = HashMap::new();
+        if let Some(obj) = root.get("config").and_then(|c| c.as_obj()) {
+            for (k, v) in obj {
+                if let Some(n) = v.as_usize() {
+                    config.insert(k.clone(), n);
+                }
+            }
+        }
+        let entries_obj = root
+            .get("entries")
+            .and_then(|e| e.as_obj())
+            .ok_or_else(|| {
+                FloeError::Parse("manifest: missing 'entries'".into())
+            })?;
+        let mut entries = Vec::new();
+        for (name, e) in entries_obj {
+            let file = e
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| {
+                    FloeError::Parse(format!("manifest: {name}: no file"))
+                })?
+                .to_string();
+            let mut inputs = Vec::new();
+            for inp in e
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .unwrap_or(&[])
+            {
+                let shape = inp
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .map(|a| {
+                        a.iter().filter_map(|j| j.as_usize()).collect()
+                    })
+                    .unwrap_or_default();
+                let dtype = inp
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("float32")
+                    .to_string();
+                inputs.push(TensorSpec { shape, dtype });
+            }
+            entries.push(EntrySpec { name: name.clone(), file, inputs });
+        }
+        Ok(Manifest { entries, config })
+    }
+
+    pub fn config_usize(&self, key: &str) -> Result<usize> {
+        self.config.get(key).copied().ok_or_else(|| {
+            FloeError::Parse(format!("manifest: missing config '{key}'"))
+        })
+    }
+}
+
+/// Input tensor handed to [`LoadedKernel::execute`].
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "float32",
+            Tensor::I32 { .. } => "int32",
+        }
+    }
+
+    /// Borrow f32 payload (None for other dtypes).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => Err(FloeError::Runtime(format!(
+                "unsupported output element type {other:?}"
+            ))),
+        }
+    }
+}
+
+struct RuntimeInner {
+    client: xla::PjRtClient,
+    /// Entry name -> compiled executable.
+    kernels: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// The PJRT client plus every kernel from an artifact directory.
+///
+/// All access to the underlying xla objects is serialized behind one
+/// mutex: the published `xla` 0.1.6 binding uses non-atomic `Rc` handles
+/// internally, so the objects themselves are not thread-safe even though
+/// the PJRT CPU runtime is.  The flake layer provides request-level
+/// parallelism; a kernel call is one batched XLA execution.
+pub struct XlaRuntime {
+    inner: Mutex<RuntimeInner>,
+    specs: HashMap<String, EntrySpec>,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+// SAFETY: every xla object (client, executables, and the transient
+// literals/buffers created during execute) is owned by `RuntimeInner` and
+// only touched while holding `self.inner`; no Rc handle ever crosses the
+// lock boundary, so the non-atomic refcounts are never raced.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load+compile every manifest entry in
+    /// `dir` (typically `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            FloeError::Runtime(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut kernels = HashMap::new();
+        let mut specs = HashMap::new();
+        for entry in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| {
+                    FloeError::Runtime("non-utf8 artifact path".into())
+                })?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            log::debug!("runtime: compiled {}", entry.name);
+            kernels.insert(entry.name.clone(), exe);
+            specs.insert(entry.name.clone(), entry.clone());
+        }
+        log::info!(
+            "runtime: loaded {} kernels from {} (platform {})",
+            kernels.len(),
+            dir.display(),
+            client.platform_name()
+        );
+        Ok(XlaRuntime {
+            inner: Mutex::new(RuntimeInner { client, kernels }),
+            specs,
+            manifest,
+            dir,
+        })
+    }
+
+    /// Validate inputs against the manifest spec, execute the named
+    /// kernel, and unpack the result tuple.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let spec = self.spec(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(FloeError::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(spec.inputs.iter()).enumerate()
+        {
+            if t.shape() != s.shape.as_slice() || t.dtype() != s.dtype {
+                return Err(FloeError::Runtime(format!(
+                    "{name}: input {i} is {:?}/{}, expected {:?}/{}",
+                    t.shape(),
+                    t.dtype(),
+                    s.shape,
+                    s.dtype
+                )));
+            }
+        }
+        let inner = self.inner.lock().expect("runtime poisoned");
+        let exe = inner.kernels.get(name).expect("spec checked");
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        drop(inner);
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Manifest spec for an entry point.
+    pub fn spec(&self, name: &str) -> Result<&EntrySpec> {
+        self.specs.get(name).ok_or_else(|| {
+            FloeError::Runtime(format!(
+                "no kernel '{name}' in {}",
+                self.dir.display()
+            ))
+        })
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner
+            .lock()
+            .expect("runtime poisoned")
+            .client
+            .platform_name()
+    }
+}
+
+/// Locate the artifact directory: `FLOE_ARTIFACTS` env, else `artifacts/`
+/// relative to the working directory or the crate root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("FLOE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            r#"{"config": {"batch": 32, "dim": 64},
+                "entries": {
+                  "bucketize": {"file": "bucketize.hlo.txt",
+                    "inputs": [{"shape": [32, 64], "dtype": "float32"},
+                               {"shape": [64, 96], "dtype": "float32"}]}}}"#,
+        )
+        .unwrap();
+        assert_eq!(m.config_usize("batch").unwrap(), 32);
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries[0];
+        assert_eq!(e.name, "bucketize");
+        assert_eq!(e.inputs[1].shape, vec![64, 96]);
+        assert_eq!(e.inputs[0].elements(), 32 * 64);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_entries() {
+        assert!(Manifest::parse(r#"{"config": {}}"#).is_err());
+        assert!(Manifest::parse("[]").is_err());
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype(), "float32");
+        assert_eq!(t.as_f32().unwrap().len(), 6);
+        let i = Tensor::i32(&[4], vec![1, 2, 3, 4]);
+        assert_eq!(i.dtype(), "int32");
+        assert_eq!(i.as_i32().unwrap(), &[1, 2, 3, 4]);
+    }
+}

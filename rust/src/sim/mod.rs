@@ -1,0 +1,550 @@
+//! Discrete-time simulator for the §IV-C validation of the resource
+//! adaptation strategies (Fig. 4).
+//!
+//! Simulates the representative pellet (`I1` of the integration pipeline)
+//! under the three workload profiles, driving the *same*
+//! [`AdaptationStrategy`](crate::adaptation::AdaptationStrategy)
+//! implementations the live runtime uses.  Each second: arrivals enter the
+//! queue, `cores × α` instances drain it at the pellet's service latency,
+//! and every `sample_interval` the strategy re-decides the allocation.
+//!
+//! Outputs time series (queue length + allocated cores — the two panels of
+//! Fig. 4) plus summary metrics: drain latency per period against the
+//! `burst + ε` threshold, peak cores, and cumulative core-seconds (the
+//! "area under the curve" whose static:dynamic:hybrid ratio the paper
+//! reports as 0.87 : 1.00 : 0.98).
+
+pub mod workload;
+
+pub use workload::{WorkloadGen, WorkloadProfile};
+
+use crate::adaptation::{
+    AdaptationStrategy, DynamicStrategy, HybridStrategy, StaticLookAhead,
+};
+use crate::flake::FlakeObservation;
+use crate::util::csv::CsvTable;
+use crate::ALPHA;
+
+/// Simulated pellet parameters (the paper's Fig. 3a annotations give the
+/// shape; exact numbers are documented in EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct SimPellet {
+    /// Per-message service latency with one instance, seconds.
+    pub latency: f64,
+    /// Outputs per input (not used by the single-pellet sim but kept for
+    /// pipeline-level extensions).
+    pub selectivity: f64,
+}
+
+impl Default for SimPellet {
+    fn default() -> Self {
+        // I1: event-stream pellet, 100 ms/message, selectivity 1.
+        SimPellet { latency: 0.1, selectivity: 1.0 }
+    }
+}
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub pellet: SimPellet,
+    /// Total simulated seconds.
+    pub duration: f64,
+    /// Simulation step, seconds.
+    pub dt: f64,
+    /// Strategy sampling interval, seconds.
+    pub sample_interval: f64,
+    /// Latency tolerance ε, seconds (paper: 20 s).
+    pub epsilon: f64,
+    /// Instances per core.
+    pub alpha: usize,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            pellet: SimPellet::default(),
+            duration: 1800.0,
+            dt: 1.0,
+            sample_interval: 5.0,
+            epsilon: 20.0,
+            alpha: ALPHA,
+            seed: 42,
+        }
+    }
+}
+
+/// One sample of the simulated series.
+#[derive(Debug, Clone, Copy)]
+pub struct SimSample {
+    pub t: f64,
+    pub arrival_rate: f64,
+    pub queue_len: f64,
+    pub cores: usize,
+    pub processed: f64,
+}
+
+/// Result of one (profile, strategy) simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub strategy: &'static str,
+    pub profile: &'static str,
+    pub samples: Vec<SimSample>,
+    /// Σ cores·dt — the paper's "area under the curve" resource measure.
+    pub core_seconds: f64,
+    pub peak_cores: usize,
+    /// Final queue length (divergence indicator for the random profile).
+    pub final_queue: f64,
+    /// Largest queue observed.
+    pub peak_queue: f64,
+    /// Per-period drain latency (seconds from period start until the queue
+    /// empties after the burst), for periodic profiles.
+    pub drain_latencies: Vec<f64>,
+    /// Per-period worst message queueing delay (FIFO wait), seconds —
+    /// the quantity the user's ε tolerance bounds.
+    pub max_delays: Vec<f64>,
+    /// Worst queueing delay over the whole run (random profiles report
+    /// this instead of per-period numbers).
+    pub max_delay: f64,
+    /// Count of periods whose worst queueing delay exceeded ε.
+    pub latency_violations: usize,
+    /// The `burst + ε` display threshold (0 for random profiles).
+    pub latency_threshold: f64,
+}
+
+impl SimResult {
+    /// Mean drain latency over completed periods.
+    pub fn mean_drain(&self) -> f64 {
+        if self.drain_latencies.is_empty() {
+            return 0.0;
+        }
+        self.drain_latencies.iter().sum::<f64>()
+            / self.drain_latencies.len() as f64
+    }
+
+    /// Export the Fig. 4 series as CSV (t, arrival_rate, queue, cores).
+    pub fn to_csv(&self) -> CsvTable {
+        let mut t =
+            CsvTable::new(&["t", "arrival_rate", "queue", "cores"]);
+        for s in &self.samples {
+            t.push(vec![
+                format!("{:.1}", s.t),
+                format!("{:.2}", s.arrival_rate),
+                format!("{:.1}", s.queue_len),
+                s.cores.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Which strategy to simulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyKind {
+    Static,
+    Dynamic,
+    Hybrid,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 3] =
+        [StrategyKind::Static, StrategyKind::Dynamic, StrategyKind::Hybrid];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Static => "static",
+            StrategyKind::Dynamic => "dynamic",
+            StrategyKind::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Build the strategy for a profile the way the paper's user would: static
+/// and hybrid get the oracle hints derived from the profile's *nominal*
+/// parameters; dynamic gets nothing.
+fn build_strategy(
+    kind: StrategyKind,
+    profile: &WorkloadProfile,
+    cfg: &SimConfig,
+) -> Box<dyn AdaptationStrategy> {
+    // Oracle hint: messages per burst at the nominal rate, to be processed
+    // within burst + ε (the paper's Fig. 4a "threshold of 80 secs").
+    let (_, burst) = profile.period_burst().unwrap_or((300.0, 300.0));
+    let m_per_burst = profile.burst_rate() * burst;
+    let static_cores = StaticLookAhead::for_pellet(
+        cfg.pellet.latency,
+        m_per_burst,
+        burst,
+        cfg.epsilon,
+        cfg.alpha,
+    )
+    .cores;
+    match kind {
+        StrategyKind::Static => {
+            Box::new(StaticLookAhead { cores: static_cores })
+        }
+        StrategyKind::Dynamic => Box::new(DynamicStrategy {
+            alpha: cfg.alpha,
+            ..DynamicStrategy::default()
+        }),
+        StrategyKind::Hybrid => Box::new(HybridStrategy::new(
+            static_cores,
+            profile.burst_rate(),
+            0.35,
+        )),
+    }
+}
+
+/// Run one simulation.
+pub fn simulate(
+    profile: WorkloadProfile,
+    kind: StrategyKind,
+    cfg: &SimConfig,
+) -> SimResult {
+    let mut strategy = build_strategy(kind, &profile, cfg);
+    let mut gen = WorkloadGen::new(profile.clone(), cfg.seed);
+
+    let mut queue: f64 = 0.0;
+    let mut cores: usize = match kind {
+        // Static allocation is fixed from t=0 (the "oracle" user asked for
+        // it at submission); others start at 0 and adapt.
+        StrategyKind::Static => {
+            strategy
+                .decide(&dummy_obs(0.0, 0.0, cfg.pellet.latency, 0), 0.0)
+        }
+        _ => 0,
+    };
+    let mut samples = Vec::new();
+    let mut core_seconds = 0.0;
+    let mut peak_cores = 0usize;
+    let mut peak_queue = 0.0f64;
+
+    // Rate estimation window for the strategy observation (mirrors the
+    // live probes' behaviour).
+    let mut arr_window: Vec<(f64, f64)> = Vec::new(); // (t, cumulative)
+    let mut cum_arrivals = 0.0;
+    let mut next_sample = 0.0;
+
+    // Drain-latency + queueing-delay bookkeeping.
+    let period_burst = profile.period_burst();
+    let mut drain_latencies = Vec::new();
+    let mut max_delays = Vec::new();
+    let mut period_start = 0.0;
+    let mut seen_data_this_period = false;
+    let mut period_max_delay = 0.0f64;
+    let mut run_max_delay = 0.0f64;
+    let mut drained_at: Option<f64> = None;
+    // FIFO of (arrival time, messages) buckets for per-message delay.
+    let mut fifo: std::collections::VecDeque<(f64, f64)> =
+        std::collections::VecDeque::new();
+
+    let steps = (cfg.duration / cfg.dt).ceil() as usize;
+    for step in 0..steps {
+        let t = step as f64 * cfg.dt;
+
+        // Period rollover bookkeeping.
+        if let Some((period, _)) = period_burst {
+            if t - period_start >= period {
+                if seen_data_this_period {
+                    drain_latencies
+                        .push(drained_at.unwrap_or(period));
+                    max_delays.push(period_max_delay);
+                }
+                period_start = t;
+                seen_data_this_period = false;
+                period_max_delay = 0.0;
+                drained_at = None;
+            }
+        }
+
+        // Arrivals.
+        let arrivals = gen.arrivals(t, cfg.dt);
+        cum_arrivals += arrivals;
+        if arrivals > 0.0 {
+            seen_data_this_period = true;
+            drained_at = None; // still receiving, not drained
+            fifo.push_back((t, arrivals));
+        }
+        queue += arrivals;
+
+        // Service: drain the FIFO, tracking the worst per-message wait.
+        let capacity = (cores * cfg.alpha) as f64 * cfg.dt
+            / cfg.pellet.latency.max(1e-9);
+        let processed = queue.min(capacity);
+        queue -= processed;
+        let mut left = processed;
+        while left > 0.0 {
+            let Some(front) = fifo.front_mut() else { break };
+            let take = front.1.min(left);
+            front.1 -= take;
+            left -= take;
+            let delay = t - front.0;
+            period_max_delay = period_max_delay.max(delay);
+            run_max_delay = run_max_delay.max(delay);
+            if front.1 <= 0.0 {
+                fifo.pop_front();
+            }
+        }
+        // Unprocessed backlog also ages: count waiting time of the oldest
+        // queued message so far (a period that never drains still shows
+        // its true worst-case delay).
+        if let Some(&(t0, _)) = fifo.front() {
+            let waiting = t - t0;
+            period_max_delay = period_max_delay.max(waiting);
+            run_max_delay = run_max_delay.max(waiting);
+        }
+        if queue <= 0.5 && seen_data_this_period && drained_at.is_none() {
+            drained_at = Some(t - period_start);
+        }
+
+        // Strategy sampling.
+        arr_window.push((t, cum_arrivals));
+        if arr_window.len() > 5 {
+            let excess = arr_window.len() - 5;
+            arr_window.drain(..excess);
+        }
+        if t >= next_sample {
+            next_sample += cfg.sample_interval;
+            let arrival_rate = window_rate(&arr_window);
+            let obs = dummy_obs(
+                queue,
+                arrival_rate,
+                cfg.pellet.latency,
+                cores,
+            );
+            let decided = strategy.decide(&obs, t);
+            if kind != StrategyKind::Static {
+                cores = decided;
+            }
+        }
+
+        core_seconds += cores as f64 * cfg.dt;
+        peak_cores = peak_cores.max(cores);
+        peak_queue = peak_queue.max(queue);
+        samples.push(SimSample {
+            t,
+            arrival_rate: arrivals / cfg.dt,
+            queue_len: queue,
+            cores,
+            processed,
+        });
+    }
+
+    let latency_threshold = period_burst
+        .map(|(_, burst)| burst + cfg.epsilon)
+        .unwrap_or(0.0);
+    // A period violates the user's tolerance when any message waited more
+    // than ε in the queue (for the clean burst profile this matches the
+    // paper's "drained by burst + ε" framing).
+    let latency_violations = if period_burst.is_some() {
+        max_delays.iter().filter(|&&d| d > cfg.epsilon).count()
+    } else {
+        0
+    };
+
+    SimResult {
+        strategy: kind.name(),
+        profile: profile.name(),
+        samples,
+        core_seconds,
+        peak_cores,
+        final_queue: queue,
+        peak_queue,
+        drain_latencies,
+        max_delays,
+        max_delay: run_max_delay,
+        latency_violations,
+        latency_threshold,
+    }
+}
+
+fn window_rate(w: &[(f64, f64)]) -> f64 {
+    if w.len() < 2 {
+        return 0.0;
+    }
+    let (t0, a0) = w[0];
+    let (t1, a1) = w[w.len() - 1];
+    if t1 <= t0 {
+        return 0.0;
+    }
+    (a1 - a0) / (t1 - t0)
+}
+
+fn dummy_obs(
+    queue: f64,
+    arrival_rate: f64,
+    latency: f64,
+    cores: usize,
+) -> FlakeObservation {
+    FlakeObservation {
+        queue_len: queue.round() as usize,
+        arrival_rate,
+        completion_rate: 0.0,
+        service_latency: latency,
+        selectivity: 1.0,
+        cores,
+        instances: cores * ALPHA,
+    }
+}
+
+/// Run all three strategies on a profile and report the cumulative
+/// resource ratio normalized to dynamic = 1.00 (the paper's §IV-C metric).
+pub fn compare_strategies(
+    profile: WorkloadProfile,
+    cfg: &SimConfig,
+) -> (Vec<SimResult>, [f64; 3]) {
+    let results: Vec<SimResult> = StrategyKind::ALL
+        .iter()
+        .map(|&k| simulate(profile.clone(), k, cfg))
+        .collect();
+    let dynamic_cs = results
+        .iter()
+        .find(|r| r.strategy == "dynamic")
+        .map(|r| r.core_seconds)
+        .unwrap_or(1.0)
+        .max(1e-9);
+    let ratios = [
+        results[0].core_seconds / dynamic_cs,
+        results[1].core_seconds / dynamic_cs,
+        results[2].core_seconds / dynamic_cs,
+    ];
+    (results, ratios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        SimConfig { duration: 1500.0, ..SimConfig::default() }
+    }
+
+    #[test]
+    fn periodic_static_meets_threshold() {
+        let r = simulate(
+            WorkloadProfile::periodic_default(100.0),
+            StrategyKind::Static,
+            &cfg(),
+        );
+        assert!(!r.drain_latencies.is_empty());
+        // The oracle allocation drains each period within burst + ε.
+        assert_eq!(
+            r.latency_violations, 0,
+            "drains: {:?}",
+            r.drain_latencies
+        );
+        assert!(r.peak_cores >= 1);
+    }
+
+    #[test]
+    fn periodic_dynamic_drains_and_quiesces() {
+        let r = simulate(
+            WorkloadProfile::periodic_default(100.0),
+            StrategyKind::Dynamic,
+            &cfg(),
+        );
+        assert_eq!(r.latency_violations, 0, "{:?}", r.drain_latencies);
+        // Quiesces between bursts: some samples at 0 cores.
+        assert!(r.samples.iter().any(|s| s.cores == 0));
+        // And scales up during bursts.
+        assert!(r.peak_cores >= 2);
+    }
+
+    #[test]
+    fn spikes_static_misses_dynamic_holds() {
+        let c = cfg();
+        let rs = simulate(
+            WorkloadProfile::spikes_default(100.0),
+            StrategyKind::Static,
+            &c,
+        );
+        let rd = simulate(
+            WorkloadProfile::spikes_default(100.0),
+            StrategyKind::Dynamic,
+            &c,
+        );
+        // Paper Fig. 4 center: static misses the tolerance under spikes;
+        // dynamic processes within tolerance with a larger peak.
+        assert!(rs.latency_violations > 0, "static should miss");
+        assert!(
+            rd.latency_violations <= rs.latency_violations,
+            "dynamic {} vs static {}",
+            rd.latency_violations,
+            rs.latency_violations
+        );
+        assert!(rd.peak_cores >= rs.peak_cores);
+    }
+
+    #[test]
+    fn random_static_queue_grows_dynamic_bounded() {
+        let c = SimConfig { duration: 3000.0, ..cfg() };
+        let rs = simulate(
+            WorkloadProfile::random_default(60.0),
+            StrategyKind::Static,
+            &c,
+        );
+        let rd = simulate(
+            WorkloadProfile::random_default(60.0),
+            StrategyKind::Dynamic,
+            &c,
+        );
+        // Paper Fig. 4 right: static's queue accumulates over time while
+        // dynamic keeps pending messages negligible.
+        assert!(
+            rs.peak_queue > 5.0 * rd.peak_queue.max(1.0),
+            "static peak {} dynamic peak {}",
+            rs.peak_queue,
+            rd.peak_queue
+        );
+        assert!(rd.final_queue < 500.0, "dynamic final {}", rd.final_queue);
+    }
+
+    #[test]
+    fn random_resource_ratio_shape() {
+        let c = SimConfig { duration: 3000.0, ..cfg() };
+        let (_results, ratios) =
+            compare_strategies(WorkloadProfile::random_default(60.0), &c);
+        // Paper: 0.87 : 1.00 : 0.98 — static slightly below dynamic,
+        // hybrid between static and dynamic (within tolerance).
+        assert!((ratios[1] - 1.0).abs() < 1e-9);
+        assert!(
+            ratios[0] > 0.6 && ratios[0] < 1.05,
+            "static ratio {}",
+            ratios[0]
+        );
+        assert!(
+            ratios[2] > 0.7 && ratios[2] <= 1.15,
+            "hybrid ratio {}",
+            ratios[2]
+        );
+    }
+
+    #[test]
+    fn csv_export_has_all_samples() {
+        let r = simulate(
+            WorkloadProfile::periodic_default(50.0),
+            StrategyKind::Dynamic,
+            &SimConfig { duration: 100.0, ..SimConfig::default() },
+        );
+        let t = r.to_csv();
+        assert_eq!(t.rows.len(), 100);
+        assert_eq!(t.header, vec!["t", "arrival_rate", "queue", "cores"]);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let c = cfg();
+        let a = simulate(
+            WorkloadProfile::random_default(40.0),
+            StrategyKind::Hybrid,
+            &c,
+        );
+        let b = simulate(
+            WorkloadProfile::random_default(40.0),
+            StrategyKind::Hybrid,
+            &c,
+        );
+        assert_eq!(a.core_seconds, b.core_seconds);
+        assert_eq!(a.final_queue, b.final_queue);
+    }
+}

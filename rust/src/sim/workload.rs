@@ -1,0 +1,243 @@
+//! Workload profiles for the §IV-C simulation study: *periodic* with a
+//! constant data rate, *periodic with random spikes*, and a *random walk*
+//! with a known long-term average — the three profiles "observed in our
+//! applications".
+
+use crate::util::rng::Rng;
+
+/// Message arrival profile: rate (msg/s) as a function of time.
+#[derive(Debug, Clone)]
+pub enum WorkloadProfile {
+    /// Bursts of `rate` msg/s for `burst` seconds every `period` seconds,
+    /// silent in between (paper: period 5 min, data duration 60 s).
+    Periodic { rate: f64, period: f64, burst: f64 },
+    /// Periodic plus random spikes: with probability `spike_prob` per
+    /// second during a burst a surge starts, multiplying the rate by
+    /// `spike_mult` for `spike_len` seconds; surges can also fire in the
+    /// gap with probability `spike_prob / 4`.
+    PeriodicSpikes {
+        rate: f64,
+        period: f64,
+        burst: f64,
+        spike_prob: f64,
+        spike_mult: f64,
+        spike_len: f64,
+    },
+    /// One-dimensional random walk around `mean` with per-step standard
+    /// deviation `step`, clamped to `[min, max]` — slow variation with a
+    /// known long-term average.
+    RandomWalk { mean: f64, step: f64, min: f64, max: f64 },
+}
+
+impl WorkloadProfile {
+    /// Paper defaults: 5-minute period, 60-second data burst.
+    pub fn periodic_default(rate: f64) -> WorkloadProfile {
+        WorkloadProfile::Periodic { rate, period: 300.0, burst: 60.0 }
+    }
+
+    pub fn spikes_default(rate: f64) -> WorkloadProfile {
+        WorkloadProfile::PeriodicSpikes {
+            rate,
+            period: 300.0,
+            burst: 60.0,
+            spike_prob: 0.03,
+            spike_mult: 2.0,
+            spike_len: 10.0,
+        }
+    }
+
+    pub fn random_default(mean: f64) -> WorkloadProfile {
+        WorkloadProfile::RandomWalk {
+            mean,
+            step: mean * 0.08,
+            min: 0.0,
+            max: mean * 3.0,
+        }
+    }
+
+    /// Profile name for CSV/labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadProfile::Periodic { .. } => "periodic",
+            WorkloadProfile::PeriodicSpikes { .. } => "spikes",
+            WorkloadProfile::RandomWalk { .. } => "random",
+        }
+    }
+
+    /// Long-term average rate — what the static "oracle" and hybrid hint
+    /// are derived from.
+    pub fn long_term_average(&self) -> f64 {
+        match self {
+            WorkloadProfile::Periodic { rate, period, burst } => {
+                rate * burst / period
+            }
+            WorkloadProfile::PeriodicSpikes {
+                rate,
+                period,
+                burst,
+                ..
+            } => rate * burst / period,
+            WorkloadProfile::RandomWalk { mean, .. } => *mean,
+        }
+    }
+
+    /// Peak nominal rate during a burst (no spikes).
+    pub fn burst_rate(&self) -> f64 {
+        match self {
+            WorkloadProfile::Periodic { rate, .. }
+            | WorkloadProfile::PeriodicSpikes { rate, .. } => *rate,
+            WorkloadProfile::RandomWalk { mean, .. } => *mean,
+        }
+    }
+
+    /// Period/burst parameters where meaningful.
+    pub fn period_burst(&self) -> Option<(f64, f64)> {
+        match self {
+            WorkloadProfile::Periodic { period, burst, .. }
+            | WorkloadProfile::PeriodicSpikes { period, burst, .. } => {
+                Some((*period, *burst))
+            }
+            WorkloadProfile::RandomWalk { .. } => None,
+        }
+    }
+}
+
+/// Stateful arrival generator stepping a profile through time.
+pub struct WorkloadGen {
+    profile: WorkloadProfile,
+    rng: Rng,
+    /// Random-walk current rate.
+    walk_rate: f64,
+    /// Spike surge active until this time.
+    spike_until: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(profile: WorkloadProfile, seed: u64) -> WorkloadGen {
+        let walk_rate = profile.long_term_average();
+        WorkloadGen {
+            profile,
+            rng: Rng::new(seed),
+            walk_rate,
+            spike_until: -1.0,
+        }
+    }
+
+    /// Number of messages arriving in `[t, t+dt)`.
+    pub fn arrivals(&mut self, t: f64, dt: f64) -> f64 {
+        let rate = self.rate_at(t, dt);
+        if rate <= 0.0 {
+            return 0.0;
+        }
+        // Poisson arrivals at the instantaneous rate.
+        self.rng.poisson(rate * dt) as f64
+    }
+
+    /// Instantaneous rate (also advances random-walk state).
+    pub fn rate_at(&mut self, t: f64, dt: f64) -> f64 {
+        match &self.profile {
+            WorkloadProfile::Periodic { rate, period, burst } => {
+                let phase = t % period;
+                if phase < *burst {
+                    *rate
+                } else {
+                    0.0
+                }
+            }
+            WorkloadProfile::PeriodicSpikes {
+                rate,
+                period,
+                burst,
+                spike_prob,
+                spike_mult,
+                spike_len,
+            } => {
+                let phase = t % period;
+                let (base, p) = if phase < *burst {
+                    (*rate, *spike_prob)
+                } else {
+                    (0.0, *spike_prob / 4.0)
+                };
+                if t >= self.spike_until && self.rng.chance(p * dt) {
+                    // A surge starts: elevated rate for spike_len secs.
+                    self.spike_until = t + spike_len;
+                }
+                if t < self.spike_until {
+                    (base + rate * 0.2) * spike_mult
+                } else {
+                    base
+                }
+            }
+            WorkloadProfile::RandomWalk { mean, step, min, max } => {
+                // Mean-reverting walk so the long-term average holds.
+                let pull = 0.02 * (mean - self.walk_rate);
+                self.walk_rate += pull + self.rng.normal() * step * dt.sqrt();
+                self.walk_rate = self.walk_rate.clamp(*min, *max);
+                self.walk_rate
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_is_on_off() {
+        let mut g =
+            WorkloadGen::new(WorkloadProfile::periodic_default(100.0), 1);
+        assert_eq!(g.rate_at(10.0, 1.0), 100.0); // in burst
+        assert_eq!(g.rate_at(100.0, 1.0), 0.0); // in gap
+        assert_eq!(g.rate_at(310.0, 1.0), 100.0); // next period
+    }
+
+    #[test]
+    fn periodic_average_matches() {
+        let p = WorkloadProfile::periodic_default(100.0);
+        assert!((p.long_term_average() - 20.0).abs() < 1e-9);
+        let mut g = WorkloadGen::new(p, 2);
+        let total: f64 = (0..3000).map(|t| g.arrivals(t as f64, 1.0)).sum();
+        let avg = total / 3000.0;
+        assert!((avg - 20.0).abs() < 3.0, "avg={avg}");
+    }
+
+    #[test]
+    fn spikes_exceed_nominal_sometimes() {
+        let mut g =
+            WorkloadGen::new(WorkloadProfile::spikes_default(100.0), 3);
+        let mut spiked = false;
+        for t in 0..3000 {
+            if g.rate_at(t as f64, 1.0) > 150.0 {
+                spiked = true;
+                break;
+            }
+        }
+        assert!(spiked);
+    }
+
+    #[test]
+    fn random_walk_reverts_to_mean() {
+        let mut g =
+            WorkloadGen::new(WorkloadProfile::random_default(50.0), 4);
+        let rates: Vec<f64> =
+            (0..5000).map(|t| g.rate_at(t as f64, 1.0)).collect();
+        let avg = rates.iter().sum::<f64>() / rates.len() as f64;
+        assert!((avg - 50.0).abs() < 15.0, "avg={avg}");
+        assert!(rates.iter().all(|&r| (0.0..=150.0).contains(&r)));
+        // it actually varies
+        let min = rates.iter().cloned().fold(f64::MAX, f64::min);
+        let max = rates.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max - min > 10.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = WorkloadProfile::spikes_default(80.0);
+        let mut a = WorkloadGen::new(p.clone(), 9);
+        let mut b = WorkloadGen::new(p, 9);
+        for t in 0..500 {
+            assert_eq!(a.arrivals(t as f64, 1.0), b.arrivals(t as f64, 1.0));
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Tiny CSV reader/writer (RFC-4180 quoting) for simulator time-series
+//! output and the Smart Grid bulk meter archives.
+
+use std::io::{BufRead, Write};
+
+use crate::error::Result;
+
+/// Write one CSV record, quoting fields that need it.
+pub fn write_record<W: Write>(w: &mut W, fields: &[&str]) -> Result<()> {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            w.write_all(b",")?;
+        }
+        if f.contains(',') || f.contains('"') || f.contains('\n') {
+            w.write_all(b"\"")?;
+            w.write_all(f.replace('"', "\"\"").as_bytes())?;
+            w.write_all(b"\"")?;
+        } else {
+            w.write_all(f.as_bytes())?;
+        }
+    }
+    w.write_all(b"\n")?;
+    Ok(())
+}
+
+/// Parse one CSV line into fields (handles quoted fields with embedded
+/// commas/quotes; embedded newlines must already be joined by the caller).
+pub fn parse_line(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    fields.push(std::mem::take(&mut cur));
+                }
+                '\r' => {}
+                c => cur.push(c),
+            }
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
+/// Read all records from a reader, skipping blank lines.
+pub fn read_all<R: BufRead>(r: R) -> Result<Vec<Vec<String>>> {
+    let mut out = Vec::new();
+    for line in r.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(parse_line(&line));
+    }
+    Ok(out)
+}
+
+/// Convenience: a growable in-memory CSV table with a header row.
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        debug_assert_eq!(row.len(), self.header.len());
+        self.rows.push(row);
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut buf = Vec::new();
+        let hdr: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
+        write_record(&mut buf, &hdr).expect("vec write");
+        for row in &self.rows {
+            let fields: Vec<&str> = row.iter().map(|s| s.as_str()).collect();
+            write_record(&mut buf, &fields).expect("vec write");
+        }
+        String::from_utf8(buf).expect("csv is utf8")
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let mut buf = Vec::new();
+        write_record(&mut buf, &["a", "b", "c"]).unwrap();
+        let line = String::from_utf8(buf).unwrap();
+        assert_eq!(parse_line(line.trim_end()), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let mut buf = Vec::new();
+        write_record(&mut buf, &["a,b", "say \"hi\"", "plain"]).unwrap();
+        let line = String::from_utf8(buf).unwrap();
+        assert_eq!(
+            parse_line(line.trim_end()),
+            vec!["a,b", "say \"hi\"", "plain"]
+        );
+    }
+
+    #[test]
+    fn read_all_skips_blank() {
+        let data = "a,b\n\n1,2\r\n3,4\n";
+        let rows = read_all(std::io::Cursor::new(data)).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1], vec!["1", "2"]);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = CsvTable::new(&["t", "cores"]);
+        t.push(vec!["0.5".into(), "4".into()]);
+        t.push(vec!["1.0".into(), "6".into()]);
+        let text = t.to_csv();
+        let rows = read_all(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(rows[0], vec!["t", "cores"]);
+        assert_eq!(rows[2], vec!["1.0", "6"]);
+    }
+
+    #[test]
+    fn empty_fields() {
+        assert_eq!(parse_line("a,,c"), vec!["a", "", "c"]);
+        assert_eq!(parse_line(""), vec![""]);
+    }
+}

@@ -1,0 +1,426 @@
+//! Minimal HTTP/1.1 server + client over `std::net`.
+//!
+//! The paper's coordinator, manager, container and flake "expose REST web
+//! service endpoints for these management interactions" (§III).  This module
+//! is that substrate: a thread-per-connection server dispatching to a handler
+//! closure, and a blocking client for control calls.  Bodies are JSON (see
+//! [`crate::util::json`]).  Connections are not kept alive — control-plane
+//! traffic is low-rate by design.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::error::{FloeError, Result};
+
+/// Parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string, e.g. `/flake/pause`.
+    pub path: String,
+    /// Decoded query parameters.
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+
+    pub fn query_get(&self, key: &str) -> Option<&str> {
+        self.query.get(key).map(|s| s.as_str())
+    }
+}
+
+/// HTTP response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn ok_json(body: impl ToString) -> Response {
+        Response {
+            status: 200,
+            content_type: "application/json".into(),
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn ok_text(body: impl Into<String>) -> Response {
+        Response {
+            status: 200,
+            content_type: "text/plain".into(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    pub fn error(status: u16, msg: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain".into(),
+            body: msg.into().into_bytes(),
+        }
+    }
+
+    fn status_text(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            204 => "No Content",
+            400 => "Bad Request",
+            404 => "Not Found",
+            409 => "Conflict",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        }
+    }
+}
+
+/// A running HTTP server; dropping the handle does NOT stop it — call
+/// [`HttpServer::shutdown`].
+pub struct HttpServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind to `127.0.0.1:port` (0 picks a free port) and serve requests on a
+    /// background thread via `handler`.
+    pub fn start<F>(port: u16, handler: F) -> Result<HttpServer>
+    where
+        F: Fn(&Request) -> Response + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handler = Arc::new(handler);
+        let join = thread::Builder::new()
+            .name(format!("http-{}", addr.port()))
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = Arc::clone(&handler);
+                            thread::spawn(move || {
+                                let _ = serve_connection(stream, &*h);
+                            });
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn http thread");
+        Ok(HttpServer { addr, stop, join: Some(join) })
+    }
+
+    /// `host:port` this server is bound to.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    /// Stop accepting and join the accept loop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn serve_connection<F>(mut stream: TcpStream, handler: &F) -> Result<()>
+where
+    F: Fn(&Request) -> Response,
+{
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let req = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let resp = Response::error(400, format!("bad request: {e}"));
+            write_response(&mut stream, &resp)?;
+            return Ok(());
+        }
+    };
+    let resp = handler(&req);
+    write_response(&mut stream, &resp)
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| FloeError::Parse("http: empty request line".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| FloeError::Parse("http: missing target".into()))?
+        .to_string();
+    let (path, query) = split_target(&target);
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(
+                k.trim().to_ascii_lowercase(),
+                v.trim().to_string(),
+            );
+        }
+    }
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(Request { method, path, query, headers, body })
+}
+
+fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
+    match target.split_once('?') {
+        None => (target.to_string(), BTreeMap::new()),
+        Some((p, q)) => {
+            let mut query = BTreeMap::new();
+            for pair in q.split('&') {
+                if pair.is_empty() {
+                    continue;
+                }
+                let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+                query.insert(url_decode(k), url_decode(v));
+            }
+            (p.to_string(), query)
+        }
+    }
+}
+
+fn url_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() + 1 && i + 2 < bytes.len() + 1 => {
+                let hex = std::str::from_utf8(&bytes[i + 1..(i + 3).min(bytes.len())])
+                    .ok()
+                    .and_then(|h| u8::from_str_radix(h, 16).ok());
+                match hex {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        resp.status_text(),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Blocking HTTP client call. `addr` is `host:port`; returns (status, body).
+pub fn http_call(
+    method: &str,
+    addr: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            FloeError::Parse(format!("http: bad status line {status_line:?}"))
+        })?;
+    let mut len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                len = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok((status, body))
+}
+
+/// GET helper returning the body as a string; errors on non-2xx.
+pub fn http_get(addr: &str, path: &str) -> Result<String> {
+    let (status, body) = http_call("GET", addr, path, &[])?;
+    if !(200..300).contains(&status) {
+        return Err(FloeError::Control(format!(
+            "GET {path} -> {status}: {}",
+            String::from_utf8_lossy(&body)
+        )));
+    }
+    Ok(String::from_utf8_lossy(&body).into_owned())
+}
+
+/// POST helper with a JSON/text body; errors on non-2xx.
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
+    let (status, resp) = http_call("POST", addr, path, body.as_bytes())?;
+    if !(200..300).contains(&status) {
+        return Err(FloeError::Control(format!(
+            "POST {path} -> {status}: {}",
+            String::from_utf8_lossy(&resp)
+        )));
+    }
+    Ok(String::from_utf8_lossy(&resp).into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_roundtrip() {
+        let mut srv = HttpServer::start(0, |req| {
+            assert_eq!(req.method, "GET");
+            Response::ok_text(format!("path={}", req.path))
+        })
+        .unwrap();
+        let body = http_get(&srv.addr(), "/status").unwrap();
+        assert_eq!(body, "path=/status");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn post_with_body_and_query() {
+        let mut srv = HttpServer::start(0, |req| {
+            let who = req.query_get("who").unwrap_or("?").to_string();
+            Response::ok_json(format!(
+                "{{\"who\":\"{who}\",\"len\":{}}}",
+                req.body.len()
+            ))
+        })
+        .unwrap();
+        let body =
+            http_post(&srv.addr(), "/hello?who=floe%20x&v=1", "0123456789")
+                .unwrap();
+        assert!(body.contains("\"who\":\"floe x\""), "{body}");
+        assert!(body.contains("\"len\":10"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn non_2xx_is_error() {
+        let mut srv = HttpServer::start(0, |_req| {
+            Response::error(404, "nope")
+        })
+        .unwrap();
+        let err = http_get(&srv.addr(), "/missing").unwrap_err();
+        assert!(err.to_string().contains("404"), "{err}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests() {
+        let mut srv = HttpServer::start(0, |req| {
+            Response::ok_text(req.path.clone())
+        })
+        .unwrap();
+        let addr = srv.addr();
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let a = addr.clone();
+                std::thread::spawn(move || {
+                    http_get(&a, &format!("/r{i}")).unwrap()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), format!("/r{i}"));
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn url_decode_cases() {
+        assert_eq!(url_decode("a%20b+c"), "a b c");
+        assert_eq!(url_decode("plain"), "plain");
+        assert_eq!(url_decode("bad%zz"), "bad%zz".replace("%zz", "%zz"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal env-filtered logger for the `log` facade.
+//!
+//! Level comes from `FLOE_LOG` (`error|warn|info|debug|trace`, default
+//! `info`).  Output goes to stderr with a monotonic timestamp, level and
+//! module path — enough to trace coordinator/flake interactions.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct FloeLogger {
+    start: Instant,
+    max: Level,
+}
+
+impl Log for FloeLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:10.4}s {:5} {}] {}",
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<FloeLogger> = OnceLock::new();
+
+/// Parse a level name, defaulting to `info`.
+fn parse_level(s: &str) -> Level {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
+    }
+}
+
+/// Install the logger (idempotent).  Honors `FLOE_LOG`.
+pub fn init() {
+    let level = std::env::var("FLOE_LOG")
+        .map(|v| parse_level(&v))
+        .unwrap_or(Level::Info);
+    let logger = LOGGER.get_or_init(|| FloeLogger {
+        start: Instant::now(),
+        max: level,
+    });
+    // Err only if a logger is already set — fine for tests calling init twice.
+    let _ = log::set_logger(logger);
+    log::set_max_level(LevelFilter::max());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("error"), Level::Error);
+        assert_eq!(parse_level("WARN"), Level::Warn);
+        assert_eq!(parse_level("debug"), Level::Debug);
+        assert_eq!(parse_level("trace"), Level::Trace);
+        assert_eq!(parse_level("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch (the offline vendored crate set has
+//! no serde/tokio/hyper/rand): PRNG, logging, JSON, XML, HTTP/1.1, CSV,
+//! clocks and a mini property-testing harness.
+
+pub mod csv;
+pub mod http;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod testkit;
+pub mod time;
+pub mod xml;

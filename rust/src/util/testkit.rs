@@ -1,0 +1,169 @@
+//! Mini property-testing harness (no proptest offline): deterministic
+//! generators over a seeded [`Rng`](crate::util::rng::Rng), many cases per
+//! property, and a failure report that names the seed so any counterexample
+//! is replayable.
+//!
+//! ```no_run
+//! use floe::util::testkit::{run_cases, Gen};
+//! run_cases("sorted stays sorted", 100, |g| {
+//!     let mut v = g.vec_of(0..50, |g| g.int(0, 1000));
+//!     v.sort();
+//!     assert!(v.windows(2).all(|w| w[0] <= w[1]));
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Value generator handle passed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Seed for this case, for the failure report.
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn index(&mut self, n: usize) -> usize {
+        self.rng.range(0, n.max(1))
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vector with a length drawn from `len` and elements from `f`.
+    pub fn vec_of<T>(
+        &mut self,
+        len: std::ops::Range<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.rng.range(len.start, len.end.max(len.start + 1));
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// ASCII alphanumeric string of length in `len`.
+    pub fn string(&mut self, len: std::ops::Range<usize>) -> String {
+        const CHARS: &[u8] =
+            b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789 _-";
+        let n = self.rng.range(len.start, len.end.max(len.start + 1));
+        (0..n)
+            .map(|_| CHARS[self.rng.range(0, CHARS.len())] as char)
+            .collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.pick(items)
+    }
+
+    /// Access the underlying RNG for distributions testkit doesn't wrap.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` instances of a property.  Panics (re-raising the case's
+/// panic) with the offending seed in the message on first failure.
+pub fn run_cases(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    run_cases_seeded(name, 0xF10E_BA5E, cases, &mut prop);
+}
+
+/// As [`run_cases`] with an explicit base seed (use the seed printed by a
+/// failure to replay just that case).
+pub fn run_cases_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: u64,
+    prop: &mut impl FnMut(&mut Gen),
+) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut g)),
+        );
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_cases("reverse twice is identity", 50, |g| {
+            let v = g.vec_of(0..20, |g| g.int(-100, 100));
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            assert_eq!(v, r);
+        });
+    }
+
+    #[test]
+    fn reports_seed_on_failure() {
+        let result = std::panic::catch_unwind(|| {
+            run_cases("always fails", 3, |_g| {
+                panic!("boom");
+            });
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        run_cases("bounds", 200, |g| {
+            let i = g.int(-5, 5);
+            assert!((-5..=5).contains(&i));
+            let f = g.f64(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+            let s = g.string(1..10);
+            assert!(!s.is_empty() && s.len() < 10);
+            let v = g.vec_of(2..4, |g| g.bool(0.5));
+            assert!(v.len() >= 2 && v.len() < 4);
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<i64> = Vec::new();
+        run_cases_seeded("collect", 10, 5, &mut |g| {
+            first.push(g.int(0, 1_000_000));
+        });
+        let mut second: Vec<i64> = Vec::new();
+        run_cases_seeded("collect", 10, 5, &mut |g| {
+            second.push(g.int(0, 1_000_000));
+        });
+        assert_eq!(first, second);
+    }
+}

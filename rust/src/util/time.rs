@@ -1,0 +1,112 @@
+//! Clocks: a monotonic wall clock for live execution and a shared virtual
+//! clock for the discrete-event simulator, behind one trait so the
+//! adaptation strategies run unchanged in both worlds.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Time source measured in seconds since an arbitrary epoch.
+pub trait Clock: Send + Sync {
+    /// Current time in seconds.
+    fn now(&self) -> f64;
+}
+
+/// Monotonic wall clock.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Virtual clock advanced explicitly by the simulator.  Stores microseconds
+/// in an atomic so readers never block the event loop.
+#[derive(Clone)]
+pub struct VirtualClock {
+    micros: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { micros: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Advance to an absolute time (seconds). Time never moves backwards.
+    pub fn advance_to(&self, t: f64) {
+        let target = (t.max(0.0) * 1e6) as u64;
+        self.micros.fetch_max(target, Ordering::SeqCst);
+    }
+
+    /// Advance by a delta (seconds).
+    pub fn advance_by(&self, dt: f64) {
+        let delta = (dt.max(0.0) * 1e6) as u64;
+        self.micros.fetch_add(delta, Ordering::SeqCst);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.micros.load(Ordering::SeqCst) as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_monotonic() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_by(0.25);
+        assert!((c.now() - 1.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_clock_never_goes_back() {
+        let c = VirtualClock::new();
+        c.advance_to(10.0);
+        c.advance_to(5.0);
+        assert!((c.now() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_clock_shared_between_clones() {
+        let c = VirtualClock::new();
+        let c2 = c.clone();
+        c.advance_to(3.0);
+        assert!((c2.now() - 3.0).abs() < 1e-9);
+    }
+}

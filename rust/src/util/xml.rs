@@ -1,0 +1,401 @@
+//! Minimal XML parser for Floe graph descriptions (§III: "applications are
+//! composed as a directed graph, described in XML") and NOAA-style weather
+//! documents in the Smart Grid pipeline.
+//!
+//! Supports elements, attributes (single/double quoted), text content, the
+//! five predefined entities, numeric character references, comments, CDATA,
+//! processing instructions and the XML declaration.  No DTDs or namespaces —
+//! our documents don't use them.
+
+use crate::error::{FloeError, Result};
+
+/// An XML element node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct XmlNode {
+    pub name: String,
+    pub attrs: Vec<(String, String)>,
+    pub children: Vec<XmlNode>,
+    /// Concatenated text content directly under this element (trimmed).
+    pub text: String,
+}
+
+impl XmlNode {
+    /// Attribute lookup.
+    pub fn attr(&self, name: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Attribute lookup with a graph-level error on absence.
+    pub fn req_attr(&self, name: &str) -> Result<&str> {
+        self.attr(name).ok_or_else(|| {
+            FloeError::Parse(format!(
+                "xml: <{}> missing required attribute '{name}'",
+                self.name
+            ))
+        })
+    }
+
+    /// First child element with the given tag name.
+    pub fn child(&self, name: &str) -> Option<&XmlNode> {
+        self.children.iter().find(|c| c.name == name)
+    }
+
+    /// All child elements with the given tag name.
+    pub fn children_named<'a>(
+        &'a self,
+        name: &'a str,
+    ) -> impl Iterator<Item = &'a XmlNode> {
+        self.children.iter().filter(move |c| c.name == name)
+    }
+
+    /// Parse a document, returning the root element.
+    pub fn parse(text: &str) -> Result<XmlNode> {
+        let mut p = XmlParser { b: text.as_bytes(), pos: 0 };
+        p.skip_misc();
+        let root = p.element()?;
+        p.skip_misc();
+        if p.pos != p.b.len() {
+            return Err(p.err("trailing content after root element"));
+        }
+        Ok(root)
+    }
+
+    /// Serialize back to XML text (used by graph round-trip tests).
+    pub fn to_xml(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        out.push('<');
+        out.push_str(&self.name);
+        for (k, v) in &self.attrs {
+            out.push(' ');
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape(v));
+            out.push('"');
+        }
+        if self.children.is_empty() && self.text.is_empty() {
+            out.push_str("/>");
+            return;
+        }
+        out.push('>');
+        out.push_str(&escape(&self.text));
+        for c in &self.children {
+            c.write(out);
+        }
+        out.push_str("</");
+        out.push_str(&self.name);
+        out.push('>');
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('&', "&amp;")
+        .replace('<', "&lt;")
+        .replace('>', "&gt;")
+        .replace('"', "&quot;")
+}
+
+struct XmlParser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> XmlParser<'a> {
+    fn err(&self, msg: &str) -> FloeError {
+        FloeError::Parse(format!("xml: {msg} at byte {}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn starts_with(&self, s: &str) -> bool {
+        self.b[self.pos..].starts_with(s.as_bytes())
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    /// Skip whitespace, comments, PIs and the XML declaration.
+    fn skip_misc(&mut self) {
+        loop {
+            self.skip_ws();
+            if self.starts_with("<!--") {
+                match find(self.b, self.pos + 4, "-->") {
+                    Some(end) => self.pos = end + 3,
+                    None => {
+                        self.pos = self.b.len();
+                        return;
+                    }
+                }
+            } else if self.starts_with("<?") {
+                match find(self.b, self.pos + 2, "?>") {
+                    Some(end) => self.pos = end + 2,
+                    None => {
+                        self.pos = self.b.len();
+                        return;
+                    }
+                }
+            } else if self.starts_with("<!DOCTYPE") {
+                while let Some(c) = self.peek() {
+                    self.pos += 1;
+                    if c == b'>' {
+                        break;
+                    }
+                }
+            } else {
+                return;
+            }
+        }
+    }
+
+    fn name(&mut self) -> Result<String> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            let ch = c as char;
+            if ch.is_alphanumeric() || matches!(ch, '_' | '-' | '.' | ':') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if self.pos == start {
+            return Err(self.err("expected name"));
+        }
+        Ok(String::from_utf8_lossy(&self.b[start..self.pos]).into_owned())
+    }
+
+    fn element(&mut self) -> Result<XmlNode> {
+        if self.peek() != Some(b'<') {
+            return Err(self.err("expected '<'"));
+        }
+        self.pos += 1;
+        let name = self.name()?;
+        let mut node = XmlNode {
+            name,
+            attrs: Vec::new(),
+            children: Vec::new(),
+            text: String::new(),
+        };
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'/') => {
+                    self.pos += 1;
+                    if self.peek() != Some(b'>') {
+                        return Err(self.err("expected '>' after '/'"));
+                    }
+                    self.pos += 1;
+                    return Ok(node); // self-closing
+                }
+                Some(b'>') => {
+                    self.pos += 1;
+                    break;
+                }
+                Some(_) => {
+                    let k = self.name()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b'=') {
+                        return Err(self.err("expected '=' in attribute"));
+                    }
+                    self.pos += 1;
+                    self.skip_ws();
+                    let quote = self
+                        .peek()
+                        .filter(|&q| q == b'"' || q == b'\'')
+                        .ok_or_else(|| self.err("expected quoted value"))?;
+                    self.pos += 1;
+                    let start = self.pos;
+                    while self.peek() != Some(quote) {
+                        if self.peek().is_none() {
+                            return Err(self.err("unterminated attribute"));
+                        }
+                        self.pos += 1;
+                    }
+                    let raw = String::from_utf8_lossy(
+                        &self.b[start..self.pos],
+                    )
+                    .into_owned();
+                    self.pos += 1;
+                    node.attrs.push((k, unescape(&raw)?));
+                }
+                None => return Err(self.err("unterminated start tag")),
+            }
+        }
+        // Content: text, children, comments, CDATA until end tag.
+        loop {
+            if self.starts_with("</") {
+                self.pos += 2;
+                let end = self.name()?;
+                if end != node.name {
+                    return Err(self.err(&format!(
+                        "mismatched end tag </{end}> for <{}>",
+                        node.name
+                    )));
+                }
+                self.skip_ws();
+                if self.peek() != Some(b'>') {
+                    return Err(self.err("expected '>' in end tag"));
+                }
+                self.pos += 1;
+                node.text = node.text.trim().to_string();
+                return Ok(node);
+            } else if self.starts_with("<!--") {
+                let end = find(self.b, self.pos + 4, "-->")
+                    .ok_or_else(|| self.err("unterminated comment"))?;
+                self.pos = end + 3;
+            } else if self.starts_with("<![CDATA[") {
+                let end = find(self.b, self.pos + 9, "]]>")
+                    .ok_or_else(|| self.err("unterminated CDATA"))?;
+                node.text.push_str(&String::from_utf8_lossy(
+                    &self.b[self.pos + 9..end],
+                ));
+                self.pos = end + 3;
+            } else if self.starts_with("<?") {
+                let end = find(self.b, self.pos + 2, "?>")
+                    .ok_or_else(|| self.err("unterminated PI"))?;
+                self.pos = end + 2;
+            } else if self.peek() == Some(b'<') {
+                node.children.push(self.element()?);
+            } else if self.peek().is_none() {
+                return Err(self.err(&format!(
+                    "unterminated element <{}>",
+                    node.name
+                )));
+            } else {
+                let start = self.pos;
+                while self.peek().is_some() && self.peek() != Some(b'<') {
+                    self.pos += 1;
+                }
+                let raw =
+                    String::from_utf8_lossy(&self.b[start..self.pos])
+                        .into_owned();
+                node.text.push_str(&unescape(&raw)?);
+            }
+        }
+    }
+}
+
+fn find(haystack: &[u8], from: usize, needle: &str) -> Option<usize> {
+    let n = needle.as_bytes();
+    if from >= haystack.len() {
+        return None;
+    }
+    haystack[from..]
+        .windows(n.len())
+        .position(|w| w == n)
+        .map(|i| from + i)
+}
+
+fn unescape(s: &str) -> Result<String> {
+    if !s.contains('&') {
+        return Ok(s.to_string());
+    }
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(i) = rest.find('&') {
+        out.push_str(&rest[..i]);
+        rest = &rest[i..];
+        let semi = rest.find(';').ok_or_else(|| {
+            FloeError::Parse("xml: unterminated entity".into())
+        })?;
+        let ent = &rest[1..semi];
+        match ent {
+            "amp" => out.push('&'),
+            "lt" => out.push('<'),
+            "gt" => out.push('>'),
+            "quot" => out.push('"'),
+            "apos" => out.push('\''),
+            _ if ent.starts_with("#x") || ent.starts_with("#X") => {
+                let code = u32::from_str_radix(&ent[2..], 16).map_err(
+                    |_| FloeError::Parse(format!("xml: bad entity &{ent};")),
+                )?;
+                out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+            }
+            _ if ent.starts_with('#') => {
+                let code = ent[1..].parse::<u32>().map_err(|_| {
+                    FloeError::Parse(format!("xml: bad entity &{ent};"))
+                })?;
+                out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+            }
+            _ => {
+                return Err(FloeError::Parse(format!(
+                    "xml: unknown entity &{ent};"
+                )))
+            }
+        }
+        rest = &rest[semi + 1..];
+    }
+    out.push_str(rest);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_simple() {
+        let n = XmlNode::parse("<a x=\"1\"><b>hi</b><b>yo</b></a>").unwrap();
+        assert_eq!(n.name, "a");
+        assert_eq!(n.attr("x"), Some("1"));
+        assert_eq!(n.children_named("b").count(), 2);
+        assert_eq!(n.children[0].text, "hi");
+    }
+
+    #[test]
+    fn parse_self_closing_and_decl() {
+        let n = XmlNode::parse(
+            "<?xml version=\"1.0\"?>\n<!-- doc -->\n<g><p id='x'/></g>",
+        )
+        .unwrap();
+        assert_eq!(n.child("p").unwrap().attr("id"), Some("x"));
+    }
+
+    #[test]
+    fn entities_and_cdata() {
+        let n = XmlNode::parse(
+            "<t a=\"&lt;&amp;&gt;\">x &#65;<![CDATA[<raw>]]></t>",
+        )
+        .unwrap();
+        assert_eq!(n.attr("a"), Some("<&>"));
+        assert_eq!(n.text, "x A<raw>");
+    }
+
+    #[test]
+    fn mismatched_tags_rejected() {
+        assert!(XmlNode::parse("<a></b>").is_err());
+        assert!(XmlNode::parse("<a>").is_err());
+        assert!(XmlNode::parse("<a></a><b/>").is_err());
+        assert!(XmlNode::parse("<a x=1></a>").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = "<graph name=\"g\"><pellet id=\"p1\" class=\"C\"/><edge from=\"p1\" to=\"p2\"/></graph>";
+        let n = XmlNode::parse(src).unwrap();
+        let n2 = XmlNode::parse(&n.to_xml()).unwrap();
+        assert_eq!(n, n2);
+    }
+
+    #[test]
+    fn noaa_style_document() {
+        // Shape used by apps::smartgrid::NoaaXmlSource.
+        let doc = "<current_observation><temp_f>71.2</temp_f>\
+                   <wind_mph>4.5</wind_mph><station>KLAX</station>\
+                   </current_observation>";
+        let n = XmlNode::parse(doc).unwrap();
+        assert_eq!(n.child("temp_f").unwrap().text, "71.2");
+        assert_eq!(n.child("station").unwrap().text, "KLAX");
+    }
+}

@@ -1,0 +1,175 @@
+//! E9 — BSP superstep gating (§II-A, Fig. 1 P10): s workers in a full
+//! mesh with a manager pellet that gates supersteps.  Data ("peers")
+//! messages are only produced when the manager's control ("tick") message
+//! arrives, and the manager only ticks when every worker reported done —
+//! so no worker can enter superstep k+1 before all workers finished k.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::error::Result;
+use floe::graph::{patterns, GraphBuilder};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::Message;
+use floe::pellet::{Pellet, PelletContext, PelletRegistry, PortIo};
+
+const WORKERS: usize = 3;
+const SUPERSTEPS: usize = 4;
+
+type EventLog = Arc<Mutex<Vec<(String, usize, &'static str)>>>;
+
+struct BspWorker {
+    log: EventLog,
+    superstep: usize,
+}
+
+impl Pellet for BspWorker {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        match input.port() {
+            Some("tick") => {
+                let k = self.superstep;
+                self.log.lock().unwrap().push((
+                    ctx.pellet_id.clone(),
+                    k,
+                    "start",
+                ));
+                // Exchange: send one value to the mesh (key-hash routed by
+                // own id, as a Pregel vertex would route by vertex id).
+                ctx.emit(
+                    "peers",
+                    Message::text(format!("v{k}"))
+                        .with_key(ctx.pellet_id.clone()),
+                );
+                ctx.emit("done", Message::text(format!("{k}")));
+                self.superstep += 1;
+            }
+            Some("peers") => {
+                ctx.state().update_num("received", |c| c + 1.0);
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+struct BspManager {
+    done_count: usize,
+    superstep: usize,
+}
+
+impl Pellet for BspManager {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        for _m in input.messages() {
+            self.done_count += 1;
+            if self.done_count == WORKERS {
+                self.done_count = 0;
+                self.superstep += 1;
+                ctx.state().update_num("supersteps", |_| self.superstep as f64);
+                if self.superstep <= SUPERSTEPS {
+                    // Synchronization barrier passed: broadcast the next
+                    // superstep's control message.
+                    ctx.emit("tick", Message::text(format!("s{}", self.superstep)));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn launch() -> (floe::coordinator::RunningDataflow, EventLog, patterns::BspIds)
+{
+    let cloud = SimulatedCloud::new(256, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let log: EventLog = Arc::new(Mutex::new(Vec::new()));
+    let l2 = Arc::clone(&log);
+    registry.register("test.BspWorker", move || {
+        Box::new(BspWorker { log: Arc::clone(&l2), superstep: 0 })
+    });
+    registry.register("test.BspManager", || {
+        Box::new(BspManager { done_count: 0, superstep: 0 })
+    });
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+    let mut g = GraphBuilder::new("bsp");
+    let ids = patterns::bsp(&mut g, "t", "test.BspWorker", "test.BspManager", WORKERS);
+    // Workers must be single-instance so their superstep counter is
+    // coherent.
+    let mut graph = g.build().unwrap();
+    for w in &ids.workers {
+        graph.pellet_mut(w).unwrap().sequential = true;
+    }
+    let run = coord.launch(graph, LaunchOptions::default()).unwrap();
+    (run, log, ids)
+}
+
+#[test]
+fn supersteps_are_gated_and_complete() {
+    let (run, log, ids) = launch();
+    // Kick off: pretend superstep "-1" completed by sending one done per
+    // worker to the manager.
+    for _ in 0..WORKERS {
+        run.inject(&ids.manager, "done", Message::text("boot")).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(15)));
+
+    let events = log.lock().unwrap().clone();
+    // Every worker ran exactly SUPERSTEPS supersteps.
+    for w in &ids.workers {
+        let count = events
+            .iter()
+            .filter(|(id, _, e)| id == w && *e == "start")
+            .count();
+        assert_eq!(count, SUPERSTEPS, "worker {w}: {events:?}");
+    }
+    // Gating: all starts of superstep k precede any start of k+1.
+    for k in 0..SUPERSTEPS - 1 {
+        let last_k = events
+            .iter()
+            .rposition(|(_, s, e)| *s == k && *e == "start")
+            .unwrap();
+        let first_k1 = events
+            .iter()
+            .position(|(_, s, e)| *s == k + 1 && *e == "start")
+            .unwrap();
+        assert!(
+            last_k < first_k1,
+            "superstep {k} not fully done before {} began",
+            k + 1
+        );
+    }
+    // Manager saw every barrier.
+    let mgr_steps = run
+        .flake(&ids.manager)
+        .unwrap()
+        .state()
+        .get("supersteps")
+        .and_then(|j| j.as_f64())
+        .unwrap_or(0.0);
+    assert!(mgr_steps >= SUPERSTEPS as f64);
+    run.stop();
+}
+
+#[test]
+fn peer_messages_are_exchanged() {
+    let (run, _log, ids) = launch();
+    for _ in 0..WORKERS {
+        run.inject(&ids.manager, "done", Message::text("boot")).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(15)));
+    // Each worker sends 1 peer message per superstep; key-hash routing
+    // delivers every one of them to exactly one worker.
+    let total: f64 = ids
+        .workers
+        .iter()
+        .map(|w| {
+            run.flake(w)
+                .unwrap()
+                .state()
+                .get("received")
+                .and_then(|j| j.as_f64())
+                .unwrap_or(0.0)
+        })
+        .sum();
+    assert_eq!(total, (WORKERS * SUPERSTEPS) as f64);
+    run.stop();
+}

@@ -1,0 +1,106 @@
+//! Control-plane integration: the coordinator and container REST
+//! endpoints (§III) drive a live dataflow over HTTP — stats, injection,
+//! dynamic update, pause/resume, core regrant.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use floe::coordinator::{Coordinator, CoordinatorServer, LaunchOptions};
+use floe::graph::{GraphBuilder, SplitMode};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::pellet::builtins::CollectSink;
+use floe::pellet::PelletRegistry;
+use floe::util::http::{http_get, http_post};
+use floe::util::json::Json;
+
+fn launch() -> (
+    Arc<floe::coordinator::RunningDataflow>,
+    CoordinatorServer,
+    Arc<Mutex<Vec<floe::message::Message>>>,
+) {
+    let cloud = SimulatedCloud::new(128, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let collected = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    registry.register("test.Collect", move || {
+        Box::new(CollectSink { collected: Arc::clone(&c2) })
+    });
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+    let mut g = GraphBuilder::new("ctl");
+    g.pellet("up", "floe.builtin.Uppercase")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("sink", "test.Collect").in_port("in");
+    g.edge("up", "out", "sink", "in");
+    let run = Arc::new(
+        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap(),
+    );
+    let server = CoordinatorServer::start(Arc::clone(&run), 0).unwrap();
+    (run, server, collected)
+}
+
+#[test]
+fn graph_and_stats_endpoints() {
+    let (run, mut server, _c) = launch();
+    let addr = server.addr();
+    let xml = http_get(&addr, "/graph").unwrap();
+    assert!(xml.contains("<floe name=\"ctl\">"), "{xml}");
+    assert!(xml.contains("floe.builtin.Uppercase"));
+
+    let stats = Json::parse(&http_get(&addr, "/stats").unwrap()).unwrap();
+    assert_eq!(stats.get("graph").unwrap().as_str(), Some("ctl"));
+    let pellets = stats.get("pellets").unwrap().as_arr().unwrap();
+    assert_eq!(pellets.len(), 2);
+    assert!(pellets
+        .iter()
+        .all(|p| p.get("version").unwrap().as_f64() == Some(1.0)));
+    server.shutdown();
+    run.stop();
+}
+
+#[test]
+fn inject_and_update_over_http() {
+    let (run, mut server, collected) = launch();
+    let addr = server.addr();
+    for i in 0..10 {
+        http_post(&addr, "/inject/up/in", &format!("msg{i}")).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(10)));
+    assert_eq!(collected.lock().unwrap().len(), 10);
+
+    // Dynamic update over REST: Uppercase -> Identity.
+    let resp = http_post(
+        &addr,
+        "/update/up?class=floe.builtin.Identity&mode=sync",
+        "",
+    )
+    .unwrap();
+    assert!(resp.contains("\"version\":2"), "{resp}");
+    http_post(&addr, "/inject/up/in", "after").unwrap();
+    assert!(run.drain(Duration::from_secs(10)));
+    let got = collected.lock().unwrap();
+    assert_eq!(got.last().unwrap().as_text(), Some("after")); // not uppercased
+    drop(got);
+
+    // Errors surface as HTTP errors.
+    assert!(http_post(&addr, "/inject/ghost/in", "x").is_err());
+    assert!(http_post(&addr, "/update/up?class=no.Such", "").is_err());
+    assert!(http_get(&addr, "/bogus").is_err());
+    server.shutdown();
+    run.stop();
+}
+
+#[test]
+fn pause_resume_and_cores_over_http() {
+    let (run, mut server, _c) = launch();
+    let addr = server.addr();
+    http_post(&addr, "/pause/up", "").unwrap();
+    assert!(run.flake("up").unwrap().is_paused());
+    http_post(&addr, "/resume/up", "").unwrap();
+    assert!(!run.flake("up").unwrap().is_paused());
+    http_post(&addr, "/cores/up?n=3", "").unwrap();
+    assert_eq!(run.flake("up").unwrap().cores(), 3);
+    assert!(http_post(&addr, "/cores/up", "").is_err()); // missing n
+    server.shutdown();
+    run.stop();
+}

@@ -1,0 +1,281 @@
+//! E7 — dynamic task update (§II-B): in-place pellet swap under continuous
+//! load, synchronous and asynchronous, with zero message loss, retained
+//! state, update landmarks, coordinated sub-graph updates and the
+//! cascading wave update.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use floe::coordinator::{Coordinator, LaunchOptions, RunningDataflow};
+use floe::error::Result;
+use floe::graph::{GraphBuilder, SplitMode};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::{Landmark, Message};
+use floe::pellet::builtins::CollectSink;
+use floe::pellet::{Pellet, PelletContext, PelletRegistry, PortIo};
+
+/// Tags each message with the logic version that processed it.
+struct Tagger {
+    tag: &'static str,
+}
+
+impl Pellet for Tagger {
+    fn compute(&mut self, input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        for m in input.messages() {
+            if m.is_landmark() {
+                ctx.emit("out", m.clone());
+                continue;
+            }
+            if let Some(t) = m.as_text() {
+                // Stateful counter survives updates.
+                ctx.state().update_num("processed", |c| c + 1.0);
+                ctx.emit("out", Message::text(format!("{}:{t}", self.tag)));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn setup() -> (
+    Coordinator,
+    Arc<Mutex<Vec<Message>>>,
+) {
+    let cloud = SimulatedCloud::new(256, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    registry.register("test.V1", || Box::new(Tagger { tag: "v1" }));
+    registry.register("test.V2", || Box::new(Tagger { tag: "v2" }));
+    let collected = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    registry.register("test.Collect", move || {
+        Box::new(CollectSink { collected: Arc::clone(&c2) })
+    });
+    (Coordinator::new(ResourceManager::new(cloud), registry), collected)
+}
+
+fn launch(coord: &Coordinator) -> RunningDataflow {
+    let mut g = GraphBuilder::new("upd");
+    g.pellet("work", "test.V1")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .stateful();
+    g.pellet("sink", "test.Collect").in_port("in");
+    g.edge("work", "out", "sink", "in");
+    coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap()
+}
+
+/// Inject continuously from a background thread while the update happens.
+fn inject_background(
+    run: &Arc<RunningDataflow>,
+    n: usize,
+) -> std::thread::JoinHandle<()> {
+    let run = Arc::clone(run);
+    std::thread::spawn(move || {
+        for i in 0..n {
+            run.inject("work", "in", Message::text(format!("m{i}")))
+                .unwrap();
+            if i % 50 == 0 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    })
+}
+
+#[test]
+fn sync_update_no_loss_and_state_survives() {
+    let (coord, collected) = setup();
+    let run = Arc::new(launch(&coord));
+    let total = 3000;
+    let injector = inject_background(&run, total);
+    std::thread::sleep(Duration::from_millis(5));
+    let v = run.update_pellet("work", Some("test.V2"), true, true).unwrap();
+    assert_eq!(v, 2);
+    injector.join().unwrap();
+    assert!(run.drain(Duration::from_secs(15)));
+
+    let got = collected.lock().unwrap();
+    let data: Vec<&str> = got
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .map(|m| m.as_text().unwrap())
+        .collect();
+    // Zero loss.
+    assert_eq!(data.len(), total, "lost messages");
+    // Both versions ran, and an Update landmark reached the sink.
+    assert!(data.iter().any(|t| t.starts_with("v1:")));
+    assert!(data.iter().any(|t| t.starts_with("v2:")));
+    assert!(got.iter().any(|m| matches!(
+        m.landmark,
+        Some(Landmark::Update { version: 2 })
+    )));
+    drop(got);
+    // State object survived the swap: counter covers both versions.
+    let processed = run
+        .flake("work")
+        .unwrap()
+        .state()
+        .get("processed")
+        .and_then(|j| j.as_f64())
+        .unwrap();
+    assert_eq!(processed, total as f64);
+    run.stop();
+}
+
+#[test]
+fn async_update_zero_downtime_no_loss() {
+    let (coord, collected) = setup();
+    let run = Arc::new(launch(&coord));
+    let total = 3000;
+    let injector = inject_background(&run, total);
+    std::thread::sleep(Duration::from_millis(5));
+    // Asynchronous: no pause at all.
+    run.update_pellet("work", Some("test.V2"), false, false).unwrap();
+    injector.join().unwrap();
+    assert!(run.drain(Duration::from_secs(15)));
+    let got = collected.lock().unwrap();
+    let n = got.iter().filter(|m| !m.is_landmark()).count();
+    assert_eq!(n, total, "lost messages in async update");
+    run.stop();
+}
+
+#[test]
+fn update_requires_known_class() {
+    let (coord, _collected) = setup();
+    let run = launch(&coord);
+    assert!(run
+        .update_pellet("work", Some("test.NoSuch"), true, false)
+        .is_err());
+    assert!(run
+        .update_pellet("ghost", Some("test.V2"), true, false)
+        .is_err());
+    //
+
+    run.stop();
+}
+
+#[test]
+fn subgraph_update_is_coordinated() {
+    let (coord, collected) = setup();
+    // Two-stage graph: both stages updated together.
+    let mut g = GraphBuilder::new("sub");
+    g.pellet("a", "test.V1")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("b", "test.V1")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("sink", "test.Collect").in_port("in");
+    g.edge("a", "out", "b", "in");
+    g.edge("b", "out", "sink", "in");
+    let run =
+        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+    for i in 0..100 {
+        run.inject("a", "in", Message::text(format!("x{i}"))).unwrap();
+    }
+    run.drain(Duration::from_secs(10));
+    run.update_subgraph(
+        &[("a".into(), "test.V2".into()), ("b".into(), "test.V2".into())],
+        false,
+    )
+    .unwrap();
+    for i in 0..100 {
+        run.inject("a", "in", Message::text(format!("y{i}"))).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(10)));
+    let got = collected.lock().unwrap();
+    let texts: Vec<&str> = got
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .map(|m| m.as_text().unwrap())
+        .collect();
+    assert_eq!(texts.len(), 200);
+    // Before: v1:v1:x..; after: v2:v2:y..
+    assert!(texts.iter().any(|t| t.starts_with("v1:v1:x")));
+    assert!(texts.iter().any(|t| t.starts_with("v2:v2:y")));
+    // Coordinated cut: no y message processed by a mixed v1/v2 pipeline.
+    assert!(
+        !texts.iter().any(|t| t.starts_with("v1:v2:") || t.starts_with("v2:v1:")),
+        "mixed-version processing detected: {texts:?}"
+    );
+    assert_eq!(run.flake("a").unwrap().version(), 2);
+    assert_eq!(run.flake("b").unwrap().version(), 2);
+    run.stop();
+}
+
+#[test]
+fn wave_update_proceeds_upstream_first() {
+    let (coord, _collected) = setup();
+    let mut g = GraphBuilder::new("wave");
+    g.pellet("a", "test.V1")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("b", "test.V1")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("sink", "floe.builtin.CountSink").in_port("in").stateful();
+    g.edge("a", "out", "b", "in");
+    g.edge("b", "out", "sink", "in");
+    let run =
+        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+    let versions = run
+        .wave_update(&[
+            ("a".to_string(), "test.V2".to_string()),
+            ("b".to_string(), "test.V2".to_string()),
+        ])
+        .unwrap();
+    assert_eq!(versions, vec![2, 2]);
+    assert_eq!(run.flake("a").unwrap().version(), 2);
+    assert_eq!(run.flake("b").unwrap().version(), 2);
+    // Unknown pellet in the update set is an error.
+    assert!(run
+        .wave_update(&[("ghost".to_string(), "test.V2".to_string())])
+        .is_err());
+    run.stop();
+}
+
+/// A pellet that takes long enough per message for an update to land
+/// mid-compute; checks `ctx.interrupted()` (the InterruptException path).
+struct Slow {
+    saw_interrupt: Arc<AtomicUsize>,
+}
+
+impl Pellet for Slow {
+    fn compute(&mut self, _input: PortIo, ctx: &mut PelletContext) -> Result<()> {
+        for _ in 0..50 {
+            std::thread::sleep(Duration::from_millis(1));
+            if ctx.interrupted() {
+                self.saw_interrupt.fetch_add(1, Ordering::SeqCst);
+                break;
+            }
+        }
+        ctx.emit("out", Message::text("done"));
+        Ok(())
+    }
+}
+
+#[test]
+fn sync_update_interrupts_long_running_instances() {
+    let (coord, _c) = setup();
+    let saw = Arc::new(AtomicUsize::new(0));
+    let s2 = Arc::clone(&saw);
+    coord.registry().register("test.Slow", move || {
+        Box::new(Slow { saw_interrupt: Arc::clone(&s2) })
+    });
+    let mut g = GraphBuilder::new("slow");
+    g.pellet("work", "test.Slow")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    let run =
+        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+    for i in 0..8 {
+        run.inject("work", "in", Message::text(format!("{i}"))).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(10));
+    run.update_pellet("work", Some("test.Slow"), true, false).unwrap();
+    assert!(run.drain(Duration::from_secs(10)));
+    assert!(
+        saw.load(Ordering::SeqCst) > 0,
+        "no instance observed the interrupt"
+    );
+    run.stop();
+}

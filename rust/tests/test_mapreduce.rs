@@ -1,0 +1,162 @@
+//! E8 — streaming MapReduce over the dynamic key-hash port mapping
+//! (§II-A, Fig. 1 P9): word count with 3 mappers and 2 reducers.
+//!
+//! Verifies the shuffle invariant (all occurrences of one key reach one
+//! reducer), streaming reducers (results on a WindowEnd landmark without
+//! stopping the dataflow), and end-to-end counts.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::graph::{patterns, GraphBuilder, SplitMode};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::{Landmark, Message};
+use floe::pellet::builtins::CollectSink;
+use floe::pellet::PelletRegistry;
+
+fn launch_wordcount() -> (
+    floe::coordinator::RunningDataflow,
+    Arc<Mutex<Vec<Message>>>,
+    patterns::MapReduceIds,
+) {
+    let cloud = SimulatedCloud::new(256, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let collected = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    registry.register("test.Collect", move || {
+        Box::new(CollectSink { collected: Arc::clone(&c2) })
+    });
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+
+    let mut g = GraphBuilder::new("wordcount");
+    g.pellet("src", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    let ids = patterns::map_reduce(
+        &mut g,
+        "wc",
+        "floe.builtin.WordSplit",
+        "floe.builtin.KeyCount",
+        3,
+        2,
+    );
+    for m in &ids.mappers {
+        g.edge("src", "out", m, "in");
+    }
+    g.pellet("sink", "test.Collect").in_port("in");
+    for r in &ids.reducers {
+        g.edge(r, "out", "sink", "in");
+    }
+    let run = coord
+        .launch(g.build().unwrap(), LaunchOptions::default())
+        .unwrap();
+    (run, collected, ids)
+}
+
+#[test]
+fn word_count_end_to_end() {
+    let (run, collected, _ids) = launch_wordcount();
+    // "alpha" x30, "beta" x20, "gamma" x10 spread over lines.
+    for _ in 0..10 {
+        run.inject("src", "in", Message::text("alpha alpha alpha beta"))
+            .unwrap();
+        run.inject("src", "in", Message::text("beta gamma")).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(10)));
+    // Flush reducers with a window landmark.
+    run.inject(
+        "src",
+        "in",
+        Message::landmark(Landmark::WindowEnd("w1".into())),
+    )
+    .unwrap();
+    assert!(run.drain(Duration::from_secs(10)));
+
+    let got = collected.lock().unwrap();
+    let mut counts: HashMap<String, f64> = HashMap::new();
+    for m in got.iter().filter(|m| !m.is_landmark()) {
+        let t = m.as_text().unwrap();
+        let (k, v) = t.split_once('=').unwrap();
+        *counts.entry(k.to_string()).or_default() += v.parse::<f64>().unwrap();
+    }
+    assert_eq!(counts["alpha"], 30.0, "{counts:?}");
+    assert_eq!(counts["beta"], 20.0, "{counts:?}");
+    assert_eq!(counts["gamma"], 10.0, "{counts:?}");
+    drop(got);
+    run.stop();
+}
+
+#[test]
+fn shuffle_sends_each_key_to_one_reducer() {
+    let (run, _collected, ids) = launch_wordcount();
+    for _ in 0..20 {
+        run.inject("src", "in", Message::text("red green blue cyan"))
+            .unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(10)));
+    // Inspect reducer state objects: each word must appear in exactly one
+    // reducer's state, with the full count of 20.
+    let mut seen: HashMap<String, (usize, f64)> = HashMap::new();
+    for (ri, rid) in ids.reducers.iter().enumerate() {
+        let state = run.flake(rid).unwrap().state().snapshot();
+        for (word, v) in state {
+            let n = v.as_f64().unwrap_or(0.0);
+            let e = seen.entry(word).or_insert((ri, 0.0));
+            assert_eq!(
+                e.0, ri,
+                "word seen in two reducers — shuffle broken"
+            );
+            e.1 += n;
+        }
+    }
+    for word in ["red", "green", "blue", "cyan"] {
+        assert_eq!(
+            seen.get(word).map(|e| e.1),
+            Some(20.0),
+            "word {word}: {seen:?}"
+        );
+    }
+    run.stop();
+}
+
+#[test]
+fn streaming_reducers_emit_per_window() {
+    let (run, collected, _ids) = launch_wordcount();
+    // Window 1.
+    run.inject("src", "in", Message::text("x x")).unwrap();
+    assert!(run.drain(Duration::from_secs(5)));
+    run.inject(
+        "src",
+        "in",
+        Message::landmark(Landmark::WindowEnd("w1".into())),
+    )
+    .unwrap();
+    assert!(run.drain(Duration::from_secs(5)));
+    let after_w1 = collected
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .count();
+    assert!(after_w1 >= 1, "reducer should emit on first landmark");
+    // Window 2 continues streaming — dataflow never stopped.
+    run.inject("src", "in", Message::text("y")).unwrap();
+    assert!(run.drain(Duration::from_secs(5)));
+    run.inject(
+        "src",
+        "in",
+        Message::landmark(Landmark::WindowEnd("w2".into())),
+    )
+    .unwrap();
+    assert!(run.drain(Duration::from_secs(5)));
+    let after_w2 = collected
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .count();
+    assert!(after_w2 > after_w1, "second window emits more results");
+    run.stop();
+}

@@ -1,0 +1,184 @@
+//! Integration: the AOT HLO-text artifacts produced by `make artifacts`
+//! load through PJRT and compute the same numbers as a Rust-side oracle.
+//!
+//! This is the cross-language half of the correctness story (the Python
+//! half is pytest vs the jnp oracle).  Requires `artifacts/` — run
+//! `make artifacts` first; tests panic with a clear message otherwise.
+
+use floe::apps::clustering::{make_projection, ClusterModel, ClusterParams};
+use floe::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use floe::util::rng::Rng;
+use std::sync::Arc;
+
+fn runtime() -> Arc<XlaRuntime> {
+    Arc::new(
+        XlaRuntime::load(default_artifact_dir())
+            .expect("run `make artifacts` before cargo test"),
+    )
+}
+
+fn params(rt: &XlaRuntime) -> ClusterParams {
+    ClusterParams::from_manifest(&rt.manifest).unwrap()
+}
+
+#[test]
+fn manifest_lists_all_entries() {
+    let rt = runtime();
+    let mut names = rt.kernel_names();
+    names.sort();
+    assert_eq!(names, vec!["bucketize", "centroid_update", "cluster_assign"]);
+    let p = params(&rt);
+    assert!(p.batch > 0 && p.dim > 0 && p.n_clusters > 0);
+}
+
+#[test]
+fn bucketize_matches_rust_oracle() {
+    let rt = runtime();
+    let p = params(&rt);
+    let proj = make_projection(&p, 0x15AB_EE75);
+    let mut rng = Rng::new(77);
+    let xs: Vec<Vec<f32>> = (0..p.batch)
+        .map(|_| (0..p.dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let model = ClusterModel::new_random(p, 1);
+    let got = model.bucketize(&rt, &proj, &xs).unwrap();
+
+    // Rust oracle: sign(x . proj_col) bits packed per band.
+    for (i, x) in xs.iter().enumerate() {
+        for band in 0..p.n_bands {
+            let mut want = 0i32;
+            for k in 0..p.band_width {
+                let col = band * p.band_width + k;
+                let dot: f32 = (0..p.dim)
+                    .map(|d| x[d] * proj[d * p.n_bands * p.band_width + col])
+                    .sum();
+                if dot >= 0.0 {
+                    want |= 1 << k;
+                }
+            }
+            assert_eq!(
+                got[i][band], want,
+                "row {i} band {band}: xla {} vs oracle {want}",
+                got[i][band]
+            );
+        }
+    }
+}
+
+#[test]
+fn cluster_assign_matches_brute_force() {
+    let rt = runtime();
+    let p = params(&rt);
+    let model = ClusterModel::new_random(p, 5);
+    let (centroids, _) = model.centroids_snapshot();
+    let mut rng = Rng::new(99);
+    let xs: Vec<Vec<f32>> = (0..p.batch / 2) // partial batch exercises padding
+        .map(|_| (0..p.dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let got = model.assign(&rt, &xs).unwrap();
+    assert_eq!(got.len(), xs.len());
+    for (i, x) in xs.iter().enumerate() {
+        let mut best = (usize::MAX, f32::MAX);
+        for k in 0..p.n_clusters {
+            let d2: f32 = (0..p.dim)
+                .map(|d| {
+                    let diff = x[d] - centroids[k * p.dim + d];
+                    diff * diff
+                })
+                .sum();
+            if d2 < best.1 {
+                best = (k, d2);
+            }
+        }
+        assert_eq!(got[i].0, best.0, "row {i}");
+        assert!(
+            (got[i].1 - best.1).abs() < 1e-3 * best.1.max(1.0),
+            "row {i}: {} vs {}",
+            got[i].1,
+            best.1
+        );
+    }
+}
+
+#[test]
+fn centroid_update_is_running_mean() {
+    let rt = runtime();
+    let p = params(&rt);
+    let model = ClusterModel::new_random(p, 9);
+    let (before, counts_before) = model.centroids_snapshot();
+    assert!(counts_before.iter().all(|&c| c == 0.0));
+
+    // Assign every post to cluster 3; after the update from zero counts,
+    // centroid 3 must equal the mean of the posts.
+    let mut rng = Rng::new(11);
+    let xs: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..p.dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let assigns = vec![3usize; xs.len()];
+    model.update(&rt, &xs, &assigns).unwrap();
+    let (after, counts) = model.centroids_snapshot();
+    assert_eq!(counts[3], xs.len() as f32);
+    for d in 0..p.dim {
+        let mean: f32 =
+            xs.iter().map(|x| x[d]).sum::<f32>() / xs.len() as f32;
+        assert!((after[3 * p.dim + d] - mean).abs() < 1e-4, "dim {d}");
+    }
+    // Untouched clusters keep their centroids.
+    for k in [0usize, 1, 2, 4, 5] {
+        for d in 0..p.dim {
+            assert_eq!(after[k * p.dim + d], before[k * p.dim + d]);
+        }
+    }
+    assert_eq!(model.update_count(), 1);
+}
+
+#[test]
+fn execute_rejects_wrong_shapes() {
+    let rt = runtime();
+    let p = params(&rt);
+    let bad = rt.execute(
+        "bucketize",
+        &[
+            Tensor::f32(&[1, p.dim], vec![0.0; p.dim]),
+            Tensor::f32(
+                &[p.dim, p.n_bands * p.band_width],
+                vec![0.0; p.dim * p.n_bands * p.band_width],
+            ),
+        ],
+    );
+    assert!(bad.is_err());
+    assert!(rt.execute("no_such_kernel", &[]).is_err());
+    assert!(rt.spec("bucketize").is_ok());
+}
+
+#[test]
+fn concurrent_kernel_calls_are_safe() {
+    let rt = runtime();
+    let p = params(&rt);
+    let model = ClusterModel::new_random(p, 13);
+    let proj = make_projection(&p, 0x15AB_EE75);
+    let handles: Vec<_> = (0..4)
+        .map(|seed| {
+            let rt = Arc::clone(&rt);
+            let model = Arc::clone(&model);
+            let proj = Arc::clone(&proj);
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed);
+                for _ in 0..5 {
+                    let xs: Vec<Vec<f32>> = (0..p.batch)
+                        .map(|_| {
+                            (0..p.dim).map(|_| rng.normal() as f32).collect()
+                        })
+                        .collect();
+                    let b = model.bucketize(&rt, &proj, &xs).unwrap();
+                    assert_eq!(b.len(), p.batch);
+                    let a = model.assign(&rt, &xs).unwrap();
+                    assert_eq!(a.len(), p.batch);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
