@@ -1,16 +1,118 @@
 //! Micro: transport throughput — in-proc bounded queue vs framed TCP —
 //! plus the message codec, the framework's per-message floor.
+//!
+//! The headline comparison is MPMC fan-in at 4 producers: the legacy
+//! single-message path (every message takes the one `SyncQueue` mutex)
+//! vs the batched, shard-aware fast path (`ShardedQueue::push_batch` /
+//! `pop_batch`, one lock round-trip per batch per shard).
+//!
+//! Writes the measured numbers to `BENCH_channels.json` in the repo root
+//! so successive PRs can track the perf trajectory.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-use floe::channel::{SyncQueue, TcpReceiver, TcpSender, Transport};
+use floe::channel::{
+    ShardedQueue, SyncQueue, TcpReceiver, TcpSender, Transport,
+};
 use floe::message::Message;
 
+const MPMC_PRODUCERS: usize = 4;
+const MPMC_CONSUMERS: usize = 2;
+const BATCH: usize = 64;
+const PAYLOAD: usize = 64;
+
+/// Legacy path: every producer pushes single messages through one mutex.
+fn bench_mpmc_single(total: usize) -> f64 {
+    let q: Arc<SyncQueue<Message>> = Arc::new(SyncQueue::new(8192));
+    let consumers: Vec<_> = (0..MPMC_CONSUMERS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                let mut got = 0usize;
+                while q.pop().is_ok() {
+                    got += 1;
+                }
+                got
+            })
+        })
+        .collect();
+    let msg = Message::f32s(vec![0.5; PAYLOAD / 4]);
+    let per = total / MPMC_PRODUCERS;
+    let start = Instant::now();
+    let producers: Vec<_> = (0..MPMC_PRODUCERS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            let msg = msg.clone();
+            thread::spawn(move || {
+                for _ in 0..per {
+                    q.push(msg.clone()).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in producers {
+        h.join().unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    q.close();
+    let got: usize =
+        consumers.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(got, per * MPMC_PRODUCERS);
+    (per * MPMC_PRODUCERS) as f64 / secs
+}
+
+/// Batched, shard-aware fast path: producers push whole batches into
+/// their pinned shard; consumers sweep shards draining batches.
+fn bench_mpmc_batched(total: usize) -> f64 {
+    let q: Arc<ShardedQueue<Message>> =
+        Arc::new(ShardedQueue::new(MPMC_PRODUCERS, 8192));
+    let consumers: Vec<_> = (0..MPMC_CONSUMERS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                let mut got = 0usize;
+                while let Ok(batch) = q.pop_batch(BATCH) {
+                    got += batch.len();
+                }
+                got
+            })
+        })
+        .collect();
+    let msg = Message::f32s(vec![0.5; PAYLOAD / 4]);
+    let per = total / MPMC_PRODUCERS;
+    let start = Instant::now();
+    let producers: Vec<_> = (0..MPMC_PRODUCERS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            let msg = msg.clone();
+            thread::spawn(move || {
+                let mut sent = 0usize;
+                while sent < per {
+                    let n = BATCH.min(per - sent);
+                    let batch: Vec<Message> =
+                        (0..n).map(|_| msg.clone()).collect();
+                    q.push_batch(batch).unwrap();
+                    sent += n;
+                }
+            })
+        })
+        .collect();
+    for h in producers {
+        h.join().unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    q.close();
+    let got: usize =
+        consumers.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(got, per * MPMC_PRODUCERS);
+    (per * MPMC_PRODUCERS) as f64 / secs
+}
+
 fn bench_inproc(n: usize, payload: usize) -> f64 {
-    let q = Arc::new(SyncQueue::new(8192));
+    let q: Arc<SyncQueue<Message>> = Arc::new(SyncQueue::new(8192));
     let q2 = Arc::clone(&q);
     let consumer = thread::spawn(move || {
         let mut got = 0;
@@ -29,8 +131,8 @@ fn bench_inproc(n: usize, payload: usize) -> f64 {
     n as f64 / start.elapsed().as_secs_f64()
 }
 
-fn bench_tcp(n: usize, payload: usize) -> f64 {
-    let q = Arc::new(SyncQueue::new(8192));
+fn bench_tcp(n: usize, payload: usize, batch: usize) -> f64 {
+    let q = Arc::new(ShardedQueue::with_default_shards(8192));
     let mut ports = HashMap::new();
     ports.insert("in".to_string(), Arc::clone(&q));
     let mut rx = TcpReceiver::start(0, ports).unwrap();
@@ -39,15 +141,26 @@ fn bench_tcp(n: usize, payload: usize) -> f64 {
     let consumer = thread::spawn(move || {
         let mut got = 0;
         while got < n {
-            if q2.pop().is_ok() {
-                got += 1;
+            match q2.pop_batch(256) {
+                Ok(b) => got += b.len(),
+                Err(_) => break,
             }
         }
     });
     let msg = Message::f32s(vec![0.5; payload / 4]);
     let start = Instant::now();
-    for _ in 0..n {
-        tx.send(msg.clone()).unwrap();
+    if batch <= 1 {
+        for _ in 0..n {
+            tx.send(msg.clone()).unwrap();
+        }
+    } else {
+        let mut sent = 0usize;
+        while sent < n {
+            let k = batch.min(n - sent);
+            let msgs: Vec<Message> = (0..k).map(|_| msg.clone()).collect();
+            tx.send_batch(msgs).unwrap();
+            sent += k;
+        }
     }
     consumer.join().unwrap();
     let rate = n as f64 / start.elapsed().as_secs_f64();
@@ -74,18 +187,80 @@ fn bench_codec(n: usize, payload: usize) -> (f64, f64) {
     (enc_rate, dec_rate)
 }
 
-fn main() {
-    println!("# Channel transports — messages/second");
-    println!(
-        "{:>10} {:>14} {:>14} {:>14} {:>14}",
-        "payload", "inproc", "tcp", "encode", "decode"
+fn write_baseline(
+    single: f64,
+    batched: f64,
+    tcp_single: f64,
+    tcp_batched: f64,
+    enc: f64,
+    dec: f64,
+) {
+    let json = format!(
+        "{{\n  \"bench\": \"bench_channels\",\n  \"config\": {{\n    \
+         \"producers\": {MPMC_PRODUCERS},\n    \"consumers\": \
+         {MPMC_CONSUMERS},\n    \"batch_size\": {BATCH},\n    \
+         \"payload_bytes\": {PAYLOAD}\n  }},\n  \"mpmc_msgs_per_sec\": \
+         {{\n    \"single\": {single:.0},\n    \"batched\": \
+         {batched:.0},\n    \"speedup\": {:.2}\n  }},\n  \
+         \"tcp_msgs_per_sec\": {{\n    \"single\": {tcp_single:.0},\n    \
+         \"batched\": {tcp_batched:.0}\n  }},\n  \"codec_msgs_per_sec\": \
+         {{\n    \"encode\": {enc:.0},\n    \"decode\": {dec:.0}\n  }}\n}}\n",
+        batched / single.max(1.0)
     );
+    // Repo root = the rust package dir's parent.
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/.."))
+        .unwrap_or_else(|_| ".".to_string());
+    let path = format!("{root}/BENCH_channels.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    print!("{json}");
+}
+
+fn main() {
+    println!(
+        "# MPMC fan-in, {MPMC_PRODUCERS} producers / {MPMC_CONSUMERS} \
+         consumers — messages/second"
+    );
+    let single = bench_mpmc_single(400_000);
+    let batched = bench_mpmc_batched(400_000);
+    println!("{:>24} {single:>14.0}", "single-message path");
+    println!("{:>24} {batched:>14.0}", "batched+sharded path");
+    println!("{:>24} {:>13.2}x", "speedup", batched / single.max(1.0));
+
+    println!("\n# Channel transports — messages/second");
+    println!(
+        "{:>10} {:>14} {:>14} {:>14} {:>14} {:>14}",
+        "payload", "inproc", "tcp", "tcp-batched", "encode", "decode"
+    );
+    let mut tcp_single_64 = 0.0;
+    let mut tcp_batched_64 = 0.0;
+    let mut enc_64 = 0.0;
+    let mut dec_64 = 0.0;
     for &payload in &[64usize, 1024, 16384] {
         let inproc = bench_inproc(200_000, payload);
-        let tcp = bench_tcp(50_000, payload);
+        let tcp_single = bench_tcp(50_000, payload, 1);
+        let tcp_batched = bench_tcp(50_000, payload, BATCH);
         let (enc, dec) = bench_codec(200_000, payload);
+        if payload == 64 {
+            tcp_single_64 = tcp_single;
+            tcp_batched_64 = tcp_batched;
+            enc_64 = enc;
+            dec_64 = dec;
+        }
         println!(
-            "{payload:>10} {inproc:>14.0} {tcp:>14.0} {enc:>14.0} {dec:>14.0}"
+            "{payload:>10} {inproc:>14.0} {tcp_single:>14.0} \
+             {tcp_batched:>14.0} {enc:>14.0} {dec:>14.0}"
         );
     }
+    write_baseline(
+        single,
+        batched,
+        tcp_single_64,
+        tcp_batched_64,
+        enc_64,
+        dec_64,
+    );
 }

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use floe::channel::{SyncQueue, Transport};
+use floe::channel::{ShardedQueue, Transport};
 use floe::flake::OutputRouter;
 use floe::graph::SplitMode;
 use floe::message::Message;
@@ -44,18 +44,51 @@ fn bench_split(split: SplitMode, sinks: usize, n: usize, keyed: bool) -> f64 {
     n as f64 / start.elapsed().as_secs_f64()
 }
 
+/// Router fan-out through `route_batch`: whole batches per split
+/// decision, one `send_batch` per target.
+fn bench_split_batched(
+    split: SplitMode,
+    sinks: usize,
+    n: usize,
+    batch: usize,
+    keyed: bool,
+) -> f64 {
+    let mut r = OutputRouter::new();
+    r.add_port("out", split);
+    for _ in 0..sinks {
+        r.add_target("out", Arc::new(NullTransport)).unwrap();
+    }
+    let msgs: Vec<Message> = (0..batch)
+        .map(|i| {
+            let m = Message::text("payload");
+            if keyed {
+                m.with_key(format!("key-{}", i % 64))
+            } else {
+                m
+            }
+        })
+        .collect();
+    let start = Instant::now();
+    let mut sent = 0usize;
+    while sent < n {
+        r.route_batch("out", msgs.clone()).unwrap();
+        sent += batch;
+    }
+    sent as f64 / start.elapsed().as_secs_f64()
+}
+
 fn bench_queue_fanin(sinks: usize, n: usize) -> f64 {
     // Realistic sink: bounded queues, drained by a thread each.
     let mut r = OutputRouter::new();
     r.add_port("out", SplitMode::KeyHash);
     let mut joins = Vec::new();
     for _ in 0..sinks {
-        let q = Arc::new(SyncQueue::new(4096));
+        let q = Arc::new(ShardedQueue::with_default_shards(4096));
         let q2 = Arc::clone(&q);
         joins.push(std::thread::spawn(move || {
             let mut seen = 0usize;
-            while q2.pop().is_ok() {
-                seen += 1;
+            while let Ok(batch) = q2.pop_batch(64) {
+                seen += batch.len();
             }
             seen
         }));
@@ -105,6 +138,19 @@ fn main() {
             "{:>12} {sinks:>6} {:>14.0}",
             "duplicate",
             bench_split(SplitMode::Duplicate, sinks, n / 10, false)
+        );
+    }
+    println!("\n# route_batch (batch=256) — messages/second");
+    for &sinks in &[2usize, 8, 32] {
+        println!(
+            "{:>12} {sinks:>6} {:>14.0}",
+            "roundrobin",
+            bench_split_batched(SplitMode::RoundRobin, sinks, n, 256, false)
+        );
+        println!(
+            "{:>12} {sinks:>6} {:>14.0}",
+            "keyhash",
+            bench_split_batched(SplitMode::KeyHash, sinks, n, 256, true)
         );
     }
     println!(

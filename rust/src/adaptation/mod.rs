@@ -248,7 +248,7 @@ impl AdaptationStrategy for HybridStrategy {
         match self.mode {
             HybridMode::Static => {
                 if rel_dev > self.deviation {
-                    log::debug!(
+                    crate::log_debug!(
                         "hybrid: rate {:.1} deviates from hint {:.1}, \
                          switching to dynamic",
                         obs.arrival_rate,
@@ -264,7 +264,7 @@ impl AdaptationStrategy for HybridStrategy {
                 if rel_dev <= self.deviation
                     && obs.queue_len <= self.settle_queue
                 {
-                    log::debug!("hybrid: rate stabilized, back to static");
+                    crate::log_debug!("hybrid: rate stabilized, back to static");
                     self.mode = HybridMode::Static;
                     self.static_cores
                 } else {
@@ -371,12 +371,12 @@ impl Monitor {
                                 .container
                                 .set_flake_cores(e.flake.pellet_id(), want)
                             {
-                                log::warn!(
+                                crate::log_warn!(
                                     "monitor: resize {} -> {want}: {err}",
                                     e.flake.pellet_id()
                                 );
                             } else {
-                                log::debug!(
+                                crate::log_debug!(
                                     "monitor[{}]: {} cores {} -> {want}",
                                     e.strategy.name(),
                                     e.flake.pellet_id(),

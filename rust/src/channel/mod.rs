@@ -5,11 +5,39 @@
 //! trait: in-process bounded queues (flakes co-located in a container) and
 //! framed TCP sockets (flakes on different VMs).  The bounded queue is the
 //! backpressure mechanism: senders block when a sink pellet falls behind.
+//!
+//! # Batching and sharding
+//!
+//! The channel layer is the per-message floor of the whole runtime, so it
+//! offers a **batched, shard-aware fast path** on top of the paper's
+//! blocking-queue contract:
+//!
+//! * **Batch API** — [`SyncQueue::push_batch`] / [`SyncQueue::pop_batch`]
+//!   move N messages under one lock acquisition instead of N.  Batching
+//!   is opportunistic on the pop side (a consumer never waits for a batch
+//!   to fill), so latency stays at single-message levels while
+//!   lock traffic drops by the batch size.
+//! * **Sharding** — [`ShardedQueue`] splits a flake input port into
+//!   per-producer-thread sub-queues with a round-robin consumer sweep,
+//!   eliminating producer convoying under fan-in.  Ordering is FIFO per
+//!   producer thread; backpressure and drain-before-close semantics are
+//!   preserved per shard.
+//! * **Batch transports** — [`Transport::send_batch`] lets the output
+//!   router hand a whole emission batch to a channel: the in-process
+//!   transport forwards it as one `push_batch`, the TCP transport writes
+//!   all frames in one syscall (see [`TcpSender`]).
+//!
+//! How many messages ride in one batch is controlled by the `batch_size`
+//! knob on [`crate::flake::FlakeConfig`] (default
+//! [`crate::flake::DEFAULT_BATCH_SIZE`]), which the coordinator surfaces
+//! through `LaunchOptions::batch_size`.
 
 mod queue;
+mod sharded;
 mod tcp;
 
 pub use queue::{QueueClosed, SyncQueue};
+pub use sharded::{ShardedQueue, DEFAULT_SHARDS};
 pub use tcp::{TcpReceiver, TcpSender};
 
 use std::sync::Arc;
@@ -23,13 +51,25 @@ pub trait Transport: Send + Sync {
     /// Deliver one message.  Blocks on backpressure.
     fn send(&self, msg: Message) -> Result<()>;
 
+    /// Deliver a batch of messages in order.  Blocks on backpressure.
+    /// The default forwards one by one; transports override it to
+    /// amortize per-message costs (lock round-trips, syscalls).
+    fn send_batch(&self, msgs: Vec<Message>) -> Result<()> {
+        for msg in msgs {
+            self.send(msg)?;
+        }
+        Ok(())
+    }
+
     /// Human-readable description for diagnostics.
     fn describe(&self) -> String;
 }
 
-/// In-process transport: pushes straight into the sink flake's input queue.
+/// In-process transport: pushes straight into the sink flake's sharded
+/// input queue.  The calling thread's shard pinning keeps each upstream
+/// worker contention-free and its messages in order.
 pub struct InProcTransport {
-    pub queue: Arc<SyncQueue<Message>>,
+    pub queue: Arc<ShardedQueue<Message>>,
     pub label: String,
 }
 
@@ -38,6 +78,12 @@ impl Transport for InProcTransport {
         self.queue
             .push(msg)
             .map_err(|_| FloeError::Channel(format!("{} closed", self.label)))
+    }
+
+    fn send_batch(&self, msgs: Vec<Message>) -> Result<()> {
+        self.queue.push_batch(msgs).map_err(|_| {
+            FloeError::Channel(format!("{} closed", self.label))
+        })
     }
 
     fn describe(&self) -> String {
@@ -51,7 +97,7 @@ mod tests {
 
     #[test]
     fn inproc_transport_delivers() {
-        let q = Arc::new(SyncQueue::new(16));
+        let q = Arc::new(ShardedQueue::with_default_shards(16));
         let t = InProcTransport { queue: Arc::clone(&q), label: "t".into() };
         t.send(Message::text("a")).unwrap();
         t.send(Message::text("b")).unwrap();
@@ -60,10 +106,27 @@ mod tests {
     }
 
     #[test]
+    fn inproc_transport_batch_delivers_in_order() {
+        let q = Arc::new(ShardedQueue::with_default_shards(64));
+        let t = InProcTransport { queue: Arc::clone(&q), label: "t".into() };
+        let batch: Vec<Message> =
+            (0..10).map(|i| Message::text(format!("m{i}"))).collect();
+        t.send_batch(batch).unwrap();
+        assert_eq!(q.len(), 10);
+        for i in 0..10 {
+            assert_eq!(
+                q.pop().unwrap().as_text(),
+                Some(format!("m{i}").as_str())
+            );
+        }
+    }
+
+    #[test]
     fn inproc_transport_errors_after_close() {
-        let q = Arc::new(SyncQueue::new(4));
+        let q = Arc::new(ShardedQueue::with_default_shards(4));
         let t = InProcTransport { queue: Arc::clone(&q), label: "t".into() };
         q.close();
         assert!(t.send(Message::empty()).is_err());
+        assert!(t.send_batch(vec![Message::empty()]).is_err());
     }
 }

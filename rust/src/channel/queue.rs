@@ -66,6 +66,42 @@ impl<T> SyncQueue<T> {
         Ok(())
     }
 
+    /// Blocking batch push: one lock acquisition amortized over the whole
+    /// batch.  Respects capacity — when the queue fills mid-batch the
+    /// producer waits for consumers to drain, exactly like repeated
+    /// [`SyncQueue::push`] calls but without re-locking per message.
+    /// Err if the queue is closed before every item is queued (items
+    /// already queued stay consumable; the rest are dropped, matching the
+    /// single-message `push` contract).
+    pub fn push_batch(&self, items: Vec<T>) -> Result<(), QueueClosed> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let mut g = self.inner.lock().expect("queue poisoned");
+        let mut queued = false;
+        for item in items {
+            loop {
+                if g.closed {
+                    if queued {
+                        self.not_empty.notify_all();
+                    }
+                    return Err(QueueClosed);
+                }
+                if g.items.len() < self.capacity {
+                    g.items.push_back(item);
+                    queued = true;
+                    break;
+                }
+                // Wake consumers for what is queued so far, then wait for
+                // space.
+                self.not_empty.notify_all();
+                g = self.not_full.wait(g).expect("queue poisoned");
+            }
+        }
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
     /// Blocking pop; drains remaining items after close, then Err.
     pub fn pop(&self) -> Result<T, QueueClosed> {
         let mut g = self.inner.lock().expect("queue poisoned");
@@ -114,6 +150,75 @@ impl<T> SyncQueue<T> {
         }
     }
 
+    /// Blocking batch pop: waits for at least one item, then drains up to
+    /// `max` under the same lock.  Does *not* wait for the batch to fill —
+    /// batching is opportunistic, so latency matches [`SyncQueue::pop`].
+    /// After close, remaining items drain first; then Err.
+    pub fn pop_batch(&self, max: usize) -> Result<Vec<T>, QueueClosed> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if !g.items.is_empty() {
+                let n = g.items.len().min(max);
+                let out: Vec<T> = g.items.drain(..n).collect();
+                self.not_full.notify_all();
+                return Ok(out);
+            }
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            g = self.not_empty.wait(g).expect("queue poisoned");
+        }
+    }
+
+    /// Batch pop with a timeout.  `Ok(vec![])` on timeout; otherwise the
+    /// semantics of [`SyncQueue::pop_batch`].
+    pub fn pop_batch_timeout(
+        &self,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Vec<T>, QueueClosed> {
+        let max = max.max(1);
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if !g.items.is_empty() {
+                let n = g.items.len().min(max);
+                let out: Vec<T> = g.items.drain(..n).collect();
+                self.not_full.notify_all();
+                return Ok(out);
+            }
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(Vec::new());
+            }
+            let (guard, _res) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .expect("queue poisoned");
+            g = guard;
+        }
+    }
+
+    /// Non-blocking drain of up to `max` items into `out`; returns how
+    /// many were moved.  Ignores the closed flag — remaining items are
+    /// always drainable.
+    pub fn drain_into(&self, out: &mut Vec<T>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let mut g = self.inner.lock().expect("queue poisoned");
+        let n = g.items.len().min(max);
+        if n > 0 {
+            out.extend(g.items.drain(..n));
+            self.not_full.notify_all();
+        }
+        n
+    }
+
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
         let mut g = self.inner.lock().expect("queue poisoned");
@@ -122,6 +227,15 @@ impl<T> SyncQueue<T> {
             self.not_full.notify_one();
         }
         item
+    }
+
+    /// Visit every buffered item in FIFO order without removing it
+    /// (non-destructive snapshot support for checkpointing).
+    pub fn for_each(&self, mut f: impl FnMut(&T)) {
+        let g = self.inner.lock().expect("queue poisoned");
+        for item in g.items.iter() {
+            f(item);
+        }
     }
 
     /// Current number of buffered items.
@@ -215,6 +329,64 @@ mod tests {
             q.pop_timeout(Duration::from_millis(10)).unwrap(),
             Some(7)
         );
+    }
+
+    #[test]
+    fn push_batch_pop_batch_roundtrip() {
+        let q = SyncQueue::new(64);
+        q.push_batch((0..10).collect()).unwrap();
+        assert_eq!(q.len(), 10);
+        let first = q.pop_batch(4).unwrap();
+        assert_eq!(first, vec![0, 1, 2, 3]);
+        let rest = q.pop_batch(100).unwrap();
+        assert_eq!(rest, (4..10).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn push_batch_blocks_on_capacity_until_drained() {
+        let q = Arc::new(SyncQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let producer = thread::spawn(move || q2.push_batch((0..12).collect()));
+        let mut got = Vec::new();
+        while got.len() < 12 {
+            got.extend(q.pop_batch(4).unwrap());
+        }
+        producer.join().unwrap().unwrap();
+        assert_eq!(got, (0..12).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn pop_batch_drains_then_reports_closed() {
+        let q = SyncQueue::new(8);
+        q.push_batch(vec![1, 2, 3]).unwrap();
+        q.close();
+        assert!(q.push_batch(vec![4]).is_err());
+        assert_eq!(q.pop_batch(2).unwrap(), vec![1, 2]);
+        assert_eq!(q.pop_batch(2).unwrap(), vec![3]);
+        assert_eq!(q.pop_batch(2), Err(QueueClosed));
+    }
+
+    #[test]
+    fn pop_batch_timeout_returns_empty() {
+        let q = SyncQueue::<i32>::new(8);
+        let got = q.pop_batch_timeout(4, Duration::from_millis(10)).unwrap();
+        assert!(got.is_empty());
+        q.push(9).unwrap();
+        assert_eq!(
+            q.pop_batch_timeout(4, Duration::from_millis(10)).unwrap(),
+            vec![9]
+        );
+    }
+
+    #[test]
+    fn drain_into_is_nonblocking() {
+        let q = SyncQueue::new(8);
+        let mut out = Vec::new();
+        assert_eq!(q.drain_into(&mut out, 4), 0);
+        q.push_batch(vec![1, 2, 3]).unwrap();
+        assert_eq!(q.drain_into(&mut out, 2), 2);
+        assert_eq!(q.drain_into(&mut out, 2), 1);
+        assert_eq!(out, vec![1, 2, 3]);
     }
 
     #[test]

@@ -1,0 +1,499 @@
+//! Sharded MPMC queue: per-producer sub-queues with a round-robin
+//! consumer sweep.
+//!
+//! [`super::SyncQueue`] serializes every producer on one mutex; under
+//! fan-in (many upstream pellet instances pushing into one flake's input
+//! port) producers convoy on that lock and throughput flatlines.  A
+//! [`ShardedQueue`] splits the buffer into N independent [`SyncQueue`]
+//! shards.  Each producer *thread* is pinned to one shard per queue
+//! (assigned round-robin on first contact, stable afterwards), so
+//! producers on different shards never contend; consumers sweep the
+//! shards round-robin and drain in batches.
+//!
+//! Ordering contract: FIFO **per producer thread** (a thread's messages
+//! stay in its shard, in order).  Cross-producer interleaving is
+//! unspecified — the same contract a data-parallel flake already imposes
+//! on its outputs, so the runtime loses nothing.
+//!
+//! Backpressure contract: `push` blocks when the producer's shard is full
+//! (aggregate capacity is split evenly across shards), and a closed queue
+//! drains every remaining item before `pop` reports [`QueueClosed`] —
+//! identical to `SyncQueue`, per shard.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::queue::{QueueClosed, SyncQueue};
+
+/// Default shard count for flake input ports.
+pub const DEFAULT_SHARDS: usize = 4;
+
+/// Bounded blocking MPMC queue sharded by producer thread.
+pub struct ShardedQueue<T> {
+    shards: Vec<SyncQueue<T>>,
+    /// Generation counter bumped on every push/close so sweeping
+    /// consumers can sleep without missing items.
+    signal: Mutex<u64>,
+    not_empty: Condvar,
+    /// Consumers registered on `not_empty`; producers skip the signal
+    /// lock entirely while this is zero (the common case).
+    waiters: AtomicUsize,
+    /// Rotating sweep start so concurrent consumers fan out over shards.
+    sweep: AtomicUsize,
+    /// Next shard handed to a newly seen producer thread (round-robin
+    /// per queue, so k producer threads cover min(k, shards) shards).
+    next_producer: AtomicUsize,
+    capacity: usize,
+}
+
+impl<T> ShardedQueue<T> {
+    /// A queue with `shards` sub-queues sharing `capacity` total slots
+    /// (each shard gets `capacity / shards`, at least 1).
+    pub fn new(shards: usize, capacity: usize) -> Self {
+        let shards = shards.max(1);
+        let per_shard = (capacity / shards).max(1);
+        ShardedQueue {
+            shards: (0..shards).map(|_| SyncQueue::new(per_shard)).collect(),
+            signal: Mutex::new(0),
+            not_empty: Condvar::new(),
+            waiters: AtomicUsize::new(0),
+            sweep: AtomicUsize::new(0),
+            next_producer: AtomicUsize::new(0),
+            capacity: per_shard * shards,
+        }
+    }
+
+    /// A queue with [`DEFAULT_SHARDS`] shards.
+    pub fn with_default_shards(capacity: usize) -> Self {
+        ShardedQueue::new(DEFAULT_SHARDS, capacity)
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Aggregate capacity across shards.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The calling thread's pinned shard for *this* queue.  Pins are
+    /// assigned round-robin per queue on first contact, so k producer
+    /// threads cover min(k, shards) shards exactly — a process-global
+    /// thread id modulo shards would let unrelated threads alias
+    /// producers onto one shard and silently re-introduce convoying.
+    fn my_shard(&self) -> &SyncQueue<T> {
+        use std::cell::RefCell;
+        let n = self.shards.len();
+        if n == 1 {
+            return &self.shards[0];
+        }
+        thread_local! {
+            /// (queue identity, pinned shard) pairs for this thread.
+            static PINS: RefCell<Vec<(usize, usize)>> =
+                const { RefCell::new(Vec::new()) };
+        }
+        let key = self as *const ShardedQueue<T> as usize;
+        let pin = PINS.with(|pins| {
+            let mut pins = pins.borrow_mut();
+            if let Some(i) = pins.iter().position(|(k, _)| *k == key) {
+                // Move-to-front so the hot queue is an O(1) lookup.
+                pins.swap(0, i);
+                return pins[0].1;
+            }
+            // Entries are never evicted: dropping a live pin would let a
+            // producer's stream straddle two shards and break the
+            // per-producer FIFO contract.  The list grows only with the
+            // distinct queues this thread has produced into, and a dead
+            // queue's reused address recycles its old entry (the modulo
+            // below keeps stale pins in range).
+            let s = self.next_producer.fetch_add(1, Ordering::Relaxed) % n;
+            pins.insert(0, (key, s));
+            s
+        });
+        &self.shards[pin % n]
+    }
+
+    /// Wake sweeping consumers after a successful push.  Skipped while no
+    /// consumer is registered; consumers guard the race with a short
+    /// bounded wait, so a missed wakeup costs milliseconds, never a hang.
+    fn bump(&self) {
+        if self.waiters.load(Ordering::Acquire) > 0 {
+            let mut g = self.signal.lock().expect("sharded signal poisoned");
+            *g = g.wrapping_add(1);
+            self.not_empty.notify_all();
+        }
+    }
+
+    /// Blocking push to this thread's shard; waits while that shard is
+    /// full.  Err if closed.
+    pub fn push(&self, item: T) -> Result<(), QueueClosed> {
+        self.my_shard().push(item)?;
+        self.bump();
+        Ok(())
+    }
+
+    /// Non-blocking push; Err(item) when the shard is full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        self.my_shard().try_push(item)?;
+        self.bump();
+        Ok(())
+    }
+
+    /// Blocking batch push to this thread's shard: one shard-lock
+    /// acquisition amortized over the batch (see
+    /// [`SyncQueue::push_batch`]).
+    pub fn push_batch(&self, items: Vec<T>) -> Result<(), QueueClosed> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let result = self.my_shard().push_batch(items);
+        self.bump();
+        result
+    }
+
+    /// One non-blocking round-robin sweep over all shards, draining up to
+    /// `max` items into `out`.  Returns how many were taken.
+    fn sweep_into(&self, out: &mut Vec<T>, max: usize) -> usize {
+        let n = self.shards.len();
+        let start = self.sweep.fetch_add(1, Ordering::Relaxed) % n;
+        let mut taken = 0;
+        for k in 0..n {
+            if taken >= max {
+                break;
+            }
+            let shard = &self.shards[(start + k) % n];
+            taken += shard.drain_into(out, max - taken);
+        }
+        taken
+    }
+
+    /// True once `close` has run to completion on every shard.
+    pub fn is_closed(&self) -> bool {
+        self.shards.iter().all(|s| s.is_closed())
+    }
+
+    /// Blocking batch pop: waits for at least one item anywhere, then
+    /// sweeps the shards round-robin draining up to `max`.  After close,
+    /// remaining items drain first; then Err.
+    pub fn pop_batch(&self, max: usize) -> Result<Vec<T>, QueueClosed> {
+        self.pop_batch_deadline(max, None)
+            .map(|out| out.expect("no deadline, no timeout"))
+    }
+
+    /// Batch pop with a timeout; `Ok(vec![])` on timeout.
+    pub fn pop_batch_timeout(
+        &self,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Vec<T>, QueueClosed> {
+        let deadline = std::time::Instant::now() + timeout;
+        self.pop_batch_deadline(max, Some(deadline))
+            .map(|out| out.unwrap_or_default())
+    }
+
+    /// Shared pop core.  `Ok(None)` only when a deadline was given and
+    /// passed.
+    fn pop_batch_deadline(
+        &self,
+        max: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Option<Vec<T>>, QueueClosed> {
+        let max = max.max(1);
+        let mut out = Vec::new();
+        loop {
+            // Closed-before-sweep makes an empty sweep authoritative: no
+            // push can land in any shard once every shard is closed.
+            let closed = self.is_closed();
+            if self.sweep_into(&mut out, max) > 0 {
+                return Ok(Some(out));
+            }
+            if closed {
+                return Err(QueueClosed);
+            }
+            if let Some(d) = deadline {
+                if std::time::Instant::now() >= d {
+                    return Ok(None);
+                }
+            }
+            // Register as a waiter, re-sweep (an item may have landed
+            // between the sweep above and taking the lock), then sleep.
+            // The wait is bounded: a producer may observe waiters == 0
+            // just before this registration becomes visible and skip its
+            // wakeup, so never sleep unboundedly on the condvar alone.
+            let guard = self.signal.lock().expect("sharded signal poisoned");
+            self.waiters.fetch_add(1, Ordering::AcqRel);
+            if self.sweep_into(&mut out, max) > 0 {
+                self.waiters.fetch_sub(1, Ordering::AcqRel);
+                return Ok(Some(out));
+            }
+            let mut wait = Duration::from_millis(5);
+            if let Some(d) = deadline {
+                let now = std::time::Instant::now();
+                if now >= d {
+                    self.waiters.fetch_sub(1, Ordering::AcqRel);
+                    return Ok(None);
+                }
+                wait = wait.min(d - now);
+            }
+            let (reacquired, _timed_out) = self
+                .not_empty
+                .wait_timeout(guard, wait)
+                .expect("sharded signal poisoned");
+            drop(reacquired);
+            self.waiters.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Blocking single pop (round-robin over shards).
+    pub fn pop(&self) -> Result<T, QueueClosed> {
+        self.pop_batch(1).map(|mut v| v.remove(0))
+    }
+
+    /// Single pop with a timeout; `Ok(None)` on timeout.
+    pub fn pop_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<Option<T>, QueueClosed> {
+        self.pop_batch_timeout(1, timeout)
+            .map(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+    }
+
+    /// Non-blocking pop (allocation-free; used per message by the
+    /// synchronous-merge dispatcher).
+    pub fn try_pop(&self) -> Option<T> {
+        let n = self.shards.len();
+        let start = self.sweep.fetch_add(1, Ordering::Relaxed) % n;
+        for k in 0..n {
+            if let Some(item) = self.shards[(start + k) % n].try_pop() {
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Non-blocking batch pop (one sweep, up to `max` items).
+    pub fn try_pop_batch(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        self.sweep_into(&mut out, max);
+        out
+    }
+
+    /// Total buffered items across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close every shard: producers fail immediately, consumers drain
+    /// whatever remains and then fail.
+    pub fn close(&self) {
+        for s in &self.shards {
+            s.close();
+        }
+        let mut g = self.signal.lock().expect("sharded signal poisoned");
+        *g = g.wrapping_add(1);
+        self.not_empty.notify_all();
+    }
+}
+
+impl<T: Clone> ShardedQueue<T> {
+    /// Non-destructive snapshot of every buffered item, shard by shard
+    /// (per-shard FIFO order preserved).  Used by checkpointing.
+    pub fn snapshot(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            s.for_each(|item| out.push(item.clone()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn single_producer_fifo_order() {
+        // 64 slots per shard: the single producer stays under its
+        // shard's bound however threads map to shards.
+        let q = ShardedQueue::new(4, 256);
+        for i in 0..20 {
+            q.push(i).unwrap();
+        }
+        let mut got = Vec::new();
+        while let Some(v) = q.try_pop() {
+            got.push(v);
+        }
+        // One thread pins one shard, so global FIFO holds.
+        assert_eq!(got, (0..20).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn per_producer_order_survives_sweep() {
+        // Consumer runs concurrently: producers may share a shard
+        // (thread→shard mapping is process-global), so draining must not
+        // wait for the producers to finish.
+        let q = Arc::new(ShardedQueue::new(4, 64));
+        let consumer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                let mut got = Vec::new();
+                while got.len() < 200 {
+                    got.extend(q.pop_batch(16).unwrap());
+                }
+                got
+            })
+        };
+        let handles: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    for i in 0..50 {
+                        q.push(p * 100 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Per-producer order survives the sweep: for each producer the
+        // popped subsequence is ascending.
+        let got = consumer.join().unwrap();
+        let mut per = vec![Vec::new(); 4];
+        for v in got {
+            per[(v / 100) as usize].push(v % 100);
+        }
+        for (p, seq) in per.iter().enumerate() {
+            assert_eq!(seq, &(0..50).collect::<Vec<i32>>(), "producer {p}");
+        }
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = Arc::new(ShardedQueue::<i32>::new(2, 16));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.push(42).unwrap();
+        assert_eq!(h.join().unwrap(), Ok(42));
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let q = ShardedQueue::new(2, 16);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.push(3).is_err());
+        assert!(q.is_closed());
+        assert_eq!(q.pop().unwrap(), 1);
+        assert_eq!(q.pop().unwrap(), 2);
+        assert_eq!(q.pop(), Err(QueueClosed));
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q = Arc::new(ShardedQueue::<i32>::new(2, 16));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(QueueClosed));
+    }
+
+    #[test]
+    fn pop_timeout_and_batch_timeout() {
+        let q = ShardedQueue::<i32>::new(2, 16);
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)).unwrap(), None);
+        assert!(q
+            .pop_batch_timeout(8, Duration::from_millis(10))
+            .unwrap()
+            .is_empty());
+        q.push_batch(vec![1, 2, 3]).unwrap();
+        let got = q.pop_batch_timeout(8, Duration::from_millis(10)).unwrap();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn backpressure_per_shard() {
+        // One shard of capacity 2 keeps shard assignment deterministic:
+        // the batch push must block until a pop frees a slot.
+        let q = Arc::new(ShardedQueue::new(1, 2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert!(q.try_push(3).is_err());
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.push_batch(vec![3, 4]));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop().unwrap(), 1);
+        assert_eq!(q.pop().unwrap(), 2);
+        h.join().unwrap().unwrap();
+        q.close();
+        let mut rest = Vec::new();
+        while let Ok(batch) = q.pop_batch(8) {
+            rest.extend(batch);
+        }
+        assert_eq!(rest, vec![3, 4]);
+    }
+
+    #[test]
+    fn snapshot_is_nondestructive() {
+        let q = ShardedQueue::new(2, 16);
+        q.push_batch(vec![1, 2, 3]).unwrap();
+        let snap = q.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn mpmc_stress_no_loss() {
+        let q = Arc::new(ShardedQueue::new(4, 64));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    for chunk in 0..25 {
+                        let batch: Vec<i32> = (0..10)
+                            .map(|i| p * 1000 + chunk * 10 + i)
+                            .collect();
+                        q.push_batch(batch).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(batch) = q.pop_batch(16) {
+                        got.extend(batch);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort();
+        let mut want: Vec<i32> = (0..4)
+            .flat_map(|p| (0..250).map(move |i| p * 1000 + i))
+            .collect();
+        want.sort();
+        assert_eq!(all, want);
+    }
+}

@@ -5,6 +5,12 @@
 //! message encoded by [`Message::encode`].  A [`TcpReceiver`] listens on the
 //! flake's endpoint, decodes frames and pushes them into the named input
 //! port queue; a [`TcpSender`] holds one connection per (sink, port) pair.
+//!
+//! Both directions are batch-aware: [`TcpSender::send_batch`] concatenates
+//! every frame into one buffer and issues a single `write_all` (one
+//! syscall per batch instead of one per message), and the receiver reads
+//! socket-buffer-sized chunks, decodes every complete frame in the chunk,
+//! and delivers them per port with one [`ShardedQueue::push_batch`].
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -14,9 +20,15 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
-use crate::channel::{SyncQueue, Transport};
+use crate::channel::{ShardedQueue, Transport};
 use crate::error::{FloeError, Result};
 use crate::message::Message;
+
+/// Hard ceiling on one frame (64 MiB) — rejects corrupt length prefixes.
+const MAX_FRAME: usize = 64 << 20;
+
+/// Receive chunk size: one read syscall can carry many small frames.
+const READ_CHUNK: usize = 64 << 10;
 
 /// Listens for framed messages and pushes them into per-port input queues.
 pub struct TcpReceiver {
@@ -30,7 +42,7 @@ impl TcpReceiver {
     /// `ports` by port name.  Unknown ports are dropped with a log line.
     pub fn start(
         port: u16,
-        ports: HashMap<String, Arc<SyncQueue<Message>>>,
+        ports: HashMap<String, Arc<ShardedQueue<Message>>>,
     ) -> Result<TcpReceiver> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
@@ -83,16 +95,31 @@ impl Drop for TcpReceiver {
     }
 }
 
+/// Per-connection read loop: accumulate raw bytes, decode every complete
+/// frame, deliver frames grouped per port with one batch push each.
 fn serve_stream(
     mut stream: TcpStream,
-    ports: &HashMap<String, Arc<SyncQueue<Message>>>,
+    ports: &HashMap<String, Arc<ShardedQueue<Message>>>,
     stop: &AtomicBool,
 ) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
-    let mut len_buf = [0u8; 4];
+    let mut acc: Vec<u8> = Vec::with_capacity(READ_CHUNK);
+    let mut chunk = vec![0u8; READ_CHUNK];
     while !stop.load(Ordering::SeqCst) {
-        match stream.read_exact(&mut len_buf) {
-            Ok(()) => {}
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => {
+                // Peer closed.  Bytes left in the accumulator mean the
+                // peer died mid-frame — surface the data loss instead of
+                // treating it as a clean shutdown.
+                if acc.is_empty() {
+                    return Ok(());
+                }
+                return Err(FloeError::Channel(format!(
+                    "tcp: peer closed mid-frame ({} byte(s) undecoded)",
+                    acc.len()
+                )));
+            }
+            Ok(n) => n,
             Err(e)
                 if matches!(
                     e.kind(),
@@ -102,62 +129,83 @@ fn serve_stream(
             {
                 continue;
             }
-            Err(_) => return Ok(()), // peer closed
+            Err(_) => return Ok(()), // peer reset
+        };
+        acc.extend_from_slice(&chunk[..n]);
+
+        // Decode every complete frame in the accumulator, grouping
+        // consecutive messages per port so each group lands in the sink
+        // queue through one push_batch.  A corrupt frame poisons the
+        // connection, but everything decoded before it is still
+        // delivered below.
+        let mut consumed = 0usize;
+        let mut deliveries: Vec<(String, Vec<Message>)> = Vec::new();
+        let mut frame_err: Option<FloeError> = None;
+        loop {
+            let avail = acc.len() - consumed;
+            if avail < 4 {
+                break;
+            }
+            let total = u32::from_le_bytes(
+                acc[consumed..consumed + 4].try_into().expect("4 bytes"),
+            ) as usize;
+            if total < 2 || total > MAX_FRAME {
+                frame_err = Some(FloeError::Channel(format!(
+                    "tcp: bad frame length {total}"
+                )));
+                break;
+            }
+            if avail < 4 + total {
+                break; // incomplete frame; wait for more bytes
+            }
+            let frame = &acc[consumed + 4..consumed + 4 + total];
+            let port_len =
+                u16::from_le_bytes([frame[0], frame[1]]) as usize;
+            if 2 + port_len > frame.len() {
+                frame_err = Some(FloeError::Channel(
+                    "tcp: bad port length".into(),
+                ));
+                break;
+            }
+            let port = String::from_utf8_lossy(&frame[2..2 + port_len])
+                .into_owned();
+            let msg = match Message::decode(&frame[2 + port_len..]) {
+                Ok(m) => m,
+                Err(e) => {
+                    frame_err = Some(e);
+                    break;
+                }
+            };
+            let same_port =
+                matches!(deliveries.last(), Some((p, _)) if *p == port);
+            if same_port {
+                deliveries.last_mut().expect("non-empty").1.push(msg);
+            } else {
+                deliveries.push((port, vec![msg]));
+            }
+            consumed += 4 + total;
         }
-        let total = u32::from_le_bytes(len_buf) as usize;
-        if total < 2 || total > 64 << 20 {
-            return Err(FloeError::Channel(format!(
-                "tcp: bad frame length {total}"
-            )));
+        if consumed > 0 {
+            acc.drain(..consumed);
         }
-        let mut frame = vec![0u8; total];
-        read_fully(&mut stream, &mut frame, stop)?;
-        let port_len =
-            u16::from_le_bytes([frame[0], frame[1]]) as usize;
-        if 2 + port_len > frame.len() {
-            return Err(FloeError::Channel("tcp: bad port length".into()));
-        }
-        let port =
-            String::from_utf8_lossy(&frame[2..2 + port_len]).into_owned();
-        let msg = Message::decode(&frame[2 + port_len..])?;
-        match ports.get(&port) {
-            Some(q) => {
-                if q.push(msg).is_err() {
-                    return Ok(()); // flake shut down
+        for (port, batch) in deliveries {
+            match ports.get(&port) {
+                Some(q) => {
+                    if q.push_batch(batch).is_err() {
+                        return Ok(()); // flake shut down
+                    }
+                }
+                None => {
+                    crate::log_warn!(
+                        "tcp: dropping {} message(s) for unknown port \
+                         {port}",
+                        batch.len()
+                    );
                 }
             }
-            None => {
-                log::warn!("tcp: dropping message for unknown port {port}");
-            }
         }
-    }
-    Ok(())
-}
-
-fn read_fully(
-    stream: &mut TcpStream,
-    buf: &mut [u8],
-    stop: &AtomicBool,
-) -> Result<()> {
-    let mut read = 0;
-    while read < buf.len() {
-        if stop.load(Ordering::SeqCst) {
-            return Err(FloeError::Channel("tcp: shutdown mid-frame".into()));
-        }
-        match stream.read(&mut buf[read..]) {
-            Ok(0) => {
-                return Err(FloeError::Channel(
-                    "tcp: peer closed mid-frame".into(),
-                ))
-            }
-            Ok(n) => read += n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                ) => {}
-            Err(e) => return Err(e.into()),
+        if let Some(e) = frame_err {
+            return Err(e);
         }
     }
     Ok(())
@@ -181,24 +229,26 @@ impl TcpSender {
         })
     }
 
-    fn frame(&self, msg: &Message) -> Vec<u8> {
+    fn frame_into(&self, msg: &Message, out: &mut Vec<u8>) {
         let body = msg.encode();
         let port = self.port_name.as_bytes();
         let total = 2 + port.len() + body.len();
-        let mut out = Vec::with_capacity(4 + total);
+        out.reserve(4 + total);
         out.extend_from_slice(&(total as u32).to_le_bytes());
         out.extend_from_slice(&(port.len() as u16).to_le_bytes());
         out.extend_from_slice(port);
         out.extend_from_slice(&body);
-        out
     }
-}
 
-impl Transport for TcpSender {
-    fn send(&self, msg: Message) -> Result<()> {
-        let frame = self.frame(&msg);
+    /// Write a pre-framed buffer, reconnecting once on a broken pipe.
+    ///
+    /// Delivery is at-least-once across reconnects: if the connection
+    /// breaks mid-buffer, the retry resends the whole buffer, so frames
+    /// the receiver already consumed may arrive again.  With batching
+    /// the duplication window is the batch, not one message — sinks that
+    /// cannot tolerate duplicates should dedupe on `Message::seq`.
+    fn write_frames(&self, frames: &[u8]) -> Result<()> {
         let mut guard = self.stream.lock().expect("tcp sender poisoned");
-        // One reconnect attempt on a broken pipe.
         for attempt in 0..2 {
             if guard.is_none() {
                 *guard = Some(
@@ -211,10 +261,10 @@ impl Transport for TcpSender {
                 );
             }
             let stream = guard.as_mut().expect("just set");
-            match stream.write_all(&frame).and_then(|_| stream.flush()) {
+            match stream.write_all(frames).and_then(|_| stream.flush()) {
                 Ok(()) => return Ok(()),
                 Err(e) if attempt == 0 => {
-                    log::debug!("tcp send failed ({e}), reconnecting");
+                    crate::log_debug!("tcp send failed ({e}), reconnecting");
                     *guard = None;
                 }
                 Err(e) => {
@@ -227,6 +277,27 @@ impl Transport for TcpSender {
         }
         unreachable!()
     }
+}
+
+impl Transport for TcpSender {
+    fn send(&self, msg: Message) -> Result<()> {
+        let mut frame = Vec::with_capacity(64);
+        self.frame_into(&msg, &mut frame);
+        self.write_frames(&frame)
+    }
+
+    /// Frame the whole batch into one buffer and write it with a single
+    /// syscall.
+    fn send_batch(&self, msgs: Vec<Message>) -> Result<()> {
+        if msgs.is_empty() {
+            return Ok(());
+        }
+        let mut frames = Vec::with_capacity(64 * msgs.len());
+        for msg in &msgs {
+            self.frame_into(msg, &mut frames);
+        }
+        self.write_frames(&frames)
+    }
 
     fn describe(&self) -> String {
         format!("tcp:{}#{}", self.endpoint, self.port_name)
@@ -237,8 +308,8 @@ impl Transport for TcpSender {
 mod tests {
     use super::*;
 
-    fn start_pair() -> (TcpReceiver, Arc<SyncQueue<Message>>, String) {
-        let q = Arc::new(SyncQueue::new(64));
+    fn start_pair() -> (TcpReceiver, Arc<ShardedQueue<Message>>, String) {
+        let q = Arc::new(ShardedQueue::with_default_shards(4096));
         let mut ports = HashMap::new();
         ports.insert("in".to_string(), Arc::clone(&q));
         let rx = TcpReceiver::start(0, ports).unwrap();
@@ -269,6 +340,22 @@ mod tests {
         }
         for i in 0..500 {
             assert_eq!(q.pop().unwrap().as_text(), Some(&*format!("m{i}")));
+        }
+        rx.shutdown();
+    }
+
+    #[test]
+    fn batch_send_arrives_in_order() {
+        let (mut rx, q, ep) = start_pair();
+        let tx = TcpSender::connect(&ep, "in").unwrap();
+        for chunk in 0..10 {
+            let batch: Vec<Message> = (0..100)
+                .map(|i| Message::text(format!("b{}", chunk * 100 + i)))
+                .collect();
+            tx.send_batch(batch).unwrap();
+        }
+        for i in 0..1000 {
+            assert_eq!(q.pop().unwrap().as_text(), Some(&*format!("b{i}")));
         }
         rx.shutdown();
     }

@@ -107,7 +107,11 @@ impl Container {
     /// Re-grant cores to a flake (dynamic adaptation).  Fails if the
     /// container cannot cover the increase — cross-VM elasticity is the
     /// manager's job.
-    pub fn set_flake_cores(&self, pellet_id: &str, cores: usize) -> Result<()> {
+    pub fn set_flake_cores(
+        &self,
+        pellet_id: &str,
+        cores: usize,
+    ) -> Result<()> {
         let cores = cores.max(1);
         let mut inner = self.inner.lock().expect("container poisoned");
         let current =
@@ -260,6 +264,8 @@ mod tests {
             cores,
             alpha: 2,
             queue_capacity: 64,
+            batch_size: crate::flake::DEFAULT_BATCH_SIZE,
+            input_shards: 2,
         }
     }
 

@@ -28,8 +28,16 @@ use crate::util::time::{Clock, WallClock};
 pub struct LaunchOptions {
     /// Instances per core.
     pub alpha: usize,
-    /// Input queue capacity per port.
+    /// Input queue capacity per port (aggregate across the port's
+    /// shards: each shard holds `queue_capacity / input_shards`, so a
+    /// single producer thread blocks at that per-shard bound).
     pub queue_capacity: usize,
+    /// Messages moved per batched channel operation on the hot path
+    /// (see [`crate::flake::FlakeConfig::batch_size`]); 1 disables
+    /// batching.
+    pub batch_size: usize,
+    /// Producer shards per flake input port.
+    pub input_shards: usize,
     /// Adaptation strategy factory per pellet id; None = no monitor.
     pub adaptation: Option<AdaptationSetup>,
 }
@@ -50,6 +58,8 @@ impl Default for LaunchOptions {
         LaunchOptions {
             alpha: crate::ALPHA,
             queue_capacity: 4096,
+            batch_size: crate::flake::DEFAULT_BATCH_SIZE,
+            input_shards: crate::channel::DEFAULT_SHARDS,
             adaptation: None,
         }
     }
@@ -293,7 +303,7 @@ impl Coordinator {
     ) -> Result<RunningDataflow> {
         graph.validate()?;
         let order = graph.wiring_order()?;
-        log::info!(
+        crate::log_info!(
             "coordinator: launching '{}' ({} pellets), wiring order {:?}",
             graph.name,
             graph.pellets.len(),
@@ -315,6 +325,8 @@ impl Coordinator {
             let mut cfg = FlakeConfig::from_spec(&spec);
             cfg.alpha = options.alpha;
             cfg.queue_capacity = options.queue_capacity;
+            cfg.batch_size = options.batch_size.max(1);
+            cfg.input_shards = options.input_shards.max(1);
             let container = self.manager.allocate(cfg.cores)?;
             let flake = container.spawn_flake(cfg, factory)?;
             containers.insert(id.clone(), Arc::clone(&container));

@@ -1,42 +1,68 @@
-//! Crate-wide error type.
+//! Crate-wide error type (std-only; no external error-derive crates in
+//! the offline build environment).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the Floe framework.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum FloeError {
     /// Dataflow graph is malformed (unknown pellet, dangling port, ...).
-    #[error("graph error: {0}")]
     Graph(String),
 
     /// A pellet failed during setup, compute or teardown.
-    #[error("pellet error: {0}")]
     Pellet(String),
 
-    /// A data channel failed (peer gone, framing error, backpressure abort).
-    #[error("channel error: {0}")]
+    /// A data channel failed (peer gone, framing error, backpressure
+    /// abort).
     Channel(String),
 
     /// Resource allocation failed (no cores, no VMs, bad request).
-    #[error("resource error: {0}")]
     Resource(String),
 
     /// XLA/PJRT runtime failure (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Text parsing failure (JSON, XML, CSV, HTTP, graph files).
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// Control-plane failure (REST endpoint, coordinator RPC).
-    #[error("control error: {0}")]
     Control(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// I/O failure (sockets, files).
+    Io(std::io::Error),
 }
 
+impl fmt::Display for FloeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FloeError::Graph(m) => write!(f, "graph error: {m}"),
+            FloeError::Pellet(m) => write!(f, "pellet error: {m}"),
+            FloeError::Channel(m) => write!(f, "channel error: {m}"),
+            FloeError::Resource(m) => write!(f, "resource error: {m}"),
+            FloeError::Runtime(m) => write!(f, "runtime error: {m}"),
+            FloeError::Parse(m) => write!(f, "parse error: {m}"),
+            FloeError::Control(m) => write!(f, "control error: {m}"),
+            FloeError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FloeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FloeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FloeError {
+    fn from(e: std::io::Error) -> Self {
+        FloeError::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for FloeError {
     fn from(e: xla::Error) -> Self {
         FloeError::Runtime(e.to_string())
@@ -45,3 +71,28 @@ impl From<xla::Error> for FloeError {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, FloeError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        assert_eq!(
+            FloeError::Graph("bad edge".into()).to_string(),
+            "graph error: bad edge"
+        );
+        assert_eq!(
+            FloeError::Channel("closed".into()).to_string(),
+            "channel error: closed"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::other("boom");
+        let e: FloeError = io.into();
+        assert!(e.to_string().contains("boom"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -136,22 +136,11 @@ impl Flake {
         let mut queued = BTreeMap::new();
         for port in self.input_ports() {
             let q = self.input_queue(&port)?;
-            // Non-destructive read: drain then push back in order.
-            let mut msgs = Vec::new();
-            while let Some(m) = q.try_pop() {
-                msgs.push(m);
-            }
-            let mut encoded = Vec::with_capacity(msgs.len());
-            for m in msgs {
-                encoded.push(m.encode());
-                // push cannot block: we just emptied the queue.
-            }
-            for bytes in &encoded {
-                let msg = Message::decode(bytes)?;
-                q.push(msg).map_err(|_| {
-                    FloeError::Channel("checkpoint: queue closed".into())
-                })?;
-            }
+            // Non-destructive capture: the sharded queue snapshots its
+            // buffered messages in place (per-shard FIFO order), so
+            // nothing is popped and capacity never blocks the capture.
+            let encoded: Vec<Vec<u8>> =
+                q.snapshot().iter().map(Message::encode).collect();
             queued.insert(port, encoded);
         }
         let cp = FlakeCheckpoint {
@@ -167,6 +156,12 @@ impl Flake {
     /// Restore a checkpoint into this flake: state object contents are
     /// replaced and queued messages re-injected (used when resuming a
     /// pellet on a fresh flake after failure).
+    ///
+    /// Replay happens from the calling thread, which pins one shard per
+    /// input port, so keep the flake running (not paused) during
+    /// restore: the dispatcher drains the shard as it fills, letting
+    /// replays larger than the per-shard bound
+    /// (`queue_capacity / input_shards`) complete under backpressure.
     pub fn restore(&self, cp: &FlakeCheckpoint) -> Result<()> {
         if cp.pellet_id != self.pellet_id() {
             return Err(FloeError::Pellet(format!(
@@ -216,6 +211,8 @@ mod tests {
             cores: 1,
             alpha: 2,
             queue_capacity: 256,
+            batch_size: crate::flake::DEFAULT_BATCH_SIZE,
+            input_shards: 2,
         };
         Flake::start(
             cfg,

@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::channel::{SyncQueue, Transport};
+use crate::channel::{ShardedQueue, SyncQueue, Transport};
 use crate::error::{FloeError, Result};
 use crate::graph::{
     InPortSpec, MergeMode, OutPortSpec, PelletSpec, TriggerMode, WindowSpec,
@@ -38,6 +38,10 @@ use crate::pellet::{
     Pellet, PelletContext, PelletFactory, PortIo, StateObject,
 };
 use crate::ALPHA;
+
+/// Default dispatcher/transport batch size: how many messages move per
+/// lock acquisition (and per TCP syscall) on the hot path.
+pub const DEFAULT_BATCH_SIZE: usize = 64;
 
 /// Flake construction parameters, usually derived from a [`PelletSpec`].
 #[derive(Clone)]
@@ -54,8 +58,15 @@ pub struct FlakeConfig {
     pub cores: usize,
     /// Instances per core (paper: α = 4).
     pub alpha: usize,
-    /// Input queue capacity per port (backpressure bound).
+    /// Input queue capacity per port (backpressure bound, split across
+    /// the port's shards).
     pub queue_capacity: usize,
+    /// Messages moved per batched queue operation on the hot path.
+    /// 1 disables batching (the pre-batching single-message path).
+    pub batch_size: usize,
+    /// Producer shards per input port (see
+    /// [`crate::channel::ShardedQueue`]).
+    pub input_shards: usize,
 }
 
 impl FlakeConfig {
@@ -72,6 +83,8 @@ impl FlakeConfig {
             cores: spec.cores.unwrap_or(1),
             alpha: ALPHA,
             queue_capacity: 4096,
+            batch_size: DEFAULT_BATCH_SIZE,
+            input_shards: crate::channel::DEFAULT_SHARDS,
         }
     }
 
@@ -86,7 +99,7 @@ impl FlakeConfig {
 
 struct Shared {
     cfg: FlakeConfig,
-    ports: HashMap<String, Arc<SyncQueue<Message>>>,
+    ports: HashMap<String, Arc<ShardedQueue<Message>>>,
     port_order: Vec<String>,
     ready: Arc<SyncQueue<PortIo>>,
     router: RwLock<OutputRouter>,
@@ -118,7 +131,7 @@ impl Shared {
         match result {
             Ok(()) => self.flush_emissions(ctx),
             Err(e) => {
-                log::error!(
+                crate::log_error!(
                     "pellet {} compute failed: {e}",
                     self.cfg.pellet_id
                 );
@@ -136,10 +149,20 @@ impl Shared {
 
     fn route_emissions(&self, emitted: Vec<(String, Message)>) {
         let router = self.router.read().expect("router poisoned");
+        // Group by port (order preserved within a port; ordering across
+        // ports carries no contract) so every port's emissions move as
+        // one batch through the router and its transports.
+        let mut by_port: Vec<(String, Vec<Message>)> = Vec::new();
         for (port, msg) in emitted {
-            self.probes.record_emission(1);
-            if let Err(e) = router.route(&port, msg) {
-                log::error!(
+            match by_port.iter().position(|(p, _)| *p == port) {
+                Some(i) => by_port[i].1.push(msg),
+                None => by_port.push((port, vec![msg])),
+            }
+        }
+        for (port, msgs) in by_port {
+            self.probes.record_emission(msgs.len() as u64);
+            if let Err(e) = router.route_batch(&port, msgs) {
+                crate::log_error!(
                     "pellet {} route to '{port}' failed: {e}",
                     self.cfg.pellet_id
                 );
@@ -170,10 +193,18 @@ impl Flake {
     pub fn start(cfg: FlakeConfig, factory: PelletFactory) -> Arc<Flake> {
         let mut ports = HashMap::new();
         let mut port_order = Vec::new();
+        // Synchronous merge aligns one message per port in arrival order,
+        // so its ports stay single-shard: a sharded sweep would interleave
+        // per-producer FIFOs out of arrival order and break alignment.
+        let shards = if cfg.merge == MergeMode::Synchronous {
+            1
+        } else {
+            cfg.input_shards.max(1)
+        };
         for p in &cfg.inputs {
             ports.insert(
                 p.name.clone(),
-                Arc::new(SyncQueue::new(cfg.queue_capacity)),
+                Arc::new(ShardedQueue::new(shards, cfg.queue_capacity)),
             );
             port_order.push(p.name.clone());
         }
@@ -207,8 +238,8 @@ impl Flake {
             worker_loop(&worker_shared, index, stop_flag);
         });
         let instances = shared.cfg.instances_for(cores);
-        let pool =
-            CorePool::new(&format!("flake-{}", shared.cfg.pellet_id), instances, body);
+        let label = format!("flake-{}", shared.cfg.pellet_id);
+        let pool = CorePool::new(&label, instances, body);
 
         // Dispatcher thread.
         let disp_shared = Arc::clone(&shared);
@@ -239,7 +270,10 @@ impl Flake {
 
     /// Input queue for a port — the coordinator wires upstream transports
     /// to this, and tests/apps inject messages directly.
-    pub fn input_queue(&self, port: &str) -> Result<Arc<SyncQueue<Message>>> {
+    pub fn input_queue(
+        &self,
+        port: &str,
+    ) -> Result<Arc<ShardedQueue<Message>>> {
         self.shared.ports.get(port).cloned().ok_or_else(|| {
             FloeError::Graph(format!(
                 "flake {}: no input port '{port}'",
@@ -403,7 +437,7 @@ impl Flake {
                 );
             }
         }
-        log::info!(
+        crate::log_info!(
             "flake {}: updated to version {new_version} ({})",
             self.shared.cfg.pellet_id,
             if sync { "sync" } else { "async" }
@@ -476,6 +510,7 @@ fn dispatcher_loop(shared: &Shared) {
     } else {
         None
     };
+    let batch_size = shared.cfg.batch_size.max(1);
     let mut batch: Vec<Message> = Vec::new();
     let mut idle_polls = 0u32;
     while !shared.stop.load(Ordering::SeqCst) {
@@ -485,47 +520,58 @@ fn dispatcher_loop(shared: &Shared) {
         }
         match single_window {
             Some(WindowSpec::None) => {
+                // Batched fast path: drain up to batch_size messages
+                // under one set of locks, wrap them, and hand them to the
+                // workers in one ready-queue push.
                 let port = &shared.port_order[0];
-                match shared.ports[port]
-                    .pop_timeout(Duration::from_millis(10))
-                {
-                    Ok(Some(msg)) => {
-                        shared.probes.record_arrival(1);
-                        if shared
-                            .ready
-                            .push(PortIo::Single(port.clone(), msg))
-                            .is_err()
-                        {
+                match shared.ports[port].pop_batch_timeout(
+                    batch_size,
+                    Duration::from_millis(10),
+                ) {
+                    Ok(msgs) => {
+                        if msgs.is_empty() {
+                            continue; // timeout
+                        }
+                        shared.probes.record_arrival(msgs.len() as u64);
+                        let items: Vec<PortIo> = msgs
+                            .into_iter()
+                            .map(|m| PortIo::Single(port.clone(), m))
+                            .collect();
+                        if shared.ready.push_batch(items).is_err() {
                             return;
                         }
                     }
-                    Ok(None) => {}
                     Err(_) => return, // input closed
                 }
                 continue;
             }
             Some(WindowSpec::Count(n)) => {
                 let port = &shared.port_order[0];
+                // Take at most what completes the current window so
+                // landmark flushes stay aligned with window boundaries.
+                let want = n.saturating_sub(batch.len()).clamp(1, batch_size);
                 match shared.ports[port]
-                    .pop_timeout(Duration::from_millis(10))
+                    .pop_batch_timeout(want, Duration::from_millis(10))
                 {
-                    Ok(Some(msg)) => {
+                    Ok(msgs) if !msgs.is_empty() => {
                         idle_polls = 0;
-                        shared.probes.record_arrival(1);
-                        let flush = msg.is_landmark();
-                        batch.push(msg);
-                        if batch.len() >= n || flush {
-                            let b = std::mem::take(&mut batch);
-                            if shared
-                                .ready
-                                .push(PortIo::Window(port.clone(), b))
-                                .is_err()
-                            {
-                                return;
+                        shared.probes.record_arrival(msgs.len() as u64);
+                        for msg in msgs {
+                            let flush = msg.is_landmark();
+                            batch.push(msg);
+                            if batch.len() >= n || flush {
+                                let b = std::mem::take(&mut batch);
+                                if shared
+                                    .ready
+                                    .push(PortIo::Window(port.clone(), b))
+                                    .is_err()
+                                {
+                                    return;
+                                }
                             }
                         }
                     }
-                    Ok(None) => {
+                    Ok(_) => {
                         // Sustained idle: flush a partial batch so tail
                         // messages are not held indefinitely, but give
                         // bursts a few polls to refill the window first
@@ -599,7 +645,9 @@ fn dispatch_synchronous(shared: &Shared) -> bool {
 }
 
 /// Interleaved merge: deliver per-port messages as they arrive, applying
-/// window annotations (P3/P6).
+/// window annotations (P3/P6).  Each port is drained in batches of up to
+/// `batch_size` per sweep so busy ports pay one lock round-trip per batch
+/// without starving the others.
 fn dispatch_interleaved(
     shared: &Shared,
     windows: &mut BTreeMap<String, (Vec<Message>, Instant)>,
@@ -609,14 +657,16 @@ fn dispatch_interleaved(
     if nports == 0 {
         return false;
     }
+    let batch_size = shared.cfg.batch_size.max(1);
     let mut progressed = false;
     for k in 0..nports {
         let pi = (*rr_port + k) % nports;
         let port = &shared.port_order[pi];
-        let Some(msg) = shared.ports[port].try_pop() else {
+        let msgs = shared.ports[port].try_pop_batch(batch_size);
+        if msgs.is_empty() {
             continue;
-        };
-        shared.probes.record_arrival(1);
+        }
+        shared.probes.record_arrival(msgs.len() as u64);
         progressed = true;
         let spec = shared
             .cfg
@@ -626,11 +676,11 @@ fn dispatch_interleaved(
             .expect("port spec");
         match spec.window {
             WindowSpec::None => {
-                if shared
-                    .ready
-                    .push(PortIo::Single(port.clone(), msg))
-                    .is_err()
-                {
+                let items: Vec<PortIo> = msgs
+                    .into_iter()
+                    .map(|m| PortIo::Single(port.clone(), m))
+                    .collect();
+                if shared.ready.push_batch(items).is_err() {
                     return progressed;
                 }
             }
@@ -638,24 +688,29 @@ fn dispatch_interleaved(
                 let entry = windows
                     .entry(port.clone())
                     .or_insert_with(|| (Vec::new(), Instant::now()));
-                // Landmarks flush the window early so reducers see them.
-                let is_landmark = msg.is_landmark();
-                entry.0.push(msg);
-                if entry.0.len() >= n || is_landmark {
-                    let batch = std::mem::take(&mut entry.0);
-                    let _ = shared
-                        .ready
-                        .push(PortIo::Window(port.clone(), batch));
+                for msg in msgs {
+                    // Landmarks flush the window early so reducers see
+                    // them.
+                    let is_landmark = msg.is_landmark();
+                    entry.0.push(msg);
+                    if entry.0.len() >= n || is_landmark {
+                        let batch = std::mem::take(&mut entry.0);
+                        let _ = shared
+                            .ready
+                            .push(PortIo::Window(port.clone(), batch));
+                    }
                 }
             }
             WindowSpec::Time(_) => {
                 let entry = windows
                     .entry(port.clone())
                     .or_insert_with(|| (Vec::new(), Instant::now()));
-                if entry.0.is_empty() {
-                    entry.1 = Instant::now();
+                for msg in msgs {
+                    if entry.0.is_empty() {
+                        entry.1 = Instant::now();
+                    }
+                    entry.0.push(msg);
                 }
-                entry.0.push(msg);
             }
         }
     }
@@ -708,7 +763,7 @@ fn make_instance(
         Arc::clone(&shared.interrupt),
     );
     if let Err(e) = pellet.setup(&mut ctx) {
-        log::error!("pellet {} setup failed: {e}", shared.cfg.pellet_id);
+        crate::log_error!("pellet {} setup failed: {e}", shared.cfg.pellet_id);
     }
     shared.flush_emissions(&mut ctx);
     (version, pellet, ctx)
@@ -814,7 +869,7 @@ fn worker_loop(shared: &Shared, index: usize, stop_flag: &AtomicBool) {
                     shared.probes.record_completion(1, nanos.min(1_000_000));
                 }
                 if let Err(e) = result {
-                    log::error!(
+                    crate::log_error!(
                         "pellet {} pull failed: {e}",
                         shared.cfg.pellet_id
                     );
@@ -838,8 +893,8 @@ mod tests {
     use crate::graph::SplitMode;
 
     fn collect_transport(
-    ) -> (Arc<SyncQueue<Message>>, Arc<dyn Transport>) {
-        let q = Arc::new(SyncQueue::new(4096));
+    ) -> (Arc<ShardedQueue<Message>>, Arc<dyn Transport>) {
+        let q = Arc::new(ShardedQueue::with_default_shards(4096));
         let t: Arc<dyn Transport> = Arc::new(InProcTransport {
             queue: Arc::clone(&q),
             label: "out".into(),
@@ -866,6 +921,8 @@ mod tests {
             cores: 1,
             alpha: 2,
             queue_capacity: 1024,
+            batch_size: DEFAULT_BATCH_SIZE,
+            input_shards: 2,
         }
     }
 

@@ -71,48 +71,87 @@ impl OutputRouter {
         self.ports.get(port).map(|p| p.targets.len()).unwrap_or(0)
     }
 
-    /// Route one message according to the port's split annotation.
-    pub fn route(&self, port: &str, msg: Message) -> Result<()> {
+    /// Route a whole batch of messages according to the port's split
+    /// annotation, delivering one [`Transport::send_batch`] per target
+    /// instead of one `send` per message.  Per-target message order
+    /// matches what repeated [`OutputRouter::route`] calls would produce
+    /// (the round-robin counter advances once per data message, landmarks
+    /// broadcast to every edge).
+    pub fn route_batch(
+        &self,
+        port: &str,
+        msgs: Vec<Message>,
+    ) -> Result<()> {
+        if msgs.is_empty() {
+            return Ok(());
+        }
         let routes = self.ports.get(port).ok_or_else(|| {
             FloeError::Channel(format!("router: no out port '{port}'"))
         })?;
         if routes.targets.is_empty() {
-            self.dropped.fetch_add(1, Ordering::Relaxed);
+            self.dropped.fetch_add(msgs.len(), Ordering::Relaxed);
             return Ok(());
         }
-        self.routed.fetch_add(1, Ordering::Relaxed);
-        if msg.is_landmark() {
-            // Control messages reach every downstream pellet.
-            for t in &routes.targets {
-                t.send(msg.clone())?;
+        self.routed.fetch_add(msgs.len(), Ordering::Relaxed);
+        let nt = routes.targets.len();
+        if nt == 1 {
+            if routes.split == SplitMode::RoundRobin {
+                // Keep the counter in step with what repeated route()
+                // calls would leave behind (targets can be added later).
+                let data = msgs.iter().filter(|m| !m.is_landmark()).count();
+                routes.rr.fetch_add(data, Ordering::Relaxed);
             }
-            return Ok(());
+            return routes.targets[0].send_batch(msgs);
         }
-        match routes.split {
-            SplitMode::Duplicate => {
-                for t in &routes.targets {
-                    t.send(msg.clone())?;
+        let mut per: Vec<Vec<Message>> = (0..nt).map(|_| Vec::new()).collect();
+        for msg in msgs {
+            if msg.is_landmark() || routes.split == SplitMode::Duplicate {
+                for batch in per.iter_mut() {
+                    batch.push(msg.clone());
+                }
+                continue;
+            }
+            let i = match routes.split {
+                SplitMode::RoundRobin => {
+                    routes.rr.fetch_add(1, Ordering::Relaxed) % nt
+                }
+                SplitMode::KeyHash => {
+                    let key = msg
+                        .key
+                        .as_deref()
+                        .or_else(|| msg.as_text())
+                        .unwrap_or("");
+                    (key_hash(key) % nt as u64) as usize
+                }
+                SplitMode::Duplicate => unreachable!("handled above"),
+            };
+            per[i].push(msg);
+        }
+        // Deliver to every target even if one fails (e.g. a sink shut
+        // down first during teardown): a dead edge must not starve the
+        // healthy ones.  The first error is reported after delivery.
+        let mut first_err = None;
+        for (i, batch) in per.into_iter().enumerate() {
+            if !batch.is_empty() {
+                if let Err(e) = routes.targets[i].send_batch(batch) {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
                 }
             }
-            SplitMode::RoundRobin => {
-                let i = routes.rr.fetch_add(1, Ordering::Relaxed)
-                    % routes.targets.len();
-                routes.targets[i].send(msg)?;
-            }
-            SplitMode::KeyHash => {
-                // Hash the explicit key; fall back to text payload so
-                // un-keyed messages still route deterministically.
-                let key = msg
-                    .key
-                    .as_deref()
-                    .or_else(|| msg.as_text())
-                    .unwrap_or("");
-                let i =
-                    (key_hash(key) % routes.targets.len() as u64) as usize;
-                routes.targets[i].send(msg)?;
-            }
         }
-        Ok(())
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    /// Route one message according to the port's split annotation.
+    /// Delegates to [`OutputRouter::route_batch`], so the split,
+    /// landmark-broadcast and deliver-to-all-despite-errors semantics
+    /// are identical on both paths.
+    pub fn route(&self, port: &str, msg: Message) -> Result<()> {
+        self.route_batch(port, vec![msg])
     }
 }
 
@@ -125,11 +164,11 @@ impl Default for OutputRouter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::channel::{InProcTransport, SyncQueue};
+    use crate::channel::{InProcTransport, ShardedQueue};
     use crate::message::Landmark;
 
-    fn sink() -> (Arc<SyncQueue<Message>>, Arc<dyn Transport>) {
-        let q = Arc::new(SyncQueue::new(1024));
+    fn sink() -> (Arc<ShardedQueue<Message>>, Arc<dyn Transport>) {
+        let q = Arc::new(ShardedQueue::with_default_shards(1024));
         let t: Arc<dyn Transport> = Arc::new(InProcTransport {
             queue: Arc::clone(&q),
             label: "t".into(),
@@ -140,7 +179,7 @@ mod tests {
     fn router_with(
         split: SplitMode,
         n: usize,
-    ) -> (OutputRouter, Vec<Arc<SyncQueue<Message>>>) {
+    ) -> (OutputRouter, Vec<Arc<ShardedQueue<Message>>>) {
         let mut r = OutputRouter::new();
         r.add_port("out", split);
         let mut queues = Vec::new();
@@ -217,6 +256,83 @@ mod tests {
                 assert_eq!(q.len(), 1, "split {split:?}");
             }
         }
+    }
+
+    #[test]
+    fn route_batch_round_robin_matches_single_path() {
+        let (rb, qb) = router_with(SplitMode::RoundRobin, 3);
+        let (rs, qs) = router_with(SplitMode::RoundRobin, 3);
+        let msgs: Vec<Message> =
+            (0..9).map(|i| Message::text(format!("{i}"))).collect();
+        rb.route_batch("out", msgs.clone()).unwrap();
+        for m in msgs {
+            rs.route("out", m).unwrap();
+        }
+        for (b, s) in qb.iter().zip(qs.iter()) {
+            assert_eq!(b.len(), 3);
+            while let Some(want) = s.try_pop() {
+                let got = b.try_pop().unwrap();
+                assert_eq!(got.as_text(), want.as_text());
+            }
+        }
+    }
+
+    #[test]
+    fn route_batch_keyhash_groups_keys() {
+        let (r, qs) = router_with(SplitMode::KeyHash, 4);
+        let msgs: Vec<Message> = (0..100)
+            .map(|i| Message::text("v").with_key(format!("key-{}", i % 10)))
+            .collect();
+        r.route_batch("out", msgs).unwrap();
+        let total: usize = qs.iter().map(|q| q.len()).sum();
+        assert_eq!(total, 100);
+        for q in &qs {
+            assert_eq!(q.len() % 10, 0, "len={}", q.len());
+        }
+    }
+
+    #[test]
+    fn route_batch_broadcasts_landmarks_and_duplicates() {
+        let (r, qs) = router_with(SplitMode::RoundRobin, 3);
+        r.route_batch(
+            "out",
+            vec![
+                Message::text("a"),
+                Message::landmark(Landmark::WindowEnd("w".into())),
+                Message::text("b"),
+            ],
+        )
+        .unwrap();
+        // Every sink sees the landmark; the two data messages round-robin.
+        let lens: Vec<usize> = qs.iter().map(|q| q.len()).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 3 + 2);
+        for q in &qs {
+            assert!(q.len() >= 1, "{lens:?}");
+        }
+        let (r2, qs2) = router_with(SplitMode::Duplicate, 2);
+        r2.route_batch(
+            "out",
+            vec![Message::text("x"), Message::text("y")],
+        )
+        .unwrap();
+        for q in &qs2 {
+            assert_eq!(q.len(), 2);
+        }
+    }
+
+    #[test]
+    fn route_batch_on_sink_port_counts_drops() {
+        let mut r = OutputRouter::new();
+        r.add_port("out", SplitMode::RoundRobin);
+        r.route_batch(
+            "out",
+            vec![Message::text("a"), Message::text("b")],
+        )
+        .unwrap();
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 2);
+        assert!(r
+            .route_batch("missing", vec![Message::text("x")])
+            .is_err());
     }
 
     #[test]

@@ -104,7 +104,7 @@ impl CloudProvider for SimulatedCloud {
         if !self.provisioning_delay.is_zero() {
             std::thread::sleep(self.provisioning_delay);
         }
-        log::info!("cloud: provisioned {id} ({:?})", class);
+        crate::log_info!("cloud: provisioned {id} ({:?})", class);
         Ok(VmHandle { id, class })
     }
 
@@ -113,7 +113,7 @@ impl CloudProvider for SimulatedCloud {
         used.remove(id).ok_or_else(|| {
             FloeError::Resource(format!("cloud: unknown vm '{id}'"))
         })?;
-        log::info!("cloud: released {id}");
+        crate::log_info!("cloud: released {id}");
         Ok(())
     }
 
@@ -278,7 +278,9 @@ mod tests {
     #[test]
     fn release_idle_returns_vms() {
         let cloud = SimulatedCloud::new(64, Duration::ZERO);
-        let mgr = ResourceManager::new(Arc::clone(&cloud) as Arc<dyn CloudProvider>);
+        let mgr = ResourceManager::new(
+            Arc::clone(&cloud) as Arc<dyn CloudProvider>
+        );
         let c = mgr.allocate(2).unwrap();
         assert_eq!(cloud.active_vms(), 1);
         // Container is empty -> released.
@@ -315,6 +317,8 @@ mod tests {
             cores,
             alpha: 1,
             queue_capacity: 16,
+            batch_size: crate::flake::DEFAULT_BATCH_SIZE,
+            input_shards: 2,
         };
         c.spawn_flake(
             cfg,

@@ -7,13 +7,21 @@
 //! with [`crate::util::json`]) names each entry point and its input shapes
 //! so callers can validate before dispatch.
 //!
-//! One [`LoadedKernel`] per entry point; compilation happens once at load,
+//! One loaded kernel per entry point; compilation happens once at load,
 //! execution is thread-safe behind an internal mutex (the PJRT CPU client is
 //! not documented re-entrant through this binding, and the flake layer
 //! provides the parallelism we need across pellet instances).
+//!
+//! The PJRT bridge needs the vendored `xla` binding, which the offline
+//! build environment may not provide, so everything touching it is gated
+//! behind the off-by-default `xla` cargo feature.  Without the feature
+//! the manifest/tensor model still compiles and [`XlaRuntime::load`]
+//! returns a runtime error, keeping callers (CLI, clustering app,
+//! benches) source-compatible.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "xla")]
 use std::sync::Mutex;
 
 use crate::error::{FloeError, Result};
@@ -106,7 +114,7 @@ impl Manifest {
     }
 }
 
-/// Input tensor handed to [`LoadedKernel::execute`].
+/// Input tensor handed to [`XlaRuntime::execute`].
 #[derive(Debug, Clone)]
 pub enum Tensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
@@ -152,6 +160,7 @@ impl Tensor {
         }
     }
 
+    #[cfg(feature = "xla")]
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> =
             self.shape().iter().map(|&d| d as i64).collect();
@@ -162,6 +171,7 @@ impl Tensor {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "xla")]
     fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> =
@@ -180,6 +190,7 @@ impl Tensor {
     }
 }
 
+#[cfg(feature = "xla")]
 struct RuntimeInner {
     client: xla::PjRtClient,
     /// Entry name -> compiled executable.
@@ -193,6 +204,7 @@ struct RuntimeInner {
 /// internally, so the objects themselves are not thread-safe even though
 /// the PJRT CPU runtime is.  The flake layer provides request-level
 /// parallelism; a kernel call is one batched XLA execution.
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     inner: Mutex<RuntimeInner>,
     specs: HashMap<String, EntrySpec>,
@@ -204,9 +216,12 @@ pub struct XlaRuntime {
 // literals/buffers created during execute) is owned by `RuntimeInner` and
 // only touched while holding `self.inner`; no Rc handle ever crosses the
 // lock boundary, so the non-atomic refcounts are never raced.
+#[cfg(feature = "xla")]
 unsafe impl Send for XlaRuntime {}
+#[cfg(feature = "xla")]
 unsafe impl Sync for XlaRuntime {}
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Create a CPU PJRT client and load+compile every manifest entry in
     /// `dir` (typically `artifacts/`).
@@ -232,11 +247,11 @@ impl XlaRuntime {
             )?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)?;
-            log::debug!("runtime: compiled {}", entry.name);
+            crate::log_debug!("runtime: compiled {}", entry.name);
             kernels.insert(entry.name.clone(), exe);
             specs.insert(entry.name.clone(), entry.clone());
         }
-        log::info!(
+        crate::log_info!(
             "runtime: loaded {} kernels from {} (platform {})",
             kernels.len(),
             dir.display(),
@@ -311,6 +326,57 @@ impl XlaRuntime {
             .expect("runtime poisoned")
             .client
             .platform_name()
+    }
+}
+
+/// Stub runtime used when the crate is built without the `xla` feature:
+/// same API surface, but [`XlaRuntime::load`] reports that PJRT is
+/// unavailable instead of compiling kernels.
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    specs: HashMap<String, EntrySpec>,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    /// Always fails: the PJRT bridge is compiled out.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        Err(FloeError::Runtime(format!(
+            "cannot load kernels from {}: built without the 'xla' \
+             feature (PJRT bridge compiled out)",
+            dir.as_ref().display()
+        )))
+    }
+
+    /// Always fails: the PJRT bridge is compiled out.
+    pub fn execute(
+        &self,
+        name: &str,
+        _inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        Err(FloeError::Runtime(format!(
+            "cannot execute '{name}': built without the 'xla' feature"
+        )))
+    }
+
+    /// Manifest spec for an entry point.
+    pub fn spec(&self, name: &str) -> Result<&EntrySpec> {
+        self.specs.get(name).ok_or_else(|| {
+            FloeError::Runtime(format!(
+                "no kernel '{name}' in {}",
+                self.dir.display()
+            ))
+        })
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "unavailable (no 'xla' feature)".to_string()
     }
 }
 

@@ -1,44 +1,56 @@
-//! Minimal env-filtered logger for the `log` facade.
+//! Minimal env-filtered logger, self-contained (the offline build has no
+//! `log` facade crate).
 //!
 //! Level comes from `FLOE_LOG` (`error|warn|info|debug|trace`, default
 //! `info`).  Output goes to stderr with a monotonic timestamp, level and
-//! module path — enough to trace coordinator/flake interactions.
+//! module path — enough to trace coordinator/flake interactions.  Until
+//! [`init`] runs, logging is disabled (mirroring an uninstalled facade).
+//!
+//! Call sites use the crate-root macros [`crate::log_error!`],
+//! [`crate::log_warn!`], [`crate::log_info!`] and [`crate::log_debug!`];
+//! each formats lazily, so a disabled level costs one atomic load.
 
 use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-use log::{Level, LevelFilter, Log, Metadata, Record};
-
-struct FloeLogger {
-    start: Instant,
-    max: Level,
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-impl Log for FloeLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= self.max
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
+impl Level {
+    fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
-        let t = self.start.elapsed().as_secs_f64();
-        let mut err = std::io::stderr().lock();
-        let _ = writeln!(
-            err,
-            "[{t:10.4}s {:5} {}] {}",
-            record.level(),
-            record.target(),
-            record.args()
-        );
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: OnceLock<FloeLogger> = OnceLock::new();
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// 0 = logging disabled (init not called); otherwise the max enabled
+/// level as its numeric rank.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn start_instant() -> &'static Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now)
+}
 
 /// Parse a level name, defaulting to `info`.
 fn parse_level(s: &str) -> Level {
@@ -56,13 +68,67 @@ pub fn init() {
     let level = std::env::var("FLOE_LOG")
         .map(|v| parse_level(&v))
         .unwrap_or(Level::Info);
-    let logger = LOGGER.get_or_init(|| FloeLogger {
-        start: Instant::now(),
-        max: level,
-    });
-    // Err only if a logger is already set — fine for tests calling init twice.
-    let _ = log::set_logger(logger);
-    log::set_max_level(LevelFilter::max());
+    let _ = start_instant();
+    MAX_LEVEL.store(level as u8, Ordering::SeqCst);
+}
+
+/// True when a record at `level` would be written.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Write one record (used through the crate-root macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = start_instant().elapsed().as_secs_f64();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:10.4}s {level:5} {target}] {args}");
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
@@ -79,9 +145,17 @@ mod tests {
     }
 
     #[test]
-    fn init_is_idempotent() {
+    fn init_is_idempotent_and_enables_info() {
         init();
         init();
-        log::info!("logger smoke");
+        assert!(enabled(Level::Error));
+        crate::log_info!("logger smoke");
+    }
+
+    #[test]
+    fn level_ordering_is_severity_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+        assert_eq!(format!("{:5}", Level::Warn), "WARN ");
     }
 }

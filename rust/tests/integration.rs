@@ -10,7 +10,7 @@ use std::time::Duration;
 use floe::adaptation::DynamicStrategy;
 use floe::apps::smartgrid;
 use floe::coordinator::AdaptationSetup;
-use floe::channel::{SyncQueue, TcpReceiver, TcpSender, Transport};
+use floe::channel::{ShardedQueue, TcpReceiver, TcpSender, Transport};
 use floe::coordinator::{Coordinator, LaunchOptions};
 use floe::graph::{GraphBuilder, SplitMode, WindowSpec};
 use floe::manager::{ResourceManager, SimulatedCloud};
@@ -29,9 +29,8 @@ fn smartgrid_pipeline_end_to_end() {
     let store = Arc::new(smartgrid::TripleStore::new());
     smartgrid::register(&registry, Arc::clone(&store));
     let coord = coordinator_with(registry);
-    let run = coord
-        .launch(smartgrid::integration_graph().unwrap(), LaunchOptions::default())
-        .unwrap();
+    let graph = smartgrid::integration_graph().unwrap();
+    let run = coord.launch(graph, LaunchOptions::default()).unwrap();
 
     let mut gen = smartgrid::FeedGen::new(1, 8);
     let mut sent_meter = 0;
@@ -160,7 +159,8 @@ fn tcp_transport_between_flakes() {
         .launch(g_down.build().unwrap(), LaunchOptions::default())
         .unwrap();
     let sink_queue = down.flake("sink").unwrap().input_queue("in").unwrap();
-    let mut ports: HashMap<String, Arc<SyncQueue<Message>>> = HashMap::new();
+    let mut ports: HashMap<String, Arc<ShardedQueue<Message>>> =
+        HashMap::new();
     ports.insert("in".to_string(), sink_queue);
     let mut rx = TcpReceiver::start(0, ports).unwrap();
 

@@ -6,7 +6,9 @@ use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 use floe::adaptation::{AdaptationStrategy, DynamicStrategy};
-use floe::channel::{InProcTransport, SyncQueue, Transport};
+use floe::channel::{
+    InProcTransport, QueueClosed, ShardedQueue, SyncQueue, Transport,
+};
 use floe::flake::{FlakeObservation, OutputRouter};
 use floe::graph::{GraphBuilder, SplitMode};
 use floe::message::{key_hash, Landmark, Message, Payload};
@@ -82,12 +84,12 @@ fn prop_decode_never_panics_on_fuzz() {
 fn router_with_sinks(
     split: SplitMode,
     n: usize,
-) -> (OutputRouter, Vec<Arc<SyncQueue<Message>>>) {
+) -> (OutputRouter, Vec<Arc<ShardedQueue<Message>>>) {
     let mut r = OutputRouter::new();
     r.add_port("out", split);
     let mut qs = Vec::new();
     for i in 0..n {
-        let q = Arc::new(SyncQueue::new(100_000));
+        let q = Arc::new(ShardedQueue::with_default_shards(100_000));
         let t: Arc<dyn Transport> = Arc::new(InProcTransport {
             queue: Arc::clone(&q),
             label: format!("s{i}"),
@@ -287,6 +289,164 @@ fn prop_queue_preserves_order_and_count() {
             next_out += 1;
         }
         assert_eq!(next_in, next_out);
+    });
+}
+
+#[test]
+fn prop_push_batch_pop_batch_no_loss_no_reorder() {
+    run_cases("batch ops keep FIFO and lose nothing", 40, |g| {
+        let cap = g.int(1, 32) as usize;
+        let total = g.int(1, 120) as usize;
+        let max_batch = g.int(1, 17) as usize;
+        // Pre-draw the producer's batch split (Gen stays on this thread).
+        let mut sizes = Vec::new();
+        let mut left = total;
+        while left > 0 {
+            let k = (g.int(1, 16) as usize).min(left);
+            sizes.push(k);
+            left -= k;
+        }
+        let q: Arc<SyncQueue<u64>> = Arc::new(SyncQueue::new(cap));
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            let mut next = 0u64;
+            for k in sizes {
+                let batch: Vec<u64> = (next..next + k as u64).collect();
+                q2.push_batch(batch).unwrap();
+                next += k as u64;
+            }
+        });
+        let mut got = Vec::new();
+        while got.len() < total {
+            got.extend(q.pop_batch(max_batch).unwrap());
+        }
+        producer.join().unwrap();
+        // Batched push through a bounded queue (often total > cap, so the
+        // producer must block) delivers every message exactly once, in
+        // order.
+        assert_eq!(got, (0..total as u64).collect::<Vec<u64>>());
+    });
+}
+
+#[test]
+fn prop_backpressure_holds_producer_until_drain() {
+    run_cases("full queue blocks the producer", 20, |g| {
+        let cap = g.int(1, 8) as usize;
+        let extra = g.int(1, 20) as usize;
+        let q: Arc<SyncQueue<usize>> = Arc::new(SyncQueue::new(cap));
+        for i in 0..cap {
+            q.push(i).unwrap();
+        }
+        // Queue is full: non-blocking pushes must be refused.
+        assert!(q.try_push(cap).is_err());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            q2.push_batch((cap..cap + extra).collect()).unwrap();
+        });
+        // The blocked batch completes only because we drain; everything
+        // arrives in order.
+        let mut got = Vec::new();
+        while got.len() < cap + extra {
+            got.extend(q.pop_batch(3).unwrap());
+        }
+        h.join().unwrap();
+        assert_eq!(got, (0..cap + extra).collect::<Vec<usize>>());
+    });
+}
+
+#[test]
+fn prop_close_drains_remaining_then_queueclosed() {
+    run_cases("close: drain remaining, then QueueClosed", 40, |g| {
+        let cap = g.int(4, 64) as usize;
+        let n = g.int(0, cap as i64) as usize;
+        let q: SyncQueue<usize> = SyncQueue::new(cap);
+        for i in 0..n {
+            q.push(i).unwrap();
+        }
+        q.close();
+        assert!(q.push(999).is_err());
+        assert!(q.push_batch(vec![999]).is_err());
+        let mut got = Vec::new();
+        loop {
+            match q.pop_batch(g.int(1, 8) as usize) {
+                Ok(batch) => got.extend(batch),
+                Err(e) => {
+                    assert_eq!(e, QueueClosed);
+                    break;
+                }
+            }
+        }
+        assert_eq!(got, (0..n).collect::<Vec<usize>>());
+
+        // Same contract on the sharded queue (single-thread pushes pin
+        // one shard, so strict FIFO applies; per-shard capacity covers n).
+        let sq: ShardedQueue<usize> =
+            ShardedQueue::new(g.int(1, 4) as usize, cap * 4);
+        for i in 0..n {
+            sq.push(i).unwrap();
+        }
+        sq.close();
+        assert!(sq.push(999).is_err());
+        let mut got = Vec::new();
+        while let Ok(batch) = sq.pop_batch(5) {
+            got.extend(batch);
+        }
+        assert_eq!(got, (0..n).collect::<Vec<usize>>());
+    });
+}
+
+#[test]
+fn prop_sharded_queue_no_loss_no_per_producer_reorder() {
+    run_cases("sharded queue: per-producer FIFO, no loss", 15, |g| {
+        let shards = g.int(1, 6) as usize;
+        let capacity = g.int(8, 256) as usize;
+        let nprod = g.int(1, 4) as usize;
+        let per = g.int(1, 150) as usize;
+        let q: Arc<ShardedQueue<u64>> =
+            Arc::new(ShardedQueue::new(shards, capacity));
+        let producers: Vec<_> = (0..nprod)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut i = 0usize;
+                    while i < per {
+                        let k = ((p + i) % 5 + 1).min(per - i);
+                        let batch: Vec<u64> = (i..i + k)
+                            .map(|j| ((p as u64) << 32) | j as u64)
+                            .collect();
+                        q.push_batch(batch).unwrap();
+                        i += k;
+                    }
+                })
+            })
+            .collect();
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(batch) = q.pop_batch(32) {
+                    got.extend(batch);
+                }
+                got
+            })
+        };
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got.len(), nprod * per, "message loss");
+        let mut per_prod: Vec<Vec<u64>> = vec![Vec::new(); nprod];
+        for v in got {
+            per_prod[(v >> 32) as usize].push(v & 0xffff_ffff);
+        }
+        for (p, seq) in per_prod.iter().enumerate() {
+            assert_eq!(
+                seq,
+                &(0..per as u64).collect::<Vec<u64>>(),
+                "producer {p} lost or reordered messages"
+            );
+        }
     });
 }
 
