@@ -1,0 +1,231 @@
+//! Macro: live graph surgery cut-over cost.  A three-stage pipeline
+//! runs under continuous injection while the bench repeatedly applies
+//! the three structural surgeries — insert-on-edge, remove-pellet and
+//! flake relocation — and records the pause-to-resume downtime and the
+//! topology-write-lock window reported by `RecomposeStats`, so the
+//! paper's "minimal impact on the execution" claim is a tracked
+//! number.  Zero message loss across every surgery is asserted at the
+//! end.
+//!
+//! Writes `BENCH_recompose.json` at the repo root (same convention as
+//! `bench_channels`).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::error::Result;
+use floe::graph::{
+    EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
+    SplitMode, WindowSpec,
+};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::Message;
+use floe::pellet::{Pellet, PelletContext, PelletRegistry, PortIo};
+use floe::recompose::GraphDelta;
+
+const ITERATIONS: usize = 12;
+
+/// Sink counting non-landmark deliveries into a shared counter.
+struct CountingSink {
+    delivered: Arc<AtomicUsize>,
+}
+
+impl Pellet for CountingSink {
+    fn compute(
+        &mut self,
+        input: PortIo,
+        _ctx: &mut PelletContext,
+    ) -> Result<()> {
+        let n = input
+            .messages()
+            .iter()
+            .filter(|m| !m.is_landmark())
+            .count();
+        self.delivered.fetch_add(n, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+fn tap_spec(id: &str) -> PelletSpec {
+    let mut s = PelletSpec::new(id, "floe.builtin.Identity");
+    s.inputs
+        .push(InPortSpec { name: "in".into(), window: WindowSpec::None });
+    s.outputs.push(OutPortSpec {
+        name: "out".into(),
+        split: SplitMode::RoundRobin,
+    });
+    s
+}
+
+#[derive(Default)]
+struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+fn stats_json(s: &Series) -> String {
+    format!(
+        "{{ \"min\": {:.3}, \"mean\": {:.3}, \"max\": {:.3} }}",
+        s.min(),
+        s.mean(),
+        s.max()
+    )
+}
+
+fn main() {
+    let cloud = SimulatedCloud::new(512, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let delivered = Arc::new(AtomicUsize::new(0));
+    let d2 = Arc::clone(&delivered);
+    registry.register("bench.CountingSink", move || {
+        Box::new(CountingSink { delivered: Arc::clone(&d2) })
+    });
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+
+    let mut g = GraphBuilder::new("bench-recompose");
+    g.pellet("src", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("work", "floe.builtin.Uppercase")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("sink", "bench.CountingSink").in_port("in");
+    g.edge("src", "out", "work", "in");
+    g.edge("work", "out", "sink", "in");
+    let run = Arc::new(
+        coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap(),
+    );
+
+    // Continuous injection for the whole surgery sequence.
+    let stop = Arc::new(AtomicBool::new(false));
+    let injected = Arc::new(AtomicUsize::new(0));
+    let injector = {
+        let run = Arc::clone(&run);
+        let stop = Arc::clone(&stop);
+        let injected = Arc::clone(&injected);
+        thread::spawn(move || {
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                run.inject("src", "in", Message::text(format!("m{i}")))
+                    .unwrap();
+                injected.fetch_add(1, Ordering::Relaxed);
+                i += 1;
+                if i % 64 == 0 {
+                    thread::sleep(Duration::from_micros(200));
+                }
+            }
+        })
+    };
+
+    let mut insert = Series::default();
+    let mut remove = Series::default();
+    let mut relocate = Series::default();
+    let mut cutover = Series::default();
+    for _ in 0..ITERATIONS {
+        // Insert a tap on the work -> sink edge...
+        let mut d = GraphDelta::against(&run.graph());
+        d.insert_on_edge(
+            EdgeSpec::new("work", "out", "sink", "in"),
+            tap_spec("tap"),
+            "in",
+            "out",
+        );
+        let s = run.recompose(&d).unwrap();
+        insert.push(s.downtime_ms);
+        cutover.push(s.cutover_ms);
+
+        // ...remove it again (drains through its old edge)...
+        let mut d = GraphDelta::against(&run.graph());
+        d.remove_pellet("tap").add_edge("work", "out", "sink", "in");
+        let s = run.recompose(&d).unwrap();
+        remove.push(s.downtime_ms);
+        cutover.push(s.cutover_ms);
+
+        // ...and bounce the worker to another container.
+        let mut d = GraphDelta::against(&run.graph());
+        d.relocate_flake("work");
+        let s = run.recompose(&d).unwrap();
+        relocate.push(s.downtime_ms);
+        cutover.push(s.cutover_ms);
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    injector.join().unwrap();
+    assert!(run.drain(Duration::from_secs(60)), "pipeline did not drain");
+    let sent = injected.load(Ordering::Relaxed);
+    let got = delivered.load(Ordering::Relaxed);
+    assert_eq!(sent, got, "message loss across surgeries");
+    run.stop();
+
+    println!(
+        "# live graph surgery, {ITERATIONS} iterations per class, \
+         {sent} messages in flight — downtime ms (pause -> resume)"
+    );
+    println!(
+        "{:>16} {:>10} {:>10} {:>10}",
+        "surgery", "min", "mean", "max"
+    );
+    for (name, s) in [
+        ("insert-on-edge", &insert),
+        ("remove-pellet", &remove),
+        ("relocate-flake", &relocate),
+        ("cut-over-lock", &cutover),
+    ] {
+        println!(
+            "{:>16} {:>10.3} {:>10.3} {:>10.3}",
+            name,
+            s.min(),
+            s.mean(),
+            s.max()
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_recompose\",\n  \"config\": {{\n    \
+         \"iterations_per_class\": {ITERATIONS},\n    \"injectors\": 1\n  \
+         }},\n  \"messages\": {{\n    \"injected\": {sent},\n    \
+         \"delivered\": {got},\n    \"lost\": {}\n  }},\n  \
+         \"downtime_ms\": {{\n    \"insert_on_edge\": {},\n    \
+         \"remove_pellet\": {},\n    \"relocate_flake\": {}\n  }},\n  \
+         \"cutover_lock_ms\": {}\n}}\n",
+        sent - got,
+        stats_json(&insert),
+        stats_json(&remove),
+        stats_json(&relocate),
+        stats_json(&cutover),
+    );
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/.."))
+        .unwrap_or_else(|_| ".".to_string());
+    let path = format!("{root}/BENCH_recompose.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    print!("{json}");
+}

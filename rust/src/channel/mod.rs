@@ -61,6 +61,17 @@ pub trait Transport: Send + Sync {
         Ok(())
     }
 
+    /// Best-effort non-blocking delivery: `Ok(true)` = delivered,
+    /// `Ok(false)` = dropped because the channel is full right now,
+    /// `Err` = channel closed/broken.  Used for control messages
+    /// (landmarks) that must never block the sender — e.g. the
+    /// recomposition engine broadcasting a cut marker into a paused
+    /// sibling's full queue.  The default falls back to the blocking
+    /// send (remote transports drain independently of flake pauses).
+    fn try_send(&self, msg: Message) -> Result<bool> {
+        self.send(msg).map(|()| true)
+    }
+
     /// Human-readable description for diagnostics.
     fn describe(&self) -> String;
 }
@@ -84,6 +95,16 @@ impl Transport for InProcTransport {
         self.queue.push_batch(msgs).map_err(|_| {
             FloeError::Channel(format!("{} closed", self.label))
         })
+    }
+
+    fn try_send(&self, msg: Message) -> Result<bool> {
+        match self.queue.try_push(msg) {
+            Ok(()) => Ok(true),
+            Err(_) if self.queue.is_closed() => Err(FloeError::Channel(
+                format!("{} closed", self.label),
+            )),
+            Err(_) => Ok(false),
+        }
     }
 
     fn describe(&self) -> String {

@@ -150,6 +150,48 @@ impl<T> SyncQueue<T> {
         }
     }
 
+    /// As [`SyncQueue::pop_timeout`], but increments `counter` under
+    /// the queue lock when an item is handed out, so an observer that
+    /// reads queue length and the counter never sees the item in
+    /// *neither* place.  The flake worker loop uses this with the
+    /// in-flight probe: quiesce/drain checks would otherwise race the
+    /// window between a pop returning and the worker's own
+    /// increment.  The caller decrements `counter` when done.
+    pub fn pop_timeout_counted(
+        &self,
+        timeout: Duration,
+        counter: &std::sync::atomic::AtomicUsize,
+    ) -> Result<Option<T>, QueueClosed> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                counter
+                    .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Err(QueueClosed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self
+                .not_empty
+                .wait_timeout(g, deadline - now)
+                .expect("queue poisoned");
+            g = guard;
+            if res.timed_out() && g.items.is_empty() {
+                if g.closed {
+                    return Err(QueueClosed);
+                }
+                return Ok(None);
+            }
+        }
+    }
+
     /// Blocking batch pop: waits for at least one item, then drains up to
     /// `max` under the same lock.  Does *not* wait for the batch to fill —
     /// batching is opportunistic, so latency matches [`SyncQueue::pop`].

@@ -280,6 +280,21 @@ impl<T> ShardedQueue<T> {
         out
     }
 
+    /// Destructively drain every buffered item, shard by shard
+    /// (per-shard FIFO order preserved) — the consumer-rebinding
+    /// primitive behind flake handoff: the buffered stream is taken
+    /// from this queue's consumer and handed to another (see
+    /// [`crate::flake::Flake::handoff`]).  Only sound once producers
+    /// are quiesced; a concurrent push may land in an already-drained
+    /// shard and be missed by this call.
+    pub fn drain_all(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            while s.drain_into(&mut out, usize::MAX) > 0 {}
+        }
+        out
+    }
+
     /// Total buffered items across shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.len()).sum()
@@ -442,6 +457,17 @@ mod tests {
             rest.extend(batch);
         }
         assert_eq!(rest, vec![3, 4]);
+    }
+
+    #[test]
+    fn drain_all_takes_everything() {
+        let q = ShardedQueue::new(2, 16);
+        q.push_batch(vec![1, 2, 3]).unwrap();
+        let mut got = q.drain_all();
+        got.sort();
+        assert_eq!(got, vec![1, 2, 3]);
+        assert!(q.is_empty());
+        assert!(q.drain_all().is_empty());
     }
 
     #[test]

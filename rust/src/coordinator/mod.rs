@@ -2,15 +2,16 @@
 //! resource manager, places flakes in containers (best fit), wires the
 //! dataflow **bottom-up** so upstream pellets never emit into unwired
 //! sinks, activates the graph, and orchestrates application dynamism —
-//! in-place task updates, coordinated sub-graph updates, and the
-//! cascading "wave" update the paper sketches as future work.
+//! in-place task updates, coordinated sub-graph updates, the cascading
+//! "wave" update, and full structural surgery on the live topology via
+//! [`crate::recompose`].
 
 mod server;
 
 pub use server::CoordinatorServer;
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::adaptation::{Monitor, MonitoredFlake};
@@ -21,6 +22,7 @@ use crate::graph::DataflowGraph;
 use crate::manager::ResourceManager;
 use crate::message::Message;
 use crate::pellet::PelletRegistry;
+use crate::recompose::{GraphDelta, RecomposeStats};
 use crate::util::json::Json;
 use crate::util::time::{Clock, WallClock};
 
@@ -65,14 +67,60 @@ impl Default for LaunchOptions {
     }
 }
 
+/// The per-flake knobs a launch fixes; retained so pellets added by
+/// later graph surgery match the launch configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FlakeTuning {
+    pub alpha: usize,
+    pub queue_capacity: usize,
+    pub batch_size: usize,
+    pub input_shards: usize,
+}
+
+impl FlakeTuning {
+    fn from_options(options: &LaunchOptions) -> FlakeTuning {
+        FlakeTuning {
+            alpha: options.alpha,
+            queue_capacity: options.queue_capacity,
+            batch_size: options.batch_size.max(1),
+            input_shards: options.input_shards.max(1),
+        }
+    }
+
+    pub(crate) fn apply(&self, cfg: &mut FlakeConfig) {
+        cfg.alpha = self.alpha;
+        cfg.queue_capacity = self.queue_capacity;
+        cfg.batch_size = self.batch_size;
+        cfg.input_shards = self.input_shards;
+    }
+}
+
+/// The mutable topology of a running dataflow: the versioned graph and
+/// the live flake/container placement.  Guarded by one `RwLock` so the
+/// recomposition engine can swap all three consistently while readers
+/// (ingress, stats, drains) see either the old or the new topology,
+/// never a mix.
+pub(crate) struct Topology {
+    pub(crate) graph: DataflowGraph,
+    pub(crate) flakes: HashMap<String, Arc<Flake>>,
+    pub(crate) containers:
+        HashMap<String, Arc<crate::container::Container>>,
+}
+
 /// A launched continuous dataflow.
 pub struct RunningDataflow {
-    pub graph: DataflowGraph,
-    flakes: HashMap<String, Arc<Flake>>,
-    containers: HashMap<String, Arc<crate::container::Container>>,
-    registry: PelletRegistry,
+    pub(crate) topo: RwLock<Topology>,
+    pub(crate) registry: PelletRegistry,
+    pub(crate) manager: Arc<ResourceManager>,
+    pub(crate) tuning: FlakeTuning,
     monitor: Mutex<Option<Monitor>>,
     clock: Arc<dyn Clock>,
+    /// Serializes structural surgeries *and* the in-place update
+    /// entry points: a sync `update_pellet` pauses/resumes flakes, so
+    /// letting it interleave with a recompose would resume a flake
+    /// the engine had quiesced mid-cut-over.
+    recompose_gate: Mutex<()>,
+    recompose_log: Mutex<Vec<RecomposeStats>>,
 }
 
 impl RunningDataflow {
@@ -81,30 +129,96 @@ impl RunningDataflow {
         &self,
         pellet_id: &str,
     ) -> Result<Arc<crate::container::Container>> {
-        self.containers.get(pellet_id).cloned().ok_or_else(|| {
-            FloeError::Graph(format!("no container for pellet '{pellet_id}'"))
-        })
+        self.topo
+            .read()
+            .expect("topology poisoned")
+            .containers
+            .get(pellet_id)
+            .cloned()
+            .ok_or_else(|| {
+                FloeError::Graph(format!(
+                    "no container for pellet '{pellet_id}'"
+                ))
+            })
     }
 
     /// The flake executing a pellet.
     pub fn flake(&self, pellet_id: &str) -> Result<Arc<Flake>> {
-        self.flakes.get(pellet_id).cloned().ok_or_else(|| {
-            FloeError::Graph(format!("no flake for pellet '{pellet_id}'"))
-        })
+        self.topo
+            .read()
+            .expect("topology poisoned")
+            .flakes
+            .get(pellet_id)
+            .cloned()
+            .ok_or_else(|| {
+                FloeError::Graph(format!("no flake for pellet '{pellet_id}'"))
+            })
     }
 
     pub fn pellet_ids(&self) -> Vec<String> {
-        self.flakes.keys().cloned().collect()
+        self.topo
+            .read()
+            .expect("topology poisoned")
+            .flakes
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    /// A snapshot of the current (versioned) graph.
+    pub fn graph(&self) -> DataflowGraph {
+        self.topo.read().expect("topology poisoned").graph.clone()
+    }
+
+    /// Current topology version (bumped by every applied delta).
+    pub fn graph_version(&self) -> u64 {
+        self.topo.read().expect("topology poisoned").graph.version
+    }
+
+    /// Snapshot of live flake handles (lock dropped before return).
+    fn flake_snapshot(&self) -> Vec<Arc<Flake>> {
+        self.topo
+            .read()
+            .expect("topology poisoned")
+            .flakes
+            .values()
+            .cloned()
+            .collect()
     }
 
     /// Inject a message into a source pellet's input port (the paper's
     /// "initial inputs" entry point returned by the coordinator).
+    ///
+    /// The flake is resolved under the topology read lock, but the
+    /// (possibly blocking) queue push happens after the lock is
+    /// dropped, so backpressure on a paused pellet can never deadlock
+    /// an in-flight surgery.  If the resolved flake was torn down
+    /// mid-push (relocation closes the old queues behind its capture),
+    /// the inject re-resolves and retries, which preserves
+    /// per-producer FIFO: the retried message lands after the captured
+    /// backlog was replayed into the replacement.
     pub fn inject(
         &self,
         pellet_id: &str,
         port: &str,
         msg: Message,
     ) -> Result<()> {
+        // The retry copy is an Arc bump (payloads are shared), not a
+        // payload clone; the final attempt moves the message.
+        const ATTEMPTS: usize = 8;
+        for _ in 0..ATTEMPTS - 1 {
+            let flake = self.flake(pellet_id)?;
+            match flake.inject(port, msg.clone()) {
+                Ok(()) => return Ok(()),
+                // Only a closed input queue is transient (the flake is
+                // being replaced); anything else — unknown port, bad
+                // pellet — is permanent and surfaces immediately.
+                Err(FloeError::Channel(_)) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => return Err(e),
+            }
+        }
         self.flake(pellet_id)?.inject(port, msg)
     }
 
@@ -116,7 +230,7 @@ impl RunningDataflow {
         let deadline = std::time::Instant::now() + timeout;
         let mut idle_streak = 0;
         loop {
-            let busy = self.flakes.values().any(|f| {
+            let busy = self.flake_snapshot().iter().any(|f| {
                 f.queue_len() > 0
                     || f.ready_len() > 0
                     || f.probes()
@@ -148,6 +262,8 @@ impl RunningDataflow {
         sync: bool,
         landmark: bool,
     ) -> Result<u64> {
+        let _gate =
+            self.recompose_gate.lock().expect("recompose gate poisoned");
         let flake = self.flake(pellet_id)?;
         let class = new_class.unwrap_or_else(|| flake.class());
         let factory = self.registry.resolve(class)?;
@@ -162,6 +278,8 @@ impl RunningDataflow {
         updates: &[(String, String)],
         landmark: bool,
     ) -> Result<()> {
+        let _gate =
+            self.recompose_gate.lock().expect("recompose gate poisoned");
         // Validate everything first so we never pause on a bad request.
         let mut planned = Vec::new();
         for (pellet_id, class) in updates {
@@ -190,12 +308,19 @@ impl RunningDataflow {
     /// updates pellets one by one in upstream→downstream order, emitting an
     /// Update landmark at each hop, so a clear wavefront separates
     /// pre-update from post-update streams without a global pause.
+    ///
+    /// Every pellet id is validated and every class resolved *before*
+    /// the first swap: a bad entry anywhere in the update set fails the
+    /// whole wave up front instead of leaving upstream flakes updated
+    /// and the rest untouched.
     pub fn wave_update(
         &self,
         updates: &[(String, String)],
     ) -> Result<Vec<u64>> {
-        let order = self.graph.wiring_order()?; // downstream-first
-        let mut versions = Vec::new();
+        let _gate =
+            self.recompose_gate.lock().expect("recompose gate poisoned");
+        let order = self.graph().wiring_order()?; // downstream-first
+        let mut planned = Vec::new();
         // Reverse = upstream-first traversal of the sub-graph.
         for id in order.iter().rev() {
             if let Some((_, class)) =
@@ -203,15 +328,46 @@ impl RunningDataflow {
             {
                 let flake = self.flake(id)?;
                 let factory = self.registry.resolve(class)?;
-                versions.push(flake.update_pellet(factory, true, true)?);
+                planned.push((flake, factory));
             }
         }
-        if versions.len() != updates.len() {
+        if planned.len() != updates.len() {
             return Err(FloeError::Graph(
                 "wave_update: some pellets not in graph".into(),
             ));
         }
+        let mut versions = Vec::new();
+        for (flake, factory) in planned {
+            versions.push(flake.update_pellet(factory, true, true)?);
+        }
         Ok(versions)
+    }
+
+    /// **Live graph surgery** (§II-B "dynamic recomposition"): apply a
+    /// [`GraphDelta`] — add/remove pellets and edges, splice a pellet
+    /// into a live edge, retarget edges, relocate flakes across
+    /// containers — while the stream keeps flowing.  See
+    /// [`crate::recompose`] for semantics and guarantees.  Surgeries
+    /// are serialized per dataflow; the returned [`RecomposeStats`]
+    /// reports the measured pause-to-resume downtime.
+    pub fn recompose(&self, delta: &GraphDelta) -> Result<RecomposeStats> {
+        let _gate =
+            self.recompose_gate.lock().expect("recompose gate poisoned");
+        let engine = crate::recompose::engine::RecomposeEngine::new(self);
+        let stats = engine.execute(delta)?;
+        self.recompose_log
+            .lock()
+            .expect("recompose log poisoned")
+            .push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Every applied surgery with its measured downtime, oldest first.
+    pub fn recompose_history(&self) -> Vec<RecomposeStats> {
+        self.recompose_log
+            .lock()
+            .expect("recompose log poisoned")
+            .clone()
     }
 
     /// Snapshot of the adaptation monitor's decision history (the live
@@ -231,7 +387,16 @@ impl RunningDataflow {
     pub fn stats_json(&self) -> Json {
         let t = self.clock.now();
         let mut pellets = Vec::new();
-        for (id, f) in &self.flakes {
+        let (graph_name, graph_version, flakes) = {
+            let topo = self.topo.read().expect("topology poisoned");
+            let flakes: Vec<(String, Arc<Flake>)> = topo
+                .flakes
+                .iter()
+                .map(|(id, f)| (id.clone(), Arc::clone(f)))
+                .collect();
+            (topo.graph.name.clone(), topo.graph.version, flakes)
+        };
+        for (id, f) in &flakes {
             let obs = f.observe(t);
             pellets.push(Json::obj(vec![
                 ("id", Json::str(id.clone())),
@@ -246,7 +411,17 @@ impl RunningDataflow {
             ]));
         }
         Json::obj(vec![
-            ("graph", Json::str(self.graph.name.clone())),
+            ("graph", Json::str(graph_name)),
+            ("graph_version", Json::num(graph_version as f64)),
+            (
+                "recomposes",
+                Json::num(
+                    self.recompose_log
+                        .lock()
+                        .expect("recompose log poisoned")
+                        .len() as f64,
+                ),
+            ),
             ("t", Json::num(t)),
             ("pellets", Json::Arr(pellets)),
         ])
@@ -259,16 +434,20 @@ impl RunningDataflow {
         {
             m.stop();
         }
+        let (order, flakes) = {
+            let topo = self.topo.read().expect("topology poisoned");
+            (topo.graph.wiring_order(), topo.flakes.clone())
+        };
         // Stop sources first (wiring order reversed = sources first), so
         // downstream flakes drain naturally before shutdown.
-        if let Ok(order) = self.graph.wiring_order() {
+        if let Ok(order) = order {
             for id in order.iter().rev() {
-                if let Some(f) = self.flakes.get(id) {
+                if let Some(f) = flakes.get(id) {
                     f.shutdown();
                 }
             }
         }
-        for f in self.flakes.values() {
+        for f in flakes.values() {
             f.shutdown();
         }
     }
@@ -309,6 +488,7 @@ impl Coordinator {
             graph.pellets.len(),
             order
         );
+        let tuning = FlakeTuning::from_options(&options);
 
         // 1. Instantiate flakes bottom-up so every sink exists before any
         //    upstream pellet could emit.
@@ -323,10 +503,7 @@ impl Coordinator {
                 .clone();
             let factory = self.registry.resolve(&spec.class)?;
             let mut cfg = FlakeConfig::from_spec(&spec);
-            cfg.alpha = options.alpha;
-            cfg.queue_capacity = options.queue_capacity;
-            cfg.batch_size = options.batch_size.max(1);
-            cfg.input_shards = options.input_shards.max(1);
+            tuning.apply(&mut cfg);
             let container = self.manager.allocate(cfg.cores)?;
             let flake = container.spawn_flake(cfg, factory)?;
             containers.insert(id.clone(), Arc::clone(&container));
@@ -372,12 +549,14 @@ impl Coordinator {
         });
 
         Ok(RunningDataflow {
-            graph,
-            flakes,
-            containers,
+            topo: RwLock::new(Topology { graph, flakes, containers }),
             registry: self.registry.clone(),
+            manager: Arc::clone(&self.manager),
+            tuning,
             monitor: Mutex::new(monitor),
             clock,
+            recompose_gate: Mutex::new(()),
+            recompose_log: Mutex::new(Vec::new()),
         })
     }
 
@@ -466,6 +645,10 @@ mod tests {
         assert_eq!(
             stats.get("graph").unwrap().as_str().unwrap(),
             "s"
+        );
+        assert_eq!(
+            stats.get("graph_version").unwrap().as_usize(),
+            Some(1)
         );
         assert_eq!(
             stats.get("pellets").unwrap().as_arr().unwrap().len(),

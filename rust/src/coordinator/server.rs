@@ -47,7 +47,7 @@ fn handle(run: &RunningDataflow, req: &Request) -> Response {
         ("GET", ["graph"]) => Response {
             status: 200,
             content_type: "application/xml".into(),
-            body: run.graph.to_xml().into_bytes(),
+            body: run.graph().to_xml().into_bytes(),
         },
         ("GET", ["stats"]) => {
             Response::ok_json(run.stats_json().to_string())

@@ -153,6 +153,37 @@ impl Flake {
         Ok(cp)
     }
 
+    /// Capture a **handoff** checkpoint for flake relocation: pause
+    /// intake, interrupt and drain in-flight compute, then
+    /// *destructively* take the buffered input queues
+    /// ([`crate::channel::ShardedQueue::drain_all`]) so the buffered
+    /// stream can be rebound to a replacement flake with no
+    /// double-processing.  The flake stays paused afterwards — the
+    /// caller restores the checkpoint into the replacement and tears
+    /// this flake down.  Only sound once upstream producers are
+    /// quiesced or rewired; the recomposition engine guarantees both.
+    pub fn handoff(&self) -> Result<FlakeCheckpoint> {
+        self.quiesce(std::time::Duration::from_secs(30))?;
+        let mut queued = BTreeMap::new();
+        for port in self.input_ports() {
+            let q = self.input_queue(&port)?;
+            // Close *before* the capture: a racing producer either
+            // lands before the close (and is captured below) or gets
+            // an error and re-resolves the replacement — a message can
+            // never strand in a husk about to be torn down.
+            q.close();
+            let encoded: Vec<Vec<u8>> =
+                q.drain_all().iter().map(Message::encode).collect();
+            queued.insert(port, encoded);
+        }
+        Ok(FlakeCheckpoint {
+            pellet_id: self.pellet_id().to_string(),
+            version: self.version(),
+            state: self.state().snapshot(),
+            queued,
+        })
+    }
+
     /// Restore a checkpoint into this flake: state object contents are
     /// replaced and queued messages re-injected (used when resuming a
     /// pellet on a fresh flake after failure).
@@ -277,6 +308,30 @@ mod tests {
             replacement.state().get("count"),
             Some(Json::Num(10.0)) // 7 from state + 3 replayed messages
         );
+        replacement.shutdown();
+    }
+
+    #[test]
+    fn handoff_is_destructive_and_leaves_paused() {
+        let original = test_flake("move");
+        original.pause();
+        for i in 0..6 {
+            original.inject("in", Message::text(format!("{i}"))).unwrap();
+        }
+        let cp = original.handoff().unwrap();
+        assert_eq!(cp.queued["in"].len(), 6);
+        // Destructive: the source queue is empty and the flake paused,
+        // so nothing is processed twice after the stream moves.
+        assert_eq!(original.queue_len(), 0);
+        assert!(original.is_paused());
+        // Late producers hit a closed queue instead of losing data.
+        assert!(original.inject("in", Message::text("late")).is_err());
+        original.shutdown();
+
+        let replacement = test_flake("move");
+        replacement.restore(&cp).unwrap();
+        assert!(replacement.drain(std::time::Duration::from_secs(5)));
+        assert_eq!(replacement.state().get("count"), Some(Json::Num(6.0)));
         replacement.shutdown();
     }
 

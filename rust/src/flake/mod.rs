@@ -108,6 +108,16 @@ struct Shared {
     version: AtomicU64,
     probes: Probes,
     paused: AtomicBool,
+    /// Bumped every time the dispatcher observes `paused` at the top
+    /// of its loop.  A bump proves the dispatcher holds no in-hand
+    /// batch (anything popped earlier reached the ready queue), which
+    /// is what [`Flake::quiesce`] needs: `paused` + empty counters
+    /// alone can race a batch sitting between a queue pop and the
+    /// ready-queue push.
+    pause_epoch: AtomicU64,
+    /// Set when the dispatcher thread exits (queues closed), so
+    /// quiesce never waits on a dead dispatcher for an epoch bump.
+    dispatcher_done: AtomicBool,
     interrupt: Arc<AtomicBool>,
     stop: AtomicBool,
     cores: AtomicUsize,
@@ -115,7 +125,11 @@ struct Shared {
 }
 
 impl Shared {
-    /// Execute one work item on a pellet instance, routing its emissions.
+    /// Execute one work item on a pellet instance, routing its
+    /// emissions.  The caller has already accounted the in-flight
+    /// increment (via [`SyncQueue::pop_timeout_counted`], under the
+    /// ready-queue lock, so quiesce/drain checks never see the item
+    /// in neither place); this only decrements when done.
     fn run_item(
         &self,
         pellet: &mut Box<dyn Pellet>,
@@ -123,7 +137,6 @@ impl Shared {
         item: PortIo,
     ) {
         let msgs = item.messages().len() as u64;
-        self.probes.inflight.fetch_add(1, Ordering::SeqCst);
         let start = Instant::now();
         let result = pellet.compute(item, ctx);
         let nanos = start.elapsed().as_nanos() as u64;
@@ -224,6 +237,8 @@ impl Flake {
             version: AtomicU64::new(1),
             probes: Probes::new(),
             paused: AtomicBool::new(false),
+            pause_epoch: AtomicU64::new(0),
+            dispatcher_done: AtomicBool::new(false),
             interrupt: Arc::new(AtomicBool::new(false)),
             stop: AtomicBool::new(false),
             cores: AtomicUsize::new(cores),
@@ -245,7 +260,10 @@ impl Flake {
         let disp_shared = Arc::clone(&shared);
         let dispatcher = thread::Builder::new()
             .name(format!("flake-{}-disp", shared.cfg.pellet_id))
-            .spawn(move || dispatcher_loop(&disp_shared))
+            .spawn(move || {
+                dispatcher_loop(&disp_shared);
+                disp_shared.dispatcher_done.store(true, Ordering::SeqCst);
+            })
             .expect("spawn dispatcher");
 
         Arc::new(Flake {
@@ -303,6 +321,65 @@ impl Flake {
             .add_target(port, transport)
     }
 
+    /// Atomically replace a port's outgoing edges (graph surgery).
+    /// Routing threads observe either the old wiring or the new one,
+    /// never a mix; callers quiesce the flake first so no pre-cut
+    /// message is still in flight when the swap lands.
+    pub fn replace_output_targets(
+        &self,
+        port: &str,
+        targets: Vec<Arc<dyn Transport>>,
+    ) -> Result<()> {
+        self.shared
+            .router
+            .write()
+            .expect("router poisoned")
+            .replace_targets(port, targets)
+    }
+
+    /// Drop every outgoing edge of a port (graph surgery: edge removal,
+    /// pellet retirement).
+    pub fn clear_output_targets(&self, port: &str) -> Result<()> {
+        self.shared
+            .router
+            .write()
+            .expect("router poisoned")
+            .clear_targets(port)
+    }
+
+    /// Broadcast a landmark on every output port — used by the
+    /// recomposition engine to separate pre-surgery from post-surgery
+    /// streams.  Delivery is best-effort and **non-blocking**: a full
+    /// queue (e.g. a paused sibling in the same surgery's pause set)
+    /// drops the marker for that edge instead of wedging the caller,
+    /// and errors (a sink already shut down during teardown) are
+    /// logged, not returned.
+    pub fn emit_landmark(&self, landmark: Landmark) {
+        let router = self.shared.router.read().expect("router poisoned");
+        for o in &self.shared.cfg.outputs {
+            let msg = Message::landmark(landmark.clone());
+            match router.try_broadcast(&o.name, msg) {
+                Ok(n) if n < router.target_count(&o.name) => {
+                    crate::log_warn!(
+                        "flake {}: landmark on '{}' reached {n}/{} edges \
+                         (full queues dropped the rest)",
+                        self.shared.cfg.pellet_id,
+                        o.name,
+                        router.target_count(&o.name)
+                    );
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    crate::log_warn!(
+                        "flake {}: landmark on '{}' failed: {e}",
+                        self.shared.cfg.pellet_id,
+                        o.name
+                    );
+                }
+            }
+        }
+    }
+
     /// The pellet's state object (survives updates; pre-seed configuration
     /// like `floe.builtin.Delay`'s `delay_secs` here).
     pub fn state(&self) -> &StateObject {
@@ -347,9 +424,74 @@ impl Flake {
         self.pool.resize(self.shared.cfg.instances_for(cores));
     }
 
+    /// Names of this flake's output ports.
+    pub fn output_ports(&self) -> Vec<String> {
+        self.shared.cfg.outputs.iter().map(|o| o.name.clone()).collect()
+    }
+
+    /// A copy of the construction config (used to spawn an identical
+    /// replacement flake during relocation).
+    pub fn config(&self) -> FlakeConfig {
+        self.shared.cfg.clone()
+    }
+
+    /// The factory currently producing pellet instances.  After dynamic
+    /// updates this may differ from what the class name resolves to in
+    /// the registry, so relocation clones this instead of re-resolving.
+    pub fn current_factory(&self) -> PelletFactory {
+        self.shared.factory.read().expect("factory poisoned").clone()
+    }
+
     /// Pause intake (dispatcher stops forming work items; queues buffer).
     pub fn pause(&self) {
         self.shared.paused.store(true, Ordering::SeqCst);
+    }
+
+    /// Pause intake and wait for dispatched work items and in-flight
+    /// compute to finish (long-running instances see
+    /// `ctx.interrupted()`, pull sources yield).  Input queues keep
+    /// buffering under backpressure.  The flake stays paused on both
+    /// success and timeout; callers resume it (or tear it down) when
+    /// the surgery completes.
+    ///
+    /// Waits first for the dispatcher to *acknowledge* the pause (one
+    /// `pause_epoch` bump), so a batch in the dispatcher's hands —
+    /// popped from an input queue but not yet in the ready queue, and
+    /// therefore invisible to every counter — cannot slip past the
+    /// drain check below.  Caveat: a count/time window accumulating in
+    /// the dispatcher stays buffered there across a quiesce (the same
+    /// exposure `checkpoint` has always had); it is flushed when the
+    /// flake resumes, but is not visible to a relocation handoff.
+    pub fn quiesce(&self, timeout: Duration) -> Result<()> {
+        let epoch = self.shared.pause_epoch.load(Ordering::SeqCst);
+        self.pause();
+        self.shared.interrupt.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + timeout;
+        let fail = |shared: &Shared| {
+            shared.interrupt.store(false, Ordering::SeqCst);
+            Err(FloeError::Pellet(format!(
+                "flake {}: quiesce timed out",
+                shared.cfg.pellet_id
+            )))
+        };
+        while self.shared.pause_epoch.load(Ordering::SeqCst) == epoch
+            && !self.shared.dispatcher_done.load(Ordering::SeqCst)
+        {
+            if Instant::now() > deadline {
+                return fail(&self.shared);
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        while !self.shared.ready.is_empty()
+            || self.shared.probes.inflight.load(Ordering::SeqCst) > 0
+        {
+            if Instant::now() > deadline {
+                return fail(&self.shared);
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        self.shared.interrupt.store(false, Ordering::SeqCst);
+        Ok(())
     }
 
     /// Resume intake.
@@ -401,7 +543,7 @@ impl Flake {
             self.shared.interrupt.store(true, Ordering::SeqCst);
             // Drain: dispatcher is paused, wait for ready queue + in-flight.
             let deadline = Instant::now() + Duration::from_secs(30);
-            while self.shared.ready.len() > 0
+            while !self.shared.ready.is_empty()
                 || self.shared.probes.inflight.load(Ordering::SeqCst) > 0
             {
                 if Instant::now() > deadline {
@@ -515,6 +657,9 @@ fn dispatcher_loop(shared: &Shared) {
     let mut idle_polls = 0u32;
     while !shared.stop.load(Ordering::SeqCst) {
         if shared.paused.load(Ordering::SeqCst) {
+            // Acknowledge the pause: any batch popped earlier has
+            // reached the ready queue by now (see Shared::pause_epoch).
+            shared.pause_epoch.fetch_add(1, Ordering::SeqCst);
             thread::sleep(Duration::from_millis(1));
             continue;
         }
@@ -794,7 +939,13 @@ fn worker_loop(shared: &Shared, index: usize, stop_flag: &AtomicBool) {
 
         match shared.cfg.trigger {
             TriggerMode::Push => {
-                match shared.ready.pop_timeout(Duration::from_millis(20)) {
+                // Counted pop: the in-flight probe is incremented
+                // under the ready-queue lock, closing the window in
+                // which a popped item is invisible to quiesce/drain.
+                match shared.ready.pop_timeout_counted(
+                    Duration::from_millis(20),
+                    &shared.probes.inflight,
+                ) {
                     Ok(Some(item)) => {
                         // A dynamic update may have landed while this
                         // worker was blocked waiting for the item: a

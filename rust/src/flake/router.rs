@@ -63,8 +63,43 @@ impl OutputRouter {
         Ok(())
     }
 
+    /// Drop every outgoing edge of a port (graph surgery).  The port
+    /// itself stays declared; subsequent emissions are counted as
+    /// drops until new targets are wired.
+    pub fn clear_targets(&mut self, port: &str) -> Result<()> {
+        let routes = self.ports.get_mut(port).ok_or_else(|| {
+            FloeError::Graph(format!("router: unknown out port '{port}'"))
+        })?;
+        routes.targets.clear();
+        routes.rr.store(0, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Atomically replace a port's outgoing edges with a new target
+    /// set.  Callers hold the flake's router write lock for the whole
+    /// swap, so routing threads observe either the old wiring or the
+    /// new one, never a mix — the cut-over primitive of
+    /// [`crate::recompose`].
+    pub fn replace_targets(
+        &mut self,
+        port: &str,
+        targets: Vec<Arc<dyn Transport>>,
+    ) -> Result<()> {
+        let routes = self.ports.get_mut(port).ok_or_else(|| {
+            FloeError::Graph(format!("router: unknown out port '{port}'"))
+        })?;
+        routes.targets = targets;
+        routes.rr.store(0, Ordering::Relaxed);
+        Ok(())
+    }
+
     pub fn has_port(&self, port: &str) -> bool {
         self.ports.contains_key(port)
+    }
+
+    /// Names of the declared output ports.
+    pub fn port_names(&self) -> Vec<String> {
+        self.ports.keys().cloned().collect()
     }
 
     pub fn target_count(&self, port: &str) -> usize {
@@ -152,6 +187,35 @@ impl OutputRouter {
     /// are identical on both paths.
     pub fn route(&self, port: &str, msg: Message) -> Result<()> {
         self.route_batch(port, vec![msg])
+    }
+
+    /// Best-effort **non-blocking** broadcast to every edge of a port,
+    /// regardless of split mode.  Control messages (recompose cut
+    /// landmarks) use this: a full queue on a paused sibling must
+    /// drop the marker rather than wedge the caller.  Returns how
+    /// many edges accepted the message; a closed edge reports the
+    /// first error after every edge was tried.
+    pub fn try_broadcast(&self, port: &str, msg: Message) -> Result<usize> {
+        let routes = self.ports.get(port).ok_or_else(|| {
+            FloeError::Channel(format!("router: no out port '{port}'"))
+        })?;
+        let mut delivered = 0;
+        let mut first_err = None;
+        for t in &routes.targets {
+            match t.try_send(msg.clone()) {
+                Ok(true) => delivered += 1,
+                Ok(false) => {}
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            None => Ok(delivered),
+            Some(e) => Err(e),
+        }
     }
 }
 
@@ -333,6 +397,23 @@ mod tests {
         assert!(r
             .route_batch("missing", vec![Message::text("x")])
             .is_err());
+    }
+
+    #[test]
+    fn replace_targets_swaps_wiring() {
+        let (mut r, qs) = router_with(SplitMode::RoundRobin, 2);
+        r.route("out", Message::text("old")).unwrap();
+        assert_eq!(qs[0].len() + qs[1].len(), 1);
+        let (nq, nt) = sink();
+        r.replace_targets("out", vec![nt]).unwrap();
+        r.route("out", Message::text("new")).unwrap();
+        assert_eq!(nq.len(), 1);
+        assert_eq!(qs[0].len() + qs[1].len(), 1, "old targets hit");
+        r.clear_targets("out").unwrap();
+        r.route("out", Message::text("dropped")).unwrap();
+        assert_eq!(r.dropped.load(Ordering::Relaxed), 1);
+        assert!(r.replace_targets("ghost", vec![]).is_err());
+        assert!(r.clear_targets("ghost").is_err());
     }
 
     #[test]

@@ -123,6 +123,7 @@ impl GraphBuilder {
             name: self.name,
             pellets: self.pellets,
             edges: self.edges,
+            version: 1,
         };
         g.validate()?;
         Ok(g)

@@ -179,6 +179,11 @@ pub struct DataflowGraph {
     pub name: String,
     pub pellets: Vec<PelletSpec>,
     pub edges: Vec<EdgeSpec>,
+    /// Topology version, starting at 1.  Bumped by every applied
+    /// [`crate::recompose::GraphDelta`]; deltas name the version they
+    /// were computed against, so concurrent surgeries are detected
+    /// instead of silently composed (optimistic concurrency).
+    pub version: u64,
 }
 
 impl DataflowGraph {

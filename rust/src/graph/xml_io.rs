@@ -33,6 +33,10 @@ impl DataflowGraph {
             )));
         }
         let name = root.attr("name").unwrap_or("unnamed").to_string();
+        let version = root
+            .attr("version")
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(1);
         let mut pellets = Vec::new();
         let mut edges = Vec::new();
         for child in &root.children {
@@ -46,7 +50,7 @@ impl DataflowGraph {
                 }
             }
         }
-        let g = DataflowGraph { name, pellets, edges };
+        let g = DataflowGraph { name, pellets, edges, version };
         g.validate()?;
         Ok(g)
     }
@@ -60,6 +64,14 @@ impl DataflowGraph {
             children: vec![],
             text: String::new(),
         };
+        // The topology version rides along so a delta computed against
+        // a served graph (GET /graph) names the right base version.
+        // Omitted at the launch version to keep hand-written and
+        // pre-surgery XML byte-stable.
+        if self.version > 1 {
+            root.attrs
+                .push(("version".into(), self.version.to_string()));
+        }
         for p in &self.pellets {
             let mut attrs = vec![
                 ("id".to_string(), p.id.clone()),
@@ -306,6 +318,18 @@ mod tests {
         let p = g2.pellet("parse").unwrap();
         assert_eq!(p.in_port("in").unwrap().window, WindowSpec::Count(10));
         assert_eq!(p.out_port("ok").unwrap().split, SplitMode::KeyHash);
+    }
+
+    #[test]
+    fn version_round_trips_when_bumped() {
+        let mut g = DataflowGraph::from_xml(DOC).unwrap();
+        assert_eq!(g.version, 1);
+        // Launch version stays implicit (byte-stable XML)…
+        assert!(!g.to_xml().contains("version="));
+        // …but a post-surgery version rides along.
+        g.version = 3;
+        let back = DataflowGraph::from_xml(&g.to_xml()).unwrap();
+        assert_eq!(back.version, 3);
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! [`coordinator::Coordinator`] parses graphs, places flakes via the
 //! [`manager`] resource manager, wires them bottom-up, and orchestrates
 //! in-place dynamic task and dataflow updates without stopping the stream.
+//! The [`recompose`] engine goes further and performs live graph surgery:
+//! structural deltas (insert/remove pellets and edges, relocate flakes
+//! across containers) applied to the running topology with a minimal
+//! pause set and zero message loss.
 //!
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
 //! reproduced evaluation.
@@ -29,6 +33,7 @@ pub mod graph;
 pub mod manager;
 pub mod message;
 pub mod pellet;
+pub mod recompose;
 pub mod runtime;
 pub mod sim;
 pub mod util;
@@ -52,5 +57,6 @@ pub mod prelude {
     pub use crate::pellet::{
         Pellet, PelletContext, PelletFactory, PelletRegistry, PortIo,
     };
+    pub use crate::recompose::{DeltaOp, GraphDelta, RecomposeStats};
     pub use crate::ALPHA;
 }

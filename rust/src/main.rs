@@ -94,7 +94,11 @@ fn cmd_run(args: &[String]) -> i32 {
             return 1;
         }
     };
-    println!("launched '{}' with pellets {:?}", run.graph.name, run.pellet_ids());
+    println!(
+        "launched '{}' with pellets {:?}",
+        run.graph().name,
+        run.pellet_ids()
+    );
     if let Some(port) = flag(args, "--serve").and_then(|p| p.parse().ok()) {
         let server = CoordinatorServer::start(Arc::clone(&run), port)
             .expect("serve");

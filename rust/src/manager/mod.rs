@@ -154,11 +154,36 @@ impl ResourceManager {
     /// still fits `cores` (best fit).  Acquires a new VM when nothing
     /// fits.
     pub fn allocate(&self, cores: usize) -> Result<Arc<Container>> {
+        self.allocate_where(cores, None)
+    }
+
+    /// Best-fit allocation that skips one container — used by flake
+    /// relocation, where the replacement must land on a *different*
+    /// container than the one it is leaving.  Acquires a new VM when no
+    /// other container fits.
+    pub fn allocate_avoiding(
+        &self,
+        cores: usize,
+        avoid_container: &str,
+    ) -> Result<Arc<Container>> {
+        self.allocate_where(cores, Some(avoid_container))
+    }
+
+    /// Shared placement policy behind [`ResourceManager::allocate`] and
+    /// [`ResourceManager::allocate_avoiding`].
+    fn allocate_where(
+        &self,
+        cores: usize,
+        avoid_container: Option<&str>,
+    ) -> Result<Arc<Container>> {
         let mut inner = self.inner.lock().expect("manager poisoned");
         let best = inner
             .containers
             .iter()
-            .filter(|(_, c)| c.free_cores() >= cores)
+            .filter(|(_, c)| {
+                avoid_container != Some(c.id.as_str())
+                    && c.free_cores() >= cores
+            })
             .min_by_key(|(_, c)| c.free_cores())
             .map(|(_, c)| Arc::clone(c));
         if let Some(c) = best {
@@ -272,6 +297,20 @@ mod tests {
         let c3 = mgr.allocate(4).unwrap();
         assert!(!Arc::ptr_eq(&c1, &c3));
         assert_eq!(mgr.containers().len(), 2);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn allocate_avoiding_skips_named_container() {
+        let cloud = SimulatedCloud::new(128, Duration::ZERO);
+        let mgr = ResourceManager::new(cloud);
+        let c1 = mgr.allocate(2).unwrap();
+        // Plenty of room on c1, but relocation must leave it.
+        let c2 = mgr.allocate_avoiding(2, &c1.id).unwrap();
+        assert!(!Arc::ptr_eq(&c1, &c2));
+        // A second avoiding ask best-fits onto the existing other VM.
+        let c3 = mgr.allocate_avoiding(2, &c1.id).unwrap();
+        assert!(Arc::ptr_eq(&c2, &c3));
         mgr.shutdown();
     }
 

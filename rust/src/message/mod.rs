@@ -39,6 +39,14 @@ pub enum Landmark {
     WindowEnd(String),
     /// Notification that an upstream pellet's logic changed in-place.
     Update { version: u64 },
+    /// Graph-surgery cut marker (see [`crate::recompose`]), carrying
+    /// the new graph version.  Scope matches the channel ordering
+    /// contract: within one producer's stream, messages before the
+    /// marker flowed on the pre-recomposition wiring and messages
+    /// after it on the new topology.  Delivery is best-effort — a
+    /// full queue drops the marker rather than blocking the engine —
+    /// so consumers must treat it as a hint, not a barrier.
+    Recompose { version: u64 },
     /// Application-defined marker.
     Custom(String),
 }
@@ -189,6 +197,10 @@ impl Message {
                 out.push(3);
                 put_str(out, s);
             }
+            Some(Landmark::Recompose { version }) => {
+                out.push(4);
+                out.extend_from_slice(&version.to_le_bytes());
+            }
         }
         match &self.payload {
             Payload::Empty => out.push(0),
@@ -245,6 +257,7 @@ impl Message {
             1 => Some(Landmark::WindowEnd(c.string()?)),
             2 => Some(Landmark::Update { version: c.u64()? }),
             3 => Some(Landmark::Custom(c.string()?)),
+            4 => Some(Landmark::Recompose { version: c.u64()? }),
             t => {
                 return Err(FloeError::Parse(format!(
                     "message: bad landmark tag {t}"
@@ -403,6 +416,7 @@ mod tests {
             Message::tuple(map),
             Message::landmark(Landmark::WindowEnd("w1".into())),
             Message::landmark(Landmark::Update { version: 7 }),
+            Message::landmark(Landmark::Recompose { version: 3 }),
             Message::landmark(Landmark::Custom("mark".into())),
             Message::text("keyed").with_key("route-me"),
         ];

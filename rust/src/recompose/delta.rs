@@ -1,0 +1,359 @@
+//! The surgery grammar: [`GraphDelta`] is a batch of topology edits
+//! validated and applied *atomically* against a versioned live
+//! [`DataflowGraph`].
+//!
+//! A delta names the graph version it was computed against
+//! (`base_version`); applying it to any other version fails, so two
+//! concurrent surgeries are detected instead of silently composed.
+//! Application is all-or-nothing: every op is checked while editing a
+//! clone, the result is re-validated structurally, and only then does
+//! the engine adopt it — a bad delta never leaves the live graph (or
+//! the running dataflow) half-edited.
+
+use crate::error::{FloeError, Result};
+use crate::graph::{DataflowGraph, EdgeSpec, PelletSpec};
+
+/// One topology edit.
+#[derive(Debug, Clone)]
+pub enum DeltaOp {
+    /// Add a disconnected pellet (wire it with [`DeltaOp::AddEdge`]
+    /// ops in the same delta).
+    AddPellet { spec: PelletSpec },
+    /// Retire a pellet: upstream edges are rewired away, buffered
+    /// input drains through its existing outputs, then the flake is
+    /// torn down and its cores freed.
+    RemovePellet { id: String },
+    /// Add an edge between existing (or same-delta-added) pellets.
+    AddEdge { edge: EdgeSpec },
+    /// Remove an edge; messages already delivered downstream stay.
+    RemoveEdge { edge: EdgeSpec },
+    /// Splice a new pellet into an existing edge: `A.out -> B.in`
+    /// becomes `A.out -> new.in_port` + `new.out_port -> B.in`.
+    InsertOnEdge {
+        edge: EdgeSpec,
+        spec: PelletSpec,
+        in_port: String,
+        out_port: String,
+    },
+    /// Point an existing edge at a different sink pellet/port.
+    RetargetEdge { edge: EdgeSpec, to_pellet: String, to_port: String },
+    /// Move a pellet's flake to a different container, preserving
+    /// state, logic version and buffered input (no structural change).
+    RelocateFlake { id: String },
+}
+
+/// A batch of topology edits against one graph version.
+#[derive(Debug, Clone)]
+pub struct GraphDelta {
+    /// Graph version this delta was computed against.
+    pub base_version: u64,
+    pub ops: Vec<DeltaOp>,
+}
+
+impl GraphDelta {
+    pub fn new(base_version: u64) -> GraphDelta {
+        GraphDelta { base_version, ops: Vec::new() }
+    }
+
+    /// A delta against the current version of `graph`.
+    pub fn against(graph: &DataflowGraph) -> GraphDelta {
+        GraphDelta::new(graph.version)
+    }
+
+    pub fn add_pellet(&mut self, spec: PelletSpec) -> &mut Self {
+        self.ops.push(DeltaOp::AddPellet { spec });
+        self
+    }
+
+    pub fn remove_pellet(&mut self, id: &str) -> &mut Self {
+        self.ops.push(DeltaOp::RemovePellet { id: id.into() });
+        self
+    }
+
+    pub fn add_edge(
+        &mut self,
+        from: &str,
+        from_port: &str,
+        to: &str,
+        to_port: &str,
+    ) -> &mut Self {
+        self.ops.push(DeltaOp::AddEdge {
+            edge: EdgeSpec::new(from, from_port, to, to_port),
+        });
+        self
+    }
+
+    pub fn remove_edge(
+        &mut self,
+        from: &str,
+        from_port: &str,
+        to: &str,
+        to_port: &str,
+    ) -> &mut Self {
+        self.ops.push(DeltaOp::RemoveEdge {
+            edge: EdgeSpec::new(from, from_port, to, to_port),
+        });
+        self
+    }
+
+    /// Splice `spec` into `edge`, receiving on `in_port` and
+    /// re-emitting on `out_port`.
+    pub fn insert_on_edge(
+        &mut self,
+        edge: EdgeSpec,
+        spec: PelletSpec,
+        in_port: &str,
+        out_port: &str,
+    ) -> &mut Self {
+        self.ops.push(DeltaOp::InsertOnEdge {
+            edge,
+            spec,
+            in_port: in_port.into(),
+            out_port: out_port.into(),
+        });
+        self
+    }
+
+    pub fn retarget_edge(
+        &mut self,
+        edge: EdgeSpec,
+        to_pellet: &str,
+        to_port: &str,
+    ) -> &mut Self {
+        self.ops.push(DeltaOp::RetargetEdge {
+            edge,
+            to_pellet: to_pellet.into(),
+            to_port: to_port.into(),
+        });
+        self
+    }
+
+    pub fn relocate_flake(&mut self, id: &str) -> &mut Self {
+        self.ops.push(DeltaOp::RelocateFlake { id: id.into() });
+        self
+    }
+
+    /// Apply to a graph, producing the successor topology at
+    /// `graph.version + 1`.  All-or-nothing: version mismatch, an
+    /// invalid op, or a structurally invalid result graph all fail
+    /// without side effects on `graph`.
+    pub fn apply_to(&self, graph: &DataflowGraph) -> Result<DataflowGraph> {
+        if self.base_version != graph.version {
+            return Err(FloeError::Graph(format!(
+                "delta computed against graph v{}, live graph is v{}",
+                self.base_version, graph.version
+            )));
+        }
+        if self.ops.is_empty() {
+            return Err(FloeError::Graph("empty delta".into()));
+        }
+        let mut g = graph.clone();
+        for op in &self.ops {
+            apply_op(&mut g, op)?;
+        }
+        g.version = graph.version + 1;
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+fn apply_op(g: &mut DataflowGraph, op: &DeltaOp) -> Result<()> {
+    match op {
+        DeltaOp::AddPellet { spec } => {
+            if g.pellet(&spec.id).is_some() {
+                return Err(FloeError::Graph(format!(
+                    "delta: pellet '{}' already exists",
+                    spec.id
+                )));
+            }
+            g.pellets.push(spec.clone());
+        }
+        DeltaOp::RemovePellet { id } => {
+            let before = g.pellets.len();
+            g.pellets.retain(|p| p.id != *id);
+            if g.pellets.len() == before {
+                return Err(FloeError::Graph(format!(
+                    "delta: no pellet '{id}' to remove"
+                )));
+            }
+            g.edges
+                .retain(|e| e.from_pellet != *id && e.to_pellet != *id);
+        }
+        DeltaOp::AddEdge { edge } => {
+            if g.edges.contains(edge) {
+                return Err(FloeError::Graph(format!(
+                    "delta: edge {}.{} -> {}.{} already exists",
+                    edge.from_pellet,
+                    edge.from_port,
+                    edge.to_pellet,
+                    edge.to_port
+                )));
+            }
+            g.edges.push(edge.clone());
+        }
+        DeltaOp::RemoveEdge { edge } => {
+            let pos = find_edge(g, edge)?;
+            g.edges.remove(pos);
+        }
+        DeltaOp::InsertOnEdge { edge, spec, in_port, out_port } => {
+            if g.pellet(&spec.id).is_some() {
+                return Err(FloeError::Graph(format!(
+                    "delta: pellet '{}' already exists",
+                    spec.id
+                )));
+            }
+            if spec.in_port(in_port).is_none() {
+                return Err(FloeError::Graph(format!(
+                    "delta: insert pellet '{}' has no in port '{in_port}'",
+                    spec.id
+                )));
+            }
+            if spec.out_port(out_port).is_none() {
+                return Err(FloeError::Graph(format!(
+                    "delta: insert pellet '{}' has no out port '{out_port}'",
+                    spec.id
+                )));
+            }
+            let pos = find_edge(g, edge)?;
+            g.edges.remove(pos);
+            g.edges.push(EdgeSpec::new(
+                &edge.from_pellet,
+                &edge.from_port,
+                &spec.id,
+                in_port,
+            ));
+            g.edges.push(EdgeSpec::new(
+                &spec.id,
+                out_port,
+                &edge.to_pellet,
+                &edge.to_port,
+            ));
+            g.pellets.push(spec.clone());
+        }
+        DeltaOp::RetargetEdge { edge, to_pellet, to_port } => {
+            let pos = find_edge(g, edge)?;
+            g.edges[pos].to_pellet = to_pellet.clone();
+            g.edges[pos].to_port = to_port.clone();
+        }
+        DeltaOp::RelocateFlake { id } => {
+            if g.pellet(id).is_none() {
+                return Err(FloeError::Graph(format!(
+                    "delta: no pellet '{id}' to relocate"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn find_edge(g: &DataflowGraph, edge: &EdgeSpec) -> Result<usize> {
+    g.edges.iter().position(|e| e == edge).ok_or_else(|| {
+        FloeError::Graph(format!(
+            "delta: no edge {}.{} -> {}.{}",
+            edge.from_pellet, edge.from_port, edge.to_pellet, edge.to_port
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, SplitMode};
+
+    fn linear() -> DataflowGraph {
+        let mut g = GraphBuilder::new("lin");
+        g.pellet("a", "C").out_port("out", SplitMode::RoundRobin);
+        g.pellet("b", "C")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin);
+        g.pellet("c", "C").in_port("in");
+        g.edge("a", "out", "b", "in");
+        g.edge("b", "out", "c", "in");
+        g.build().unwrap()
+    }
+
+    fn filter_spec(id: &str) -> PelletSpec {
+        let mut g = GraphBuilder::new("tmp");
+        g.pellet(id, "C")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin);
+        let mut built = g.build().unwrap();
+        built.pellets.remove(0)
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let g = linear();
+        let mut d = GraphDelta::new(g.version + 1);
+        d.remove_edge("a", "out", "b", "in");
+        assert!(d.apply_to(&g).is_err());
+        assert!(GraphDelta::against(&g).apply_to(&g).is_err()); // empty
+    }
+
+    #[test]
+    fn insert_on_edge_rewires_both_sides() {
+        let g = linear();
+        let mut d = GraphDelta::against(&g);
+        d.insert_on_edge(
+            EdgeSpec::new("a", "out", "b", "in"),
+            filter_spec("f"),
+            "in",
+            "out",
+        );
+        let g2 = d.apply_to(&g).unwrap();
+        assert_eq!(g2.version, g.version + 1);
+        assert!(g2.pellet("f").is_some());
+        assert_eq!(g2.edges_from("a", "out").count(), 1);
+        assert_eq!(
+            g2.edges_from("a", "out").next().unwrap().to_pellet,
+            "f"
+        );
+        assert_eq!(
+            g2.edges_from("f", "out").next().unwrap().to_pellet,
+            "b"
+        );
+        // Original untouched.
+        assert!(g.pellet("f").is_none());
+    }
+
+    #[test]
+    fn remove_pellet_drops_its_edges() {
+        let g = linear();
+        let mut d = GraphDelta::against(&g);
+        d.remove_pellet("b").add_edge("a", "out", "c", "in");
+        let g2 = d.apply_to(&g).unwrap();
+        assert!(g2.pellet("b").is_none());
+        assert_eq!(g2.edges.len(), 1);
+        assert_eq!(g2.edges[0].to_pellet, "c");
+    }
+
+    #[test]
+    fn invalid_result_rejected_atomically() {
+        let g = linear();
+        // Removing b leaves c orphaned (fine) but removing b while
+        // keeping its edges is impossible; instead check a dangling
+        // add_edge is rejected by the post-apply validation.
+        let mut d = GraphDelta::against(&g);
+        d.add_edge("a", "out", "ghost", "in");
+        assert!(d.apply_to(&g).is_err());
+        let mut d = GraphDelta::against(&g);
+        d.remove_edge("a", "out", "ghost", "in");
+        assert!(d.apply_to(&g).is_err());
+        let mut d = GraphDelta::against(&g);
+        d.relocate_flake("ghost");
+        assert!(d.apply_to(&g).is_err());
+    }
+
+    #[test]
+    fn retarget_edge_moves_sink() {
+        let g = linear();
+        let mut d = GraphDelta::against(&g);
+        d.retarget_edge(EdgeSpec::new("a", "out", "b", "in"), "c", "in")
+            .remove_edge("b", "out", "c", "in");
+        let g2 = d.apply_to(&g).unwrap();
+        assert_eq!(
+            g2.edges_from("a", "out").next().unwrap().to_pellet,
+            "c"
+        );
+    }
+}

@@ -1,0 +1,487 @@
+//! The recomposition engine: executes a compiled [`RecomposePlan`]
+//! against a live [`RunningDataflow`] with
+//! **pause → buffer-at-upstream → rewire → resume** semantics.
+//!
+//! Execution phases (see `mod.rs` for the full design notes):
+//!
+//! 1. **Prepare** (no impact on the stream): compile the plan, resolve
+//!    every pellet factory, allocate containers and spawn the new /
+//!    replacement flakes.  They idle unwired; any failure here aborts
+//!    with zero side effects on the flow.
+//! 2. **Quiesce**: pause the upstream frontier and wait for its
+//!    in-flight compute to drain.  Messages keep arriving and buffer
+//!    in the paused flakes' input queues (bounded, so injectors feel
+//!    ordinary backpressure, never loss).
+//! 3. **Landmark**: every rewired source broadcasts a
+//!    [`Landmark::Recompose`] so downstream pellets observe a clean
+//!    pre/post cut in their streams.
+//! 4. **Cut-over** (under the topology write lock, so ingress resolves
+//!    either the old or the new topology, never a mix): relocated
+//!    flakes hand their state + buffered input to their replacements
+//!    via [`crate::flake::FlakeCheckpoint`]; routers swap targets
+//!    atomically; retired pellets leave the maps; the versioned graph
+//!    advances.
+//! 5. **Retire + resume**: removed pellets drain their remaining
+//!    buffered input through their still-wired outputs, then shut
+//!    down and free their cores; everything else resumes.  A retired
+//!    pellet's upstream frontier resumes only *after* that drain, so
+//!    post-cut traffic on a bypass edge can never overtake the
+//!    retired backlog (per-producer FIFO).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::delta::GraphDelta;
+use super::plan::{compile, RecomposePlan};
+use crate::channel::{InProcTransport, Transport};
+use crate::container::Container;
+use crate::coordinator::{RunningDataflow, Topology};
+use crate::error::{FloeError, Result};
+use crate::flake::{Flake, FlakeConfig};
+use crate::graph::DataflowGraph;
+use crate::message::Landmark;
+
+/// Bound on waiting for in-flight compute during the cut-over.
+const QUIESCE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Bound on draining a retired pellet's buffered input.
+const RETIRE_DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Outcome of one applied delta (also the unit of
+/// [`RunningDataflow::recompose_history`] and the series measured by
+/// `bench_recompose`).
+#[derive(Debug, Clone)]
+pub struct RecomposeStats {
+    /// Graph version after the surgery.
+    pub graph_version: u64,
+    /// Number of delta ops applied.
+    pub ops: usize,
+    pub paused: Vec<String>,
+    pub spawned: Vec<String>,
+    pub removed: Vec<String>,
+    pub relocated: Vec<String>,
+    /// First pause to last resume — the paper's "minimal impact"
+    /// number: how long any part of the stream stood still.
+    pub downtime_ms: f64,
+    /// Time the topology write lock was held (handoff + rewires).
+    pub cutover_ms: f64,
+}
+
+type PlacedFlake = (String, Arc<Flake>, Arc<Container>);
+
+/// The recomposition engine: one instance per surgery, constructed
+/// and serialized by [`RunningDataflow::recompose`].  Crate-internal
+/// so the serialization gate cannot be bypassed.
+pub(crate) struct RecomposeEngine<'a> {
+    run: &'a RunningDataflow,
+}
+
+impl<'a> RecomposeEngine<'a> {
+    pub(crate) fn new(run: &'a RunningDataflow) -> RecomposeEngine<'a> {
+        RecomposeEngine { run }
+    }
+
+    /// Compile and execute `delta` with the module's
+    /// pause → buffer → rewire → resume semantics.
+    pub(crate) fn execute(
+        &self,
+        delta: &GraphDelta,
+    ) -> Result<RecomposeStats> {
+        execute(self.run, delta)
+    }
+}
+
+/// Execute a delta against the running dataflow.  Serialized by the
+/// caller ([`RunningDataflow::recompose`]), so at most one surgery is
+/// in flight per dataflow.
+fn execute(
+    run: &RunningDataflow,
+    delta: &GraphDelta,
+) -> Result<RecomposeStats> {
+    // Phase 1a: compile against the live topology.
+    let (plan, old_graph, old_flakes, old_containers) = {
+        let topo = run.topo.read().expect("topology poisoned");
+        let plan = compile(delta, &topo.graph)?;
+        (
+            plan,
+            topo.graph.clone(),
+            topo.flakes.clone(),
+            topo.containers.clone(),
+        )
+    };
+
+    // Phase 1b: spawn new and replacement flakes.  They idle unwired;
+    // failures abort before the stream is touched.
+    let spawned = spawn_new_flakes(run, &plan)?;
+    let replacements = match spawn_replacements(
+        run,
+        &plan,
+        &old_flakes,
+        &old_containers,
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            teardown(&spawned);
+            return Err(e);
+        }
+    };
+
+    // Phase 2: pause + quiesce the frontier, strictly upstream-first.
+    // Each member is quiesced while everything downstream of it still
+    // runs, so an in-flight push into a (possibly full) downstream
+    // queue always completes — pausing the whole set at once could
+    // leave an upstream worker blocked against a paused neighbour.
+    let t_pause = Instant::now();
+    let mut ordered: Vec<String> = old_graph
+        .wiring_order()
+        .unwrap_or_default()
+        .into_iter()
+        .rev() // wiring order is downstream-first; pause upstream-first
+        .filter(|id| plan.pause_set.contains(id))
+        .collect();
+    for id in &plan.pause_set {
+        if !ordered.contains(id) {
+            ordered.push(id.clone());
+        }
+    }
+    let paused: Vec<(String, Arc<Flake>)> = ordered
+        .iter()
+        .filter_map(|id| {
+            old_flakes.get(id).map(|f| (id.clone(), Arc::clone(f)))
+        })
+        .collect();
+    for (id, f) in &paused {
+        if let Err(e) = f.quiesce(QUIESCE_TIMEOUT) {
+            crate::log_warn!("recompose: quiesce of '{id}' failed: {e}");
+            for (_, f) in &paused {
+                f.resume();
+            }
+            teardown(&spawned);
+            teardown(&replacements);
+            return Err(e);
+        }
+    }
+
+    // Phase 3: landmark the cut on every source whose wiring changes,
+    // while the old wiring is still in place.
+    let version = plan.new_graph.version;
+    for id in plan.rewire.iter().chain(plan.relocate.iter()) {
+        if let Some(f) = old_flakes.get(id) {
+            f.emit_landmark(Landmark::Recompose { version });
+        }
+    }
+
+    // Phase 4: cut over under the topology write lock.  On any error
+    // the maps are rolled back to the pre-surgery topology (the graph
+    // swap is the last step, so the old graph is still in place), the
+    // frontier resumes and the spawned flakes are torn down — a failed
+    // cut-over degrades to a returned error, never a wedged dataflow.
+    // The realistic failure is a handoff quiesce timeout; the rewire
+    // steps are validated against the new graph and cannot miss.
+    let t_cut = Instant::now();
+    let mut retired: Vec<PlacedFlake> = Vec::new();
+    let mut displaced: Vec<PlacedFlake> = Vec::new();
+    {
+        let mut topo = run.topo.write().expect("topology poisoned");
+        let result = cut_over(
+            &mut topo,
+            &plan,
+            &old_graph,
+            &spawned,
+            &replacements,
+            &mut retired,
+            &mut displaced,
+        );
+        if let Err(e) = result {
+            for (id, old, old_c) in &displaced {
+                topo.flakes.insert(id.clone(), Arc::clone(old));
+                topo.containers.insert(id.clone(), Arc::clone(old_c));
+            }
+            for (id, f, c) in &retired {
+                topo.flakes.insert(id.clone(), Arc::clone(f));
+                topo.containers.insert(id.clone(), Arc::clone(c));
+            }
+            for (id, _, _) in &spawned {
+                topo.flakes.remove(id);
+                topo.containers.remove(id);
+            }
+            drop(topo);
+            for (_, f) in &paused {
+                f.resume();
+            }
+            teardown(&spawned);
+            teardown(&replacements);
+            return Err(e);
+        }
+    }
+    let cutover_ms = t_cut.elapsed().as_secs_f64() * 1e3;
+
+    // Phase 5: resume order is FIFO-critical.  A retired pellet's
+    // upstream frontier must stay paused until the pellet's buffered
+    // backlog has drained downstream: resuming it earlier would let
+    // post-cut traffic on a bypass edge (e.g. remove 'mid' + add
+    // head->tail) overtake the backlog still sitting in the retired
+    // pellet.  Survivors that do not feed a retired pellet resume
+    // immediately, so retire drains never wait on a paused sink.
+    let retire_frontier: Vec<String> = plan
+        .remove
+        .iter()
+        .flat_map(|id| {
+            old_graph.edges_into(id).map(|e| e.from_pellet.clone())
+        })
+        .collect();
+    let survivor = |id: &String| {
+        !plan.remove.contains(id) && !plan.relocate.contains(id)
+    };
+    // 5a: survivors outside the retire frontier.
+    for (id, f) in &paused {
+        if survivor(id) && !retire_frontier.contains(id) {
+            f.resume();
+        }
+    }
+    // 5b: retired pellets resume and drain, upstream-first.
+    sort_by_wiring(&mut retired, &old_graph);
+    for (_, f, _) in &retired {
+        f.resume();
+    }
+    for (id, f, _) in &retired {
+        if !f.drain(RETIRE_DRAIN_TIMEOUT) {
+            crate::log_warn!(
+                "recompose: retired pellet '{id}' did not drain in time"
+            );
+        }
+    }
+    // 5c: the retire frontier rejoins the stream.
+    for (id, f) in &paused {
+        if survivor(id) && retire_frontier.contains(id) {
+            f.resume();
+        }
+    }
+    let downtime_ms = t_pause.elapsed().as_secs_f64() * 1e3;
+    // 5d: tear the retired flakes down (a second, normally-instant
+    // drain covers backlog that was still moving when 5b timed out).
+    for (id, f, c) in &retired {
+        f.drain(RETIRE_DRAIN_TIMEOUT);
+        if let Err(e) = c.remove_flake(id) {
+            crate::log_warn!("recompose: removing '{id}': {e}");
+        }
+    }
+    // 5e: displaced flakes are empty husks (queues drained into the
+    // replacement); free their cores.
+    for (id, _, c) in &displaced {
+        if let Err(e) = c.remove_flake(id) {
+            crate::log_warn!("recompose: removing displaced '{id}': {e}");
+        }
+    }
+
+    crate::log_info!(
+        "recompose: v{} applied ({} ops, {} paused) in {:.2} ms \
+         (cut-over {:.2} ms)",
+        version,
+        delta.ops.len(),
+        paused.len(),
+        downtime_ms,
+        cutover_ms
+    );
+    Ok(RecomposeStats {
+        graph_version: version,
+        ops: delta.ops.len(),
+        paused: plan.pause_set.clone(),
+        spawned: plan.spawn.clone(),
+        removed: plan.remove.clone(),
+        relocated: plan.relocate.clone(),
+        downtime_ms,
+        cutover_ms,
+    })
+}
+
+/// The write-lock body of a surgery: map swaps, wiring, and the
+/// relocation handoff.  Mutations are recorded in `retired` /
+/// `displaced` so the caller can roll the maps back on error.
+fn cut_over(
+    topo: &mut Topology,
+    plan: &RecomposePlan,
+    old_graph: &DataflowGraph,
+    spawned: &[PlacedFlake],
+    replacements: &[PlacedFlake],
+    retired: &mut Vec<PlacedFlake>,
+    displaced: &mut Vec<PlacedFlake>,
+) -> Result<()> {
+    // New and replacement flakes join the resolution map first so
+    // every rewire below can target them.
+    for (id, f, c) in spawned.iter().chain(replacements.iter()) {
+        if let Some(old) = topo.flakes.get(id) {
+            // Replacement: remember the displaced incarnation.
+            displaced.push((
+                id.clone(),
+                Arc::clone(old),
+                Arc::clone(&topo.containers[id]),
+            ));
+        }
+        topo.flakes.insert(id.clone(), Arc::clone(f));
+        topo.containers.insert(id.clone(), Arc::clone(c));
+    }
+    // Wire the newcomers' outputs per the successor graph.
+    for (id, f, _) in spawned.iter().chain(replacements.iter()) {
+        rewire_flake(f, id, &plan.new_graph, &topo.flakes)?;
+    }
+    // State + buffered-input handoff for relocations (the old flake
+    // is already quiesced, so this is capture + replay).
+    for (id, old, _) in displaced.iter() {
+        let cp = old.handoff()?;
+        topo.flakes[id].restore(&cp)?;
+    }
+    // Atomic target swaps on the pre-existing frontier.
+    for id in &plan.rewire {
+        let f = Arc::clone(&topo.flakes[id]);
+        rewire_flake(&f, id, &plan.new_graph, &topo.flakes)?;
+    }
+    // Retired pellets keep their *old* edges but re-resolved against
+    // the updated map, so their drain still lands on the current
+    // incarnation of each downstream sink.
+    for id in &plan.remove {
+        let f = Arc::clone(&topo.flakes[id]);
+        rewire_flake(&f, id, old_graph, &topo.flakes)?;
+    }
+    for id in &plan.remove {
+        let f = topo.flakes.remove(id).expect("validated removal");
+        let c = topo.containers.remove(id).expect("validated removal");
+        retired.push((id.clone(), f, c));
+    }
+    topo.graph = plan.new_graph.clone();
+    Ok(())
+}
+
+/// Spawn the delta's brand-new pellets (AddPellet / InsertOnEdge).
+fn spawn_new_flakes(
+    run: &RunningDataflow,
+    plan: &RecomposePlan,
+) -> Result<Vec<PlacedFlake>> {
+    let mut out = Vec::new();
+    for id in &plan.spawn {
+        let spec = plan
+            .new_graph
+            .pellet(id)
+            .ok_or_else(|| {
+                FloeError::Graph(format!("plan: missing pellet '{id}'"))
+            })?
+            .clone();
+        let factory = match run.registry.resolve(&spec.class) {
+            Ok(f) => f,
+            Err(e) => {
+                teardown(&out);
+                return Err(e);
+            }
+        };
+        let mut cfg = FlakeConfig::from_spec(&spec);
+        run.tuning.apply(&mut cfg);
+        let placed = run
+            .manager
+            .allocate(cfg.cores)
+            .and_then(|c| c.spawn_flake(cfg, factory).map(|f| (f, c)));
+        match placed {
+            Ok((f, c)) => out.push((id.clone(), f, c)),
+            Err(e) => {
+                teardown(&out);
+                return Err(e);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Spawn replacement flakes for relocations on a *different*
+/// container, cloning the live config and the live (possibly updated)
+/// pellet factory.
+fn spawn_replacements(
+    run: &RunningDataflow,
+    plan: &RecomposePlan,
+    old_flakes: &HashMap<String, Arc<Flake>>,
+    old_containers: &HashMap<String, Arc<Container>>,
+) -> Result<Vec<PlacedFlake>> {
+    let mut out = Vec::new();
+    for id in &plan.relocate {
+        let (old, old_c) = match (
+            old_flakes.get(id),
+            old_containers.get(id),
+        ) {
+            (Some(f), Some(c)) => (f, c),
+            _ => {
+                teardown(&out);
+                return Err(FloeError::Graph(format!(
+                    "recompose: no live flake '{id}' to relocate"
+                )));
+            }
+        };
+        let cfg = old.config();
+        let factory = old.current_factory();
+        let placed = run
+            .manager
+            .allocate_avoiding(cfg.cores, &old_c.id)
+            .and_then(|c| c.spawn_flake(cfg, factory).map(|f| (f, c)));
+        match placed {
+            Ok((f, c)) => out.push((id.clone(), f, c)),
+            Err(e) => {
+                teardown(&out);
+                return Err(e);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Atomically set every output port of `flake` to the targets `graph`
+/// prescribes, resolved against the current flake map.
+fn rewire_flake(
+    flake: &Arc<Flake>,
+    id: &str,
+    graph: &DataflowGraph,
+    flakes: &HashMap<String, Arc<Flake>>,
+) -> Result<()> {
+    for port in flake.output_ports() {
+        let mut targets: Vec<Arc<dyn Transport>> = Vec::new();
+        for edge in graph.edges_from(id, &port) {
+            let sink = flakes.get(&edge.to_pellet).ok_or_else(|| {
+                FloeError::Graph(format!(
+                    "recompose: edge target '{}' has no flake",
+                    edge.to_pellet
+                ))
+            })?;
+            let queue = sink.input_queue(&edge.to_port)?;
+            targets.push(Arc::new(InProcTransport {
+                queue,
+                label: format!(
+                    "{}.{} -> {}.{}",
+                    edge.from_pellet,
+                    edge.from_port,
+                    edge.to_pellet,
+                    edge.to_port
+                ),
+            }));
+        }
+        flake.replace_output_targets(&port, targets)?;
+    }
+    Ok(())
+}
+
+/// Upstream-first order for retiring pellets, so a retired pellet's
+/// drain can still deliver into a downstream pellet retired by the
+/// same delta.
+fn sort_by_wiring(retired: &mut [PlacedFlake], graph: &DataflowGraph) {
+    if let Ok(order) = graph.wiring_order() {
+        // wiring_order is downstream-first; retire upstream-first.
+        let pos = |id: &str| {
+            order.iter().position(|x| x == id).unwrap_or(0)
+        };
+        retired.sort_by(|a, b| pos(&b.0).cmp(&pos(&a.0)));
+    }
+}
+
+/// Best-effort rollback of flakes spawned before an aborted cut-over.
+fn teardown(placed: &[PlacedFlake]) {
+    for (id, _, c) in placed {
+        if let Err(e) = c.remove_flake(id) {
+            crate::log_warn!("recompose: rollback of '{id}': {e}");
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Plan compilation: a validated [`GraphDelta`] becomes a
+//! [`RecomposePlan`] — the successor graph plus the *minimal pause
+//! set*, computed from the delta's upstream frontier.
+//!
+//! Only pellets whose **output wiring changes** (the source pellet of
+//! every added/removed/retargeted/spliced edge, and every upstream
+//! neighbour of a removed or relocated pellet) plus the
+//! removed/relocated pellets themselves are paused.  The rest of the
+//! dataflow keeps running through the surgery; messages heading into
+//! the paused frontier simply buffer in its input queues under the
+//! normal backpressure contract.
+
+use std::collections::BTreeSet;
+
+use super::delta::{DeltaOp, GraphDelta};
+use crate::error::{FloeError, Result};
+use crate::graph::DataflowGraph;
+
+/// Compiled surgery plan (see module docs for the pause-set rules).
+#[derive(Debug, Clone)]
+pub struct RecomposePlan {
+    /// The successor topology (version = live version + 1).
+    pub new_graph: DataflowGraph,
+    /// Pellets paused and quiesced for the cut-over, sorted.
+    pub pause_set: Vec<String>,
+    /// Pre-existing pellets whose routers are atomically re-targeted.
+    pub rewire: Vec<String>,
+    /// Pellets spawned by this delta (AddPellet / InsertOnEdge).
+    pub spawn: Vec<String>,
+    /// Pellets retired by this delta.
+    pub remove: Vec<String>,
+    /// Pellets whose flakes move to a different container.
+    pub relocate: Vec<String>,
+}
+
+/// Compile `delta` against the live graph.
+pub fn compile(
+    delta: &GraphDelta,
+    graph: &DataflowGraph,
+) -> Result<RecomposePlan> {
+    let new_graph = delta.apply_to(graph)?;
+    let mut pause: BTreeSet<String> = BTreeSet::new();
+    let mut rewire: BTreeSet<String> = BTreeSet::new();
+    let mut spawn: Vec<String> = Vec::new();
+    let mut remove: Vec<String> = Vec::new();
+    let mut relocate: Vec<String> = Vec::new();
+    for op in &delta.ops {
+        match op {
+            DeltaOp::AddPellet { spec } => spawn.push(spec.id.clone()),
+            DeltaOp::InsertOnEdge { edge, spec, .. } => {
+                spawn.push(spec.id.clone());
+                pause.insert(edge.from_pellet.clone());
+                rewire.insert(edge.from_pellet.clone());
+            }
+            DeltaOp::AddEdge { edge }
+            | DeltaOp::RemoveEdge { edge }
+            | DeltaOp::RetargetEdge { edge, .. } => {
+                pause.insert(edge.from_pellet.clone());
+                rewire.insert(edge.from_pellet.clone());
+            }
+            DeltaOp::RemovePellet { id } => {
+                for e in graph.edges_into(id) {
+                    pause.insert(e.from_pellet.clone());
+                    rewire.insert(e.from_pellet.clone());
+                }
+                pause.insert(id.clone());
+                remove.push(id.clone());
+            }
+            DeltaOp::RelocateFlake { id } => {
+                for e in graph.edges_into(id) {
+                    pause.insert(e.from_pellet.clone());
+                    rewire.insert(e.from_pellet.clone());
+                }
+                pause.insert(id.clone());
+                relocate.push(id.clone());
+            }
+        }
+    }
+    relocate.sort();
+    relocate.dedup();
+    remove.sort();
+    remove.dedup();
+    // One relocation per delta: a handoff can only fail *before* it
+    // mutates anything (its quiesce), so with a single relocation the
+    // engine's rollback is always sound.  A second handoff failing
+    // after the first succeeded would strand the first pellet's
+    // captured backlog in a replacement the rollback tears down.
+    if relocate.len() > 1 {
+        return Err(FloeError::Graph(
+            "one relocation per delta; split into separate deltas"
+                .into(),
+        ));
+    }
+    if relocate.iter().any(|id| remove.contains(id)) {
+        return Err(FloeError::Graph(
+            "delta both removes and relocates a pellet".into(),
+        ));
+    }
+    // Removing and re-adding one id in a single delta would retire the
+    // freshly spawned flake (the graph would then claim a pellet with
+    // no live flake); relocating a same-delta spawn is equally
+    // meaningless.  Split such edits across two deltas.
+    if spawn.iter().any(|id| remove.contains(id)) {
+        return Err(FloeError::Graph(
+            "delta both spawns and removes a pellet".into(),
+        ));
+    }
+    if spawn.iter().any(|id| relocate.contains(id)) {
+        return Err(FloeError::Graph(
+            "delta both spawns and relocates a pellet".into(),
+        ));
+    }
+    // A pellet spawned by this same delta is born paused-free and gets
+    // wired from scratch; only pre-existing pellets pause or rewire.
+    pause.retain(|id| graph.pellet(id).is_some());
+    rewire.retain(|id| {
+        graph.pellet(id).is_some() && !remove.contains(id)
+    });
+    // A relocation replays its captured backlog through the
+    // replacement while the topology write lock is held; if any
+    // pellet *reachable downstream* of the relocated one is paused by
+    // this same delta, the replay can cascade into that paused queue
+    // and block forever under the lock.  Reject the combination —
+    // split it across two deltas.  (This also rejects relocating a
+    // pellet on a cycle whose loop passes through its own paused
+    // upstream frontier: the replay could wedge against it the same
+    // way.)
+    for id in &relocate {
+        let mut frontier = vec![id.clone()];
+        let mut reachable: BTreeSet<String> = BTreeSet::new();
+        while let Some(cur) = frontier.pop() {
+            for e in
+                graph.edges.iter().filter(|e| e.from_pellet == cur)
+            {
+                if reachable.insert(e.to_pellet.clone()) {
+                    frontier.push(e.to_pellet.clone());
+                }
+            }
+        }
+        if let Some(blocked) =
+            reachable.iter().find(|p| pause.contains(*p))
+        {
+            return Err(FloeError::Graph(format!(
+                "delta relocates '{id}' while pausing downstream \
+                 '{blocked}'; split into two deltas"
+            )));
+        }
+    }
+    Ok(RecomposePlan {
+        new_graph,
+        pause_set: pause.into_iter().collect(),
+        rewire: rewire.into_iter().collect(),
+        spawn,
+        remove,
+        relocate,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, SplitMode};
+
+    fn diamond() -> DataflowGraph {
+        let mut g = GraphBuilder::new("d");
+        g.pellet("src", "C").out_port("out", SplitMode::RoundRobin);
+        g.pellet("l", "C")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin);
+        g.pellet("r", "C")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin);
+        g.pellet("sink", "C").in_port("in");
+        g.edge("src", "out", "l", "in");
+        g.edge("src", "out", "r", "in");
+        g.edge("l", "out", "sink", "in");
+        g.edge("r", "out", "sink", "in");
+        g.build().unwrap()
+    }
+
+    #[test]
+    fn pause_set_is_upstream_frontier_only() {
+        let g = diamond();
+        // Removing 'r' pauses its upstream (src) and r itself; the
+        // untouched l/sink branch keeps running.
+        let mut d = GraphDelta::against(&g);
+        d.remove_pellet("r");
+        let plan = compile(&d, &g).unwrap();
+        assert_eq!(plan.pause_set, vec!["r", "src"]);
+        assert_eq!(plan.rewire, vec!["src"]);
+        assert_eq!(plan.remove, vec!["r"]);
+        assert!(plan.spawn.is_empty());
+    }
+
+    #[test]
+    fn relocation_pauses_self_and_upstream() {
+        let g = diamond();
+        let mut d = GraphDelta::against(&g);
+        d.relocate_flake("l");
+        let plan = compile(&d, &g).unwrap();
+        assert_eq!(plan.pause_set, vec!["l", "src"]);
+        assert_eq!(plan.rewire, vec!["src"]);
+        assert_eq!(plan.relocate, vec!["l"]);
+    }
+
+    #[test]
+    fn remove_and_relocate_same_pellet_rejected() {
+        let g = diamond();
+        let mut d = GraphDelta::against(&g);
+        d.remove_pellet("r").relocate_flake("r");
+        assert!(compile(&d, &g).is_err());
+    }
+
+    #[test]
+    fn multiple_relocations_rejected() {
+        let g = diamond();
+        let mut d = GraphDelta::against(&g);
+        d.relocate_flake("l").relocate_flake("r");
+        assert!(compile(&d, &g).is_err());
+    }
+
+    #[test]
+    fn relocate_with_paused_downstream_rejected() {
+        let g = diamond();
+        // Removing 'sink' pauses l/r/sink; relocating 'l' would replay
+        // its backlog into the paused 'sink' under the topology lock.
+        let mut d = GraphDelta::against(&g);
+        d.relocate_flake("l").remove_pellet("sink");
+        assert!(compile(&d, &g).is_err());
+    }
+
+    #[test]
+    fn remove_then_readd_same_id_rejected() {
+        let g = diamond();
+        let mut tmp = GraphBuilder::new("tmp");
+        tmp.pellet("r", "C")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin);
+        let mut built = tmp.build().unwrap();
+        let spec = built.pellets.remove(0);
+        let mut d = GraphDelta::against(&g);
+        d.remove_pellet("r")
+            .add_pellet(spec)
+            .add_edge("src", "out", "r", "in")
+            .add_edge("r", "out", "sink", "in");
+        assert!(compile(&d, &g).is_err());
+    }
+
+    #[test]
+    fn edge_to_new_pellet_pauses_only_its_source() {
+        let g = diamond();
+        let mut spec_g = GraphBuilder::new("tmp");
+        spec_g.pellet("tap", "C").in_port("in");
+        let spec = spec_g.build().unwrap().pellets.remove(0);
+        let mut d = GraphDelta::against(&g);
+        d.add_pellet(spec).add_edge("l", "out", "tap", "in");
+        let plan = compile(&d, &g).unwrap();
+        assert_eq!(plan.pause_set, vec!["l"]);
+        assert_eq!(plan.spawn, vec!["tap"]);
+    }
+}

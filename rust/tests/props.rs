@@ -10,8 +10,9 @@ use floe::channel::{
     InProcTransport, QueueClosed, ShardedQueue, SyncQueue, Transport,
 };
 use floe::flake::{FlakeObservation, OutputRouter};
-use floe::graph::{GraphBuilder, SplitMode};
+use floe::graph::{DataflowGraph, GraphBuilder, SplitMode};
 use floe::message::{key_hash, Landmark, Message, Payload};
+use floe::recompose::GraphDelta;
 use floe::sim::{simulate, SimConfig, StrategyKind, WorkloadProfile};
 use floe::util::testkit::{run_cases, Gen};
 
@@ -44,9 +45,12 @@ fn random_message(g: &mut Gen, depth: usize) -> Message {
         m.key = Some(g.string(1..16));
     }
     if g.bool(0.2) {
-        m.landmark = Some(match g.int(0, 2) {
+        m.landmark = Some(match g.int(0, 3) {
             0 => Landmark::WindowEnd(g.string(1..8)),
             1 => Landmark::Update { version: g.int(0, 1 << 30) as u64 },
+            2 => {
+                Landmark::Recompose { version: g.int(0, 1 << 30) as u64 }
+            }
             _ => Landmark::Custom(g.string(1..8)),
         });
     }
@@ -532,5 +536,84 @@ fn prop_sim_conserves_messages() {
         );
         // Cores never negative, samples cover the duration.
         assert_eq!(r.samples.len(), 600);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Graph deltas (live recomposition)
+// ---------------------------------------------------------------------------
+
+fn chain_graph(n: usize) -> DataflowGraph {
+    let mut g = GraphBuilder::new("chain");
+    for i in 0..n {
+        let id = format!("p{i}");
+        if i == 0 {
+            g.pellet(&id, "C").out_port("out", SplitMode::RoundRobin);
+        } else if i + 1 == n {
+            g.pellet(&id, "C").in_port("in");
+        } else {
+            g.pellet(&id, "C")
+                .in_port("in")
+                .out_port("out", SplitMode::RoundRobin);
+        }
+    }
+    for i in 0..n - 1 {
+        g.edge(&format!("p{i}"), "out", &format!("p{}", i + 1), "in");
+    }
+    g.build().unwrap()
+}
+
+#[test]
+fn prop_delta_apply_is_atomic_and_versioned() {
+    run_cases("recompose: delta apply all-or-nothing", 120, |g| {
+        let n = g.int(3, 6) as usize;
+        let graph = chain_graph(n);
+        let mut d = GraphDelta::against(&graph);
+        let nops = g.int(1, 4);
+        for _ in 0..nops {
+            match g.int(0, 3) {
+                0 => {
+                    // Splice a new pellet into a random existing edge.
+                    let ei = g.index(graph.edges.len());
+                    let edge = graph.edges[ei].clone();
+                    let id = format!("ins{}", g.int(0, 1 << 20));
+                    let mut tmp = GraphBuilder::new("t");
+                    tmp.pellet(&id, "C")
+                        .in_port("in")
+                        .out_port("out", SplitMode::RoundRobin);
+                    let spec = tmp.build().unwrap().pellets.remove(0);
+                    d.insert_on_edge(edge, spec, "in", "out");
+                }
+                1 => {
+                    d.remove_pellet(&format!("p{}", g.index(n)));
+                }
+                2 => {
+                    d.relocate_flake(&format!("p{}", g.index(n)));
+                }
+                _ => {
+                    // Possibly-dangling edge removal.
+                    let from = g.index(n);
+                    let to = g.index(n);
+                    d.remove_edge(
+                        &format!("p{from}"),
+                        "out",
+                        &format!("p{to}"),
+                        "in",
+                    );
+                }
+            }
+        }
+        match d.apply_to(&graph) {
+            Ok(g2) => {
+                // Success: version advanced, result structurally valid.
+                assert_eq!(g2.version, graph.version + 1);
+                g2.validate().unwrap();
+            }
+            Err(_) => {
+                // Failure: all-or-nothing, the source graph untouched.
+                assert_eq!(graph.version, 1);
+                graph.validate().unwrap();
+            }
+        }
     });
 }

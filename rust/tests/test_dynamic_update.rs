@@ -233,6 +233,57 @@ fn wave_update_proceeds_upstream_first() {
     run.stop();
 }
 
+/// Regression: `wave_update` used to swap upstream flakes first and
+/// only then notice an unknown pellet id or class, leaving the
+/// dataflow half-updated.  Validation now happens before any swap.
+#[test]
+fn wave_update_is_atomic_on_bad_input() {
+    let (coord, _collected) = setup();
+    let mut g = GraphBuilder::new("wave-atomic");
+    g.pellet("a", "test.V1")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("b", "test.V1")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("sink", "floe.builtin.CountSink").in_port("in").stateful();
+    g.edge("a", "out", "b", "in");
+    g.edge("b", "out", "sink", "in");
+    let run =
+        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+
+    // Unknown pellet id anywhere in the set: nothing may change, even
+    // for the valid upstream entry that traversal reaches first.
+    assert!(run
+        .wave_update(&[
+            ("a".to_string(), "test.V2".to_string()),
+            ("ghost".to_string(), "test.V2".to_string()),
+        ])
+        .is_err());
+    assert_eq!(run.flake("a").unwrap().version(), 1, "half-applied wave");
+    assert_eq!(run.flake("b").unwrap().version(), 1);
+
+    // Unknown class: same atomicity.
+    assert!(run
+        .wave_update(&[
+            ("a".to_string(), "test.V2".to_string()),
+            ("b".to_string(), "test.NoSuchClass".to_string()),
+        ])
+        .is_err());
+    assert_eq!(run.flake("a").unwrap().version(), 1, "half-applied wave");
+    assert_eq!(run.flake("b").unwrap().version(), 1);
+
+    // The validated wave still applies normally afterwards.
+    let versions = run
+        .wave_update(&[
+            ("a".to_string(), "test.V2".to_string()),
+            ("b".to_string(), "test.V2".to_string()),
+        ])
+        .unwrap();
+    assert_eq!(versions, vec![2, 2]);
+    run.stop();
+}
+
 /// A pellet that takes long enough per message for an update to land
 /// mid-compute; checks `ctx.interrupted()` (the InterruptException path).
 struct Slow {

@@ -1,0 +1,494 @@
+//! Live graph surgery (recomposition) invariants: zero message loss
+//! and per-producer FIFO across insert-on-edge, remove-pellet and
+//! flake relocation — all while messages are being injected — plus
+//! delta atomicity and the landmark-separated pre/post cut.
+//!
+//! FIFO assertions run with `input_shards = 1` and sequential pellets
+//! so arrival order is observable end-to-end; loss assertions hold for
+//! any configuration.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use floe::coordinator::{Coordinator, LaunchOptions, RunningDataflow};
+use floe::error::Result;
+use floe::graph::{
+    EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
+    SplitMode, WindowSpec,
+};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::{Landmark, Message};
+use floe::pellet::builtins::CollectSink;
+use floe::pellet::{Pellet, PelletContext, PelletRegistry, PortIo};
+use floe::recompose::GraphDelta;
+use floe::util::testkit::run_cases;
+
+/// Stateful sink counting non-landmark messages into `processed`.
+struct Count;
+
+impl Pellet for Count {
+    fn compute(
+        &mut self,
+        input: PortIo,
+        ctx: &mut PelletContext,
+    ) -> Result<()> {
+        for m in input.messages() {
+            if !m.is_landmark() {
+                ctx.state().update_num("processed", |c| c + 1.0);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn setup() -> (Coordinator, Arc<Mutex<Vec<Message>>>) {
+    let cloud = SimulatedCloud::new(512, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    registry.register("test.Count", || Box::new(Count));
+    let collected = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    registry.register("test.Collect", move || {
+        Box::new(CollectSink { collected: Arc::clone(&c2) })
+    });
+    (Coordinator::new(ResourceManager::new(cloud), registry), collected)
+}
+
+fn fifo_options() -> LaunchOptions {
+    LaunchOptions { input_shards: 1, ..LaunchOptions::default() }
+}
+
+/// A sequential in->out pellet spec for splicing into live edges.
+fn seq_spec(id: &str, class: &str) -> PelletSpec {
+    let mut s = PelletSpec::new(id, class);
+    s.inputs
+        .push(InPortSpec { name: "in".into(), window: WindowSpec::None });
+    s.outputs.push(OutPortSpec {
+        name: "out".into(),
+        split: SplitMode::RoundRobin,
+    });
+    s.sequential = true;
+    s
+}
+
+fn inject_background(
+    run: &Arc<RunningDataflow>,
+    pellet: &'static str,
+    n: usize,
+) -> std::thread::JoinHandle<()> {
+    let run = Arc::clone(run);
+    std::thread::spawn(move || {
+        for i in 0..n {
+            run.inject(pellet, "in", Message::text(format!("m{i:05}")))
+                .unwrap();
+            if i % 100 == 0 {
+                std::thread::sleep(Duration::from_micros(300));
+            }
+        }
+    })
+}
+
+/// Collected texts must be one strictly increasing sequence (single
+/// producer, sequential pellets, one shard = end-to-end FIFO).
+fn assert_fifo(texts: &[&str]) {
+    let mut last = -1i64;
+    for t in texts {
+        let n: i64 = t[1..].parse().expect("numeric suffix");
+        assert!(n > last, "FIFO violated: {n} after {last}");
+        last = n;
+    }
+}
+
+#[test]
+fn insert_on_edge_live_no_loss_clean_cut() {
+    let (coord, collected) = setup();
+    let mut g = GraphBuilder::new("ins");
+    g.pellet("head", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("tail", "test.Collect").in_port("in").sequential();
+    g.edge("head", "out", "tail", "in");
+    let run =
+        Arc::new(coord.launch(g.build().unwrap(), fifo_options()).unwrap());
+
+    let total = 2000;
+    let injector = inject_background(&run, "head", total);
+    std::thread::sleep(Duration::from_millis(5));
+
+    let mut d = GraphDelta::against(&run.graph());
+    d.insert_on_edge(
+        EdgeSpec::new("head", "out", "tail", "in"),
+        seq_spec("mid", "floe.builtin.Uppercase"),
+        "in",
+        "out",
+    );
+    let stats = run.recompose(&d).unwrap();
+    assert_eq!(stats.graph_version, 2);
+    assert_eq!(stats.spawned, vec!["mid"]);
+    assert!(stats.downtime_ms >= 0.0);
+
+    injector.join().unwrap();
+    assert!(run.drain(Duration::from_secs(20)));
+
+    let got = collected.lock().unwrap();
+    let texts: Vec<&str> = got
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .map(|m| m.as_text().unwrap())
+        .collect();
+    // Zero loss.
+    assert_eq!(texts.len(), total, "lost messages across insert");
+    // Per-producer FIFO end-to-end.
+    assert_fifo(&texts);
+    // Clean cut: every pre-surgery (lowercase) message precedes every
+    // post-surgery (uppercased by the spliced pellet) message, and the
+    // Recompose landmark sits exactly on the boundary.
+    let first_upper = texts.iter().position(|t| t.starts_with('M'));
+    if let Some(cut) = first_upper {
+        assert!(
+            texts[cut..].iter().all(|t| t.starts_with('M')),
+            "mixed pre/post streams after the cut"
+        );
+    }
+    // Landmark delivery is best-effort (a full sink queue drops it
+    // rather than wedging the engine), so the positional check is
+    // conditional; the clean-cut assertion above already holds
+    // unconditionally.
+    if let Some(lm_pos) = got.iter().position(|m| {
+        matches!(m.landmark, Some(Landmark::Recompose { version: 2 }))
+    }) {
+        let lower_after_lm = got[lm_pos..]
+            .iter()
+            .filter_map(|m| m.as_text())
+            .any(|t| t.starts_with('m'));
+        assert!(!lower_after_lm, "pre-cut message after the landmark");
+    }
+    drop(got);
+
+    assert_eq!(run.graph_version(), 2);
+    assert!(run.pellet_ids().contains(&"mid".to_string()));
+    assert_eq!(run.recompose_history().len(), 1);
+    run.stop();
+}
+
+#[test]
+fn remove_pellet_live_drains_and_retires() {
+    let (coord, collected) = setup();
+    let mut g = GraphBuilder::new("rm");
+    g.pellet("head", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("mid", "floe.builtin.Uppercase")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("tail", "test.Collect").in_port("in").sequential();
+    g.edge("head", "out", "mid", "in");
+    g.edge("mid", "out", "tail", "in");
+    let run =
+        Arc::new(coord.launch(g.build().unwrap(), fifo_options()).unwrap());
+
+    let total = 2000;
+    let injector = inject_background(&run, "head", total);
+    std::thread::sleep(Duration::from_millis(5));
+
+    let mut d = GraphDelta::against(&run.graph());
+    d.remove_pellet("mid").add_edge("head", "out", "tail", "in");
+    let stats = run.recompose(&d).unwrap();
+    assert_eq!(stats.removed, vec!["mid"]);
+
+    injector.join().unwrap();
+    // Guaranteed post-surgery traffic on the rewired direct route.
+    let extra = 200;
+    for i in 0..extra {
+        run.inject("head", "in", Message::text(format!("x{i:05}")))
+            .unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(20)));
+
+    let got = collected.lock().unwrap();
+    let texts: Vec<&str> = got
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .map(|m| m.as_text().unwrap())
+        .collect();
+    // Zero loss: pre-cut messages drained through the retiring pellet
+    // (uppercase), post-cut ones flow direct (lowercase).
+    assert_eq!(texts.len(), total + extra, "lost messages across removal");
+    assert!(texts.iter().any(|t| t.starts_with('M')));
+    assert!(texts.iter().any(|t| t.starts_with('x')));
+    drop(got);
+
+    assert!(run.flake("mid").is_err());
+    assert!(run.graph().pellet("mid").is_none());
+    run.stop();
+}
+
+#[test]
+fn relocate_flake_live_preserves_state_and_messages() {
+    let (coord, _collected) = setup();
+    let mut g = GraphBuilder::new("reloc");
+    g.pellet("head", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("cnt", "test.Count").in_port("in").stateful();
+    g.edge("head", "out", "cnt", "in");
+    let run = Arc::new(
+        coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap(),
+    );
+    let home_before = run.container("cnt").unwrap().id.clone();
+
+    let total = 2000;
+    let injector = inject_background(&run, "head", total);
+    std::thread::sleep(Duration::from_millis(5));
+
+    let mut d = GraphDelta::against(&run.graph());
+    d.relocate_flake("cnt");
+    let stats = run.recompose(&d).unwrap();
+    assert_eq!(stats.relocated, vec!["cnt"]);
+
+    injector.join().unwrap();
+    assert!(run.drain(Duration::from_secs(20)));
+
+    // The flake moved to a different container...
+    let home_after = run.container("cnt").unwrap().id.clone();
+    assert_ne!(home_before, home_after, "flake did not move");
+    // ...and neither state nor buffered messages were lost.
+    let processed = run
+        .flake("cnt")
+        .unwrap()
+        .state()
+        .get("processed")
+        .and_then(|j| j.as_f64())
+        .unwrap();
+    assert_eq!(processed, total as f64, "lost messages across relocation");
+    run.stop();
+}
+
+#[test]
+fn relocate_source_under_direct_injection() {
+    let (coord, _collected) = setup();
+    let mut g = GraphBuilder::new("src-reloc");
+    g.pellet("solo", "test.Count").in_port("in").stateful();
+    let run = Arc::new(
+        coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap(),
+    );
+
+    let total = 2000;
+    // Injection targets the relocated pellet itself: the old queue
+    // closes behind the handoff capture and the injector re-resolves
+    // the replacement (retry path in RunningDataflow::inject).
+    let injector = inject_background(&run, "solo", total);
+    std::thread::sleep(Duration::from_millis(5));
+
+    let mut d = GraphDelta::against(&run.graph());
+    d.relocate_flake("solo");
+    run.recompose(&d).unwrap();
+
+    injector.join().unwrap();
+    assert!(run.drain(Duration::from_secs(20)));
+    let processed = run
+        .flake("solo")
+        .unwrap()
+        .state()
+        .get("processed")
+        .and_then(|j| j.as_f64())
+        .unwrap();
+    assert_eq!(processed, total as f64, "lost messages relocating source");
+    run.stop();
+}
+
+#[test]
+fn bad_deltas_reject_atomically() {
+    let (coord, collected) = setup();
+    let mut g = GraphBuilder::new("atomic");
+    g.pellet("head", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("tail", "test.Collect").in_port("in");
+    g.edge("head", "out", "tail", "in");
+    let run = coord
+        .launch(g.build().unwrap(), LaunchOptions::default())
+        .unwrap();
+
+    // Stale base version.
+    let mut d = GraphDelta::new(run.graph_version() + 1);
+    d.remove_pellet("tail");
+    assert!(run.recompose(&d).is_err());
+    // Unknown pellet.
+    let mut d = GraphDelta::against(&run.graph());
+    d.relocate_flake("ghost");
+    assert!(run.recompose(&d).is_err());
+    // Remove + relocate the same pellet.
+    let mut d = GraphDelta::against(&run.graph());
+    d.remove_pellet("tail").relocate_flake("tail");
+    assert!(run.recompose(&d).is_err());
+    // Unresolvable class for a spawned pellet.
+    let mut d = GraphDelta::against(&run.graph());
+    d.insert_on_edge(
+        EdgeSpec::new("head", "out", "tail", "in"),
+        seq_spec("x", "no.such.Class"),
+        "in",
+        "out",
+    );
+    assert!(run.recompose(&d).is_err());
+
+    // Nothing changed and the stream still flows.
+    assert_eq!(run.graph_version(), 1);
+    assert!(run.recompose_history().is_empty());
+    for i in 0..50 {
+        run.inject("head", "in", Message::text(format!("m{i}"))).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(10)));
+    assert_eq!(
+        collected
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|m| !m.is_landmark())
+            .count(),
+        50
+    );
+    run.stop();
+}
+
+/// The acceptance scenario: insert a pellet into a running pipeline,
+/// remove another, and relocate a flake to a different container — all
+/// while messages are being injected — with zero message loss and the
+/// downtime of every surgery reported.
+#[test]
+fn full_surgery_scenario_under_load() {
+    let (coord, collected) = setup();
+    let mut g = GraphBuilder::new("surgery");
+    g.pellet("src", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("work", "floe.builtin.Uppercase")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("sink", "test.Collect").in_port("in").sequential();
+    g.edge("src", "out", "work", "in");
+    g.edge("work", "out", "sink", "in");
+    let run =
+        Arc::new(coord.launch(g.build().unwrap(), fifo_options()).unwrap());
+
+    let total = 3000;
+    let injector = inject_background(&run, "src", total);
+    std::thread::sleep(Duration::from_millis(3));
+
+    // 1. Insert an audit pellet on the work -> sink edge.
+    let mut d = GraphDelta::against(&run.graph());
+    d.insert_on_edge(
+        EdgeSpec::new("work", "out", "sink", "in"),
+        seq_spec("audit", "floe.builtin.Identity"),
+        "in",
+        "out",
+    );
+    assert_eq!(run.recompose(&d).unwrap().graph_version, 2);
+
+    // 2. Remove the worker, wiring src straight into the audit tap.
+    std::thread::sleep(Duration::from_millis(3));
+    let mut d = GraphDelta::against(&run.graph());
+    d.remove_pellet("work").add_edge("src", "out", "audit", "in");
+    assert_eq!(run.recompose(&d).unwrap().graph_version, 3);
+
+    // 3. Relocate the audit tap to another container.
+    std::thread::sleep(Duration::from_millis(3));
+    let home = run.container("audit").unwrap().id.clone();
+    let mut d = GraphDelta::against(&run.graph());
+    d.relocate_flake("audit");
+    assert_eq!(run.recompose(&d).unwrap().graph_version, 4);
+    assert_ne!(run.container("audit").unwrap().id, home);
+
+    injector.join().unwrap();
+    assert!(run.drain(Duration::from_secs(30)));
+
+    let got = collected.lock().unwrap();
+    let n = got.iter().filter(|m| !m.is_landmark()).count();
+    assert_eq!(n, total, "lost messages across the surgery sequence");
+    drop(got);
+
+    let history = run.recompose_history();
+    assert_eq!(history.len(), 3);
+    for s in &history {
+        assert!(
+            s.downtime_ms >= 0.0 && s.downtime_ms < 30_000.0,
+            "implausible downtime {:?}",
+            s
+        );
+    }
+    run.stop();
+}
+
+/// Property: random surgeries under concurrent injection never lose a
+/// message and never reorder a single producer's stream.
+#[test]
+fn prop_random_surgery_no_loss_fifo() {
+    run_cases("recompose: no loss + FIFO under random surgery", 6, |g| {
+        let (coord, collected) = setup();
+        let mut gb = GraphBuilder::new("prop");
+        gb.pellet("head", "floe.builtin.Identity")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin)
+            .sequential();
+        gb.pellet("tail", "test.Collect").in_port("in").sequential();
+        gb.edge("head", "out", "tail", "in");
+        let run = Arc::new(
+            coord.launch(gb.build().unwrap(), fifo_options()).unwrap(),
+        );
+        let total = g.int(300, 900) as usize;
+        let injector = inject_background(&run, "head", total);
+        std::thread::sleep(Duration::from_millis(g.int(0, 4) as u64));
+
+        match g.int(0, 2) {
+            0 => {
+                // Insert then remove the same pellet: topology returns
+                // to the original shape, stream must be intact.
+                let mut d = GraphDelta::against(&run.graph());
+                d.insert_on_edge(
+                    EdgeSpec::new("head", "out", "tail", "in"),
+                    seq_spec("mid", "floe.builtin.Identity"),
+                    "in",
+                    "out",
+                );
+                run.recompose(&d).unwrap();
+                let mut d = GraphDelta::against(&run.graph());
+                d.remove_pellet("mid").add_edge(
+                    "head", "out", "tail", "in",
+                );
+                run.recompose(&d).unwrap();
+            }
+            1 => {
+                let mut d = GraphDelta::against(&run.graph());
+                d.relocate_flake("tail");
+                run.recompose(&d).unwrap();
+            }
+            _ => {
+                let mut d = GraphDelta::against(&run.graph());
+                d.relocate_flake("head");
+                run.recompose(&d).unwrap();
+            }
+        }
+
+        injector.join().unwrap();
+        assert!(run.drain(Duration::from_secs(20)));
+        let got = collected.lock().unwrap();
+        let texts: Vec<&str> = got
+            .iter()
+            .filter(|m| !m.is_landmark())
+            .map(|m| m.as_text().unwrap())
+            .collect();
+        assert_eq!(texts.len(), total, "message loss under surgery");
+        assert_fifo(&texts);
+        drop(got);
+        run.stop();
+    });
+}
