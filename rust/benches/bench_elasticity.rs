@@ -1,0 +1,253 @@
+//! Macro: closed-loop elasticity cost.  A deterministic overload
+//! (seeded `DrivenSource` at a rate no single 8-core container can
+//! sustain) drives the `ElasticityPolicy` through repeated
+//! migration-based scale-outs, and the bench records:
+//!
+//! * **time-to-react** — control samples between the first saturated
+//!   observation and the relocation (the `saturation_k` design knob,
+//!   reported in samples and simulated seconds), plus the wall-clock
+//!   cost of the control step that performs the scale-out (recompose +
+//!   post-move regrant);
+//! * **downtime per scale-out** — pause-to-resume and cut-over-lock
+//!   windows from `RecomposeStats`, per policy-initiated relocation.
+//!
+//! Zero message loss across every scale-out is asserted at the end.
+//! Writes `BENCH_adaptation.json` at the repo root (same convention as
+//! `bench_channels` / `bench_recompose`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use floe::adaptation::{
+    DynamicStrategy, ElasticAction, ElasticityConfig, ElasticityPolicy,
+};
+use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::error::Result;
+use floe::graph::{GraphBuilder, SplitMode};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::pellet::{Pellet, PelletContext, PelletRegistry, PortIo};
+use floe::sim::{
+    register_driven, LockstepDriver, ModeledFlake, WorkloadProfile,
+};
+use floe::util::json::Json;
+
+/// Control steps to drive at most (the loop stops early once
+/// `TARGET_RELOCATIONS` scale-outs were measured).
+const STEPS: usize = 200;
+const TARGET_RELOCATIONS: usize = 6;
+const SEED: u64 = 2024;
+const RATE: f64 = 600.0;
+const SATURATION_K: usize = 3;
+const COOLDOWN: usize = 5;
+const MAX_CORES: usize = 24;
+
+/// Sink counting non-landmark deliveries.
+struct CountingSink {
+    delivered: Arc<AtomicUsize>,
+}
+
+impl Pellet for CountingSink {
+    fn compute(
+        &mut self,
+        input: PortIo,
+        _ctx: &mut PelletContext,
+    ) -> Result<()> {
+        let n = input
+            .messages()
+            .iter()
+            .filter(|m| !m.is_landmark())
+            .count();
+        self.delivered.fetch_add(n, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+#[derive(Default)]
+struct Series {
+    samples: Vec<f64>,
+}
+
+impl Series {
+    fn push(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+}
+
+fn stats_json(s: &Series) -> String {
+    format!(
+        "{{ \"min\": {:.3}, \"mean\": {:.3}, \"max\": {:.3} }}",
+        s.min(),
+        s.mean(),
+        s.max()
+    )
+}
+
+fn overload_profile() -> WorkloadProfile {
+    // A permanent burst: the modeled demand always exceeds what one
+    // 8-core container sustains, so saturation re-arms after every
+    // move and the policy keeps scaling out.
+    let mut p = WorkloadProfile::periodic_default(RATE);
+    if let WorkloadProfile::Periodic { period, burst, .. } = &mut p {
+        *period = 1e9;
+        *burst = 1e9;
+    }
+    p
+}
+
+fn main() {
+    let cloud = SimulatedCloud::new(512, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    register_driven(&registry);
+    let delivered = Arc::new(AtomicUsize::new(0));
+    let d2 = Arc::clone(&delivered);
+    registry.register("bench.CountingSink", move || {
+        Box::new(CountingSink { delivered: Arc::clone(&d2) })
+    });
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+
+    let mut g = GraphBuilder::new("bench-elasticity");
+    g.pellet("src", "floe.sim.DrivenSource")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential()
+        .stateful();
+    g.pellet("hot", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("sink", "bench.CountingSink").in_port("in");
+    g.edge("src", "out", "hot", "in");
+    g.edge("hot", "out", "sink", "in");
+    let run = Arc::new(
+        coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap(),
+    );
+
+    let src = run.flake("src").unwrap();
+    src.state().set("profile", Json::str("periodic"));
+    src.state().set("rate", Json::num(RATE));
+    src.state().set("seed", Json::num(SEED as f64));
+    src.state().set("dt", Json::num(1.0));
+    src.state().set("period", Json::num(1e9));
+    src.state().set("burst", Json::num(1e9));
+
+    let mut driver = LockstepDriver::new(overload_profile(), SEED, 1.0);
+    let mut policy = ElasticityPolicy::new(ElasticityConfig {
+        saturation_k: SATURATION_K,
+        cooldown: COOLDOWN,
+        max_cores: MAX_CORES,
+    });
+    policy.watch(
+        "hot",
+        Box::new(DynamicStrategy {
+            min_cores: 1,
+            ..DynamicStrategy::default()
+        }),
+    );
+    let mut model = ModeledFlake::new(0.1, 4);
+
+    let mut scale_out_wall = Series::default();
+    let mut relocations = 0usize;
+    for _ in 0..STEPS {
+        let t = driver.now();
+        let n = driver.step(&run, "src", "in").unwrap();
+        let cores = run.flake("hot").unwrap().cores();
+        model.advance(t, 1.0, n as f64, cores);
+        let obs = model.observe(cores);
+        let t0 = Instant::now();
+        let decisions = policy.step_with(&run, t, |_, _| obs);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if decisions
+            .iter()
+            .any(|d| matches!(d.action, ElasticAction::Relocate { .. }))
+        {
+            scale_out_wall.push(wall_ms);
+            relocations += 1;
+            if relocations >= TARGET_RELOCATIONS {
+                break;
+            }
+        }
+    }
+    assert!(relocations > 0, "policy never scaled out");
+    assert!(run.drain(Duration::from_secs(60)), "did not drain");
+    let injected = driver.expected_total() as usize;
+    let got = delivered.load(Ordering::Relaxed);
+    assert_eq!(injected, got, "message loss across elastic scale-outs");
+
+    let mut downtime = Series::default();
+    let mut cutover = Series::default();
+    for s in policy.relocations() {
+        downtime.push(s.downtime_ms);
+        cutover.push(s.cutover_ms);
+    }
+    run.stop();
+
+    println!(
+        "# closed-loop elasticity: {relocations} policy-initiated \
+         scale-outs, {injected} messages, zero loss"
+    );
+    println!(
+        "{:>20} {:>10} {:>10} {:>10}",
+        "series (ms)", "min", "mean", "max"
+    );
+    for (name, s) in [
+        ("scale-out-step", &scale_out_wall),
+        ("downtime", &downtime),
+        ("cutover-lock", &cutover),
+    ] {
+        println!(
+            "{:>20} {:>10.3} {:>10.3} {:>10.3}",
+            name,
+            s.min(),
+            s.mean(),
+            s.max()
+        );
+    }
+    println!(
+        "time-to-react: {SATURATION_K} samples ({:.1} simulated secs)",
+        SATURATION_K as f64
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_elasticity\",\n  \"config\": {{\n    \
+         \"rate_msgs_per_s\": {RATE},\n    \"saturation_k\": \
+         {SATURATION_K},\n    \"cooldown\": {COOLDOWN},\n    \
+         \"max_cores\": {MAX_CORES},\n    \"seed\": {SEED}\n  }},\n  \
+         \"relocations\": {relocations},\n  \"time_to_react\": {{\n    \
+         \"samples\": {SATURATION_K},\n    \"virtual_secs\": {:.1}\n  \
+         }},\n  \"scale_out_step_ms\": {},\n  \"downtime_ms\": {},\n  \
+         \"cutover_lock_ms\": {},\n  \"messages\": {{\n    \
+         \"injected\": {injected},\n    \"delivered\": {got},\n    \
+         \"lost\": {}\n  }}\n}}\n",
+        SATURATION_K as f64,
+        stats_json(&scale_out_wall),
+        stats_json(&downtime),
+        stats_json(&cutover),
+        injected - got,
+    );
+    let root = std::env::var("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/.."))
+        .unwrap_or_else(|_| ".".to_string());
+    let path = format!("{root}/BENCH_adaptation.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    print!("{json}");
+}

@@ -1,0 +1,428 @@
+//! Closed-loop elasticity: from per-flake core regrants to
+//! migration-based scale-out.
+//!
+//! The [`ElasticityPolicy`] consumes per-flake observations (live probe
+//! samples or a deterministic model), asks the pellet's
+//! [`AdaptationStrategy`] how many cores it wants, and acts on three
+//! rungs:
+//!
+//! 1. **Regrant** — the wanted allocation fits the hosting container:
+//!    grant it through [`crate::container::Container::set_flake_cores`]
+//!    (the paper's §III in-container adaptation).
+//! 2. **Saturation bridge** — the container cannot cover the want:
+//!    grant whatever it still has and count the sample as *saturated*.
+//! 3. **Relocate** — after [`ElasticityConfig::saturation_k`]
+//!    consecutive saturated samples (and outside the post-move
+//!    cooldown) the policy compiles a `RelocateFlake`
+//!    [`GraphDelta`] and executes it through
+//!    [`RunningDataflow::recompose`]: the engine quiesces the minimal
+//!    pause set, hands state + buffered input to a replacement spawned
+//!    via `ResourceManager::allocate_avoiding` on a *different*
+//!    container, and resumes — zero message loss, per-producer FIFO.
+//!    After the move the policy immediately grows the replacement
+//!    toward the wanted allocation on its fresh container.
+//!
+//! A relocation that fails — typically no capacity anywhere in the
+//! cloud — **degrades** to the largest in-container regrant instead of
+//! erroring, and is recorded as [`ElasticAction::Degraded`] so the
+//! trace shows the unmet demand.
+//!
+//! Every control step appends one [`ElasticDecision`] to the decision
+//! trace and one [`AdaptationSample`] to an [`AdaptationHistory`]; both
+//! are pure functions of the observation stream, so a seeded workload
+//! (see [`crate::sim::driver`]) makes the whole loop bit-reproducible
+//! under `cargo test`.
+
+use std::sync::Arc;
+
+use super::{AdaptationHistory, AdaptationSample, AdaptationStrategy};
+use crate::container::Container;
+use crate::coordinator::RunningDataflow;
+use crate::flake::{Flake, FlakeObservation};
+use crate::recompose::{GraphDelta, RecomposeStats};
+
+/// Elasticity knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ElasticityConfig {
+    /// Consecutive saturated samples (wanted cores exceed what the
+    /// hosting container can grant) before a relocation fires.
+    pub saturation_k: usize,
+    /// Control samples to hold off after a relocation, so the policy
+    /// does not bounce a flake between containers while the replacement
+    /// warms up.
+    pub cooldown: usize,
+    /// Hard per-flake core ceiling (clamps the strategy's want).
+    pub max_cores: usize,
+}
+
+impl Default for ElasticityConfig {
+    fn default() -> Self {
+        ElasticityConfig { saturation_k: 3, cooldown: 10, max_cores: 64 }
+    }
+}
+
+/// What one control step did for one flake.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ElasticAction {
+    /// Allocation already matches demand (or nothing could change).
+    Hold,
+    /// Cores regranted within the hosting container.
+    Regrant { from: usize, to: usize },
+    /// Container saturated for `saturation_k` samples: the flake was
+    /// migrated to another container via `recompose()`.
+    Relocate { wanted: usize },
+    /// Relocation was due but could not be placed (no capacity); the
+    /// policy fell back to the largest grant the container covers.
+    Degraded { wanted: usize, granted: usize },
+}
+
+/// One entry of the decision trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ElasticDecision {
+    pub t: f64,
+    pub pellet_id: String,
+    pub action: ElasticAction,
+}
+
+/// Internal plan produced by the pure decision step.
+enum Planned {
+    Hold,
+    Regrant { to: usize },
+    Relocate { wanted: usize },
+}
+
+struct Watched {
+    pellet_id: String,
+    strategy: Box<dyn AdaptationStrategy>,
+    saturated_streak: usize,
+    cooldown_left: usize,
+}
+
+/// The closed-loop elasticity controller (see module docs).
+pub struct ElasticityPolicy {
+    cfg: ElasticityConfig,
+    watched: Vec<Watched>,
+    trace: Vec<ElasticDecision>,
+    history: AdaptationHistory,
+    relocation_stats: Vec<RecomposeStats>,
+}
+
+impl ElasticityPolicy {
+    pub fn new(cfg: ElasticityConfig) -> ElasticityPolicy {
+        ElasticityPolicy {
+            cfg,
+            watched: Vec::new(),
+            trace: Vec::new(),
+            history: AdaptationHistory::new(),
+            relocation_stats: Vec::new(),
+        }
+    }
+
+    /// Put a pellet under elastic control.
+    pub fn watch(
+        &mut self,
+        pellet_id: &str,
+        strategy: Box<dyn AdaptationStrategy>,
+    ) {
+        self.watched.push(Watched {
+            pellet_id: pellet_id.to_string(),
+            strategy,
+            saturated_streak: 0,
+            cooldown_left: 0,
+        });
+    }
+
+    /// The decision trace so far (one entry per pellet per step).
+    pub fn trace(&self) -> &[ElasticDecision] {
+        &self.trace
+    }
+
+    /// Per-step samples in the same shape the [`super::Monitor`]
+    /// records, so elasticity runs export the live Fig. 4 series too.
+    pub fn history(&self) -> &AdaptationHistory {
+        &self.history
+    }
+
+    /// Engine stats of every relocation this policy initiated
+    /// (downtime per scale-out).
+    pub fn relocations(&self) -> &[RecomposeStats] {
+        &self.relocation_stats
+    }
+
+    /// One live control step: observe every watched flake through its
+    /// real probes, decide, apply.
+    pub fn step_live(
+        &mut self,
+        run: &RunningDataflow,
+        t: f64,
+    ) -> Vec<ElasticDecision> {
+        self.step_with(run, t, |_, f| f.observe(t))
+    }
+
+    /// One control step with caller-supplied observations — the
+    /// deterministic harness passes modeled observations here while the
+    /// *actions* still execute against the live dataflow.
+    pub fn step_with(
+        &mut self,
+        run: &RunningDataflow,
+        t: f64,
+        observe: impl Fn(&str, &Flake) -> FlakeObservation,
+    ) -> Vec<ElasticDecision> {
+        let ids: Vec<String> =
+            self.watched.iter().map(|w| w.pellet_id.clone()).collect();
+        let mut out = Vec::new();
+        for id in ids {
+            let (Ok(flake), Ok(container)) =
+                (run.flake(&id), run.container(&id))
+            else {
+                continue; // pellet left the graph; skip this step
+            };
+            let obs = observe(&id, &flake);
+            let planned = self.plan(&id, &obs, container.free_cores(), t);
+            let action = self.apply(run, &id, &obs, planned, &container);
+            let after =
+                run.flake(&id).map(|f| f.cores()).unwrap_or(obs.cores);
+            self.history.push(AdaptationSample {
+                t,
+                pellet_id: id.clone(),
+                strategy: self.strategy_name(&id),
+                queue_len: obs.queue_len,
+                arrival_rate: obs.arrival_rate,
+                cores_before: obs.cores,
+                cores_after: after,
+            });
+            let decision = ElasticDecision { t, pellet_id: id, action };
+            self.trace.push(decision.clone());
+            out.push(decision);
+        }
+        out
+    }
+
+    /// Pure decision for one pellet: wanted cores from the strategy,
+    /// then the saturation rule against the container's spare budget.
+    /// Mutates only the per-pellet streak/cooldown counters, so the
+    /// decision sequence is a function of the observation sequence.
+    fn plan(
+        &mut self,
+        pellet_id: &str,
+        obs: &FlakeObservation,
+        container_free: usize,
+        t: f64,
+    ) -> Planned {
+        let max_cores = self.cfg.max_cores.max(1);
+        let Some(w) =
+            self.watched.iter_mut().find(|w| w.pellet_id == pellet_id)
+        else {
+            return Planned::Hold;
+        };
+        let wanted = w.strategy.decide(obs, t).clamp(1, max_cores);
+        // What this container could grant right now: the current
+        // allocation plus every unclaimed core on the host.
+        let available = obs.cores + container_free;
+        if w.cooldown_left > 0 {
+            w.cooldown_left -= 1;
+        }
+        if wanted > available {
+            w.saturated_streak += 1;
+            if w.saturated_streak >= self.cfg.saturation_k
+                && w.cooldown_left == 0
+            {
+                w.saturated_streak = 0;
+                w.cooldown_left = self.cfg.cooldown;
+                return Planned::Relocate { wanted };
+            }
+            // Saturation bridge: take what the container still has.
+            if available > obs.cores {
+                return Planned::Regrant { to: available };
+            }
+            return Planned::Hold;
+        }
+        w.saturated_streak = 0;
+        if wanted != obs.cores {
+            Planned::Regrant { to: wanted }
+        } else {
+            Planned::Hold
+        }
+    }
+
+    /// Execute a planned action against the live dataflow.
+    fn apply(
+        &mut self,
+        run: &RunningDataflow,
+        pellet_id: &str,
+        obs: &FlakeObservation,
+        planned: Planned,
+        container: &Arc<Container>,
+    ) -> ElasticAction {
+        match planned {
+            Planned::Hold => ElasticAction::Hold,
+            Planned::Regrant { to } => {
+                // Record what actually happened: a lost race with a
+                // co-hosted flake's grant turns the step into a Hold,
+                // not a phantom regrant in the trace.
+                match container.set_flake_cores(pellet_id, to) {
+                    Ok(()) => {
+                        ElasticAction::Regrant { from: obs.cores, to }
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "elastic: regrant {pellet_id} -> {to}: {e}"
+                        );
+                        ElasticAction::Hold
+                    }
+                }
+            }
+            Planned::Relocate { wanted } => {
+                let mut delta = GraphDelta::against(&run.graph());
+                delta.relocate_flake(pellet_id);
+                match run.recompose(&delta) {
+                    Ok(stats) => {
+                        crate::log_info!(
+                            "elastic: relocated {pellet_id} \
+                             (downtime {:.2} ms)",
+                            stats.downtime_ms
+                        );
+                        self.relocation_stats.push(stats);
+                        // Grow into the fresh container immediately.
+                        if let (Ok(flake), Ok(new_home)) = (
+                            run.flake(pellet_id),
+                            run.container(pellet_id),
+                        ) {
+                            let to = wanted.min(
+                                flake.cores() + new_home.free_cores(),
+                            );
+                            if to != flake.cores() {
+                                if let Err(e) = new_home
+                                    .set_flake_cores(pellet_id, to)
+                                {
+                                    crate::log_warn!(
+                                        "elastic: post-move grant \
+                                         {pellet_id} -> {to}: {e}"
+                                    );
+                                }
+                            }
+                        }
+                        ElasticAction::Relocate { wanted }
+                    }
+                    Err(e) => {
+                        crate::log_warn!(
+                            "elastic: relocation of {pellet_id} \
+                             failed ({e}); degrading to in-container \
+                             regrant"
+                        );
+                        let mut granted = wanted
+                            .min(obs.cores + container.free_cores());
+                        if granted > obs.cores
+                            && container
+                                .set_flake_cores(pellet_id, granted)
+                                .is_err()
+                        {
+                            granted = obs.cores; // record reality
+                        }
+                        ElasticAction::Degraded { wanted, granted }
+                    }
+                }
+            }
+        }
+    }
+
+    fn strategy_name(&self, pellet_id: &str) -> &'static str {
+        self.watched
+            .iter()
+            .find(|w| w.pellet_id == pellet_id)
+            .map(|w| w.strategy.name())
+            .unwrap_or("elastic")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adaptation::StaticLookAhead;
+    use crate::ALPHA;
+
+    fn obs(cores: usize) -> FlakeObservation {
+        FlakeObservation {
+            queue_len: 0,
+            arrival_rate: 0.0,
+            completion_rate: 0.0,
+            service_latency: 0.1,
+            selectivity: 1.0,
+            cores,
+            instances: cores * ALPHA,
+        }
+    }
+
+    fn policy(k: usize, cooldown: usize) -> ElasticityPolicy {
+        let mut p = ElasticityPolicy::new(ElasticityConfig {
+            saturation_k: k,
+            cooldown,
+            max_cores: 16,
+        });
+        // Oracle strategy that always wants 10 cores.
+        p.watch("hot", Box::new(StaticLookAhead { cores: 10 }));
+        p
+    }
+
+    #[test]
+    fn saturation_streak_triggers_relocation() {
+        let mut p = policy(3, 5);
+        // Container has nothing spare: wanted 10 > available 2.
+        for i in 0..2 {
+            match p.plan("hot", &obs(2), 0, i as f64) {
+                Planned::Hold => {}
+                _ => panic!("relocated before k samples"),
+            }
+        }
+        match p.plan("hot", &obs(2), 0, 2.0) {
+            Planned::Relocate { wanted } => assert_eq!(wanted, 10),
+            _ => panic!("expected relocation on sample k"),
+        }
+    }
+
+    #[test]
+    fn cooldown_blocks_immediate_rerelocation() {
+        let mut p = policy(1, 4);
+        assert!(matches!(
+            p.plan("hot", &obs(2), 0, 0.0),
+            Planned::Relocate { .. }
+        ));
+        // Cooldown 4: the next 3 saturated samples only bridge/hold.
+        for i in 1..4 {
+            assert!(
+                !matches!(
+                    p.plan("hot", &obs(2), 0, i as f64),
+                    Planned::Relocate { .. }
+                ),
+                "relocated during cooldown (sample {i})"
+            );
+        }
+        assert!(matches!(
+            p.plan("hot", &obs(2), 0, 4.0),
+            Planned::Relocate { .. }
+        ));
+    }
+
+    #[test]
+    fn unsaturated_want_is_a_plain_regrant() {
+        let mut p = policy(3, 5);
+        // 8 free cores: wanted 10 fits (2 + 8) -> regrant to 10.
+        match p.plan("hot", &obs(2), 8, 0.0) {
+            Planned::Regrant { to } => assert_eq!(to, 10),
+            _ => panic!("expected regrant"),
+        }
+        // Already at 10 -> hold.
+        assert!(matches!(p.plan("hot", &obs(10), 2, 1.0), Planned::Hold));
+    }
+
+    #[test]
+    fn saturation_bridge_takes_partial_grant() {
+        let mut p = policy(5, 5);
+        // wanted 10 > available 2 + 3 = 5 -> saturated, but the spare 3
+        // cores are still granted as a bridge.
+        match p.plan("hot", &obs(2), 3, 0.0) {
+            Planned::Regrant { to } => assert_eq!(to, 5),
+            _ => panic!("expected bridge regrant"),
+        }
+    }
+}

@@ -17,6 +17,24 @@
 //! Strategies are pure decision functions over [`FlakeObservation`]s, so
 //! the same code drives live flakes (via [`Monitor`]) and the Fig. 4
 //! simulator ([`crate::sim`]).
+//!
+//! The control stack layers as **strategy → policy → recompose**: a
+//! strategy decides how many cores one flake wants; the
+//! [`elastic::ElasticityPolicy`] applies that decision within the
+//! hosting container and, when the container stays saturated, escalates
+//! to a [`crate::recompose`] `RelocateFlake` delta that migrates the hot
+//! flake to a container chosen by
+//! [`crate::manager::ResourceManager::allocate_avoiding`].  The
+//! [`Monitor`] resolves flakes *by id* through a [`FlakeDirectory`] on
+//! every tick, so graph surgery re-binds relocated flakes (and drops
+//! removed ones) instead of sampling a dead handle — which keeps the
+//! [`AdaptationHistory`] continuous across relocations.
+
+pub mod elastic;
+
+pub use elastic::{
+    ElasticAction, ElasticDecision, ElasticityConfig, ElasticityPolicy,
+};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -279,10 +297,24 @@ impl AdaptationStrategy for HybridStrategy {
     }
 }
 
-/// One flake under adaptive control.
-pub struct MonitoredFlake {
-    pub flake: Arc<Flake>,
-    pub container: Arc<Container>,
+/// Resolves a pellet id to its *current* flake and hosting container.
+///
+/// The coordinator implements this over the live topology, so a
+/// [`Monitor`] entry survives graph surgery: after a relocation the
+/// lookup returns the replacement flake (re-bind), and after a removal
+/// it returns `None` (the entry is dropped).
+pub trait FlakeDirectory: Send + Sync {
+    fn lookup(
+        &self,
+        pellet_id: &str,
+    ) -> Option<(Arc<Flake>, Arc<Container>)>;
+}
+
+/// One pellet under adaptive control: an id (resolved through the
+/// [`FlakeDirectory`] each tick, never a pinned handle) plus its
+/// strategy.
+pub struct MonitoredEntry {
+    pub pellet_id: String,
     pub strategy: Box<dyn AdaptationStrategy>,
 }
 
@@ -347,8 +379,15 @@ pub struct Monitor {
 }
 
 impl Monitor {
+    /// Start the monitor thread.  Every tick each entry's pellet id is
+    /// re-resolved through `directory`, so the monitor always samples
+    /// the *current* incarnation of a flake: a relocated flake is
+    /// re-bound to its replacement (the history stays continuous) and a
+    /// removed flake's entry is dropped instead of sampling a dead
+    /// handle.
     pub fn start(
-        mut entries: Vec<MonitoredFlake>,
+        entries: Vec<MonitoredEntry>,
+        directory: Arc<dyn FlakeDirectory>,
         clock: Arc<dyn Clock>,
         interval: Duration,
     ) -> Monitor {
@@ -359,41 +398,51 @@ impl Monitor {
         let join = thread::Builder::new()
             .name("floe-monitor".into())
             .spawn(move || {
+                let mut entries = entries;
                 while !stop2.load(Ordering::SeqCst) {
                     let t = clock.now();
-                    for e in entries.iter_mut() {
-                        let obs = e.flake.observe(t);
-                        let want = e.strategy.decide(&obs, t);
+                    entries.retain_mut(|e| {
+                        let Some((flake, container)) =
+                            directory.lookup(&e.pellet_id)
+                        else {
+                            crate::log_info!(
+                                "monitor: '{}' left the dataflow, \
+                                 dropping entry",
+                                e.pellet_id
+                            );
+                            return false;
+                        };
+                        let obs = flake.observe(t);
                         // Live flakes need >= 1 core to keep draining.
-                        let want = want.max(1);
+                        let want = e.strategy.decide(&obs, t).max(1);
                         if want != obs.cores {
-                            if let Err(err) = e
-                                .container
-                                .set_flake_cores(e.flake.pellet_id(), want)
+                            if let Err(err) = container
+                                .set_flake_cores(&e.pellet_id, want)
                             {
                                 crate::log_warn!(
                                     "monitor: resize {} -> {want}: {err}",
-                                    e.flake.pellet_id()
+                                    e.pellet_id
                                 );
                             } else {
                                 crate::log_debug!(
                                     "monitor[{}]: {} cores {} -> {want}",
                                     e.strategy.name(),
-                                    e.flake.pellet_id(),
+                                    e.pellet_id,
                                     obs.cores
                                 );
                             }
                         }
                         history2.push(AdaptationSample {
                             t,
-                            pellet_id: e.flake.pellet_id().to_string(),
+                            pellet_id: e.pellet_id.clone(),
                             strategy: e.strategy.name(),
                             queue_len: obs.queue_len,
                             arrival_rate: obs.arrival_rate,
                             cores_before: obs.cores,
-                            cores_after: e.flake.cores(),
+                            cores_after: flake.cores(),
                         });
-                    }
+                        true
+                    });
                     thread::sleep(interval);
                 }
             })

@@ -14,7 +14,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
-use crate::adaptation::{Monitor, MonitoredFlake};
+use crate::adaptation::{FlakeDirectory, Monitor, MonitoredEntry};
 use crate::channel::{InProcTransport, Transport};
 use crate::error::{FloeError, Result};
 use crate::flake::{Flake, FlakeConfig};
@@ -107,9 +107,26 @@ pub(crate) struct Topology {
         HashMap<String, Arc<crate::container::Container>>,
 }
 
+/// The adaptation [`Monitor`] resolves pellet ids against the live
+/// topology through this impl, so relocated flakes are re-bound to
+/// their replacement and removed flakes are dropped (never sampled as
+/// dead handles).
+impl FlakeDirectory for RwLock<Topology> {
+    fn lookup(
+        &self,
+        pellet_id: &str,
+    ) -> Option<(Arc<Flake>, Arc<crate::container::Container>)> {
+        let topo = self.read().expect("topology poisoned");
+        Some((
+            Arc::clone(topo.flakes.get(pellet_id)?),
+            Arc::clone(topo.containers.get(pellet_id)?),
+        ))
+    }
+}
+
 /// A launched continuous dataflow.
 pub struct RunningDataflow {
-    pub(crate) topo: RwLock<Topology>,
+    pub(crate) topo: Arc<RwLock<Topology>>,
     pub(crate) registry: PelletRegistry,
     pub(crate) manager: Arc<ResourceManager>,
     pub(crate) tuning: FlakeTuning,
@@ -534,22 +551,32 @@ impl Coordinator {
         }
 
         let clock: Arc<dyn Clock> = Arc::new(WallClock::new());
+        let pellet_ids: Vec<String> = flakes.keys().cloned().collect();
+        let topo =
+            Arc::new(RwLock::new(Topology { graph, flakes, containers }));
 
-        // 3. Optional adaptation monitor.
+        // 3. Optional adaptation monitor.  Entries are pellet *ids*
+        //    resolved through the shared topology on every tick, so
+        //    later graph surgery re-binds relocated flakes and drops
+        //    removed ones (see `FlakeDirectory`).
         let monitor = options.adaptation.map(|setup| {
-            let entries = flakes
+            let entries = pellet_ids
                 .iter()
-                .map(|(id, f)| MonitoredFlake {
-                    flake: Arc::clone(f),
-                    container: Arc::clone(&containers[id]),
+                .map(|id| MonitoredEntry {
+                    pellet_id: id.clone(),
                     strategy: (setup.make)(id),
                 })
                 .collect();
-            Monitor::start(entries, Arc::clone(&clock), setup.interval)
+            Monitor::start(
+                entries,
+                Arc::clone(&topo) as Arc<dyn FlakeDirectory>,
+                Arc::clone(&clock),
+                setup.interval,
+            )
         });
 
         Ok(RunningDataflow {
-            topo: RwLock::new(Topology { graph, flakes, containers }),
+            topo,
             registry: self.registry.clone(),
             manager: Arc::clone(&self.manager),
             tuning,

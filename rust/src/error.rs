@@ -19,6 +19,10 @@ pub enum FloeError {
     /// Resource allocation failed (no cores, no VMs, bad request).
     Resource(String),
 
+    /// Live recomposition failed (unsupported surgery against the
+    /// running topology, e.g. relocating a TCP-fed flake).
+    Recompose(String),
+
     /// XLA/PJRT runtime failure (artifact load, compile, execute).
     Runtime(String),
 
@@ -39,6 +43,7 @@ impl fmt::Display for FloeError {
             FloeError::Pellet(m) => write!(f, "pellet error: {m}"),
             FloeError::Channel(m) => write!(f, "channel error: {m}"),
             FloeError::Resource(m) => write!(f, "resource error: {m}"),
+            FloeError::Recompose(m) => write!(f, "recompose error: {m}"),
             FloeError::Runtime(m) => write!(f, "runtime error: {m}"),
             FloeError::Parse(m) => write!(f, "parse error: {m}"),
             FloeError::Control(m) => write!(f, "control error: {m}"),

@@ -28,7 +28,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::channel::{ShardedQueue, SyncQueue, Transport};
+use crate::channel::{ShardedQueue, SyncQueue, TcpReceiver, Transport};
 use crate::error::{FloeError, Result};
 use crate::graph::{
     InPortSpec, MergeMode, OutPortSpec, PelletSpec, TriggerMode, WindowSpec,
@@ -195,6 +195,12 @@ pub struct Flake {
     shared: Arc<Shared>,
     pool: CorePool,
     dispatcher: Mutex<Option<thread::JoinHandle<()>>>,
+    /// Optional TCP receiver feeding the input ports (remote edges).
+    /// A flake with a live receiver cannot be relocated: the remote
+    /// peers' port maps would keep pointing at the torn-down queues
+    /// (rebind is a ROADMAP item), so the recomposition engine rejects
+    /// the delta instead.
+    tcp_rx: Mutex<Option<TcpReceiver>>,
 }
 
 impl Flake {
@@ -270,6 +276,7 @@ impl Flake {
             shared,
             pool,
             dispatcher: Mutex::new(Some(dispatcher)),
+            tcp_rx: Mutex::new(None),
         })
     }
 
@@ -288,6 +295,12 @@ impl Flake {
 
     /// Input queue for a port — the coordinator wires upstream transports
     /// to this, and tests/apps inject messages directly.
+    ///
+    /// Remote ingress caveat: a `TcpReceiver` built externally over
+    /// these queue handles is invisible to the runtime — the
+    /// relocation guard only protects receivers attached through
+    /// [`Flake::serve_tcp`].  Attach remote ingress there, or treat
+    /// the flake as non-relocatable yourself.
     pub fn input_queue(
         &self,
         port: &str,
@@ -429,10 +442,38 @@ impl Flake {
         self.shared.cfg.outputs.iter().map(|o| o.name.clone()).collect()
     }
 
-    /// A copy of the construction config (used to spawn an identical
-    /// replacement flake during relocation).
+    /// A copy of the construction config with `cores` reflecting the
+    /// *current* grant rather than the launch value, so a relocation
+    /// replacement keeps the allocation the adaptation loop has grown
+    /// (and the target container must actually have room for it).
     pub fn config(&self) -> FlakeConfig {
-        self.shared.cfg.clone()
+        let mut cfg = self.shared.cfg.clone();
+        cfg.cores = self.cores();
+        cfg
+    }
+
+    /// Bind a TCP receiver (`127.0.0.1:port`, 0 = ephemeral) that
+    /// decodes framed messages straight into this flake's input port
+    /// queues — the remote-edge ingress.  Returns the bound endpoint.
+    /// At most one receiver per flake; while it is live the flake
+    /// cannot be relocated (see [`Flake::has_tcp_input`]).
+    pub fn serve_tcp(&self, port: u16) -> Result<String> {
+        let mut guard = self.tcp_rx.lock().expect("tcp rx poisoned");
+        if guard.is_some() {
+            return Err(FloeError::Channel(format!(
+                "flake {}: tcp receiver already bound",
+                self.shared.cfg.pellet_id
+            )));
+        }
+        let rx = TcpReceiver::start(port, self.shared.ports.clone())?;
+        let endpoint = rx.endpoint();
+        *guard = Some(rx);
+        Ok(endpoint)
+    }
+
+    /// True when a live [`TcpReceiver`] feeds this flake's inputs.
+    pub fn has_tcp_input(&self) -> bool {
+        self.tcp_rx.lock().expect("tcp rx poisoned").is_some()
     }
 
     /// The factory currently producing pellet instances.  After dynamic
@@ -615,6 +656,11 @@ impl Flake {
 
     /// Stop the flake: close queues, stop dispatcher and workers.
     pub fn shutdown(&self) {
+        if let Some(mut rx) =
+            self.tcp_rx.lock().expect("tcp rx poisoned").take()
+        {
+            rx.shutdown();
+        }
         self.shared.stop.store(true, Ordering::SeqCst);
         for q in self.shared.ports.values() {
             q.close();
@@ -1135,6 +1181,31 @@ mod tests {
         }
         assert_eq!(flake.instances(), 6);
         flake.shutdown();
+    }
+
+    #[test]
+    fn serve_tcp_feeds_input_ports() {
+        let flake = Flake::start(upper_cfg(), upper_factory());
+        let (outq, t) = collect_transport();
+        flake.wire_output("out", t).unwrap();
+        assert!(!flake.has_tcp_input());
+        let ep = flake.serve_tcp(0).unwrap();
+        assert!(flake.has_tcp_input());
+        // One receiver per flake.
+        assert!(flake.serve_tcp(0).is_err());
+        let tx = crate::channel::TcpSender::connect(&ep, "in").unwrap();
+        tx.send(Message::text("hi")).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Some(m) = outq.try_pop() {
+                assert_eq!(m.as_text(), Some("HI"));
+                break;
+            }
+            assert!(Instant::now() < deadline, "tcp message never arrived");
+            thread::sleep(Duration::from_millis(2));
+        }
+        flake.shutdown();
+        assert!(!flake.has_tcp_input());
     }
 
     #[test]

@@ -17,7 +17,12 @@
 //! The [`recompose`] engine goes further and performs live graph surgery:
 //! structural deltas (insert/remove pellets and edges, relocate flakes
 //! across containers) applied to the running topology with a minimal
-//! pause set and zero message loss.
+//! pause set and zero message loss.  The
+//! [`adaptation::elastic::ElasticityPolicy`] closes the loop between
+//! the two: strategy decisions regrant cores in place, and sustained
+//! container saturation escalates to a recompose-driven flake
+//! migration — verified deterministically by the seeded workload
+//! driver in [`sim::driver`].
 //!
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
 //! reproduced evaluation.
@@ -47,7 +52,8 @@ pub const ALPHA: usize = 4;
 /// One-stop imports for applications and examples.
 pub mod prelude {
     pub use crate::adaptation::{
-        AdaptationStrategy, DynamicStrategy, HybridStrategy, StaticLookAhead,
+        AdaptationStrategy, DynamicStrategy, ElasticityConfig,
+        ElasticityPolicy, HybridStrategy, StaticLookAhead,
     };
     pub use crate::coordinator::Coordinator;
     pub use crate::error::{FloeError, Result};

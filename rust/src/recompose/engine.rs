@@ -110,6 +110,25 @@ fn execute(
         )
     };
 
+    // A flake fed by a live TCP receiver cannot relocate yet: remote
+    // senders hold connections into the old queues and there is no
+    // port-map rebind (ROADMAP item), so the move would silently
+    // strand every remote edge.  Reject before any side effect.
+    // (Only receivers attached via `Flake::serve_tcp` are visible
+    // here; a receiver an app builds directly over `input_queue()`
+    // handles cannot be detected — see the `input_queue` docs.)
+    for id in &plan.relocate {
+        if let Some(f) = old_flakes.get(id) {
+            if f.has_tcp_input() {
+                return Err(FloeError::Recompose(format!(
+                    "cannot relocate '{id}': a live TcpReceiver feeds \
+                     its input ports and TCP port-map rebind is not \
+                     supported yet; shut the receiver down first"
+                )));
+            }
+        }
+    }
+
     // Phase 1b: spawn new and replacement flakes.  They idle unwired;
     // failures abort before the stream is touched.
     let spawned = spawn_new_flakes(run, &plan)?;

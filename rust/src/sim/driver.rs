@@ -1,0 +1,306 @@
+//! Deterministic workload driving for a **live** dataflow: the §IV-C
+//! profiles injected into real flakes at simulated-clock rates, so the
+//! whole elasticity loop (observe → decide → regrant → relocate →
+//! resume) runs under `cargo test` with no wall-clock flakiness.
+//!
+//! Three pieces, all seeded:
+//!
+//! * [`DrivenSource`] — a pellet (`floe.sim.DrivenSource`) that owns a
+//!   [`WorkloadGen`]: every *tick* message it receives advances the
+//!   simulated time by `dt` and emits that step's arrivals as
+//!   sequence-numbered text messages (`w00000042`), so loss and
+//!   per-producer FIFO are checkable downstream.
+//! * [`LockstepDriver`] — the harness side: injects one tick per step,
+//!   advances a shared [`VirtualClock`], and runs a *mirror*
+//!   `WorkloadGen` with the same seed, so the expected message count
+//!   (and the whole arrival series) is known exactly.
+//! * [`ModeledFlake`] — a deterministic stand-in for the live probes
+//!   (the Fig. 4 simulator's queue/service model): the elasticity
+//!   policy reads observations from the model while its *actions* hit
+//!   the live dataflow, which makes decision traces bit-reproducible
+//!   per seed.
+//!
+//! `DrivenSource` reads its configuration from the flake's state
+//! object on the first tick (set the keys right after launch, before
+//! any tick is injected): `profile` (`periodic` | `spikes` | `random`),
+//! `rate`, `seed`, `dt`, and optional `period` / `burst` overrides for
+//! test-sized cycles.
+
+use crate::coordinator::RunningDataflow;
+use crate::error::Result;
+use crate::flake::FlakeObservation;
+use crate::message::Message;
+use crate::pellet::{
+    Pellet, PelletContext, PelletRegistry, PortIo, StateObject,
+};
+use crate::sim::workload::{WorkloadGen, WorkloadProfile};
+use crate::util::time::VirtualClock;
+
+/// Build a generator (plus the step size) from state-object keys.
+fn configure(state: &StateObject) -> (WorkloadGen, f64) {
+    let num = |key: &str, default: f64| {
+        state.get(key).and_then(|j| j.as_f64()).unwrap_or(default)
+    };
+    let rate = num("rate", 100.0);
+    let seed = num("seed", 42.0) as u64;
+    let dt = num("dt", 1.0).max(1e-6);
+    let name = state
+        .get("profile")
+        .and_then(|j| j.as_str().map(str::to_string))
+        .unwrap_or_else(|| "periodic".to_string());
+    let mut profile = match name.as_str() {
+        "spikes" => WorkloadProfile::spikes_default(rate),
+        "random" => WorkloadProfile::random_default(rate),
+        _ => WorkloadProfile::periodic_default(rate),
+    };
+    match &mut profile {
+        WorkloadProfile::Periodic { period, burst, .. }
+        | WorkloadProfile::PeriodicSpikes { period, burst, .. } => {
+            *period = num("period", *period);
+            *burst = num("burst", *burst);
+        }
+        WorkloadProfile::RandomWalk { .. } => {}
+    }
+    (WorkloadGen::new(profile, seed), dt)
+}
+
+/// Seeded source pellet: one tick in, one simulated step of arrivals
+/// out (see module docs).  Run it `sequential` so the emission order is
+/// the sequence order.
+///
+/// The generator, simulated time and sequence counter live in the
+/// pellet *instance*, not the state object: relocating or hot-swapping
+/// the source resets the series to `w00000000` and diverges from the
+/// mirror.  Drive the workload from a pellet the policy never touches
+/// (the harness relocates downstream flakes only).
+#[derive(Default)]
+pub struct DrivenSource {
+    gen: Option<WorkloadGen>,
+    t: f64,
+    dt: f64,
+    seq: u64,
+}
+
+impl DrivenSource {
+    pub fn new() -> DrivenSource {
+        DrivenSource::default()
+    }
+}
+
+impl Pellet for DrivenSource {
+    fn compute(
+        &mut self,
+        input: PortIo,
+        ctx: &mut PelletContext,
+    ) -> Result<()> {
+        if self.gen.is_none() {
+            let (gen, dt) = configure(ctx.state());
+            self.gen = Some(gen);
+            self.dt = dt;
+        }
+        let gen = self.gen.as_mut().expect("just configured");
+        for m in input.messages() {
+            if m.is_landmark() {
+                continue;
+            }
+            let n = gen.arrivals(self.t, self.dt) as u64;
+            for _ in 0..n {
+                ctx.emit(
+                    "out",
+                    Message::text(format!("w{:08}", self.seq)),
+                );
+                self.seq += 1;
+            }
+            self.t += self.dt;
+        }
+        Ok(())
+    }
+}
+
+/// Register the driver pellet class (`floe.sim.DrivenSource`).
+pub fn register_driven(registry: &PelletRegistry) {
+    registry
+        .register("floe.sim.DrivenSource", || Box::new(DrivenSource::new()));
+}
+
+/// Harness half of the deterministic loop (see module docs).
+pub struct LockstepDriver {
+    clock: VirtualClock,
+    mirror: WorkloadGen,
+    dt: f64,
+    t: f64,
+    expected: u64,
+}
+
+impl LockstepDriver {
+    /// `profile`/`seed`/`dt` must match the [`DrivenSource`]'s state
+    /// configuration, or the mirror diverges.
+    pub fn new(
+        profile: WorkloadProfile,
+        seed: u64,
+        dt: f64,
+    ) -> LockstepDriver {
+        LockstepDriver {
+            clock: VirtualClock::new(),
+            mirror: WorkloadGen::new(profile, seed),
+            dt,
+            t: 0.0,
+            expected: 0,
+        }
+    }
+
+    /// The shared simulated clock (advanced by [`LockstepDriver::step`]).
+    pub fn clock(&self) -> VirtualClock {
+        self.clock.clone()
+    }
+
+    /// Simulated time of the *next* step.
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// Total arrivals the source must have emitted so far.
+    pub fn expected_total(&self) -> u64 {
+        self.expected
+    }
+
+    /// Inject one tick into `source.port` and advance the simulated
+    /// clock by `dt`.  Returns this step's arrival count (mirror).
+    pub fn step(
+        &mut self,
+        run: &RunningDataflow,
+        source: &str,
+        port: &str,
+    ) -> Result<u64> {
+        let n = self.mirror.arrivals(self.t, self.dt) as u64;
+        self.expected += n;
+        run.inject(source, port, Message::text("tick"))?;
+        self.t += self.dt;
+        self.clock.advance_to(self.t);
+        Ok(n)
+    }
+}
+
+/// Deterministic queue/service model standing in for live probes (the
+/// same shape as the Fig. 4 simulator): arrivals pile into a modeled
+/// queue that `cores × alpha` instances drain at a fixed per-message
+/// latency, and the arrival rate comes from a sliding sample window
+/// exactly like [`crate::flake::Probes::sample_rates`].
+pub struct ModeledFlake {
+    pub latency: f64,
+    pub alpha: usize,
+    queue: f64,
+    cum_arrivals: f64,
+    window: Vec<(f64, f64)>,
+}
+
+impl ModeledFlake {
+    pub fn new(latency: f64, alpha: usize) -> ModeledFlake {
+        ModeledFlake {
+            latency,
+            alpha: alpha.max(1),
+            queue: 0.0,
+            cum_arrivals: 0.0,
+            window: Vec::new(),
+        }
+    }
+
+    /// Account one step: `arrivals` messages land during `dt` seconds
+    /// while `cores` drain the queue.
+    pub fn advance(
+        &mut self,
+        t: f64,
+        dt: f64,
+        arrivals: f64,
+        cores: usize,
+    ) {
+        self.cum_arrivals += arrivals;
+        self.queue += arrivals;
+        let capacity = (cores * self.alpha) as f64 * dt
+            / self.latency.max(1e-9);
+        self.queue = (self.queue - capacity).max(0.0);
+        self.window.push((t, self.cum_arrivals));
+        if self.window.len() > 5 {
+            let drop = self.window.len() - 5;
+            self.window.drain(..drop);
+        }
+    }
+
+    /// Observation for the adaptation strategy at the current state.
+    pub fn observe(&self, cores: usize) -> FlakeObservation {
+        let arrival_rate = if self.window.len() < 2 {
+            0.0
+        } else {
+            let (t0, a0) = self.window[0];
+            let (t1, a1) = self.window[self.window.len() - 1];
+            if t1 > t0 {
+                (a1 - a0) / (t1 - t0)
+            } else {
+                0.0
+            }
+        };
+        FlakeObservation {
+            queue_len: self.queue.round() as usize,
+            arrival_rate,
+            completion_rate: 0.0,
+            service_latency: self.latency,
+            selectivity: 1.0,
+            cores,
+            instances: cores * self.alpha,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn configure_reads_state_keys() {
+        let state = StateObject::new();
+        state.set("profile", Json::str("spikes"));
+        state.set("rate", Json::num(200.0));
+        state.set("seed", Json::num(9.0));
+        state.set("dt", Json::num(0.5));
+        state.set("period", Json::num(40.0));
+        state.set("burst", Json::num(20.0));
+        let (_gen, dt) = configure(&state);
+        assert!((dt - 0.5).abs() < 1e-12);
+        // Mirror with identical parameters produces the same series.
+        let mut profile = WorkloadProfile::spikes_default(200.0);
+        if let WorkloadProfile::PeriodicSpikes { period, burst, .. } =
+            &mut profile
+        {
+            *period = 40.0;
+            *burst = 20.0;
+        }
+        let mut a = configure(&state).0;
+        let mut b = WorkloadGen::new(profile, 9);
+        for step in 0..200 {
+            let t = step as f64 * 0.5;
+            assert_eq!(
+                a.arrivals(t, 0.5).to_bits(),
+                b.arrivals(t, 0.5).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn modeled_flake_conserves_queue() {
+        let mut m = ModeledFlake::new(0.1, 4);
+        // 100 msgs/step vs capacity 40/step at 1 core -> queue grows
+        // by 60/step.
+        for step in 0..10 {
+            m.advance(step as f64, 1.0, 100.0, 1);
+        }
+        let obs = m.observe(1);
+        assert_eq!(obs.queue_len, 600);
+        assert!((obs.arrival_rate - 100.0).abs() < 1e-9);
+        // 5 cores drain 200/step: queue shrinks.
+        for step in 10..13 {
+            m.advance(step as f64, 1.0, 100.0, 5);
+        }
+        assert_eq!(m.observe(5).queue_len, 300);
+    }
+}

@@ -14,8 +14,12 @@
 //! "area under the curve" whose static:dynamic:hybrid ratio the paper
 //! reports as 0.87 : 1.00 : 0.98).
 
+pub mod driver;
 pub mod workload;
 
+pub use driver::{
+    register_driven, DrivenSource, LockstepDriver, ModeledFlake,
+};
 pub use workload::{WorkloadGen, WorkloadProfile};
 
 use crate::adaptation::{

@@ -506,6 +506,71 @@ fn prop_dynamic_strategy_bounds_and_monotonic_step() {
     });
 }
 
+fn const_obs(
+    queue: usize,
+    rate: f64,
+    latency: f64,
+    cores: usize,
+) -> FlakeObservation {
+    FlakeObservation {
+        queue_len: queue,
+        arrival_rate: rate,
+        completion_rate: 0.0,
+        service_latency: latency,
+        selectivity: 1.0,
+        cores,
+        instances: cores * 4,
+    }
+}
+
+/// Hysteresis: a constant arrival rate settles to one allocation and
+/// never flutters around it (Algorithm 1's anti-fluctuation check).
+#[test]
+fn prop_dynamic_no_flutter_at_constant_rate() {
+    run_cases("dynamic: constant rate settles, no flutter", 150, |g| {
+        let mut d = DynamicStrategy::default();
+        let rate = g.f64(0.0, 2000.0);
+        let latency = g.f64(0.001, 0.5);
+        let mut cores = g.int(0, 32) as usize;
+        // The strategy moves at most one core per decision and every
+        // move sequence at constant demand is monotone, so 80 steps
+        // reach the fixed point from anywhere in [0, 64].
+        for _ in 0..80 {
+            cores = d.decide(&const_obs(0, rate, latency, cores), 0.0);
+        }
+        let settled = cores;
+        for step in 0..50 {
+            cores = d.decide(&const_obs(0, rate, latency, cores), 0.0);
+            assert_eq!(
+                cores, settled,
+                "allocation flutters at constant rate {rate} \
+                 (step {step})"
+            );
+        }
+    });
+}
+
+/// Monotonicity: at equal state, a higher arrival rate never yields
+/// fewer cores.
+#[test]
+fn prop_dynamic_monotonic_in_rate() {
+    run_cases("dynamic: more load never fewer cores", 250, |g| {
+        let cores = g.int(0, 16) as usize;
+        let queue = g.int(0, 500) as usize;
+        let latency = g.f64(0.001, 0.5);
+        let r1 = g.f64(0.0, 3000.0);
+        let r2 = r1 + g.f64(0.0, 3000.0);
+        let mut d1 = DynamicStrategy::default();
+        let mut d2 = DynamicStrategy::default();
+        let c1 = d1.decide(&const_obs(queue, r1, latency, cores), 0.0);
+        let c2 = d2.decide(&const_obs(queue, r2, latency, cores), 0.0);
+        assert!(
+            c2 >= c1,
+            "rate {r1} -> {c1} cores but higher rate {r2} -> {c2}"
+        );
+    });
+}
+
 #[test]
 fn prop_sim_conserves_messages() {
     run_cases("sim: processed + queued == arrived", 12, |g| {

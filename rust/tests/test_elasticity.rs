@@ -1,0 +1,419 @@
+//! Closed-loop elasticity under deterministic seeded workloads: the
+//! `ElasticityPolicy` consumes modeled observations driven by the §IV-C
+//! profiles, regrants cores in place, and — when the hosting container
+//! saturates — relocates the hot flake through `recompose()` with zero
+//! message loss, per-producer FIFO, a gap-free `AdaptationHistory`, and
+//! a bit-reproducible decision trace per seed.  Wall-clock Monitor
+//! regressions (re-bind after relocation, drop after removal) ride
+//! along at the end.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use floe::adaptation::{
+    AdaptationSample, DynamicStrategy, ElasticAction, ElasticDecision,
+    ElasticityConfig, ElasticityPolicy,
+};
+use floe::coordinator::{
+    AdaptationSetup, Coordinator, LaunchOptions, RunningDataflow,
+};
+use floe::graph::{GraphBuilder, SplitMode};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::Message;
+use floe::pellet::builtins::CollectSink;
+use floe::pellet::PelletRegistry;
+use floe::recompose::GraphDelta;
+use floe::sim::{
+    register_driven, LockstepDriver, ModeledFlake, WorkloadGen,
+    WorkloadProfile,
+};
+use floe::util::json::Json;
+
+/// The bursty profile both the live `DrivenSource` and the test mirror
+/// use: §IV-C "periodic with random spikes", shrunk to test-sized
+/// cycles (60 s period, 30 s burst at 400 msg/s nominal).
+fn spiky_profile() -> WorkloadProfile {
+    let mut p = WorkloadProfile::spikes_default(400.0);
+    if let WorkloadProfile::PeriodicSpikes { period, burst, .. } = &mut p
+    {
+        *period = 60.0;
+        *burst = 30.0;
+    }
+    p
+}
+
+/// src (DrivenSource) -> hot (Identity) -> sink (Collect), all
+/// sequential with one input shard so FIFO is observable end-to-end.
+fn launch(
+    total_cores: usize,
+) -> (Arc<RunningDataflow>, Arc<Mutex<Vec<Message>>>) {
+    let cloud = SimulatedCloud::new(total_cores, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    register_driven(&registry);
+    let collected = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    registry.register("test.Collect", move || {
+        Box::new(CollectSink { collected: Arc::clone(&c2) })
+    });
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+    let mut g = GraphBuilder::new("elastic");
+    g.pellet("src", "floe.sim.DrivenSource")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential()
+        .stateful();
+    g.pellet("hot", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("sink", "test.Collect").in_port("in").sequential();
+    g.edge("src", "out", "hot", "in");
+    g.edge("hot", "out", "sink", "in");
+    let options =
+        LaunchOptions { input_shards: 1, ..LaunchOptions::default() };
+    let run =
+        Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
+    (run, collected)
+}
+
+struct Outcome {
+    trace: Vec<ElasticDecision>,
+    texts: Vec<String>,
+    expected: u64,
+    home_before: String,
+    home_after: String,
+    home_after_flakes: usize,
+    history: Vec<AdaptationSample>,
+    graph_version: u64,
+    downtimes: Vec<f64>,
+}
+
+/// One full closed-loop run: deterministic lockstep driving, modeled
+/// observations for the policy, real regrants/relocations against the
+/// live dataflow.  Everything in the returned `Outcome` is a pure
+/// function of `seed` (given the same `total_cores` and `steps`).
+fn closed_loop(seed: u64, total_cores: usize, steps: usize) -> Outcome {
+    let (run, collected) = launch(total_cores);
+    let src = run.flake("src").unwrap();
+    let state = src.state();
+    state.set("profile", Json::str("spikes"));
+    state.set("rate", Json::num(400.0));
+    state.set("seed", Json::num(seed as f64));
+    state.set("dt", Json::num(1.0));
+    state.set("period", Json::num(60.0));
+    state.set("burst", Json::num(30.0));
+
+    let mut driver = LockstepDriver::new(spiky_profile(), seed, 1.0);
+    let mut policy = ElasticityPolicy::new(ElasticityConfig {
+        saturation_k: 3,
+        cooldown: 10,
+        max_cores: 8,
+    });
+    policy.watch(
+        "hot",
+        Box::new(DynamicStrategy {
+            min_cores: 1,
+            ..DynamicStrategy::default()
+        }),
+    );
+    let mut model = ModeledFlake::new(0.1, 4);
+    let home_before = run.container("hot").unwrap().id.clone();
+
+    for _ in 0..steps {
+        let t = driver.now();
+        let n = driver.step(&run, "src", "in").unwrap();
+        let cores = run.flake("hot").unwrap().cores();
+        model.advance(t, 1.0, n as f64, cores);
+        let obs = model.observe(cores);
+        policy.step_with(&run, t, |_, _| obs);
+    }
+    let home = run.container("hot").unwrap();
+    let home_after = home.id.clone();
+    let home_after_flakes = home.flake_count();
+    assert!(
+        run.drain(Duration::from_secs(30)),
+        "dataflow did not drain"
+    );
+    let texts: Vec<String> = collected
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .map(|m| m.as_text().unwrap().to_string())
+        .collect();
+    let outcome = Outcome {
+        trace: policy.trace().to_vec(),
+        texts,
+        expected: driver.expected_total(),
+        home_before,
+        home_after,
+        home_after_flakes,
+        history: policy.history().snapshot(),
+        graph_version: run.graph_version(),
+        downtimes: policy
+            .relocations()
+            .iter()
+            .map(|s| s.downtime_ms)
+            .collect(),
+    };
+    run.stop();
+    outcome
+}
+
+/// Acceptance: under the seeded bursty workload the policy relocates
+/// the hot flake to an empty container, loses nothing, keeps FIFO, and
+/// the `AdaptationHistory` spans the move with no gap.
+#[test]
+fn policy_relocates_hot_flake_zero_loss_fifo_gapfree() {
+    let steps = 60;
+    let o = closed_loop(7, 512, steps);
+    assert!(
+        o.trace
+            .iter()
+            .any(|d| matches!(d.action, ElasticAction::Relocate { .. })),
+        "no relocation in trace: {:?}",
+        o.trace
+    );
+    assert_ne!(o.home_before, o.home_after, "hot flake did not move");
+    assert_eq!(
+        o.home_after_flakes, 1,
+        "relocation target was not an empty container"
+    );
+    assert_eq!(o.graph_version, 2, "expected exactly one surgery");
+    // Zero message loss through the move.
+    assert_eq!(o.texts.len() as u64, o.expected, "message loss");
+    // Per-producer FIFO: sequence numbers strictly increase.
+    let mut last = -1i64;
+    for t in &o.texts {
+        let n: i64 = t[1..].parse().expect("sequence suffix");
+        assert!(n > last, "FIFO violated: {n} after {last}");
+        last = n;
+    }
+    // Gap-free history: one sample per control step for 'hot', each
+    // exactly one dt after the previous, across the relocation.
+    let ts: Vec<f64> = o
+        .history
+        .iter()
+        .filter(|s| s.pellet_id == "hot")
+        .map(|s| s.t)
+        .collect();
+    assert_eq!(ts.len(), steps, "missing history samples");
+    for w in ts.windows(2) {
+        assert!(
+            (w[1] - w[0] - 1.0).abs() < 1e-9,
+            "history gap between t={} and t={}",
+            w[0],
+            w[1]
+        );
+    }
+    // Downtime was measured for the policy-initiated move.
+    assert_eq!(o.downtimes.len(), 1);
+    assert!(
+        o.downtimes[0] >= 0.0 && o.downtimes[0] < 30_000.0,
+        "implausible downtime {}",
+        o.downtimes[0]
+    );
+}
+
+/// Seeded determinism: the same seed reproduces the decision trace,
+/// the arrival series, and the delivered stream bit-for-bit.
+#[test]
+fn decision_trace_is_reproducible_per_seed() {
+    let a = closed_loop(7, 512, 60);
+    let b = closed_loop(7, 512, 60);
+    assert_eq!(a.trace, b.trace, "decision traces diverged");
+    assert_eq!(a.expected, b.expected);
+    assert_eq!(a.texts, b.texts, "delivered streams diverged");
+    assert_eq!(a.home_after, b.home_after);
+    assert_eq!(a.downtimes.len(), b.downtimes.len());
+}
+
+/// Same seed ⇒ byte-identical `WorkloadGen` series, for every §IV-C
+/// profile; a different seed diverges.
+#[test]
+fn workload_series_byte_identical_per_seed() {
+    let profiles = [
+        WorkloadProfile::periodic_default(120.0),
+        WorkloadProfile::spikes_default(90.0),
+        WorkloadProfile::random_default(70.0),
+    ];
+    for p in profiles {
+        let mut a = WorkloadGen::new(p.clone(), 11);
+        let mut b = WorkloadGen::new(p.clone(), 11);
+        let mut c = WorkloadGen::new(p, 12);
+        let mut diverged = false;
+        for step in 0..2000 {
+            let t = step as f64;
+            let x = a.arrivals(t, 1.0);
+            let y = b.arrivals(t, 1.0);
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "same-seed series diverged at t={t}"
+            );
+            if x.to_bits() != c.arrivals(t, 1.0).to_bits() {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "different seeds produced identical series");
+    }
+}
+
+/// No capacity anywhere (one 8-core VM is the whole cloud): the policy
+/// must degrade to in-container regrants — recorded as `Degraded`,
+/// never an error, never a half-applied surgery, never message loss.
+#[test]
+fn no_capacity_degrades_to_regrant_without_error() {
+    let o = closed_loop(7, 8, 45);
+    assert!(
+        o.trace
+            .iter()
+            .any(|d| matches!(d.action, ElasticAction::Degraded { .. })),
+        "no degraded decision in trace: {:?}",
+        o.trace
+    );
+    assert!(
+        !o.trace
+            .iter()
+            .any(|d| matches!(d.action, ElasticAction::Relocate { .. })),
+        "relocated despite exhausted cloud"
+    );
+    assert_eq!(o.home_before, o.home_after, "flake moved impossibly");
+    assert_eq!(o.graph_version, 1, "failed surgery mutated the graph");
+    assert!(o.downtimes.is_empty());
+    assert_eq!(
+        o.texts.len() as u64,
+        o.expected,
+        "message loss while degraded"
+    );
+}
+
+fn history_count(run: &RunningDataflow, id: &str) -> usize {
+    run.adaptation_history()
+        .iter()
+        .filter(|s| s.pellet_id == id)
+        .count()
+}
+
+/// Regression (ROADMAP): the background `Monitor` must track a flake
+/// *across* relocation.  Only a monitor re-bound to the replacement can
+/// see its queue build up and scale it — a dead pre-move handle would
+/// read an empty husk forever.
+#[test]
+fn monitor_rebinds_to_relocated_flake() {
+    let cloud = SimulatedCloud::new(512, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+    let mut g = GraphBuilder::new("monitor-reloc");
+    g.pellet("slow", "floe.builtin.Delay")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("sink", "floe.builtin.CountSink")
+        .in_port("in")
+        .stateful();
+    g.edge("slow", "out", "sink", "in");
+    let options = LaunchOptions {
+        adaptation: Some(AdaptationSetup {
+            make: Box::new(|_id| {
+                Box::new(DynamicStrategy {
+                    min_cores: 1,
+                    max_cores: 6,
+                    ..DynamicStrategy::default()
+                })
+            }),
+            interval: Duration::from_millis(5),
+        }),
+        ..LaunchOptions::default()
+    };
+    let run = Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
+    run.flake("slow")
+        .unwrap()
+        .state()
+        .set("delay_secs", Json::num(0.002));
+
+    // Warm-up traffic so pre-move samples exist.
+    for i in 0..100 {
+        run.inject("slow", "in", Message::text(format!("a{i}"))).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(20)));
+
+    // Relocate while the monitor keeps ticking.
+    let home = run.container("slow").unwrap().id.clone();
+    let mut d = GraphDelta::against(&run.graph());
+    d.relocate_flake("slow");
+    run.recompose(&d).unwrap();
+    assert_ne!(run.container("slow").unwrap().id, home);
+
+    // Let the monitor quiesce the idle replacement back to 1 core.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while run.flake("slow").unwrap().cores() > 1 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "monitor never quiesced the replacement"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let samples_before = history_count(&run, "slow");
+
+    // Pile load onto the REPLACEMENT: only a re-bound monitor can see
+    // this queue and grow the allocation.
+    for i in 0..1500 {
+        run.inject("slow", "in", Message::text(format!("b{i}"))).unwrap();
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    while run.flake("slow").unwrap().cores() <= 1 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "monitor never scaled the replacement: it lost the flake \
+             across the relocation"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // History for the pellet kept growing across the move: no gap in
+    // coverage, one continuous series under the same pellet id.
+    assert!(history_count(&run, "slow") > samples_before);
+    assert!(run.drain(Duration::from_secs(60)));
+    run.stop();
+}
+
+/// A removed pellet's monitor entry is dropped (no dead-handle
+/// sampling) while surviving pellets keep being sampled.
+#[test]
+fn monitor_drops_removed_pellet() {
+    let cloud = SimulatedCloud::new(512, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+    let mut g = GraphBuilder::new("monitor-drop");
+    g.pellet("a", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("b", "floe.builtin.CountSink").in_port("in").stateful();
+    g.edge("a", "out", "b", "in");
+    let options = LaunchOptions {
+        adaptation: Some(AdaptationSetup {
+            make: Box::new(|_id| {
+                Box::new(DynamicStrategy {
+                    min_cores: 1,
+                    ..DynamicStrategy::default()
+                })
+            }),
+            interval: Duration::from_millis(5),
+        }),
+        ..LaunchOptions::default()
+    };
+    let run = coord.launch(g.build().unwrap(), options).unwrap();
+
+    let mut d = GraphDelta::against(&run.graph());
+    d.remove_pellet("b");
+    run.recompose(&d).unwrap();
+
+    std::thread::sleep(Duration::from_millis(100));
+    let b1 = history_count(&run, "b");
+    let a1 = history_count(&run, "a");
+    std::thread::sleep(Duration::from_millis(200));
+    let b2 = history_count(&run, "b");
+    let a2 = history_count(&run, "a");
+    assert_eq!(b1, b2, "monitor kept sampling a removed pellet");
+    assert!(a2 > a1, "monitor stopped sampling a surviving pellet");
+    run.stop();
+}

@@ -10,8 +10,9 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use floe::channel::TcpSender;
 use floe::coordinator::{Coordinator, LaunchOptions, RunningDataflow};
-use floe::error::Result;
+use floe::error::{FloeError, Result};
 use floe::graph::{
     EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
     SplitMode, WindowSpec,
@@ -355,6 +356,65 @@ fn bad_deltas_reject_atomically() {
             .count(),
         50
     );
+    run.stop();
+}
+
+/// Relocating a flake with a live TCP receiver is rejected up front
+/// with `FloeError::Recompose` (remote port maps cannot rebind yet —
+/// ROADMAP item), with zero side effects; flakes without TCP inputs
+/// still relocate.
+#[test]
+fn relocate_rejected_for_tcp_fed_flake() {
+    let (coord, collected) = setup();
+    let mut g = GraphBuilder::new("tcp-reloc");
+    g.pellet("head", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("tail", "test.Collect").in_port("in");
+    g.edge("head", "out", "tail", "in");
+    let run = coord
+        .launch(g.build().unwrap(), LaunchOptions::default())
+        .unwrap();
+    let ep = run.flake("head").unwrap().serve_tcp(0).unwrap();
+
+    let mut d = GraphDelta::against(&run.graph());
+    d.relocate_flake("head");
+    let err = run.recompose(&d).unwrap_err();
+    assert!(
+        matches!(err, FloeError::Recompose(_)),
+        "wrong error category: {err}"
+    );
+    assert!(err.to_string().contains("TcpReceiver"), "{err}");
+    // Zero side effects: version unchanged, the remote edge still
+    // feeds the stream.
+    assert_eq!(run.graph_version(), 1);
+    assert!(run.recompose_history().is_empty());
+    let tx = TcpSender::connect(&ep, "in").unwrap();
+    for i in 0..20 {
+        tx.send(Message::text(format!("t{i}"))).unwrap();
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let n = collected
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|m| !m.is_landmark())
+            .count();
+        if n >= 20 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "tcp messages never arrived"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // The guard is per flake: 'tail' has no TCP input and moves fine.
+    let mut d = GraphDelta::against(&run.graph());
+    d.relocate_flake("tail");
+    run.recompose(&d).unwrap();
+    assert_eq!(run.graph_version(), 2);
     run.stop();
 }
 
