@@ -1,10 +1,14 @@
 //! Micro: transport throughput — in-proc bounded queue vs framed TCP —
 //! plus the message codec, the framework's per-message floor.
 //!
-//! The headline comparison is MPMC fan-in at 4 producers: the legacy
-//! single-message path (every message takes the one `SyncQueue` mutex)
-//! vs the batched, shard-aware fast path (`ShardedQueue::push_batch` /
-//! `pop_batch`, one lock round-trip per batch per shard).
+//! Two headline comparisons:
+//!
+//! * the legacy single-message path (every message takes the one
+//!   `SyncQueue` mutex) vs the batched, shard-aware fast path
+//!   (`ShardedQueue::push_batch` / `pop_batch`);
+//! * **ring vs mutex**: the lock-free `RingQueue` against the mutex
+//!   `SyncQueue` head-to-head on one queue, single and batched, at
+//!   1/4/8 producers — the backend knob's measured justification.
 //!
 //! Writes the measured numbers to `BENCH_channels.json` in the repo root
 //! so successive PRs can track the perf trajectory.
@@ -15,7 +19,7 @@ use std::thread;
 use std::time::Instant;
 
 use floe::channel::{
-    ShardedQueue, SyncQueue, TcpReceiver, TcpSender, Transport,
+    RingQueue, ShardedQueue, SyncQueue, TcpReceiver, TcpSender, Transport,
 };
 use floe::message::Message;
 
@@ -23,6 +27,133 @@ const MPMC_PRODUCERS: usize = 4;
 const MPMC_CONSUMERS: usize = 2;
 const BATCH: usize = 64;
 const PAYLOAD: usize = 64;
+const RVM_PRODUCERS: [usize; 3] = [1, 4, 8];
+
+/// One ring-vs-mutex cell: both backends at the same producer count and
+/// mode, plus the ratio.
+struct RvmCell {
+    producers: usize,
+    mutex: f64,
+    ring: f64,
+}
+
+impl RvmCell {
+    fn speedup(&self) -> f64 {
+        self.ring / self.mutex.max(1.0)
+    }
+}
+
+/// MPMC fan-in on ONE queue primitive (no sharding, so the comparison
+/// isolates the synchronization cost itself): `producers` pushers, 2
+/// poppers, single-message or batched on both sides.
+fn bench_primitive(
+    ring: bool,
+    producers: usize,
+    batched: bool,
+    total: usize,
+) -> f64 {
+    #[allow(clippy::large_enum_variant)]
+    enum Q {
+        Ring(RingQueue<Message>),
+        Mutex(SyncQueue<Message>),
+    }
+    let q = Arc::new(if ring {
+        Q::Ring(RingQueue::new(8192))
+    } else {
+        Q::Mutex(SyncQueue::new(8192))
+    });
+    let consumers: Vec<_> = (0..MPMC_CONSUMERS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            thread::spawn(move || {
+                let mut got = 0usize;
+                loop {
+                    let n = match (&*q, batched) {
+                        (Q::Ring(q), true) => match q.pop_batch(BATCH) {
+                            Ok(b) => b.len(),
+                            Err(_) => break,
+                        },
+                        (Q::Ring(q), false) => match q.pop() {
+                            Ok(_) => 1,
+                            Err(_) => break,
+                        },
+                        (Q::Mutex(q), true) => match q.pop_batch(BATCH) {
+                            Ok(b) => b.len(),
+                            Err(_) => break,
+                        },
+                        (Q::Mutex(q), false) => match q.pop() {
+                            Ok(_) => 1,
+                            Err(_) => break,
+                        },
+                    };
+                    got += n;
+                }
+                got
+            })
+        })
+        .collect();
+    let msg = Message::f32s(vec![0.5; PAYLOAD / 4]);
+    let per = total / producers;
+    let start = Instant::now();
+    let handles: Vec<_> = (0..producers)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            let msg = msg.clone();
+            thread::spawn(move || {
+                let mut sent = 0usize;
+                while sent < per {
+                    match (&*q, batched) {
+                        (Q::Ring(q), true) => {
+                            let n = BATCH.min(per - sent);
+                            let b: Vec<Message> =
+                                (0..n).map(|_| msg.clone()).collect();
+                            q.push_batch(b).unwrap();
+                            sent += n;
+                        }
+                        (Q::Ring(q), false) => {
+                            q.push(msg.clone()).unwrap();
+                            sent += 1;
+                        }
+                        (Q::Mutex(q), true) => {
+                            let n = BATCH.min(per - sent);
+                            let b: Vec<Message> =
+                                (0..n).map(|_| msg.clone()).collect();
+                            q.push_batch(b).unwrap();
+                            sent += n;
+                        }
+                        (Q::Mutex(q), false) => {
+                            q.push(msg.clone()).unwrap();
+                            sent += 1;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    match &*q {
+        Q::Ring(q) => q.close(),
+        Q::Mutex(q) => q.close(),
+    }
+    let got: usize =
+        consumers.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(got, per * producers);
+    (per * producers) as f64 / secs
+}
+
+fn bench_ring_vs_mutex(batched: bool, total: usize) -> Vec<RvmCell> {
+    RVM_PRODUCERS
+        .iter()
+        .map(|&p| RvmCell {
+            producers: p,
+            mutex: bench_primitive(false, p, batched, total),
+            ring: bench_primitive(true, p, batched, total),
+        })
+        .collect()
+}
 
 /// Legacy path: every producer pushes single messages through one mutex.
 fn bench_mpmc_single(total: usize) -> f64 {
@@ -187,9 +318,29 @@ fn bench_codec(n: usize, payload: usize) -> (f64, f64) {
     (enc_rate, dec_rate)
 }
 
+fn rvm_json(cells: &[RvmCell]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            format!(
+                "      \"p{}\": {{ \"mutex\": {:.0}, \"ring\": {:.0}, \
+                 \"speedup\": {:.2} }}",
+                c.producers,
+                c.mutex,
+                c.ring,
+                c.speedup()
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n")
+}
+
+#[allow(clippy::too_many_arguments)]
 fn write_baseline(
     single: f64,
     batched: f64,
+    rvm_single: &[RvmCell],
+    rvm_batched: &[RvmCell],
     tcp_single: f64,
     tcp_batched: f64,
     enc: f64,
@@ -202,10 +353,15 @@ fn write_baseline(
          \"payload_bytes\": {PAYLOAD}\n  }},\n  \"mpmc_msgs_per_sec\": \
          {{\n    \"single\": {single:.0},\n    \"batched\": \
          {batched:.0},\n    \"speedup\": {:.2}\n  }},\n  \
+         \"ring_vs_mutex\": {{\n    \"consumers\": {MPMC_CONSUMERS},\n    \
+         \"batch_size\": {BATCH},\n    \"single\": {{\n{}\n    }},\n    \
+         \"batched\": {{\n{}\n    }}\n  }},\n  \
          \"tcp_msgs_per_sec\": {{\n    \"single\": {tcp_single:.0},\n    \
          \"batched\": {tcp_batched:.0}\n  }},\n  \"codec_msgs_per_sec\": \
          {{\n    \"encode\": {enc:.0},\n    \"decode\": {dec:.0}\n  }}\n}}\n",
-        batched / single.max(1.0)
+        batched / single.max(1.0),
+        rvm_json(rvm_single),
+        rvm_json(rvm_batched),
     );
     // Repo root = the rust package dir's parent.
     let root = std::env::var("CARGO_MANIFEST_DIR")
@@ -229,6 +385,30 @@ fn main() {
     println!("{:>24} {single:>14.0}", "single-message path");
     println!("{:>24} {batched:>14.0}", "batched+sharded path");
     println!("{:>24} {:>13.2}x", "speedup", batched / single.max(1.0));
+
+    println!(
+        "\n# Ring vs mutex, one queue, {MPMC_CONSUMERS} consumers — \
+         messages/second"
+    );
+    println!(
+        "{:>10} {:>8} {:>14} {:>14} {:>9}",
+        "mode", "prods", "mutex", "ring", "speedup"
+    );
+    let rvm_single = bench_ring_vs_mutex(false, 200_000);
+    let rvm_batched = bench_ring_vs_mutex(true, 400_000);
+    for (mode, cells) in
+        [("single", &rvm_single), ("batched", &rvm_batched)]
+    {
+        for c in cells.iter() {
+            println!(
+                "{mode:>10} {:>8} {:>14.0} {:>14.0} {:>8.2}x",
+                c.producers,
+                c.mutex,
+                c.ring,
+                c.speedup()
+            );
+        }
+    }
 
     println!("\n# Channel transports — messages/second");
     println!(
@@ -258,6 +438,8 @@ fn main() {
     write_baseline(
         single,
         batched,
+        &rvm_single,
+        &rvm_batched,
         tcp_single_64,
         tcp_batched_64,
         enc_64,

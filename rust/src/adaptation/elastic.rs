@@ -20,7 +20,10 @@
 //!    via `ResourceManager::allocate_avoiding` on a *different*
 //!    container, and resumes — zero message loss, per-producer FIFO.
 //!    After the move the policy immediately grows the replacement
-//!    toward the wanted allocation on its fresh container.
+//!    toward the wanted allocation on its fresh container, and any
+//!    container the move left empty is handed back to the cloud via
+//!    [`crate::manager::ResourceManager::release_idle`] (the scale-in
+//!    half of the loop: vacated VMs never leak).
 //!
 //! A relocation that fails — typically no capacity anywhere in the
 //! cloud — **degrades** to the largest in-container regrant instead of
@@ -301,6 +304,25 @@ impl ElasticityPolicy {
                                     );
                                 }
                             }
+                        }
+                        // Scale-in half of the move: if the relocation
+                        // (plus any earlier consolidation) left a
+                        // container empty, hand its VM back to the
+                        // cloud instead of leaking it.  Goes through
+                        // the gated RunningDataflow entry point so it
+                        // can never race a concurrent surgery's
+                        // allocate-then-spawn window.
+                        match run.release_idle_containers() {
+                            Ok(0) => {}
+                            Ok(n) => crate::log_info!(
+                                "elastic: released {n} idle \
+                                 container(s) after relocating \
+                                 {pellet_id}"
+                            ),
+                            Err(e) => crate::log_warn!(
+                                "elastic: release_idle after \
+                                 relocating {pellet_id}: {e}"
+                            ),
                         }
                         ElasticAction::Relocate { wanted }
                     }

@@ -308,7 +308,18 @@ pub trait FlakeDirectory: Send + Sync {
         &self,
         pellet_id: &str,
     ) -> Option<(Arc<Flake>, Arc<Container>)>;
+
+    /// Every pellet id currently in the dataflow.  [`Monitor`]s started
+    /// with [`Monitor::start_auto`] poll this each tick so pellets
+    /// added by later graph surgery come under adaptive control
+    /// automatically (the entry set is no longer fixed at launch).
+    fn pellet_ids(&self) -> Vec<String>;
 }
+
+/// Builds the adaptation strategy for a pellet id — used for the launch
+/// set and for every pellet that graph surgery adds later.
+pub type StrategyFactory =
+    Box<dyn Fn(&str) -> Box<dyn AdaptationStrategy> + Send>;
 
 /// One pellet under adaptive control: an id (resolved through the
 /// [`FlakeDirectory`] each tick, never a pinned handle) plus its
@@ -379,14 +390,38 @@ pub struct Monitor {
 }
 
 impl Monitor {
-    /// Start the monitor thread.  Every tick each entry's pellet id is
-    /// re-resolved through `directory`, so the monitor always samples
-    /// the *current* incarnation of a flake: a relocated flake is
-    /// re-bound to its replacement (the history stays continuous) and a
-    /// removed flake's entry is dropped instead of sampling a dead
-    /// handle.
+    /// Start the monitor thread over a fixed entry set.  Every tick
+    /// each entry's pellet id is re-resolved through `directory`, so
+    /// the monitor always samples the *current* incarnation of a
+    /// flake: a relocated flake is re-bound to its replacement (the
+    /// history stays continuous) and a removed flake's entry is
+    /// dropped instead of sampling a dead handle.
     pub fn start(
         entries: Vec<MonitoredEntry>,
+        directory: Arc<dyn FlakeDirectory>,
+        clock: Arc<dyn Clock>,
+        interval: Duration,
+    ) -> Monitor {
+        Monitor::spawn(entries, None, directory, clock, interval)
+    }
+
+    /// As [`Monitor::start`], but the entry set is *discovered* from
+    /// the directory each tick: every pellet currently in the dataflow
+    /// is watched, including ones added by later graph surgery
+    /// (`make` builds their strategies on first sight).  Removed
+    /// pellets are dropped and never re-added.
+    pub fn start_auto(
+        make: StrategyFactory,
+        directory: Arc<dyn FlakeDirectory>,
+        clock: Arc<dyn Clock>,
+        interval: Duration,
+    ) -> Monitor {
+        Monitor::spawn(Vec::new(), Some(make), directory, clock, interval)
+    }
+
+    fn spawn(
+        entries: Vec<MonitoredEntry>,
+        make: Option<StrategyFactory>,
         directory: Arc<dyn FlakeDirectory>,
         clock: Arc<dyn Clock>,
         interval: Duration,
@@ -399,8 +434,33 @@ impl Monitor {
             .name("floe-monitor".into())
             .spawn(move || {
                 let mut entries = entries;
+                // Mirror of the live entry ids so per-tick discovery
+                // is O(1) per pellet, not a linear scan of entries.
+                // Rebuilt after drops, so a removed-then-re-added id
+                // is watched again like any other new pellet.
+                let mut watched: std::collections::HashSet<String> =
+                    entries.iter().map(|e| e.pellet_id.clone()).collect();
                 while !stop2.load(Ordering::SeqCst) {
+                    if let Some(make) = &make {
+                        // Auto-watch: resolve the current pellet set
+                        // from the shared topology and open an entry
+                        // for every id not seen before (ROADMAP gap:
+                        // the entry set used to be fixed at launch).
+                        for id in directory.pellet_ids() {
+                            if !watched.contains(&id) {
+                                crate::log_info!(
+                                    "monitor: watching new pellet '{id}'"
+                                );
+                                watched.insert(id.clone());
+                                entries.push(MonitoredEntry {
+                                    strategy: make(&id),
+                                    pellet_id: id,
+                                });
+                            }
+                        }
+                    }
                     let t = clock.now();
+                    let before = entries.len();
                     entries.retain_mut(|e| {
                         let Some((flake, container)) =
                             directory.lookup(&e.pellet_id)
@@ -443,6 +503,12 @@ impl Monitor {
                         });
                         true
                     });
+                    if entries.len() != before {
+                        watched = entries
+                            .iter()
+                            .map(|e| e.pellet_id.clone())
+                            .collect();
+                    }
                     thread::sleep(interval);
                 }
             })

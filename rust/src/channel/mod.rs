@@ -6,39 +6,64 @@
 //! framed TCP sockets (flakes on different VMs).  The bounded queue is the
 //! backpressure mechanism: senders block when a sink pellet falls behind.
 //!
-//! # Batching and sharding
+//! # Batching, sharding and the lock-free backend
 //!
 //! The channel layer is the per-message floor of the whole runtime, so it
-//! offers a **batched, shard-aware fast path** on top of the paper's
-//! blocking-queue contract:
+//! offers a **batched, shard-aware, lock-free fast path** on top of the
+//! paper's blocking-queue contract:
 //!
-//! * **Batch API** — [`SyncQueue::push_batch`] / [`SyncQueue::pop_batch`]
-//!   move N messages under one lock acquisition instead of N.  Batching
-//!   is opportunistic on the pop side (a consumer never waits for a batch
-//!   to fill), so latency stays at single-message levels while
-//!   lock traffic drops by the batch size.
+//! * **Batch API** — `push_batch` / `pop_batch` move N messages per
+//!   claim instead of N claims.  Batching is opportunistic on the pop
+//!   side (a consumer never waits for a batch to fill), so latency stays
+//!   at single-message levels while synchronization traffic drops by
+//!   the batch size.
 //! * **Sharding** — [`ShardedQueue`] splits a flake input port into
 //!   per-producer-thread sub-queues with a round-robin consumer sweep,
 //!   eliminating producer convoying under fan-in.  Ordering is FIFO per
 //!   producer thread; backpressure and drain-before-close semantics are
 //!   preserved per shard.
+//! * **Lock-free shards** — each shard is a [`RingQueue`] by default: a
+//!   Vyukov-style bounded ring (atomic head/tail, power-of-two
+//!   capacity) whose batch ops claim a whole run of slots with a single
+//!   compare-and-swap.  The mutex [`SyncQueue`] remains available as
+//!   the reference backend via [`ChannelBackend::Mutex`]
+//!   (`bench_channels` reports the two head-to-head).
 //! * **Batch transports** — [`Transport::send_batch`] lets the output
 //!   router hand a whole emission batch to a channel: the in-process
-//!   transport forwards it as one `push_batch`, the TCP transport writes
+//!   transport forwards it as one `push_batch`, the TCP transport
+//!   frames into a reusable per-connection scratch buffer and writes
 //!   all frames in one syscall (see [`TcpSender`]).
 //!
 //! How many messages ride in one batch is controlled by the `batch_size`
 //! knob on [`crate::flake::FlakeConfig`] (default
-//! [`crate::flake::DEFAULT_BATCH_SIZE`]), which the coordinator surfaces
-//! through `LaunchOptions::batch_size`.
+//! [`crate::flake::DEFAULT_BATCH_SIZE`]); batch size, shard count and
+//! the channel backend are all surfaced through
+//! `LaunchOptions`/`FlakeConfig`.
 
 mod queue;
+mod ring;
 mod sharded;
 mod tcp;
 
 pub use queue::{QueueClosed, SyncQueue};
+pub use ring::RingQueue;
 pub use sharded::{ShardedQueue, DEFAULT_SHARDS};
 pub use tcp::{TcpReceiver, TcpSender};
+
+/// Which primitive backs each [`ShardedQueue`] shard on the data plane.
+///
+/// `Ring` is the default production fast path; `Mutex` is the original
+/// blocking queue, kept as a reference implementation so benches can
+/// report ring-vs-mutex numbers and the recompose/elasticity suites can
+/// run on both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChannelBackend {
+    /// Lock-free bounded MPMC ring ([`RingQueue`]).
+    #[default]
+    Ring,
+    /// Mutex + condvar blocking queue ([`SyncQueue`]).
+    Mutex,
+}
 
 use std::sync::Arc;
 

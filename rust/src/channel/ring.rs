@@ -1,0 +1,746 @@
+//! Lock-free bounded MPMC ring buffer — the atomic fast path under every
+//! [`super::ShardedQueue`] shard.
+//!
+//! The mutex [`super::SyncQueue`] costs one lock round-trip (and often a
+//! condvar wake) per operation; under fan-in that lock is the per-message
+//! floor of the whole data plane.  [`RingQueue`] replaces it with a
+//! Vyukov-style ring of power-of-two capacity: each slot carries a
+//! sequence number, producers claim slots by bumping an atomic
+//! `enqueue_pos`, consumers claim them by bumping `dequeue_pos`, and the
+//! per-slot sequence hand-off publishes the data — no lock anywhere on
+//! the hot path.  On top of the classic design, both sides claim whole
+//! **batches** with a single compare-and-swap: scan forward from the
+//! head counting available slots (every slot's sequence is checked —
+//! with concurrent producers/consumers, availability is NOT guaranteed
+//! to be contiguous beyond the first gap, so the scan stops there),
+//! then claim the whole run with one CAS.  A 64-message batch
+//! therefore moves with one CAS per side instead of 64 lock
+//! round-trips, at the cost of a 64-load scan.
+//!
+//! # Contract (identical to `SyncQueue`, per queue)
+//!
+//! * FIFO in claim order; a single producer's items never reorder.
+//! * `push` blocks while full (backpressure); `try_push` refuses.
+//! * `close()` fails producers immediately; consumers drain every
+//!   remaining item before seeing [`QueueClosed`].  Close-then-drain is
+//!   loss-free: `close()` waits for in-flight publications (tracked by a
+//!   `pushing` guard counter) so a `push` that returned `Ok` is always
+//!   visible to a post-close drain — the handoff primitive
+//!   `recompose`/checkpointing depend on.
+//!
+//! # Parking
+//!
+//! Blocking ops park on an eventcount-style condvar (generation counter
+//! under a mutex, `waiters` fast-path so producers/consumers skip the
+//! lock entirely while nobody sleeps).  Waits are bounded (≤ 1 ms) so a
+//! lost wakeup costs a beat, never a hang — the same discipline
+//! [`super::ShardedQueue`] uses for its cross-shard sweep.
+//!
+//! # Snapshot caveat
+//!
+//! [`RingQueue::for_each`] walks published slots without claiming them.
+//! That is only sound while the consumer side is quiescent (checkpoints
+//! pause the flake dispatcher first); concurrent producers are fine.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::queue::QueueClosed;
+
+/// Upper bound for one parked wait; bounds the cost of a lost wakeup.
+const PARK: Duration = Duration::from_millis(1);
+
+struct Slot<T> {
+    /// Vyukov sequence: `pos` = free for the producer claiming position
+    /// `pos`; `pos + 1` = published for the consumer claiming `pos`;
+    /// `pos + capacity` = freed, ready for the next lap.
+    seq: AtomicU64,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Keep the two claim counters on separate cache lines so producer and
+/// consumer CAS traffic does not false-share.
+#[repr(align(64))]
+struct Padded<T>(T);
+
+/// Lock-free bounded MPMC queue (see module docs).
+pub struct RingQueue<T> {
+    slots: Box<[Slot<T>]>,
+    mask: u64,
+    capacity: u64,
+    enqueue_pos: Padded<AtomicU64>,
+    dequeue_pos: Padded<AtomicU64>,
+    closed: AtomicBool,
+    /// Producers inside a claim/publish critical section.  `close()`
+    /// waits for this to reach zero so post-close drains are complete.
+    pushing: AtomicUsize,
+    /// Eventcount parking: generation bumped under `signal` on every
+    /// wake; waiter counts let the fast path skip the lock.
+    signal: Mutex<u64>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    push_waiters: AtomicUsize,
+    pop_waiters: AtomicUsize,
+}
+
+// SAFETY: slots are handed between threads through the seq protocol;
+// a value is written by exactly one claiming producer and read by
+// exactly one claiming consumer.
+unsafe impl<T: Send> Send for RingQueue<T> {}
+unsafe impl<T: Send> Sync for RingQueue<T> {}
+
+impl<T> RingQueue<T> {
+    /// A ring with at least `capacity` slots (rounded up to the next
+    /// power of two; see [`RingQueue::capacity`] for the actual bound).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1).next_power_of_two() as u64;
+        let slots = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicU64::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        RingQueue {
+            slots,
+            mask: cap - 1,
+            capacity: cap,
+            enqueue_pos: Padded(AtomicU64::new(0)),
+            dequeue_pos: Padded(AtomicU64::new(0)),
+            closed: AtomicBool::new(false),
+            pushing: AtomicUsize::new(0),
+            signal: Mutex::new(0),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            push_waiters: AtomicUsize::new(0),
+            pop_waiters: AtomicUsize::new(0),
+        }
+    }
+
+    /// Actual slot count (requested capacity rounded up to a power of
+    /// two).
+    pub fn capacity(&self) -> usize {
+        self.capacity as usize
+    }
+
+    /// Buffered item count (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        let e = self.enqueue_pos.0.load(Ordering::Acquire);
+        let d = self.dequeue_pos.0.load(Ordering::Acquire);
+        e.saturating_sub(d) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True once `close` ran *and* every in-flight publication landed.
+    /// The strict form makes the check authoritative for consumers: an
+    /// empty claim scan after `is_closed()` returns `true` means
+    /// nothing more can ever appear.  (Producers fail from the moment
+    /// the close flag is set, before this reports `true`.)
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+            && self.pushing.load(Ordering::SeqCst) == 0
+    }
+
+    /// Close the queue: producers fail immediately, consumers drain
+    /// whatever remains and then fail.  Returns only after every
+    /// in-flight publication completed, so `close()` followed by a
+    /// drain observes every `push` that reported success.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        // In-flight producers hold `pushing`; they never park while
+        // holding it, so this wait is a few instructions long.
+        while self.pushing.load(Ordering::SeqCst) > 0 {
+            std::hint::spin_loop();
+        }
+        let mut seq = self.signal.lock().expect("ring signal poisoned");
+        *seq = seq.wrapping_add(1);
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Enter a publish critical section; false when closed.
+    #[inline]
+    fn begin_push(&self) -> bool {
+        self.pushing.fetch_add(1, Ordering::SeqCst);
+        if self.closed.load(Ordering::SeqCst) {
+            self.pushing.fetch_sub(1, Ordering::SeqCst);
+            return false;
+        }
+        true
+    }
+
+    #[inline]
+    fn end_push(&self) {
+        self.pushing.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Claim up to `max` contiguous slots for this producer.  Returns
+    /// the starting position and count, or `None` when the ring is
+    /// full.  One CAS per successful claim, however large the batch.
+    fn claim(&self, max: usize) -> Option<(u64, usize)> {
+        let max = max.min(self.capacity as usize).max(1);
+        loop {
+            let pos = self.enqueue_pos.0.load(Ordering::Relaxed);
+            // Count forward until the first still-occupied slot,
+            // checking every sequence: concurrent batch-claiming
+            // consumers may free later slots before earlier ones, so
+            // only the contiguous prefix is claimable.
+            let mut k = 0usize;
+            while k < max {
+                let p = pos + k as u64;
+                let seq = self.slots[(p & self.mask) as usize]
+                    .seq
+                    .load(Ordering::Acquire);
+                if seq != p {
+                    break;
+                }
+                k += 1;
+            }
+            if k == 0 {
+                let seq = self.slots[(pos & self.mask) as usize]
+                    .seq
+                    .load(Ordering::Acquire);
+                if seq < pos {
+                    return None; // genuinely full (previous lap)
+                }
+                continue; // lost a race with another producer
+            }
+            let cas = self.enqueue_pos.0.compare_exchange_weak(
+                pos,
+                pos + k as u64,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            if cas.is_ok() {
+                return Some((pos, k));
+            }
+        }
+    }
+
+    /// Write one item into a claimed position and publish it.
+    #[inline]
+    fn publish(&self, pos: u64, item: T) {
+        let slot = &self.slots[(pos & self.mask) as usize];
+        unsafe { (*slot.val.get()).write(item) };
+        slot.seq.store(pos + 1, Ordering::Release);
+    }
+
+    /// Non-blocking push; `Err(item)` when full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        if !self.begin_push() {
+            return Err(item);
+        }
+        match self.claim(1) {
+            Some((pos, _)) => {
+                self.publish(pos, item);
+                self.end_push();
+                self.wake_pop();
+                Ok(())
+            }
+            None => {
+                self.end_push();
+                Err(item)
+            }
+        }
+    }
+
+    /// Blocking push; waits while full.  Err if closed.
+    pub fn push(&self, item: T) -> Result<(), QueueClosed> {
+        let mut item = item;
+        loop {
+            match self.try_push(item) {
+                Ok(()) => return Ok(()),
+                Err(v) => {
+                    if self.is_closed() {
+                        return Err(QueueClosed);
+                    }
+                    item = v;
+                    self.park_push();
+                }
+            }
+        }
+    }
+
+    /// Blocking batch push: the whole batch claims slots with one CAS
+    /// per contiguous free run.  Blocks while full, exactly like
+    /// repeated [`RingQueue::push`] calls.  Err once the queue closes
+    /// (items already queued stay consumable; the rest are dropped,
+    /// matching [`super::SyncQueue::push_batch`]).
+    pub fn push_batch(&self, items: Vec<T>) -> Result<(), QueueClosed> {
+        let mut it = items.into_iter();
+        loop {
+            let remaining = it.len();
+            if remaining == 0 {
+                return Ok(());
+            }
+            if !self.begin_push() {
+                return Err(QueueClosed);
+            }
+            match self.claim(remaining) {
+                Some((pos, k)) => {
+                    for i in 0..k {
+                        let item =
+                            it.next().expect("claimed <= remaining");
+                        self.publish(pos + i as u64, item);
+                    }
+                    self.end_push();
+                    self.wake_pop();
+                }
+                None => {
+                    self.end_push();
+                    self.park_push();
+                }
+            }
+        }
+    }
+
+    /// Claim and move out up to `max` published items, appending to
+    /// `out`.  One CAS per successful claim.  Returns how many moved.
+    fn take_batch(&self, out: &mut Vec<T>, max: usize) -> usize {
+        let max = max.min(self.capacity as usize);
+        if max == 0 {
+            return 0;
+        }
+        loop {
+            let pos = self.dequeue_pos.0.load(Ordering::Relaxed);
+            // Count forward until the first unpublished slot, checking
+            // every sequence: a producer batch-claiming [64, 128) may
+            // publish before the claimant of [0, 64) does, so only the
+            // contiguous published prefix is takeable.
+            let mut k = 0usize;
+            while k < max {
+                let p = pos + k as u64;
+                let seq = self.slots[(p & self.mask) as usize]
+                    .seq
+                    .load(Ordering::Acquire);
+                if seq != p + 1 {
+                    break;
+                }
+                k += 1;
+            }
+            if k == 0 {
+                let seq = self.slots[(pos & self.mask) as usize]
+                    .seq
+                    .load(Ordering::Acquire);
+                if seq < pos + 1 {
+                    return 0; // empty (or head not yet published)
+                }
+                continue; // lost a race with another consumer
+            }
+            let cas = self.dequeue_pos.0.compare_exchange_weak(
+                pos,
+                pos + k as u64,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            if cas.is_ok() {
+                out.reserve(k);
+                for i in 0..k {
+                    let p = pos + i as u64;
+                    let slot = &self.slots[(p & self.mask) as usize];
+                    let val =
+                        unsafe { (*slot.val.get()).assume_init_read() };
+                    slot.seq.store(p + self.capacity, Ordering::Release);
+                    out.push(val);
+                }
+                self.wake_push();
+                return k;
+            }
+        }
+    }
+
+    /// Non-blocking drain of up to `max` items into `out`; returns how
+    /// many moved.  Ignores the closed flag — remaining items are
+    /// always drainable.
+    pub fn drain_into(&self, out: &mut Vec<T>, max: usize) -> usize {
+        self.take_batch(out, max)
+    }
+
+    /// Non-blocking pop.  Allocation-free: claims one slot directly
+    /// instead of routing through the batch path's `Vec`.
+    pub fn try_pop(&self) -> Option<T> {
+        loop {
+            let pos = self.dequeue_pos.0.load(Ordering::Relaxed);
+            let slot = &self.slots[(pos & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq < pos + 1 {
+                return None; // empty (or head not yet published)
+            }
+            if seq > pos + 1 {
+                continue; // lost a race with another consumer
+            }
+            let cas = self.dequeue_pos.0.compare_exchange_weak(
+                pos,
+                pos + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            if cas.is_ok() {
+                let val = unsafe { (*slot.val.get()).assume_init_read() };
+                slot.seq.store(pos + self.capacity, Ordering::Release);
+                self.wake_push();
+                return Some(val);
+            }
+        }
+    }
+
+    /// Blocking batch pop: waits for at least one item, drains up to
+    /// `max`.  After close, remaining items drain first; then Err.
+    pub fn pop_batch(&self, max: usize) -> Result<Vec<T>, QueueClosed> {
+        self.pop_batch_deadline(max, None)
+            .map(|out| out.expect("no deadline, no timeout"))
+    }
+
+    /// Batch pop with a timeout; `Ok(vec![])` on timeout.
+    pub fn pop_batch_timeout(
+        &self,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<Vec<T>, QueueClosed> {
+        self.pop_batch_deadline(max, Some(Instant::now() + timeout))
+            .map(|out| out.unwrap_or_default())
+    }
+
+    /// Blocking single pop; drains remaining items after close, then
+    /// Err.  Allocation-free (see [`RingQueue::try_pop`]).
+    pub fn pop(&self) -> Result<T, QueueClosed> {
+        loop {
+            let closed = self.is_closed();
+            if let Some(v) = self.try_pop() {
+                return Ok(v);
+            }
+            if closed {
+                return Err(QueueClosed);
+            }
+            self.park_pop(None);
+        }
+    }
+
+    /// Single pop with a timeout; `Ok(None)` on timeout.
+    /// Allocation-free (see [`RingQueue::try_pop`]).
+    pub fn pop_timeout(
+        &self,
+        timeout: Duration,
+    ) -> Result<Option<T>, QueueClosed> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let closed = self.is_closed();
+            if let Some(v) = self.try_pop() {
+                return Ok(Some(v));
+            }
+            if closed {
+                return Err(QueueClosed);
+            }
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+            self.park_pop(Some(deadline));
+        }
+    }
+
+    fn pop_batch_deadline(
+        &self,
+        max: usize,
+        deadline: Option<Instant>,
+    ) -> Result<Option<Vec<T>>, QueueClosed> {
+        let max = max.max(1);
+        let mut out = Vec::new();
+        loop {
+            // Closed-before-take makes an empty take authoritative:
+            // once the strict `is_closed` holds, no publication can
+            // still land.
+            let closed = self.is_closed();
+            if self.take_batch(&mut out, max) > 0 {
+                return Ok(Some(out));
+            }
+            if closed {
+                return Err(QueueClosed);
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Ok(None);
+                }
+            }
+            self.park_pop(deadline);
+        }
+    }
+
+    /// Visit every published item in FIFO order without claiming it.
+    /// Only sound while the consumer side is quiescent (see module
+    /// docs); concurrent producers are fine — the walk stops at the
+    /// first unpublished slot.
+    pub fn for_each(&self, mut f: impl FnMut(&T)) {
+        let mut pos = self.dequeue_pos.0.load(Ordering::Acquire);
+        loop {
+            let slot = &self.slots[(pos & self.mask) as usize];
+            if slot.seq.load(Ordering::Acquire) != pos + 1 {
+                return;
+            }
+            f(unsafe { (*slot.val.get()).assume_init_ref() });
+            pos += 1;
+        }
+    }
+
+    // --- parking ----------------------------------------------------------
+
+    /// Wake consumers after publishing; skipped while none sleep.
+    #[inline]
+    fn wake_pop(&self) {
+        if self.pop_waiters.load(Ordering::SeqCst) > 0 {
+            let mut seq = self.signal.lock().expect("ring signal poisoned");
+            *seq = seq.wrapping_add(1);
+            self.not_empty.notify_all();
+        }
+    }
+
+    /// Wake producers after freeing slots; skipped while none sleep.
+    #[inline]
+    fn wake_push(&self) {
+        if self.push_waiters.load(Ordering::SeqCst) > 0 {
+            let mut seq = self.signal.lock().expect("ring signal poisoned");
+            *seq = seq.wrapping_add(1);
+            self.not_full.notify_all();
+        }
+    }
+
+    /// Park until slots may have freed.  Bounded: a wakeup lost to the
+    /// register/notify race costs at most [`PARK`].
+    fn park_push(&self) {
+        let guard = self.signal.lock().expect("ring signal poisoned");
+        self.push_waiters.fetch_add(1, Ordering::SeqCst);
+        let (_g, _) = self
+            .not_full
+            .wait_timeout(guard, PARK)
+            .expect("ring signal poisoned");
+        self.push_waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Park until items may have arrived (bounded, like `park_push`).
+    fn park_pop(&self, deadline: Option<Instant>) {
+        let mut wait = PARK;
+        if let Some(d) = deadline {
+            let now = Instant::now();
+            if now >= d {
+                return;
+            }
+            wait = wait.min(d - now);
+        }
+        let guard = self.signal.lock().expect("ring signal poisoned");
+        self.pop_waiters.fetch_add(1, Ordering::SeqCst);
+        let (_g, _) = self
+            .not_empty
+            .wait_timeout(guard, wait)
+            .expect("ring signal poisoned");
+        self.pop_waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl<T> Drop for RingQueue<T> {
+    fn drop(&mut self) {
+        // Claimed exclusively (&mut self): drop whatever is still
+        // published.
+        while self.try_pop().is_some() {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_and_capacity_rounding() {
+        let q = RingQueue::new(10);
+        assert_eq!(q.capacity(), 16);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn try_push_refuses_when_full() {
+        let q = RingQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(3));
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(RingQueue::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.push(3));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop().unwrap(), 1);
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop().unwrap(), 2);
+        assert_eq!(q.pop().unwrap(), 3);
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let q = RingQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.push(3), Err(QueueClosed));
+        assert_eq!(q.pop().unwrap(), 1);
+        assert_eq!(q.pop().unwrap(), 2);
+        assert_eq!(q.pop(), Err(QueueClosed));
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q = Arc::new(RingQueue::<i32>::new(4));
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), Err(QueueClosed));
+    }
+
+    #[test]
+    fn pop_timeout_returns_none() {
+        let q = RingQueue::<i32>::new(4);
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)).unwrap(), None);
+        q.push(7).unwrap();
+        assert_eq!(
+            q.pop_timeout(Duration::from_millis(10)).unwrap(),
+            Some(7)
+        );
+    }
+
+    #[test]
+    fn batch_roundtrip_blocks_on_capacity() {
+        let q = Arc::new(RingQueue::new(4));
+        let q2 = Arc::clone(&q);
+        let prod = thread::spawn(move || q2.push_batch((0..12).collect()));
+        let mut got = Vec::new();
+        while got.len() < 12 {
+            got.extend(q.pop_batch(4).unwrap());
+        }
+        prod.join().unwrap().unwrap();
+        assert_eq!(got, (0..12).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn for_each_is_nondestructive() {
+        let q = RingQueue::new(8);
+        q.push_batch(vec![1, 2, 3]).unwrap();
+        let mut seen = Vec::new();
+        q.for_each(|v| seen.push(*v));
+        assert_eq!(seen, vec![1, 2, 3]);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn drop_releases_buffered_items() {
+        let q = RingQueue::new(8);
+        let item = Arc::new(());
+        q.push(Arc::clone(&item)).unwrap();
+        q.push(Arc::clone(&item)).unwrap();
+        drop(q);
+        assert_eq!(Arc::strong_count(&item), 1);
+    }
+
+    #[test]
+    fn mpmc_stress_no_loss() {
+        let q = Arc::new(RingQueue::new(64));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut i = 0;
+                    while i < 250 {
+                        let k = (i % 7 + 1).min(250 - i);
+                        let batch: Vec<i32> =
+                            (i..i + k).map(|j| p * 1000 + j).collect();
+                        q.push_batch(batch).unwrap();
+                        i += k;
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Ok(batch) = q.pop_batch(16) {
+                        got.extend(batch);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort();
+        let mut want: Vec<i32> = (0..4)
+            .flat_map(|p| (0..250).map(move |i| p * 1000 + i))
+            .collect();
+        want.sort();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn close_during_racing_pushes_loses_no_acked_item() {
+        // Every push that returns Ok must be drainable after close():
+        // the pushing-guard handshake in close() is what makes the
+        // recompose handoff loss-free.
+        for _ in 0..20 {
+            let q = Arc::new(RingQueue::new(64));
+            let producers: Vec<_> = (0..3)
+                .map(|p| {
+                    let q = Arc::clone(&q);
+                    thread::spawn(move || {
+                        let mut acked = 0usize;
+                        for i in 0..200 {
+                            if q.try_push(p * 1000 + i).is_ok() {
+                                acked += 1;
+                            }
+                        }
+                        acked
+                    })
+                })
+                .collect();
+            thread::sleep(Duration::from_micros(50));
+            q.close();
+            // Authoritative drain immediately after close returns.
+            let mut drained = Vec::new();
+            while q.drain_into(&mut drained, usize::MAX) > 0 {}
+            let acked: usize =
+                producers.into_iter().map(|h| h.join().unwrap()).sum();
+            // Stragglers that raced close got Err; everything acked
+            // before close() returned is in the drain.
+            assert!(drained.len() <= acked);
+            let mut rest = Vec::new();
+            while q.drain_into(&mut rest, usize::MAX) > 0 {}
+            assert_eq!(
+                drained.len() + rest.len(),
+                acked,
+                "acked push missing after close+drain"
+            );
+        }
+    }
+}

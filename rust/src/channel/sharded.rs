@@ -4,11 +4,21 @@
 //! [`super::SyncQueue`] serializes every producer on one mutex; under
 //! fan-in (many upstream pellet instances pushing into one flake's input
 //! port) producers convoy on that lock and throughput flatlines.  A
-//! [`ShardedQueue`] splits the buffer into N independent [`SyncQueue`]
-//! shards.  Each producer *thread* is pinned to one shard per queue
-//! (assigned round-robin on first contact, stable afterwards), so
-//! producers on different shards never contend; consumers sweep the
-//! shards round-robin and drain in batches.
+//! [`ShardedQueue`] splits the buffer into N independent shards.  Each
+//! producer *thread* is pinned to one shard per queue (assigned
+//! round-robin on first contact, stable afterwards), so producers on
+//! different shards never contend; consumers sweep the shards
+//! round-robin and drain in batches.
+//!
+//! Each shard is backed by one of two interchangeable primitives (the
+//! [`ChannelBackend`] knob on `FlakeConfig`/`LaunchOptions`):
+//!
+//! * [`ChannelBackend::Ring`] (default) — the lock-free
+//!   [`super::RingQueue`]: atomic batch claims, no mutex on the hot
+//!   path.
+//! * [`ChannelBackend::Mutex`] — the original [`SyncQueue`], kept as
+//!   the reference implementation so benches can report head-to-head
+//!   numbers and the recompose/elasticity suites can run on both.
 //!
 //! Ordering contract: FIFO **per producer thread** (a thread's messages
 //! stay in its shard, in order).  Cross-producer interleaving is
@@ -16,22 +26,112 @@
 //! on its outputs, so the runtime loses nothing.
 //!
 //! Backpressure contract: `push` blocks when the producer's shard is full
-//! (aggregate capacity is split evenly across shards), and a closed queue
-//! drains every remaining item before `pop` reports [`QueueClosed`] —
-//! identical to `SyncQueue`, per shard.
+//! (aggregate capacity is split evenly across shards; the ring backend
+//! rounds each shard up to a power of two — [`ShardedQueue::capacity`]
+//! reports the actual bound), and a closed queue drains every remaining
+//! item before `pop` reports [`QueueClosed`] — identical on both
+//! backends, per shard.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use super::queue::{QueueClosed, SyncQueue};
+use super::ring::RingQueue;
+use super::ChannelBackend;
 
 /// Default shard count for flake input ports.
 pub const DEFAULT_SHARDS: usize = 4;
 
+/// One sub-queue, in either backend flavor.  Static dispatch: the
+/// backend is fixed at construction, so the hot path pays one branch,
+/// not a vtable.  (Variant sizes differ — the ring carries padded
+/// counters — but shards are few and long-lived, so boxing would only
+/// add an indirection to every hot-path op.)
+#[allow(clippy::large_enum_variant)]
+enum Shard<T> {
+    Mutex(SyncQueue<T>),
+    Ring(RingQueue<T>),
+}
+
+impl<T> Shard<T> {
+    fn push(&self, item: T) -> Result<(), QueueClosed> {
+        match self {
+            Shard::Mutex(q) => q.push(item),
+            Shard::Ring(q) => q.push(item),
+        }
+    }
+
+    fn try_push(&self, item: T) -> Result<(), T> {
+        match self {
+            Shard::Mutex(q) => q.try_push(item),
+            Shard::Ring(q) => q.try_push(item),
+        }
+    }
+
+    fn push_batch(&self, items: Vec<T>) -> Result<(), QueueClosed> {
+        match self {
+            Shard::Mutex(q) => q.push_batch(items),
+            Shard::Ring(q) => q.push_batch(items),
+        }
+    }
+
+    fn drain_into(&self, out: &mut Vec<T>, max: usize) -> usize {
+        match self {
+            Shard::Mutex(q) => q.drain_into(out, max),
+            Shard::Ring(q) => q.drain_into(out, max),
+        }
+    }
+
+    fn try_pop(&self) -> Option<T> {
+        match self {
+            Shard::Mutex(q) => q.try_pop(),
+            Shard::Ring(q) => q.try_pop(),
+        }
+    }
+
+    fn for_each(&self, f: impl FnMut(&T)) {
+        match self {
+            Shard::Mutex(q) => q.for_each(f),
+            Shard::Ring(q) => q.for_each(f),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Shard::Mutex(q) => q.len(),
+            Shard::Ring(q) => q.len(),
+        }
+    }
+
+    fn capacity(&self) -> usize {
+        match self {
+            Shard::Mutex(q) => q.capacity(),
+            Shard::Ring(q) => q.capacity(),
+        }
+    }
+
+    fn close(&self) {
+        match self {
+            Shard::Mutex(q) => q.close(),
+            Shard::Ring(q) => q.close(),
+        }
+    }
+
+    /// Consumer-authoritative closed check: once true, an empty sweep
+    /// means nothing more can arrive (the ring's `is_closed` is strict
+    /// — closed *and* no in-flight publication).
+    fn is_closed(&self) -> bool {
+        match self {
+            Shard::Mutex(q) => q.is_closed(),
+            Shard::Ring(q) => q.is_closed(),
+        }
+    }
+}
+
 /// Bounded blocking MPMC queue sharded by producer thread.
 pub struct ShardedQueue<T> {
-    shards: Vec<SyncQueue<T>>,
+    shards: Vec<Shard<T>>,
     /// Generation counter bumped on every push/close so sweeping
     /// consumers can sleep without missing items.
     signal: Mutex<u64>,
@@ -49,18 +149,39 @@ pub struct ShardedQueue<T> {
 
 impl<T> ShardedQueue<T> {
     /// A queue with `shards` sub-queues sharing `capacity` total slots
-    /// (each shard gets `capacity / shards`, at least 1).
+    /// (each shard gets `capacity / shards`, at least 1), on the
+    /// default [`ChannelBackend::Ring`] backend.
     pub fn new(shards: usize, capacity: usize) -> Self {
+        ShardedQueue::with_backend(shards, capacity, ChannelBackend::Ring)
+    }
+
+    /// A queue on an explicit shard backend (see [`ChannelBackend`]).
+    pub fn with_backend(
+        shards: usize,
+        capacity: usize,
+        backend: ChannelBackend,
+    ) -> Self {
         let shards = shards.max(1);
         let per_shard = (capacity / shards).max(1);
+        let built: Vec<Shard<T>> = (0..shards)
+            .map(|_| match backend {
+                ChannelBackend::Mutex => {
+                    Shard::Mutex(SyncQueue::new(per_shard))
+                }
+                ChannelBackend::Ring => {
+                    Shard::Ring(RingQueue::new(per_shard))
+                }
+            })
+            .collect();
+        let capacity = built.iter().map(Shard::capacity).sum();
         ShardedQueue {
-            shards: (0..shards).map(|_| SyncQueue::new(per_shard)).collect(),
+            shards: built,
             signal: Mutex::new(0),
             not_empty: Condvar::new(),
             waiters: AtomicUsize::new(0),
             sweep: AtomicUsize::new(0),
             next_producer: AtomicUsize::new(0),
-            capacity: per_shard * shards,
+            capacity,
         }
     }
 
@@ -73,7 +194,8 @@ impl<T> ShardedQueue<T> {
         self.shards.len()
     }
 
-    /// Aggregate capacity across shards.
+    /// Aggregate capacity across shards (the actual bound — the ring
+    /// backend rounds each shard up to a power of two).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -83,7 +205,7 @@ impl<T> ShardedQueue<T> {
     /// threads cover min(k, shards) shards exactly — a process-global
     /// thread id modulo shards would let unrelated threads alias
     /// producers onto one shard and silently re-introduce convoying.
-    fn my_shard(&self) -> &SyncQueue<T> {
+    fn my_shard(&self) -> &Shard<T> {
         use std::cell::RefCell;
         let n = self.shards.len();
         if n == 1 {
@@ -193,6 +315,21 @@ impl<T> ShardedQueue<T> {
             .map(|out| out.unwrap_or_default())
     }
 
+    /// As [`ShardedQueue::pop_batch_timeout`], but appending into a
+    /// caller-owned buffer so a hot consumer (the flake dispatcher)
+    /// reuses one allocation across batches.  Returns how many items
+    /// were appended; 0 on timeout.
+    pub fn pop_batch_timeout_into(
+        &self,
+        out: &mut Vec<T>,
+        max: usize,
+        timeout: Duration,
+    ) -> Result<usize, QueueClosed> {
+        let deadline = std::time::Instant::now() + timeout;
+        self.pop_batch_deadline_into(out, max, Some(deadline))
+            .map(|n| n.unwrap_or(0))
+    }
+
     /// Shared pop core.  `Ok(None)` only when a deadline was given and
     /// passed.
     fn pop_batch_deadline(
@@ -200,14 +337,27 @@ impl<T> ShardedQueue<T> {
         max: usize,
         deadline: Option<std::time::Instant>,
     ) -> Result<Option<Vec<T>>, QueueClosed> {
-        let max = max.max(1);
         let mut out = Vec::new();
+        self.pop_batch_deadline_into(&mut out, max, deadline)
+            .map(|n| n.map(|_| out))
+    }
+
+    /// Core of every blocking pop: appends into `out`, returns how many
+    /// items were taken (`Ok(None)` only on a passed deadline).
+    fn pop_batch_deadline_into(
+        &self,
+        out: &mut Vec<T>,
+        max: usize,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Option<usize>, QueueClosed> {
+        let max = max.max(1);
         loop {
             // Closed-before-sweep makes an empty sweep authoritative: no
             // push can land in any shard once every shard is closed.
             let closed = self.is_closed();
-            if self.sweep_into(&mut out, max) > 0 {
-                return Ok(Some(out));
+            let taken = self.sweep_into(out, max);
+            if taken > 0 {
+                return Ok(Some(taken));
             }
             if closed {
                 return Err(QueueClosed);
@@ -224,9 +374,10 @@ impl<T> ShardedQueue<T> {
             // wakeup, so never sleep unboundedly on the condvar alone.
             let guard = self.signal.lock().expect("sharded signal poisoned");
             self.waiters.fetch_add(1, Ordering::AcqRel);
-            if self.sweep_into(&mut out, max) > 0 {
+            let taken = self.sweep_into(out, max);
+            if taken > 0 {
                 self.waiters.fetch_sub(1, Ordering::AcqRel);
-                return Ok(Some(out));
+                return Ok(Some(taken));
             }
             let mut wait = Duration::from_millis(5);
             if let Some(d) = deadline {
@@ -280,6 +431,12 @@ impl<T> ShardedQueue<T> {
         out
     }
 
+    /// Non-blocking batch pop into a caller-owned buffer (one sweep, up
+    /// to `max` items appended); returns how many were taken.
+    pub fn try_pop_batch_into(&self, out: &mut Vec<T>, max: usize) -> usize {
+        self.sweep_into(out, max)
+    }
+
     /// Destructively drain every buffered item, shard by shard
     /// (per-shard FIFO order preserved) — the consumer-rebinding
     /// primitive behind flake handoff: the buffered stream is taken
@@ -318,7 +475,10 @@ impl<T> ShardedQueue<T> {
 
 impl<T: Clone> ShardedQueue<T> {
     /// Non-destructive snapshot of every buffered item, shard by shard
-    /// (per-shard FIFO order preserved).  Used by checkpointing.
+    /// (per-shard FIFO order preserved).  Used by checkpointing, which
+    /// pauses the flake dispatcher first — on the ring backend the walk
+    /// is only sound while the consumer side is quiescent (concurrent
+    /// producers are fine on both backends).
     pub fn snapshot(&self) -> Vec<T> {
         let mut out = Vec::new();
         for s in &self.shards {
@@ -477,6 +637,21 @@ mod tests {
         let snap = q.snapshot();
         assert_eq!(snap.len(), 3);
         assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn mutex_backend_keeps_contract() {
+        let q = ShardedQueue::with_backend(2, 16, ChannelBackend::Mutex);
+        q.push_batch(vec![1, 2, 3]).unwrap();
+        assert_eq!(q.snapshot().len(), 3);
+        q.close();
+        assert!(q.push(4).is_err());
+        let mut got = Vec::new();
+        while let Ok(b) = q.pop_batch(8) {
+            got.extend(b);
+        }
+        got.sort();
+        assert_eq!(got, vec![1, 2, 3]);
     }
 
     #[test]

@@ -6,11 +6,14 @@
 //! flake's endpoint, decodes frames and pushes them into the named input
 //! port queue; a [`TcpSender`] holds one connection per (sink, port) pair.
 //!
-//! Both directions are batch-aware: [`TcpSender::send_batch`] concatenates
-//! every frame into one buffer and issues a single `write_all` (one
-//! syscall per batch instead of one per message), and the receiver reads
-//! socket-buffer-sized chunks, decodes every complete frame in the chunk,
-//! and delivers them per port with one [`ShardedQueue::push_batch`].
+//! Both directions are batch-aware and allocation-slim:
+//! [`TcpSender::send_batch`] encodes every frame into a reusable
+//! per-connection scratch buffer ([`Message::encode_into`] — no
+//! per-message `Vec`) and issues a single `write_all` (one syscall per
+//! batch instead of one per message); the receiver reads
+//! socket-buffer-sized chunks into one reusable accumulator, decodes
+//! every complete frame, and delivers them per port with one
+//! [`ShardedQueue::push_batch`].
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -105,6 +108,8 @@ fn serve_stream(
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut acc: Vec<u8> = Vec::with_capacity(READ_CHUNK);
     let mut chunk = vec![0u8; READ_CHUNK];
+    // Reused across reads: per-port delivery groups for this chunk.
+    let mut deliveries: Vec<(String, Vec<Message>)> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         let n = match stream.read(&mut chunk) {
             Ok(0) => {
@@ -139,7 +144,6 @@ fn serve_stream(
         // connection, but everything decoded before it is still
         // delivered below.
         let mut consumed = 0usize;
-        let mut deliveries: Vec<(String, Vec<Message>)> = Vec::new();
         let mut frame_err: Option<FloeError> = None;
         loop {
             let avail = acc.len() - consumed;
@@ -167,8 +171,7 @@ fn serve_stream(
                 ));
                 break;
             }
-            let port = String::from_utf8_lossy(&frame[2..2 + port_len])
-                .into_owned();
+            let port = &frame[2..2 + port_len];
             let msg = match Message::decode(&frame[2 + port_len..]) {
                 Ok(m) => m,
                 Err(e) => {
@@ -176,11 +179,16 @@ fn serve_stream(
                     break;
                 }
             };
-            let same_port =
-                matches!(deliveries.last(), Some((p, _)) if *p == port);
+            // The port name String is allocated once per run of
+            // same-port frames, not once per frame.
+            let same_port = matches!(
+                deliveries.last(), Some((p, _)) if p.as_bytes() == port
+            );
             if same_port {
                 deliveries.last_mut().expect("non-empty").1.push(msg);
             } else {
+                let port =
+                    String::from_utf8_lossy(port).into_owned();
                 deliveries.push((port, vec![msg]));
             }
             consumed += 4 + total;
@@ -188,7 +196,7 @@ fn serve_stream(
         if consumed > 0 {
             acc.drain(..consumed);
         }
-        for (port, batch) in deliveries {
+        for (port, batch) in deliveries.drain(..) {
             match ports.get(&port) {
                 Some(q) => {
                     if q.push_batch(batch).is_err() {
@@ -211,11 +219,23 @@ fn serve_stream(
     Ok(())
 }
 
+/// Don't let one giant batch pin a huge scratch buffer forever.
+const SCRATCH_KEEP: usize = 1 << 20;
+
+/// Connection state behind one lock: the socket and the reusable frame
+/// scratch buffer (framing and writing happen under the same critical
+/// section anyway, so sharing the lock costs nothing and saves an
+/// allocation per batch).
+struct SenderInner {
+    stream: Option<TcpStream>,
+    scratch: Vec<u8>,
+}
+
 /// Sends framed messages to one sink flake's input port over TCP.
 pub struct TcpSender {
     endpoint: String,
     port_name: String,
-    stream: Mutex<Option<TcpStream>>,
+    inner: Mutex<SenderInner>,
 }
 
 impl TcpSender {
@@ -225,78 +245,93 @@ impl TcpSender {
         Ok(TcpSender {
             endpoint: endpoint.to_string(),
             port_name: port_name.to_string(),
-            stream: Mutex::new(Some(stream)),
+            inner: Mutex::new(SenderInner {
+                stream: Some(stream),
+                scratch: Vec::with_capacity(4096),
+            }),
         })
     }
 
-    fn frame_into(&self, msg: &Message, out: &mut Vec<u8>) {
-        let body = msg.encode();
-        let port = self.port_name.as_bytes();
-        let total = 2 + port.len() + body.len();
-        out.reserve(4 + total);
-        out.extend_from_slice(&(total as u32).to_le_bytes());
-        out.extend_from_slice(&(port.len() as u16).to_le_bytes());
-        out.extend_from_slice(port);
-        out.extend_from_slice(&body);
+    /// Append one frame, encoding the message straight into `out`
+    /// (no intermediate body buffer): the length prefix is written as a
+    /// placeholder and backpatched once the encoded size is known.
+    fn frame_into(port_name: &str, msg: &Message, out: &mut Vec<u8>) {
+        let len_at = out.len();
+        out.extend_from_slice(&[0u8; 4]); // total-length placeholder
+        out.extend_from_slice(&(port_name.len() as u16).to_le_bytes());
+        out.extend_from_slice(port_name.as_bytes());
+        msg.encode_into(out);
+        let total = (out.len() - len_at - 4) as u32;
+        out[len_at..len_at + 4].copy_from_slice(&total.to_le_bytes());
     }
 
-    /// Write a pre-framed buffer, reconnecting once on a broken pipe.
+    /// Write the framed scratch buffer, reconnecting once on a broken
+    /// pipe.
     ///
     /// Delivery is at-least-once across reconnects: if the connection
     /// breaks mid-buffer, the retry resends the whole buffer, so frames
     /// the receiver already consumed may arrive again.  With batching
     /// the duplication window is the batch, not one message — sinks that
     /// cannot tolerate duplicates should dedupe on `Message::seq`.
-    fn write_frames(&self, frames: &[u8]) -> Result<()> {
-        let mut guard = self.stream.lock().expect("tcp sender poisoned");
+    fn write_frames(
+        endpoint: &str,
+        slot: &mut Option<TcpStream>,
+        frames: &[u8],
+    ) -> Result<()> {
         for attempt in 0..2 {
-            if guard.is_none() {
-                *guard = Some(
-                    TcpStream::connect(&self.endpoint).map_err(|e| {
-                        FloeError::Channel(format!(
-                            "tcp reconnect to {}: {e}",
-                            self.endpoint
-                        ))
-                    })?,
-                );
+            if slot.is_none() {
+                *slot = Some(TcpStream::connect(endpoint).map_err(|e| {
+                    FloeError::Channel(format!(
+                        "tcp reconnect to {endpoint}: {e}"
+                    ))
+                })?);
             }
-            let stream = guard.as_mut().expect("just set");
+            let stream = slot.as_mut().expect("just set");
             match stream.write_all(frames).and_then(|_| stream.flush()) {
                 Ok(()) => return Ok(()),
                 Err(e) if attempt == 0 => {
                     crate::log_debug!("tcp send failed ({e}), reconnecting");
-                    *guard = None;
+                    *slot = None;
                 }
                 Err(e) => {
                     return Err(FloeError::Channel(format!(
-                        "tcp send to {}: {e}",
-                        self.endpoint
+                        "tcp send to {endpoint}: {e}"
                     )))
                 }
             }
         }
         unreachable!()
     }
+
+    /// Frame `msgs` into the per-connection scratch buffer and write
+    /// them with one syscall.
+    fn send_all(&self, msgs: &[Message]) -> Result<()> {
+        let mut g = self.inner.lock().expect("tcp sender poisoned");
+        let SenderInner { stream, scratch } = &mut *g;
+        scratch.clear();
+        for msg in msgs {
+            Self::frame_into(&self.port_name, msg, scratch);
+        }
+        let result = Self::write_frames(&self.endpoint, stream, scratch);
+        if scratch.capacity() > SCRATCH_KEEP {
+            scratch.shrink_to(SCRATCH_KEEP);
+        }
+        result
+    }
 }
 
 impl Transport for TcpSender {
     fn send(&self, msg: Message) -> Result<()> {
-        let mut frame = Vec::with_capacity(64);
-        self.frame_into(&msg, &mut frame);
-        self.write_frames(&frame)
+        self.send_all(std::slice::from_ref(&msg))
     }
 
-    /// Frame the whole batch into one buffer and write it with a single
-    /// syscall.
+    /// Frame the whole batch into the reusable scratch buffer and write
+    /// it with a single syscall.
     fn send_batch(&self, msgs: Vec<Message>) -> Result<()> {
         if msgs.is_empty() {
             return Ok(());
         }
-        let mut frames = Vec::with_capacity(64 * msgs.len());
-        for msg in &msgs {
-            self.frame_into(msg, &mut frames);
-        }
-        self.write_frames(&frames)
+        self.send_all(&msgs)
     }
 
     fn describe(&self) -> String {

@@ -266,6 +266,7 @@ mod tests {
             queue_capacity: 64,
             batch_size: crate::flake::DEFAULT_BATCH_SIZE,
             input_shards: 2,
+            channel_backend: crate::channel::ChannelBackend::default(),
         }
     }
 

@@ -14,8 +14,8 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
-use crate::adaptation::{FlakeDirectory, Monitor, MonitoredEntry};
-use crate::channel::{InProcTransport, Transport};
+use crate::adaptation::{FlakeDirectory, Monitor, StrategyFactory};
+use crate::channel::{ChannelBackend, InProcTransport, Transport};
 use crate::error::{FloeError, Result};
 use crate::flake::{Flake, FlakeConfig};
 use crate::graph::DataflowGraph;
@@ -40,17 +40,19 @@ pub struct LaunchOptions {
     pub batch_size: usize,
     /// Producer shards per flake input port.
     pub input_shards: usize,
+    /// Which primitive backs each input-port shard (lock-free ring by
+    /// default; [`ChannelBackend::Mutex`] selects the reference queue).
+    pub channel_backend: ChannelBackend,
     /// Adaptation strategy factory per pellet id; None = no monitor.
     pub adaptation: Option<AdaptationSetup>,
 }
 
 /// Monitor configuration for a launch.
 pub struct AdaptationSetup {
-    /// Build a strategy for a pellet id.
-    pub make: Box<
-        dyn Fn(&str) -> Box<dyn crate::adaptation::AdaptationStrategy>
-            + Send,
-    >,
+    /// Build a strategy for a pellet id.  Also used to auto-watch
+    /// pellets added by later graph surgery (see
+    /// [`Monitor::start_auto`]).
+    pub make: StrategyFactory,
     /// Sampling interval.
     pub interval: Duration,
 }
@@ -62,6 +64,7 @@ impl Default for LaunchOptions {
             queue_capacity: 4096,
             batch_size: crate::flake::DEFAULT_BATCH_SIZE,
             input_shards: crate::channel::DEFAULT_SHARDS,
+            channel_backend: ChannelBackend::default(),
             adaptation: None,
         }
     }
@@ -75,6 +78,7 @@ pub struct FlakeTuning {
     pub queue_capacity: usize,
     pub batch_size: usize,
     pub input_shards: usize,
+    pub channel_backend: ChannelBackend,
 }
 
 impl FlakeTuning {
@@ -84,6 +88,7 @@ impl FlakeTuning {
             queue_capacity: options.queue_capacity,
             batch_size: options.batch_size.max(1),
             input_shards: options.input_shards.max(1),
+            channel_backend: options.channel_backend,
         }
     }
 
@@ -92,6 +97,7 @@ impl FlakeTuning {
         cfg.queue_capacity = self.queue_capacity;
         cfg.batch_size = self.batch_size;
         cfg.input_shards = self.input_shards;
+        cfg.channel_backend = self.channel_backend;
     }
 }
 
@@ -121,6 +127,15 @@ impl FlakeDirectory for RwLock<Topology> {
             Arc::clone(topo.flakes.get(pellet_id)?),
             Arc::clone(topo.containers.get(pellet_id)?),
         ))
+    }
+
+    fn pellet_ids(&self) -> Vec<String> {
+        self.read()
+            .expect("topology poisoned")
+            .flakes
+            .keys()
+            .cloned()
+            .collect()
     }
 }
 
@@ -379,6 +394,18 @@ impl RunningDataflow {
         Ok(stats)
     }
 
+    /// Release every container no flake lives in back to the cloud
+    /// (scale-in).  Serialized with surgeries via the recompose gate:
+    /// a concurrent relocation's freshly allocated — still empty —
+    /// container can never be swept out from under the engine between
+    /// placement and spawn.  Returns how many containers were
+    /// released.
+    pub fn release_idle_containers(&self) -> Result<usize> {
+        let _gate =
+            self.recompose_gate.lock().expect("recompose gate poisoned");
+        self.manager.release_idle()
+    }
+
     /// Every applied surgery with its measured downtime, oldest first.
     pub fn recompose_history(&self) -> Vec<RecomposeStats> {
         self.recompose_log
@@ -551,24 +578,17 @@ impl Coordinator {
         }
 
         let clock: Arc<dyn Clock> = Arc::new(WallClock::new());
-        let pellet_ids: Vec<String> = flakes.keys().cloned().collect();
         let topo =
             Arc::new(RwLock::new(Topology { graph, flakes, containers }));
 
         // 3. Optional adaptation monitor.  Entries are pellet *ids*
-        //    resolved through the shared topology on every tick, so
-        //    later graph surgery re-binds relocated flakes and drops
-        //    removed ones (see `FlakeDirectory`).
+        //    discovered from the shared topology on every tick, so
+        //    later graph surgery re-binds relocated flakes, drops
+        //    removed ones, and auto-watches newly added pellets (see
+        //    `FlakeDirectory` / `Monitor::start_auto`).
         let monitor = options.adaptation.map(|setup| {
-            let entries = pellet_ids
-                .iter()
-                .map(|id| MonitoredEntry {
-                    pellet_id: id.clone(),
-                    strategy: (setup.make)(id),
-                })
-                .collect();
-            Monitor::start(
-                entries,
+            Monitor::start_auto(
+                setup.make,
                 Arc::clone(&topo) as Arc<dyn FlakeDirectory>,
                 Arc::clone(&clock),
                 setup.interval,

@@ -244,6 +244,7 @@ mod tests {
             queue_capacity: 256,
             batch_size: crate::flake::DEFAULT_BATCH_SIZE,
             input_shards: 2,
+            channel_backend: crate::channel::ChannelBackend::default(),
         };
         Flake::start(
             cfg,

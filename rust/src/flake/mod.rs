@@ -28,7 +28,9 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::channel::{ShardedQueue, SyncQueue, TcpReceiver, Transport};
+use crate::channel::{
+    ChannelBackend, ShardedQueue, SyncQueue, TcpReceiver, Transport,
+};
 use crate::error::{FloeError, Result};
 use crate::graph::{
     InPortSpec, MergeMode, OutPortSpec, PelletSpec, TriggerMode, WindowSpec,
@@ -67,6 +69,9 @@ pub struct FlakeConfig {
     /// Producer shards per input port (see
     /// [`crate::channel::ShardedQueue`]).
     pub input_shards: usize,
+    /// Which primitive backs each input-port shard: the lock-free ring
+    /// (default) or the mutex reference queue.
+    pub channel_backend: ChannelBackend,
 }
 
 impl FlakeConfig {
@@ -85,6 +90,7 @@ impl FlakeConfig {
             queue_capacity: 4096,
             batch_size: DEFAULT_BATCH_SIZE,
             input_shards: crate::channel::DEFAULT_SHARDS,
+            channel_backend: ChannelBackend::default(),
         }
     }
 
@@ -223,7 +229,11 @@ impl Flake {
         for p in &cfg.inputs {
             ports.insert(
                 p.name.clone(),
-                Arc::new(ShardedQueue::new(shards, cfg.queue_capacity)),
+                Arc::new(ShardedQueue::with_backend(
+                    shards,
+                    cfg.queue_capacity,
+                    cfg.channel_backend,
+                )),
             );
             port_order.push(p.name.clone());
         }
@@ -700,6 +710,9 @@ fn dispatcher_loop(shared: &Shared) {
     };
     let batch_size = shared.cfg.batch_size.max(1);
     let mut batch: Vec<Message> = Vec::new();
+    // One pop buffer for the whole dispatcher lifetime: every batched
+    // pop drains into this instead of allocating a Vec per batch.
+    let mut pop_buf: Vec<Message> = Vec::with_capacity(batch_size);
     let mut idle_polls = 0u32;
     while !shared.stop.load(Ordering::SeqCst) {
         if shared.paused.load(Ordering::SeqCst) {
@@ -712,20 +725,21 @@ fn dispatcher_loop(shared: &Shared) {
         match single_window {
             Some(WindowSpec::None) => {
                 // Batched fast path: drain up to batch_size messages
-                // under one set of locks, wrap them, and hand them to the
-                // workers in one ready-queue push.
+                // per atomic claim (or lock round-trip on the mutex
+                // backend) into the reused pop buffer, wrap them, and
+                // hand them to the workers in one ready-queue push.
                 let port = &shared.port_order[0];
-                match shared.ports[port].pop_batch_timeout(
+                pop_buf.clear();
+                match shared.ports[port].pop_batch_timeout_into(
+                    &mut pop_buf,
                     batch_size,
                     Duration::from_millis(10),
                 ) {
-                    Ok(msgs) => {
-                        if msgs.is_empty() {
-                            continue; // timeout
-                        }
-                        shared.probes.record_arrival(msgs.len() as u64);
-                        let items: Vec<PortIo> = msgs
-                            .into_iter()
+                    Ok(0) => continue, // timeout
+                    Ok(n) => {
+                        shared.probes.record_arrival(n as u64);
+                        let items: Vec<PortIo> = pop_buf
+                            .drain(..)
                             .map(|m| PortIo::Single(port.clone(), m))
                             .collect();
                         if shared.ready.push_batch(items).is_err() {
@@ -741,13 +755,16 @@ fn dispatcher_loop(shared: &Shared) {
                 // Take at most what completes the current window so
                 // landmark flushes stay aligned with window boundaries.
                 let want = n.saturating_sub(batch.len()).clamp(1, batch_size);
-                match shared.ports[port]
-                    .pop_batch_timeout(want, Duration::from_millis(10))
-                {
-                    Ok(msgs) if !msgs.is_empty() => {
+                pop_buf.clear();
+                match shared.ports[port].pop_batch_timeout_into(
+                    &mut pop_buf,
+                    want,
+                    Duration::from_millis(10),
+                ) {
+                    Ok(taken) if taken > 0 => {
                         idle_polls = 0;
-                        shared.probes.record_arrival(msgs.len() as u64);
-                        for msg in msgs {
+                        shared.probes.record_arrival(taken as u64);
+                        for msg in pop_buf.drain(..) {
                             let flush = msg.is_landmark();
                             batch.push(msg);
                             if batch.len() >= n || flush {
@@ -795,9 +812,12 @@ fn dispatcher_loop(shared: &Shared) {
         }
         let made_progress = match shared.cfg.merge {
             MergeMode::Synchronous => dispatch_synchronous(shared),
-            MergeMode::Interleaved => {
-                dispatch_interleaved(shared, &mut windows, &mut rr_port)
-            }
+            MergeMode::Interleaved => dispatch_interleaved(
+                shared,
+                &mut windows,
+                &mut rr_port,
+                &mut pop_buf,
+            ),
         };
         if !made_progress {
             thread::sleep(Duration::from_micros(200));
@@ -843,6 +863,7 @@ fn dispatch_interleaved(
     shared: &Shared,
     windows: &mut BTreeMap<String, (Vec<Message>, Instant)>,
     rr_port: &mut usize,
+    pop_buf: &mut Vec<Message>,
 ) -> bool {
     let nports = shared.port_order.len();
     if nports == 0 {
@@ -853,11 +874,13 @@ fn dispatch_interleaved(
     for k in 0..nports {
         let pi = (*rr_port + k) % nports;
         let port = &shared.port_order[pi];
-        let msgs = shared.ports[port].try_pop_batch(batch_size);
-        if msgs.is_empty() {
+        pop_buf.clear();
+        let taken =
+            shared.ports[port].try_pop_batch_into(pop_buf, batch_size);
+        if taken == 0 {
             continue;
         }
-        shared.probes.record_arrival(msgs.len() as u64);
+        shared.probes.record_arrival(taken as u64);
         progressed = true;
         let spec = shared
             .cfg
@@ -867,8 +890,8 @@ fn dispatch_interleaved(
             .expect("port spec");
         match spec.window {
             WindowSpec::None => {
-                let items: Vec<PortIo> = msgs
-                    .into_iter()
+                let items: Vec<PortIo> = pop_buf
+                    .drain(..)
                     .map(|m| PortIo::Single(port.clone(), m))
                     .collect();
                 if shared.ready.push_batch(items).is_err() {
@@ -879,7 +902,7 @@ fn dispatch_interleaved(
                 let entry = windows
                     .entry(port.clone())
                     .or_insert_with(|| (Vec::new(), Instant::now()));
-                for msg in msgs {
+                for msg in pop_buf.drain(..) {
                     // Landmarks flush the window early so reducers see
                     // them.
                     let is_landmark = msg.is_landmark();
@@ -896,7 +919,7 @@ fn dispatch_interleaved(
                 let entry = windows
                     .entry(port.clone())
                     .or_insert_with(|| (Vec::new(), Instant::now()));
-                for msg in msgs {
+                for msg in pop_buf.drain(..) {
                     if entry.0.is_empty() {
                         entry.1 = Instant::now();
                     }
@@ -1120,6 +1143,7 @@ mod tests {
             queue_capacity: 1024,
             batch_size: DEFAULT_BATCH_SIZE,
             input_shards: 2,
+            channel_backend: ChannelBackend::default(),
         }
     }
 

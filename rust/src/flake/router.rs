@@ -13,7 +13,7 @@ use std::sync::Arc;
 use crate::channel::Transport;
 use crate::error::{FloeError, Result};
 use crate::graph::SplitMode;
-use crate::message::{key_hash, Message};
+use crate::message::Message;
 
 struct PortRoutes {
     split: SplitMode,
@@ -141,22 +141,25 @@ impl OutputRouter {
         let mut per: Vec<Vec<Message>> = (0..nt).map(|_| Vec::new()).collect();
         for msg in msgs {
             if msg.is_landmark() || routes.split == SplitMode::Duplicate {
-                for batch in per.iter_mut() {
+                // Fan-out shares the Arc-backed envelope: each clone
+                // bumps payload/key refcounts (no byte copies), and the
+                // last target takes the original by move.
+                for batch in per.iter_mut().take(nt - 1) {
                     batch.push(msg.clone());
                 }
+                per[nt - 1].push(msg);
                 continue;
             }
             let i = match routes.split {
                 SplitMode::RoundRobin => {
                     routes.rr.fetch_add(1, Ordering::Relaxed) % nt
                 }
+                // The per-message hash is computed once and cached in
+                // the envelope, so repeated key-hash hops stop
+                // re-hashing the string (same key/text/"" derivation
+                // as always — see `Message::route_hash`).
                 SplitMode::KeyHash => {
-                    let key = msg
-                        .key
-                        .as_deref()
-                        .or_else(|| msg.as_text())
-                        .unwrap_or("");
-                    (key_hash(key) % nt as u64) as usize
+                    (msg.route_hash() % nt as u64) as usize
                 }
                 SplitMode::Duplicate => unreachable!("handled above"),
             };
@@ -283,7 +286,8 @@ mod tests {
         let (r, qs) = router_with(SplitMode::KeyHash, 4);
         for i in 0..100 {
             let key = format!("key-{}", i % 10);
-            r.route("out", Message::text("v").with_key(&key)).unwrap();
+            r.route("out", Message::text("v").with_key(key.as_str()))
+                .unwrap();
         }
         // Re-route the same keys: distribution must be identical, i.e. all
         // messages with one key land in one queue.

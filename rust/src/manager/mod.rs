@@ -358,6 +358,7 @@ mod tests {
             queue_capacity: 16,
             batch_size: crate::flake::DEFAULT_BATCH_SIZE,
             input_shards: 2,
+            channel_backend: crate::channel::ChannelBackend::default(),
         };
         c.spawn_flake(
             cfg,

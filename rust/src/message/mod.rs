@@ -54,11 +54,17 @@ pub enum Landmark {
 static SEQ: AtomicU64 = AtomicU64::new(1);
 
 /// A message envelope.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// The envelope itself is `Arc`-backed end to end: the payload variants
+/// share their bytes and the routing `key` is an `Arc<str>`, so the
+/// duplicate split and landmark broadcasts clone reference counts, not
+/// data.
+#[derive(Debug)]
 pub struct Message {
     pub payload: Payload,
     /// Routing key for the key-hash split (MapReduce shuffle).
-    pub key: Option<String>,
+    /// `Arc`-backed so fan-out clones share the allocation.
+    pub key: Option<Arc<str>>,
     /// Landmark marker, if this is a control message.
     pub landmark: Option<Landmark>,
     /// Creation timestamp, microseconds since process start (end-to-end
@@ -66,6 +72,33 @@ pub struct Message {
     pub created_us: u64,
     /// Process-wide sequence number (monotone, for ordering diagnostics).
     pub seq: u64,
+    /// Lazily cached FNV-1a hash of the routing key (0 = not yet
+    /// computed; see [`Message::route_hash`]).  Clones inherit the
+    /// cache; equality ignores it.
+    key_hash: AtomicU64,
+}
+
+impl Clone for Message {
+    fn clone(&self) -> Message {
+        Message {
+            payload: self.payload.clone(),
+            key: self.key.clone(),
+            landmark: self.landmark.clone(),
+            created_us: self.created_us,
+            seq: self.seq,
+            key_hash: AtomicU64::new(self.key_hash.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl PartialEq for Message {
+    fn eq(&self, other: &Message) -> bool {
+        self.payload == other.payload
+            && self.key == other.key
+            && self.landmark == other.landmark
+            && self.created_us == other.created_us
+            && self.seq == other.seq
+    }
 }
 
 fn now_us() -> u64 {
@@ -83,6 +116,7 @@ impl Message {
             landmark: None,
             created_us: now_us(),
             seq: SEQ.fetch_add(1, Ordering::Relaxed),
+            key_hash: AtomicU64::new(0),
         }
     }
 
@@ -121,9 +155,36 @@ impl Message {
     }
 
     /// Set the routing key (builder style).
-    pub fn with_key(mut self, key: impl Into<String>) -> Message {
+    pub fn with_key(mut self, key: impl Into<Arc<str>>) -> Message {
         self.key = Some(key.into());
+        self.key_hash.store(0, Ordering::Relaxed);
         self
+    }
+
+    /// The routing hash of this message: FNV-1a of the `key` (falling
+    /// back to the text payload, then to the empty string — the same
+    /// derivation the key-hash split has always used), computed once
+    /// and cached so repeated key-hash hops stop re-hashing the string.
+    ///
+    /// The cache assumes `key` is not mutated after the message starts
+    /// routing, which holds for every runtime path (messages are
+    /// logically immutable once emitted).
+    pub fn route_hash(&self) -> u64 {
+        let cached = self.key_hash.load(Ordering::Relaxed);
+        if cached != 0 {
+            return cached;
+        }
+        let h = match (&self.key, self.as_text()) {
+            (Some(k), _) => key_hash(k),
+            (None, Some(t)) => key_hash(t),
+            (None, None) => key_hash(""),
+        };
+        // 0 marks "unset"; FNV-1a yields 0 only with negligible
+        // probability, and remapping merely costs a redundant rehash
+        // elsewhere, never a routing divergence.
+        let h = if h == 0 { key_hash("\u{0}") } else { h };
+        self.key_hash.store(h, Ordering::Relaxed);
+        h
     }
 
     pub fn is_landmark(&self) -> bool {
@@ -166,14 +227,19 @@ impl Message {
 
     // --- wire format ------------------------------------------------------
 
-    /// Serialize to the TCP wire format.
+    /// Serialize to the TCP wire format into a fresh buffer.  Hot paths
+    /// should prefer [`Message::encode_into`] with a reused buffer.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(32);
         self.encode_into(&mut out);
         out
     }
 
-    fn encode_into(&self, out: &mut Vec<u8>) {
+    /// Serialize to the TCP wire format, appending to `out` — the
+    /// zero-alloc half of the wire API: framing layers (see
+    /// [`crate::channel::TcpSender`]) encode straight into a reusable
+    /// per-connection scratch buffer instead of allocating per message.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.seq.to_le_bytes());
         out.extend_from_slice(&self.created_us.to_le_bytes());
         match &self.key {
@@ -245,7 +311,7 @@ impl Message {
         let created_us = c.u64()?;
         let key = match c.u8()? {
             0 => None,
-            1 => Some(c.string()?),
+            1 => Some(Arc::<str>::from(c.string()?)),
             t => {
                 return Err(FloeError::Parse(format!(
                     "message: bad key tag {t}"
@@ -296,7 +362,14 @@ impl Message {
                 )))
             }
         };
-        Ok(Message { payload, key, landmark, created_us, seq })
+        Ok(Message {
+            payload,
+            key,
+            landmark,
+            created_us,
+            seq,
+            key_hash: AtomicU64::new(0),
+        })
     }
 }
 
@@ -439,6 +512,23 @@ mod tests {
         let mut badtag = enc;
         badtag[17] = 99; // landmark tag byte: seq(8)+ts(8)+keytag(1)
         assert!(Message::decode(&badtag).is_err());
+    }
+
+    #[test]
+    fn route_hash_matches_key_hash_and_caches() {
+        let m = Message::text("v").with_key("abc");
+        assert_eq!(m.route_hash(), key_hash("abc"));
+        assert_eq!(m.route_hash(), key_hash("abc")); // cached path
+        // Fallbacks: text payload, then the empty string.
+        assert_eq!(Message::text("t").route_hash(), key_hash("t"));
+        assert_eq!(Message::empty().route_hash(), key_hash(""));
+        // Clones share the key allocation and the cached hash.
+        let c = m.clone();
+        match (&m.key, &c.key) {
+            (Some(a), Some(b)) => assert!(Arc::ptr_eq(a, b)),
+            _ => panic!("expected keys"),
+        }
+        assert_eq!(c.route_hash(), key_hash("abc"));
     }
 
     #[test]

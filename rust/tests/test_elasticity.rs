@@ -12,13 +12,16 @@ use std::time::Duration;
 
 use floe::adaptation::{
     AdaptationSample, DynamicStrategy, ElasticAction, ElasticDecision,
-    ElasticityConfig, ElasticityPolicy,
+    ElasticityConfig, ElasticityPolicy, StaticLookAhead,
 };
 use floe::coordinator::{
     AdaptationSetup, Coordinator, LaunchOptions, RunningDataflow,
 };
-use floe::graph::{GraphBuilder, SplitMode};
-use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::graph::{
+    EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
+    SplitMode, WindowSpec,
+};
+use floe::manager::{CloudProvider, ResourceManager, SimulatedCloud};
 use floe::message::Message;
 use floe::pellet::builtins::CollectSink;
 use floe::pellet::PelletRegistry;
@@ -373,6 +376,151 @@ fn monitor_rebinds_to_relocated_flake() {
     // coverage, one continuous series under the same pellet id.
     assert!(history_count(&run, "slow") > samples_before);
     assert!(run.drain(Duration::from_secs(60)));
+    run.stop();
+}
+
+/// ROADMAP follow-up: a policy-initiated relocation that vacates a
+/// container must hand the VM back to the cloud
+/// (`ResourceManager::release_idle`), not leak it.  `hot` fills an
+/// 8-core VM alone; after the policy relocates it, the vacated VM is
+/// released, so the VM count returns to two (src+sink's and the
+/// replacement's).
+#[test]
+fn policy_relocation_releases_vacated_vm() {
+    let cloud = SimulatedCloud::new(512, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let mgr =
+        ResourceManager::new(Arc::clone(&cloud) as Arc<dyn CloudProvider>);
+    let coord = Coordinator::new(mgr, registry);
+    let mut g = GraphBuilder::new("release-idle");
+    g.pellet("src", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("hot", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .cores(8);
+    g.pellet("sink", "floe.builtin.CountSink").in_port("in").stateful();
+    g.edge("src", "out", "hot", "in");
+    g.edge("hot", "out", "sink", "in");
+    let run = Arc::new(
+        coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap(),
+    );
+    // hot (8 cores) fills one VM alone; src+sink share another.
+    assert_eq!(cloud.active_vms(), 2);
+    let home = run.container("hot").unwrap();
+    assert_eq!(home.flake_count(), 1, "hot is not alone on its VM");
+    let home_id = home.id.clone();
+    drop(home);
+
+    // An oracle strategy wanting more than any VM holds saturates the
+    // container immediately; the third sample relocates.
+    let mut policy = ElasticityPolicy::new(ElasticityConfig {
+        saturation_k: 3,
+        cooldown: 10,
+        max_cores: 16,
+    });
+    policy.watch("hot", Box::new(StaticLookAhead { cores: 16 }));
+    let mut relocated = false;
+    for t in 0..6 {
+        let decisions = policy.step_live(&run, t as f64);
+        if decisions
+            .iter()
+            .any(|d| matches!(d.action, ElasticAction::Relocate { .. }))
+        {
+            relocated = true;
+            break;
+        }
+    }
+    assert!(relocated, "policy never relocated: {:?}", policy.trace());
+    assert_ne!(run.container("hot").unwrap().id, home_id);
+    // The vacated VM went back to the cloud: src+sink's VM plus the
+    // replacement's — not three.
+    assert_eq!(cloud.active_vms(), 2, "vacated container leaked its VM");
+    assert_eq!(coord.manager().containers().len(), 2);
+    run.stop();
+}
+
+/// ROADMAP follow-up: pellets added by later graph surgery come under
+/// adaptive control automatically — the `Monitor` discovers new ids
+/// from the shared topology each tick instead of fixing the entry set
+/// at launch.
+#[test]
+fn monitor_auto_watches_pellet_added_by_surgery() {
+    let cloud = SimulatedCloud::new(512, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+    let mut g = GraphBuilder::new("auto-watch");
+    g.pellet("head", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("tail", "floe.builtin.CountSink").in_port("in").stateful();
+    g.edge("head", "out", "tail", "in");
+    let options = LaunchOptions {
+        adaptation: Some(AdaptationSetup {
+            make: Box::new(|_id| {
+                Box::new(DynamicStrategy {
+                    min_cores: 1,
+                    ..DynamicStrategy::default()
+                })
+            }),
+            interval: Duration::from_millis(5),
+        }),
+        ..LaunchOptions::default()
+    };
+    let run = Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
+
+    // Launch-set pellets are sampled...
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while history_count(&run, "head") == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "monitor never sampled a launch pellet"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(history_count(&run, "mid"), 0);
+
+    // ...then surgery splices in a new pellet, which the monitor must
+    // pick up without any re-registration.
+    let mut spec = PelletSpec::new("mid", "floe.builtin.Uppercase");
+    spec.inputs.push(InPortSpec {
+        name: "in".into(),
+        window: WindowSpec::None,
+    });
+    spec.outputs.push(OutPortSpec {
+        name: "out".into(),
+        split: SplitMode::RoundRobin,
+    });
+    let mut d = GraphDelta::against(&run.graph());
+    d.insert_on_edge(
+        EdgeSpec::new("head", "out", "tail", "in"),
+        spec,
+        "in",
+        "out",
+    );
+    run.recompose(&d).unwrap();
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while history_count(&run, "mid") == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "monitor never auto-watched the spliced-in pellet"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // And it keeps sampling: the entry is live, not a one-shot.
+    let first = history_count(&run, "mid");
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while history_count(&run, "mid") <= first {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "auto-watched entry stopped sampling"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
     run.stop();
 }
 

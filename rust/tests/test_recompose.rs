@@ -10,7 +10,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use floe::channel::TcpSender;
+use floe::channel::{ChannelBackend, TcpSender};
 use floe::coordinator::{Coordinator, LaunchOptions, RunningDataflow};
 use floe::error::{FloeError, Result};
 use floe::graph::{
@@ -267,6 +267,61 @@ fn relocate_flake_live_preserves_state_and_messages() {
         .and_then(|j| j.as_f64())
         .unwrap();
     assert_eq!(processed, total as f64, "lost messages across relocation");
+    run.stop();
+}
+
+/// The zero-loss/FIFO surgery contract is backend-independent: the
+/// whole suite runs on the default lock-free ring backend, and this
+/// test replays the insert-then-relocate scenario on the mutex
+/// reference backend behind the `ChannelBackend` knob.
+#[test]
+fn surgery_zero_loss_fifo_on_mutex_backend() {
+    let (coord, collected) = setup();
+    let mut g = GraphBuilder::new("mutex-backend");
+    g.pellet("head", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("tail", "test.Collect").in_port("in").sequential();
+    g.edge("head", "out", "tail", "in");
+    let options = LaunchOptions {
+        input_shards: 1,
+        channel_backend: ChannelBackend::Mutex,
+        ..LaunchOptions::default()
+    };
+    let run =
+        Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
+
+    let total = 2000;
+    let injector = inject_background(&run, "head", total);
+    std::thread::sleep(Duration::from_millis(5));
+
+    let mut d = GraphDelta::against(&run.graph());
+    d.insert_on_edge(
+        EdgeSpec::new("head", "out", "tail", "in"),
+        seq_spec("mid", "floe.builtin.Uppercase"),
+        "in",
+        "out",
+    );
+    run.recompose(&d).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let mut d = GraphDelta::against(&run.graph());
+    d.relocate_flake("tail");
+    let stats = run.recompose(&d).unwrap();
+    assert_eq!(stats.relocated, vec!["tail"]);
+
+    injector.join().unwrap();
+    assert!(run.drain(Duration::from_secs(20)));
+
+    let got = collected.lock().unwrap();
+    let texts: Vec<&str> = got
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .map(|m| m.as_text().unwrap())
+        .collect();
+    assert_eq!(texts.len(), total, "message loss on mutex backend");
+    assert_fifo(&texts);
+    drop(got);
     run.stop();
 }
 

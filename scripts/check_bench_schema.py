@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Fail if any committed BENCH_*.json is missing keys its bench writes.
+
+The tracked baseline files start life as `pending-first-run`
+placeholders (the authoring environment has no Rust toolchain); CI's
+bench-smoke job overwrites them with measured numbers on pushes to
+main.  When a bench grows a new section, the placeholder must grow the
+same keys in the same shape — otherwise the committed schema silently
+drifts from what the bench writes and downstream tooling (and the perf
+trajectory the files exist to record) reads stale structure.  This
+check pins the contract: every key path listed below must exist in the
+committed file (values may be null until the first CI run fills them).
+
+Run from the repo root: `python3 scripts/check_bench_schema.py`.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+# Key paths each bench writes (see the write_* helpers in
+# rust/benches/bench_channels.rs, bench_recompose.rs,
+# bench_elasticity.rs).  Dots separate nesting levels.
+REQUIRED = {
+    "BENCH_channels.json": [
+        "bench",
+        "config.producers",
+        "config.consumers",
+        "config.batch_size",
+        "config.payload_bytes",
+        "mpmc_msgs_per_sec.single",
+        "mpmc_msgs_per_sec.batched",
+        "mpmc_msgs_per_sec.speedup",
+        "ring_vs_mutex.consumers",
+        "ring_vs_mutex.batch_size",
+        "ring_vs_mutex.single.p1.mutex",
+        "ring_vs_mutex.single.p1.ring",
+        "ring_vs_mutex.single.p1.speedup",
+        "ring_vs_mutex.single.p4.mutex",
+        "ring_vs_mutex.single.p4.ring",
+        "ring_vs_mutex.single.p4.speedup",
+        "ring_vs_mutex.single.p8.mutex",
+        "ring_vs_mutex.single.p8.ring",
+        "ring_vs_mutex.single.p8.speedup",
+        "ring_vs_mutex.batched.p1.mutex",
+        "ring_vs_mutex.batched.p1.ring",
+        "ring_vs_mutex.batched.p1.speedup",
+        "ring_vs_mutex.batched.p4.mutex",
+        "ring_vs_mutex.batched.p4.ring",
+        "ring_vs_mutex.batched.p4.speedup",
+        "ring_vs_mutex.batched.p8.mutex",
+        "ring_vs_mutex.batched.p8.ring",
+        "ring_vs_mutex.batched.p8.speedup",
+        "tcp_msgs_per_sec.single",
+        "tcp_msgs_per_sec.batched",
+        "codec_msgs_per_sec.encode",
+        "codec_msgs_per_sec.decode",
+    ],
+    "BENCH_recompose.json": [
+        "bench",
+        "config.iterations_per_class",
+        "config.injectors",
+        "messages.injected",
+        "messages.delivered",
+        "messages.lost",
+        "downtime_ms.insert_on_edge",
+        "downtime_ms.remove_pellet",
+        "downtime_ms.relocate_flake",
+        "cutover_lock_ms",
+    ],
+    "BENCH_adaptation.json": [
+        "bench",
+        "config.rate_msgs_per_s",
+        "config.saturation_k",
+        "config.cooldown",
+        "config.max_cores",
+        "config.seed",
+        "relocations",
+        "time_to_react.samples",
+        "time_to_react.virtual_secs",
+        "scale_out_step_ms",
+        "downtime_ms",
+        "cutover_lock_ms",
+        "messages.injected",
+        "messages.delivered",
+        "messages.lost",
+    ],
+}
+
+
+def has_path(doc, path):
+    node = doc
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return False
+        node = node[part]
+    return True
+
+
+def main():
+    root = Path(__file__).resolve().parent.parent
+    failures = []
+    for name, paths in REQUIRED.items():
+        f = root / name
+        if not f.exists():
+            failures.append(f"{name}: file missing")
+            continue
+        try:
+            doc = json.loads(f.read_text())
+        except json.JSONDecodeError as e:
+            failures.append(f"{name}: invalid JSON ({e})")
+            continue
+        for path in paths:
+            if not has_path(doc, path):
+                failures.append(f"{name}: missing key '{path}'")
+    # Catch baselines that exist on disk but are untracked here: a new
+    # bench that writes BENCH_foo.json must register its schema above.
+    for f in sorted(root.glob("BENCH_*.json")):
+        if f.name not in REQUIRED:
+            failures.append(
+                f"{f.name}: no schema registered in "
+                "scripts/check_bench_schema.py"
+            )
+    if failures:
+        print("bench schema check FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        sys.exit(1)
+    print(
+        f"bench schema check OK ({len(REQUIRED)} files, "
+        f"{sum(len(v) for v in REQUIRED.values())} key paths)"
+    )
+
+
+if __name__ == "__main__":
+    main()
