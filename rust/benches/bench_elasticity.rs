@@ -11,6 +11,14 @@
 //! * **downtime per scale-out** — pause-to-resume and cut-over-lock
 //!   windows from `RecomposeStats`, per policy-initiated relocation.
 //!
+//! A `scale_in` section follows: the overload stops, trough
+//! observations drive the policy until it **consolidates** — packs the
+//! (now underused) hot flake back onto a peer container and releases
+//! the emptied VM — recording time-to-consolidate (control samples
+//! from the first trough observation to the pack, dominated by the
+//! scale-down glide plus the `consolidate_k` hysteresis) and the
+//! wall-clock cost of the consolidating step.
+//!
 //! Zero message loss across every scale-out is asserted at the end.
 //! Writes `BENCH_adaptation.json` at the repo root (same convention as
 //! `bench_channels` / `bench_recompose`).
@@ -24,8 +32,9 @@ use floe::adaptation::{
 };
 use floe::coordinator::{Coordinator, LaunchOptions};
 use floe::error::Result;
+use floe::flake::FlakeObservation;
 use floe::graph::{GraphBuilder, SplitMode};
-use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::manager::{CloudProvider, ResourceManager, SimulatedCloud};
 use floe::pellet::{Pellet, PelletContext, PelletRegistry, PortIo};
 use floe::sim::{
     register_driven, LockstepDriver, ModeledFlake, WorkloadProfile,
@@ -41,6 +50,10 @@ const RATE: f64 = 600.0;
 const SATURATION_K: usize = 3;
 const COOLDOWN: usize = 5;
 const MAX_CORES: usize = 24;
+const CONSOLIDATE_K: usize = 3;
+const UNDERUSED_CORES: usize = 2;
+/// Upper bound on trough steps before the policy must consolidate.
+const SCALE_IN_STEPS: usize = 60;
 
 /// Sink counting non-landmark deliveries.
 struct CountingSink {
@@ -119,7 +132,9 @@ fn main() {
     registry.register("bench.CountingSink", move || {
         Box::new(CountingSink { delivered: Arc::clone(&d2) })
     });
-    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+    let mgr =
+        ResourceManager::new(Arc::clone(&cloud) as Arc<dyn CloudProvider>);
+    let coord = Coordinator::new(mgr, registry);
 
     let mut g = GraphBuilder::new("bench-elasticity");
     g.pellet("src", "floe.sim.DrivenSource")
@@ -152,6 +167,8 @@ fn main() {
         saturation_k: SATURATION_K,
         cooldown: COOLDOWN,
         max_cores: MAX_CORES,
+        consolidate_k: CONSOLIDATE_K,
+        underused_cores: UNDERUSED_CORES,
     });
     policy.watch(
         "hot",
@@ -196,6 +213,48 @@ fn main() {
         downtime.push(s.downtime_ms);
         cutover.push(s.cutover_ms);
     }
+
+    // ------------------------------------------------------------------
+    // scale_in: the overload stops; trough observations glide the hot
+    // flake's allocation down until its container counts as underused,
+    // the policy packs it onto a peer, and the emptied VM is released.
+    // ------------------------------------------------------------------
+    let vms_before_scale_in = cloud.active_vms();
+    let mut t = driver.now();
+    let mut scale_in_step = Series::default();
+    let mut time_to_consolidate = 0usize;
+    for step in 0..SCALE_IN_STEPS {
+        t += 1.0;
+        let cores = run.flake("hot").unwrap().cores();
+        let obs = FlakeObservation {
+            queue_len: 0,
+            arrival_rate: 0.0,
+            completion_rate: 0.0,
+            service_latency: 0.1,
+            selectivity: 1.0,
+            cores,
+            instances: cores * 4,
+        };
+        let t0 = Instant::now();
+        let decisions = policy.step_with(&run, t, |_, _| obs);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if decisions.iter().any(|d| {
+            matches!(d.action, ElasticAction::Consolidate { .. })
+        }) {
+            scale_in_step.push(wall_ms);
+            time_to_consolidate = step + 1;
+            break;
+        }
+    }
+    let consolidations = policy.consolidations().len();
+    assert!(consolidations > 0, "policy never consolidated");
+    let released_vms =
+        vms_before_scale_in.saturating_sub(cloud.active_vms());
+    assert!(released_vms > 0, "consolidation released no VM");
+    let mut scale_in_downtime = Series::default();
+    for s in policy.consolidations() {
+        scale_in_downtime.push(s.downtime_ms);
+    }
     run.stop();
 
     println!(
@@ -210,6 +269,8 @@ fn main() {
         ("scale-out-step", &scale_out_wall),
         ("downtime", &downtime),
         ("cutover-lock", &cutover),
+        ("scale-in-step", &scale_in_step),
+        ("scale-in-downtime", &scale_in_downtime),
     ] {
         println!(
             "{:>20} {:>10.3} {:>10.3} {:>10.3}",
@@ -223,6 +284,11 @@ fn main() {
         "time-to-react: {SATURATION_K} samples ({:.1} simulated secs)",
         SATURATION_K as f64
     );
+    println!(
+        "time-to-consolidate: {time_to_consolidate} samples \
+         ({consolidations} consolidation(s), {released_vms} VM(s) \
+         released)"
+    );
 
     let json = format!(
         "{{\n  \"bench\": \"bench_elasticity\",\n  \"config\": {{\n    \
@@ -232,13 +298,21 @@ fn main() {
          \"relocations\": {relocations},\n  \"time_to_react\": {{\n    \
          \"samples\": {SATURATION_K},\n    \"virtual_secs\": {:.1}\n  \
          }},\n  \"scale_out_step_ms\": {},\n  \"downtime_ms\": {},\n  \
-         \"cutover_lock_ms\": {},\n  \"messages\": {{\n    \
+         \"cutover_lock_ms\": {},\n  \"scale_in\": {{\n    \
+         \"consolidate_k\": {CONSOLIDATE_K},\n    \
+         \"underused_cores\": {UNDERUSED_CORES},\n    \
+         \"time_to_consolidate_samples\": {time_to_consolidate},\n    \
+         \"consolidations\": {consolidations},\n    \
+         \"released_vms\": {released_vms},\n    \"step_ms\": {},\n    \
+         \"downtime_ms\": {}\n  }},\n  \"messages\": {{\n    \
          \"injected\": {injected},\n    \"delivered\": {got},\n    \
          \"lost\": {}\n  }}\n}}\n",
         SATURATION_K as f64,
         stats_json(&scale_out_wall),
         stats_json(&downtime),
         stats_json(&cutover),
+        stats_json(&scale_in_step),
+        stats_json(&scale_in_downtime),
         injected - got,
     );
     let root = std::env::var("CARGO_MANIFEST_DIR")

@@ -7,6 +7,12 @@
 //! number.  Zero message loss across every surgery is asserted at the
 //! end.
 //!
+//! A fourth section, `tcp_relocation`, feeds a flake over a loopback
+//! `TcpReceiver` through a **logical** `TcpSender`
+//! (`floe://gate/in`) and relocates it repeatedly: the recorded
+//! downtime includes the endpoint republish + live TCP rebind, and
+//! zero loss across every move is asserted.
+//!
 //! Writes `BENCH_recompose.json` at the repo root (same convention as
 //! `bench_channels`).
 
@@ -15,6 +21,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
+use floe::channel::{EndpointAddr, TcpSender};
 use floe::coordinator::{Coordinator, LaunchOptions};
 use floe::error::Result;
 use floe::graph::{
@@ -182,6 +189,76 @@ fn main() {
     assert_eq!(sent, got, "message loss across surgeries");
     run.stop();
 
+    // ------------------------------------------------------------------
+    // tcp_relocation: relocate a TCP-fed flake under a continuous
+    // remote (loopback) producer holding only the logical address.
+    // ------------------------------------------------------------------
+    let tcp_delivered = Arc::new(AtomicUsize::new(0));
+    let d3 = Arc::clone(&tcp_delivered);
+    coord.registry().register("bench.TcpCountingSink", move || {
+        Box::new(CountingSink { delivered: Arc::clone(&d3) })
+    });
+    let mut g = GraphBuilder::new("bench-tcp-reloc");
+    g.pellet("gate", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("tsink", "bench.TcpCountingSink").in_port("in");
+    g.edge("gate", "out", "tsink", "in");
+    let run2 = Arc::new(
+        coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap(),
+    );
+    run2.serve_tcp("gate", 0).expect("bind tcp ingress");
+    let tcp_stop = Arc::new(AtomicBool::new(false));
+    let tcp_sent = Arc::new(AtomicUsize::new(0));
+    let tcp_injector = {
+        let table = run2.endpoints();
+        let stop = Arc::clone(&tcp_stop);
+        let sent = Arc::clone(&tcp_sent);
+        thread::spawn(move || {
+            let tx = TcpSender::logical(
+                table,
+                &EndpointAddr::new("gate", "in"),
+            )
+            .expect("logical sender");
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                tx.send(Message::text(format!("t{i}"))).unwrap();
+                sent.fetch_add(1, Ordering::Relaxed);
+                i += 1;
+                if i % 64 == 0 {
+                    thread::sleep(Duration::from_micros(200));
+                }
+            }
+        })
+    };
+    let mut tcp_reloc = Series::default();
+    for _ in 0..ITERATIONS {
+        let mut d = GraphDelta::against(&run2.graph());
+        d.relocate_flake("gate");
+        let s = run2.recompose(&d).unwrap();
+        assert_eq!(s.rebound, vec!["gate".to_string()]);
+        tcp_reloc.push(s.downtime_ms);
+        cutover.push(s.cutover_ms);
+        thread::sleep(Duration::from_millis(5));
+    }
+    tcp_stop.store(true, Ordering::Relaxed);
+    tcp_injector.join().unwrap();
+    // TCP delivery is asynchronous: wait until everything sent landed.
+    let want = tcp_sent.load(Ordering::Relaxed);
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    while tcp_delivered.load(Ordering::Relaxed) < want {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "tcp message loss across relocations ({}/{want})",
+            tcp_delivered.load(Ordering::Relaxed)
+        );
+        thread::sleep(Duration::from_millis(5));
+    }
+    let tcp_got = tcp_delivered.load(Ordering::Relaxed);
+    run2.stop();
+
     println!(
         "# live graph surgery, {ITERATIONS} iterations per class, \
          {sent} messages in flight — downtime ms (pause -> resume)"
@@ -194,6 +271,7 @@ fn main() {
         ("insert-on-edge", &insert),
         ("remove-pellet", &remove),
         ("relocate-flake", &relocate),
+        ("tcp-relocation", &tcp_reloc),
         ("cut-over-lock", &cutover),
     ] {
         println!(
@@ -210,13 +288,17 @@ fn main() {
          \"iterations_per_class\": {ITERATIONS},\n    \"injectors\": 1\n  \
          }},\n  \"messages\": {{\n    \"injected\": {sent},\n    \
          \"delivered\": {got},\n    \"lost\": {}\n  }},\n  \
+         \"tcp_messages\": {{\n    \"injected\": {want},\n    \
+         \"delivered\": {tcp_got},\n    \"lost\": {}\n  }},\n  \
          \"downtime_ms\": {{\n    \"insert_on_edge\": {},\n    \
-         \"remove_pellet\": {},\n    \"relocate_flake\": {}\n  }},\n  \
-         \"cutover_lock_ms\": {}\n}}\n",
+         \"remove_pellet\": {},\n    \"relocate_flake\": {},\n    \
+         \"tcp_relocation\": {}\n  }},\n  \"cutover_lock_ms\": {}\n}}\n",
         sent - got,
+        want.saturating_sub(tcp_got),
         stats_json(&insert),
         stats_json(&remove),
         stats_json(&relocate),
+        stats_json(&tcp_reloc),
         stats_json(&cutover),
     );
     let root = std::env::var("CARGO_MANIFEST_DIR")

@@ -30,12 +30,28 @@
 //! erroring, and is recorded as [`ElasticAction::Degraded`] so the
 //! trace shows the unmet demand.
 //!
+//! 4. **Consolidate** (scale-*in*, the half of elasticity most systems
+//!    skip): a container whose flakes' total grant stays at or below
+//!    [`ElasticityConfig::underused_cores`] for
+//!    [`ElasticityConfig::consolidate_k`] consecutive samples — with
+//!    every hosted flake watched, unsaturated and outside its
+//!    post-move cooldown — has its flakes *packed* onto peer
+//!    containers through the same `RelocateFlake` → `recompose()`
+//!    path (legal for TCP-fed flakes too, thanks to the logical
+//!    endpoint layer), and the emptied VM is handed back to the cloud
+//!    via `release_idle`.  Hysteresis keeps scale-out and scale-in
+//!    from fluttering: every move (either direction) arms a
+//!    consolidation cooldown and a per-flake cooldown, and a pack is
+//!    attempted only when every victim flake provably fits on the
+//!    peers that already exist (consolidation never provisions).
+//!
 //! Every control step appends one [`ElasticDecision`] to the decision
 //! trace and one [`AdaptationSample`] to an [`AdaptationHistory`]; both
 //! are pure functions of the observation stream, so a seeded workload
 //! (see [`crate::sim::driver`]) makes the whole loop bit-reproducible
 //! under `cargo test`.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use super::{AdaptationHistory, AdaptationSample, AdaptationStrategy};
@@ -52,15 +68,29 @@ pub struct ElasticityConfig {
     pub saturation_k: usize,
     /// Control samples to hold off after a relocation, so the policy
     /// does not bounce a flake between containers while the replacement
-    /// warms up.
+    /// warms up.  Also arms the consolidation hysteresis after every
+    /// move in either direction.
     pub cooldown: usize,
     /// Hard per-flake core ceiling (clamps the strategy's want).
     pub max_cores: usize,
+    /// Consecutive samples a container must stay underused before its
+    /// flakes are packed onto peers (scale-in).  0 disables
+    /// consolidation.
+    pub consolidate_k: usize,
+    /// A container counts as underused when the cores granted to its
+    /// flakes total at most this many.
+    pub underused_cores: usize,
 }
 
 impl Default for ElasticityConfig {
     fn default() -> Self {
-        ElasticityConfig { saturation_k: 3, cooldown: 10, max_cores: 64 }
+        ElasticityConfig {
+            saturation_k: 3,
+            cooldown: 10,
+            max_cores: 64,
+            consolidate_k: 4,
+            underused_cores: 2,
+        }
     }
 }
 
@@ -77,6 +107,10 @@ pub enum ElasticAction {
     /// Relocation was due but could not be placed (no capacity); the
     /// policy fell back to the largest grant the container covers.
     Degraded { wanted: usize, granted: usize },
+    /// Scale-in: the flake was packed onto a peer container because
+    /// its host stayed underused for `consolidate_k` samples; the
+    /// emptied host's VM is released afterwards.
+    Consolidate { from: String, to: String },
 }
 
 /// One entry of the decision trace.
@@ -108,6 +142,12 @@ pub struct ElasticityPolicy {
     trace: Vec<ElasticDecision>,
     history: AdaptationHistory,
     relocation_stats: Vec<RecomposeStats>,
+    consolidation_stats: Vec<RecomposeStats>,
+    /// Consecutive underused samples per container id.
+    container_streaks: BTreeMap<String, usize>,
+    /// Hysteresis: samples to hold off before the next consolidation
+    /// pass (armed by every move in either direction).
+    consolidate_cooldown: usize,
 }
 
 impl ElasticityPolicy {
@@ -118,6 +158,9 @@ impl ElasticityPolicy {
             trace: Vec::new(),
             history: AdaptationHistory::new(),
             relocation_stats: Vec::new(),
+            consolidation_stats: Vec::new(),
+            container_streaks: BTreeMap::new(),
+            consolidate_cooldown: 0,
         }
     }
 
@@ -150,6 +193,12 @@ impl ElasticityPolicy {
     /// (downtime per scale-out).
     pub fn relocations(&self) -> &[RecomposeStats] {
         &self.relocation_stats
+    }
+
+    /// Engine stats of every scale-in packing move this policy
+    /// initiated (downtime per consolidation).
+    pub fn consolidations(&self) -> &[RecomposeStats] {
+        &self.consolidation_stats
     }
 
     /// One live control step: observe every watched flake through its
@@ -197,6 +246,9 @@ impl ElasticityPolicy {
             let decision = ElasticDecision { t, pellet_id: id, action };
             self.trace.push(decision.clone());
             out.push(decision);
+        }
+        if self.cfg.consolidate_k > 0 {
+            self.consolidate(run, t, &mut out);
         }
         out
     }
@@ -324,6 +376,12 @@ impl ElasticityPolicy {
                                  relocating {pellet_id}: {e}"
                             ),
                         }
+                        // Anti-flutter: a scale-out move re-arms the
+                        // scale-in hysteresis and invalidates every
+                        // container's underuse streak (the placement
+                        // just changed under them).
+                        self.container_streaks.clear();
+                        self.consolidate_cooldown = self.cfg.cooldown;
                         ElasticAction::Relocate { wanted }
                     }
                     Err(e) => {
@@ -346,6 +404,151 @@ impl ElasticityPolicy {
                 }
             }
         }
+    }
+
+    /// The scale-in pass (module docs, rung 4): detect containers
+    /// that stayed underused for `consolidate_k` consecutive samples,
+    /// pack their flakes onto existing peers via `RelocateFlake`
+    /// deltas — legal for TCP-fed flakes too, since endpoints are
+    /// logical — and release the emptied VMs.  Consolidation never
+    /// provisions: a pack is attempted only when every victim flake
+    /// provably fits on the peers that already exist.
+    fn consolidate(
+        &mut self,
+        run: &RunningDataflow,
+        t: f64,
+        out: &mut Vec<ElasticDecision>,
+    ) {
+        if self.consolidate_cooldown > 0 {
+            self.consolidate_cooldown -= 1;
+            return;
+        }
+        let containers = run.manager.containers();
+        let mut ripe: Vec<Arc<Container>> = Vec::new();
+        for c in &containers {
+            let ids = c.flake_ids();
+            let used = c.total_cores().saturating_sub(c.free_cores());
+            // Underused and safe to drain: every hosted flake is under
+            // elastic control, unsaturated, and settled after any
+            // earlier move.  Containers hosting unwatched pellets
+            // (sources, sinks) are never drained out from under them.
+            let eligible = !ids.is_empty()
+                && used <= self.cfg.underused_cores
+                && ids.iter().all(|id| {
+                    self.watched.iter().any(|w| {
+                        w.pellet_id == *id
+                            && w.saturated_streak == 0
+                            && w.cooldown_left == 0
+                    })
+                });
+            let streak =
+                self.container_streaks.entry(c.id.clone()).or_insert(0);
+            if eligible {
+                *streak += 1;
+                if *streak >= self.cfg.consolidate_k {
+                    ripe.push(Arc::clone(c));
+                }
+            } else {
+                *streak = 0;
+            }
+        }
+        if containers.len() < 2 {
+            return;
+        }
+        // Deterministic victim: the least-used ripe container (id as
+        // tie-break).
+        let Some(victim) = ripe.into_iter().min_by_key(|c| {
+            (c.total_cores() - c.free_cores(), c.id.clone())
+        }) else {
+            return;
+        };
+        // Feasibility: every victim flake must fit on an existing
+        // peer (largest first, greedy) — otherwise packing would
+        // provision a fresh VM and turn scale-in into scale-out.
+        let mut peer_free: Vec<usize> = containers
+            .iter()
+            .filter(|c| c.id != victim.id)
+            .map(|c| c.free_cores())
+            .collect();
+        let mut moves: Vec<(String, usize)> = victim
+            .flake_ids()
+            .into_iter()
+            .filter_map(|id| {
+                victim.flake(&id).map(|f| (id, f.cores()))
+            })
+            .collect();
+        moves.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for (_, cores) in &moves {
+            match peer_free
+                .iter_mut()
+                .filter(|free| **free >= *cores)
+                .min()
+            {
+                Some(slot) => *slot -= cores,
+                None => return, // not packable today; streak persists
+            }
+        }
+        // Pack.  The engine's best-fit `allocate_avoiding` places each
+        // flake on the fullest peer with room, skipping the victim.
+        for (id, _) in moves {
+            let mut delta = GraphDelta::against(&run.graph());
+            delta.relocate_flake(&id);
+            match run.recompose(&delta) {
+                Ok(stats) => {
+                    let to = run
+                        .container(&id)
+                        .map(|c| c.id.clone())
+                        .unwrap_or_default();
+                    crate::log_info!(
+                        "elastic: consolidated {id}: {} -> {to} \
+                         (downtime {:.2} ms)",
+                        victim.id,
+                        stats.downtime_ms
+                    );
+                    self.consolidation_stats.push(stats);
+                    if let Some(w) = self
+                        .watched
+                        .iter_mut()
+                        .find(|w| w.pellet_id == id)
+                    {
+                        w.cooldown_left = self.cfg.cooldown;
+                    }
+                    let decision = ElasticDecision {
+                        t,
+                        pellet_id: id,
+                        action: ElasticAction::Consolidate {
+                            from: victim.id.clone(),
+                            to,
+                        },
+                    };
+                    self.trace.push(decision.clone());
+                    out.push(decision);
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "elastic: consolidation of {id} off {} \
+                         failed: {e}",
+                        victim.id
+                    );
+                    break;
+                }
+            }
+        }
+        // Hand the emptied VM(s) back and arm the hysteresis window.
+        match run.release_idle_containers() {
+            Ok(0) => {}
+            Ok(n) => crate::log_info!(
+                "elastic: released {n} idle container(s) after \
+                 consolidating {}",
+                victim.id
+            ),
+            Err(e) => crate::log_warn!(
+                "elastic: release_idle after consolidating {}: {e}",
+                victim.id
+            ),
+        }
+        self.container_streaks.clear();
+        self.consolidate_cooldown = self.cfg.cooldown;
     }
 
     fn strategy_name(&self, pellet_id: &str) -> &'static str {
@@ -380,6 +583,8 @@ mod tests {
             saturation_k: k,
             cooldown,
             max_cores: 16,
+            consolidate_k: 0,
+            underused_cores: 2,
         });
         // Oracle strategy that always wants 10 cores.
         p.watch("hot", Box::new(StaticLookAhead { cores: 10 }));

@@ -29,6 +29,11 @@
 //! every tick, so graph surgery re-binds relocated flakes (and drops
 //! removed ones) instead of sampling a dead handle — which keeps the
 //! [`AdaptationHistory`] continuous across relocations.
+//!
+//! The policy also closes the scale-*in* half of the loop: containers
+//! that stay underused get their flakes packed onto peers and their
+//! VMs released (see the consolidation rung in [`elastic`]'s module
+//! docs), with hysteresis so scale-out and scale-in never flutter.
 
 pub mod elastic;
 

@@ -1,0 +1,429 @@
+//! Logical endpoint addressing: the location-transparency layer of the
+//! data plane.
+//!
+//! Every flake input port has a stable **logical address**
+//! `floe://<flake-id>/<port>` ([`EndpointAddr`]).  Senders never hold a
+//! socket or queue handle directly; they hold the logical address plus
+//! an [`EndpointTable`] and resolve logical → physical on demand.  The
+//! table is **versioned**: every publication bumps a global version
+//! counter, and resolvers cache their last resolution keyed by that
+//! version, so the steady-state cost of location transparency is one
+//! atomic load per send.
+//!
+//! This is what makes flakes relocatable regardless of ingress
+//! transport: a relocation republishes the moved flake's endpoints at
+//! the new container (same logical address, new physical queues / TCP
+//! endpoint), the version bumps, and every sender — in-process
+//! [`EndpointTransport`]s, remote [`crate::channel::TcpSender`]s in
+//! logical mode, and the table-resolving delivery path of
+//! [`crate::channel::TcpReceiver`] — re-resolves and carries on.  No
+//! sender ever needs to be told where a flake went.
+//!
+//! Publication is token-guarded: [`EndpointTable::publish`] returns a
+//! token, and [`EndpointTable::unpublish_if`] removes the entry only
+//! when the token still matches.  A relocation replaces the entry (new
+//! token), so the displaced husk's shutdown cannot tear down the
+//! replacement's publication.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::channel::{ShardedQueue, Transport};
+use crate::error::{FloeError, Result};
+use crate::message::Message;
+
+/// URI scheme of logical endpoint addresses.
+pub const ENDPOINT_SCHEME: &str = "floe://";
+
+/// Logical address of one flake input port: `floe://<flake-id>/<port>`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct EndpointAddr {
+    pub flake_id: String,
+    pub port: String,
+}
+
+impl EndpointAddr {
+    pub fn new(
+        flake_id: impl Into<String>,
+        port: impl Into<String>,
+    ) -> EndpointAddr {
+        EndpointAddr { flake_id: flake_id.into(), port: port.into() }
+    }
+
+    /// Parse a `floe://<flake-id>/<port>` URI.
+    pub fn parse(uri: &str) -> Result<EndpointAddr> {
+        let rest = uri.strip_prefix(ENDPOINT_SCHEME).ok_or_else(|| {
+            FloeError::Parse(format!(
+                "endpoint: '{uri}' does not start with {ENDPOINT_SCHEME}"
+            ))
+        })?;
+        let (flake_id, port) = rest.split_once('/').ok_or_else(|| {
+            FloeError::Parse(format!(
+                "endpoint: '{uri}' is missing the /<port> part"
+            ))
+        })?;
+        if flake_id.is_empty() || port.is_empty() || port.contains('/') {
+            return Err(FloeError::Parse(format!(
+                "endpoint: malformed address '{uri}'"
+            )));
+        }
+        Ok(EndpointAddr::new(flake_id, port))
+    }
+}
+
+impl fmt::Display for EndpointAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{ENDPOINT_SCHEME}{}/{}", self.flake_id, self.port)
+    }
+}
+
+/// Physical resolution of one flake: its input-port queues and, when a
+/// TCP receiver serves it, the `host:port` remote ingress endpoint.
+struct FlakeEndpoints {
+    token: u64,
+    ports: HashMap<String, Arc<ShardedQueue<Message>>>,
+    tcp: Option<String>,
+}
+
+/// The versioned logical → physical routing table (see module docs).
+///
+/// One authoritative table per running dataflow, owned by the
+/// coordinator's `Topology` and shared (`Arc`) with every transport
+/// that resolves through it.
+pub struct EndpointTable {
+    version: AtomicU64,
+    tokens: AtomicU64,
+    entries: RwLock<HashMap<String, FlakeEndpoints>>,
+}
+
+impl EndpointTable {
+    pub fn new() -> Arc<EndpointTable> {
+        Arc::new(EndpointTable {
+            version: AtomicU64::new(1),
+            tokens: AtomicU64::new(0),
+            entries: RwLock::new(HashMap::new()),
+        })
+    }
+
+    /// Current table version.  Bumped by every publication change;
+    /// resolvers cache per version.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    fn bump(&self) -> u64 {
+        self.version.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Publish (or replace) a flake's endpoints.  Returns the
+    /// publication token for [`EndpointTable::unpublish_if`].
+    ///
+    /// The entry is committed *before* the version bump (like every
+    /// mutation here): a resolver that reads the bumped version is
+    /// guaranteed to resolve the new entry, so it can never cache a
+    /// stale resolution under the new version and miss the rebind.
+    pub fn publish(
+        &self,
+        flake_id: &str,
+        ports: HashMap<String, Arc<ShardedQueue<Message>>>,
+        tcp: Option<String>,
+    ) -> u64 {
+        let token = self.tokens.fetch_add(1, Ordering::AcqRel) + 1;
+        self.entries
+            .write()
+            .expect("endpoint table poisoned")
+            .insert(
+                flake_id.to_string(),
+                FlakeEndpoints { token, ports, tcp },
+            );
+        self.bump();
+        token
+    }
+
+    /// Record the TCP ingress endpoint of an already-published flake.
+    /// Guarded by the publication token so a displaced incarnation
+    /// cannot overwrite its replacement's endpoint.
+    pub fn set_tcp(
+        &self,
+        flake_id: &str,
+        token: u64,
+        endpoint: &str,
+    ) -> Result<()> {
+        let mut entries =
+            self.entries.write().expect("endpoint table poisoned");
+        let e = entries.get_mut(flake_id).ok_or_else(|| {
+            FloeError::Channel(format!(
+                "endpoint: '{flake_id}' is not published"
+            ))
+        })?;
+        if e.token != token {
+            return Err(FloeError::Channel(format!(
+                "endpoint: stale publication token for '{flake_id}'"
+            )));
+        }
+        e.tcp = Some(endpoint.to_string());
+        drop(entries);
+        self.bump();
+        Ok(())
+    }
+
+    /// Remove a flake's entry *iff* `token` still matches the current
+    /// publication (see module docs).  Returns whether it was removed.
+    pub fn unpublish_if(&self, flake_id: &str, token: u64) -> bool {
+        let mut entries =
+            self.entries.write().expect("endpoint table poisoned");
+        let matches = entries
+            .get(flake_id)
+            .map(|e| e.token == token)
+            .unwrap_or(false);
+        if matches {
+            entries.remove(flake_id);
+            drop(entries);
+            self.bump();
+        }
+        matches
+    }
+
+    /// Resolve a logical port address to its current physical queue.
+    pub fn resolve_queue(
+        &self,
+        flake_id: &str,
+        port: &str,
+    ) -> Option<Arc<ShardedQueue<Message>>> {
+        self.entries
+            .read()
+            .expect("endpoint table poisoned")
+            .get(flake_id)?
+            .ports
+            .get(port)
+            .cloned()
+    }
+
+    /// Resolve a flake's current TCP ingress endpoint (`host:port`).
+    pub fn resolve_tcp(&self, flake_id: &str) -> Option<String> {
+        self.entries
+            .read()
+            .expect("endpoint table poisoned")
+            .get(flake_id)?
+            .tcp
+            .clone()
+    }
+
+    /// Whether a flake is currently published at all — lets delivery
+    /// paths distinguish an unknown *port* on a live flake (permanent:
+    /// drop) from a flake that is gone (shutdown in progress).
+    pub fn has_flake(&self, flake_id: &str) -> bool {
+        self.entries
+            .read()
+            .expect("endpoint table poisoned")
+            .contains_key(flake_id)
+    }
+
+    /// Number of published flakes.
+    pub fn published(&self) -> usize {
+        self.entries.read().expect("endpoint table poisoned").len()
+    }
+
+    /// Every published logical address, sorted (stats / diagnostics).
+    pub fn addresses(&self) -> Vec<String> {
+        let entries =
+            self.entries.read().expect("endpoint table poisoned");
+        let mut out: Vec<String> = entries
+            .iter()
+            .flat_map(|(id, e)| {
+                e.ports
+                    .keys()
+                    .map(|p| EndpointAddr::new(id, p).to_string())
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+struct CachedSink {
+    version: u64,
+    queue: Option<Arc<ShardedQueue<Message>>>,
+}
+
+/// In-process transport addressed **logically**: resolves
+/// `floe://<flake-id>/<port>` through the [`EndpointTable`] on every
+/// version bump and pushes into whatever queue the table names today.
+/// This is the standard edge transport wired by the coordinator and
+/// the recomposition engine; after a relocation republishes the sink,
+/// the next send lands in the replacement without rewiring.
+///
+/// Failure semantics match the physical `InProcTransport`: a closed
+/// sink queue surfaces as a channel error (the recompose engine pauses
+/// and rewires the upstream frontier before a sink's queues close, so
+/// a live edge never races that window).
+pub struct EndpointTransport {
+    table: Arc<EndpointTable>,
+    addr: EndpointAddr,
+    label: String,
+    cached: Mutex<CachedSink>,
+}
+
+impl EndpointTransport {
+    pub fn new(
+        table: Arc<EndpointTable>,
+        addr: EndpointAddr,
+        label: impl Into<String>,
+    ) -> EndpointTransport {
+        EndpointTransport {
+            table,
+            addr,
+            label: label.into(),
+            cached: Mutex::new(CachedSink { version: 0, queue: None }),
+        }
+    }
+
+    /// The sink queue at the current table version (cached per
+    /// version: steady state is one atomic load + one mutex lock).
+    fn sink(&self) -> Result<Arc<ShardedQueue<Message>>> {
+        let version = self.table.version();
+        let mut cached =
+            self.cached.lock().expect("endpoint cache poisoned");
+        if cached.version != version || cached.queue.is_none() {
+            cached.queue = self
+                .table
+                .resolve_queue(&self.addr.flake_id, &self.addr.port);
+            cached.version = version;
+        }
+        cached.queue.clone().ok_or_else(|| {
+            FloeError::Channel(format!(
+                "{}: endpoint {} is not published",
+                self.label, self.addr
+            ))
+        })
+    }
+}
+
+impl Transport for EndpointTransport {
+    fn send(&self, msg: Message) -> Result<()> {
+        self.sink()?.push(msg).map_err(|_| {
+            FloeError::Channel(format!("{} closed", self.label))
+        })
+    }
+
+    fn send_batch(&self, msgs: Vec<Message>) -> Result<()> {
+        self.sink()?.push_batch(msgs).map_err(|_| {
+            FloeError::Channel(format!("{} closed", self.label))
+        })
+    }
+
+    fn try_send(&self, msg: Message) -> Result<bool> {
+        let q = self.sink()?;
+        match q.try_push(msg) {
+            Ok(()) => Ok(true),
+            Err(_) if q.is_closed() => Err(FloeError::Channel(format!(
+                "{} closed",
+                self.label
+            ))),
+            Err(_) => Ok(false),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("endpoint:{} ({})", self.addr, self.label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn queue() -> Arc<ShardedQueue<Message>> {
+        Arc::new(ShardedQueue::with_default_shards(64))
+    }
+
+    fn ports(
+        q: &Arc<ShardedQueue<Message>>,
+    ) -> HashMap<String, Arc<ShardedQueue<Message>>> {
+        let mut m = HashMap::new();
+        m.insert("in".to_string(), Arc::clone(q));
+        m
+    }
+
+    #[test]
+    fn addr_roundtrip_and_rejects_malformed() {
+        let a = EndpointAddr::new("cnt", "in");
+        assert_eq!(a.to_string(), "floe://cnt/in");
+        assert_eq!(EndpointAddr::parse("floe://cnt/in").unwrap(), a);
+        for bad in [
+            "cnt/in",
+            "floe://cnt",
+            "floe:///in",
+            "floe://cnt/",
+            "floe://a/b/c",
+        ] {
+            assert!(EndpointAddr::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn publish_resolve_unpublish_bump_versions() {
+        let t = EndpointTable::new();
+        let v0 = t.version();
+        let q = queue();
+        let token = t.publish("a", ports(&q), None);
+        assert!(t.version() > v0);
+        assert!(Arc::ptr_eq(&t.resolve_queue("a", "in").unwrap(), &q));
+        assert!(t.resolve_queue("a", "out").is_none());
+        assert!(t.resolve_queue("b", "in").is_none());
+        assert_eq!(t.resolve_tcp("a"), None);
+        t.set_tcp("a", token, "127.0.0.1:9").unwrap();
+        assert_eq!(t.resolve_tcp("a").as_deref(), Some("127.0.0.1:9"));
+        assert_eq!(t.addresses(), vec!["floe://a/in".to_string()]);
+        assert!(t.unpublish_if("a", token));
+        assert!(t.resolve_queue("a", "in").is_none());
+        assert_eq!(t.published(), 0);
+    }
+
+    #[test]
+    fn stale_token_cannot_unpublish_or_set_tcp() {
+        let t = EndpointTable::new();
+        let q1 = queue();
+        let old = t.publish("a", ports(&q1), None);
+        let q2 = queue();
+        let _new = t.publish("a", ports(&q2), None); // relocation
+        assert!(!t.unpublish_if("a", old), "stale token removed entry");
+        assert!(t.set_tcp("a", old, "127.0.0.1:9").is_err());
+        assert!(Arc::ptr_eq(&t.resolve_queue("a", "in").unwrap(), &q2));
+    }
+
+    #[test]
+    fn transport_follows_republication() {
+        let t = EndpointTable::new();
+        let q1 = queue();
+        t.publish("a", ports(&q1), None);
+        let tx = EndpointTransport::new(
+            Arc::clone(&t),
+            EndpointAddr::new("a", "in"),
+            "edge",
+        );
+        tx.send(Message::text("one")).unwrap();
+        assert_eq!(q1.pop().unwrap().as_text(), Some("one"));
+        // Relocate: republish the same logical address at a new queue.
+        let q2 = queue();
+        t.publish("a", ports(&q2), None);
+        tx.send_batch(vec![Message::text("two")]).unwrap();
+        assert!(q1.is_empty(), "stale queue hit after republication");
+        assert_eq!(q2.pop().unwrap().as_text(), Some("two"));
+    }
+
+    #[test]
+    fn transport_errors_on_unpublished_endpoint() {
+        let t = EndpointTable::new();
+        let tx = EndpointTransport::new(
+            Arc::clone(&t),
+            EndpointAddr::new("ghost", "in"),
+            "edge",
+        );
+        assert!(tx.send(Message::text("x")).is_err());
+        assert!(tx.try_send(Message::text("x")).is_err());
+    }
+}

@@ -39,12 +39,29 @@
 //! [`crate::flake::DEFAULT_BATCH_SIZE`]); batch size, shard count and
 //! the channel backend are all surfaced through
 //! `LaunchOptions`/`FlakeConfig`.
+//!
+//! # Location transparency
+//!
+//! On top of the physical transports sits the **logical endpoint
+//! layer** ([`EndpointAddr`], [`EndpointTable`],
+//! [`EndpointTransport`]): every flake input port has a stable
+//! `floe://<flake-id>/<port>` address, and senders resolve logical →
+//! physical through a versioned routing table instead of holding
+//! queues or sockets directly.  A flake relocation republishes the
+//! moved flake's endpoints (version bump) and every sender — local
+//! edge transports, logical [`TcpSender`]s, and the table-resolving
+//! [`TcpReceiver`] delivery path — re-resolves and carries on.  See
+//! `endpoint.rs` for the design notes.
 
+mod endpoint;
 mod queue;
 mod ring;
 mod sharded;
 mod tcp;
 
+pub use endpoint::{
+    EndpointAddr, EndpointTable, EndpointTransport, ENDPOINT_SCHEME,
+};
 pub use queue::{QueueClosed, SyncQueue};
 pub use ring::RingQueue;
 pub use sharded::{ShardedQueue, DEFAULT_SHARDS};

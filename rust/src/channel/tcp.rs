@@ -14,16 +14,42 @@
 //! socket-buffer-sized chunks into one reusable accumulator, decodes
 //! every complete frame, and delivers them per port with one
 //! [`ShardedQueue::push_batch`].
+//!
+//! # Logical (rebindable) mode
+//!
+//! Both ends optionally address the sink **logically** through an
+//! [`EndpointTable`] instead of holding physical handles:
+//!
+//! * [`TcpReceiver::start_logical`] resolves `(flake_id, port)` →
+//!   queue through the table *per delivery* (cached per table
+//!   version), so the same listening socket keeps feeding a flake
+//!   across a relocation — the replacement republishes its queues
+//!   under the same flake id and the next delivery lands there.  A
+//!   push that races the relocation window (old queues closed, new
+//!   ones not yet published) re-resolves with bounded backoff.
+//! * [`TcpSender::logical`] resolves `floe://<flake-id>/<port>` → the
+//!   sink's current `host:port` and watches the table version: when a
+//!   relocation publishes a new physical endpoint, the sender first
+//!   **drains its old connection in order** (shutdown the write half,
+//!   wait for the receiver to finish decoding and close), then
+//!   reconnects to the new endpoint — so per-producer FIFO survives
+//!   the rebind.  Write failures retry through the same re-resolve
+//!   path with bounded attempts and backoff.
+//!
+//! Delivery is at-least-once across reconnects: a connection that
+//! breaks mid-buffer resends the whole scratch buffer, so frames the
+//! receiver already consumed may arrive again.  Sinks that cannot
+//! tolerate duplicates dedupe on `Message::seq`.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::channel::{ShardedQueue, Transport};
+use crate::channel::{EndpointAddr, EndpointTable, ShardedQueue, Transport};
 use crate::error::{FloeError, Result};
 use crate::message::Message;
 
@@ -32,6 +58,28 @@ const MAX_FRAME: usize = 64 << 20;
 
 /// Receive chunk size: one read syscall can carry many small frames.
 const READ_CHUNK: usize = 64 << 10;
+
+/// Logical delivery: how many times a receiver re-resolves a sink
+/// queue that is closed or unpublished (a relocation in flight) before
+/// declaring the endpoint gone, and the pause between attempts.
+const DELIVER_ATTEMPTS: usize = 1000;
+const DELIVER_BACKOFF: Duration = Duration::from_millis(2);
+
+/// Bounded send retry: attempts per batch (reconnect + re-resolve
+/// between attempts, exponential backoff from this base).
+const SEND_ATTEMPTS: usize = 4;
+
+/// Bound on draining the old connection during a logical rebind.
+const REBIND_DRAIN_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// How a receiver maps a frame's port name to a sink queue.
+enum RxRoute {
+    /// Physical: a port map captured at start (legacy / tests).
+    Direct(HashMap<String, Arc<ShardedQueue<Message>>>),
+    /// Logical: resolve `(flake_id, port)` through the endpoint table
+    /// at delivery time — survives flake relocation.
+    Logical { table: Arc<EndpointTable>, flake_id: String },
+}
 
 /// Listens for framed messages and pushes them into per-port input queues.
 pub struct TcpReceiver {
@@ -47,22 +95,41 @@ impl TcpReceiver {
         port: u16,
         ports: HashMap<String, Arc<ShardedQueue<Message>>>,
     ) -> Result<TcpReceiver> {
+        TcpReceiver::start_with(port, RxRoute::Direct(ports))
+    }
+
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and deliver incoming
+    /// frames to whatever queues `table` maps `flake_id`'s ports to at
+    /// delivery time (see the module docs on logical mode).
+    pub fn start_logical(
+        port: u16,
+        flake_id: &str,
+        table: Arc<EndpointTable>,
+    ) -> Result<TcpReceiver> {
+        TcpReceiver::start_with(
+            port,
+            RxRoute::Logical { table, flake_id: flake_id.to_string() },
+        )
+    }
+
+    fn start_with(port: u16, route: RxRoute) -> Result<TcpReceiver> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
-        let ports = Arc::new(ports);
+        let route = Arc::new(route);
         let join = thread::Builder::new()
             .name(format!("flake-rx-{}", addr.port()))
             .spawn(move || {
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
-                            let ports = Arc::clone(&ports);
+                            let route = Arc::clone(&route);
                             let stop3 = Arc::clone(&stop2);
                             thread::spawn(move || {
-                                let _ = serve_stream(stream, &ports, &stop3);
+                                let _ =
+                                    serve_stream(stream, &route, &stop3);
                             });
                         }
                         Err(e)
@@ -98,11 +165,110 @@ impl Drop for TcpReceiver {
     }
 }
 
+enum Delivered {
+    Ok,
+    /// The sink is gone for good — end the connection.
+    SinkGone,
+}
+
+/// Hand one per-port batch to its sink queue.
+///
+/// Logical mode delivers **one message at a time via `try_push`**,
+/// which hands the message back on failure — unlike `push_batch`,
+/// which can partially enqueue before a racing close, a per-message
+/// push is atomic with respect to the relocation handoff, so a prefix
+/// the captured backlog already holds can never be delivered twice.
+/// A full-but-open queue is ordinary backpressure (wait, like the
+/// blocking push); a closed or vanished queue re-resolves through the
+/// table with bounded backoff so the delivery follows a relocation's
+/// republish.  An unknown *port* on a live flake is permanent: the
+/// batch is dropped with a warning and the connection stays up,
+/// matching the direct path.
+fn deliver(
+    route: &RxRoute,
+    port: &str,
+    batch: Vec<Message>,
+    stop: &AtomicBool,
+) -> Delivered {
+    match route {
+        RxRoute::Direct(ports) => match ports.get(port) {
+            Some(q) => {
+                if q.push_batch(batch).is_err() {
+                    Delivered::SinkGone // flake shut down
+                } else {
+                    Delivered::Ok
+                }
+            }
+            None => {
+                crate::log_warn!(
+                    "tcp: dropping {} message(s) for unknown port \
+                     {port}",
+                    batch.len()
+                );
+                Delivered::Ok
+            }
+        },
+        RxRoute::Logical { table, flake_id } => {
+            let mut attempts = 0usize;
+            let mut iter = batch.into_iter();
+            let mut pending = iter.next();
+            while let Some(msg) = pending.take() {
+                match table.resolve_queue(flake_id, port) {
+                    Some(q) => match q.try_push(msg) {
+                        Ok(()) => {
+                            attempts = 0;
+                            pending = iter.next();
+                            continue;
+                        }
+                        Err(back) => {
+                            pending = Some(back);
+                            if !q.is_closed() {
+                                // Plain backpressure on a live queue:
+                                // wait it out like a blocking push.
+                                if stop.load(Ordering::SeqCst) {
+                                    return Delivered::SinkGone;
+                                }
+                                thread::sleep(DELIVER_BACKOFF);
+                                continue;
+                            }
+                            // Closed: relocation handoff in flight —
+                            // fall through and re-resolve.
+                        }
+                    },
+                    None if table.has_flake(flake_id) => {
+                        // Live flake, unknown port: permanent.
+                        crate::log_warn!(
+                            "tcp: dropping {} message(s) for unknown \
+                             port {flake_id}/{port}",
+                            1 + iter.len()
+                        );
+                        return Delivered::Ok;
+                    }
+                    None => {} // flake gone; retry briefly below
+                }
+                attempts += 1;
+                if attempts > DELIVER_ATTEMPTS
+                    || stop.load(Ordering::SeqCst)
+                {
+                    crate::log_warn!(
+                        "tcp: dropping {} message(s) for \
+                         {flake_id}/{port} (endpoint unresolvable)",
+                        1 + iter.len()
+                    );
+                    return Delivered::SinkGone;
+                }
+                thread::sleep(DELIVER_BACKOFF);
+            }
+            Delivered::Ok
+        }
+    }
+}
+
 /// Per-connection read loop: accumulate raw bytes, decode every complete
 /// frame, deliver frames grouped per port with one batch push each.
 fn serve_stream(
     mut stream: TcpStream,
-    ports: &HashMap<String, Arc<ShardedQueue<Message>>>,
+    route: &RxRoute,
     stop: &AtomicBool,
 ) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
@@ -197,19 +363,9 @@ fn serve_stream(
             acc.drain(..consumed);
         }
         for (port, batch) in deliveries.drain(..) {
-            match ports.get(&port) {
-                Some(q) => {
-                    if q.push_batch(batch).is_err() {
-                        return Ok(()); // flake shut down
-                    }
-                }
-                None => {
-                    crate::log_warn!(
-                        "tcp: dropping {} message(s) for unknown port \
-                         {port}",
-                        batch.len()
-                    );
-                }
+            match deliver(route, &port, batch, stop) {
+                Delivered::Ok => {}
+                Delivered::SinkGone => return Ok(()),
             }
         }
         if let Some(e) = frame_err {
@@ -222,30 +378,77 @@ fn serve_stream(
 /// Don't let one giant batch pin a huge scratch buffer forever.
 const SCRATCH_KEEP: usize = 1 << 20;
 
-/// Connection state behind one lock: the socket and the reusable frame
+/// Where a sender finds its peer.
+enum SenderTarget {
+    /// Physical `host:port`, fixed for the sender's lifetime.
+    Fixed(String),
+    /// Logical: re-resolve the sink flake's current `host:port`
+    /// through the endpoint table on every version bump.
+    Logical { table: Arc<EndpointTable>, flake_id: String },
+}
+
+/// Connection state behind one lock: the resolved endpoint, the table
+/// version it was resolved at, the socket and the reusable frame
 /// scratch buffer (framing and writing happen under the same critical
 /// section anyway, so sharing the lock costs nothing and saves an
 /// allocation per batch).
 struct SenderInner {
+    endpoint: Option<String>,
+    seen_version: u64,
     stream: Option<TcpStream>,
     scratch: Vec<u8>,
 }
 
 /// Sends framed messages to one sink flake's input port over TCP.
 pub struct TcpSender {
-    endpoint: String,
+    target: SenderTarget,
     port_name: String,
     inner: Mutex<SenderInner>,
 }
 
 impl TcpSender {
+    /// Connect to a fixed physical endpoint (`host:port`).
     pub fn connect(endpoint: &str, port_name: &str) -> Result<TcpSender> {
         let stream = TcpStream::connect(endpoint)?;
         stream.set_nodelay(true)?;
         Ok(TcpSender {
-            endpoint: endpoint.to_string(),
+            target: SenderTarget::Fixed(endpoint.to_string()),
             port_name: port_name.to_string(),
             inner: Mutex::new(SenderInner {
+                endpoint: Some(endpoint.to_string()),
+                seen_version: 0,
+                stream: Some(stream),
+                scratch: Vec::with_capacity(4096),
+            }),
+        })
+    }
+
+    /// Connect to the logical address `floe://<flake-id>/<port>`,
+    /// resolving (and re-resolving, on every table version bump) the
+    /// sink's physical endpoint through `table`.  See the module docs
+    /// for the rebind sequence.
+    pub fn logical(
+        table: Arc<EndpointTable>,
+        addr: &EndpointAddr,
+    ) -> Result<TcpSender> {
+        let seen_version = table.version();
+        let endpoint =
+            table.resolve_tcp(&addr.flake_id).ok_or_else(|| {
+                FloeError::Channel(format!(
+                    "tcp: {addr} has no published tcp endpoint"
+                ))
+            })?;
+        let stream = TcpStream::connect(&endpoint)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpSender {
+            target: SenderTarget::Logical {
+                table,
+                flake_id: addr.flake_id.clone(),
+            },
+            port_name: addr.port.clone(),
+            inner: Mutex::new(SenderInner {
+                endpoint: Some(endpoint),
+                seen_version,
                 stream: Some(stream),
                 scratch: Vec::with_capacity(4096),
             }),
@@ -265,59 +468,156 @@ impl TcpSender {
         out[len_at..len_at + 4].copy_from_slice(&total.to_le_bytes());
     }
 
-    /// Write the framed scratch buffer, reconnecting once on a broken
-    /// pipe.
-    ///
-    /// Delivery is at-least-once across reconnects: if the connection
-    /// breaks mid-buffer, the retry resends the whole buffer, so frames
-    /// the receiver already consumed may arrive again.  With batching
-    /// the duplication window is the batch, not one message — sinks that
-    /// cannot tolerate duplicates should dedupe on `Message::seq`.
-    fn write_frames(
-        endpoint: &str,
-        slot: &mut Option<TcpStream>,
-        frames: &[u8],
-    ) -> Result<()> {
-        for attempt in 0..2 {
-            if slot.is_none() {
-                *slot = Some(TcpStream::connect(endpoint).map_err(|e| {
-                    FloeError::Channel(format!(
-                        "tcp reconnect to {endpoint}: {e}"
-                    ))
-                })?);
-            }
-            let stream = slot.as_mut().expect("just set");
-            match stream.write_all(frames).and_then(|_| stream.flush()) {
-                Ok(()) => return Ok(()),
-                Err(e) if attempt == 0 => {
-                    crate::log_debug!("tcp send failed ({e}), reconnecting");
-                    *slot = None;
-                }
-                Err(e) => {
-                    return Err(FloeError::Channel(format!(
-                        "tcp send to {endpoint}: {e}"
-                    )))
-                }
-            }
-        }
-        unreachable!()
-    }
-
     /// Frame `msgs` into the per-connection scratch buffer and write
-    /// them with one syscall.
+    /// them with one syscall, rebinding / reconnecting as needed.
     fn send_all(&self, msgs: &[Message]) -> Result<()> {
         let mut g = self.inner.lock().expect("tcp sender poisoned");
-        let SenderInner { stream, scratch } = &mut *g;
-        scratch.clear();
+        let inner = &mut *g;
+        refresh_endpoint(&self.target, inner, true)?;
+        inner.scratch.clear();
         for msg in msgs {
-            Self::frame_into(&self.port_name, msg, scratch);
+            Self::frame_into(&self.port_name, msg, &mut inner.scratch);
         }
-        let result = Self::write_frames(&self.endpoint, stream, scratch);
-        if scratch.capacity() > SCRATCH_KEEP {
-            scratch.shrink_to(SCRATCH_KEEP);
+        let result = write_frames(&self.target, inner);
+        if inner.scratch.capacity() > SCRATCH_KEEP {
+            inner.scratch.shrink_to(SCRATCH_KEEP);
         }
         result
     }
+}
+
+/// Logical targets: notice a table version bump, re-resolve the
+/// physical endpoint, and when it moved, hand the old connection off
+/// **in order** (`drain` = shutdown write half + wait for the receiver
+/// to finish decoding and close) before pointing at the new endpoint.
+/// Fixed targets never rebind.
+fn refresh_endpoint(
+    target: &SenderTarget,
+    inner: &mut SenderInner,
+    drain: bool,
+) -> Result<()> {
+    let SenderTarget::Logical { table, flake_id } = target else {
+        return Ok(());
+    };
+    let version = table.version();
+    if version == inner.seen_version && inner.endpoint.is_some() {
+        return Ok(());
+    }
+    let endpoint = table.resolve_tcp(flake_id).ok_or_else(|| {
+        FloeError::Channel(format!(
+            "tcp: flake '{flake_id}' has no published tcp endpoint"
+        ))
+    })?;
+    inner.seen_version = version;
+    if inner.endpoint.as_deref() != Some(endpoint.as_str()) {
+        crate::log_debug!(
+            "tcp: rebinding to {endpoint} (flake '{flake_id}' moved)"
+        );
+        if let Some(stream) = inner.stream.take() {
+            if drain {
+                drain_connection(stream);
+            }
+        }
+        inner.endpoint = Some(endpoint);
+    }
+    Ok(())
+}
+
+/// In-order rebind handshake: stop sending (FIN via write-half
+/// shutdown), then wait — bounded — until the receiver has decoded
+/// everything and closed its end (EOF).  Only after that may the
+/// caller write to the *new* endpoint, so bytes on the old connection
+/// can never be overtaken by bytes on the new one.
+fn drain_connection(mut stream: TcpStream) {
+    let _ = stream.shutdown(Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let deadline = Instant::now() + REBIND_DRAIN_TIMEOUT;
+    let mut buf = [0u8; 256];
+    while Instant::now() < deadline {
+        match stream.read(&mut buf) {
+            Ok(0) => return, // receiver finished and closed
+            Ok(_) => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => return,
+        }
+    }
+    // The receiver did not finish inside the drain window (e.g. its
+    // sink queues are saturated).  Proceeding to the new endpoint can
+    // reorder this producer's stream relative to the undrained tail —
+    // surface it rather than fail silently; the old frames themselves
+    // still deliver through the lingering receiver.
+    crate::log_warn!(
+        "tcp: rebind drain timed out after {:?}; per-producer order \
+         across the rebind is not guaranteed for this sender",
+        REBIND_DRAIN_TIMEOUT
+    );
+}
+
+/// Write the framed scratch buffer with bounded retries: every failed
+/// attempt drops the connection, re-resolves the endpoint (logical
+/// targets — the sink may have just moved) and backs off briefly
+/// before reconnecting.
+///
+/// Delivery is at-least-once across reconnects: if the connection
+/// breaks mid-buffer, the retry resends the whole buffer, so frames
+/// the receiver already consumed may arrive again.  With batching
+/// the duplication window is the batch, not one message — sinks that
+/// cannot tolerate duplicates should dedupe on `Message::seq`.
+fn write_frames(
+    target: &SenderTarget,
+    inner: &mut SenderInner,
+) -> Result<()> {
+    let mut last_err = String::new();
+    for attempt in 0..SEND_ATTEMPTS {
+        if attempt > 0 {
+            thread::sleep(Duration::from_millis(1 << attempt));
+            // The old connection is already dead; no drain handshake.
+            inner.seen_version = 0; // force a fresh resolve
+            if let Err(e) = refresh_endpoint(target, inner, false) {
+                last_err = e.to_string();
+                continue;
+            }
+        }
+        let Some(endpoint) = inner.endpoint.clone() else {
+            last_err = "endpoint unresolved".to_string();
+            continue;
+        };
+        if inner.stream.is_none() {
+            match TcpStream::connect(&endpoint) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    inner.stream = Some(s);
+                }
+                Err(e) => {
+                    last_err =
+                        format!("tcp reconnect to {endpoint}: {e}");
+                    continue;
+                }
+            }
+        }
+        let s = inner.stream.as_mut().expect("just set");
+        match s.write_all(&inner.scratch).and_then(|_| s.flush()) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                crate::log_debug!(
+                    "tcp send to {endpoint} failed ({e}), retrying"
+                );
+                last_err = format!("tcp send to {endpoint}: {e}");
+                inner.stream = None;
+            }
+        }
+    }
+    Err(FloeError::Channel(format!(
+        "tcp: giving up after {SEND_ATTEMPTS} attempts: {last_err}"
+    )))
 }
 
 impl Transport for TcpSender {
@@ -335,7 +635,15 @@ impl Transport for TcpSender {
     }
 
     fn describe(&self) -> String {
-        format!("tcp:{}#{}", self.endpoint, self.port_name)
+        match &self.target {
+            SenderTarget::Fixed(ep) => {
+                format!("tcp:{ep}#{}", self.port_name)
+            }
+            SenderTarget::Logical { flake_id, .. } => format!(
+                "tcp:{}",
+                EndpointAddr::new(flake_id.clone(), self.port_name.clone())
+            ),
+        }
     }
 }
 
@@ -350,6 +658,14 @@ mod tests {
         let rx = TcpReceiver::start(0, ports).unwrap();
         let ep = rx.endpoint();
         (rx, q, ep)
+    }
+
+    fn port_map(
+        q: &Arc<ShardedQueue<Message>>,
+    ) -> HashMap<String, Arc<ShardedQueue<Message>>> {
+        let mut m = HashMap::new();
+        m.insert("in".to_string(), Arc::clone(q));
+        m
     }
 
     #[test]
@@ -431,6 +747,213 @@ mod tests {
         got.sort();
         got.dedup();
         assert_eq!(got.len(), 400);
+        rx.shutdown();
+    }
+
+    /// Regression (reconnect hardening): a listener that drops its
+    /// first accepted connection must not surface as a hard error —
+    /// the sender retries through reconnect with bounded attempts.
+    #[test]
+    fn sender_retries_through_dropped_first_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = listener.local_addr().unwrap().to_string();
+        let q = Arc::new(ShardedQueue::with_default_shards(4096));
+        let route = RxRoute::Direct(port_map(&q));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let server = thread::spawn(move || {
+            // First connection: accepted and dropped on the floor.
+            let (first, _) = listener.accept().unwrap();
+            drop(first);
+            // Second connection: served properly.
+            let (stream, _) = listener.accept().unwrap();
+            let _ = serve_stream(stream, &route, &stop2);
+        });
+
+        let tx = TcpSender::connect(&ep, "in").unwrap();
+        // The first write may land in the kernel buffer before the
+        // reset arrives (inherent TCP) — its outcome is not asserted.
+        let _ = tx.send(Message::text("first"));
+        thread::sleep(Duration::from_millis(50));
+        // These must all succeed via the bounded reconnect path.
+        for i in 0..4 {
+            tx.send(Message::text(format!("r{i}"))).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut got: Vec<String> = Vec::new();
+        while got.iter().filter(|t| t.starts_with('r')).count() < 4 {
+            assert!(
+                Instant::now() < deadline,
+                "retried messages never arrived: {got:?}"
+            );
+            if let Some(m) = q.try_pop() {
+                got.push(m.as_text().unwrap().to_string());
+            } else {
+                thread::sleep(Duration::from_millis(2));
+            }
+        }
+        let retried: Vec<&String> =
+            got.iter().filter(|t| t.starts_with('r')).collect();
+        assert_eq!(retried, vec!["r0", "r1", "r2", "r3"], "{got:?}");
+        stop.store(true, Ordering::SeqCst);
+        drop(tx); // closes the connection; serve_stream returns
+        server.join().unwrap();
+    }
+
+    /// A sender that exhausts its attempts (nobody listening) reports
+    /// a channel error instead of hanging.
+    #[test]
+    fn sender_gives_up_after_bounded_attempts() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = listener.local_addr().unwrap().to_string();
+        let tx = TcpSender::connect(&ep, "in").unwrap();
+        drop(listener); // no listener from here on
+        // Poison the live connection so every retry reconnects.
+        {
+            let mut g = tx.inner.lock().unwrap();
+            if let Some(s) = g.stream.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        let err = tx.send(Message::text("x")).unwrap_err();
+        assert!(err.to_string().contains("giving up"), "{err}");
+    }
+
+    #[test]
+    fn logical_roundtrip_and_rebind_preserve_order() {
+        let table = EndpointTable::new();
+        let q1 = Arc::new(ShardedQueue::with_default_shards(4096));
+        let mut rx1 = TcpReceiver::start_logical(
+            0,
+            "sink",
+            Arc::clone(&table),
+        )
+        .unwrap();
+        let token =
+            table.publish("sink", port_map(&q1), Some(rx1.endpoint()));
+        let _ = token;
+
+        let tx = TcpSender::logical(
+            Arc::clone(&table),
+            &EndpointAddr::new("sink", "in"),
+        )
+        .unwrap();
+        for i in 0..50 {
+            tx.send(Message::text(format!("a{i:03}"))).unwrap();
+        }
+        // Wait for delivery, then "relocate": new queue, new receiver,
+        // republish under the same logical id.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while q1.len() < 50 {
+            assert!(Instant::now() < deadline, "first batch missing");
+            thread::sleep(Duration::from_millis(2));
+        }
+        let q2 = Arc::new(ShardedQueue::with_default_shards(4096));
+        let mut rx2 = TcpReceiver::start_logical(
+            0,
+            "sink",
+            Arc::clone(&table),
+        )
+        .unwrap();
+        assert_ne!(rx1.endpoint(), rx2.endpoint());
+        table.publish("sink", port_map(&q2), Some(rx2.endpoint()));
+        for i in 50..100 {
+            tx.send(Message::text(format!("a{i:03}"))).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while q2.len() < 50 {
+            assert!(
+                Instant::now() < deadline,
+                "post-rebind batch missing (got {})",
+                q2.len()
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+        // Zero loss, and order preserved within each side of the cut.
+        let mut texts = Vec::new();
+        while let Some(m) = q1.try_pop() {
+            texts.push(m.as_text().unwrap().to_string());
+        }
+        while let Some(m) = q2.try_pop() {
+            texts.push(m.as_text().unwrap().to_string());
+        }
+        let want: Vec<String> =
+            (0..100).map(|i| format!("a{i:03}")).collect();
+        assert_eq!(texts, want);
+        rx1.shutdown();
+        rx2.shutdown();
+    }
+
+    /// Logical mode: an unknown port on a *live* flake is permanent —
+    /// the batch drops with a warning and the connection keeps
+    /// serving other ports (it must not stall retrying or die).
+    #[test]
+    fn logical_unknown_port_drops_and_connection_survives() {
+        let table = EndpointTable::new();
+        let q = Arc::new(ShardedQueue::with_default_shards(64));
+        let mut rx = TcpReceiver::start_logical(
+            0,
+            "sink",
+            Arc::clone(&table),
+        )
+        .unwrap();
+        let ep = rx.endpoint();
+        table.publish("sink", port_map(&q), Some(ep.clone()));
+        let tx = TcpSender::connect(&ep, "nope").unwrap();
+        tx.send(Message::text("lost")).unwrap();
+        let good = TcpSender::connect(&ep, "in").unwrap();
+        good.send(Message::text("kept")).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Some(m) = q.try_pop() {
+                assert_eq!(m.as_text(), Some("kept"));
+                break;
+            }
+            assert!(Instant::now() < deadline, "good port starved");
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(q.is_empty());
+        rx.shutdown();
+    }
+
+    /// Logical delivery follows a republication that happens while the
+    /// receiver's sink queue is closed (the relocation handoff window).
+    #[test]
+    fn logical_delivery_retries_across_republication() {
+        let table = EndpointTable::new();
+        let q1 = Arc::new(ShardedQueue::with_default_shards(4096));
+        let mut rx = TcpReceiver::start_logical(
+            0,
+            "sink",
+            Arc::clone(&table),
+        )
+        .unwrap();
+        table.publish("sink", port_map(&q1), Some(rx.endpoint()));
+        let tx = TcpSender::logical(
+            Arc::clone(&table),
+            &EndpointAddr::new("sink", "in"),
+        )
+        .unwrap();
+        // Close the published queue (handoff capture does this), then
+        // republish a fresh queue shortly after — the in-flight
+        // delivery must retry into the replacement, not drop.
+        q1.close();
+        tx.send(Message::text("survivor")).unwrap();
+        thread::sleep(Duration::from_millis(30));
+        let q2 = Arc::new(ShardedQueue::with_default_shards(4096));
+        table.publish("sink", port_map(&q2), Some(rx.endpoint()));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Some(m) = q2.try_pop() {
+                assert_eq!(m.as_text(), Some("survivor"));
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "delivery dropped during the republication window"
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
         rx.shutdown();
     }
 }

@@ -15,7 +15,10 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::adaptation::{FlakeDirectory, Monitor, StrategyFactory};
-use crate::channel::{ChannelBackend, InProcTransport, Transport};
+use crate::channel::{
+    ChannelBackend, EndpointAddr, EndpointTable, EndpointTransport,
+    Transport,
+};
 use crate::error::{FloeError, Result};
 use crate::flake::{Flake, FlakeConfig};
 use crate::graph::DataflowGraph;
@@ -106,11 +109,20 @@ impl FlakeTuning {
 /// recomposition engine can swap all three consistently while readers
 /// (ingress, stats, drains) see either the old or the new topology,
 /// never a mix.
+///
+/// The authoritative [`EndpointTable`] rides inside the topology: it
+/// is the logical → physical half of the placement, republished by
+/// the engine whenever a flake moves, and senders resolve through it
+/// rather than holding queue/socket handles (see
+/// `crate::channel::endpoint`).  It is internally versioned and
+/// lock-free to read, so it is shared as an `Arc` rather than guarded
+/// by the topology lock.
 pub(crate) struct Topology {
     pub(crate) graph: DataflowGraph,
     pub(crate) flakes: HashMap<String, Arc<Flake>>,
     pub(crate) containers:
         HashMap<String, Arc<crate::container::Container>>,
+    pub(crate) endpoints: Arc<EndpointTable>,
 }
 
 /// The adaptation [`Monitor`] resolves pellet ids against the live
@@ -205,6 +217,24 @@ impl RunningDataflow {
     /// Current topology version (bumped by every applied delta).
     pub fn graph_version(&self) -> u64 {
         self.topo.read().expect("topology poisoned").graph.version
+    }
+
+    /// The dataflow's authoritative logical → physical endpoint table.
+    /// Remote senders hold this (plus a `floe://<flake>/<port>`
+    /// address) instead of a socket address, so they follow flake
+    /// relocations automatically.
+    pub fn endpoints(&self) -> Arc<EndpointTable> {
+        Arc::clone(&self.topo.read().expect("topology poisoned").endpoints)
+    }
+
+    /// Bind a TCP ingress endpoint (`127.0.0.1:port`, 0 = ephemeral)
+    /// for a pellet's input ports and record it under the pellet's
+    /// logical address.  Returns the bound `host:port`.  The fed flake
+    /// stays fully relocatable: connect with
+    /// `TcpSender::logical(run.endpoints(), &EndpointAddr::new(id,
+    /// port))` and the sender rebinds across moves.
+    pub fn serve_tcp(&self, pellet_id: &str, port: u16) -> Result<String> {
+        self.flake(pellet_id)?.serve_tcp(port)
     }
 
     /// Snapshot of live flake handles (lock dropped before return).
@@ -431,14 +461,19 @@ impl RunningDataflow {
     pub fn stats_json(&self) -> Json {
         let t = self.clock.now();
         let mut pellets = Vec::new();
-        let (graph_name, graph_version, flakes) = {
+        let (graph_name, graph_version, flakes, endpoints) = {
             let topo = self.topo.read().expect("topology poisoned");
             let flakes: Vec<(String, Arc<Flake>)> = topo
                 .flakes
                 .iter()
                 .map(|(id, f)| (id.clone(), Arc::clone(f)))
                 .collect();
-            (topo.graph.name.clone(), topo.graph.version, flakes)
+            (
+                topo.graph.name.clone(),
+                topo.graph.version,
+                flakes,
+                Arc::clone(&topo.endpoints),
+            )
         };
         for (id, f) in &flakes {
             let obs = f.observe(t);
@@ -465,6 +500,19 @@ impl RunningDataflow {
                         .expect("recompose log poisoned")
                         .len() as f64,
                 ),
+            ),
+            (
+                "endpoints",
+                Json::obj(vec![
+                    (
+                        "version",
+                        Json::num(endpoints.version() as f64),
+                    ),
+                    (
+                        "published",
+                        Json::num(endpoints.published() as f64),
+                    ),
+                ]),
             ),
             ("t", Json::num(t)),
             ("pellets", Json::Arr(pellets)),
@@ -535,7 +583,9 @@ impl Coordinator {
         let tuning = FlakeTuning::from_options(&options);
 
         // 1. Instantiate flakes bottom-up so every sink exists before any
-        //    upstream pellet could emit.
+        //    upstream pellet could emit, publishing each flake's input
+        //    ports into the dataflow's endpoint table as it spawns.
+        let endpoints = EndpointTable::new();
         let mut flakes: HashMap<String, Arc<Flake>> = HashMap::new();
         let mut containers = HashMap::new();
         for id in &order {
@@ -550,36 +600,51 @@ impl Coordinator {
             tuning.apply(&mut cfg);
             let container = self.manager.allocate(cfg.cores)?;
             let flake = container.spawn_flake(cfg, factory)?;
+            flake.publish_endpoints(&endpoints);
             containers.insert(id.clone(), Arc::clone(&container));
             flakes.insert(id.clone(), flake);
         }
 
-        // 2. Wire edges, still bottom-up by source pellet.
+        // 2. Wire edges, still bottom-up by source pellet.  Edges are
+        //    *logical*: each transport holds the sink's
+        //    `floe://<flake>/<port>` address and resolves it through
+        //    the versioned endpoint table per send, so a later
+        //    relocation republishes the sink and every edge follows
+        //    without rewiring.  The sink's port is still validated
+        //    eagerly — a bad edge fails the launch, not the stream.
         for id in &order {
             let spec = graph.pellet(id).expect("validated");
             for out in &spec.outputs {
                 for edge in graph.edges_from(id, &out.name) {
                     let sink = &flakes[&edge.to_pellet];
-                    let queue = sink.input_queue(&edge.to_port)?;
+                    sink.input_queue(&edge.to_port)?; // validate
                     let transport: Arc<dyn Transport> =
-                        Arc::new(InProcTransport {
-                            queue,
-                            label: format!(
+                        Arc::new(EndpointTransport::new(
+                            Arc::clone(&endpoints),
+                            EndpointAddr::new(
+                                edge.to_pellet.clone(),
+                                edge.to_port.clone(),
+                            ),
+                            format!(
                                 "{}.{} -> {}.{}",
                                 edge.from_pellet,
                                 edge.from_port,
                                 edge.to_pellet,
                                 edge.to_port
                             ),
-                        });
+                        ));
                     flakes[id].wire_output(&out.name, transport)?;
                 }
             }
         }
 
         let clock: Arc<dyn Clock> = Arc::new(WallClock::new());
-        let topo =
-            Arc::new(RwLock::new(Topology { graph, flakes, containers }));
+        let topo = Arc::new(RwLock::new(Topology {
+            graph,
+            flakes,
+            containers,
+            endpoints,
+        }));
 
         // 3. Optional adaptation monitor.  Entries are pellet *ids*
         //    discovered from the shared topology on every tick, so

@@ -20,7 +20,7 @@ pub enum FloeError {
     Resource(String),
 
     /// Live recomposition failed (unsupported surgery against the
-    /// running topology, e.g. relocating a TCP-fed flake).
+    /// running topology).
     Recompose(String),
 
     /// XLA/PJRT runtime failure (artifact load, compile, execute).

@@ -29,7 +29,8 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::channel::{
-    ChannelBackend, ShardedQueue, SyncQueue, TcpReceiver, Transport,
+    ChannelBackend, EndpointTable, ShardedQueue, SyncQueue, TcpReceiver,
+    Transport,
 };
 use crate::error::{FloeError, Result};
 use crate::graph::{
@@ -195,18 +196,32 @@ impl Shared {
     }
 }
 
+/// This flake's publication in an [`EndpointTable`]: which table its
+/// endpoints live in, and the token guarding the entry so a displaced
+/// incarnation can never unpublish its replacement.
+struct EndpointBinding {
+    table: Arc<EndpointTable>,
+    token: u64,
+}
+
+/// TCP ingress state: the primary bound endpoint (at most one per
+/// flake) plus any lingering receivers adopted from a previous
+/// incarnation after a relocation (they keep serving the old physical
+/// endpoint — delivering through the endpoint table, which now points
+/// here — until remote senders rebind; torn down with the flake).
+struct TcpState {
+    endpoint: Option<String>,
+    receivers: Vec<TcpReceiver>,
+}
+
 /// A running flake.  Cheap to clone handles are not provided; the
 /// coordinator owns flakes via `Arc<Flake>`.
 pub struct Flake {
     shared: Arc<Shared>,
     pool: CorePool,
     dispatcher: Mutex<Option<thread::JoinHandle<()>>>,
-    /// Optional TCP receiver feeding the input ports (remote edges).
-    /// A flake with a live receiver cannot be relocated: the remote
-    /// peers' port maps would keep pointing at the torn-down queues
-    /// (rebind is a ROADMAP item), so the recomposition engine rejects
-    /// the delta instead.
-    tcp_rx: Mutex<Option<TcpReceiver>>,
+    endpoints: Mutex<Option<EndpointBinding>>,
+    tcp: Mutex<TcpState>,
 }
 
 impl Flake {
@@ -286,7 +301,11 @@ impl Flake {
             shared,
             pool,
             dispatcher: Mutex::new(Some(dispatcher)),
-            tcp_rx: Mutex::new(None),
+            endpoints: Mutex::new(None),
+            tcp: Mutex::new(TcpState {
+                endpoint: None,
+                receivers: Vec::new(),
+            }),
         })
     }
 
@@ -307,10 +326,10 @@ impl Flake {
     /// to this, and tests/apps inject messages directly.
     ///
     /// Remote ingress caveat: a `TcpReceiver` built externally over
-    /// these queue handles is invisible to the runtime — the
-    /// relocation guard only protects receivers attached through
-    /// [`Flake::serve_tcp`].  Attach remote ingress there, or treat
-    /// the flake as non-relocatable yourself.
+    /// these queue handles is invisible to the runtime and cannot
+    /// follow a relocation — attach remote ingress through
+    /// [`Flake::serve_tcp`] instead, which registers the port map in
+    /// the endpoint table so the stream survives a move.
     pub fn input_queue(
         &self,
         port: &str,
@@ -463,27 +482,137 @@ impl Flake {
     }
 
     /// Bind a TCP receiver (`127.0.0.1:port`, 0 = ephemeral) that
-    /// decodes framed messages straight into this flake's input port
-    /// queues — the remote-edge ingress.  Returns the bound endpoint.
-    /// At most one receiver per flake; while it is live the flake
-    /// cannot be relocated (see [`Flake::has_tcp_input`]).
+    /// decodes framed messages into this flake's input port queues —
+    /// the remote-edge ingress.  Returns the bound endpoint.  At most
+    /// one primary receiver per flake.
+    ///
+    /// When the flake is published in an [`EndpointTable`] (every
+    /// coordinator-launched flake is), the receiver registers the port
+    /// map **in the table** instead of capturing queue handles: frames
+    /// resolve `(flake-id, port)` at delivery time, the bound endpoint
+    /// is recorded under the flake's logical address, and the flake
+    /// stays fully relocatable — the recomposition engine republishes
+    /// the endpoints at the new container and both ends of the TCP
+    /// edge follow.  An unpublished (standalone) flake falls back to
+    /// the captured-map receiver.
     pub fn serve_tcp(&self, port: u16) -> Result<String> {
-        let mut guard = self.tcp_rx.lock().expect("tcp rx poisoned");
-        if guard.is_some() {
+        let binding = {
+            let guard =
+                self.endpoints.lock().expect("endpoint binding poisoned");
+            guard.as_ref().map(|b| (Arc::clone(&b.table), b.token))
+        };
+        match binding {
+            Some((table, token)) => {
+                let ep = self.start_tcp(port, Some(&table))?;
+                table.set_tcp(self.pellet_id(), token, &ep)?;
+                Ok(ep)
+            }
+            None => self.start_tcp(port, None),
+        }
+    }
+
+    /// Bind a **logical** TCP receiver against `table` without
+    /// recording the endpoint there yet — used by the recomposition
+    /// engine on a relocation replacement, whose publication happens
+    /// atomically at cut-over ([`Flake::publish_endpoints`] includes
+    /// the pending endpoint).
+    pub(crate) fn serve_tcp_in(
+        &self,
+        port: u16,
+        table: &Arc<EndpointTable>,
+    ) -> Result<String> {
+        self.start_tcp(port, Some(table))
+    }
+
+    fn start_tcp(
+        &self,
+        port: u16,
+        table: Option<&Arc<EndpointTable>>,
+    ) -> Result<String> {
+        let mut tcp = self.tcp.lock().expect("tcp state poisoned");
+        if tcp.endpoint.is_some() {
             return Err(FloeError::Channel(format!(
                 "flake {}: tcp receiver already bound",
                 self.shared.cfg.pellet_id
             )));
         }
-        let rx = TcpReceiver::start(port, self.shared.ports.clone())?;
+        let rx = match table {
+            Some(t) => TcpReceiver::start_logical(
+                port,
+                self.pellet_id(),
+                Arc::clone(t),
+            )?,
+            None => {
+                TcpReceiver::start(port, self.shared.ports.clone())?
+            }
+        };
         let endpoint = rx.endpoint();
-        *guard = Some(rx);
+        tcp.endpoint = Some(endpoint.clone());
+        tcp.receivers.push(rx);
         Ok(endpoint)
     }
 
     /// True when a live [`TcpReceiver`] feeds this flake's inputs.
     pub fn has_tcp_input(&self) -> bool {
-        self.tcp_rx.lock().expect("tcp rx poisoned").is_some()
+        !self.tcp.lock().expect("tcp state poisoned").receivers.is_empty()
+    }
+
+    /// The primary TCP ingress endpoint, when one is bound.
+    pub fn tcp_endpoint(&self) -> Option<String> {
+        self.tcp.lock().expect("tcp state poisoned").endpoint.clone()
+    }
+
+    /// Publish (or republish) this flake's endpoints — every input
+    /// port queue plus the pending TCP ingress endpoint — into `table`
+    /// under the flake's logical address, and remember the binding so
+    /// shutdown unpublishes it (token-guarded: a stale incarnation
+    /// can never tear down its replacement's entry).
+    pub(crate) fn publish_endpoints(&self, table: &Arc<EndpointTable>) {
+        let tcp =
+            self.tcp.lock().expect("tcp state poisoned").endpoint.clone();
+        let token = table.publish(
+            self.pellet_id(),
+            self.shared.ports.clone(),
+            tcp,
+        );
+        *self.endpoints.lock().expect("endpoint binding poisoned") =
+            Some(EndpointBinding { table: Arc::clone(table), token });
+    }
+
+    /// Remove this flake's endpoint publication if it is still the
+    /// current one (no-op for a displaced husk whose replacement has
+    /// republished).
+    pub(crate) fn unpublish_endpoints(&self) {
+        if let Some(b) = self
+            .endpoints
+            .lock()
+            .expect("endpoint binding poisoned")
+            .take()
+        {
+            b.table.unpublish_if(self.pellet_id(), b.token);
+        }
+    }
+
+    /// Detach every TCP receiver (relocation: the replacement adopts
+    /// them so remote senders that have not rebound yet keep a live
+    /// socket whose deliveries resolve to the replacement's queues).
+    /// The recorded endpoint is kept so a cut-over rollback can
+    /// republish this incarnation unchanged.
+    pub(crate) fn take_tcp_receivers(&self) -> Vec<TcpReceiver> {
+        std::mem::take(
+            &mut self.tcp.lock().expect("tcp state poisoned").receivers,
+        )
+    }
+
+    /// Adopt lingering receivers from a displaced incarnation (see
+    /// [`Flake::take_tcp_receivers`]).  They are shut down with this
+    /// flake; the primary endpoint is unaffected.
+    pub(crate) fn adopt_tcp_receivers(&self, extra: Vec<TcpReceiver>) {
+        self.tcp
+            .lock()
+            .expect("tcp state poisoned")
+            .receivers
+            .extend(extra);
     }
 
     /// The factory currently producing pellet instances.  After dynamic
@@ -664,13 +793,19 @@ impl Flake {
         }
     }
 
-    /// Stop the flake: close queues, stop dispatcher and workers.
+    /// Stop the flake: close queues, stop dispatcher and workers, and
+    /// withdraw its endpoint publication (token-guarded, so a husk
+    /// displaced by relocation leaves its replacement's entry alone).
     pub fn shutdown(&self) {
-        if let Some(mut rx) =
-            self.tcp_rx.lock().expect("tcp rx poisoned").take()
         {
-            rx.shutdown();
+            let mut tcp = self.tcp.lock().expect("tcp state poisoned");
+            for rx in tcp.receivers.iter_mut() {
+                rx.shutdown();
+            }
+            tcp.receivers.clear();
+            tcp.endpoint = None;
         }
+        self.unpublish_endpoints();
         self.shared.stop.store(true, Ordering::SeqCst);
         for q in self.shared.ports.values() {
             q.close();

@@ -5,6 +5,13 @@
 //! Landmark control messages are always broadcast to *every* edge of the
 //! port regardless of split mode — a WindowEnd or Update landmark must
 //! reach all downstream reducers/pellets to be meaningful.
+//!
+//! Targets are [`Transport`] handles; on a coordinator-launched
+//! dataflow they are **logical endpoint handles**
+//! ([`crate::channel::EndpointTransport`]) that resolve the sink's
+//! `floe://<flake>/<port>` address through the versioned endpoint
+//! table per send — so routing survives a sink relocation without the
+//! router being rewired.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};

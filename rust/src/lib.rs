@@ -17,7 +17,11 @@
 //! The [`recompose`] engine goes further and performs live graph surgery:
 //! structural deltas (insert/remove pellets and edges, relocate flakes
 //! across containers) applied to the running topology with a minimal
-//! pause set and zero message loss.  The
+//! pause set and zero message loss.  The data plane is
+//! **location-transparent**: every flake input port has a stable
+//! logical address (`floe://<flake>/<port>`) resolved through a
+//! versioned [`channel::EndpointTable`], so relocation — including of
+//! TCP-fed flakes — is a republish that every sender follows live.  The
 //! [`adaptation::elastic::ElasticityPolicy`] closes the loop between
 //! the two: strategy decisions regrant cores in place, and sustained
 //! container saturation escalates to a recompose-driven flake
@@ -55,6 +59,7 @@ pub mod prelude {
         AdaptationStrategy, DynamicStrategy, ElasticityConfig,
         ElasticityPolicy, HybridStrategy, StaticLookAhead,
     };
+    pub use crate::channel::{EndpointAddr, EndpointTable};
     pub use crate::coordinator::Coordinator;
     pub use crate::error::{FloeError, Result};
     pub use crate::graph::{DataflowGraph, GraphBuilder, SplitMode};

@@ -18,9 +18,13 @@
 //! 4. **Cut-over** (under the topology write lock, so ingress resolves
 //!    either the old or the new topology, never a mix): relocated
 //!    flakes hand their state + buffered input to their replacements
-//!    via [`crate::flake::FlakeCheckpoint`]; routers swap targets
-//!    atomically; retired pellets leave the maps; the versioned graph
-//!    advances.
+//!    via [`crate::flake::FlakeCheckpoint`], then **rebind**: the
+//!    replacement republishes the moved flake's logical endpoints
+//!    (`floe://<flake>/<port>`) in the topology's endpoint table and
+//!    adopts the old incarnation's TCP receivers, so local edges and
+//!    remote TCP senders re-resolve and follow the move; routers swap
+//!    targets atomically; retired pellets leave the maps; the
+//!    versioned graph advances.
 //! 5. **Retire + resume**: removed pellets drain their remaining
 //!    buffered input through their still-wired outputs, then shut
 //!    down and free their cores; everything else resumes.  A retired
@@ -34,7 +38,9 @@ use std::time::{Duration, Instant};
 
 use super::delta::GraphDelta;
 use super::plan::{compile, RecomposePlan};
-use crate::channel::{InProcTransport, Transport};
+use crate::channel::{
+    EndpointAddr, EndpointTable, EndpointTransport, Transport,
+};
 use crate::container::Container;
 use crate::coordinator::{RunningDataflow, Topology};
 use crate::error::{FloeError, Result};
@@ -60,6 +66,10 @@ pub struct RecomposeStats {
     pub spawned: Vec<String>,
     pub removed: Vec<String>,
     pub relocated: Vec<String>,
+    /// Pellets whose endpoint publications were replaced at cut-over
+    /// (logical addresses stable, physical resolution moved) — the
+    /// live-rebind half of a relocation.
+    pub rebound: Vec<String>,
     /// First pause to last resume — the paper's "minimal impact"
     /// number: how long any part of the stream stood still.
     pub downtime_ms: f64,
@@ -99,7 +109,7 @@ fn execute(
     delta: &GraphDelta,
 ) -> Result<RecomposeStats> {
     // Phase 1a: compile against the live topology.
-    let (plan, old_graph, old_flakes, old_containers) = {
+    let (plan, old_graph, old_flakes, old_containers, endpoints) = {
         let topo = run.topo.read().expect("topology poisoned");
         let plan = compile(delta, &topo.graph)?;
         (
@@ -107,36 +117,23 @@ fn execute(
             topo.graph.clone(),
             topo.flakes.clone(),
             topo.containers.clone(),
+            Arc::clone(&topo.endpoints),
         )
     };
 
-    // A flake fed by a live TCP receiver cannot relocate yet: remote
-    // senders hold connections into the old queues and there is no
-    // port-map rebind (ROADMAP item), so the move would silently
-    // strand every remote edge.  Reject before any side effect.
-    // (Only receivers attached via `Flake::serve_tcp` are visible
-    // here; a receiver an app builds directly over `input_queue()`
-    // handles cannot be detected — see the `input_queue` docs.)
-    for id in &plan.relocate {
-        if let Some(f) = old_flakes.get(id) {
-            if f.has_tcp_input() {
-                return Err(FloeError::Recompose(format!(
-                    "cannot relocate '{id}': a live TcpReceiver feeds \
-                     its input ports and TCP port-map rebind is not \
-                     supported yet; shut the receiver down first"
-                )));
-            }
-        }
-    }
-
     // Phase 1b: spawn new and replacement flakes.  They idle unwired;
-    // failures abort before the stream is touched.
+    // failures abort before the stream is touched.  A TCP-fed flake is
+    // as relocatable as any other: transport endpoints are logical
+    // (`floe://<flake>/<port>`), so the cut-over below republishes the
+    // moved flake's physical resolution and every sender — local edge
+    // or remote TCP peer — re-resolves and follows.
     let spawned = spawn_new_flakes(run, &plan)?;
     let replacements = match spawn_replacements(
         run,
         &plan,
         &old_flakes,
         &old_containers,
+        &endpoints,
     ) {
         Ok(r) => r,
         Err(e) => {
@@ -215,6 +212,17 @@ fn execute(
             for (id, old, old_c) in &displaced {
                 topo.flakes.insert(id.clone(), Arc::clone(old));
                 topo.containers.insert(id.clone(), Arc::clone(old_c));
+                // Restore the old incarnation's endpoint publication
+                // (and its receivers, if the transfer already
+                // happened) so senders resolve it again; the torn-down
+                // replacement's stale token can no longer touch the
+                // entry.
+                if let Some((_, repl, _)) =
+                    replacements.iter().find(|(r, _, _)| r == id)
+                {
+                    old.adopt_tcp_receivers(repl.take_tcp_receivers());
+                }
+                old.publish_endpoints(&topo.endpoints);
             }
             for (id, f, c) in &retired {
                 topo.flakes.insert(id.clone(), Arc::clone(f));
@@ -309,6 +317,7 @@ fn execute(
         spawned: plan.spawn.clone(),
         removed: plan.remove.clone(),
         relocated: plan.relocate.clone(),
+        rebound: plan.rebind.clone(),
         downtime_ms,
         cutover_ms,
     })
@@ -340,27 +349,44 @@ fn cut_over(
         topo.flakes.insert(id.clone(), Arc::clone(f));
         topo.containers.insert(id.clone(), Arc::clone(c));
     }
+    // Brand-new pellets publish their endpoints now: nothing sends to
+    // them until the frontier resumes, but the addresses must resolve
+    // the moment the rewired edges go live.
+    for (_, f, _) in spawned.iter() {
+        f.publish_endpoints(&topo.endpoints);
+    }
     // Wire the newcomers' outputs per the successor graph.
     for (id, f, _) in spawned.iter().chain(replacements.iter()) {
-        rewire_flake(f, id, &plan.new_graph, &topo.flakes)?;
+        rewire_flake(f, id, &plan.new_graph, topo)?;
     }
-    // State + buffered-input handoff for relocations (the old flake
-    // is already quiesced, so this is capture + replay).
+    // The rebind step (plan.rebind): state + buffered-input handoff
+    // for relocations (the old flake is already quiesced, so this is
+    // capture + replay), then the replacement *republishes* the moved
+    // flake's logical endpoints — same `floe://` addresses, physical
+    // resolution now at the new container — and adopts the old
+    // incarnation's TCP receivers so remote senders that have not yet
+    // re-resolved keep a live socket whose deliveries land here.
+    // Order matters for per-producer FIFO: a remote delivery that
+    // raced the handoff retries against the table and can only land
+    // *after* this republication, i.e. after the captured backlog was
+    // replayed.
     for (id, old, _) in displaced.iter() {
         let cp = old.handoff()?;
         topo.flakes[id].restore(&cp)?;
+        topo.flakes[id].publish_endpoints(&topo.endpoints);
+        topo.flakes[id].adopt_tcp_receivers(old.take_tcp_receivers());
     }
     // Atomic target swaps on the pre-existing frontier.
     for id in &plan.rewire {
         let f = Arc::clone(&topo.flakes[id]);
-        rewire_flake(&f, id, &plan.new_graph, &topo.flakes)?;
+        rewire_flake(&f, id, &plan.new_graph, topo)?;
     }
     // Retired pellets keep their *old* edges but re-resolved against
     // the updated map, so their drain still lands on the current
     // incarnation of each downstream sink.
     for id in &plan.remove {
         let f = Arc::clone(&topo.flakes[id]);
-        rewire_flake(&f, id, old_graph, &topo.flakes)?;
+        rewire_flake(&f, id, old_graph, topo)?;
     }
     for id in &plan.remove {
         let f = topo.flakes.remove(id).expect("validated removal");
@@ -411,12 +437,15 @@ fn spawn_new_flakes(
 
 /// Spawn replacement flakes for relocations on a *different*
 /// container, cloning the live config and the live (possibly updated)
-/// pellet factory.
+/// pellet factory.  A TCP-fed original gets a fresh ingress endpoint
+/// bound on the replacement up front (failures still abort with zero
+/// side effects); the endpoint is published at cut-over.
 fn spawn_replacements(
     run: &RunningDataflow,
     plan: &RecomposePlan,
     old_flakes: &HashMap<String, Arc<Flake>>,
     old_containers: &HashMap<String, Arc<Container>>,
+    endpoints: &Arc<EndpointTable>,
 ) -> Result<Vec<PlacedFlake>> {
     let mut out = Vec::new();
     for id in &plan.relocate {
@@ -434,12 +463,22 @@ fn spawn_replacements(
         };
         let cfg = old.config();
         let factory = old.current_factory();
+        let serve_tcp = old.tcp_endpoint().is_some();
         let placed = run
             .manager
             .allocate_avoiding(cfg.cores, &old_c.id)
             .and_then(|c| c.spawn_flake(cfg, factory).map(|f| (f, c)));
         match placed {
-            Ok((f, c)) => out.push((id.clone(), f, c)),
+            Ok((f, c)) => {
+                if serve_tcp {
+                    if let Err(e) = f.serve_tcp_in(0, endpoints) {
+                        let _ = c.remove_flake(id);
+                        teardown(&out);
+                        return Err(e);
+                    }
+                }
+                out.push((id.clone(), f, c));
+            }
             Err(e) => {
                 teardown(&out);
                 return Err(e);
@@ -450,33 +489,41 @@ fn spawn_replacements(
 }
 
 /// Atomically set every output port of `flake` to the targets `graph`
-/// prescribes, resolved against the current flake map.
+/// prescribes.  Targets are logical endpoint handles resolved through
+/// the topology's table at send time; the sink flake and port are
+/// still validated eagerly against the live flake map so a bad edge
+/// fails the surgery, not the stream.
 fn rewire_flake(
     flake: &Arc<Flake>,
     id: &str,
     graph: &DataflowGraph,
-    flakes: &HashMap<String, Arc<Flake>>,
+    topo: &Topology,
 ) -> Result<()> {
     for port in flake.output_ports() {
         let mut targets: Vec<Arc<dyn Transport>> = Vec::new();
         for edge in graph.edges_from(id, &port) {
-            let sink = flakes.get(&edge.to_pellet).ok_or_else(|| {
-                FloeError::Graph(format!(
-                    "recompose: edge target '{}' has no flake",
-                    edge.to_pellet
-                ))
-            })?;
-            let queue = sink.input_queue(&edge.to_port)?;
-            targets.push(Arc::new(InProcTransport {
-                queue,
-                label: format!(
+            let sink =
+                topo.flakes.get(&edge.to_pellet).ok_or_else(|| {
+                    FloeError::Graph(format!(
+                        "recompose: edge target '{}' has no flake",
+                        edge.to_pellet
+                    ))
+                })?;
+            sink.input_queue(&edge.to_port)?; // validate the port
+            targets.push(Arc::new(EndpointTransport::new(
+                Arc::clone(&topo.endpoints),
+                EndpointAddr::new(
+                    edge.to_pellet.clone(),
+                    edge.to_port.clone(),
+                ),
+                format!(
                     "{}.{} -> {}.{}",
                     edge.from_pellet,
                     edge.from_port,
                     edge.to_pellet,
                     edge.to_port
                 ),
-            }));
+            )));
         }
         flake.replace_output_targets(&port, targets)?;
     }

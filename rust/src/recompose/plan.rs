@@ -31,6 +31,16 @@ pub struct RecomposePlan {
     pub remove: Vec<String>,
     /// Pellets whose flakes move to a different container.
     pub relocate: Vec<String>,
+    /// The rebind step of the pause frontier: pellets whose endpoint
+    /// publications are replaced at cut-over.  Their logical addresses
+    /// stay stable; the engine republishes the physical resolution at
+    /// the new container so every sender — including remote TCP peers
+    /// — re-resolves after the move.  Today every relocation rebinds
+    /// (local queues republish too), so this equals `relocate` by
+    /// construction; it is a separate step so future deltas that
+    /// rebind without relocating (e.g. re-homing an ingress endpoint
+    /// in place) slot in without changing the engine's phase order.
+    pub rebind: Vec<String>,
 }
 
 /// Compile `delta` against the live graph.
@@ -146,6 +156,7 @@ pub fn compile(
             )));
         }
     }
+    let rebind = relocate.clone();
     Ok(RecomposePlan {
         new_graph,
         pause_set: pause.into_iter().collect(),
@@ -153,6 +164,7 @@ pub fn compile(
         spawn,
         remove,
         relocate,
+        rebind,
     })
 }
 
@@ -201,6 +213,7 @@ mod tests {
         assert_eq!(plan.pause_set, vec!["l", "src"]);
         assert_eq!(plan.rewire, vec!["src"]);
         assert_eq!(plan.relocate, vec!["l"]);
+        assert_eq!(plan.rebind, vec!["l"], "relocation implies rebind");
     }
 
     #[test]

@@ -11,12 +11,13 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use floe::adaptation::{
-    AdaptationSample, DynamicStrategy, ElasticAction, ElasticDecision,
-    ElasticityConfig, ElasticityPolicy, StaticLookAhead,
+    AdaptationSample, AdaptationStrategy, DynamicStrategy, ElasticAction,
+    ElasticDecision, ElasticityConfig, ElasticityPolicy, StaticLookAhead,
 };
 use floe::coordinator::{
     AdaptationSetup, Coordinator, LaunchOptions, RunningDataflow,
 };
+use floe::flake::FlakeObservation;
 use floe::graph::{
     EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
     SplitMode, WindowSpec,
@@ -111,6 +112,8 @@ fn closed_loop(seed: u64, total_cores: usize, steps: usize) -> Outcome {
         saturation_k: 3,
         cooldown: 10,
         max_cores: 8,
+        consolidate_k: 0, // scale-in off: keep the seeded traces stable
+        underused_cores: 2,
     });
     policy.watch(
         "hot",
@@ -421,6 +424,8 @@ fn policy_relocation_releases_vacated_vm() {
         saturation_k: 3,
         cooldown: 10,
         max_cores: 16,
+        consolidate_k: 0,
+        underused_cores: 2,
     });
     policy.watch("hot", Box::new(StaticLookAhead { cores: 16 }));
     let mut relocated = false;
@@ -563,5 +568,149 @@ fn monitor_drops_removed_pellet() {
     let a2 = history_count(&run, "a");
     assert_eq!(b1, b2, "monitor kept sampling a removed pellet");
     assert!(a2 > a1, "monitor stopped sampling a surviving pellet");
+    run.stop();
+}
+
+/// Oracle strategy for the scale-in scenario: the observation's
+/// arrival rate carries the workload phase — a spike wants a full VM,
+/// a trough wants the minimum.
+struct PhaseStrategy;
+
+impl AdaptationStrategy for PhaseStrategy {
+    fn decide(&mut self, obs: &FlakeObservation, _t: f64) -> usize {
+        if obs.arrival_rate > 100.0 {
+            8
+        } else {
+            1
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "phase"
+    }
+}
+
+fn phase_obs(spike: bool, cores: usize) -> FlakeObservation {
+    FlakeObservation {
+        queue_len: if spike { 500 } else { 0 },
+        arrival_rate: if spike { 400.0 } else { 0.0 },
+        completion_rate: 0.0,
+        service_latency: 0.1,
+        selectivity: 1.0,
+        cores,
+        instances: cores * 4,
+    }
+}
+
+/// ROADMAP scale-in (the half of elasticity most systems skip): under
+/// a PeriodicSpikes-shaped load — trough, burst, trough, collapsed to
+/// deterministic per-step phases so every decision is exact — the
+/// policy packs the underused container's flake onto a peer and
+/// releases the emptied VM (`active_vms` shrinks), scales back out
+/// when the burst returns, consolidates again on the second trough,
+/// and never flutters: opposite-direction moves are separated by at
+/// least the cooldown window.
+#[test]
+fn consolidation_packs_underused_container_and_releases_vm() {
+    let cloud = SimulatedCloud::new(512, Duration::ZERO);
+    let registry = PelletRegistry::with_builtins();
+    let mgr =
+        ResourceManager::new(Arc::clone(&cloud) as Arc<dyn CloudProvider>);
+    let coord = Coordinator::new(mgr, registry);
+    let mut g = GraphBuilder::new("scale-in");
+    g.pellet("src", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("hot", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .cores(8);
+    g.pellet("sink", "floe.builtin.CountSink").in_port("in").stateful();
+    g.edge("src", "out", "hot", "in");
+    g.edge("hot", "out", "sink", "in");
+    let run = Arc::new(
+        coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap(),
+    );
+    // hot (8 cores) fills one VM alone; src + sink share another.
+    assert_eq!(cloud.active_vms(), 2);
+
+    let cooldown = 4usize;
+    let mut policy = ElasticityPolicy::new(ElasticityConfig {
+        saturation_k: 3,
+        cooldown,
+        max_cores: 8,
+        consolidate_k: 3,
+        underused_cores: 2,
+    });
+    policy.watch("hot", Box::new(PhaseStrategy));
+
+    let mut phases = vec![false; 8]; // trough: settle + consolidate
+    phases.extend(vec![true; 10]); // burst: saturate + scale out
+    phases.extend(vec![false; 8]); // trough: consolidate again
+
+    for (t, spike) in phases.iter().enumerate() {
+        let cores = run.flake("hot").unwrap().cores();
+        let obs = phase_obs(*spike, cores);
+        policy.step_with(&run, t as f64, |_, _| obs);
+    }
+
+    let trace = policy.trace();
+    let consolidations = trace
+        .iter()
+        .filter(|d| {
+            matches!(d.action, ElasticAction::Consolidate { .. })
+        })
+        .count();
+    let relocations = trace
+        .iter()
+        .filter(|d| matches!(d.action, ElasticAction::Relocate { .. }))
+        .count();
+    // Trough 1 packed hot onto the src/sink VM and released its VM;
+    // the burst scaled back out; trough 2 packed again.
+    assert_eq!(consolidations, 2, "trace: {trace:?}");
+    assert_eq!(relocations, 1, "trace: {trace:?}");
+    assert_eq!(policy.consolidations().len(), 2);
+    assert_eq!(cloud.active_vms(), 1, "emptied VM was not released");
+    assert_eq!(coord.manager().containers().len(), 1);
+    assert_eq!(
+        run.container("hot").unwrap().id,
+        run.container("src").unwrap().id,
+        "hot was not packed onto the peer container"
+    );
+    // No flutter: every pair of consecutive moves (either direction)
+    // is separated by at least the cooldown window.
+    let mut moves: Vec<f64> = trace
+        .iter()
+        .filter(|d| {
+            matches!(
+                d.action,
+                ElasticAction::Relocate { .. }
+                    | ElasticAction::Consolidate { .. }
+            )
+        })
+        .map(|d| d.t)
+        .collect();
+    moves.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for w in moves.windows(2) {
+        assert!(
+            w[1] - w[0] >= cooldown as f64,
+            "flutter: moves at {moves:?}"
+        );
+    }
+    // The pipeline still streams end-to-end after the dance.
+    for i in 0..100 {
+        run.inject("src", "in", Message::text(format!("p{i}"))).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(20)));
+    let count = run
+        .flake("sink")
+        .unwrap()
+        .state()
+        .get("count")
+        .and_then(|j| j.as_f64())
+        .unwrap();
+    assert_eq!(count, 100.0, "stream broken after scale-in/out cycle");
     run.stop();
 }

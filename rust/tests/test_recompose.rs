@@ -10,9 +10,9 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use floe::channel::{ChannelBackend, TcpSender};
+use floe::channel::{ChannelBackend, EndpointAddr, TcpSender};
 use floe::coordinator::{Coordinator, LaunchOptions, RunningDataflow};
-use floe::error::{FloeError, Result};
+use floe::error::Result;
 use floe::graph::{
     EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
     SplitMode, WindowSpec,
@@ -414,41 +414,69 @@ fn bad_deltas_reject_atomically() {
     run.stop();
 }
 
-/// Relocating a flake with a live TCP receiver is rejected up front
-/// with `FloeError::Recompose` (remote port maps cannot rebind yet —
-/// ROADMAP item), with zero side effects; flakes without TCP inputs
-/// still relocate.
-#[test]
-fn relocate_rejected_for_tcp_fed_flake() {
+/// The headline capability this stack exists for: a flake fed over a
+/// live loopback `TcpReceiver` relocates to another container
+/// mid-stream with **zero message loss and per-producer FIFO**.  The
+/// remote sender holds only the logical address
+/// (`floe://gate/in`) and rebinds across the move: the engine
+/// republishes the flake's endpoints at the new container, the
+/// sender drains its old connection in order and reconnects to the
+/// new physical endpoint.
+fn tcp_fed_relocation_roundtrip(backend: ChannelBackend) {
     let (coord, collected) = setup();
     let mut g = GraphBuilder::new("tcp-reloc");
-    g.pellet("head", "floe.builtin.Identity")
+    g.pellet("gate", "floe.builtin.Identity")
         .in_port("in")
-        .out_port("out", SplitMode::RoundRobin);
-    g.pellet("tail", "test.Collect").in_port("in");
-    g.edge("head", "out", "tail", "in");
-    let run = coord
-        .launch(g.build().unwrap(), LaunchOptions::default())
-        .unwrap();
-    let ep = run.flake("head").unwrap().serve_tcp(0).unwrap();
+        .out_port("out", SplitMode::RoundRobin)
+        .sequential();
+    g.pellet("tail", "test.Collect").in_port("in").sequential();
+    g.edge("gate", "out", "tail", "in");
+    let options = LaunchOptions {
+        input_shards: 1,
+        channel_backend: backend,
+        ..LaunchOptions::default()
+    };
+    let run = Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
+    let ep_before = run.serve_tcp("gate", 0).unwrap();
 
+    // Remote producer: logical sender, messages in flight for the
+    // whole surgery.
+    let total = 2000usize;
+    let table = run.endpoints();
+    let sender = std::thread::spawn(move || {
+        let tx = TcpSender::logical(
+            table,
+            &EndpointAddr::new("gate", "in"),
+        )
+        .unwrap();
+        for i in 0..total {
+            tx.send(Message::text(format!("m{i:05}"))).unwrap();
+            if i % 50 == 0 {
+                std::thread::sleep(Duration::from_micros(300));
+            }
+        }
+    });
+    std::thread::sleep(Duration::from_millis(10));
+
+    // Relocate the TCP-fed flake — the veto is gone, the move is
+    // legal and rebinds the endpoint live.
+    let home = run.container("gate").unwrap().id.clone();
     let mut d = GraphDelta::against(&run.graph());
-    d.relocate_flake("head");
-    let err = run.recompose(&d).unwrap_err();
-    assert!(
-        matches!(err, FloeError::Recompose(_)),
-        "wrong error category: {err}"
-    );
-    assert!(err.to_string().contains("TcpReceiver"), "{err}");
-    // Zero side effects: version unchanged, the remote edge still
-    // feeds the stream.
-    assert_eq!(run.graph_version(), 1);
-    assert!(run.recompose_history().is_empty());
-    let tx = TcpSender::connect(&ep, "in").unwrap();
-    for i in 0..20 {
-        tx.send(Message::text(format!("t{i}"))).unwrap();
-    }
-    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    d.relocate_flake("gate");
+    let stats = run.recompose(&d).unwrap();
+    assert_eq!(stats.relocated, vec!["gate"]);
+    assert_eq!(stats.rebound, vec!["gate"], "no endpoint rebind step");
+    assert_ne!(run.container("gate").unwrap().id, home, "did not move");
+    // Same logical address, new physical endpoint.
+    let ep_after = run
+        .endpoints()
+        .resolve_tcp("gate")
+        .expect("gate lost its tcp endpoint");
+    assert_ne!(ep_before, ep_after, "physical endpoint did not rebind");
+
+    sender.join().unwrap();
+    // TCP delivery is asynchronous: poll until the full count landed.
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
     loop {
         let n = collected
             .lock()
@@ -456,21 +484,35 @@ fn relocate_rejected_for_tcp_fed_flake() {
             .iter()
             .filter(|m| !m.is_landmark())
             .count();
-        if n >= 20 {
+        if n >= total {
             break;
         }
         assert!(
             std::time::Instant::now() < deadline,
-            "tcp messages never arrived"
+            "lost messages across tcp-fed relocation ({n}/{total})"
         );
         std::thread::sleep(Duration::from_millis(5));
     }
-    // The guard is per flake: 'tail' has no TCP input and moves fine.
-    let mut d = GraphDelta::against(&run.graph());
-    d.relocate_flake("tail");
-    run.recompose(&d).unwrap();
-    assert_eq!(run.graph_version(), 2);
+    let got = collected.lock().unwrap();
+    let texts: Vec<&str> = got
+        .iter()
+        .filter(|m| !m.is_landmark())
+        .map(|m| m.as_text().unwrap())
+        .collect();
+    assert_eq!(texts.len(), total, "duplicates across the rebind");
+    assert_fifo(&texts);
+    drop(got);
     run.stop();
+}
+
+#[test]
+fn tcp_fed_relocation_zero_loss_fifo() {
+    tcp_fed_relocation_roundtrip(ChannelBackend::Ring);
+}
+
+#[test]
+fn tcp_fed_relocation_zero_loss_fifo_on_mutex_backend() {
+    tcp_fed_relocation_roundtrip(ChannelBackend::Mutex);
 }
 
 /// The acceptance scenario: insert a pellet into a running pipeline,

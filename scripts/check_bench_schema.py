@@ -63,9 +63,13 @@ REQUIRED = {
         "messages.injected",
         "messages.delivered",
         "messages.lost",
+        "tcp_messages.injected",
+        "tcp_messages.delivered",
+        "tcp_messages.lost",
         "downtime_ms.insert_on_edge",
         "downtime_ms.remove_pellet",
         "downtime_ms.relocate_flake",
+        "downtime_ms.tcp_relocation",
         "cutover_lock_ms",
     ],
     "BENCH_adaptation.json": [
@@ -81,6 +85,13 @@ REQUIRED = {
         "scale_out_step_ms",
         "downtime_ms",
         "cutover_lock_ms",
+        "scale_in.consolidate_k",
+        "scale_in.underused_cores",
+        "scale_in.time_to_consolidate_samples",
+        "scale_in.consolidations",
+        "scale_in.released_vms",
+        "scale_in.step_ms",
+        "scale_in.downtime_ms",
         "messages.injected",
         "messages.delivered",
         "messages.lost",
