@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::error::Result;
 use floe::graph::{GraphBuilder, SplitMode};
 use floe::manager::{ResourceManager, SimulatedCloud};
@@ -63,7 +63,7 @@ fn main() {
     g.edge("stage1", "out", "stage2", "in");
     g.edge("stage2", "out", "sink", "in");
     let run = Arc::new(
-        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap(),
+        coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap(),
     );
 
     // Continuous injection in the background — the stream never stops.

@@ -11,7 +11,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::error::Result;
 use floe::graph::{
     EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
@@ -76,7 +76,7 @@ fn main() {
     g.edge("work", "out", "sink", "in");
     let run = Arc::new(
         coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap(),
     );
     println!(

@@ -9,7 +9,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::graph::{patterns, GraphBuilder, SplitMode};
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::message::{Landmark, Message};
@@ -56,7 +56,7 @@ fn main() {
         ResourceManager::new(SimulatedCloud::tsangpo()),
         registry,
     );
-    let run = coord.launch(graph, LaunchOptions::default()).expect("launch");
+    let run = coord.launch(graph, RuntimeOptions::new()).expect("launch");
 
     // 4. Stream text through, then close the logical window with a
     //    landmark so the streaming reducers emit their counts.

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use floe::adaptation::DynamicStrategy;
 use floe::apps::smartgrid;
-use floe::coordinator::{AdaptationSetup, Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::message::Message;
 use floe::pellet::PelletRegistry;
@@ -34,18 +34,15 @@ fn main() {
     );
     // The paper runs this dataflow with the dynamic adaptation strategy by
     // default (§IV-A).
-    let options = LaunchOptions {
-        adaptation: Some(AdaptationSetup {
-            make: Box::new(|_| {
-                Box::new(DynamicStrategy {
-                    min_cores: 1,
-                    ..DynamicStrategy::default()
-                })
-            }),
-            interval: Duration::from_millis(100),
+    let options = RuntimeOptions::new().adaptation(
+        Box::new(|_| {
+            Box::new(DynamicStrategy {
+                min_cores: 1,
+                ..DynamicStrategy::default()
+            })
         }),
-        ..LaunchOptions::default()
-    };
+        Duration::from_millis(100),
+    );
     let run = coord.launch(graph, options).expect("launch");
 
     // Mixed-frequency sources (§IV-A: 1/min meters to 1/day archives —

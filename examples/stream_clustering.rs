@@ -20,7 +20,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use floe::apps::clustering::{self, text};
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::message::{Landmark, Message};
 use floe::pellet::builtins::CollectSink;
@@ -85,7 +85,7 @@ fn main() {
         "tap",
         "in",
     ));
-    let run = coord.launch(graph, LaunchOptions::default()).expect("launch");
+    let run = coord.launch(graph, RuntimeOptions::new()).expect("launch");
 
     // Stream posts, remembering each post's true topic (generation order
     // == aggregator processing order is NOT guaranteed, so tag via text).

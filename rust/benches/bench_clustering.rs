@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use floe::apps::clustering;
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::message::{Landmark, Message};
 use floe::pellet::PelletRegistry;
@@ -30,7 +30,7 @@ fn run_once(
     let graph =
         clustering::clustering_graph(params.batch, buckets, searchers)
             .unwrap();
-    let run = coord.launch(graph, LaunchOptions::default()).unwrap();
+    let run = coord.launch(graph, RuntimeOptions::new()).unwrap();
     let mut gen = clustering::PostGen::new(5);
     let start = Instant::now();
     for _ in 0..posts {

@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 use floe::adaptation::{
     DynamicStrategy, ElasticAction, ElasticityConfig, ElasticityPolicy,
 };
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::error::Result;
 use floe::flake::FlakeObservation;
 use floe::graph::{GraphBuilder, SplitMode};
@@ -150,7 +150,7 @@ fn main() {
     g.edge("hot", "out", "sink", "in");
     let run = Arc::new(
         coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap(),
     );
 

@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use floe::apps::smartgrid;
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::message::Message;
 use floe::pellet::PelletRegistry;
@@ -19,7 +19,7 @@ fn run_once(events: usize, alpha: usize) -> (f64, f64, usize) {
         ResourceManager::new(SimulatedCloud::tsangpo()),
         registry,
     );
-    let options = LaunchOptions { alpha, ..LaunchOptions::default() };
+    let options = RuntimeOptions::new().alpha(alpha);
     let run = coord
         .launch(smartgrid::integration_graph().unwrap(), options)
         .unwrap();

@@ -22,7 +22,7 @@ use std::thread;
 use std::time::Duration;
 
 use floe::channel::{EndpointAddr, TcpSender};
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::error::Result;
 use floe::graph::{
     EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
@@ -124,7 +124,7 @@ fn main() {
     g.edge("work", "out", "sink", "in");
     let run = Arc::new(
         coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap(),
     );
 
@@ -206,7 +206,7 @@ fn main() {
     g.edge("gate", "out", "tsink", "in");
     let run2 = Arc::new(
         coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap(),
     );
     run2.serve_tcp("gate", 0).expect("bind tcp ingress");

@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use floe::coordinator::{Coordinator, LaunchOptions, RunningDataflow};
+use floe::coordinator::{Coordinator, RuntimeOptions, RunningDataflow};
 use floe::error::Result;
 use floe::graph::{GraphBuilder, SplitMode};
 use floe::manager::{ResourceManager, SimulatedCloud};
@@ -79,7 +79,7 @@ fn setup(cost_us: u64) -> (
     g.pellet("sink", "b.Sink").in_port("in").sequential();
     g.edge("work", "out", "sink", "in");
     let run = Arc::new(
-        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap(),
+        coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap(),
     );
     (run, stamps)
 }

@@ -164,6 +164,16 @@ impl ElasticityPolicy {
         }
     }
 
+    /// Build a policy from the launch-wide
+    /// [`crate::coordinator::RuntimeOptions`] — the one place every
+    /// runtime knob now lives — so elasticity runs share their
+    /// configuration source with the launch itself.
+    pub fn from_options(
+        options: &crate::coordinator::RuntimeOptions,
+    ) -> ElasticityPolicy {
+        ElasticityPolicy::new(options.elasticity)
+    }
+
     /// Put a pellet under elastic control.
     pub fn watch(
         &mut self,
@@ -423,7 +433,7 @@ impl ElasticityPolicy {
             self.consolidate_cooldown -= 1;
             return;
         }
-        let containers = run.manager.containers();
+        let containers = run.manager().containers();
         let mut ripe: Vec<Arc<Container>> = Vec::new();
         for c in &containers {
             let ids = c.flake_ids();

@@ -29,6 +29,8 @@ use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use crate::channel::{ShardedQueue, Transport};
 use crate::error::{FloeError, Result};
@@ -244,6 +246,13 @@ impl EndpointTable {
     }
 }
 
+/// How long a blocking send waits out a closed-but-published sink
+/// queue: wide enough to bridge a `ReplaceFailed` repair of a crashed
+/// sink (lease expiry + respawn + checkpoint restore + republish).
+const REPAIR_WAIT: Duration = Duration::from_secs(5);
+/// Pause between re-resolutions while waiting.
+const REPAIR_BACKOFF: Duration = Duration::from_millis(2);
+
 struct CachedSink {
     version: u64,
     queue: Option<Arc<ShardedQueue<Message>>>,
@@ -256,10 +265,15 @@ struct CachedSink {
 /// the recomposition engine; after a relocation republishes the sink,
 /// the next send lands in the replacement without rewiring.
 ///
-/// Failure semantics match the physical `InProcTransport`: a closed
-/// sink queue surfaces as a channel error (the recompose engine pauses
-/// and rewires the upstream frontier before a sink's queues close, so
-/// a live edge never races that window).
+/// Failure semantics: an *unpublished* endpoint is an immediate
+/// channel error (the recompose engine rewires the upstream frontier
+/// before it retires a sink, so a live edge only sees this on
+/// misconfiguration).  A *closed* queue under a standing publication
+/// is different — that is a crashed sink whose repair is in flight
+/// (a crash closes the queues but deliberately leaves the publication
+/// up), so blocking sends wait it out up to [`REPAIR_WAIT`],
+/// re-resolving on every table version bump, and land in the
+/// replacement once `ReplaceFailed` republishes it.
 pub struct EndpointTransport {
     table: Arc<EndpointTable>,
     addr: EndpointAddr,
@@ -300,17 +314,41 @@ impl EndpointTransport {
             ))
         })
     }
+
+    /// The sink queue, waiting out a closed-but-published one (a
+    /// crashed sink mid-repair — see the type docs).  The closed check
+    /// happens *before* the push because `push` consumes its message
+    /// even when it fails; a close that races the push itself is a
+    /// crash-instant loss, which checkpoint replay already bounds.
+    fn live_sink(&self) -> Result<Arc<ShardedQueue<Message>>> {
+        let mut deadline: Option<Instant> = None;
+        loop {
+            let q = self.sink()?;
+            if !q.is_closed() {
+                return Ok(q);
+            }
+            let d = *deadline
+                .get_or_insert_with(|| Instant::now() + REPAIR_WAIT);
+            if Instant::now() >= d {
+                return Err(FloeError::Channel(format!(
+                    "{} closed (no repair within {REPAIR_WAIT:?})",
+                    self.label
+                )));
+            }
+            thread::sleep(REPAIR_BACKOFF);
+        }
+    }
 }
 
 impl Transport for EndpointTransport {
     fn send(&self, msg: Message) -> Result<()> {
-        self.sink()?.push(msg).map_err(|_| {
+        self.live_sink()?.push(msg).map_err(|_| {
             FloeError::Channel(format!("{} closed", self.label))
         })
     }
 
     fn send_batch(&self, msgs: Vec<Message>) -> Result<()> {
-        self.sink()?.push_batch(msgs).map_err(|_| {
+        self.live_sink()?.push_batch(msgs).map_err(|_| {
             FloeError::Channel(format!("{} closed", self.label))
         })
     }
@@ -413,6 +451,33 @@ mod tests {
         tx.send_batch(vec![Message::text("two")]).unwrap();
         assert!(q1.is_empty(), "stale queue hit after republication");
         assert_eq!(q2.pop().unwrap().as_text(), Some("two"));
+    }
+
+    /// A crashed sink closes its queues but leaves its publication up;
+    /// a blocking send must wait out that window and land in the
+    /// replacement once the repair republishes the logical address.
+    #[test]
+    fn transport_waits_out_closed_queue_until_republish() {
+        let t = EndpointTable::new();
+        let q1 = queue();
+        t.publish("a", ports(&q1), None);
+        let tx = EndpointTransport::new(
+            Arc::clone(&t),
+            EndpointAddr::new("a", "in"),
+            "edge",
+        );
+        q1.close(); // crash: queues die, publication stands
+        let t2 = Arc::clone(&t);
+        let repair = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(50));
+            let q2 = queue();
+            t2.publish("a", ports(&q2), None);
+            q2
+        });
+        tx.send(Message::text("bridged")).unwrap();
+        let q2 = repair.join().unwrap();
+        assert_eq!(q2.pop().unwrap().as_text(), Some("bridged"));
+        assert!(q1.is_empty());
     }
 
     #[test]

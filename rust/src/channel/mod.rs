@@ -38,7 +38,7 @@
 //! knob on [`crate::flake::FlakeConfig`] (default
 //! [`crate::flake::DEFAULT_BATCH_SIZE`]); batch size, shard count and
 //! the channel backend are all surfaced through
-//! `LaunchOptions`/`FlakeConfig`.
+//! `RuntimeOptions`/`FlakeConfig`.
 //!
 //! # Location transparency
 //!

@@ -11,7 +11,7 @@
 //! round-robin and drain in batches.
 //!
 //! Each shard is backed by one of two interchangeable primitives (the
-//! [`ChannelBackend`] knob on `FlakeConfig`/`LaunchOptions`):
+//! [`ChannelBackend`] knob on `FlakeConfig`/`RuntimeOptions`):
 //!
 //! * [`ChannelBackend::Ring`] (default) — the lock-free
 //!   [`super::RingQueue`]: atomic batch claims, no mutex on the hot

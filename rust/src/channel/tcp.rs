@@ -34,7 +34,11 @@
 //!   wait for the receiver to finish decoding and close), then
 //!   reconnects to the new endpoint — so per-producer FIFO survives
 //!   the rebind.  Write failures retry through the same re-resolve
-//!   path with bounded attempts and backoff.
+//!   path: fixed targets with bounded attempts, logical targets
+//!   against a wall-clock deadline wide enough to bridge a failure
+//!   *repair* (container death → lease expiry → `ReplaceFailed`
+//!   respawn → republish), so upstream senders ride out the window
+//!   instead of erroring into it.
 //!
 //! Delivery is at-least-once across reconnects: a connection that
 //! breaks mid-buffer resends the whole scratch buffer, so frames the
@@ -44,7 +48,7 @@
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -65,9 +69,18 @@ const READ_CHUNK: usize = 64 << 10;
 const DELIVER_ATTEMPTS: usize = 1000;
 const DELIVER_BACKOFF: Duration = Duration::from_millis(2);
 
-/// Bounded send retry: attempts per batch (reconnect + re-resolve
-/// between attempts, exponential backoff from this base).
+/// Bounded send retry for fixed targets: attempts per batch
+/// (reconnect + re-resolve between attempts, exponential backoff).
 const SEND_ATTEMPTS: usize = 4;
+
+/// Logical targets retry against this wall-clock deadline instead of
+/// a fixed attempt count: the sink may be mid-*repair* (its container
+/// died; the lease has to expire and `ReplaceFailed` respawn +
+/// republish it), which is a far wider window than a reconnect blip.
+const LOGICAL_SEND_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Cap on the exponential backoff between send retries.
+const SEND_BACKOFF_CAP: Duration = Duration::from_millis(100);
 
 /// Bound on draining the old connection during a logical rebind.
 const REBIND_DRAIN_TIMEOUT: Duration = Duration::from_secs(2);
@@ -81,11 +94,29 @@ enum RxRoute {
     Logical { table: Arc<EndpointTable>, flake_id: String },
 }
 
+/// Idle-teardown state shared between the accept loop and the
+/// per-connection threads.  Disabled by default; a relocation
+/// replacement enables it on the lingering receivers it adopts (their
+/// job is only to bridge not-yet-rebound senders), so the sockets and
+/// accept threads are reclaimed once every sender has moved on.
+struct IdleState {
+    /// Idle window in ms; 0 = teardown disabled.
+    timeout_ms: AtomicU64,
+    /// Connections currently being served.
+    active: AtomicUsize,
+    /// ms since the receiver's epoch of the most recent connection
+    /// close (or of the enable call) — the idle clock's start.
+    last_close_ms: AtomicU64,
+    torn_down: AtomicBool,
+}
+
 /// Listens for framed messages and pushes them into per-port input queues.
 pub struct TcpReceiver {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<thread::JoinHandle<()>>,
+    idle: Arc<IdleState>,
+    epoch: Instant,
 }
 
 impl TcpReceiver {
@@ -119,17 +150,60 @@ impl TcpReceiver {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let route = Arc::new(route);
+        let epoch = Instant::now();
+        let idle = Arc::new(IdleState {
+            timeout_ms: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            last_close_ms: AtomicU64::new(0),
+            torn_down: AtomicBool::new(false),
+        });
+        let idle2 = Arc::clone(&idle);
         let join = thread::Builder::new()
             .name(format!("flake-rx-{}", addr.port()))
             .spawn(move || {
                 while !stop2.load(Ordering::SeqCst) {
+                    let timeout_ms =
+                        idle2.timeout_ms.load(Ordering::SeqCst);
+                    if timeout_ms > 0
+                        && idle2.active.load(Ordering::SeqCst) == 0
+                    {
+                        let now_ms =
+                            epoch.elapsed().as_millis() as u64;
+                        let last = idle2
+                            .last_close_ms
+                            .load(Ordering::SeqCst);
+                        if now_ms.saturating_sub(last) >= timeout_ms {
+                            idle2
+                                .torn_down
+                                .store(true, Ordering::SeqCst);
+                            crate::log_info!(
+                                "tcp: receiver {addr} idle for \
+                                 {timeout_ms} ms with every sender \
+                                 rebound; tearing down"
+                            );
+                            break; // drops the listener
+                        }
+                    }
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let route = Arc::clone(&route);
                             let stop3 = Arc::clone(&stop2);
+                            let idle3 = Arc::clone(&idle2);
+                            idle2.active.fetch_add(1, Ordering::SeqCst);
                             thread::spawn(move || {
                                 let _ =
                                     serve_stream(stream, &route, &stop3);
+                                // Close stamp *before* the decrement:
+                                // the accept loop only reads the idle
+                                // clock when active == 0, so it must
+                                // already be fresh by then.
+                                idle3.last_close_ms.store(
+                                    epoch.elapsed().as_millis() as u64,
+                                    Ordering::SeqCst,
+                                );
+                                idle3
+                                    .active
+                                    .fetch_sub(1, Ordering::SeqCst);
                             });
                         }
                         Err(e)
@@ -143,12 +217,35 @@ impl TcpReceiver {
                 }
             })
             .expect("spawn tcp receiver");
-        Ok(TcpReceiver { addr, stop, join: Some(join) })
+        Ok(TcpReceiver { addr, stop, join: Some(join), idle, epoch })
     }
 
     /// `host:port` of this receiver.
     pub fn endpoint(&self) -> String {
         self.addr.to_string()
+    }
+
+    /// Arm idle teardown: once no connection has been live for
+    /// `timeout`, the accept loop exits and the listening socket
+    /// closes.  Used on lingering receivers a relocation replacement
+    /// adopts — they only exist to bridge senders that have not yet
+    /// rebound, so when the last one disconnects the socket is
+    /// reclaimed instead of lingering for the flake's lifetime.  The
+    /// idle clock starts at this call.
+    pub fn enable_idle_teardown(&self, timeout: Duration) {
+        self.idle.last_close_ms.store(
+            self.epoch.elapsed().as_millis() as u64,
+            Ordering::SeqCst,
+        );
+        self.idle.timeout_ms.store(
+            (timeout.as_millis() as u64).max(1),
+            Ordering::SeqCst,
+        );
+    }
+
+    /// Whether idle teardown already closed this receiver.
+    pub fn is_torn_down(&self) -> bool {
+        self.idle.torn_down.load(Ordering::SeqCst)
     }
 
     pub fn shutdown(&mut self) {
@@ -561,10 +658,13 @@ fn drain_connection(mut stream: TcpStream) {
     );
 }
 
-/// Write the framed scratch buffer with bounded retries: every failed
-/// attempt drops the connection, re-resolves the endpoint (logical
-/// targets — the sink may have just moved) and backs off briefly
-/// before reconnecting.
+/// Write the framed scratch buffer with retries: every failed attempt
+/// drops the connection, re-resolves the endpoint (logical targets —
+/// the sink may have just moved) and backs off briefly before
+/// reconnecting.  Fixed targets give up after [`SEND_ATTEMPTS`];
+/// logical targets retry until [`LOGICAL_SEND_DEADLINE`], wide enough
+/// to bridge a `ReplaceFailed` repair of a dead sink (the re-resolve
+/// between attempts picks up the replacement's republished endpoint).
 ///
 /// Delivery is at-least-once across reconnects: if the connection
 /// breaks mid-buffer, the retry resends the whole buffer, so frames
@@ -575,17 +675,38 @@ fn write_frames(
     target: &SenderTarget,
     inner: &mut SenderInner,
 ) -> Result<()> {
+    let deadline = match target {
+        SenderTarget::Fixed(_) => None,
+        SenderTarget::Logical { .. } => {
+            Some(Instant::now() + LOGICAL_SEND_DEADLINE)
+        }
+    };
     let mut last_err = String::new();
-    for attempt in 0..SEND_ATTEMPTS {
+    let mut attempt = 0usize;
+    loop {
         if attempt > 0 {
-            thread::sleep(Duration::from_millis(1 << attempt));
+            let give_up = match deadline {
+                Some(d) => Instant::now() >= d,
+                None => attempt >= SEND_ATTEMPTS,
+            };
+            if give_up {
+                return Err(FloeError::Channel(format!(
+                    "tcp: giving up after {attempt} attempts: \
+                     {last_err}"
+                )));
+            }
+            let backoff =
+                Duration::from_millis(1u64 << attempt.min(10));
+            thread::sleep(backoff.min(SEND_BACKOFF_CAP));
             // The old connection is already dead; no drain handshake.
             inner.seen_version = 0; // force a fresh resolve
             if let Err(e) = refresh_endpoint(target, inner, false) {
                 last_err = e.to_string();
+                attempt += 1;
                 continue;
             }
         }
+        attempt += 1;
         let Some(endpoint) = inner.endpoint.clone() else {
             last_err = "endpoint unresolved".to_string();
             continue;
@@ -615,9 +736,6 @@ fn write_frames(
             }
         }
     }
-    Err(FloeError::Channel(format!(
-        "tcp: giving up after {SEND_ATTEMPTS} attempts: {last_err}"
-    )))
 }
 
 impl Transport for TcpSender {
@@ -913,6 +1031,58 @@ mod tests {
             thread::sleep(Duration::from_millis(2));
         }
         assert!(q.is_empty());
+        rx.shutdown();
+    }
+
+    /// Regression (PR 5 follow-up): a lingering receiver armed with
+    /// idle teardown stays up while a sender is still connected, and
+    /// tears itself down — closing the listening socket — once the
+    /// last sender disconnects and the idle window elapses.
+    #[test]
+    fn idle_teardown_waits_for_last_sender_then_closes() {
+        let (mut rx, q, ep) = start_pair();
+        let tx = TcpSender::connect(&ep, "in").unwrap();
+        tx.send(Message::text("x")).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while q.is_empty() {
+            assert!(Instant::now() < deadline, "delivery missing");
+            thread::sleep(Duration::from_millis(2));
+        }
+        rx.enable_idle_teardown(Duration::from_millis(100));
+        // A live connection pins the receiver past the idle window.
+        thread::sleep(Duration::from_millis(300));
+        assert!(!rx.is_torn_down(), "torn down under a live sender");
+        tx.send(Message::text("still-up")).unwrap();
+        drop(tx); // last sender rebinds away
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !rx.is_torn_down() {
+            assert!(
+                Instant::now() < deadline,
+                "idle receiver never tore down"
+            );
+            thread::sleep(Duration::from_millis(5));
+        }
+        // The listener is gone: fresh connections are refused.
+        assert!(TcpStream::connect(&ep).is_err());
+        rx.shutdown(); // joins the already-exited accept thread
+    }
+
+    /// Idle teardown on a receiver that never sees a connection fires
+    /// one idle window after it is armed — not instantly.
+    #[test]
+    fn idle_teardown_clock_starts_at_enable() {
+        let (mut rx, _q, _ep) = start_pair();
+        thread::sleep(Duration::from_millis(150));
+        rx.enable_idle_teardown(Duration::from_millis(100));
+        assert!(!rx.is_torn_down(), "fired before the window");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !rx.is_torn_down() {
+            assert!(
+                Instant::now() < deadline,
+                "armed idle receiver never tore down"
+            );
+            thread::sleep(Duration::from_millis(5));
+        }
         rx.shutdown();
     }
 

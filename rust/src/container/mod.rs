@@ -7,7 +7,10 @@
 //! endpoint mirrors the paper's management interface.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
 
 use crate::error::{FloeError, Result};
 use crate::flake::{Flake, FlakeConfig};
@@ -15,11 +18,23 @@ use crate::pellet::PelletFactory;
 use crate::util::http::{HttpServer, Request, Response};
 use crate::util::json::Json;
 
+/// The monotonic heartbeat a container publishes while alive.  The
+/// coordinator's failure detector samples [`Container::heartbeat`]
+/// each lease tick; a counter that stops advancing is a dead
+/// container (see `crate::coordinator::LeaseTracker`).
+struct Heart {
+    beat: AtomicU64,
+    stop: AtomicBool,
+}
+
 /// A container bound to one VM's cores.
 pub struct Container {
     pub id: String,
     total_cores: usize,
     inner: Mutex<Inner>,
+    heart: Arc<Heart>,
+    hb_join: Mutex<Option<thread::JoinHandle<()>>>,
+    dead: AtomicBool,
 }
 
 struct Inner {
@@ -37,7 +52,91 @@ impl Container {
                 flakes: HashMap::new(),
                 grants: HashMap::new(),
             }),
+            heart: Arc::new(Heart {
+                beat: AtomicU64::new(0),
+                stop: AtomicBool::new(false),
+            }),
+            hb_join: Mutex::new(None),
+            dead: AtomicBool::new(false),
         })
+    }
+
+    /// Start the heartbeat thread bumping [`Container::heartbeat`]
+    /// every `interval`.  Idempotent: a no-op while a heartbeat is
+    /// already running, or on a dead container (so the failure
+    /// detector can call it every tick to adopt containers provisioned
+    /// after launch).
+    pub fn start_heartbeat(&self, interval: Duration) {
+        if self.is_dead() {
+            return;
+        }
+        let mut join = self.hb_join.lock().expect("heartbeat poisoned");
+        if join.is_some() {
+            return;
+        }
+        self.heart.stop.store(false, Ordering::SeqCst);
+        let heart = Arc::clone(&self.heart);
+        let handle = thread::Builder::new()
+            .name(format!("floe-hb-{}", self.id))
+            .spawn(move || {
+                while !heart.stop.load(Ordering::SeqCst) {
+                    heart.beat.fetch_add(1, Ordering::SeqCst);
+                    thread::sleep(interval);
+                }
+            })
+            .expect("spawn heartbeat");
+        *join = Some(handle);
+    }
+
+    /// Current heartbeat counter (frozen forever once the container
+    /// dies).
+    pub fn heartbeat(&self) -> u64 {
+        self.heart.beat.load(Ordering::SeqCst)
+    }
+
+    /// Stop the heartbeat thread (graceful shutdown path; does not
+    /// mark the container dead).
+    pub fn stop_heartbeat(&self) {
+        self.heart.stop.store(true, Ordering::SeqCst);
+        if let Some(j) =
+            self.hb_join.lock().expect("heartbeat poisoned").take()
+        {
+            let _ = j.join();
+        }
+    }
+
+    /// Whether this container has been declared (or made) dead.  Dead
+    /// containers reject new flakes and are skipped by placement.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Declare the container dead without touching its flakes — the
+    /// failure detector calls this when the lease expires (a really
+    /// crashed container's flakes are already gone; marking just
+    /// fences placement).
+    pub fn mark_dead(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+        self.stop_heartbeat();
+    }
+
+    /// Simulate a container crash: freeze the heartbeat and
+    /// crash-stop every hosted flake *without* unpublishing its
+    /// endpoints — a crashed host cannot run cleanup, so stale
+    /// logical routes linger until a repair republishes them (exactly
+    /// what upstream retry has to bridge).  The flake/grant maps stay
+    /// populated: repair still reads the husk's config and the
+    /// containing entry, like a coordinator inspecting its records of
+    /// a lost remote host.
+    pub fn kill(&self) {
+        self.mark_dead();
+        let flakes: Vec<Arc<Flake>> = {
+            let inner = self.inner.lock().expect("container poisoned");
+            inner.flakes.values().cloned().collect()
+        };
+        for f in flakes {
+            f.crash();
+        }
     }
 
     pub fn total_cores(&self) -> usize {
@@ -61,6 +160,12 @@ impl Container {
         cfg: FlakeConfig,
         factory: PelletFactory,
     ) -> Result<Arc<Flake>> {
+        if self.is_dead() {
+            return Err(FloeError::Resource(format!(
+                "container {}: dead, cannot spawn '{}'",
+                self.id, cfg.pellet_id
+            )));
+        }
         let want = cfg.cores.max(1);
         let mut inner = self.inner.lock().expect("container poisoned");
         let used: usize = inner.grants.values().sum();
@@ -158,6 +263,7 @@ impl Container {
 
     /// Stop everything.
     pub fn shutdown(&self) {
+        self.stop_heartbeat();
         let mut inner = self.inner.lock().expect("container poisoned");
         for (_, f) in inner.flakes.drain() {
             f.shutdown();
@@ -236,6 +342,13 @@ impl Container {
     }
 }
 
+impl Drop for Container {
+    fn drop(&mut self) {
+        // Never leak a heartbeat thread past the container's life.
+        self.stop_heartbeat();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +380,7 @@ mod tests {
             batch_size: crate::flake::DEFAULT_BATCH_SIZE,
             input_shards: 2,
             channel_backend: crate::channel::ChannelBackend::default(),
+            dedup: false,
         }
     }
 
@@ -308,6 +422,35 @@ mod tests {
         c.remove_flake("a").unwrap();
         assert_eq!(c.free_cores(), 4);
         assert_eq!(c.flake_count(), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn heartbeat_advances_then_freezes_on_kill() {
+        let c = Container::new("vm0", 8);
+        c.spawn_flake(cfg("a", 2), factory()).unwrap();
+        assert_eq!(c.heartbeat(), 0);
+        c.start_heartbeat(Duration::from_millis(2));
+        // Idempotent second start.
+        c.start_heartbeat(Duration::from_millis(2));
+        let deadline = std::time::Instant::now()
+            + Duration::from_secs(2);
+        while c.heartbeat() < 3 {
+            assert!(std::time::Instant::now() < deadline, "no beats");
+            thread::sleep(Duration::from_millis(2));
+        }
+        c.kill();
+        assert!(c.is_dead());
+        let frozen = c.heartbeat();
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(c.heartbeat(), frozen, "beat after kill");
+        // Dead containers reject new flakes and new heartbeats.
+        assert!(c.spawn_flake(cfg("b", 1), factory()).is_err());
+        c.start_heartbeat(Duration::from_millis(2));
+        thread::sleep(Duration::from_millis(10));
+        assert_eq!(c.heartbeat(), frozen);
+        // The husk's records survive the crash for repair to read.
+        assert_eq!(c.flake_count(), 1);
         c.shutdown();
     }
 

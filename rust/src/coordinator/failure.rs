@@ -1,0 +1,370 @@
+//! Fault tolerance: lease-based failure detection and automatic
+//! repair (ROADMAP item 4, grounded in Shukla & Simmhan, "Toward
+//! Reliable and Rapid Elasticity for Streaming Dataflows on Clouds").
+//!
+//! Three cooperating pieces:
+//!
+//! * **Heartbeats** — every [`crate::container::Container`] under a
+//!   fault-tolerant launch runs a heartbeat thread bumping a monotonic
+//!   counter.  A crash ([`crate::container::Container::kill`]) freezes
+//!   the counter, exactly like a dead remote agent going silent.
+//! * **Leases** — the coordinator-side [`FailureDetector`] ticker
+//!   samples every container's counter each `lease_interval`; a
+//!   counter that does not advance for `lease_missed_k` consecutive
+//!   samples expires its lease and the container is declared dead.
+//!   The pure sampling logic lives in [`LeaseTracker`] so it can be
+//!   property-tested without threads.
+//! * **Repair** — a dead container's flakes are re-spawned through a
+//!   [`crate::recompose::DeltaOp::ReplaceFailed`] recomposition: the
+//!   engine places replacements on surviving (or freshly provisioned)
+//!   containers via `allocate_avoiding`, restores each from its last
+//!   periodic checkpoint, and republishes its logical endpoints so
+//!   every sender — in-process edge or remote TCP peer — re-resolves
+//!   and re-routes automatically.  The detector then evicts the dead
+//!   container's VM.
+//!
+//! The detector also drives **periodic checkpointing**: every
+//! `checkpoint_interval` it snapshots each live flake (state + dedup
+//! watermarks + buffered input) into the dataflow's checkpoint store,
+//! bounding what a crash can lose to one interval.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::DataflowInner;
+use crate::container::Container;
+use crate::util::json::Json;
+
+/// Fault-tolerance knobs (set through
+/// [`crate::coordinator::RuntimeOptions::fault_tolerance`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultToleranceConfig {
+    /// Detector sampling period (one lease tick).
+    pub lease_interval: Duration,
+    /// Consecutive samples without a heartbeat advance before a
+    /// container's lease expires and it is declared dead.
+    pub lease_missed_k: u32,
+    /// Periodic checkpoint period; `None` disables periodic
+    /// checkpoints (repair then restores whatever
+    /// [`crate::coordinator::RunningDataflow::checkpoint_now`] last
+    /// captured, or starts fresh).
+    pub checkpoint_interval: Option<Duration>,
+}
+
+impl Default for FaultToleranceConfig {
+    fn default() -> Self {
+        FaultToleranceConfig {
+            lease_interval: Duration::from_millis(50),
+            lease_missed_k: 3,
+            checkpoint_interval: None,
+        }
+    }
+}
+
+impl FaultToleranceConfig {
+    /// Containers beat several times per lease tick so a healthy
+    /// heartbeat thread always advances the counter between samples.
+    pub(crate) fn heartbeat_interval(&self) -> Duration {
+        (self.lease_interval / 4).max(Duration::from_millis(1))
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LeaseState {
+    beat: u64,
+    misses: u32,
+    dead: bool,
+}
+
+/// Pure lease bookkeeping: feed it one heartbeat sample per container
+/// per tick; it reports lease expiry exactly once per container.
+///
+/// No false positive while heartbeats flow: any advance of the counter
+/// between samples resets the miss count.  Detection is prompt: a
+/// counter frozen at tick `T` expires its lease by tick
+/// `T + lease_missed_k` (the property tests in `tests/props.rs` pin
+/// both bounds).
+pub struct LeaseTracker {
+    missed_k: u32,
+    seen: HashMap<String, LeaseState>,
+}
+
+impl LeaseTracker {
+    pub fn new(missed_k: u32) -> LeaseTracker {
+        LeaseTracker { missed_k: missed_k.max(1), seen: HashMap::new() }
+    }
+
+    /// Record one sample of `id`'s heartbeat counter.  Returns `true`
+    /// exactly once: on the sample that expires the lease.
+    pub fn observe(&mut self, id: &str, beat: u64) -> bool {
+        match self.seen.get_mut(id) {
+            None => {
+                // First sight is the baseline, never a miss.
+                self.seen.insert(
+                    id.to_string(),
+                    LeaseState { beat, misses: 0, dead: false },
+                );
+                false
+            }
+            Some(st) => {
+                if st.dead {
+                    return false;
+                }
+                if beat != st.beat {
+                    st.beat = beat;
+                    st.misses = 0;
+                    return false;
+                }
+                st.misses += 1;
+                if st.misses >= self.missed_k {
+                    st.dead = true;
+                    return true;
+                }
+                false
+            }
+        }
+    }
+
+    /// Whether `id`'s lease has expired.
+    pub fn is_dead(&self, id: &str) -> bool {
+        self.seen.get(id).map(|s| s.dead).unwrap_or(false)
+    }
+
+    /// Drop all state for `id` (after its container was evicted).
+    pub fn forget(&mut self, id: &str) {
+        self.seen.remove(id);
+    }
+}
+
+/// One detected container failure (see
+/// [`crate::coordinator::RunningDataflow::failures`]).
+#[derive(Debug, Clone)]
+pub struct FailureEvent {
+    /// The dead container.
+    pub container: String,
+    /// Pellets stranded on it at detection time.
+    pub flakes: Vec<String>,
+    /// Detector tick (multiples of `lease_interval` since launch) at
+    /// which the lease expired.
+    pub detected_at_tick: u64,
+}
+
+impl FailureEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("container", Json::str(self.container.clone())),
+            (
+                "flakes",
+                Json::Arr(
+                    self.flakes
+                        .iter()
+                        .map(|f| Json::str(f.clone()))
+                        .collect(),
+                ),
+            ),
+            (
+                "detected_at_tick",
+                Json::num(self.detected_at_tick as f64),
+            ),
+        ])
+    }
+}
+
+/// One repaired flake (see
+/// [`crate::coordinator::RunningDataflow::repairs`]).
+#[derive(Debug, Clone)]
+pub struct RepairEvent {
+    /// The re-spawned pellet.
+    pub flake: String,
+    /// The dead container it was stranded on.
+    pub from_container: String,
+    /// The surviving / freshly provisioned container now hosting it.
+    pub to_container: String,
+    /// Whether a checkpoint existed to restore from (false = the
+    /// replacement started with fresh state).
+    pub restored_from_checkpoint: bool,
+    /// Buffered input messages replayed out of the checkpoint.
+    pub replayed: usize,
+}
+
+impl RepairEvent {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("flake", Json::str(self.flake.clone())),
+            ("from", Json::str(self.from_container.clone())),
+            ("to", Json::str(self.to_container.clone())),
+            (
+                "restored_from_checkpoint",
+                Json::Bool(self.restored_from_checkpoint),
+            ),
+            ("replayed", Json::num(self.replayed as f64)),
+        ])
+    }
+}
+
+/// Coordinator-side ticker thread (the failure-detection sibling of
+/// [`crate::adaptation::Monitor`]): samples heartbeats, expires
+/// leases, drives periodic checkpoints, and executes repairs through
+/// the gated recompose path.
+pub(crate) struct FailureDetector {
+    stop: Arc<AtomicBool>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl FailureDetector {
+    pub(crate) fn start(
+        inner: Arc<DataflowInner>,
+        cfg: FaultToleranceConfig,
+    ) -> FailureDetector {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = thread::Builder::new()
+            .name("floe-failure-detector".into())
+            .spawn(move || detector_loop(&inner, cfg, &stop2))
+            .expect("spawn failure detector");
+        FailureDetector { stop, join: Some(join) }
+    }
+
+    pub(crate) fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for FailureDetector {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Distinct live containers currently hosting flakes.
+fn container_snapshot(
+    inner: &DataflowInner,
+) -> HashMap<String, Arc<Container>> {
+    let topo = inner.topo.read().expect("topology poisoned");
+    let mut out = HashMap::new();
+    for c in topo.containers.values() {
+        out.entry(c.id.clone()).or_insert_with(|| Arc::clone(c));
+    }
+    out
+}
+
+fn detector_loop(
+    inner: &DataflowInner,
+    cfg: FaultToleranceConfig,
+    stop: &AtomicBool,
+) {
+    let mut tracker = LeaseTracker::new(cfg.lease_missed_k);
+    let mut tick: u64 = 0;
+    let mut last_checkpoint = Instant::now();
+    // Dead containers whose flakes still await repair (a repair delta
+    // that loses a version race with a concurrent surgery simply
+    // retries on the next tick).
+    let mut pending: Vec<String> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        thread::sleep(cfg.lease_interval);
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        tick += 1;
+
+        // Periodic checkpoints, serialized with surgeries (the store
+        // is what a later repair restores from).
+        if let Some(interval) = cfg.checkpoint_interval {
+            if last_checkpoint.elapsed() >= interval {
+                inner.checkpoint_all();
+                last_checkpoint = Instant::now();
+            }
+        }
+
+        // Sample every container's heartbeat.  Containers provisioned
+        // after launch (elastic scale-out, repairs) are adopted here:
+        // `start_heartbeat` is an idempotent no-op on a beating or
+        // dead container, and the tracker baselines them on first
+        // sight.
+        let containers = container_snapshot(inner);
+        for (cid, c) in &containers {
+            if pending.iter().any(|p| p == cid) {
+                continue;
+            }
+            c.start_heartbeat(cfg.heartbeat_interval());
+            if tracker.observe(cid, c.heartbeat()) {
+                c.mark_dead();
+                let flakes = inner.flakes_on_container(cid);
+                crate::log_warn!(
+                    "failure detector: container '{cid}' missed \
+                     {} lease(s); declaring dead ({} flake(s) \
+                     stranded)",
+                    cfg.lease_missed_k,
+                    flakes.len()
+                );
+                inner.record_failure(FailureEvent {
+                    container: cid.clone(),
+                    flakes,
+                    detected_at_tick: tick,
+                });
+                pending.push(cid.clone());
+            }
+        }
+
+        // Repair pending containers; keep retrying across version
+        // races until each one's flakes are all re-homed.
+        pending.retain(|cid| match inner.repair_dead_container(cid) {
+            Ok(()) => {
+                tracker.forget(cid);
+                false
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "failure detector: repair of '{cid}' failed \
+                     ({e}); retrying next tick"
+                );
+                true
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_tracker_baselines_then_expires() {
+        let mut t = LeaseTracker::new(3);
+        assert!(!t.observe("c", 7)); // baseline
+        assert!(!t.observe("c", 8)); // advancing
+        assert!(!t.observe("c", 8)); // miss 1
+        assert!(!t.observe("c", 8)); // miss 2
+        assert!(t.observe("c", 8)); // miss 3: expired
+        assert!(t.is_dead("c"));
+        // Expiry fires exactly once.
+        assert!(!t.observe("c", 8));
+        assert!(!t.observe("c", 9));
+    }
+
+    #[test]
+    fn lease_tracker_advance_resets_misses() {
+        let mut t = LeaseTracker::new(2);
+        assert!(!t.observe("c", 1));
+        assert!(!t.observe("c", 1)); // miss 1
+        assert!(!t.observe("c", 2)); // advance resets
+        assert!(!t.observe("c", 2)); // miss 1
+        assert!(t.observe("c", 2)); // miss 2: expired
+    }
+
+    #[test]
+    fn lease_tracker_forget_rebaselines() {
+        let mut t = LeaseTracker::new(1);
+        assert!(!t.observe("c", 5));
+        assert!(t.observe("c", 5));
+        t.forget("c");
+        assert!(!t.observe("c", 5)); // fresh baseline, not dead
+        assert!(!t.is_dead("c"));
+    }
+}

@@ -3,24 +3,34 @@
 //! dataflow **bottom-up** so upstream pellets never emit into unwired
 //! sinks, activates the graph, and orchestrates application dynamism —
 //! in-place task updates, coordinated sub-graph updates, the cascading
-//! "wave" update, and full structural surgery on the live topology via
-//! [`crate::recompose`].
+//! "wave" update, full structural surgery on the live topology via
+//! [`crate::recompose`], and automatic failure repair via
+//! [`failure::FailureDetector`].
 
+mod failure;
 mod server;
+mod stats;
 
+pub use failure::{
+    FailureEvent, FaultToleranceConfig, LeaseTracker, RepairEvent,
+};
+pub(crate) use failure::FailureDetector;
 pub use server::CoordinatorServer;
+pub use stats::{DataflowStats, EndpointInfo, PelletStats};
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
-use crate::adaptation::{FlakeDirectory, Monitor, StrategyFactory};
+use crate::adaptation::{
+    ElasticityConfig, FlakeDirectory, Monitor, StrategyFactory,
+};
 use crate::channel::{
     ChannelBackend, EndpointAddr, EndpointTable, EndpointTransport,
     Transport,
 };
 use crate::error::{FloeError, Result};
-use crate::flake::{Flake, FlakeConfig};
+use crate::flake::{Flake, FlakeCheckpoint, FlakeConfig};
 use crate::graph::DataflowGraph;
 use crate::manager::ResourceManager;
 use crate::message::Message;
@@ -29,8 +39,24 @@ use crate::recompose::{GraphDelta, RecomposeStats};
 use crate::util::json::Json;
 use crate::util::time::{Clock, WallClock};
 
-/// Launch options.
-pub struct LaunchOptions {
+/// Unified, builder-style runtime options: every knob a launch fixes —
+/// flake tuning, channel backend, adaptation, elasticity and fault
+/// tolerance — in one place.
+///
+/// ```no_run
+/// use floe::prelude::*;
+/// use std::time::Duration;
+///
+/// let options = RuntimeOptions::new()
+///     .batch_size(64)
+///     .backend(ChannelBackend::Ring)
+///     .checkpoint_interval(Duration::from_millis(250));
+/// ```
+///
+/// Consumed by [`Coordinator::launch`] (via `impl Into<RuntimeOptions>`,
+/// so the deprecated [`LaunchOptions`] still works for one release) and
+/// by [`crate::adaptation::ElasticityPolicy::from_options`].
+pub struct RuntimeOptions {
     /// Instances per core.
     pub alpha: usize,
     /// Input queue capacity per port (aggregate across the port's
@@ -46,20 +72,135 @@ pub struct LaunchOptions {
     /// Which primitive backs each input-port shard (lock-free ring by
     /// default; [`ChannelBackend::Mutex`] selects the reference queue).
     pub channel_backend: ChannelBackend,
+    /// Drop already-seen [`Message::seq`] values at each input port
+    /// (per-port high watermark, captured/restored with checkpoints)
+    /// so at-least-once redelivery after a repair does not
+    /// double-count.  Requires monotone single-producer delivery per
+    /// port; off by default.
+    pub dedup: bool,
+    /// Adaptation strategy factory per pellet id; None = no monitor.
+    pub adaptation: Option<AdaptationSetup>,
+    /// Lease-based failure detection + automatic repair; None = a dead
+    /// container strands its flakes (the pre-fault-tolerance
+    /// behaviour).
+    pub fault_tolerance: Option<FaultToleranceConfig>,
+    /// Knobs for [`crate::adaptation::ElasticityPolicy`] instances
+    /// built from these options.
+    pub elasticity: ElasticityConfig,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        RuntimeOptions {
+            alpha: crate::ALPHA,
+            queue_capacity: 4096,
+            batch_size: crate::flake::DEFAULT_BATCH_SIZE,
+            input_shards: crate::channel::DEFAULT_SHARDS,
+            channel_backend: ChannelBackend::default(),
+            dedup: false,
+            adaptation: None,
+            fault_tolerance: None,
+            elasticity: ElasticityConfig::default(),
+        }
+    }
+}
+
+impl RuntimeOptions {
+    pub fn new() -> RuntimeOptions {
+        RuntimeOptions::default()
+    }
+
+    /// Instances per core.
+    pub fn alpha(mut self, alpha: usize) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    /// Aggregate input queue capacity per port.
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity;
+        self
+    }
+
+    /// Messages per batched channel operation (1 disables batching).
+    pub fn batch_size(mut self, batch: usize) -> Self {
+        self.batch_size = batch;
+        self
+    }
+
+    /// Producer shards per flake input port.
+    pub fn input_shards(mut self, shards: usize) -> Self {
+        self.input_shards = shards;
+        self
+    }
+
+    /// Channel primitive backing each input-port shard.
+    pub fn backend(mut self, backend: ChannelBackend) -> Self {
+        self.channel_backend = backend;
+        self
+    }
+
+    /// Toggle sequence-number dedup at every input port.
+    pub fn dedup(mut self, on: bool) -> Self {
+        self.dedup = on;
+        self
+    }
+
+    /// Watch every pellet with a strategy built by `make`, sampling at
+    /// `interval`.
+    pub fn adaptation(
+        mut self,
+        make: StrategyFactory,
+        interval: Duration,
+    ) -> Self {
+        self.adaptation = Some(AdaptationSetup { make, interval });
+        self
+    }
+
+    /// Enable failure detection + automatic repair with full control
+    /// over the lease knobs.
+    pub fn fault_tolerance(mut self, cfg: FaultToleranceConfig) -> Self {
+        self.fault_tolerance = Some(cfg);
+        self
+    }
+
+    /// Enable periodic checkpoints every `interval` (turning fault
+    /// tolerance on with default lease knobs if it was off).
+    pub fn checkpoint_interval(mut self, interval: Duration) -> Self {
+        self.fault_tolerance
+            .get_or_insert_with(FaultToleranceConfig::default)
+            .checkpoint_interval = Some(interval);
+        self
+    }
+
+    /// Knobs for elasticity policies built from these options.
+    pub fn elasticity(mut self, cfg: ElasticityConfig) -> Self {
+        self.elasticity = cfg;
+        self
+    }
+}
+
+/// Launch options (pre-PR 6 shape).
+#[deprecated(
+    note = "use the builder-style `RuntimeOptions` instead; this shim \
+            will be removed next release"
+)]
+pub struct LaunchOptions {
+    /// Instances per core.
+    pub alpha: usize,
+    /// Input queue capacity per port.
+    pub queue_capacity: usize,
+    /// Messages moved per batched channel operation on the hot path.
+    pub batch_size: usize,
+    /// Producer shards per flake input port.
+    pub input_shards: usize,
+    /// Which primitive backs each input-port shard.
+    pub channel_backend: ChannelBackend,
     /// Adaptation strategy factory per pellet id; None = no monitor.
     pub adaptation: Option<AdaptationSetup>,
 }
 
-/// Monitor configuration for a launch.
-pub struct AdaptationSetup {
-    /// Build a strategy for a pellet id.  Also used to auto-watch
-    /// pellets added by later graph surgery (see
-    /// [`Monitor::start_auto`]).
-    pub make: StrategyFactory,
-    /// Sampling interval.
-    pub interval: Duration,
-}
-
+#[allow(deprecated)]
 impl Default for LaunchOptions {
     fn default() -> Self {
         LaunchOptions {
@@ -73,6 +214,31 @@ impl Default for LaunchOptions {
     }
 }
 
+#[allow(deprecated)]
+impl From<LaunchOptions> for RuntimeOptions {
+    fn from(old: LaunchOptions) -> RuntimeOptions {
+        RuntimeOptions {
+            alpha: old.alpha,
+            queue_capacity: old.queue_capacity,
+            batch_size: old.batch_size,
+            input_shards: old.input_shards,
+            channel_backend: old.channel_backend,
+            adaptation: old.adaptation,
+            ..RuntimeOptions::default()
+        }
+    }
+}
+
+/// Monitor configuration for a launch.
+pub struct AdaptationSetup {
+    /// Build a strategy for a pellet id.  Also used to auto-watch
+    /// pellets added by later graph surgery (see
+    /// [`Monitor::start_auto`]).
+    pub make: StrategyFactory,
+    /// Sampling interval.
+    pub interval: Duration,
+}
+
 /// The per-flake knobs a launch fixes; retained so pellets added by
 /// later graph surgery match the launch configuration.
 #[derive(Debug, Clone, Copy)]
@@ -82,16 +248,18 @@ pub struct FlakeTuning {
     pub batch_size: usize,
     pub input_shards: usize,
     pub channel_backend: ChannelBackend,
+    pub dedup: bool,
 }
 
 impl FlakeTuning {
-    fn from_options(options: &LaunchOptions) -> FlakeTuning {
+    fn from_options(options: &RuntimeOptions) -> FlakeTuning {
         FlakeTuning {
             alpha: options.alpha,
             queue_capacity: options.queue_capacity,
             batch_size: options.batch_size.max(1),
             input_shards: options.input_shards.max(1),
             channel_backend: options.channel_backend,
+            dedup: options.dedup,
         }
     }
 
@@ -101,6 +269,7 @@ impl FlakeTuning {
         cfg.batch_size = self.batch_size;
         cfg.input_shards = self.input_shards;
         cfg.channel_backend = self.channel_backend;
+        cfg.dedup = self.dedup;
     }
 }
 
@@ -151,25 +320,46 @@ impl FlakeDirectory for RwLock<Topology> {
     }
 }
 
-/// A launched continuous dataflow.
-pub struct RunningDataflow {
+/// Everything the background control loops (monitor, failure detector)
+/// and the recompose engine share with the user-facing handle.  The
+/// [`RunningDataflow`] owns the loops; this inner state is behind an
+/// `Arc` so a detector thread can execute a repair recomposition while
+/// the handle is busy elsewhere.
+pub(crate) struct DataflowInner {
     pub(crate) topo: Arc<RwLock<Topology>>,
     pub(crate) registry: PelletRegistry,
     pub(crate) manager: Arc<ResourceManager>,
     pub(crate) tuning: FlakeTuning,
-    monitor: Mutex<Option<Monitor>>,
-    clock: Arc<dyn Clock>,
+    pub(crate) clock: Arc<dyn Clock>,
     /// Serializes structural surgeries *and* the in-place update
     /// entry points: a sync `update_pellet` pauses/resumes flakes, so
     /// letting it interleave with a recompose would resume a flake
-    /// the engine had quiesced mid-cut-over.
+    /// the engine had quiesced mid-cut-over.  Periodic checkpoints
+    /// take it too (a checkpoint pauses/resumes its flake).
     recompose_gate: Mutex<()>,
     recompose_log: Mutex<Vec<RecomposeStats>>,
+    /// Last checkpoint per pellet id — what a `ReplaceFailed` repair
+    /// restores from.  Entries for removed pellets are dropped by the
+    /// engine.
+    pub(crate) checkpoints: Mutex<HashMap<String, FlakeCheckpoint>>,
+    failures: Mutex<Vec<FailureEvent>>,
+    repairs: Mutex<Vec<RepairEvent>>,
 }
 
-impl RunningDataflow {
-    /// The container hosting a pellet's flake (for manual core regrants).
-    pub fn container(
+impl DataflowInner {
+    pub(crate) fn flake(&self, pellet_id: &str) -> Result<Arc<Flake>> {
+        self.topo
+            .read()
+            .expect("topology poisoned")
+            .flakes
+            .get(pellet_id)
+            .cloned()
+            .ok_or_else(|| {
+                FloeError::Graph(format!("no flake for pellet '{pellet_id}'"))
+            })
+    }
+
+    pub(crate) fn container(
         &self,
         pellet_id: &str,
     ) -> Result<Arc<crate::container::Container>> {
@@ -186,55 +376,8 @@ impl RunningDataflow {
             })
     }
 
-    /// The flake executing a pellet.
-    pub fn flake(&self, pellet_id: &str) -> Result<Arc<Flake>> {
-        self.topo
-            .read()
-            .expect("topology poisoned")
-            .flakes
-            .get(pellet_id)
-            .cloned()
-            .ok_or_else(|| {
-                FloeError::Graph(format!("no flake for pellet '{pellet_id}'"))
-            })
-    }
-
-    pub fn pellet_ids(&self) -> Vec<String> {
-        self.topo
-            .read()
-            .expect("topology poisoned")
-            .flakes
-            .keys()
-            .cloned()
-            .collect()
-    }
-
-    /// A snapshot of the current (versioned) graph.
-    pub fn graph(&self) -> DataflowGraph {
+    pub(crate) fn graph(&self) -> DataflowGraph {
         self.topo.read().expect("topology poisoned").graph.clone()
-    }
-
-    /// Current topology version (bumped by every applied delta).
-    pub fn graph_version(&self) -> u64 {
-        self.topo.read().expect("topology poisoned").graph.version
-    }
-
-    /// The dataflow's authoritative logical → physical endpoint table.
-    /// Remote senders hold this (plus a `floe://<flake>/<port>`
-    /// address) instead of a socket address, so they follow flake
-    /// relocations automatically.
-    pub fn endpoints(&self) -> Arc<EndpointTable> {
-        Arc::clone(&self.topo.read().expect("topology poisoned").endpoints)
-    }
-
-    /// Bind a TCP ingress endpoint (`127.0.0.1:port`, 0 = ephemeral)
-    /// for a pellet's input ports and record it under the pellet's
-    /// logical address.  Returns the bound `host:port`.  The fed flake
-    /// stays fully relocatable: connect with
-    /// `TcpSender::logical(run.endpoints(), &EndpointAddr::new(id,
-    /// port))` and the sender rebinds across moves.
-    pub fn serve_tcp(&self, pellet_id: &str, port: u16) -> Result<String> {
-        self.flake(pellet_id)?.serve_tcp(port)
     }
 
     /// Snapshot of live flake handles (lock dropped before return).
@@ -246,6 +389,200 @@ impl RunningDataflow {
             .values()
             .cloned()
             .collect()
+    }
+
+    /// Gated surgery entry point shared by the user-facing
+    /// [`RunningDataflow::recompose`] and the failure detector's
+    /// repairs.
+    pub(crate) fn recompose(
+        &self,
+        delta: &GraphDelta,
+    ) -> Result<RecomposeStats> {
+        let _gate =
+            self.recompose_gate.lock().expect("recompose gate poisoned");
+        let engine = crate::recompose::engine::RecomposeEngine::new(self);
+        let stats = engine.execute(delta)?;
+        self.recompose_log
+            .lock()
+            .expect("recompose log poisoned")
+            .push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Checkpoint every flake hosted on a live container into the
+    /// checkpoint store (the periodic tick of the failure detector, and
+    /// [`RunningDataflow::checkpoint_now`]).  Holds the recompose gate:
+    /// a checkpoint pauses/resumes its flake, which must never
+    /// interleave with a surgery's own quiesce.  Returns how many
+    /// flakes were captured; per-flake failures are logged and
+    /// skipped (the previous checkpoint stays in the store).
+    pub(crate) fn checkpoint_all(&self) -> usize {
+        let _gate =
+            self.recompose_gate.lock().expect("recompose gate poisoned");
+        let targets: Vec<(String, Arc<Flake>, bool)> = {
+            let topo = self.topo.read().expect("topology poisoned");
+            topo.flakes
+                .iter()
+                .map(|(id, f)| {
+                    let dead = topo
+                        .containers
+                        .get(id)
+                        .map(|c| c.is_dead())
+                        .unwrap_or(true);
+                    (id.clone(), Arc::clone(f), dead)
+                })
+                .collect()
+        };
+        let mut captured = 0;
+        for (id, flake, dead) in targets {
+            if dead {
+                continue; // a crashed flake cannot quiesce
+            }
+            match flake.checkpoint() {
+                Ok(cp) => {
+                    self.checkpoints
+                        .lock()
+                        .expect("checkpoint store poisoned")
+                        .insert(id, cp);
+                    captured += 1;
+                }
+                Err(e) => crate::log_warn!(
+                    "checkpoint of '{id}' failed: {e}"
+                ),
+            }
+        }
+        captured
+    }
+
+    /// Pellet ids currently placed on container `cid`.
+    pub(crate) fn flakes_on_container(&self, cid: &str) -> Vec<String> {
+        let topo = self.topo.read().expect("topology poisoned");
+        let mut ids: Vec<String> = topo
+            .containers
+            .iter()
+            .filter(|(_, c)| c.id == cid)
+            .map(|(pid, _)| pid.clone())
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// Re-home every flake stranded on dead container `cid` via one
+    /// `ReplaceFailed` delta, then evict the container's VM.  An error
+    /// (typically a version race with a concurrent user surgery) leaves
+    /// the container pending; the detector retries next tick.
+    pub(crate) fn repair_dead_container(&self, cid: &str) -> Result<()> {
+        let (version, stranded) = {
+            let topo = self.topo.read().expect("topology poisoned");
+            let mut ids: Vec<String> = topo
+                .containers
+                .iter()
+                .filter(|(_, c)| c.id == cid)
+                .map(|(pid, _)| pid.clone())
+                .collect();
+            ids.sort();
+            (topo.graph.version, ids)
+        };
+        if !stranded.is_empty() {
+            let mut delta = GraphDelta::new(version);
+            for id in &stranded {
+                delta.replace_failed(id);
+            }
+            self.recompose(&delta)?;
+        }
+        if let Err(e) = self.manager.evict(cid) {
+            crate::log_warn!(
+                "evict of dead container '{cid}' failed: {e}"
+            );
+        }
+        Ok(())
+    }
+
+    pub(crate) fn record_failure(&self, ev: FailureEvent) {
+        self.failures
+            .lock()
+            .expect("failure log poisoned")
+            .push(ev);
+    }
+
+    pub(crate) fn record_repair(&self, ev: RepairEvent) {
+        self.repairs.lock().expect("repair log poisoned").push(ev);
+    }
+
+    fn failures(&self) -> Vec<FailureEvent> {
+        self.failures.lock().expect("failure log poisoned").clone()
+    }
+
+    fn repairs(&self) -> Vec<RepairEvent> {
+        self.repairs.lock().expect("repair log poisoned").clone()
+    }
+}
+
+/// A launched continuous dataflow.
+pub struct RunningDataflow {
+    pub(crate) inner: Arc<DataflowInner>,
+    monitor: Mutex<Option<Monitor>>,
+    detector: Mutex<Option<FailureDetector>>,
+}
+
+impl RunningDataflow {
+    /// The container hosting a pellet's flake (for manual core regrants).
+    pub fn container(
+        &self,
+        pellet_id: &str,
+    ) -> Result<Arc<crate::container::Container>> {
+        self.inner.container(pellet_id)
+    }
+
+    /// The flake executing a pellet.
+    pub fn flake(&self, pellet_id: &str) -> Result<Arc<Flake>> {
+        self.inner.flake(pellet_id)
+    }
+
+    pub fn pellet_ids(&self) -> Vec<String> {
+        self.inner
+            .topo
+            .read()
+            .expect("topology poisoned")
+            .flakes
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    /// A snapshot of the current (versioned) graph.
+    pub fn graph(&self) -> DataflowGraph {
+        self.inner.graph()
+    }
+
+    /// Current topology version (bumped by every applied delta).
+    pub fn graph_version(&self) -> u64 {
+        self.inner.topo.read().expect("topology poisoned").graph.version
+    }
+
+    /// The dataflow's authoritative logical → physical endpoint table.
+    /// Remote senders hold this (plus a `floe://<flake>/<port>`
+    /// address) instead of a socket address, so they follow flake
+    /// relocations automatically.
+    pub fn endpoints(&self) -> Arc<EndpointTable> {
+        Arc::clone(
+            &self.inner.topo.read().expect("topology poisoned").endpoints,
+        )
+    }
+
+    /// The resource manager this dataflow allocates from.
+    pub(crate) fn manager(&self) -> &Arc<ResourceManager> {
+        &self.inner.manager
+    }
+
+    /// Bind a TCP ingress endpoint (`127.0.0.1:port`, 0 = ephemeral)
+    /// for a pellet's input ports and record it under the pellet's
+    /// logical address.  Returns the bound `host:port`.  The fed flake
+    /// stays fully relocatable: connect with
+    /// `TcpSender::logical(run.endpoints(), &EndpointAddr::new(id,
+    /// port))` and the sender rebinds across moves.
+    pub fn serve_tcp(&self, pellet_id: &str, port: u16) -> Result<String> {
+        self.inner.flake(pellet_id)?.serve_tcp(port)
     }
 
     /// Inject a message into a source pellet's input port (the paper's
@@ -269,7 +606,7 @@ impl RunningDataflow {
         // payload clone; the final attempt moves the message.
         const ATTEMPTS: usize = 8;
         for _ in 0..ATTEMPTS - 1 {
-            let flake = self.flake(pellet_id)?;
+            let flake = self.inner.flake(pellet_id)?;
             match flake.inject(port, msg.clone()) {
                 Ok(()) => return Ok(()),
                 // Only a closed input queue is transient (the flake is
@@ -281,7 +618,7 @@ impl RunningDataflow {
                 Err(e) => return Err(e),
             }
         }
-        self.flake(pellet_id)?.inject(port, msg)
+        self.inner.flake(pellet_id)?.inject(port, msg)
     }
 
     /// Wait for all flakes to drain (tests, graceful stop).  The idle
@@ -292,7 +629,7 @@ impl RunningDataflow {
         let deadline = std::time::Instant::now() + timeout;
         let mut idle_streak = 0;
         loop {
-            let busy = self.flake_snapshot().iter().any(|f| {
+            let busy = self.inner.flake_snapshot().iter().any(|f| {
                 f.queue_len() > 0
                     || f.ready_len() > 0
                     || f.probes()
@@ -324,11 +661,14 @@ impl RunningDataflow {
         sync: bool,
         landmark: bool,
     ) -> Result<u64> {
-        let _gate =
-            self.recompose_gate.lock().expect("recompose gate poisoned");
-        let flake = self.flake(pellet_id)?;
+        let _gate = self
+            .inner
+            .recompose_gate
+            .lock()
+            .expect("recompose gate poisoned");
+        let flake = self.inner.flake(pellet_id)?;
         let class = new_class.unwrap_or_else(|| flake.class());
-        let factory = self.registry.resolve(class)?;
+        let factory = self.inner.registry.resolve(class)?;
         flake.update_pellet(factory, sync, landmark)
     }
 
@@ -340,13 +680,16 @@ impl RunningDataflow {
         updates: &[(String, String)],
         landmark: bool,
     ) -> Result<()> {
-        let _gate =
-            self.recompose_gate.lock().expect("recompose gate poisoned");
+        let _gate = self
+            .inner
+            .recompose_gate
+            .lock()
+            .expect("recompose gate poisoned");
         // Validate everything first so we never pause on a bad request.
         let mut planned = Vec::new();
         for (pellet_id, class) in updates {
-            let flake = self.flake(pellet_id)?;
-            let factory = self.registry.resolve(class)?;
+            let flake = self.inner.flake(pellet_id)?;
+            let factory = self.inner.registry.resolve(class)?;
             planned.push((flake, factory));
         }
         for (flake, _) in &planned {
@@ -379,17 +722,20 @@ impl RunningDataflow {
         &self,
         updates: &[(String, String)],
     ) -> Result<Vec<u64>> {
-        let _gate =
-            self.recompose_gate.lock().expect("recompose gate poisoned");
-        let order = self.graph().wiring_order()?; // downstream-first
+        let _gate = self
+            .inner
+            .recompose_gate
+            .lock()
+            .expect("recompose gate poisoned");
+        let order = self.inner.graph().wiring_order()?; // downstream-first
         let mut planned = Vec::new();
         // Reverse = upstream-first traversal of the sub-graph.
         for id in order.iter().rev() {
             if let Some((_, class)) =
                 updates.iter().find(|(p, _)| p == id)
             {
-                let flake = self.flake(id)?;
-                let factory = self.registry.resolve(class)?;
+                let flake = self.inner.flake(id)?;
+                let factory = self.inner.registry.resolve(class)?;
                 planned.push((flake, factory));
             }
         }
@@ -408,20 +754,21 @@ impl RunningDataflow {
     /// **Live graph surgery** (§II-B "dynamic recomposition"): apply a
     /// [`GraphDelta`] — add/remove pellets and edges, splice a pellet
     /// into a live edge, retarget edges, relocate flakes across
-    /// containers — while the stream keeps flowing.  See
-    /// [`crate::recompose`] for semantics and guarantees.  Surgeries
-    /// are serialized per dataflow; the returned [`RecomposeStats`]
-    /// reports the measured pause-to-resume downtime.
+    /// containers, replace failed flakes — while the stream keeps
+    /// flowing.  See [`crate::recompose`] for semantics and
+    /// guarantees.  Surgeries are serialized per dataflow; the
+    /// returned [`RecomposeStats`] reports the measured
+    /// pause-to-resume downtime.
     pub fn recompose(&self, delta: &GraphDelta) -> Result<RecomposeStats> {
-        let _gate =
-            self.recompose_gate.lock().expect("recompose gate poisoned");
-        let engine = crate::recompose::engine::RecomposeEngine::new(self);
-        let stats = engine.execute(delta)?;
-        self.recompose_log
-            .lock()
-            .expect("recompose log poisoned")
-            .push(stats.clone());
-        Ok(stats)
+        self.inner.recompose(delta)
+    }
+
+    /// Checkpoint every flake into the in-memory store a later repair
+    /// restores from (the synchronous twin of the periodic
+    /// `checkpoint_interval` tick).  Returns how many flakes were
+    /// captured.
+    pub fn checkpoint_now(&self) -> usize {
+        self.inner.checkpoint_all()
     }
 
     /// Release every container no flake lives in back to the cloud
@@ -431,14 +778,18 @@ impl RunningDataflow {
     /// placement and spawn.  Returns how many containers were
     /// released.
     pub fn release_idle_containers(&self) -> Result<usize> {
-        let _gate =
-            self.recompose_gate.lock().expect("recompose gate poisoned");
-        self.manager.release_idle()
+        let _gate = self
+            .inner
+            .recompose_gate
+            .lock()
+            .expect("recompose gate poisoned");
+        self.inner.manager.release_idle()
     }
 
     /// Every applied surgery with its measured downtime, oldest first.
     pub fn recompose_history(&self) -> Vec<RecomposeStats> {
-        self.recompose_log
+        self.inner
+            .recompose_log
             .lock()
             .expect("recompose log poisoned")
             .clone()
@@ -457,12 +808,22 @@ impl RunningDataflow {
             .unwrap_or_default()
     }
 
-    /// Aggregated stats document (served by the coordinator endpoint).
-    pub fn stats_json(&self) -> Json {
-        let t = self.clock.now();
-        let mut pellets = Vec::new();
+    /// Container failures detected by the lease detector, oldest first.
+    pub fn failures(&self) -> Vec<FailureEvent> {
+        self.inner.failures()
+    }
+
+    /// Flakes re-homed by `ReplaceFailed` repairs, oldest first.
+    pub fn repairs(&self) -> Vec<RepairEvent> {
+        self.inner.repairs()
+    }
+
+    /// Typed aggregated stats (see [`DataflowStats`]).
+    pub fn stats(&self) -> DataflowStats {
+        let t = self.inner.clock.now();
         let (graph_name, graph_version, flakes, endpoints) = {
-            let topo = self.topo.read().expect("topology poisoned");
+            let topo =
+                self.inner.topo.read().expect("topology poisoned");
             let flakes: Vec<(String, Arc<Flake>)> = topo
                 .flakes
                 .iter()
@@ -475,60 +836,69 @@ impl RunningDataflow {
                 Arc::clone(&topo.endpoints),
             )
         };
+        let mut pellets = Vec::new();
         for (id, f) in &flakes {
             let obs = f.observe(t);
-            pellets.push(Json::obj(vec![
-                ("id", Json::str(id.clone())),
-                ("class", Json::str(f.class())),
-                ("cores", Json::num(obs.cores as f64)),
-                ("instances", Json::num(obs.instances as f64)),
-                ("queue", Json::num(obs.queue_len as f64)),
-                ("arrival_rate", Json::num(obs.arrival_rate)),
-                ("latency", Json::num(obs.service_latency)),
-                ("selectivity", Json::num(obs.selectivity)),
-                ("version", Json::num(f.version() as f64)),
-            ]));
+            pellets.push(PelletStats {
+                id: id.clone(),
+                class: f.class().to_string(),
+                cores: obs.cores,
+                instances: obs.instances,
+                queue: obs.queue_len,
+                arrival_rate: obs.arrival_rate,
+                latency: obs.service_latency,
+                selectivity: obs.selectivity,
+                version: f.version(),
+            });
         }
-        Json::obj(vec![
-            ("graph", Json::str(graph_name)),
-            ("graph_version", Json::num(graph_version as f64)),
-            (
-                "recomposes",
-                Json::num(
-                    self.recompose_log
-                        .lock()
-                        .expect("recompose log poisoned")
-                        .len() as f64,
-                ),
-            ),
-            (
-                "endpoints",
-                Json::obj(vec![
-                    (
-                        "version",
-                        Json::num(endpoints.version() as f64),
-                    ),
-                    (
-                        "published",
-                        Json::num(endpoints.published() as f64),
-                    ),
-                ]),
-            ),
-            ("t", Json::num(t)),
-            ("pellets", Json::Arr(pellets)),
-        ])
+        DataflowStats {
+            graph: graph_name,
+            graph_version,
+            recomposes: self
+                .inner
+                .recompose_log
+                .lock()
+                .expect("recompose log poisoned")
+                .len(),
+            endpoints: EndpointInfo {
+                version: endpoints.version(),
+                published: endpoints.published(),
+            },
+            t,
+            pellets,
+            failures: self.inner.failures(),
+            repairs: self.inner.repairs(),
+        }
     }
 
-    /// Stop the monitor and all flakes.
+    /// Aggregated stats document (served by the coordinator endpoint);
+    /// the JSON form of [`RunningDataflow::stats`].
+    pub fn stats_json(&self) -> Json {
+        self.stats().to_json()
+    }
+
+    /// Stop the control loops and all flakes.
     pub fn stop(&self) {
+        // Detector first: it must not race shutdown by mistaking
+        // deliberately stopped flakes for failures mid-teardown.
+        if let Some(mut d) =
+            self.detector.lock().expect("detector poisoned").take()
+        {
+            d.stop();
+        }
         if let Some(mut m) =
             self.monitor.lock().expect("monitor poisoned").take()
         {
             m.stop();
         }
-        let (order, flakes) = {
-            let topo = self.topo.read().expect("topology poisoned");
-            (topo.graph.wiring_order(), topo.flakes.clone())
+        let (order, flakes, containers) = {
+            let topo =
+                self.inner.topo.read().expect("topology poisoned");
+            (
+                topo.graph.wiring_order(),
+                topo.flakes.clone(),
+                topo.containers.clone(),
+            )
         };
         // Stop sources first (wiring order reversed = sources first), so
         // downstream flakes drain naturally before shutdown.
@@ -541,6 +911,9 @@ impl RunningDataflow {
         }
         for f in flakes.values() {
             f.shutdown();
+        }
+        for c in containers.values() {
+            c.stop_heartbeat();
         }
     }
 }
@@ -567,11 +940,15 @@ impl Coordinator {
 
     /// Parse, place, wire (bottom-up BFS ignoring loops) and activate a
     /// graph.  Returns the running dataflow handle with ingress access.
+    ///
+    /// Accepts anything convertible into [`RuntimeOptions`], which
+    /// keeps the deprecated [`LaunchOptions`] working for one release.
     pub fn launch(
         &self,
         graph: DataflowGraph,
-        options: LaunchOptions,
+        options: impl Into<RuntimeOptions>,
     ) -> Result<RunningDataflow> {
+        let options: RuntimeOptions = options.into();
         graph.validate()?;
         let order = graph.wiring_order()?;
         crate::log_info!(
@@ -660,15 +1037,35 @@ impl Coordinator {
             )
         });
 
-        Ok(RunningDataflow {
+        let inner = Arc::new(DataflowInner {
             topo,
             registry: self.registry.clone(),
             manager: Arc::clone(&self.manager),
             tuning,
-            monitor: Mutex::new(monitor),
             clock,
             recompose_gate: Mutex::new(()),
             recompose_log: Mutex::new(Vec::new()),
+            checkpoints: Mutex::new(HashMap::new()),
+            failures: Mutex::new(Vec::new()),
+            repairs: Mutex::new(Vec::new()),
+        });
+
+        // 4. Optional fault tolerance: heartbeat every launch
+        //    container (later containers are adopted by the detector
+        //    on first sight) and start the lease ticker.
+        let detector = options.fault_tolerance.map(|ft| {
+            let topo = inner.topo.read().expect("topology poisoned");
+            for c in topo.containers.values() {
+                c.start_heartbeat(ft.heartbeat_interval());
+            }
+            drop(topo);
+            FailureDetector::start(Arc::clone(&inner), ft)
+        });
+
+        Ok(RunningDataflow {
+            inner,
+            monitor: Mutex::new(monitor),
+            detector: Mutex::new(detector),
         })
     }
 
@@ -719,7 +1116,7 @@ mod tests {
         g.pellet("sink", "test.Collect").in_port("in");
         g.edge("up", "out", "sink", "in");
         let run = coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap();
 
         for i in 0..20 {
@@ -739,7 +1136,7 @@ mod tests {
         let mut g = GraphBuilder::new("bad");
         g.pellet("x", "no.such.Class");
         let err =
-            coord.launch(g.build().unwrap(), LaunchOptions::default());
+            coord.launch(g.build().unwrap(), RuntimeOptions::new());
         assert!(err.is_err());
     }
 
@@ -751,7 +1148,7 @@ mod tests {
             .in_port("in")
             .out_port("out", SplitMode::RoundRobin);
         let run = coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap();
         let stats = run.stats_json();
         assert_eq!(
@@ -766,6 +1163,55 @@ mod tests {
             stats.get("pellets").unwrap().as_arr().unwrap().len(),
             1
         );
+        // The typed form agrees with the document it serializes to.
+        let typed = run.stats();
+        assert_eq!(typed.graph, "s");
+        assert_eq!(typed.pellets.len(), 1);
+        assert!(typed.failures.is_empty());
+        assert!(typed.repairs.is_empty());
         run.stop();
+    }
+
+    // The one deliberately deprecated call site: the shim must keep
+    // compiling (and behaving) for one release.
+    #[test]
+    #[allow(deprecated)]
+    fn launch_options_shim_still_launches() {
+        let coord = coordinator();
+        let mut g = GraphBuilder::new("shim");
+        g.pellet("id1", "floe.builtin.Identity")
+            .in_port("in")
+            .out_port("out", SplitMode::RoundRobin);
+        let run = coord
+            .launch(g.build().unwrap(), LaunchOptions::default())
+            .unwrap();
+        run.inject("id1", "in", Message::text("x")).unwrap();
+        assert!(run.drain(Duration::from_secs(5)));
+        let opts: RuntimeOptions = LaunchOptions::default().into();
+        assert!(!opts.dedup);
+        assert!(opts.fault_tolerance.is_none());
+        run.stop();
+    }
+
+    #[test]
+    fn runtime_options_builder_composes() {
+        let opts = RuntimeOptions::new()
+            .alpha(2)
+            .batch_size(64)
+            .input_shards(1)
+            .backend(ChannelBackend::Mutex)
+            .dedup(true)
+            .checkpoint_interval(Duration::from_millis(250));
+        assert_eq!(opts.alpha, 2);
+        assert_eq!(opts.batch_size, 64);
+        assert_eq!(opts.input_shards, 1);
+        assert!(opts.dedup);
+        let ft = opts.fault_tolerance.expect("ft enabled");
+        assert_eq!(
+            ft.checkpoint_interval,
+            Some(Duration::from_millis(250))
+        );
+        // Default lease knobs came along with the convenience setter.
+        assert_eq!(ft.lease_missed_k, 3);
     }
 }

@@ -1,0 +1,137 @@
+//! Typed stats for a running dataflow.
+//!
+//! [`DataflowStats`] is the structured form of what
+//! [`crate::coordinator::RunningDataflow::stats_json`] has always
+//! served: in-process consumers read fields instead of re-parsing the
+//! JSON document, and `to_json()` emits the exact same shape (the REST
+//! control plane keeps serving it verbatim), extended with `failures`
+//! and `repairs` sections from the fault-tolerance subsystem.
+
+use crate::util::json::Json;
+
+use super::{FailureEvent, RepairEvent};
+
+/// One pellet's live observation (one entry of the `pellets` array).
+#[derive(Debug, Clone)]
+pub struct PelletStats {
+    pub id: String,
+    pub class: String,
+    pub cores: usize,
+    pub instances: usize,
+    pub queue: usize,
+    pub arrival_rate: f64,
+    pub latency: f64,
+    pub selectivity: f64,
+    pub version: u64,
+}
+
+impl PelletStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("class", Json::str(self.class.clone())),
+            ("cores", Json::num(self.cores as f64)),
+            ("instances", Json::num(self.instances as f64)),
+            ("queue", Json::num(self.queue as f64)),
+            ("arrival_rate", Json::num(self.arrival_rate)),
+            ("latency", Json::num(self.latency)),
+            ("selectivity", Json::num(self.selectivity)),
+            ("version", Json::num(self.version as f64)),
+        ])
+    }
+}
+
+/// Endpoint-table summary (the `endpoints` object).
+#[derive(Debug, Clone, Copy)]
+pub struct EndpointInfo {
+    /// Table version (bumped by every republication).
+    pub version: u64,
+    /// Logical addresses currently published.
+    pub published: usize,
+}
+
+/// Aggregated stats document, typed (see
+/// [`crate::coordinator::RunningDataflow::stats`]).
+#[derive(Debug, Clone)]
+pub struct DataflowStats {
+    pub graph: String,
+    pub graph_version: u64,
+    /// Applied surgeries so far (including automatic repairs).
+    pub recomposes: usize,
+    pub endpoints: EndpointInfo,
+    /// Clock reading the pellet observations were taken at (seconds).
+    pub t: f64,
+    pub pellets: Vec<PelletStats>,
+    /// Container failures detected by the lease detector, oldest
+    /// first; empty when fault tolerance is off.
+    pub failures: Vec<FailureEvent>,
+    /// Flakes re-spawned by `ReplaceFailed` repairs, oldest first.
+    pub repairs: Vec<RepairEvent>,
+}
+
+impl DataflowStats {
+    /// Serialize to the wire shape `stats_json()` serves.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("graph", Json::str(self.graph.clone())),
+            ("graph_version", Json::num(self.graph_version as f64)),
+            ("recomposes", Json::num(self.recomposes as f64)),
+            (
+                "endpoints",
+                Json::obj(vec![
+                    (
+                        "version",
+                        Json::num(self.endpoints.version as f64),
+                    ),
+                    (
+                        "published",
+                        Json::num(self.endpoints.published as f64),
+                    ),
+                ]),
+            ),
+            ("t", Json::num(self.t)),
+            (
+                "pellets",
+                Json::Arr(
+                    self.pellets.iter().map(|p| p.to_json()).collect(),
+                ),
+            ),
+            (
+                "failures",
+                Json::obj(vec![
+                    (
+                        "detected",
+                        Json::num(self.failures.len() as f64),
+                    ),
+                    (
+                        "events",
+                        Json::Arr(
+                            self.failures
+                                .iter()
+                                .map(|e| e.to_json())
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "repairs",
+                Json::obj(vec![
+                    (
+                        "completed",
+                        Json::num(self.repairs.len() as f64),
+                    ),
+                    (
+                        "events",
+                        Json::Arr(
+                            self.repairs
+                                .iter()
+                                .map(|e| e.to_json())
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}

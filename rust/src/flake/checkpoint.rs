@@ -24,6 +24,11 @@ pub struct FlakeCheckpoint {
     pub state: BTreeMap<String, Json>,
     /// Buffered input messages per port (wire-encoded).
     pub queued: BTreeMap<String, Vec<Vec<u8>>>,
+    /// Per-port dedup high-water marks (highest message `seq`
+    /// dispatched before the capture).  Restoring them lets a
+    /// replacement flake with `dedup` enabled drop messages an
+    /// at-least-once upstream replays from before the checkpoint.
+    pub seen: BTreeMap<String, u64>,
 }
 
 impl FlakeCheckpoint {
@@ -41,11 +46,17 @@ impl FlakeCheckpoint {
                 ),
             );
         }
+        let seen = self
+            .seen
+            .iter()
+            .map(|(p, s)| (p.clone(), Json::num(*s as f64)))
+            .collect();
         Json::obj(vec![
             ("pellet_id", Json::str(self.pellet_id.clone())),
             ("version", Json::num(self.version as f64)),
             ("state", state),
             ("queued", Json::Obj(queued)),
+            ("seen", Json::Obj(seen)),
         ])
     }
 
@@ -82,7 +93,17 @@ impl FlakeCheckpoint {
                 queued.insert(port.clone(), msgs);
             }
         }
-        Ok(FlakeCheckpoint { pellet_id, version, state, queued })
+        // Absent in pre-dedup documents: default to no watermarks.
+        let mut seen = BTreeMap::new();
+        if let Some(obj) = j.get("seen").and_then(|v| v.as_obj()) {
+            for (port, mark) in obj {
+                seen.insert(
+                    port.clone(),
+                    mark.as_f64().unwrap_or(0.0) as u64,
+                );
+            }
+        }
+        Ok(FlakeCheckpoint { pellet_id, version, state, queued, seen })
     }
 }
 
@@ -125,6 +146,18 @@ impl Flake {
             > 0
             || self.ready_len() > 0
         {
+            if self
+                .shared
+                .stop
+                .load(std::sync::atomic::Ordering::SeqCst)
+            {
+                // The flake is shutting down (or was killed) under us;
+                // abort instead of spinning out the full drain window.
+                self.resume();
+                return Err(FloeError::Pellet(
+                    "checkpoint: flake stopped".into(),
+                ));
+            }
             if std::time::Instant::now() > deadline {
                 self.resume();
                 return Err(FloeError::Pellet(
@@ -148,6 +181,7 @@ impl Flake {
             version: self.version(),
             state: self.state().snapshot(),
             queued,
+            seen: self.dedup_watermarks(),
         };
         self.resume();
         Ok(cp)
@@ -181,6 +215,7 @@ impl Flake {
             version: self.version(),
             state: self.state().snapshot(),
             queued,
+            seen: self.dedup_watermarks(),
         })
     }
 
@@ -204,6 +239,11 @@ impl Flake {
         for (k, v) in &cp.state {
             self.state().set(k, v.clone());
         }
+        // Watermarks first: the replayed queue contents below all sit
+        // above them (they had not been dispatched at capture time),
+        // while anything an at-least-once upstream re-sends from
+        // before the capture now gets dropped at the dispatcher.
+        self.set_dedup_watermarks(&cp.seen);
         for (port, msgs) in &cp.queued {
             for bytes in msgs {
                 self.inject(port, Message::decode(bytes)?)?;
@@ -245,6 +285,7 @@ mod tests {
             batch_size: crate::flake::DEFAULT_BATCH_SIZE,
             input_shards: 2,
             channel_backend: crate::channel::ChannelBackend::default(),
+            dedup: false,
         };
         Flake::start(
             cfg,

@@ -46,6 +46,11 @@ use crate::ALPHA;
 /// lock acquisition (and per TCP syscall) on the hot path.
 pub const DEFAULT_BATCH_SIZE: usize = 64;
 
+/// How long a lingering TCP receiver adopted after a relocation may
+/// sit with no live connections and no traffic before tearing itself
+/// down (every sender re-resolves and rebinds well inside this).
+const ADOPTED_RECEIVER_IDLE: Duration = Duration::from_secs(2);
+
 /// Flake construction parameters, usually derived from a [`PelletSpec`].
 #[derive(Clone)]
 pub struct FlakeConfig {
@@ -73,6 +78,16 @@ pub struct FlakeConfig {
     /// Which primitive backs each input-port shard: the lock-free ring
     /// (default) or the mutex reference queue.
     pub channel_backend: ChannelBackend,
+    /// Sequence-numbered dedup at the dispatcher: drop any non-landmark
+    /// message whose `seq` is at or below the port's high-water mark.
+    /// Sound only on single-producer ports whose delivery order follows
+    /// message creation order (then a smaller-or-equal `seq` can only
+    /// be a replay); off by default.  Checkpoints capture the
+    /// watermarks, so a restored replacement discards duplicates that
+    /// at-least-once redelivery replays into it.  Ignored under
+    /// [`MergeMode::Synchronous`]: dropping one port's duplicate
+    /// would misalign the tuple merge.
+    pub dedup: bool,
 }
 
 impl FlakeConfig {
@@ -92,6 +107,7 @@ impl FlakeConfig {
             batch_size: DEFAULT_BATCH_SIZE,
             input_shards: crate::channel::DEFAULT_SHARDS,
             channel_backend: ChannelBackend::default(),
+            dedup: false,
         }
     }
 
@@ -108,6 +124,11 @@ struct Shared {
     cfg: FlakeConfig,
     ports: HashMap<String, Arc<ShardedQueue<Message>>>,
     port_order: Vec<String>,
+    /// Per-port dedup high-water marks (highest `seq` dispatched);
+    /// only consulted when `cfg.dedup` is set.  Relaxed ordering is
+    /// enough: each port is read and advanced by the single dispatcher
+    /// thread, checkpoints read it only after draining.
+    watermarks: HashMap<String, AtomicU64>,
     ready: Arc<SyncQueue<PortIo>>,
     router: RwLock<OutputRouter>,
     state: StateObject,
@@ -194,6 +215,42 @@ impl Shared {
         self.ports.values().map(|q| q.len()).sum::<usize>()
             + self.ready.len()
     }
+
+    /// Sequence-numbered dedup (when `cfg.dedup` is on): drop every
+    /// non-landmark message at or below the port's watermark and
+    /// advance the watermark past what survives.  Returns the number
+    /// of duplicates dropped.  Called from the dispatcher right after
+    /// each pop, before the batch becomes visible to workers.
+    fn dedup_filter(&self, port: &str, buf: &mut Vec<Message>) -> usize {
+        if !self.cfg.dedup {
+            return 0;
+        }
+        let Some(w) = self.watermarks.get(port) else {
+            return 0;
+        };
+        let mut mark = w.load(Ordering::Relaxed);
+        let before = buf.len();
+        buf.retain(|m| {
+            if m.is_landmark() {
+                return true;
+            }
+            if m.seq <= mark {
+                return false;
+            }
+            mark = m.seq;
+            true
+        });
+        w.store(mark, Ordering::Relaxed);
+        let dropped = before - buf.len();
+        if dropped > 0 {
+            crate::log_debug!(
+                "flake {}: dedup dropped {dropped} replayed message(s) \
+                 on '{port}'",
+                self.cfg.pellet_id
+            );
+        }
+        dropped
+    }
 }
 
 /// This flake's publication in an [`EndpointTable`]: which table its
@@ -258,9 +315,15 @@ impl Flake {
         }
         let ready = Arc::new(SyncQueue::new((cfg.alpha * 4).max(16)));
         let cores = cfg.cores.max(1);
+        let watermarks = cfg
+            .inputs
+            .iter()
+            .map(|p| (p.name.clone(), AtomicU64::new(0)))
+            .collect();
         let shared = Arc::new(Shared {
             ports,
             port_order,
+            watermarks,
             ready,
             router: RwLock::new(router),
             state: StateObject::new(),
@@ -606,13 +669,41 @@ impl Flake {
 
     /// Adopt lingering receivers from a displaced incarnation (see
     /// [`Flake::take_tcp_receivers`]).  They are shut down with this
-    /// flake; the primary endpoint is unaffected.
+    /// flake; the primary endpoint is unaffected.  Each adopted
+    /// receiver gets an idle-timeout teardown: once every remote
+    /// sender has rebound to the primary endpoint and the old socket
+    /// has been silent for [`ADOPTED_RECEIVER_IDLE`], the lingering
+    /// listener retires itself instead of living until the next
+    /// relocation or shutdown.
     pub(crate) fn adopt_tcp_receivers(&self, extra: Vec<TcpReceiver>) {
-        self.tcp
-            .lock()
-            .expect("tcp state poisoned")
-            .receivers
-            .extend(extra);
+        let mut tcp = self.tcp.lock().expect("tcp state poisoned");
+        for rx in extra {
+            rx.enable_idle_teardown(ADOPTED_RECEIVER_IDLE);
+            tcp.receivers.push(rx);
+        }
+    }
+
+    /// Per-port dedup high-water marks (checkpoint capture).
+    pub(crate) fn dedup_watermarks(&self) -> BTreeMap<String, u64> {
+        self.shared
+            .watermarks
+            .iter()
+            .map(|(p, w)| (p.clone(), w.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Seed the dedup watermarks from a checkpoint — done *before*
+    /// replaying its queued messages, whose sequence numbers all lie
+    /// above the captured marks (they had not been dispatched yet).
+    pub(crate) fn set_dedup_watermarks(
+        &self,
+        seen: &BTreeMap<String, u64>,
+    ) {
+        for (port, mark) in seen {
+            if let Some(w) = self.shared.watermarks.get(port) {
+                w.store(*mark, Ordering::Relaxed);
+            }
+        }
     }
 
     /// The factory currently producing pellet instances.  After dynamic
@@ -806,6 +897,31 @@ impl Flake {
             tcp.endpoint = None;
         }
         self.unpublish_endpoints();
+        self.halt();
+    }
+
+    /// Simulate a hard failure ([`crate::container::Container::kill`]):
+    /// tear down threads, sockets, and queues like [`Flake::shutdown`]
+    /// but **leave the endpoint publication standing** — a crashed
+    /// remote process cannot deregister itself.  Senders keep
+    /// resolving the dead flake's closed queues and retry until the
+    /// repair's replacement republishes over the entry (token-guarded,
+    /// so the husk's eventual `shutdown` cannot tear it down).  The
+    /// recorded TCP endpoint survives too: it is the husk's record of
+    /// having served remote ingress, which repair reads to give the
+    /// replacement its own listener.
+    pub(crate) fn crash(&self) {
+        {
+            let mut tcp = self.tcp.lock().expect("tcp state poisoned");
+            for rx in tcp.receivers.iter_mut() {
+                rx.shutdown();
+            }
+            tcp.receivers.clear();
+        }
+        self.halt();
+    }
+
+    fn halt(&self) {
         self.shared.stop.store(true, Ordering::SeqCst);
         for q in self.shared.ports.values() {
             q.close();
@@ -871,8 +987,12 @@ fn dispatcher_loop(shared: &Shared) {
                     Duration::from_millis(10),
                 ) {
                     Ok(0) => continue, // timeout
-                    Ok(n) => {
-                        shared.probes.record_arrival(n as u64);
+                    Ok(_) => {
+                        shared.dedup_filter(port, &mut pop_buf);
+                        if pop_buf.is_empty() {
+                            continue; // all duplicates
+                        }
+                        shared.probes.record_arrival(pop_buf.len() as u64);
                         let items: Vec<PortIo> = pop_buf
                             .drain(..)
                             .map(|m| PortIo::Single(port.clone(), m))
@@ -897,8 +1017,14 @@ fn dispatcher_loop(shared: &Shared) {
                     Duration::from_millis(10),
                 ) {
                     Ok(taken) if taken > 0 => {
+                        shared.dedup_filter(port, &mut pop_buf);
+                        if pop_buf.is_empty() {
+                            continue; // all duplicates
+                        }
                         idle_polls = 0;
-                        shared.probes.record_arrival(taken as u64);
+                        shared
+                            .probes
+                            .record_arrival(pop_buf.len() as u64);
                         for msg in pop_buf.drain(..) {
                             let flush = msg.is_landmark();
                             batch.push(msg);
@@ -1015,8 +1141,12 @@ fn dispatch_interleaved(
         if taken == 0 {
             continue;
         }
-        shared.probes.record_arrival(taken as u64);
         progressed = true;
+        shared.dedup_filter(port, pop_buf);
+        if pop_buf.is_empty() {
+            continue; // all duplicates
+        }
+        shared.probes.record_arrival(pop_buf.len() as u64);
         let spec = shared
             .cfg
             .inputs
@@ -1279,6 +1409,7 @@ mod tests {
             batch_size: DEFAULT_BATCH_SIZE,
             input_shards: 2,
             channel_backend: ChannelBackend::default(),
+            dedup: false,
         }
     }
 
@@ -1365,6 +1496,43 @@ mod tests {
         }
         flake.shutdown();
         assert!(!flake.has_tcp_input());
+    }
+
+    #[test]
+    fn dedup_drops_replayed_messages() {
+        let mut cfg = upper_cfg();
+        cfg.dedup = true;
+        cfg.input_shards = 1; // single-producer FIFO: seqs arrive ordered
+        cfg.class = "floe.builtin.CountSink".into();
+        cfg.outputs.clear();
+        let flake = Flake::start(
+            cfg,
+            Arc::new(|| Box::new(crate::pellet::builtins::CountSink)),
+        );
+        let msgs: Vec<Message> =
+            (0..10).map(|i| Message::text(format!("{i}"))).collect();
+        for m in &msgs {
+            flake.inject("in", m.clone()).unwrap();
+        }
+        assert!(flake.drain(Duration::from_secs(5)));
+        // At-least-once redelivery: the same messages (same seqs)
+        // arrive again and must not double-count.
+        for m in &msgs {
+            flake.inject("in", m.clone()).unwrap();
+        }
+        assert!(flake.drain(Duration::from_secs(5)));
+        assert_eq!(
+            flake.state().get("count"),
+            Some(crate::util::json::Json::Num(10.0))
+        );
+        // Fresh messages (new seqs) still flow.
+        flake.inject("in", Message::text("fresh")).unwrap();
+        assert!(flake.drain(Duration::from_secs(5)));
+        assert_eq!(
+            flake.state().get("count"),
+            Some(crate::util::json::Json::Num(11.0))
+        );
+        flake.shutdown();
     }
 
     #[test]

@@ -26,7 +26,15 @@
 //! the two: strategy decisions regrant cores in place, and sustained
 //! container saturation escalates to a recompose-driven flake
 //! migration — verified deterministically by the seeded workload
-//! driver in [`sim::driver`].
+//! driver in [`sim::driver`].  Dataflows are **self-healing**: every
+//! launch knob lives in the builder-style
+//! [`coordinator::RuntimeOptions`], and enabling its
+//! [`coordinator::FaultToleranceConfig`] starts per-container
+//! heartbeats, a coordinator-side lease detector, and periodic
+//! checkpoints; a container that stops beating is declared dead and
+//! its flakes are re-spawned elsewhere via a `ReplaceFailed` delta —
+//! restored from their last checkpoint, endpoints republished so every
+//! sender re-routes live — without quiescing the survivors.
 //!
 //! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
 //! reproduced evaluation.
@@ -59,8 +67,11 @@ pub mod prelude {
         AdaptationStrategy, DynamicStrategy, ElasticityConfig,
         ElasticityPolicy, HybridStrategy, StaticLookAhead,
     };
-    pub use crate::channel::{EndpointAddr, EndpointTable};
-    pub use crate::coordinator::Coordinator;
+    pub use crate::channel::{ChannelBackend, EndpointAddr, EndpointTable};
+    pub use crate::coordinator::{
+        Coordinator, DataflowStats, FailureEvent, FaultToleranceConfig,
+        LeaseTracker, RepairEvent, RuntimeOptions,
+    };
     pub use crate::error::{FloeError, Result};
     pub use crate::graph::{DataflowGraph, GraphBuilder, SplitMode};
     pub use crate::manager::{ResourceManager, SimulatedCloud};

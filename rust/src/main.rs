@@ -14,7 +14,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use floe::apps::{clustering, smartgrid};
-use floe::coordinator::{Coordinator, CoordinatorServer, LaunchOptions};
+use floe::coordinator::{Coordinator, CoordinatorServer, RuntimeOptions};
 use floe::graph::DataflowGraph;
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::message::{Landmark, Message};
@@ -87,7 +87,7 @@ fn cmd_run(args: &[String]) -> i32 {
         }
     };
     let coord = coordinator();
-    let run = match coord.launch(graph, LaunchOptions::default()) {
+    let run = match coord.launch(graph, RuntimeOptions::new()) {
         Ok(r) => Arc::new(r),
         Err(e) => {
             eprintln!("run: launch failed: {e}");
@@ -185,7 +185,7 @@ fn cmd_pipeline(args: &[String]) -> i32 {
     let coord = coordinator();
     smartgrid::register(coord.registry(), Arc::clone(&store));
     let graph = smartgrid::integration_graph().expect("graph");
-    let run = coord.launch(graph, LaunchOptions::default()).expect("launch");
+    let run = coord.launch(graph, RuntimeOptions::new()).expect("launch");
 
     let mut gen = smartgrid::FeedGen::new(42, 24);
     let start = Instant::now();
@@ -230,7 +230,7 @@ fn cmd_clustering(args: &[String]) -> i32 {
     let coord = coordinator();
     clustering::register(coord.registry(), Arc::clone(&rt), Arc::clone(&model));
     let graph = clustering::clustering_graph(params.batch, 2, 3).expect("graph");
-    let run = coord.launch(graph, LaunchOptions::default()).expect("launch");
+    let run = coord.launch(graph, RuntimeOptions::new()).expect("launch");
 
     let mut gen = clustering::PostGen::new(1);
     let start = Instant::now();
@@ -271,7 +271,7 @@ fn cmd_update_demo() -> i32 {
         .out_port("out", floe::graph::SplitMode::RoundRobin);
     g.pellet("count", "floe.builtin.CountSink").in_port("in").stateful();
     g.edge("work", "out", "count", "in");
-    let run = coord.launch(g.build().unwrap(), LaunchOptions::default())
+    let run = coord.launch(g.build().unwrap(), RuntimeOptions::new())
         .expect("launch");
 
     for i in 0..100 {

@@ -182,6 +182,7 @@ impl ResourceManager {
             .iter()
             .filter(|(_, c)| {
                 avoid_container != Some(c.id.as_str())
+                    && !c.is_dead()
                     && c.free_cores() >= cores
             })
             .min_by_key(|(_, c)| c.free_cores())
@@ -215,6 +216,30 @@ impl ResourceManager {
             .iter()
             .map(|(_, c)| Arc::clone(c))
             .collect()
+    }
+
+    /// Evict a dead container: drop it from the pool and release its
+    /// VM (failure repair's final step — the replacement flakes are
+    /// already live elsewhere, so nothing on it is worth draining).
+    /// Unknown ids are a no-op: a repair retried across ticks may race
+    /// a previous eviction.
+    pub fn evict(&self, container_id: &str) -> Result<()> {
+        let mut inner = self.inner.lock().expect("manager poisoned");
+        let Some(pos) = inner
+            .containers
+            .iter()
+            .position(|(_, c)| c.id == container_id)
+        else {
+            return Ok(());
+        };
+        let (vm, c) = inner.containers.remove(pos);
+        drop(inner);
+        c.shutdown();
+        self.cloud.release_vm(&vm)?;
+        crate::log_info!(
+            "manager: evicted dead container '{container_id}' (vm {vm})"
+        );
+        Ok(())
     }
 
     /// Release empty containers back to the cloud (scale-in).
@@ -359,6 +384,7 @@ mod tests {
             batch_size: crate::flake::DEFAULT_BATCH_SIZE,
             input_shards: 2,
             channel_backend: crate::channel::ChannelBackend::default(),
+            dedup: false,
         };
         c.spawn_flake(
             cfg,

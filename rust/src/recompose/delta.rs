@@ -40,6 +40,13 @@ pub enum DeltaOp {
     /// Move a pellet's flake to a different container, preserving
     /// state, logic version and buffered input (no structural change).
     RelocateFlake { id: String },
+    /// Re-spawn a pellet whose container died (no structural change).
+    /// Unlike [`DeltaOp::RelocateFlake`] the dead flake is never
+    /// paused, quiesced, or handed off — it cannot acknowledge
+    /// anything — so the replacement starts from the pellet's last
+    /// checkpoint (fresh when none exists) and upstream delivery
+    /// retry bridges the repair window.
+    ReplaceFailed { id: String },
 }
 
 /// A batch of topology edits against one graph version.
@@ -130,6 +137,11 @@ impl GraphDelta {
 
     pub fn relocate_flake(&mut self, id: &str) -> &mut Self {
         self.ops.push(DeltaOp::RelocateFlake { id: id.into() });
+        self
+    }
+
+    pub fn replace_failed(&mut self, id: &str) -> &mut Self {
+        self.ops.push(DeltaOp::ReplaceFailed { id: id.into() });
         self
     }
 
@@ -239,6 +251,13 @@ fn apply_op(g: &mut DataflowGraph, op: &DeltaOp) -> Result<()> {
             if g.pellet(id).is_none() {
                 return Err(FloeError::Graph(format!(
                     "delta: no pellet '{id}' to relocate"
+                )));
+            }
+        }
+        DeltaOp::ReplaceFailed { id } => {
+            if g.pellet(id).is_none() {
+                return Err(FloeError::Graph(format!(
+                    "delta: no pellet '{id}' to replace"
                 )));
             }
         }

@@ -1,5 +1,5 @@
 //! The recomposition engine: executes a compiled [`RecomposePlan`]
-//! against a live [`RunningDataflow`] with
+//! against a live [`crate::coordinator::RunningDataflow`] with
 //! **pause → buffer-at-upstream → rewire → resume** semantics.
 //!
 //! Execution phases (see `mod.rs` for the full design notes):
@@ -42,7 +42,7 @@ use crate::channel::{
     EndpointAddr, EndpointTable, EndpointTransport, Transport,
 };
 use crate::container::Container;
-use crate::coordinator::{RunningDataflow, Topology};
+use crate::coordinator::{DataflowInner, RepairEvent, Topology};
 use crate::error::{FloeError, Result};
 use crate::flake::{Flake, FlakeConfig};
 use crate::graph::DataflowGraph;
@@ -54,7 +54,8 @@ const QUIESCE_TIMEOUT: Duration = Duration::from_secs(30);
 const RETIRE_DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Outcome of one applied delta (also the unit of
-/// [`RunningDataflow::recompose_history`] and the series measured by
+/// [`crate::coordinator::RunningDataflow::recompose_history`] and the
+/// series measured by
 /// `bench_recompose`).
 #[derive(Debug, Clone)]
 pub struct RecomposeStats {
@@ -66,6 +67,9 @@ pub struct RecomposeStats {
     pub spawned: Vec<String>,
     pub removed: Vec<String>,
     pub relocated: Vec<String>,
+    /// Pellets re-spawned after their container died
+    /// (`DeltaOp::ReplaceFailed`).
+    pub replaced: Vec<String>,
     /// Pellets whose endpoint publications were replaced at cut-over
     /// (logical addresses stable, physical resolution moved) — the
     /// live-rebind half of a relocation.
@@ -80,14 +84,16 @@ pub struct RecomposeStats {
 type PlacedFlake = (String, Arc<Flake>, Arc<Container>);
 
 /// The recomposition engine: one instance per surgery, constructed
-/// and serialized by [`RunningDataflow::recompose`].  Crate-internal
-/// so the serialization gate cannot be bypassed.
+/// and serialized by the dataflow's gated `recompose` path (both
+/// [`crate::coordinator::RunningDataflow::recompose`] and the failure
+/// detector's repair deltas).  Crate-internal so the serialization
+/// gate cannot be bypassed.
 pub(crate) struct RecomposeEngine<'a> {
-    run: &'a RunningDataflow,
+    run: &'a DataflowInner,
 }
 
 impl<'a> RecomposeEngine<'a> {
-    pub(crate) fn new(run: &'a RunningDataflow) -> RecomposeEngine<'a> {
+    pub(crate) fn new(run: &'a DataflowInner) -> RecomposeEngine<'a> {
         RecomposeEngine { run }
     }
 
@@ -102,10 +108,10 @@ impl<'a> RecomposeEngine<'a> {
 }
 
 /// Execute a delta against the running dataflow.  Serialized by the
-/// caller ([`RunningDataflow::recompose`]), so at most one surgery is
-/// in flight per dataflow.
+/// caller (`DataflowInner::recompose` holds the gate), so at most one
+/// surgery is in flight per dataflow.
 fn execute(
-    run: &RunningDataflow,
+    run: &DataflowInner,
     delta: &GraphDelta,
 ) -> Result<RecomposeStats> {
     // Phase 1a: compile against the live topology.
@@ -197,9 +203,12 @@ fn execute(
     let t_cut = Instant::now();
     let mut retired: Vec<PlacedFlake> = Vec::new();
     let mut displaced: Vec<PlacedFlake> = Vec::new();
+    let mut failed: Vec<PlacedFlake> = Vec::new();
+    let mut repairs: Vec<RepairEvent> = Vec::new();
     {
         let mut topo = run.topo.write().expect("topology poisoned");
         let result = cut_over(
+            run,
             &mut topo,
             &plan,
             &old_graph,
@@ -207,8 +216,20 @@ fn execute(
             &replacements,
             &mut retired,
             &mut displaced,
+            &mut failed,
+            &mut repairs,
         );
         if let Err(e) = result {
+            // Dead husks re-enter the maps unchanged and their (stale,
+            // closed-queue) endpoint publications are restored, so the
+            // dataflow is exactly as broken as before the attempt and
+            // the failure detector simply retries next tick.
+            for (id, husk, husk_c) in &failed {
+                topo.flakes.insert(id.clone(), Arc::clone(husk));
+                topo.containers
+                    .insert(id.clone(), Arc::clone(husk_c));
+                husk.publish_endpoints(&topo.endpoints);
+            }
             for (id, old, old_c) in &displaced {
                 topo.flakes.insert(id.clone(), Arc::clone(old));
                 topo.containers.insert(id.clone(), Arc::clone(old_c));
@@ -300,6 +321,26 @@ fn execute(
             crate::log_warn!("recompose: removing displaced '{id}': {e}");
         }
     }
+    // 5f: dead husks leave their (dead) container's records; the
+    // detector evicts the container itself afterwards.  Their repair
+    // events become visible only now, with the repair fully applied.
+    for (id, _, c) in &failed {
+        if let Err(e) = c.remove_flake(id) {
+            crate::log_warn!("recompose: removing failed '{id}': {e}");
+        }
+    }
+    for ev in repairs {
+        run.record_repair(ev);
+    }
+    // Checkpoints of retired pellets must not outlive them: a later
+    // delta re-adding the id would otherwise restore stale state.
+    if !plan.remove.is_empty() {
+        let mut store =
+            run.checkpoints.lock().expect("checkpoints poisoned");
+        for id in &plan.remove {
+            store.remove(id);
+        }
+    }
 
     crate::log_info!(
         "recompose: v{} applied ({} ops, {} paused) in {:.2} ms \
@@ -317,16 +358,20 @@ fn execute(
         spawned: plan.spawn.clone(),
         removed: plan.remove.clone(),
         relocated: plan.relocate.clone(),
+        replaced: plan.replace.clone(),
         rebound: plan.rebind.clone(),
         downtime_ms,
         cutover_ms,
     })
 }
 
-/// The write-lock body of a surgery: map swaps, wiring, and the
-/// relocation handoff.  Mutations are recorded in `retired` /
-/// `displaced` so the caller can roll the maps back on error.
+/// The write-lock body of a surgery: map swaps, wiring, the
+/// relocation handoff, and the failure-repair restore.  Mutations are
+/// recorded in `retired` / `displaced` / `failed` so the caller can
+/// roll the maps back on error.
+#[allow(clippy::too_many_arguments)]
 fn cut_over(
+    run: &DataflowInner,
     topo: &mut Topology,
     plan: &RecomposePlan,
     old_graph: &DataflowGraph,
@@ -334,17 +379,25 @@ fn cut_over(
     replacements: &[PlacedFlake],
     retired: &mut Vec<PlacedFlake>,
     displaced: &mut Vec<PlacedFlake>,
+    failed: &mut Vec<PlacedFlake>,
+    repairs: &mut Vec<RepairEvent>,
 ) -> Result<()> {
     // New and replacement flakes join the resolution map first so
     // every rewire below can target them.
     for (id, f, c) in spawned.iter().chain(replacements.iter()) {
         if let Some(old) = topo.flakes.get(id) {
-            // Replacement: remember the displaced incarnation.
-            displaced.push((
+            // Replacement: remember the displaced (or dead)
+            // incarnation.
+            let rec = (
                 id.clone(),
                 Arc::clone(old),
                 Arc::clone(&topo.containers[id]),
-            ));
+            );
+            if plan.replace.contains(id) {
+                failed.push(rec);
+            } else {
+                displaced.push(rec);
+            }
         }
         topo.flakes.insert(id.clone(), Arc::clone(f));
         topo.containers.insert(id.clone(), Arc::clone(c));
@@ -376,6 +429,45 @@ fn cut_over(
         topo.flakes[id].publish_endpoints(&topo.endpoints);
         topo.flakes[id].adopt_tcp_receivers(old.take_tcp_receivers());
     }
+    // The repair restore (plan.replace): no handoff — the dead
+    // incarnation's memory is gone, so the replacement resumes from
+    // the pellet's last periodic checkpoint (fresh state when none
+    // was ever captured) and the checkpoint's queued input is
+    // replayed into it.  Publication comes *after* the restore:
+    // upstream senders retrying against the stale entry land only
+    // once the replayed backlog is in the queues, preserving
+    // per-producer order, and the restored dedup watermarks drop
+    // whatever at-least-once redelivery repeats from before the
+    // capture.  No receiver adoption — the dead host's sockets died
+    // with it; remote senders reconnect through the republished
+    // endpoint.
+    for (id, _, husk_c) in failed.iter() {
+        let cp = {
+            let store =
+                run.checkpoints.lock().expect("checkpoints poisoned");
+            store.get(id).cloned()
+        };
+        let replayed = match &cp {
+            Some(cp) => {
+                topo.flakes[id].restore(cp)?;
+                cp.queued.values().map(Vec::len).sum()
+            }
+            None => 0,
+        };
+        topo.flakes[id].publish_endpoints(&topo.endpoints);
+        let to_container = replacements
+            .iter()
+            .find(|(r, _, _)| r == id)
+            .map(|(_, _, c)| c.id.clone())
+            .unwrap_or_default();
+        repairs.push(RepairEvent {
+            flake: id.clone(),
+            from_container: husk_c.id.clone(),
+            to_container,
+            restored_from_checkpoint: cp.is_some(),
+            replayed,
+        });
+    }
     // Atomic target swaps on the pre-existing frontier.
     for id in &plan.rewire {
         let f = Arc::clone(&topo.flakes[id]);
@@ -399,7 +491,7 @@ fn cut_over(
 
 /// Spawn the delta's brand-new pellets (AddPellet / InsertOnEdge).
 fn spawn_new_flakes(
-    run: &RunningDataflow,
+    run: &DataflowInner,
     plan: &RecomposePlan,
 ) -> Result<Vec<PlacedFlake>> {
     let mut out = Vec::new();
@@ -435,20 +527,24 @@ fn spawn_new_flakes(
     Ok(out)
 }
 
-/// Spawn replacement flakes for relocations on a *different*
-/// container, cloning the live config and the live (possibly updated)
-/// pellet factory.  A TCP-fed original gets a fresh ingress endpoint
-/// bound on the replacement up front (failures still abort with zero
-/// side effects); the endpoint is published at cut-over.
+/// Spawn replacement flakes — for relocations *and* failure repairs —
+/// on a *different* container, cloning the (possibly dead) original's
+/// config and its live (possibly updated) pellet factory.  A TCP-fed
+/// original gets a fresh ingress endpoint bound on the replacement up
+/// front (failures still abort with zero side effects); the endpoint
+/// is published at cut-over.  For repairs the husk's config, factory,
+/// and endpoint record all survive the crash by design (see
+/// [`crate::container::Container::kill`]); its *state* does not, which
+/// is what the checkpoint restore at cut-over is for.
 fn spawn_replacements(
-    run: &RunningDataflow,
+    run: &DataflowInner,
     plan: &RecomposePlan,
     old_flakes: &HashMap<String, Arc<Flake>>,
     old_containers: &HashMap<String, Arc<Container>>,
     endpoints: &Arc<EndpointTable>,
 ) -> Result<Vec<PlacedFlake>> {
     let mut out = Vec::new();
-    for id in &plan.relocate {
+    for id in plan.relocate.iter().chain(plan.replace.iter()) {
         let (old, old_c) = match (
             old_flakes.get(id),
             old_containers.get(id),
@@ -457,7 +553,7 @@ fn spawn_replacements(
             _ => {
                 teardown(&out);
                 return Err(FloeError::Graph(format!(
-                    "recompose: no live flake '{id}' to relocate"
+                    "recompose: no flake '{id}' to replace"
                 )));
             }
         };

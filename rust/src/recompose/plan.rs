@@ -31,6 +31,11 @@ pub struct RecomposePlan {
     pub remove: Vec<String>,
     /// Pellets whose flakes move to a different container.
     pub relocate: Vec<String>,
+    /// Pellets re-spawned after their container died.  Never paused
+    /// or quiesced (the dead node cannot ack anything) and never in
+    /// the rewire set: upstream routers keep their logical targets
+    /// and re-resolve once the replacement republishes at cut-over.
+    pub replace: Vec<String>,
     /// The rebind step of the pause frontier: pellets whose endpoint
     /// publications are replaced at cut-over.  Their logical addresses
     /// stay stable; the engine republishes the physical resolution at
@@ -54,6 +59,7 @@ pub fn compile(
     let mut spawn: Vec<String> = Vec::new();
     let mut remove: Vec<String> = Vec::new();
     let mut relocate: Vec<String> = Vec::new();
+    let mut replace: Vec<String> = Vec::new();
     for op in &delta.ops {
         match op {
             DeltaOp::AddPellet { spec } => spawn.push(spec.id.clone()),
@@ -84,12 +90,32 @@ pub fn compile(
                 pause.insert(id.clone());
                 relocate.push(id.clone());
             }
+            DeltaOp::ReplaceFailed { id } => replace.push(id.clone()),
         }
     }
     relocate.sort();
     relocate.dedup();
     remove.sort();
     remove.dedup();
+    replace.sort();
+    replace.dedup();
+    // Repair deltas stand alone: a `ReplaceFailed` runs with an empty
+    // pause set (pausing the dead pellet's upstream would wedge
+    // senders against a sink that can never drain), which is only
+    // sound when no other op needs that frontier quiesced.  A whole
+    // container's worth of replacements may batch together.
+    if !replace.is_empty()
+        && delta
+            .ops
+            .iter()
+            .any(|op| !matches!(op, DeltaOp::ReplaceFailed { .. }))
+    {
+        return Err(FloeError::Graph(
+            "ReplaceFailed cannot mix with other ops; \
+             repair deltas stand alone"
+                .into(),
+        ));
+    }
     // One relocation per delta: a handoff can only fail *before* it
     // mutates anything (its quiesce), so with a single relocation the
     // engine's rollback is always sound.  A second handoff failing
@@ -156,7 +182,9 @@ pub fn compile(
             )));
         }
     }
-    let rebind = relocate.clone();
+    let mut rebind: Vec<String> =
+        relocate.iter().chain(replace.iter()).cloned().collect();
+    rebind.sort();
     Ok(RecomposePlan {
         new_graph,
         pause_set: pause.into_iter().collect(),
@@ -164,6 +192,7 @@ pub fn compile(
         spawn,
         remove,
         relocate,
+        replace,
         rebind,
     })
 }
@@ -214,6 +243,33 @@ mod tests {
         assert_eq!(plan.rewire, vec!["src"]);
         assert_eq!(plan.relocate, vec!["l"]);
         assert_eq!(plan.rebind, vec!["l"], "relocation implies rebind");
+    }
+
+    #[test]
+    fn replace_failed_pauses_nothing() {
+        let g = diamond();
+        let mut d = GraphDelta::against(&g);
+        d.replace_failed("l").replace_failed("r");
+        let plan = compile(&d, &g).unwrap();
+        assert!(plan.pause_set.is_empty(), "{:?}", plan.pause_set);
+        assert!(plan.rewire.is_empty());
+        assert_eq!(plan.replace, vec!["l", "r"]);
+        assert_eq!(plan.rebind, vec!["l", "r"]);
+        assert_eq!(plan.new_graph.version, g.version + 1);
+    }
+
+    #[test]
+    fn replace_failed_mixing_with_other_ops_rejected() {
+        let g = diamond();
+        let mut d = GraphDelta::against(&g);
+        d.replace_failed("l").remove_pellet("r");
+        assert!(compile(&d, &g).is_err());
+        let mut d = GraphDelta::against(&g);
+        d.replace_failed("l").relocate_flake("r");
+        assert!(compile(&d, &g).is_err());
+        let mut d = GraphDelta::against(&g);
+        d.replace_failed("ghost");
+        assert!(compile(&d, &g).is_err(), "unknown pellet rejected");
     }
 
     #[test]

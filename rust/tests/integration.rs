@@ -9,9 +9,8 @@ use std::time::Duration;
 
 use floe::adaptation::DynamicStrategy;
 use floe::apps::smartgrid;
-use floe::coordinator::AdaptationSetup;
 use floe::channel::{ShardedQueue, TcpReceiver, TcpSender, Transport};
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::graph::{GraphBuilder, SplitMode, WindowSpec};
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::message::Message;
@@ -30,7 +29,7 @@ fn smartgrid_pipeline_end_to_end() {
     smartgrid::register(&registry, Arc::clone(&store));
     let coord = coordinator_with(registry);
     let graph = smartgrid::integration_graph().unwrap();
-    let run = coord.launch(graph, LaunchOptions::default()).unwrap();
+    let run = coord.launch(graph, RuntimeOptions::new()).unwrap();
 
     let mut gen = smartgrid::FeedGen::new(1, 8);
     let mut sent_meter = 0;
@@ -99,18 +98,15 @@ fn adaptive_monitor_scales_live_flake() {
         .cores(1);
     g.pellet("sink", "floe.builtin.CountSink").in_port("in").stateful();
     g.edge("slow", "out", "sink", "in");
-    let options = LaunchOptions {
-        adaptation: Some(AdaptationSetup {
-            make: Box::new(|_id| {
-                Box::new(DynamicStrategy {
-                    min_cores: 1,
-                    ..DynamicStrategy::default()
-                })
-            }),
-            interval: Duration::from_millis(30),
+    let options = RuntimeOptions::new().adaptation(
+        Box::new(|_id| {
+            Box::new(DynamicStrategy {
+                min_cores: 1,
+                ..DynamicStrategy::default()
+            })
         }),
-        ..LaunchOptions::default()
-    };
+        Duration::from_millis(30),
+    );
     let run = coord.launch(g.build().unwrap(), options).unwrap();
     run.flake("slow")
         .unwrap()
@@ -156,7 +152,7 @@ fn tcp_transport_between_flakes() {
     let mut g_down = GraphBuilder::new("down");
     g_down.pellet("sink", "test.Collect").in_port("in");
     let down = coord
-        .launch(g_down.build().unwrap(), LaunchOptions::default())
+        .launch(g_down.build().unwrap(), RuntimeOptions::new())
         .unwrap();
     let sink_queue = down.flake("sink").unwrap().input_queue("in").unwrap();
     let mut ports: HashMap<String, Arc<ShardedQueue<Message>>> =
@@ -170,7 +166,7 @@ fn tcp_transport_between_flakes() {
         .in_port("in")
         .out_port("out", SplitMode::RoundRobin);
     let up = coord
-        .launch(g_up.build().unwrap(), LaunchOptions::default())
+        .launch(g_up.build().unwrap(), RuntimeOptions::new())
         .unwrap();
     let sender: Arc<dyn Transport> =
         Arc::new(TcpSender::connect(&rx.endpoint(), "in").unwrap());
@@ -218,7 +214,7 @@ fn duplicate_split_and_count_window_compose() {
     g.edge("src", "out", "w1", "in");
     g.edge("src", "out", "w2", "in");
     let run = coord
-        .launch(g.build().unwrap(), LaunchOptions::default())
+        .launch(g.build().unwrap(), RuntimeOptions::new())
         .unwrap();
     for i in 0..25 {
         run.inject("src", "in", Message::text(format!("{i}"))).unwrap();
@@ -250,7 +246,7 @@ fn xml_graph_roundtrip_through_coordinator() {
       </floe>"#;
     let graph = floe::graph::DataflowGraph::from_xml(xml).unwrap();
     let coord = coordinator_with(PelletRegistry::with_builtins());
-    let run = coord.launch(graph, LaunchOptions::default()).unwrap();
+    let run = coord.launch(graph, RuntimeOptions::new()).unwrap();
     for i in 0..50 {
         run.inject("up", "in", Message::text(format!("{i}"))).unwrap();
     }

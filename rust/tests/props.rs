@@ -10,6 +10,7 @@ use floe::channel::{
     ChannelBackend, InProcTransport, QueueClosed, RingQueue, ShardedQueue,
     SyncQueue, Transport,
 };
+use floe::coordinator::LeaseTracker;
 use floe::flake::{FlakeObservation, OutputRouter};
 use floe::graph::{DataflowGraph, GraphBuilder, SplitMode};
 use floe::message::{key_hash, Landmark, Message, Payload};
@@ -955,6 +956,71 @@ fn prop_delta_apply_is_atomic_and_versioned() {
                 assert_eq!(graph.version, 1);
                 graph.validate().unwrap();
             }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Lease-based failure detection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lease_no_false_positive_while_heartbeats_advance() {
+    run_cases("lease: advancing heartbeats never expire", 300, |g| {
+        let k = g.int(1, 8) as u32;
+        let mut tracker = LeaseTracker::new(k);
+        let n = g.int(1, 5) as usize;
+        let mut beats: Vec<u64> =
+            (0..n).map(|_| g.int(0, 1 << 20) as u64).collect();
+        let ticks = g.int(1, 60);
+        for _ in 0..ticks {
+            for (i, beat) in beats.iter_mut().enumerate() {
+                *beat += g.int(1, 4) as u64;
+                let id = format!("c{i}");
+                assert!(
+                    !tracker.observe(&id, *beat),
+                    "false positive on {id} (k={k})"
+                );
+                assert!(!tracker.is_dead(&id));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_lease_frozen_counter_expires_exactly_once_at_k_misses() {
+    run_cases("lease: frozen counter expires at T + k", 300, |g| {
+        let k = g.int(1, 8) as u32;
+        let mut tracker = LeaseTracker::new(k);
+        let mut beat = g.int(0, 1 << 20) as u64;
+        // Healthy prefix: the counter advances for a while (the first
+        // sample only baselines and must never count as a miss).
+        for _ in 0..g.int(0, 20) {
+            assert!(!tracker.observe("c", beat));
+            beat += g.int(1, 4) as u64;
+        }
+        assert!(!tracker.observe("c", beat), "baseline counted as miss");
+        // The counter freezes at tick T: the lease must expire on
+        // exactly the k-th frozen sample and fire exactly once, even
+        // if sampling continues past expiry.
+        let extra = g.int(0, 5) as u32;
+        let mut fired_at = None;
+        for miss in 1..=(k + extra) {
+            if tracker.observe("c", beat) {
+                assert!(fired_at.is_none(), "lease expired twice");
+                fired_at = Some(miss);
+            }
+        }
+        assert_eq!(fired_at, Some(k), "expiry not at T + k (k={k})");
+        assert!(tracker.is_dead("c"));
+        // Forget drops all state: the next sample re-baselines and a
+        // fresh freeze takes k misses again.
+        tracker.forget("c");
+        assert!(!tracker.is_dead("c"));
+        assert!(!tracker.observe("c", beat));
+        for miss in 1..=k {
+            let fired = tracker.observe("c", beat);
+            assert_eq!(fired, miss == k, "re-armed lease mistimed");
         }
     });
 }

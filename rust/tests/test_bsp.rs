@@ -7,7 +7,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::error::Result;
 use floe::graph::{patterns, GraphBuilder};
 use floe::manager::{ResourceManager, SimulatedCloud};
@@ -98,7 +98,7 @@ fn launch() -> (floe::coordinator::RunningDataflow, EventLog, patterns::BspIds)
     for w in &ids.workers {
         graph.pellet_mut(w).unwrap().sequential = true;
     }
-    let run = coord.launch(graph, LaunchOptions::default()).unwrap();
+    let run = coord.launch(graph, RuntimeOptions::new()).unwrap();
     (run, log, ids)
 }
 

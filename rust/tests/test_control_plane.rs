@@ -5,7 +5,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use floe::coordinator::{Coordinator, CoordinatorServer, LaunchOptions};
+use floe::coordinator::{Coordinator, CoordinatorServer, RuntimeOptions};
 use floe::graph::{GraphBuilder, SplitMode};
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::pellet::builtins::CollectSink;
@@ -33,7 +33,7 @@ fn launch() -> (
     g.pellet("sink", "test.Collect").in_port("in");
     g.edge("up", "out", "sink", "in");
     let run = Arc::new(
-        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap(),
+        coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap(),
     );
     let server = CoordinatorServer::start(Arc::clone(&run), 0).unwrap();
     (run, server, collected)

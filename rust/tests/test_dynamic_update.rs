@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use floe::coordinator::{Coordinator, LaunchOptions, RunningDataflow};
+use floe::coordinator::{Coordinator, RuntimeOptions, RunningDataflow};
 use floe::error::Result;
 use floe::graph::{GraphBuilder, SplitMode};
 use floe::manager::{ResourceManager, SimulatedCloud};
@@ -61,7 +61,7 @@ fn launch(coord: &Coordinator) -> RunningDataflow {
         .stateful();
     g.pellet("sink", "test.Collect").in_port("in");
     g.edge("work", "out", "sink", "in");
-    coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap()
+    coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap()
 }
 
 /// Inject continuously from a background thread while the update happens.
@@ -168,7 +168,7 @@ fn subgraph_update_is_coordinated() {
     g.edge("a", "out", "b", "in");
     g.edge("b", "out", "sink", "in");
     let run =
-        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+        coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     for i in 0..100 {
         run.inject("a", "in", Message::text(format!("x{i}"))).unwrap();
     }
@@ -216,7 +216,7 @@ fn wave_update_proceeds_upstream_first() {
     g.edge("a", "out", "b", "in");
     g.edge("b", "out", "sink", "in");
     let run =
-        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+        coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     let versions = run
         .wave_update(&[
             ("a".to_string(), "test.V2".to_string()),
@@ -250,7 +250,7 @@ fn wave_update_is_atomic_on_bad_input() {
     g.edge("a", "out", "b", "in");
     g.edge("b", "out", "sink", "in");
     let run =
-        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+        coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
 
     // Unknown pellet id anywhere in the set: nothing may change, even
     // for the valid upstream entry that traversal reaches first.
@@ -317,7 +317,7 @@ fn sync_update_interrupts_long_running_instances() {
         .in_port("in")
         .out_port("out", SplitMode::RoundRobin);
     let run =
-        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+        coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     for i in 0..8 {
         run.inject("work", "in", Message::text(format!("{i}"))).unwrap();
     }

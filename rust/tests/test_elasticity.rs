@@ -14,9 +14,7 @@ use floe::adaptation::{
     AdaptationSample, AdaptationStrategy, DynamicStrategy, ElasticAction,
     ElasticDecision, ElasticityConfig, ElasticityPolicy, StaticLookAhead,
 };
-use floe::coordinator::{
-    AdaptationSetup, Coordinator, LaunchOptions, RunningDataflow,
-};
+use floe::coordinator::{Coordinator, RunningDataflow, RuntimeOptions};
 use floe::flake::FlakeObservation;
 use floe::graph::{
     EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
@@ -73,8 +71,7 @@ fn launch(
     g.pellet("sink", "test.Collect").in_port("in").sequential();
     g.edge("src", "out", "hot", "in");
     g.edge("hot", "out", "sink", "in");
-    let options =
-        LaunchOptions { input_shards: 1, ..LaunchOptions::default() };
+    let options = RuntimeOptions::new().input_shards(1);
     let run =
         Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
     (run, collected)
@@ -318,19 +315,16 @@ fn monitor_rebinds_to_relocated_flake() {
         .in_port("in")
         .stateful();
     g.edge("slow", "out", "sink", "in");
-    let options = LaunchOptions {
-        adaptation: Some(AdaptationSetup {
-            make: Box::new(|_id| {
-                Box::new(DynamicStrategy {
-                    min_cores: 1,
-                    max_cores: 6,
-                    ..DynamicStrategy::default()
-                })
-            }),
-            interval: Duration::from_millis(5),
+    let options = RuntimeOptions::new().adaptation(
+        Box::new(|_id| {
+            Box::new(DynamicStrategy {
+                min_cores: 1,
+                max_cores: 6,
+                ..DynamicStrategy::default()
+            })
         }),
-        ..LaunchOptions::default()
-    };
+        Duration::from_millis(5),
+    );
     let run = Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
     run.flake("slow")
         .unwrap()
@@ -408,7 +402,7 @@ fn policy_relocation_releases_vacated_vm() {
     g.edge("hot", "out", "sink", "in");
     let run = Arc::new(
         coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap(),
     );
     // hot (8 cores) fills one VM alone; src+sink share another.
@@ -463,18 +457,15 @@ fn monitor_auto_watches_pellet_added_by_surgery() {
         .out_port("out", SplitMode::RoundRobin);
     g.pellet("tail", "floe.builtin.CountSink").in_port("in").stateful();
     g.edge("head", "out", "tail", "in");
-    let options = LaunchOptions {
-        adaptation: Some(AdaptationSetup {
-            make: Box::new(|_id| {
-                Box::new(DynamicStrategy {
-                    min_cores: 1,
-                    ..DynamicStrategy::default()
-                })
-            }),
-            interval: Duration::from_millis(5),
+    let options = RuntimeOptions::new().adaptation(
+        Box::new(|_id| {
+            Box::new(DynamicStrategy {
+                min_cores: 1,
+                ..DynamicStrategy::default()
+            })
         }),
-        ..LaunchOptions::default()
-    };
+        Duration::from_millis(5),
+    );
     let run = Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
 
     // Launch-set pellets are sampled...
@@ -542,18 +533,15 @@ fn monitor_drops_removed_pellet() {
         .out_port("out", SplitMode::RoundRobin);
     g.pellet("b", "floe.builtin.CountSink").in_port("in").stateful();
     g.edge("a", "out", "b", "in");
-    let options = LaunchOptions {
-        adaptation: Some(AdaptationSetup {
-            make: Box::new(|_id| {
-                Box::new(DynamicStrategy {
-                    min_cores: 1,
-                    ..DynamicStrategy::default()
-                })
-            }),
-            interval: Duration::from_millis(5),
+    let options = RuntimeOptions::new().adaptation(
+        Box::new(|_id| {
+            Box::new(DynamicStrategy {
+                min_cores: 1,
+                ..DynamicStrategy::default()
+            })
         }),
-        ..LaunchOptions::default()
-    };
+        Duration::from_millis(5),
+    );
     let run = coord.launch(g.build().unwrap(), options).unwrap();
 
     let mut d = GraphDelta::against(&run.graph());
@@ -630,7 +618,7 @@ fn consolidation_packs_underused_container_and_releases_vm() {
     g.edge("hot", "out", "sink", "in");
     let run = Arc::new(
         coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap(),
     );
     // hot (8 cores) fills one VM alone; src + sink share another.

@@ -7,7 +7,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::error::{FloeError, Result};
 use floe::graph::{
     GraphBuilder, MergeMode, SplitMode, TriggerMode, WindowSpec,
@@ -83,7 +83,7 @@ fn pull_pellet_consumes_stream() {
         .sequential();
     g.pellet("sink", "t.Collect").in_port("in");
     g.edge("sum", "out", "sink", "in");
-    let run = coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+    let run = coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     for i in 1..=10 {
         run.inject("sum", "in", Message::f32s(vec![i as f32])).unwrap();
     }
@@ -114,7 +114,7 @@ fn time_window_batches_by_elapsed_time() {
     g.pellet("sink", "floe.builtin.CountSink")
         .in_port_windowed("in", WindowSpec::Time(0.05))
         .stateful();
-    let run = coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+    let run = coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     for i in 0..20 {
         run.inject("sink", "in", Message::text(format!("{i}"))).unwrap();
     }
@@ -155,7 +155,7 @@ fn synchronous_merge_aligns_ports() {
     g.edge("a", "out", "join", "left");
     g.edge("b", "out", "join", "right");
     g.edge("join", "out", "sink", "in");
-    let run = coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+    let run = coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     // 5 messages on the left, 3 on the right -> only 3 aligned tuples can
     // fire (Identity forwards each tuple's two members).
     for i in 0..5 {
@@ -208,7 +208,7 @@ fn pellet_errors_are_isolated() {
         .out_port("out", SplitMode::RoundRobin);
     g.pellet("sink", "t.Collect").in_port("in");
     g.edge("p", "out", "sink", "in");
-    let run = coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+    let run = coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     for i in 0..50 {
         let text = if i % 10 == 5 { "poison".into() } else { format!("ok{i}") };
         run.inject("p", "in", Message::text(text)).unwrap();
@@ -239,10 +239,7 @@ fn bounded_queues_apply_backpressure() {
         .in_port("in")
         .sequential()
         .stateful();
-    let options = LaunchOptions {
-        queue_capacity: 8,
-        ..LaunchOptions::default()
-    };
+    let options = RuntimeOptions::new().queue_capacity(8);
     let run = coord.launch(g.build().unwrap(), options).unwrap();
     run.flake("slow")
         .unwrap()
@@ -290,7 +287,7 @@ fn pause_holds_messages_resume_delivers_all() {
         .out_port("out", SplitMode::RoundRobin);
     g.pellet("sink", "t.Collect").in_port("in");
     g.edge("id", "out", "sink", "in");
-    let run = coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+    let run = coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     run.flake("id").unwrap().pause();
     for i in 0..200 {
         run.inject("id", "in", Message::text(format!("{i}"))).unwrap();
@@ -317,7 +314,7 @@ fn checkpoint_restore_across_relaunch() {
     let mut g = GraphBuilder::new("ckpt");
     g.pellet("count", "floe.builtin.CountSink").in_port("in").stateful();
     let run =
-        coord.launch(g.build().unwrap(), LaunchOptions::default()).unwrap();
+        coord.launch(g.build().unwrap(), RuntimeOptions::new()).unwrap();
     for i in 0..30 {
         run.inject("count", "in", Message::text(format!("{i}"))).unwrap();
     }
@@ -339,7 +336,7 @@ fn checkpoint_restore_across_relaunch() {
     let mut g2 = GraphBuilder::new("ckpt");
     g2.pellet("count", "floe.builtin.CountSink").in_port("in").stateful();
     let run2 =
-        coord2.launch(g2.build().unwrap(), LaunchOptions::default()).unwrap();
+        coord2.launch(g2.build().unwrap(), RuntimeOptions::new()).unwrap();
     let parsed = floe::flake::FlakeCheckpoint::from_json(
         &floe::util::json::Json::parse(&json).unwrap(),
     )

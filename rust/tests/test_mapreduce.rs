@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use floe::coordinator::{Coordinator, LaunchOptions};
+use floe::coordinator::{Coordinator, RuntimeOptions};
 use floe::graph::{patterns, GraphBuilder, SplitMode};
 use floe::manager::{ResourceManager, SimulatedCloud};
 use floe::message::{Landmark, Message};
@@ -50,7 +50,7 @@ fn launch_wordcount() -> (
         g.edge(r, "out", "sink", "in");
     }
     let run = coord
-        .launch(g.build().unwrap(), LaunchOptions::default())
+        .launch(g.build().unwrap(), RuntimeOptions::new())
         .unwrap();
     (run, collected, ids)
 }

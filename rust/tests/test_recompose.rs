@@ -11,7 +11,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use floe::channel::{ChannelBackend, EndpointAddr, TcpSender};
-use floe::coordinator::{Coordinator, LaunchOptions, RunningDataflow};
+use floe::coordinator::{Coordinator, RunningDataflow, RuntimeOptions};
 use floe::error::Result;
 use floe::graph::{
     EdgeSpec, GraphBuilder, InPortSpec, OutPortSpec, PelletSpec,
@@ -54,8 +54,8 @@ fn setup() -> (Coordinator, Arc<Mutex<Vec<Message>>>) {
     (Coordinator::new(ResourceManager::new(cloud), registry), collected)
 }
 
-fn fifo_options() -> LaunchOptions {
-    LaunchOptions { input_shards: 1, ..LaunchOptions::default() }
+fn fifo_options() -> RuntimeOptions {
+    RuntimeOptions::new().input_shards(1)
 }
 
 /// A sequential in->out pellet spec for splicing into live edges.
@@ -238,7 +238,7 @@ fn relocate_flake_live_preserves_state_and_messages() {
     g.edge("head", "out", "cnt", "in");
     let run = Arc::new(
         coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap(),
     );
     let home_before = run.container("cnt").unwrap().id.clone();
@@ -284,11 +284,8 @@ fn surgery_zero_loss_fifo_on_mutex_backend() {
         .sequential();
     g.pellet("tail", "test.Collect").in_port("in").sequential();
     g.edge("head", "out", "tail", "in");
-    let options = LaunchOptions {
-        input_shards: 1,
-        channel_backend: ChannelBackend::Mutex,
-        ..LaunchOptions::default()
-    };
+    let options =
+        RuntimeOptions::new().input_shards(1).backend(ChannelBackend::Mutex);
     let run =
         Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
 
@@ -332,7 +329,7 @@ fn relocate_source_under_direct_injection() {
     g.pellet("solo", "test.Count").in_port("in").stateful();
     let run = Arc::new(
         coord
-            .launch(g.build().unwrap(), LaunchOptions::default())
+            .launch(g.build().unwrap(), RuntimeOptions::new())
             .unwrap(),
     );
 
@@ -370,7 +367,7 @@ fn bad_deltas_reject_atomically() {
     g.pellet("tail", "test.Collect").in_port("in");
     g.edge("head", "out", "tail", "in");
     let run = coord
-        .launch(g.build().unwrap(), LaunchOptions::default())
+        .launch(g.build().unwrap(), RuntimeOptions::new())
         .unwrap();
 
     // Stale base version.
@@ -431,11 +428,7 @@ fn tcp_fed_relocation_roundtrip(backend: ChannelBackend) {
         .sequential();
     g.pellet("tail", "test.Collect").in_port("in").sequential();
     g.edge("gate", "out", "tail", "in");
-    let options = LaunchOptions {
-        input_shards: 1,
-        channel_backend: backend,
-        ..LaunchOptions::default()
-    };
+    let options = RuntimeOptions::new().input_shards(1).backend(backend);
     let run = Arc::new(coord.launch(g.build().unwrap(), options).unwrap());
     let ep_before = run.serve_tcp("gate", 0).unwrap();
 

@@ -20,7 +20,8 @@ from pathlib import Path
 
 # Key paths each bench writes (see the write_* helpers in
 # rust/benches/bench_channels.rs, bench_recompose.rs,
-# bench_elasticity.rs).  Dots separate nesting levels.
+# bench_elasticity.rs, bench_failover.rs).  Dots separate nesting
+# levels.
 REQUIRED = {
     "BENCH_channels.json": [
         "bench",
@@ -92,6 +93,20 @@ REQUIRED = {
         "scale_in.released_vms",
         "scale_in.step_ms",
         "scale_in.downtime_ms",
+        "messages.injected",
+        "messages.delivered",
+        "messages.lost",
+    ],
+    "BENCH_failover.json": [
+        "bench",
+        "config.lease_interval_ms",
+        "config.lease_missed_k",
+        "config.checkpoint_interval_ms",
+        "config.dedup",
+        "detection_ms",
+        "repair_ms",
+        "heal_ms",
+        "replayed_messages",
         "messages.injected",
         "messages.delivered",
         "messages.lost",
