@@ -1,0 +1,71 @@
+//! Metrics smoke: launch a tiny dataflow with telemetry enabled, stream
+//! a few messages through it, and print the coordinator's Prometheus
+//! exposition to stdout — and nothing else, so CI can pipe the output
+//! straight into `scripts/check_metrics.py`.
+//!
+//! ```sh
+//! cargo run --release --example metrics_smoke \
+//!   | python3 scripts/check_metrics.py
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use floe::coordinator::{Coordinator, CoordinatorServer, RuntimeOptions};
+use floe::graph::{GraphBuilder, SplitMode};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::Message;
+use floe::pellet::builtins::CollectSink;
+use floe::pellet::PelletRegistry;
+use floe::telemetry::TelemetryConfig;
+use floe::util::http::http_get;
+
+fn main() {
+    floe::util::logging::init();
+
+    let registry = PelletRegistry::with_builtins();
+    let collected = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    registry.register("demo.Collect", move || {
+        Box::new(CollectSink { collected: Arc::clone(&c2) })
+    });
+
+    let mut g = GraphBuilder::new("metrics_smoke");
+    g.pellet("up", "floe.builtin.Uppercase")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin);
+    g.pellet("sink", "demo.Collect").in_port("in");
+    g.edge("up", "out", "sink", "in");
+
+    let coord = Coordinator::new(
+        ResourceManager::new(SimulatedCloud::new(8, Duration::ZERO)),
+        registry,
+    );
+    // Sample every batch so even this tiny run fills the e2e latency
+    // histogram (the default 1-in-128 would likely see nothing here).
+    let run = Arc::new(
+        coord
+            .launch(
+                g.build().expect("valid graph"),
+                RuntimeOptions::new()
+                    .telemetry(TelemetryConfig::new().sample_every(1)),
+            )
+            .expect("launch"),
+    );
+
+    for i in 0..64 {
+        run.inject("up", "in", Message::text(format!("msg {i}")))
+            .expect("inject");
+    }
+    assert!(run.drain(Duration::from_secs(10)), "drain timed out");
+    assert_eq!(collected.lock().unwrap().len(), 64);
+
+    let mut server =
+        CoordinatorServer::start(Arc::clone(&run), 0).expect("serve");
+    let text =
+        http_get(&server.addr(), "/metrics").expect("GET /metrics");
+    print!("{text}");
+
+    server.shutdown();
+    run.stop();
+}

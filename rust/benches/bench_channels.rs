@@ -10,6 +10,10 @@
 //!   `SyncQueue` head-to-head on one queue, single and batched, at
 //!   1/4/8 producers — the backend knob's measured justification.
 //!
+//! Plus a telemetry A/B: the batched ring workload with the crate's
+//! observability instruments off (default) vs on, pinning the
+//! "off-path costs nothing" claim to a number.
+//!
 //! Writes the measured numbers to `BENCH_channels.json` in the repo root
 //! so successive PRs can track the perf trajectory.
 
@@ -318,6 +322,24 @@ fn bench_codec(n: usize, payload: usize) -> (f64, f64) {
     (enc_rate, dec_rate)
 }
 
+/// Telemetry cost on the hottest primitive: the batched ring at
+/// `MPMC_PRODUCERS` producers, instruments off (the default) vs on.
+/// Same workload, same queue — the delta is the gated park/latency
+/// bookkeeping in `channel/ring.rs`.
+fn bench_telemetry_overhead(total: usize) -> (f64, f64) {
+    floe::telemetry::set_enabled(false);
+    let off = bench_primitive(true, MPMC_PRODUCERS, true, total);
+    floe::telemetry::set_enabled(true);
+    let on = bench_primitive(true, MPMC_PRODUCERS, true, total);
+    floe::telemetry::set_enabled(false);
+    (off, on)
+}
+
+/// Throughput lost with instruments on, in percent of the off rate.
+fn overhead_pct(off: f64, on: f64) -> f64 {
+    (off - on) / off.max(1.0) * 100.0
+}
+
 fn rvm_json(cells: &[RvmCell]) -> String {
     cells
         .iter()
@@ -345,6 +367,8 @@ fn write_baseline(
     tcp_batched: f64,
     enc: f64,
     dec: f64,
+    tel_off: f64,
+    tel_on: f64,
 ) {
     let json = format!(
         "{{\n  \"bench\": \"bench_channels\",\n  \"config\": {{\n    \
@@ -358,10 +382,13 @@ fn write_baseline(
          \"batched\": {{\n{}\n    }}\n  }},\n  \
          \"tcp_msgs_per_sec\": {{\n    \"single\": {tcp_single:.0},\n    \
          \"batched\": {tcp_batched:.0}\n  }},\n  \"codec_msgs_per_sec\": \
-         {{\n    \"encode\": {enc:.0},\n    \"decode\": {dec:.0}\n  }}\n}}\n",
+         {{\n    \"encode\": {enc:.0},\n    \"decode\": {dec:.0}\n  }},\n  \
+         \"telemetry_overhead\": {{\n    \"off\": {tel_off:.0},\n    \
+         \"on\": {tel_on:.0},\n    \"overhead_pct\": {:.2}\n  }}\n}}\n",
         batched / single.max(1.0),
         rvm_json(rvm_single),
         rvm_json(rvm_batched),
+        overhead_pct(tel_off, tel_on),
     );
     // Repo root = the rust package dir's parent.
     let root = std::env::var("CARGO_MANIFEST_DIR")
@@ -435,6 +462,19 @@ fn main() {
              {tcp_batched:>14.0} {enc:>14.0} {dec:>14.0}"
         );
     }
+    println!(
+        "\n# Telemetry overhead, batched ring, {MPMC_PRODUCERS} \
+         producers — messages/second"
+    );
+    let (tel_off, tel_on) = bench_telemetry_overhead(400_000);
+    println!("{:>24} {tel_off:>14.0}", "instruments off");
+    println!("{:>24} {tel_on:>14.0}", "instruments on");
+    println!(
+        "{:>24} {:>13.2}%",
+        "overhead",
+        overhead_pct(tel_off, tel_on)
+    );
+
     write_baseline(
         single,
         batched,
@@ -444,5 +484,7 @@ fn main() {
         tcp_batched_64,
         enc_64,
         dec_64,
+        tel_off,
+        tel_on,
     );
 }

@@ -53,6 +53,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::{AdaptationHistory, AdaptationSample, AdaptationStrategy};
 use crate::container::Container;
@@ -133,6 +134,9 @@ struct Watched {
     strategy: Box<dyn AdaptationStrategy>,
     saturated_streak: usize,
     cooldown_left: usize,
+    /// Wall-clock start of the current saturation streak; consumed by
+    /// the relocation that resolves it to record time-to-react.
+    saturation_since: Option<Instant>,
 }
 
 /// The closed-loop elasticity controller (see module docs).
@@ -185,6 +189,7 @@ impl ElasticityPolicy {
             strategy,
             saturated_streak: 0,
             cooldown_left: 0,
+            saturation_since: None,
         });
     }
 
@@ -253,6 +258,10 @@ impl ElasticityPolicy {
                 cores_before: obs.cores,
                 cores_after: after,
             });
+            crate::telemetry::ctr_elasticity_decision(decision_kind(
+                &action,
+            ))
+            .inc();
             let decision = ElasticDecision { t, pellet_id: id, action };
             self.trace.push(decision.clone());
             out.push(decision);
@@ -289,6 +298,9 @@ impl ElasticityPolicy {
         }
         if wanted > available {
             w.saturated_streak += 1;
+            if w.saturation_since.is_none() {
+                w.saturation_since = Some(Instant::now());
+            }
             if w.saturated_streak >= self.cfg.saturation_k
                 && w.cooldown_left == 0
             {
@@ -303,6 +315,7 @@ impl ElasticityPolicy {
             return Planned::Hold;
         }
         w.saturated_streak = 0;
+        w.saturation_since = None;
         if wanted != obs.cores {
             Planned::Regrant { to: wanted }
         } else {
@@ -348,6 +361,19 @@ impl ElasticityPolicy {
                             stats.downtime_ms
                         );
                         self.relocation_stats.push(stats);
+                        // Time-to-react: saturation onset to the
+                        // moment the replacement is live.
+                        if let Some(since) = self
+                            .watched
+                            .iter_mut()
+                            .find(|w| w.pellet_id == pellet_id)
+                            .and_then(|w| w.saturation_since.take())
+                        {
+                            crate::telemetry::hist_elasticity_react()
+                                .record(
+                                    since.elapsed().as_nanos() as u64,
+                                );
+                        }
                         // Grow into the fresh container immediately.
                         if let (Ok(flake), Ok(new_home)) = (
                             run.flake(pellet_id),
@@ -516,6 +542,15 @@ impl ElasticityPolicy {
                         stats.downtime_ms
                     );
                     self.consolidation_stats.push(stats);
+                    crate::telemetry::ctr_elasticity_decision(
+                        "consolidate",
+                    )
+                    .inc();
+                    crate::telemetry::tracelog().instant(
+                        "consolidate",
+                        &id,
+                        &format!("{} -> {to}", victim.id),
+                    );
                     if let Some(w) = self
                         .watched
                         .iter_mut()
@@ -567,6 +602,17 @@ impl ElasticityPolicy {
             .find(|w| w.pellet_id == pellet_id)
             .map(|w| w.strategy.name())
             .unwrap_or("elastic")
+    }
+}
+
+/// Metric label for `floe_elasticity_decisions_total{kind=...}`.
+fn decision_kind(action: &ElasticAction) -> &'static str {
+    match action {
+        ElasticAction::Hold => "hold",
+        ElasticAction::Regrant { .. } => "regrant",
+        ElasticAction::Relocate { .. } => "relocate",
+        ElasticAction::Degraded { .. } => "degraded",
+        ElasticAction::Consolidate { .. } => "consolidate",
     }
 }
 

@@ -49,6 +49,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::queue::QueueClosed;
+use crate::telemetry;
 
 /// Upper bound for one parked wait; bounds the cost of a lost wakeup.
 const PARK: Duration = Duration::from_millis(1);
@@ -510,8 +511,11 @@ impl<T> RingQueue<T> {
     }
 
     /// Park until slots may have freed.  Bounded: a wakeup lost to the
-    /// register/notify race costs at most [`PARK`].
+    /// register/notify race costs at most [`PARK`].  Already the slow
+    /// path (mutex + condvar), so the telemetry stamp is free relative
+    /// to the wait itself; the lock-free fast path records nothing.
     fn park_push(&self) {
+        let stamp = telemetry::enabled().then(Instant::now);
         let guard = self.signal.lock().expect("ring signal poisoned");
         self.push_waiters.fetch_add(1, Ordering::SeqCst);
         let (_g, _) = self
@@ -519,10 +523,15 @@ impl<T> RingQueue<T> {
             .wait_timeout(guard, PARK)
             .expect("ring signal poisoned");
         self.push_waiters.fetch_sub(1, Ordering::SeqCst);
+        if let Some(t) = stamp {
+            telemetry::hist_ring_push_wait()
+                .record(t.elapsed().as_nanos() as u64);
+        }
     }
 
     /// Park until items may have arrived (bounded, like `park_push`).
     fn park_pop(&self, deadline: Option<Instant>) {
+        let stamp = telemetry::enabled().then(Instant::now);
         let mut wait = PARK;
         if let Some(d) = deadline {
             let now = Instant::now();
@@ -538,6 +547,10 @@ impl<T> RingQueue<T> {
             .wait_timeout(guard, wait)
             .expect("ring signal poisoned");
         self.pop_waiters.fetch_sub(1, Ordering::SeqCst);
+        if let Some(t) = stamp {
+            telemetry::hist_ring_pop_wait()
+                .record(t.elapsed().as_nanos() as u64);
+        }
     }
 }
 

@@ -400,6 +400,10 @@ fn serve_stream(
             Err(_) => return Ok(()), // peer reset
         };
         acc.extend_from_slice(&chunk[..n]);
+        let telemetry_on = crate::telemetry::enabled();
+        if telemetry_on {
+            crate::telemetry::ctr_tcp_rx_bytes().add(n as u64);
+        }
 
         // Decode every complete frame in the accumulator, grouping
         // consecutive messages per port so each group lands in the sink
@@ -407,6 +411,7 @@ fn serve_stream(
         // connection, but everything decoded before it is still
         // delivered below.
         let mut consumed = 0usize;
+        let mut decoded_frames = 0u64;
         let mut frame_err: Option<FloeError> = None;
         loop {
             let avail = acc.len() - consumed;
@@ -455,6 +460,10 @@ fn serve_stream(
                 deliveries.push((port, vec![msg]));
             }
             consumed += 4 + total;
+            decoded_frames += 1;
+        }
+        if telemetry_on && decoded_frames > 0 {
+            crate::telemetry::ctr_tcp_rx_frames().add(decoded_frames);
         }
         if consumed > 0 {
             acc.drain(..consumed);
@@ -576,6 +585,12 @@ impl TcpSender {
             Self::frame_into(&self.port_name, msg, &mut inner.scratch);
         }
         let result = write_frames(&self.target, inner);
+        if result.is_ok() && crate::telemetry::enabled() {
+            crate::telemetry::ctr_tcp_tx_bytes()
+                .add(inner.scratch.len() as u64);
+            crate::telemetry::ctr_tcp_tx_frames()
+                .add(msgs.len() as u64);
+        }
         if inner.scratch.capacity() > SCRATCH_KEEP {
             inner.scratch.shrink_to(SCRATCH_KEEP);
         }
@@ -610,6 +625,12 @@ fn refresh_endpoint(
         crate::log_debug!(
             "tcp: rebinding to {endpoint} (flake '{flake_id}' moved)"
         );
+        if inner.endpoint.is_some() {
+            // A genuine rebind (not the first resolve): audit it.
+            crate::telemetry::ctr_tcp_rebinds().inc();
+            crate::telemetry::tracelog()
+                .instant("rebind", flake_id, &endpoint);
+        }
         if let Some(stream) = inner.stream.take() {
             if drain {
                 drain_connection(stream);
@@ -695,6 +716,7 @@ fn write_frames(
                      {last_err}"
                 )));
             }
+            crate::telemetry::ctr_tcp_reconnects().inc();
             let backoff =
                 Duration::from_millis(1u64 << attempt.min(10));
             thread::sleep(backoff.min(SEND_BACKOFF_CAP));

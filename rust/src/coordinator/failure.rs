@@ -264,8 +264,9 @@ fn detector_loop(
     let mut last_checkpoint = Instant::now();
     // Dead containers whose flakes still await repair (a repair delta
     // that loses a version race with a concurrent surgery simply
-    // retries on the next tick).
-    let mut pending: Vec<String> = Vec::new();
+    // retries on the next tick), with the instant the lease expired so
+    // the eventual repair can record detection-to-heal latency.
+    let mut pending: Vec<(String, Instant)> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         thread::sleep(cfg.lease_interval);
         if stop.load(Ordering::SeqCst) {
@@ -289,7 +290,7 @@ fn detector_loop(
         // sight.
         let containers = container_snapshot(inner);
         for (cid, c) in &containers {
-            if pending.iter().any(|p| p == cid) {
+            if pending.iter().any(|(p, _)| p == cid) {
                 continue;
             }
             c.start_heartbeat(cfg.heartbeat_interval());
@@ -303,28 +304,42 @@ fn detector_loop(
                     cfg.lease_missed_k,
                     flakes.len()
                 );
+                crate::telemetry::ctr_lease_expiries().inc();
+                crate::telemetry::tracelog().instant(
+                    "detect",
+                    cid,
+                    "lease expired",
+                );
+                crate::telemetry::tracelog().begin("repair", cid);
                 inner.record_failure(FailureEvent {
                     container: cid.clone(),
                     flakes,
                     detected_at_tick: tick,
                 });
-                pending.push(cid.clone());
+                pending.push((cid.clone(), Instant::now()));
             }
         }
 
         // Repair pending containers; keep retrying across version
         // races until each one's flakes are all re-homed.
-        pending.retain(|cid| match inner.repair_dead_container(cid) {
-            Ok(()) => {
-                tracker.forget(cid);
-                false
-            }
-            Err(e) => {
-                crate::log_warn!(
-                    "failure detector: repair of '{cid}' failed \
-                     ({e}); retrying next tick"
-                );
-                true
+        pending.retain(|(cid, detected)| {
+            match inner.repair_dead_container(cid) {
+                Ok(()) => {
+                    tracker.forget(cid);
+                    crate::telemetry::ctr_repairs().inc();
+                    crate::telemetry::hist_failover_heal()
+                        .record(detected.elapsed().as_nanos() as u64);
+                    crate::telemetry::tracelog()
+                        .end("repair", cid, "ok");
+                    false
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "failure detector: repair of '{cid}' failed \
+                         ({e}); retrying next tick"
+                    );
+                    true
+                }
             }
         });
     }

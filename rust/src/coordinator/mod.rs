@@ -87,6 +87,10 @@ pub struct RuntimeOptions {
     /// Knobs for [`crate::adaptation::ElasticityPolicy`] instances
     /// built from these options.
     pub elasticity: ElasticityConfig,
+    /// Hot-path telemetry + 1-in-N end-to-end latency sampling (see
+    /// [`crate::telemetry`]); `None` (default) keeps hot-path
+    /// instruments off — control-plane events still record.
+    pub telemetry: Option<crate::telemetry::TelemetryConfig>,
 }
 
 impl Default for RuntimeOptions {
@@ -101,6 +105,7 @@ impl Default for RuntimeOptions {
             adaptation: None,
             fault_tolerance: None,
             elasticity: ElasticityConfig::default(),
+            telemetry: None,
         }
     }
 }
@@ -176,6 +181,16 @@ impl RuntimeOptions {
     /// Knobs for elasticity policies built from these options.
     pub fn elasticity(mut self, cfg: ElasticityConfig) -> Self {
         self.elasticity = cfg;
+        self
+    }
+
+    /// Enable hot-path telemetry and 1-in-N end-to-end latency
+    /// sampling (see [`crate::telemetry`]).
+    pub fn telemetry(
+        mut self,
+        cfg: crate::telemetry::TelemetryConfig,
+    ) -> Self {
+        self.telemetry = Some(cfg);
         self
     }
 }
@@ -440,6 +455,11 @@ impl DataflowInner {
             }
             match flake.checkpoint() {
                 Ok(cp) => {
+                    let queued: usize =
+                        cp.queued.values().map(Vec::len).sum();
+                    crate::telemetry::ctr_checkpoints().inc();
+                    crate::telemetry::ctr_checkpoint_messages()
+                        .add(queued as u64);
                     self.checkpoints
                         .lock()
                         .expect("checkpoint store poisoned")
@@ -506,6 +526,7 @@ impl DataflowInner {
     }
 
     pub(crate) fn record_repair(&self, ev: RepairEvent) {
+        crate::telemetry::ctr_replayed().add(ev.replayed as u64);
         self.repairs.lock().expect("repair log poisoned").push(ev);
     }
 
@@ -868,6 +889,8 @@ impl RunningDataflow {
             pellets,
             failures: self.inner.failures(),
             repairs: self.inner.repairs(),
+            telemetry: crate::telemetry::metrics()
+                .histogram_summaries(),
         }
     }
 
@@ -949,6 +972,9 @@ impl Coordinator {
         options: impl Into<RuntimeOptions>,
     ) -> Result<RunningDataflow> {
         let options: RuntimeOptions = options.into();
+        if let Some(cfg) = options.telemetry {
+            crate::telemetry::configure(cfg);
+        }
         graph.validate()?;
         let order = graph.wiring_order()?;
         crate::log_info!(

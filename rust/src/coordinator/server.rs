@@ -4,6 +4,9 @@
 //! Routes:
 //! * `GET  /graph`                       — the graph's XML description
 //! * `GET  /stats`                       — per-pellet runtime stats (JSON)
+//! * `GET  /metrics`                     — Prometheus text exposition
+//! * `GET  /trace?since={seq}`           — control-action trace (JSON)
+//! * `GET  /health`                      — liveness summary (JSON)
 //! * `POST /inject/{pellet}/{port}`      — inject a text message (body)
 //! * `POST /update/{pellet}?class=&mode=sync|async` — dynamic task update
 //! * `POST /pause/{pellet}` / `POST /resume/{pellet}`
@@ -15,6 +18,7 @@ use super::RunningDataflow;
 use crate::error::Result;
 use crate::message::Message;
 use crate::util::http::{HttpServer, Request, Response};
+use crate::util::json::Json;
 
 /// HTTP facade over a running dataflow.
 pub struct CoordinatorServer {
@@ -51,6 +55,57 @@ fn handle(run: &RunningDataflow, req: &Request) -> Response {
         },
         ("GET", ["stats"]) => {
             Response::ok_json(run.stats_json().to_string())
+        }
+        ("GET", ["metrics"]) => {
+            // Every family is present even on an idle dataflow, and
+            // queue-depth gauges reflect this scrape.
+            crate::telemetry::touch();
+            for p in &run.stats().pellets {
+                crate::telemetry::gauge_queue_depth(&p.id)
+                    .set(p.queue as u64);
+            }
+            Response {
+                status: 200,
+                content_type: "text/plain; version=0.0.4".into(),
+                body: crate::telemetry::metrics()
+                    .render()
+                    .into_bytes(),
+            }
+        }
+        ("GET", ["trace"]) => {
+            let since = req
+                .query_get("since")
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(0);
+            let events = crate::telemetry::tracelog().since(since);
+            let arr: Vec<Json> =
+                events.iter().map(trace_event_json).collect();
+            Response::ok_json(Json::Arr(arr).to_string())
+        }
+        ("GET", ["health"]) => {
+            let stats = run.stats();
+            let degraded = stats.pellets.iter().any(|p| {
+                run.container(&p.id)
+                    .map(|c| c.is_dead())
+                    .unwrap_or(true)
+            });
+            let doc = Json::obj(vec![
+                (
+                    "status",
+                    Json::str(if degraded { "degraded" } else { "ok" }),
+                ),
+                ("pellets", Json::num(stats.pellets.len() as f64)),
+                (
+                    "failures",
+                    Json::num(stats.failures.len() as f64),
+                ),
+                ("repairs", Json::num(stats.repairs.len() as f64)),
+                (
+                    "endpoints",
+                    Json::num(stats.endpoints.published as f64),
+                ),
+            ]);
+            Response::ok_json(doc.to_string())
         }
         ("POST", ["inject", pellet, port]) => {
             match run.inject(pellet, port, Message::text(req.body_str())) {
@@ -96,4 +151,16 @@ fn handle(run: &RunningDataflow, req: &Request) -> Response {
         }
         _ => Response::error(404, "unknown coordinator path"),
     }
+}
+
+/// One trace event as a JSON object (the `GET /trace` array).
+fn trace_event_json(e: &crate::telemetry::TraceEvent) -> Json {
+    Json::obj(vec![
+        ("seq", Json::num(e.seq as f64)),
+        ("t_ms", Json::num(e.t_ms)),
+        ("kind", Json::str(e.kind.clone())),
+        ("phase", Json::str(e.phase.as_str())),
+        ("target", Json::str(e.target.clone())),
+        ("outcome", Json::str(e.outcome.clone())),
+    ])
 }

@@ -7,6 +7,7 @@
 //! control plane keeps serving it verbatim), extended with `failures`
 //! and `repairs` sections from the fault-tolerance subsystem.
 
+use crate::telemetry::HistogramSummary;
 use crate::util::json::Json;
 
 use super::{FailureEvent, RepairEvent};
@@ -67,6 +68,9 @@ pub struct DataflowStats {
     pub failures: Vec<FailureEvent>,
     /// Flakes re-spawned by `ReplaceFailed` repairs, oldest first.
     pub repairs: Vec<RepairEvent>,
+    /// Quantile digests of every telemetry histogram series (empty
+    /// until instruments have registered; see [`crate::telemetry`]).
+    pub telemetry: Vec<HistogramSummary>,
 }
 
 impl DataflowStats {
@@ -132,6 +136,31 @@ impl DataflowStats {
                     ),
                 ]),
             ),
+            (
+                "telemetry",
+                Json::Arr(
+                    self.telemetry
+                        .iter()
+                        .map(summary_to_json)
+                        .collect(),
+                ),
+            ),
         ])
     }
+}
+
+/// One histogram digest as a JSON object (the `telemetry` array).
+fn summary_to_json(s: &HistogramSummary) -> Json {
+    let mut fields = vec![("name", Json::str(s.name.clone()))];
+    if let Some((k, v)) = &s.label {
+        fields.push(("label_key", Json::str(k.clone())));
+        fields.push(("label_value", Json::str(v.clone())));
+    }
+    fields.push(("count", Json::num(s.count as f64)));
+    fields.push(("sum", Json::num(s.sum as f64)));
+    fields.push(("p50", Json::num(s.p50 as f64)));
+    fields.push(("p90", Json::num(s.p90 as f64)));
+    fields.push(("p99", Json::num(s.p99 as f64)));
+    fields.push(("max", Json::num(s.max as f64)));
+    Json::obj(fields)
 }

@@ -120,6 +120,35 @@ impl FlakeConfig {
     }
 }
 
+/// Per-pellet telemetry instruments, resolved once at spawn when the
+/// launch enabled telemetry (`Shared.telemetry = None` otherwise, so
+/// the off path costs a single branch per batch).
+struct FlakeTelemetry {
+    batch: Arc<crate::telemetry::Histogram>,
+    service: Arc<crate::telemetry::Histogram>,
+    dedup_drops: Arc<crate::telemetry::Counter>,
+    e2e: Arc<crate::telemetry::Histogram>,
+    sampler: crate::telemetry::Sampler,
+    /// Sink flakes (no output ports) record sampled e2e latency.
+    sink: bool,
+}
+
+impl FlakeTelemetry {
+    fn for_pellet(cfg: &FlakeConfig) -> FlakeTelemetry {
+        let id = &cfg.pellet_id;
+        FlakeTelemetry {
+            batch: crate::telemetry::hist_flake_batch(id),
+            service: crate::telemetry::hist_flake_service(id),
+            dedup_drops: crate::telemetry::ctr_flake_dedup_drops(id),
+            e2e: crate::telemetry::hist_e2e_latency(id),
+            sampler: crate::telemetry::Sampler::new(
+                crate::telemetry::sample_every(),
+            ),
+            sink: cfg.outputs.is_empty(),
+        }
+    }
+}
+
 struct Shared {
     cfg: FlakeConfig,
     ports: HashMap<String, Arc<ShardedQueue<Message>>>,
@@ -150,6 +179,8 @@ struct Shared {
     stop: AtomicBool,
     cores: AtomicUsize,
     active_instances: AtomicUsize,
+    /// `Some` iff telemetry was enabled when this flake spawned.
+    telemetry: Option<FlakeTelemetry>,
 }
 
 impl Shared {
@@ -165,12 +196,36 @@ impl Shared {
         item: PortIo,
     ) {
         let msgs = item.messages().len() as u64;
+        // Oldest ingest stamp across the batch (`created_us` already
+        // rides the wire) — captured before compute consumes the item,
+        // propagated into emissions below so downstream sinks measure
+        // true ingest→sink latency.  `u64::MAX` = nothing to carry.
+        let origin_us = match &self.telemetry {
+            Some(_) => item
+                .messages()
+                .iter()
+                .map(|m| m.created_us)
+                .min()
+                .unwrap_or(u64::MAX),
+            None => u64::MAX,
+        };
         let start = Instant::now();
         let result = pellet.compute(item, ctx);
         let nanos = start.elapsed().as_nanos() as u64;
         self.probes.record_completion(msgs, nanos);
+        if let Some(tl) = &self.telemetry {
+            tl.service.record(nanos);
+            if tl.sink
+                && origin_us != u64::MAX
+                && tl.sampler.tick()
+            {
+                let age_us = crate::message::now_us()
+                    .saturating_sub(origin_us);
+                tl.e2e.record(age_us.saturating_mul(1000));
+            }
+        }
         match result {
-            Ok(()) => self.flush_emissions(ctx),
+            Ok(()) => self.flush_emissions_stamped(ctx, origin_us),
             Err(e) => {
                 crate::log_error!(
                     "pellet {} compute failed: {e}",
@@ -182,7 +237,24 @@ impl Shared {
     }
 
     fn flush_emissions(&self, ctx: &mut PelletContext) {
-        let emitted = ctx.take_emitted();
+        self.flush_emissions_stamped(ctx, u64::MAX);
+    }
+
+    /// Route pending emissions; when an origin ingest stamp is known
+    /// (`origin_us != u64::MAX`), carry it onto every emitted message
+    /// so the e2e clock keeps ticking across hops.  `min` keeps the
+    /// oldest stamp if the pellet emitted a message it received.
+    fn flush_emissions_stamped(
+        &self,
+        ctx: &mut PelletContext,
+        origin_us: u64,
+    ) {
+        let mut emitted = ctx.take_emitted();
+        if origin_us != u64::MAX {
+            for (_, m) in emitted.iter_mut() {
+                m.created_us = m.created_us.min(origin_us);
+            }
+        }
         if !emitted.is_empty() {
             self.route_emissions(emitted);
         }
@@ -243,6 +315,9 @@ impl Shared {
         w.store(mark, Ordering::Relaxed);
         let dropped = before - buf.len();
         if dropped > 0 {
+            if let Some(tl) = &self.telemetry {
+                tl.dedup_drops.add(dropped as u64);
+            }
             crate::log_debug!(
                 "flake {}: dedup dropped {dropped} replayed message(s) \
                  on '{port}'",
@@ -320,6 +395,8 @@ impl Flake {
             .iter()
             .map(|p| (p.name.clone(), AtomicU64::new(0)))
             .collect();
+        let telemetry = crate::telemetry::enabled()
+            .then(|| FlakeTelemetry::for_pellet(&cfg));
         let shared = Arc::new(Shared {
             ports,
             port_order,
@@ -337,6 +414,7 @@ impl Flake {
             stop: AtomicBool::new(false),
             cores: AtomicUsize::new(cores),
             active_instances: AtomicUsize::new(0),
+            telemetry,
             cfg,
         });
 
@@ -991,6 +1069,9 @@ fn dispatcher_loop(shared: &Shared) {
                         shared.dedup_filter(port, &mut pop_buf);
                         if pop_buf.is_empty() {
                             continue; // all duplicates
+                        }
+                        if let Some(tl) = &shared.telemetry {
+                            tl.batch.record(pop_buf.len() as u64);
                         }
                         shared.probes.record_arrival(pop_buf.len() as u64);
                         let items: Vec<PortIo> = pop_buf

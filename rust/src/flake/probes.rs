@@ -5,6 +5,11 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Hard bound on the rate-estimation window.  `sample_rates` prunes to
+/// this on every call, so probe memory stays flat even when no monitor
+/// ever drains observations from a long-running flake.
+pub const WINDOW_CAP: usize = 5;
+
 /// Lock-free counters plus a small locked window for rate estimation.
 pub struct Probes {
     /// Messages that arrived on any input port.
@@ -96,15 +101,15 @@ impl Probes {
     }
 
     /// Take a rate sample at time `t` (seconds) and return
-    /// (arrival_rate, completion_rate) over the last window (up to 5
-    /// samples retained).
+    /// (arrival_rate, completion_rate) over the last window (up to
+    /// [`WINDOW_CAP`] samples retained).
     pub fn sample_rates(&self, t: f64) -> (f64, f64) {
         let a = self.arrivals.load(Ordering::Relaxed);
         let c = self.completions.load(Ordering::Relaxed);
         let mut w = self.window.lock().expect("probe window poisoned");
         w.push((t, a, c));
-        if w.len() > 5 {
-            let drop = w.len() - 5;
+        if w.len() > WINDOW_CAP {
+            let drop = w.len() - WINDOW_CAP;
             w.drain(..drop);
         }
         if w.len() < 2 {
@@ -186,7 +191,29 @@ mod tests {
             let _ = p.sample_rates(i as f64);
         }
         let w = p.window.lock().unwrap();
-        assert!(w.len() <= 5);
+        assert!(w.len() <= WINDOW_CAP);
+    }
+
+    #[test]
+    fn probe_window_memory_stays_flat() {
+        // Regression: a monitor-less long-running flake must not grow
+        // the sample window without bound — both length and backing
+        // capacity stay pinned near WINDOW_CAP forever.
+        let p = Probes::new();
+        for i in 0..10_000u32 {
+            p.record_arrival(1);
+            p.record_completion(1, 500);
+            let _ = p.sample_rates(f64::from(i) * 0.01);
+        }
+        let w = p.window.lock().unwrap();
+        assert!(w.len() <= WINDOW_CAP, "window len {} grew", w.len());
+        // len never exceeds WINDOW_CAP + 1, so Vec doubling can never
+        // push the allocation past a small constant.
+        assert!(
+            w.capacity() <= 2 * (WINDOW_CAP + 1),
+            "window capacity {} grew",
+            w.capacity()
+        );
     }
 
     #[test]

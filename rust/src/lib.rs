@@ -53,6 +53,7 @@ pub mod pellet;
 pub mod recompose;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 pub use error::{FloeError, Result};
@@ -80,5 +81,6 @@ pub mod prelude {
         Pellet, PelletContext, PelletFactory, PelletRegistry, PortIo,
     };
     pub use crate::recompose::{DeltaOp, GraphDelta, RecomposeStats};
+    pub use crate::telemetry::TelemetryConfig;
     pub use crate::ALPHA;
 }

@@ -69,20 +69,20 @@ fn coordinator() -> Coordinator {
 
 fn cmd_run(args: &[String]) -> i32 {
     let Some(path) = args.first().filter(|a| !a.starts_with("--")) else {
-        eprintln!("run: missing graph.xml path");
+        floe::log_error!("run: missing graph.xml path");
         return 2;
     };
     let xml = match std::fs::read_to_string(path) {
         Ok(x) => x,
         Err(e) => {
-            eprintln!("run: cannot read {path}: {e}");
+            floe::log_error!("run: cannot read {path}: {e}");
             return 1;
         }
     };
     let graph = match DataflowGraph::from_xml(&xml) {
         Ok(g) => g,
         Err(e) => {
-            eprintln!("run: {e}");
+            floe::log_error!("run: {e}");
             return 1;
         }
     };
@@ -90,7 +90,7 @@ fn cmd_run(args: &[String]) -> i32 {
     let run = match coord.launch(graph, RuntimeOptions::new()) {
         Ok(r) => Arc::new(r),
         Err(e) => {
-            eprintln!("run: launch failed: {e}");
+            floe::log_error!("run: launch failed: {e}");
             return 1;
         }
     };
@@ -119,7 +119,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
         "spikes" => WorkloadProfile::spikes_default(rate),
         "random" => WorkloadProfile::random_default(rate * 0.6),
         other => {
-            eprintln!("simulate: unknown profile '{other}'");
+            floe::log_error!("simulate: unknown profile '{other}'");
             return 2;
         }
     };
@@ -151,7 +151,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
             "dynamic" => StrategyKind::Dynamic,
             "hybrid" => StrategyKind::Hybrid,
             other => {
-                eprintln!("simulate: unknown strategy '{other}'");
+                floe::log_error!("simulate: unknown strategy '{other}'");
                 return 2;
             }
         };
@@ -317,7 +317,7 @@ fn cmd_kernels() -> i32 {
             0
         }
         Err(e) => {
-            eprintln!("kernels: {e} (run `make artifacts`)");
+            floe::log_error!("kernels: {e} (run `make artifacts`)");
             1
         }
     }

@@ -101,7 +101,7 @@ impl PartialEq for Message {
     }
 }
 
-fn now_us() -> u64 {
+pub(crate) fn now_us() -> u64 {
     use std::sync::OnceLock;
     use std::time::Instant;
     static START: OnceLock<Instant> = OnceLock::new();

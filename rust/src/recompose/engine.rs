@@ -109,8 +109,29 @@ impl<'a> RecomposeEngine<'a> {
 
 /// Execute a delta against the running dataflow.  Serialized by the
 /// caller (`DataflowInner::recompose` holds the gate), so at most one
-/// surgery is in flight per dataflow.
+/// surgery is in flight per dataflow.  Wraps the surgery in a trace
+/// span so every recomposition — user-driven, elasticity-driven, or a
+/// failure repair — lands in the `GET /trace` timeline with an
+/// outcome.
 fn execute(
+    run: &DataflowInner,
+    delta: &GraphDelta,
+) -> Result<RecomposeStats> {
+    let target = format!("{} op(s)", delta.ops.len());
+    let span = crate::telemetry::tracelog().span("recompose", &target);
+    match execute_inner(run, delta) {
+        Ok(stats) => {
+            span.finish(&format!("ok v{}", stats.graph_version));
+            Ok(stats)
+        }
+        Err(e) => {
+            span.finish(&format!("error: {e}"));
+            Err(e)
+        }
+    }
+}
+
+fn execute_inner(
     run: &DataflowInner,
     delta: &GraphDelta,
 ) -> Result<RecomposeStats> {
@@ -200,6 +221,7 @@ fn execute(
     // cut-over degrades to a returned error, never a wedged dataflow.
     // The realistic failure is a handoff quiesce timeout; the rewire
     // steps are validated against the new graph and cannot miss.
+    let quiesce_nanos = t_pause.elapsed().as_nanos() as u64;
     let t_cut = Instant::now();
     let mut retired: Vec<PlacedFlake> = Vec::new();
     let mut displaced: Vec<PlacedFlake> = Vec::new();
@@ -262,7 +284,9 @@ fn execute(
             return Err(e);
         }
     }
-    let cutover_ms = t_cut.elapsed().as_secs_f64() * 1e3;
+    let cutover_nanos = t_cut.elapsed().as_nanos() as u64;
+    let cutover_ms = cutover_nanos as f64 / 1e6;
+    let t_resume = Instant::now();
 
     // Phase 5: resume order is FIFO-critical.  A retired pellet's
     // upstream frontier must stay paused until the pellet's buffered
@@ -305,7 +329,8 @@ fn execute(
             f.resume();
         }
     }
-    let downtime_ms = t_pause.elapsed().as_secs_f64() * 1e3;
+    let downtime_nanos = t_pause.elapsed().as_nanos() as u64;
+    let downtime_ms = downtime_nanos as f64 / 1e6;
     // 5d: tear the retired flakes down (a second, normally-instant
     // drain covers backlog that was still moving when 5b timed out).
     for (id, f, c) in &retired {
@@ -340,6 +365,23 @@ fn execute(
         for id in &plan.remove {
             store.remove(id);
         }
+    }
+
+    // Per-phase duration histograms + relocation audit events.
+    crate::telemetry::ctr_recompose().inc();
+    crate::telemetry::hist_recompose_phase("quiesce")
+        .record(quiesce_nanos);
+    crate::telemetry::hist_recompose_phase("cutover")
+        .record(cutover_nanos);
+    crate::telemetry::hist_recompose_phase("resume")
+        .record(t_resume.elapsed().as_nanos() as u64);
+    crate::telemetry::hist_recompose_phase("downtime")
+        .record(downtime_nanos);
+    for id in plan.relocate.iter() {
+        crate::telemetry::tracelog().instant("relocate", id, "ok");
+    }
+    for id in plan.replace.iter() {
+        crate::telemetry::tracelog().instant("replace", id, "ok");
     }
 
     crate::log_info!(

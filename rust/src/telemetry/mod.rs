@@ -1,0 +1,320 @@
+//! Unified telemetry plane (ISSUE 7): a global lock-free
+//! [`MetricsRegistry`], a bounded control-action [`TraceLog`], and
+//! opt-in e2e latency sampling.
+//!
+//! Layering:
+//!
+//! * **Hot data paths** (ring park, TCP framing, dispatcher batches)
+//!   record only when [`enabled`] — one relaxed `AtomicBool` load when
+//!   off, so an un-instrumented launch pays nothing measurable (the
+//!   `telemetry_overhead` section of `bench_channels` tracks this).
+//! * **Control-plane events** (recompose phases, elasticity
+//!   decisions, lease expiries, repairs, rebinds) are rare and record
+//!   unconditionally, so `GET /metrics` and `GET /trace` are useful
+//!   even on launches that never opted into sampling.
+//!
+//! Enable the hot paths per launch with
+//! [`RuntimeOptions::telemetry`](crate::coordinator::RuntimeOptions::telemetry);
+//! the registry and trace log themselves are process-global, so
+//! instruments survive flake relocation and repair.
+
+pub mod registry;
+pub mod sample;
+pub mod trace;
+
+pub use registry::{
+    bucket_index, bucket_upper, Counter, Gauge, Histogram,
+    HistogramSnapshot, HistogramSummary, MetricsRegistry, BUCKETS,
+};
+pub use sample::{Sampler, TelemetryConfig};
+pub use trace::{SpanGuard, SpanPhase, TraceEvent, TraceLog, TRACE_CAP};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(128);
+
+/// Whether hot-path instruments record.  Off by default; one relaxed
+/// load, inlined into every gated record site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip hot-path recording (benches use this to compare on/off on
+/// the same workload).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Apply a launch's [`TelemetryConfig`]: sets the e2e sampling rate
+/// and turns hot-path recording on.  Process-global (instruments are
+/// shared), so the last launch's rate wins.
+pub fn configure(cfg: TelemetryConfig) {
+    SAMPLE_EVERY.store(cfg.sample_every.max(1), Ordering::Relaxed);
+    set_enabled(true);
+}
+
+/// Current 1-in-N e2e sampling rate.
+pub fn sample_every() -> u64 {
+    SAMPLE_EVERY.load(Ordering::Relaxed)
+}
+
+/// The process-wide metrics registry.
+pub fn metrics() -> &'static MetricsRegistry {
+    static REG: OnceLock<MetricsRegistry> = OnceLock::new();
+    REG.get_or_init(MetricsRegistry::new)
+}
+
+/// The process-wide control-action trace log.
+pub fn tracelog() -> &'static TraceLog {
+    static LOG: OnceLock<TraceLog> = OnceLock::new();
+    LOG.get_or_init(TraceLog::default)
+}
+
+macro_rules! static_counter {
+    ($(#[$doc:meta])* $fn_name:ident, $name:expr, $help:expr) => {
+        $(#[$doc])*
+        pub fn $fn_name() -> &'static Arc<Counter> {
+            static I: OnceLock<Arc<Counter>> = OnceLock::new();
+            I.get_or_init(|| metrics().counter($name, $help))
+        }
+    };
+}
+
+macro_rules! static_histogram {
+    ($(#[$doc:meta])* $fn_name:ident, $name:expr, $help:expr) => {
+        $(#[$doc])*
+        pub fn $fn_name() -> &'static Arc<Histogram> {
+            static I: OnceLock<Arc<Histogram>> = OnceLock::new();
+            I.get_or_init(|| metrics().histogram($name, $help))
+        }
+    };
+}
+
+// -- channel family ---------------------------------------------------------
+
+static_histogram!(
+    /// Nanoseconds producers spent parked on a full ring shard.
+    hist_ring_push_wait,
+    "floe_channel_ring_push_wait_nanos",
+    "Nanoseconds producers spent parked on a full ring shard"
+);
+static_histogram!(
+    /// Nanoseconds consumers spent parked on an empty ring shard.
+    hist_ring_pop_wait,
+    "floe_channel_ring_pop_wait_nanos",
+    "Nanoseconds consumers spent parked on an empty ring shard"
+);
+static_counter!(
+    ctr_tcp_tx_bytes,
+    "floe_channel_tcp_tx_bytes_total",
+    "Bytes written to TCP data channels"
+);
+static_counter!(
+    ctr_tcp_tx_frames,
+    "floe_channel_tcp_tx_frames_total",
+    "Message frames written to TCP data channels"
+);
+static_counter!(
+    ctr_tcp_rx_bytes,
+    "floe_channel_tcp_rx_bytes_total",
+    "Bytes read from TCP data channels"
+);
+static_counter!(
+    ctr_tcp_rx_frames,
+    "floe_channel_tcp_rx_frames_total",
+    "Message frames decoded from TCP data channels"
+);
+static_counter!(
+    ctr_tcp_reconnects,
+    "floe_channel_tcp_reconnects_total",
+    "TCP sender reconnect attempts after a broken stream"
+);
+static_counter!(
+    ctr_tcp_rebinds,
+    "floe_channel_tcp_rebinds_total",
+    "TCP sender rebinds to a republished endpoint"
+);
+
+// -- recompose family -------------------------------------------------------
+
+static_counter!(
+    ctr_recompose,
+    "floe_recompose_executions_total",
+    "Completed live recompositions"
+);
+
+/// Per-phase recomposition duration histogram
+/// (`{phase="quiesce"|"cutover"|"resume"|"downtime"}`).
+pub fn hist_recompose_phase(phase: &str) -> Arc<Histogram> {
+    metrics().histogram_for(
+        "floe_recompose_phase_nanos",
+        "phase",
+        phase,
+        "Nanoseconds spent per live-recomposition phase",
+    )
+}
+
+// -- elasticity family ------------------------------------------------------
+
+/// Elasticity decision counter by kind
+/// (`{kind="hold"|"regrant"|"relocate"|"degraded"|"consolidate"}`).
+pub fn ctr_elasticity_decision(kind: &str) -> Arc<Counter> {
+    metrics().counter_for(
+        "floe_elasticity_decisions_total",
+        "kind",
+        kind,
+        "Elasticity policy decisions by kind",
+    )
+}
+
+static_histogram!(
+    /// Saturation-onset to relocation-execution latency.
+    hist_elasticity_react,
+    "floe_elasticity_time_to_react_nanos",
+    "Nanoseconds from saturation onset to relocation execution"
+);
+
+// -- failover family --------------------------------------------------------
+
+static_counter!(
+    ctr_lease_expiries,
+    "floe_failover_lease_expiries_total",
+    "Container leases declared expired by the failure detector"
+);
+static_counter!(
+    ctr_repairs,
+    "floe_failover_repairs_total",
+    "Dead containers successfully repaired"
+);
+static_counter!(
+    ctr_checkpoints,
+    "floe_failover_checkpoints_total",
+    "Flake checkpoints captured"
+);
+static_counter!(
+    ctr_checkpoint_messages,
+    "floe_failover_checkpoint_messages_total",
+    "In-flight messages captured into checkpoints"
+);
+static_counter!(
+    ctr_replayed,
+    "floe_failover_replayed_total",
+    "Checkpointed messages replayed during repair"
+);
+static_histogram!(
+    /// Lease-expiry detection to repaired-and-healed latency.
+    hist_failover_heal,
+    "floe_failover_heal_nanos",
+    "Nanoseconds from failure detection to completed repair"
+);
+
+// -- flake / e2e families (per-pellet, resolved at flake spawn) -------------
+
+/// Dispatcher batch-size histogram for one pellet.
+pub fn hist_flake_batch(pellet: &str) -> Arc<Histogram> {
+    metrics().histogram_for(
+        "floe_flake_batch_size",
+        "pellet",
+        pellet,
+        "Messages per dispatched batch",
+    )
+}
+
+/// Pellet compute service-latency histogram.
+pub fn hist_flake_service(pellet: &str) -> Arc<Histogram> {
+    metrics().histogram_for(
+        "floe_flake_service_nanos",
+        "pellet",
+        pellet,
+        "Nanoseconds per pellet compute call",
+    )
+}
+
+/// Duplicate messages dropped by the dedup filter for one pellet.
+pub fn ctr_flake_dedup_drops(pellet: &str) -> Arc<Counter> {
+    metrics().counter_for(
+        "floe_flake_dedup_drops_total",
+        "pellet",
+        pellet,
+        "Duplicate messages dropped by the dedup filter",
+    )
+}
+
+/// Sampled end-to-end (ingest → sink) latency for one sink pellet.
+pub fn hist_e2e_latency(pellet: &str) -> Arc<Histogram> {
+    metrics().histogram_for(
+        "floe_e2e_latency_nanos",
+        "pellet",
+        pellet,
+        "Sampled end-to-end latency from ingest to sink",
+    )
+}
+
+/// Scrape-time queue-depth gauge for one pellet.
+pub fn gauge_queue_depth(pellet: &str) -> Arc<Gauge> {
+    metrics().gauge_for(
+        "floe_channel_queue_depth",
+        "pellet",
+        pellet,
+        "Buffered messages on a pellet's input shards at scrape time",
+    )
+}
+
+/// Eagerly register one instrument from each family so a fresh
+/// `/metrics` scrape always exposes the channel, recompose,
+/// elasticity, and failover families even before traffic has touched
+/// them.
+pub fn touch() {
+    hist_ring_push_wait();
+    hist_ring_pop_wait();
+    ctr_tcp_tx_bytes();
+    ctr_tcp_tx_frames();
+    ctr_tcp_rx_bytes();
+    ctr_tcp_rx_frames();
+    ctr_tcp_reconnects();
+    ctr_tcp_rebinds();
+    ctr_recompose();
+    hist_recompose_phase("downtime");
+    ctr_elasticity_decision("hold");
+    hist_elasticity_react();
+    ctr_lease_expiries();
+    ctr_repairs();
+    ctr_checkpoints();
+    ctr_checkpoint_messages();
+    ctr_replayed();
+    hist_failover_heal();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn touch_registers_all_required_families() {
+        touch();
+        let text = metrics().render();
+        for family in [
+            "floe_channel_",
+            "floe_recompose_",
+            "floe_elasticity_",
+            "floe_failover_",
+        ] {
+            assert!(text.contains(family), "missing family {family}");
+        }
+    }
+
+    #[test]
+    fn enabled_defaults_off_and_configure_turns_on() {
+        // Other tests may have configured telemetry already; only
+        // assert the configure -> enabled edge.
+        configure(TelemetryConfig::new().sample_every(7));
+        assert!(enabled());
+        assert_eq!(sample_every(), 7);
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+    }
+}

@@ -1,0 +1,541 @@
+//! The global metrics registry: named atomic counters, gauges, and
+//! log-bucketed latency histograms, rendered as Prometheus text
+//! exposition (v0.0.4) by the coordinator's `GET /metrics` endpoint.
+//!
+//! Design constraints (ISSUE 7 tentpole):
+//!
+//! * **Zero allocation on the record path.**  Every instrument is a
+//!   handful of `AtomicU64`s behind an `Arc`; callers resolve the
+//!   `Arc` once (at spawn / first use) and record with relaxed atomic
+//!   ops from then on.  The registry's own maps are touched only at
+//!   registration and render time.
+//! * **Histograms are log-bucketed**: 64 buckets spaced by powers of
+//!   √2 (two buckets per power of two), covering 1 ns to ~4.3 s.
+//!   p50/p90/p99 are read as the upper bound of the bucket holding
+//!   the requested rank, so a reported quantile is never below the
+//!   true value and at most one √2 step above it.
+//! * **Series naming** follows `floe_<layer>_<name>` with at most one
+//!   label pair (e.g. `{pellet="sink"}`, `{phase="cutover"}`,
+//!   `{kind="relocate"}`); counters end in `_total`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Number of histogram buckets: 2 per power of two ⇒ √2 spacing.
+pub const BUCKETS: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Instruments
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge (queue depths, liveness flags).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket index for a recorded value: two buckets per power of two
+/// (√2 spacing), clamped to [`BUCKETS`].  0 lands in bucket 0.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    let top = 63 - v.leading_zeros() as usize;
+    let half = (1u64 << top) >> 1;
+    let idx = 2 * top + usize::from(v >= (1u64 << top) + half);
+    idx.min(BUCKETS - 1)
+}
+
+/// Exclusive upper bound of a bucket — what quantile reads report.
+/// Even bucket `2t` covers `[2^t, 1.5·2^t)`, odd bucket `2t+1` covers
+/// `[1.5·2^t, 2^(t+1))`.
+pub fn bucket_upper(idx: usize) -> u64 {
+    let t = (idx >> 1) as u32;
+    if idx & 1 == 0 {
+        (3u64 << t) >> 1
+    } else {
+        1u64 << (t + 1)
+    }
+}
+
+/// Lock-free latency histogram: one `AtomicU64` per bucket plus
+/// count/sum/max, all relaxed — recording is a few uncontended
+/// fetch-adds, no allocation, no lock.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation (nanoseconds, batch size, …).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough point-in-time copy (buckets are read one by
+    /// one; concurrent records may straddle the walk, which only ever
+    /// under-reports the newest observations).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].load(Ordering::Relaxed)
+            }),
+            count: self.count(),
+            sum: self.sum(),
+            max: self.max(),
+        }
+    }
+
+    /// Upper-bound estimate of quantile `q` in [0, 1].
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.snapshot().quantile(q)
+    }
+
+    pub fn summary(&self, name: &str, label: Label) -> HistogramSummary {
+        let snap = self.snapshot();
+        HistogramSummary {
+            name: name.to_string(),
+            label,
+            count: snap.count,
+            sum: snap.sum,
+            p50: snap.quantile(0.50),
+            p90: snap.quantile(0.90),
+            p99: snap.quantile(0.99),
+            max: snap.max,
+        }
+    }
+}
+
+/// Owned, mergeable copy of a histogram's state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    /// Bucket-wise merge; associative and commutative.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Upper-bound estimate of quantile `q` in [0, 1]: the upper edge
+    /// of the first bucket whose cumulative count reaches the rank.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil()
+            as u64)
+            .max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return if i == 0 { 0 } else { bucket_upper(i) };
+            }
+        }
+        self.max
+    }
+}
+
+/// Rendered quantile digest of one histogram series (folded into
+/// [`crate::coordinator::DataflowStats`]).
+#[derive(Debug, Clone)]
+pub struct HistogramSummary {
+    pub name: String,
+    pub label: Label,
+    pub count: u64,
+    pub sum: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// At most one label pair per series, e.g. `("pellet", "sink")`.
+pub type Label = Option<(String, String)>;
+
+type SeriesKey = (String, Label);
+
+#[derive(Default)]
+struct Series<T> {
+    map: RwLock<BTreeMap<SeriesKey, Arc<T>>>,
+}
+
+impl<T: Default> Series<T> {
+    fn get_or_create(&self, name: &str, label: Label) -> Arc<T> {
+        {
+            let map = self.map.read().expect("series poisoned");
+            if let Some(v) = map.get(&(name.to_string(), label.clone()))
+            {
+                return Arc::clone(v);
+            }
+        }
+        let mut map = self.map.write().expect("series poisoned");
+        Arc::clone(
+            map.entry((name.to_string(), label))
+                .or_insert_with(|| Arc::new(T::default())),
+        )
+    }
+
+    fn snapshot(&self) -> Vec<(SeriesKey, Arc<T>)> {
+        self.map
+            .read()
+            .expect("series poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect()
+    }
+}
+
+/// The process-wide instrument store.  Instruments are registered
+/// (`*_for` with a label, plain forms without) with first-wins help
+/// text; repeated registration returns the existing series, so a
+/// relocated flake re-attaches to its metrics instead of forking them.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Series<Counter>,
+    gauges: Series<Gauge>,
+    histograms: Series<Histogram>,
+    /// name → help text, first registration wins.
+    help: RwLock<BTreeMap<String, &'static str>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    fn note_help(&self, name: &str, help: &'static str) {
+        let mut map = self.help.write().expect("help poisoned");
+        map.entry(name.to_string()).or_insert(help);
+    }
+
+    pub fn counter(
+        &self,
+        name: &str,
+        help: &'static str,
+    ) -> Arc<Counter> {
+        self.note_help(name, help);
+        self.counters.get_or_create(name, None)
+    }
+
+    pub fn counter_for(
+        &self,
+        name: &str,
+        key: &str,
+        value: &str,
+        help: &'static str,
+    ) -> Arc<Counter> {
+        self.note_help(name, help);
+        self.counters
+            .get_or_create(name, Some((key.to_string(), value.to_string())))
+    }
+
+    pub fn gauge(&self, name: &str, help: &'static str) -> Arc<Gauge> {
+        self.note_help(name, help);
+        self.gauges.get_or_create(name, None)
+    }
+
+    pub fn gauge_for(
+        &self,
+        name: &str,
+        key: &str,
+        value: &str,
+        help: &'static str,
+    ) -> Arc<Gauge> {
+        self.note_help(name, help);
+        self.gauges
+            .get_or_create(name, Some((key.to_string(), value.to_string())))
+    }
+
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &'static str,
+    ) -> Arc<Histogram> {
+        self.note_help(name, help);
+        self.histograms.get_or_create(name, None)
+    }
+
+    pub fn histogram_for(
+        &self,
+        name: &str,
+        key: &str,
+        value: &str,
+        help: &'static str,
+    ) -> Arc<Histogram> {
+        self.note_help(name, help);
+        self.histograms
+            .get_or_create(name, Some((key.to_string(), value.to_string())))
+    }
+
+    /// Quantile digests of every histogram series, for `stats_json`.
+    pub fn histogram_summaries(&self) -> Vec<HistogramSummary> {
+        self.histograms
+            .snapshot()
+            .into_iter()
+            .map(|((name, label), h)| h.summary(&name, label))
+            .collect()
+    }
+
+    /// Render the whole registry as Prometheus text exposition
+    /// (v0.0.4).  Counters and gauges emit one sample per series;
+    /// histograms are exposed as summaries (p50/p90/p99 quantile
+    /// samples plus `_sum`/`_count`) — 5 lines instead of 64 buckets.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        render_family(
+            &mut out,
+            "counter",
+            &self.counters.snapshot(),
+            &self.help,
+            |out, name, label, c| {
+                let _ = writeln!(
+                    out,
+                    "{name}{} {}",
+                    fmt_label(label, &[]),
+                    c.get()
+                );
+            },
+        );
+        render_family(
+            &mut out,
+            "gauge",
+            &self.gauges.snapshot(),
+            &self.help,
+            |out, name, label, g| {
+                let _ = writeln!(
+                    out,
+                    "{name}{} {}",
+                    fmt_label(label, &[]),
+                    g.get()
+                );
+            },
+        );
+        render_family(
+            &mut out,
+            "summary",
+            &self.histograms.snapshot(),
+            &self.help,
+            |out, name, label, h| {
+                let snap = h.snapshot();
+                for (q, qs) in
+                    [(0.50, "0.5"), (0.90, "0.9"), (0.99, "0.99")]
+                {
+                    let _ = writeln!(
+                        out,
+                        "{name}{} {}",
+                        fmt_label(label, &[("quantile", qs)]),
+                        snap.quantile(q)
+                    );
+                }
+                let plain = fmt_label(label, &[]);
+                let _ =
+                    writeln!(out, "{name}_sum{plain} {}", snap.sum);
+                let _ =
+                    writeln!(out, "{name}_count{plain} {}", snap.count);
+            },
+        );
+        out
+    }
+}
+
+/// Emit `# HELP` / `# TYPE` once per family followed by its series
+/// (the snapshot is BTreeMap-ordered, so same-name series are
+/// contiguous and the output is deterministic).
+fn render_family<T>(
+    out: &mut String,
+    kind: &str,
+    series: &[(SeriesKey, Arc<T>)],
+    help: &RwLock<BTreeMap<String, &'static str>>,
+    emit: impl Fn(&mut String, &str, &Label, &T),
+) {
+    let help = help.read().expect("help poisoned");
+    let mut last_name: Option<&str> = None;
+    for ((name, label), v) in series {
+        if last_name != Some(name.as_str()) {
+            let h = help.get(name).copied().unwrap_or("(no help)");
+            let _ = writeln!(out, "# HELP {name} {h}");
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            last_name = Some(name.as_str());
+        }
+        emit(out, name, label, v);
+    }
+}
+
+/// Format a label set: the series' own label plus any extra pairs
+/// (used for summary quantiles).  Empty set renders as nothing.
+fn fmt_label(label: &Label, extra: &[(&str, &str)]) -> String {
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    if let Some((k, v)) = label {
+        pairs.push((k.clone(), escape_label(v)));
+    }
+    for (k, v) in extra {
+        pairs.push((k.to_string(), escape_label(v)));
+    }
+    if pairs.is_empty() {
+        return String::new();
+    }
+    let body = pairs
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect::<Vec<_>>()
+        .join(",");
+    format!("{{{body}}}")
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_and_upper_bracket_values() {
+        assert_eq!(bucket_index(0), 0);
+        for v in [1u64, 2, 3, 7, 100, 1_000, 1 << 20, (1 << 30) + 17] {
+            let idx = bucket_index(v);
+            assert!(idx < BUCKETS);
+            assert!(bucket_upper(idx) > v, "v={v} idx={idx}");
+            // Upper bound within one √2 step: never more than 2×.
+            assert!(bucket_upper(idx) <= 2 * v, "v={v} idx={idx}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_bound_recorded_values() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+        assert_eq!(h.max(), 1000);
+        let p50 = h.quantile(0.5);
+        assert!((500..=1024).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((990..=2048).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn registry_renders_prometheus_text() {
+        let reg = MetricsRegistry::new();
+        reg.counter("floe_test_events_total", "test counter").add(3);
+        reg.gauge_for("floe_test_depth", "pellet", "up", "test gauge")
+            .set(7);
+        reg.histogram_for(
+            "floe_test_nanos",
+            "pellet",
+            "up",
+            "test histogram",
+        )
+        .record(100);
+        let text = reg.render();
+        assert!(text.contains("# TYPE floe_test_events_total counter"));
+        assert!(text.contains("floe_test_events_total 3"));
+        assert!(text.contains("floe_test_depth{pellet=\"up\"} 7"));
+        assert!(text.contains("# TYPE floe_test_nanos summary"));
+        assert!(text
+            .contains("floe_test_nanos{pellet=\"up\",quantile=\"0.5\"}"));
+        assert!(text.contains("floe_test_nanos_count{pellet=\"up\"} 1"));
+    }
+
+    #[test]
+    fn get_or_create_returns_same_series() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("floe_test_x_total", "x");
+        let b = reg.counter("floe_test_x_total", "x");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

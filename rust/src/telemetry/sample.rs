@@ -1,0 +1,83 @@
+//! End-to-end latency sampling configuration.
+//!
+//! When telemetry is enabled via
+//! [`RuntimeOptions::telemetry`](crate::coordinator::RuntimeOptions),
+//! flakes propagate the *oldest* input ingest timestamp (the
+//! `created_us` field already carried by the wire format — no layout
+//! change) into the messages they emit, and sink flakes (no output
+//! ports) record the age of 1-in-N arriving batches into the
+//! `floe_e2e_latency_nanos{pellet=…}` histogram.  Telemetry off (the
+//! default) short-circuits to a single relaxed atomic load per batch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Telemetry knobs handed to
+/// [`RuntimeOptions::telemetry`](crate::coordinator::RuntimeOptions::telemetry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Sample 1-in-N sink batches for e2e latency (min 1 = every
+    /// batch).  Default 128: negligible cost at firehose rates while
+    /// still filling latency histograms within seconds.
+    pub sample_every: u64,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> TelemetryConfig {
+        TelemetryConfig { sample_every: 128 }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn new() -> TelemetryConfig {
+        TelemetryConfig::default()
+    }
+
+    /// Override the 1-in-N sampling rate.
+    pub fn sample_every(mut self, n: u64) -> TelemetryConfig {
+        self.sample_every = n.max(1);
+        self
+    }
+}
+
+/// Lock-free 1-in-N sampler: a shared counter, `tick()` is one
+/// relaxed fetch-add.
+#[derive(Debug)]
+pub struct Sampler {
+    every: u64,
+    n: AtomicU64,
+}
+
+impl Sampler {
+    pub fn new(every: u64) -> Sampler {
+        Sampler { every: every.max(1), n: AtomicU64::new(0) }
+    }
+
+    /// True on the 1st, N+1th, 2N+1th … call.
+    pub fn tick(&self) -> bool {
+        self.n.fetch_add(1, Ordering::Relaxed) % self.every == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_fires_one_in_n() {
+        let s = Sampler::new(4);
+        let fired: Vec<bool> = (0..8).map(|_| s.tick()).collect();
+        assert_eq!(
+            fired,
+            [true, false, false, false, true, false, false, false]
+        );
+        let every_time = Sampler::new(1);
+        assert!(every_time.tick() && every_time.tick());
+    }
+
+    #[test]
+    fn config_builder_clamps_zero() {
+        let cfg = TelemetryConfig::new().sample_every(0);
+        assert_eq!(cfg.sample_every, 1);
+        assert_eq!(TelemetryConfig::default().sample_every, 128);
+    }
+}

@@ -1,0 +1,234 @@
+//! Bounded, overwrite-oldest trace log of control-plane span events.
+//!
+//! Every recomposition, relocation, repair, consolidation, and rebind
+//! records begin/end (or instant) events with monotonic timestamps and
+//! an outcome string — the audit trail served by `GET /trace?since=`.
+//! Control actions are rare (human-timescale), so a mutex-guarded ring
+//! is plenty; the hot data path never touches this log.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default event capacity; oldest events are overwritten beyond it.
+pub const TRACE_CAP: usize = 1024;
+
+/// Whether an event opens a span, closes one, or stands alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanPhase {
+    Begin,
+    End,
+    Instant,
+}
+
+impl SpanPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanPhase::Begin => "begin",
+            SpanPhase::End => "end",
+            SpanPhase::Instant => "instant",
+        }
+    }
+}
+
+/// One timeline entry.  `t_ms` is milliseconds since process start
+/// (monotonic clock), so begin/end pairs subtract exactly.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub t_ms: f64,
+    pub kind: String,
+    pub phase: SpanPhase,
+    pub target: String,
+    pub outcome: String,
+}
+
+struct Inner {
+    next_seq: u64,
+    events: VecDeque<TraceEvent>,
+}
+
+/// Fixed-capacity span-event ring.  `begin`/`end` bracket an action on
+/// a target (container, flake, endpoint); `instant` marks a point
+/// event such as a failure detection or a TCP rebind.
+pub struct TraceLog {
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl Default for TraceLog {
+    fn default() -> TraceLog {
+        TraceLog::new(TRACE_CAP)
+    }
+}
+
+impl TraceLog {
+    pub fn new(cap: usize) -> TraceLog {
+        TraceLog {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner {
+                next_seq: 0,
+                events: VecDeque::new(),
+            }),
+        }
+    }
+
+    fn push(
+        &self,
+        kind: &str,
+        phase: SpanPhase,
+        target: &str,
+        outcome: &str,
+    ) -> u64 {
+        let t_ms = epoch().elapsed().as_secs_f64() * 1e3;
+        let mut inner = self.inner.lock().expect("trace poisoned");
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        if inner.events.len() == self.cap {
+            inner.events.pop_front();
+        }
+        inner.events.push_back(TraceEvent {
+            seq,
+            t_ms,
+            kind: kind.to_string(),
+            phase,
+            target: target.to_string(),
+            outcome: outcome.to_string(),
+        });
+        seq
+    }
+
+    /// Open a span; pair with [`TraceLog::end`] on the same
+    /// kind/target.
+    pub fn begin(&self, kind: &str, target: &str) -> u64 {
+        self.push(kind, SpanPhase::Begin, target, "")
+    }
+
+    /// Close a span with an outcome (`"ok"`, `"error: …"`).
+    pub fn end(&self, kind: &str, target: &str, outcome: &str) -> u64 {
+        self.push(kind, SpanPhase::End, target, outcome)
+    }
+
+    /// Record a point event.
+    pub fn instant(
+        &self,
+        kind: &str,
+        target: &str,
+        outcome: &str,
+    ) -> u64 {
+        self.push(kind, SpanPhase::Instant, target, outcome)
+    }
+
+    /// RAII span: ends with the outcome passed to
+    /// [`SpanGuard::finish`], or `"aborted"` if dropped early (e.g.
+    /// an `?` return unwinding out of a recomposition).
+    pub fn span(&self, kind: &str, target: &str) -> SpanGuard<'_> {
+        self.begin(kind, target);
+        SpanGuard {
+            log: self,
+            kind: kind.to_string(),
+            target: target.to_string(),
+            finished: false,
+        }
+    }
+
+    /// Sequence number the next event will get; pass to
+    /// [`TraceLog::since`] to read only newer events.
+    pub fn next_seq(&self) -> u64 {
+        self.inner.lock().expect("trace poisoned").next_seq
+    }
+
+    /// Events with `seq >= seq` still in the ring, oldest first.
+    pub fn since(&self, seq: u64) -> Vec<TraceEvent> {
+        self.inner
+            .lock()
+            .expect("trace poisoned")
+            .events
+            .iter()
+            .filter(|e| e.seq >= seq)
+            .cloned()
+            .collect()
+    }
+
+    /// Everything still in the ring, oldest first.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.since(0)
+    }
+}
+
+/// See [`TraceLog::span`].
+pub struct SpanGuard<'a> {
+    log: &'a TraceLog,
+    kind: String,
+    target: String,
+    finished: bool,
+}
+
+impl SpanGuard<'_> {
+    pub fn finish(mut self, outcome: &str) {
+        self.log.end(&self.kind, &self.target, outcome);
+        self.finished = true;
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.log.end(&self.kind, &self.target, "aborted");
+        }
+    }
+}
+
+/// Process-start anchor for `t_ms`; shared by every trace event.
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_pair_and_timestamps_advance() {
+        let log = TraceLog::new(16);
+        log.begin("repair", "c-1");
+        log.end("repair", "c-1", "ok");
+        let events = log.snapshot();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].phase, SpanPhase::Begin);
+        assert_eq!(events[1].phase, SpanPhase::End);
+        assert_eq!(events[1].outcome, "ok");
+        assert!(events[0].t_ms <= events[1].t_ms);
+        assert!(events[0].seq < events[1].seq);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_since_filters() {
+        let log = TraceLog::new(4);
+        for i in 0..10u64 {
+            log.instant("tick", &format!("t{i}"), "");
+        }
+        let events = log.snapshot();
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].seq, 6);
+        assert_eq!(log.since(8).len(), 2);
+        assert_eq!(log.next_seq(), 10);
+    }
+
+    #[test]
+    fn dropped_guard_records_aborted() {
+        let log = TraceLog::new(8);
+        {
+            let _g = log.span("recompose", "v2");
+        }
+        let events = log.snapshot();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[1].outcome, "aborted");
+        {
+            let g = log.span("recompose", "v3");
+            g.finish("ok");
+        }
+        assert_eq!(log.snapshot()[3].outcome, "ok");
+    }
+}

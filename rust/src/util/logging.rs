@@ -1,14 +1,25 @@
 //! Minimal env-filtered logger, self-contained (the offline build has no
 //! `log` facade crate).
 //!
-//! Level comes from `FLOE_LOG` (`error|warn|info|debug|trace`, default
-//! `info`).  Output goes to stderr with a monotonic timestamp, level and
-//! module path — enough to trace coordinator/flake interactions.  Until
-//! [`init`] runs, logging is disabled (mirroring an uninstalled facade).
+//! `FLOE_LOG` holds a comma-separated directive list: bare level names
+//! set the default, `module=level` entries override per module prefix,
+//! and `off` silences a scope entirely — e.g.
+//! `FLOE_LOG=channel=debug,coordinator=trace,warn` or `FLOE_LOG=off`.
+//! Module prefixes match path segments of `module_path!()` with the
+//! leading `floe::` crate name optional, so `channel` covers
+//! `floe::channel::ring` and friends.  Output goes to stderr with a
+//! monotonic timestamp, level and module path.  Until [`init`] runs,
+//! logging is disabled (mirroring an uninstalled facade).
 //!
 //! Call sites use the crate-root macros [`crate::log_error!`],
 //! [`crate::log_warn!`], [`crate::log_info!`] and [`crate::log_debug!`];
-//! each formats lazily, so a disabled level costs one atomic load.
+//! each formats lazily, so a disabled level costs one atomic load.  A
+//! `;`-separated trailer appends structured `key=value` pairs:
+//!
+//! ```ignore
+//! log_info!("repair done"; container = id, replayed = n);
+//! // => [  12.0034s INFO  floe::coordinator] repair done container=c1 replayed=42
+//! ```
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -43,8 +54,8 @@ impl std::fmt::Display for Level {
     }
 }
 
-/// 0 = logging disabled (init not called); otherwise the max enabled
-/// level as its numeric rank.
+/// 0 = logging disabled (init not called); otherwise the max level
+/// enabled by *any* directive — the one-atomic-load fast path.
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
 
 fn start_instant() -> &'static Instant {
@@ -63,16 +74,88 @@ fn parse_level(s: &str) -> Level {
     }
 }
 
-/// Install the logger (idempotent).  Honors `FLOE_LOG`.
-pub fn init() {
-    let level = std::env::var("FLOE_LOG")
-        .map(|v| parse_level(&v))
-        .unwrap_or(Level::Info);
-    let _ = start_instant();
-    MAX_LEVEL.store(level as u8, Ordering::SeqCst);
+/// Level rank with `off`/`none` as 0 (fully silenced).
+fn parse_spec_level(s: &str) -> u8 {
+    match s.to_ascii_lowercase().as_str() {
+        "off" | "none" => 0,
+        other => parse_level(other) as u8,
+    }
 }
 
-/// True when a record at `level` would be written.
+/// Parsed `FLOE_LOG`: a default rank plus per-module-prefix overrides,
+/// first match wins in directive order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Directives {
+    default: u8,
+    mods: Vec<(String, u8)>,
+}
+
+impl Directives {
+    fn parse(spec: &str) -> Directives {
+        let mut default = Level::Info as u8;
+        let mut mods = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            match tok.split_once('=') {
+                Some((module, level)) => mods.push((
+                    module.trim().to_string(),
+                    parse_spec_level(level.trim()),
+                )),
+                None => default = parse_spec_level(tok),
+            }
+        }
+        Directives { default, mods }
+    }
+
+    fn max_level(&self) -> u8 {
+        self.mods.iter().map(|(_, l)| *l).fold(self.default, u8::max)
+    }
+
+    /// Enabled rank for a `module_path!()` target.
+    fn level_for(&self, target: &str) -> u8 {
+        let tail = target.strip_prefix("floe::").unwrap_or(target);
+        for (prefix, level) in &self.mods {
+            if module_matches(tail, prefix)
+                || module_matches(target, prefix)
+            {
+                return *level;
+            }
+        }
+        self.default
+    }
+}
+
+/// `prefix` matches `target` on whole `::`-separated segments.
+fn module_matches(target: &str, prefix: &str) -> bool {
+    target.starts_with(prefix.as_str())
+        && (target.len() == prefix.len()
+            || target[prefix.len()..].starts_with("::"))
+}
+
+fn directives() -> Option<&'static Directives> {
+    DIRECTIVES.get()
+}
+
+static DIRECTIVES: OnceLock<Directives> = OnceLock::new();
+
+/// Install the logger (idempotent).  Honors `FLOE_LOG`; the first call
+/// wins, later calls are no-ops.
+pub fn init() {
+    let dirs = DIRECTIVES.get_or_init(|| {
+        Directives::parse(
+            &std::env::var("FLOE_LOG").unwrap_or_default(),
+        )
+    });
+    let _ = start_instant();
+    MAX_LEVEL.store(dirs.max_level(), Ordering::SeqCst);
+}
+
+/// True when a record at `level` would be written by at least one
+/// module (the cheap pre-filter; per-module filtering happens in
+/// [`log`]).
 pub fn enabled(level: Level) -> bool {
     level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
 }
@@ -82,13 +165,32 @@ pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
+    let Some(dirs) = directives() else { return };
+    if level as u8 > dirs.level_for(target) {
+        return;
+    }
     let t = start_instant().elapsed().as_secs_f64();
     let mut err = std::io::stderr().lock();
     let _ = writeln!(err, "[{t:10.4}s {level:5} {target}] {args}");
 }
 
+// The four level macros are spelled out (macro_rules cannot define
+// macro_rules without unstable `$$` metavariables); each has a
+// `"fmt"; key = value, …` arm for structured trailers plus the plain
+// format passthrough.
+
 #[macro_export]
 macro_rules! log_error {
+    ($fmt:literal; $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!(
+                concat!($fmt $(, " ", stringify!($k), "={}")+),
+                $($v),+
+            ),
+        )
+    };
     ($($arg:tt)*) => {
         $crate::util::logging::log(
             $crate::util::logging::Level::Error,
@@ -100,6 +202,16 @@ macro_rules! log_error {
 
 #[macro_export]
 macro_rules! log_warn {
+    ($fmt:literal; $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!(
+                concat!($fmt $(, " ", stringify!($k), "={}")+),
+                $($v),+
+            ),
+        )
+    };
     ($($arg:tt)*) => {
         $crate::util::logging::log(
             $crate::util::logging::Level::Warn,
@@ -111,6 +223,16 @@ macro_rules! log_warn {
 
 #[macro_export]
 macro_rules! log_info {
+    ($fmt:literal; $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!(
+                concat!($fmt $(, " ", stringify!($k), "={}")+),
+                $($v),+
+            ),
+        )
+    };
     ($($arg:tt)*) => {
         $crate::util::logging::log(
             $crate::util::logging::Level::Info,
@@ -122,6 +244,16 @@ macro_rules! log_info {
 
 #[macro_export]
 macro_rules! log_debug {
+    ($fmt:literal; $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!(
+                concat!($fmt $(, " ", stringify!($k), "={}")+),
+                $($v),+
+            ),
+        )
+    };
     ($($arg:tt)*) => {
         $crate::util::logging::log(
             $crate::util::logging::Level::Debug,
@@ -150,6 +282,7 @@ mod tests {
         init();
         assert!(enabled(Level::Error));
         crate::log_info!("logger smoke");
+        crate::log_info!("logger smoke"; key = 1, other = "two");
     }
 
     #[test]
@@ -157,5 +290,35 @@ mod tests {
         assert!(Level::Error < Level::Warn);
         assert!(Level::Info < Level::Trace);
         assert_eq!(format!("{:5}", Level::Warn), "WARN ");
+    }
+
+    #[test]
+    fn directives_parse_defaults_and_modules() {
+        let d = Directives::parse("channel=debug,info");
+        assert_eq!(d.default, Level::Info as u8);
+        assert_eq!(d.mods, vec![("channel".into(), Level::Debug as u8)]);
+        assert_eq!(d.max_level(), Level::Debug as u8);
+        assert_eq!(Directives::parse("").default, Level::Info as u8);
+        assert_eq!(Directives::parse("off").default, 0);
+        let silent = Directives::parse("flake=off,warn");
+        assert_eq!(silent.level_for("floe::flake::probes"), 0);
+        assert_eq!(
+            silent.level_for("floe::channel"),
+            Level::Warn as u8
+        );
+    }
+
+    #[test]
+    fn module_prefix_matches_whole_segments() {
+        let d = Directives::parse("channel=trace,coordinator=off,warn");
+        assert_eq!(
+            d.level_for("floe::channel::ring"),
+            Level::Trace as u8
+        );
+        assert_eq!(d.level_for("floe::channel"), Level::Trace as u8);
+        // `channel` must not match `channels` or mid-segment text.
+        assert_eq!(d.level_for("floe::channels"), Level::Warn as u8);
+        assert_eq!(d.level_for("floe::coordinator::server"), 0);
+        assert_eq!(d.level_for("floe::recompose"), Level::Warn as u8);
     }
 }

@@ -1024,3 +1024,109 @@ fn prop_lease_frozen_counter_expires_exactly_once_at_k_misses() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Telemetry histogram bucket math
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_histogram_record_quantile_roundtrip() {
+    use floe::telemetry::{bucket_index, bucket_upper, Histogram};
+    run_cases("histogram: quantile bounds one record", 300, |g| {
+        // Below the clamp region (bucket 63) the reported quantile is
+        // the exclusive upper bound of the value's bucket: strictly
+        // above the value, at most one power of two above it.
+        let v = g.int(1, (1 << 31) - 1) as u64;
+        let idx = bucket_index(v);
+        let upper = bucket_upper(idx);
+        assert!(upper > v, "bucket upper {upper} <= value {v}");
+        assert!(upper <= 2 * v, "bucket upper {upper} > 2x {v}");
+        // Monotone: a larger value never lands in an earlier bucket.
+        let v2 = v + g.int(0, 1 << 20) as u64;
+        assert!(bucket_index(v2) >= idx);
+        let h = Histogram::new();
+        h.record(v);
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let est = h.quantile(q);
+            assert!(
+                est > v && est <= 2 * v,
+                "quantile({q}) = {est} outside ({v}, {}]",
+                2 * v
+            );
+        }
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), v);
+        assert_eq!(h.max(), v);
+    });
+}
+
+#[test]
+fn prop_histogram_merge_associative_commutative() {
+    use floe::telemetry::Histogram;
+    run_cases("histogram: merge is associative", 100, |g| {
+        let snaps: Vec<_> = (0..3)
+            .map(|_| {
+                let h = Histogram::new();
+                for _ in 0..g.int(0, 50) {
+                    h.record(g.int(0, 1 << 30) as u64);
+                }
+                h.snapshot()
+            })
+            .collect();
+        // (a + b) + c == a + (b + c)
+        let mut left = snaps[0].clone();
+        left.merge(&snaps[1]);
+        left.merge(&snaps[2]);
+        let mut bc = snaps[1].clone();
+        bc.merge(&snaps[2]);
+        let mut right = snaps[0].clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "merge not associative");
+        // a + b == b + a
+        let mut ab = snaps[0].clone();
+        ab.merge(&snaps[1]);
+        let mut ba = snaps[1].clone();
+        ba.merge(&snaps[0]);
+        assert_eq!(ab, ba, "merge not commutative");
+    });
+}
+
+#[test]
+fn prop_histogram_concurrent_records_all_land() {
+    use floe::telemetry::{bucket_index, Histogram};
+    run_cases("histogram: concurrent records are linear", 5, |g| {
+        let threads = g.int(2, 6) as usize;
+        let per = g.int(100, 3000) as u64;
+        // Each thread records a distinct value resolving to a distinct
+        // bucket, so per-bucket counts attribute records exactly.
+        let values: Vec<u64> =
+            (0..threads).map(|t| 1u64 << (2 * t + 1)).collect();
+        let h = Arc::new(Histogram::new());
+        let handles: Vec<_> = values
+            .iter()
+            .map(|&v| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for _ in 0..per {
+                        h.record(v);
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), threads as u64 * per, "records lost");
+        let expect_sum: u64 = values.iter().map(|v| v * per).sum();
+        assert_eq!(h.sum(), expect_sum);
+        assert_eq!(h.max(), *values.iter().max().unwrap());
+        let snap = h.snapshot();
+        for &v in &values {
+            assert_eq!(
+                snap.buckets[bucket_index(v)],
+                per,
+                "bucket for {v} miscounted"
+            );
+        }
+    });
+}

@@ -104,3 +104,130 @@ fn pause_resume_and_cores_over_http() {
     server.shutdown();
     run.stop();
 }
+
+/// Prometheus text exposition (v0.0.4) well-formedness: every family
+/// announces `# HELP` + `# TYPE` before its samples, every sample line
+/// parses, and no series is emitted twice.
+fn assert_well_formed_exposition(text: &str) {
+    use std::collections::HashSet;
+    let mut typed: HashSet<String> = HashSet::new();
+    let mut helped: HashSet<String> = HashSet::new();
+    let mut series: HashSet<String> = HashSet::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap();
+            assert!(
+                helped.insert(name.to_string()),
+                "duplicate HELP for {name}"
+            );
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap();
+            let kind = it.next().unwrap();
+            assert!(
+                ["counter", "gauge", "summary"].contains(&kind),
+                "unknown TYPE kind in: {line}"
+            );
+            assert!(
+                helped.contains(name),
+                "TYPE before HELP for {name}"
+            );
+            assert!(
+                typed.insert(name.to_string()),
+                "duplicate TYPE for {name}"
+            );
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment: {line}");
+        let (key, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| {
+                panic!("sample line has no value: {line}")
+            });
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "unparseable value in: {line}"
+        );
+        assert!(
+            series.insert(key.to_string()),
+            "duplicate series: {key}"
+        );
+        // Each sample belongs to an announced family (summaries add
+        // `_sum` / `_count` suffixes to the family name).
+        let base = key.split('{').next().unwrap();
+        let family = base
+            .strip_suffix("_sum")
+            .or_else(|| base.strip_suffix("_count"))
+            .unwrap_or(base);
+        assert!(
+            typed.contains(base) || typed.contains(family),
+            "sample without TYPE: {line}"
+        );
+    }
+    assert!(!series.is_empty(), "exposition has no samples");
+}
+
+#[test]
+fn metrics_trace_and_health_endpoints() {
+    let (run, mut server, _c) = launch();
+    let addr = server.addr();
+
+    // One live surgery so the trace log and the recompose family have
+    // entries attributable to this dataflow.
+    let mut delta = floe::recompose::GraphDelta::against(&run.graph());
+    delta.relocate_flake("up");
+    run.recompose(&delta).unwrap();
+
+    let text = http_get(&addr, "/metrics").unwrap();
+    assert_well_formed_exposition(&text);
+    for family in [
+        "floe_channel_",
+        "floe_recompose_",
+        "floe_elasticity_",
+        "floe_failover_",
+    ] {
+        assert!(text.contains(family), "missing family {family}");
+    }
+    // Scrape-time queue-depth gauges exist per pellet.
+    assert!(
+        text.contains("floe_channel_queue_depth{pellet=\"up\"}"),
+        "missing per-pellet queue gauge:\n{text}"
+    );
+
+    let health =
+        Json::parse(&http_get(&addr, "/health").unwrap()).unwrap();
+    assert_eq!(health.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(health.get("pellets").unwrap().as_f64(), Some(2.0));
+
+    let trace =
+        Json::parse(&http_get(&addr, "/trace").unwrap()).unwrap();
+    let events = trace.as_arr().unwrap();
+    assert!(
+        events.iter().any(|e| {
+            e.get("kind").unwrap().as_str() == Some("recompose")
+                && e.get("phase").unwrap().as_str() == Some("end")
+                && e.get("outcome")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .starts_with("ok")
+        }),
+        "no completed recompose span in /trace"
+    );
+    let filtered = Json::parse(
+        &http_get(&addr, "/trace?since=99999999").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(filtered.as_arr().unwrap().len(), 0);
+
+    // Histogram digests are folded into the stats document.
+    let stats =
+        Json::parse(&http_get(&addr, "/stats").unwrap()).unwrap();
+    assert!(stats.get("telemetry").unwrap().as_arr().is_some());
+    server.shutdown();
+    run.stop();
+}

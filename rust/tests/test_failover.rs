@@ -224,3 +224,64 @@ fn crash_on_backlog_replays_checkpoint_and_bounds_loss() {
     );
     run.stop();
 }
+
+/// A container kill leaves a complete, ordered audit trail in the
+/// process-global trace log: a `detect` instant, then a matching
+/// `repair` begin/end span with outcome "ok", with detection at or
+/// before heal completion.
+#[test]
+fn kill_and_repair_leaves_matching_trace_spans() {
+    use floe::telemetry::{tracelog, SpanPhase};
+
+    let (coord, _collected, graph) =
+        failover_fixture("floe.builtin.Identity");
+    let run = coord.launch(graph, failover_options()).unwrap();
+    let doomed = run.container("work").unwrap();
+    for i in 0..20 {
+        run.inject("src", "in", Message::text(format!("t{i}"))).unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(20)));
+    assert!(run.checkpoint_now() > 0);
+
+    // Only events recorded after this point (and targeting the doomed
+    // container) matter — the log is process-global and other tests in
+    // this binary may be writing to it concurrently.
+    let seq = tracelog().next_seq();
+    doomed.kill();
+    await_heal(&run, "work", &doomed.id);
+
+    let events: Vec<_> = tracelog()
+        .since(seq)
+        .into_iter()
+        .filter(|e| e.target == doomed.id)
+        .collect();
+    let detect = events
+        .iter()
+        .find(|e| e.kind == "detect")
+        .expect("no detect instant for the killed container");
+    assert_eq!(detect.outcome, "lease expired");
+    let begin = events
+        .iter()
+        .find(|e| {
+            e.kind == "repair"
+                && e.phase == SpanPhase::Begin
+                && e.seq > detect.seq
+        })
+        .expect("no repair begin after detection");
+    let end = events
+        .iter()
+        .find(|e| {
+            e.kind == "repair"
+                && e.phase == SpanPhase::End
+                && e.seq > begin.seq
+        })
+        .expect("no repair end after begin");
+    assert_eq!(end.outcome, "ok");
+    assert!(
+        detect.t_ms <= end.t_ms,
+        "detection ({} ms) after heal ({} ms)",
+        detect.t_ms,
+        end.t_ms
+    );
+    run.stop();
+}

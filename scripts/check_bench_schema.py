@@ -56,6 +56,9 @@ REQUIRED = {
         "tcp_msgs_per_sec.batched",
         "codec_msgs_per_sec.encode",
         "codec_msgs_per_sec.decode",
+        "telemetry_overhead.off",
+        "telemetry_overhead.on",
+        "telemetry_overhead.overhead_pct",
     ],
     "BENCH_recompose.json": [
         "bench",

@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text exposition (version 0.0.4) from Floe.
+
+Reads the exposition from the file named in argv[1], or stdin when no
+argument is given, and fails (exit 1) unless it is well formed AND
+covers the metric families the observability layer promises:
+
+* `# HELP` precedes `# TYPE` for each metric, each appears at most
+  once per metric, and every `# TYPE` kind is one of
+  counter / gauge / summary;
+* every sample line parses (`name{labels} value`), its value is a
+  finite float, and its base name (quantile/`_sum`/`_count` suffixes
+  stripped) was introduced by a `# TYPE` line;
+* no series (name + label set) is emitted twice;
+* counters end in `_total` (Prometheus naming convention);
+* the four required families are present: `floe_channel_`,
+  `floe_recompose_`, `floe_elasticity_`, `floe_failover_`.
+
+CI runs `cargo run --release --example metrics_smoke` and pipes the
+output through this script, so a regression in the hand-rolled
+exposition renderer fails the build rather than silently breaking
+scrapers.  Run locally from the repo root:
+
+    python3 scripts/check_metrics.py metrics.txt
+"""
+
+import math
+import re
+import sys
+
+REQUIRED_FAMILIES = [
+    "floe_channel_",
+    "floe_recompose_",
+    "floe_elasticity_",
+    "floe_failover_",
+]
+
+TYPE_KINDS = {"counter", "gauge", "summary"}
+
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?P<labels>\{[^}]*\})?"
+    r" (?P<value>[^ ]+)$"
+)
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def base_name(name, typed):
+    """Strip summary sample suffixes back to the declared metric name."""
+    for suffix in ("_sum", "_count"):
+        if name.endswith(suffix) and name[: -len(suffix)] in typed:
+            return name[: -len(suffix)]
+    return name
+
+
+def check(text):
+    errors = []
+    helped = set()
+    typed = {}
+    series = set()
+    samples = 0
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 4 or not parts[3].strip():
+                errors.append(f"line {lineno}: HELP without text")
+                continue
+            name = parts[2]
+            if name in helped:
+                errors.append(f"line {lineno}: duplicate HELP {name}")
+            helped.add(name)
+        elif line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4:
+                errors.append(f"line {lineno}: malformed TYPE")
+                continue
+            name, kind = parts[2], parts[3]
+            if name in typed:
+                errors.append(f"line {lineno}: duplicate TYPE {name}")
+            if name not in helped:
+                errors.append(
+                    f"line {lineno}: TYPE {name} before its HELP"
+                )
+            if kind not in TYPE_KINDS:
+                errors.append(
+                    f"line {lineno}: unknown TYPE kind '{kind}'"
+                )
+            typed[name] = kind
+        elif line.startswith("#"):
+            errors.append(f"line {lineno}: unknown comment form")
+        else:
+            m = SAMPLE_RE.match(line)
+            if not m:
+                errors.append(f"line {lineno}: unparseable sample")
+                continue
+            name = m.group("name")
+            labels = m.group("labels") or ""
+            if labels:
+                inner = labels[1:-1]
+                if LABEL_RE.sub("", inner).strip(", "):
+                    errors.append(
+                        f"line {lineno}: malformed labels {labels}"
+                    )
+            try:
+                value = float(m.group("value"))
+            except ValueError:
+                errors.append(
+                    f"line {lineno}: non-numeric value "
+                    f"'{m.group('value')}'"
+                )
+                continue
+            if not math.isfinite(value):
+                errors.append(f"line {lineno}: non-finite value")
+            base = base_name(name, typed)
+            if base not in typed:
+                errors.append(
+                    f"line {lineno}: sample {name} has no TYPE"
+                )
+            elif typed[base] == "counter" and not base.endswith(
+                "_total"
+            ):
+                errors.append(
+                    f"line {lineno}: counter {base} missing _total"
+                )
+            key = (name, labels)
+            if key in series:
+                errors.append(
+                    f"line {lineno}: duplicate series {name}{labels}"
+                )
+            series.add(key)
+            samples += 1
+    if samples == 0:
+        errors.append("no samples at all")
+    for fam in REQUIRED_FAMILIES:
+        if not any(name.startswith(fam) for name in typed):
+            errors.append(f"required family missing: {fam}*")
+    return errors, samples, len(typed)
+
+
+def main():
+    if len(sys.argv) > 1:
+        with open(sys.argv[1], encoding="utf-8") as f:
+            text = f.read()
+    else:
+        text = sys.stdin.read()
+    errors, samples, families = check(text)
+    if errors:
+        print("metrics exposition check FAILED:")
+        for msg in errors:
+            print(f"  - {msg}")
+        sys.exit(1)
+    print(
+        f"metrics exposition check OK "
+        f"({families} metrics, {samples} samples)"
+    )
+
+
+if __name__ == "__main__":
+    main()
