@@ -10,6 +10,11 @@
 //!   `SyncQueue` head-to-head on one queue, single and batched, at
 //!   1/4/8 producers — the backend knob's measured justification.
 //!
+//! Plus a connection sweep: 256 and 1024 concurrent logical senders
+//! held open against one ingress flake on the event-driven I/O core
+//! (`util::netpoll`), asserting zero loss with receiver-side threads
+//! bounded by the fixed worker pool.
+//!
 //! Plus a telemetry A/B: the batched ring workload with the crate's
 //! observability instruments off (default) vs on, pinning the
 //! "off-path costs nothing" claim to a number.
@@ -20,18 +25,29 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use floe::channel::{
-    RingQueue, ShardedQueue, SyncQueue, TcpReceiver, TcpSender, Transport,
+    EndpointAddr, EndpointTable, RingQueue, ShardedQueue, SyncQueue,
+    TcpReceiver, TcpSender, Transport,
 };
 use floe::message::Message;
+use floe::util::netpoll::IoCore;
 
 const MPMC_PRODUCERS: usize = 4;
 const MPMC_CONSUMERS: usize = 2;
 const BATCH: usize = 64;
 const PAYLOAD: usize = 64;
 const RVM_PRODUCERS: [usize; 3] = [1, 4, 8];
+
+/// Concurrent-connection counts for the ingress sweep.  Requires
+/// `ulimit -n` headroom for 2 × the largest count (both socket ends
+/// live in this process); CI raises the limit before running.
+const SWEEP_SENDERS: [usize; 2] = [256, 1024];
+
+/// Messages each sweep sender delivers (one per round, so every
+/// connection stays concurrently active for the whole run).
+const SWEEP_MSGS_PER_SENDER: usize = 20;
 
 /// One ring-vs-mutex cell: both backends at the same producer count and
 /// mode, plus the ratio.
@@ -322,6 +338,118 @@ fn bench_codec(n: usize, payload: usize) -> (f64, f64) {
     (enc_rate, dec_rate)
 }
 
+/// One connection-sweep cell: throughput with every sender
+/// concurrently connected, plus the net I/O threads observed mid-run.
+struct SweepCell {
+    senders: usize,
+    msgs_per_sec: f64,
+    net_threads: usize,
+}
+
+/// Threads of the net I/O core (`floe-net-poll`, `floe-net-w*`).
+#[cfg(target_os = "linux")]
+fn net_thread_count() -> usize {
+    let mut n = 0;
+    if let Ok(entries) = std::fs::read_dir("/proc/self/task") {
+        for e in entries.flatten() {
+            if let Ok(name) =
+                std::fs::read_to_string(e.path().join("comm"))
+            {
+                if name.trim_end().starts_with("floe-net") {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+#[cfg(not(target_os = "linux"))]
+fn net_thread_count() -> usize {
+    IoCore::global().workers() + 1 // pool + poller, by construction
+}
+
+/// `senders` concurrent **logical** senders against one ingress
+/// flake: every connection is opened up front and held for the whole
+/// run, each sender delivering one message per round.  Asserts zero
+/// loss and that the receiver-side thread count is the worker-pool
+/// constant, not the connection count.
+fn bench_connection_sweep(senders: usize) -> SweepCell {
+    const CLIENT_THREADS: usize = 8;
+    let table = EndpointTable::new();
+    let q = Arc::new(ShardedQueue::with_default_shards(1 << 16));
+    let mut ports = HashMap::new();
+    ports.insert("in".to_string(), Arc::clone(&q));
+    let mut rx =
+        TcpReceiver::start_logical(0, "ingress", Arc::clone(&table))
+            .unwrap();
+    table.publish("ingress", ports, Some(rx.endpoint()));
+
+    let total = senders * SWEEP_MSGS_PER_SENDER;
+    let start = Instant::now();
+    let handles: Vec<_> = (0..CLIENT_THREADS)
+        .map(|t| {
+            let table = Arc::clone(&table);
+            thread::spawn(move || {
+                let lo = senders * t / CLIENT_THREADS;
+                let hi = senders * (t + 1) / CLIENT_THREADS;
+                let txs: Vec<TcpSender> = (lo..hi)
+                    .map(|_| {
+                        TcpSender::logical(
+                            Arc::clone(&table),
+                            &EndpointAddr::new("ingress", "in"),
+                        )
+                        .unwrap()
+                    })
+                    .collect();
+                for round in 0..SWEEP_MSGS_PER_SENDER {
+                    for tx in &txs {
+                        tx.send(Message::text(format!("{round}")))
+                            .unwrap();
+                    }
+                }
+                // txs drop here: connections stayed open throughout.
+            })
+        })
+        .collect();
+
+    // Drain concurrently; sample the thread count mid-run, with all
+    // connections registered.
+    let mut got = 0usize;
+    let mut net_threads = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while got < total {
+        match q.pop_batch_timeout(1024, Duration::from_millis(100)) {
+            Ok(b) => got += b.len(),
+            Err(_) => break,
+        }
+        if net_threads == 0 && got >= total / 2 {
+            net_threads = net_thread_count();
+        }
+        assert!(
+            Instant::now() < deadline,
+            "sweep stalled at {got}/{total} ({senders} senders)"
+        );
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    assert_eq!(got, total, "lost messages at {senders} senders");
+    let bound = IoCore::global().workers() + 1;
+    assert!(
+        net_threads <= bound,
+        "{net_threads} net threads at {senders} senders exceeds the \
+         worker-pool bound {bound}"
+    );
+    rx.shutdown();
+    SweepCell {
+        senders,
+        msgs_per_sec: total as f64 / secs,
+        net_threads,
+    }
+}
+
 /// Telemetry cost on the hottest primitive: the batched ring at
 /// `MPMC_PRODUCERS` producers, instruments off (the default) vs on.
 /// Same workload, same queue — the delta is the gated park/latency
@@ -357,6 +485,20 @@ fn rvm_json(cells: &[RvmCell]) -> String {
         .join(",\n")
 }
 
+fn sweep_json(cells: &[SweepCell]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            format!(
+                "    \"s{}\": {{ \"msgs_per_sec\": {:.0}, \
+                 \"net_threads\": {} }}",
+                c.senders, c.msgs_per_sec, c.net_threads
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n")
+}
+
 #[allow(clippy::too_many_arguments)]
 fn write_baseline(
     single: f64,
@@ -365,6 +507,7 @@ fn write_baseline(
     rvm_batched: &[RvmCell],
     tcp_single: f64,
     tcp_batched: f64,
+    sweep: &[SweepCell],
     enc: f64,
     dec: f64,
     tel_off: f64,
@@ -381,13 +524,17 @@ fn write_baseline(
          \"batch_size\": {BATCH},\n    \"single\": {{\n{}\n    }},\n    \
          \"batched\": {{\n{}\n    }}\n  }},\n  \
          \"tcp_msgs_per_sec\": {{\n    \"single\": {tcp_single:.0},\n    \
-         \"batched\": {tcp_batched:.0}\n  }},\n  \"codec_msgs_per_sec\": \
+         \"batched\": {tcp_batched:.0}\n  }},\n  \
+         \"connection_sweep\": {{\n    \"workers\": {},\n{}\n  }},\n  \
+         \"codec_msgs_per_sec\": \
          {{\n    \"encode\": {enc:.0},\n    \"decode\": {dec:.0}\n  }},\n  \
          \"telemetry_overhead\": {{\n    \"off\": {tel_off:.0},\n    \
          \"on\": {tel_on:.0},\n    \"overhead_pct\": {:.2}\n  }}\n}}\n",
         batched / single.max(1.0),
         rvm_json(rvm_single),
         rvm_json(rvm_batched),
+        IoCore::global().workers(),
+        sweep_json(sweep),
         overhead_pct(tel_off, tel_on),
     );
     // Repo root = the rust package dir's parent.
@@ -463,6 +610,27 @@ fn main() {
         );
     }
     println!(
+        "\n# Connection sweep — concurrent logical senders against one \
+         ingress flake ({} worker(s) + 1 poll thread)",
+        IoCore::global().workers()
+    );
+    println!(
+        "{:>10} {:>14} {:>12}",
+        "senders", "msgs/sec", "net-threads"
+    );
+    let sweep: Vec<SweepCell> = SWEEP_SENDERS
+        .iter()
+        .map(|&s| {
+            let c = bench_connection_sweep(s);
+            println!(
+                "{:>10} {:>14.0} {:>12}",
+                c.senders, c.msgs_per_sec, c.net_threads
+            );
+            c
+        })
+        .collect();
+
+    println!(
         "\n# Telemetry overhead, batched ring, {MPMC_PRODUCERS} \
          producers — messages/second"
     );
@@ -482,6 +650,7 @@ fn main() {
         &rvm_batched,
         tcp_single_64,
         tcp_batched_64,
+        &sweep,
         enc_64,
         dec_64,
         tel_off,

@@ -56,6 +56,7 @@ use std::time::{Duration, Instant};
 use crate::channel::{EndpointAddr, EndpointTable, ShardedQueue, Transport};
 use crate::error::{FloeError, Result};
 use crate::message::Message;
+use crate::util::netpoll::{source_fd, Conn, IoCore, Serve, Wake};
 
 /// Hard ceiling on one frame (64 MiB) — rejects corrupt length prefixes.
 const MAX_FRAME: usize = 64 << 20;
@@ -94,11 +95,12 @@ enum RxRoute {
     Logical { table: Arc<EndpointTable>, flake_id: String },
 }
 
-/// Idle-teardown state shared between the accept loop and the
-/// per-connection threads.  Disabled by default; a relocation
-/// replacement enables it on the lingering receivers it adopts (their
-/// job is only to bridge not-yet-rebound senders), so the sockets and
-/// accept threads are reclaimed once every sender has moved on.
+/// Idle-teardown state shared between the listener state machine and
+/// the per-connection state machines.  Disabled by default; a
+/// relocation replacement enables it on the lingering receivers it
+/// adopts (their job is only to bridge not-yet-rebound senders), so
+/// the listening socket and connection slots are reclaimed once every
+/// sender has moved on.
 struct IdleState {
     /// Idle window in ms; 0 = teardown disabled.
     timeout_ms: AtomicU64,
@@ -110,11 +112,18 @@ struct IdleState {
     torn_down: AtomicBool,
 }
 
-/// Listens for framed messages and pushes them into per-port input queues.
+/// Listens for framed messages and pushes them into per-port input
+/// queues.  The listener and every accepted connection run as state
+/// machines on the process-wide event-driven I/O core
+/// ([`IoCore::global`]) — a connection costs a poll-table slot and a
+/// couple of reusable buffers, not an OS thread, so one ingress flake
+/// scales to tens of thousands of concurrent senders with the thread
+/// count pinned at the worker-pool size.
 pub struct TcpReceiver {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    join: Option<thread::JoinHandle<()>>,
+    core: Arc<IoCore>,
+    group: u64,
     idle: Arc<IdleState>,
     epoch: Instant,
 }
@@ -148,8 +157,6 @@ impl TcpReceiver {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let route = Arc::new(route);
         let epoch = Instant::now();
         let idle = Arc::new(IdleState {
             timeout_ms: AtomicU64::new(0),
@@ -157,67 +164,22 @@ impl TcpReceiver {
             last_close_ms: AtomicU64::new(0),
             torn_down: AtomicBool::new(false),
         });
-        let idle2 = Arc::clone(&idle);
-        let join = thread::Builder::new()
-            .name(format!("flake-rx-{}", addr.port()))
-            .spawn(move || {
-                while !stop2.load(Ordering::SeqCst) {
-                    let timeout_ms =
-                        idle2.timeout_ms.load(Ordering::SeqCst);
-                    if timeout_ms > 0
-                        && idle2.active.load(Ordering::SeqCst) == 0
-                    {
-                        let now_ms =
-                            epoch.elapsed().as_millis() as u64;
-                        let last = idle2
-                            .last_close_ms
-                            .load(Ordering::SeqCst);
-                        if now_ms.saturating_sub(last) >= timeout_ms {
-                            idle2
-                                .torn_down
-                                .store(true, Ordering::SeqCst);
-                            crate::log_info!(
-                                "tcp: receiver {addr} idle for \
-                                 {timeout_ms} ms with every sender \
-                                 rebound; tearing down"
-                            );
-                            break; // drops the listener
-                        }
-                    }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let route = Arc::clone(&route);
-                            let stop3 = Arc::clone(&stop2);
-                            let idle3 = Arc::clone(&idle2);
-                            idle2.active.fetch_add(1, Ordering::SeqCst);
-                            thread::spawn(move || {
-                                let _ =
-                                    serve_stream(stream, &route, &stop3);
-                                // Close stamp *before* the decrement:
-                                // the accept loop only reads the idle
-                                // clock when active == 0, so it must
-                                // already be fresh by then.
-                                idle3.last_close_ms.store(
-                                    epoch.elapsed().as_millis() as u64,
-                                    Ordering::SeqCst,
-                                );
-                                idle3
-                                    .active
-                                    .fetch_sub(1, Ordering::SeqCst);
-                            });
-                        }
-                        Err(e)
-                            if e.kind()
-                                == std::io::ErrorKind::WouldBlock =>
-                        {
-                            thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn tcp receiver");
-        Ok(TcpReceiver { addr, stop, join: Some(join), idle, epoch })
+        let core = Arc::clone(IoCore::global());
+        let group = core.new_group();
+        let fd = source_fd(&listener);
+        let sm = RxListener {
+            listener,
+            addr,
+            route: Arc::new(route),
+            stop: Arc::clone(&stop),
+            idle: Arc::clone(&idle),
+            epoch,
+            group,
+        };
+        // tick = true: the idle-teardown clock runs on the poller's
+        // housekeeping ticks, not on a dedicated timer thread.
+        core.register(group, fd, true, Box::new(sm))?;
+        Ok(TcpReceiver { addr, stop, core, group, idle, epoch })
     }
 
     /// `host:port` of this receiver.
@@ -248,17 +210,219 @@ impl TcpReceiver {
         self.idle.torn_down.load(Ordering::SeqCst)
     }
 
+    /// Retire the listener and every live connection of this
+    /// receiver, waiting (bounded) for in-flight deliveries to
+    /// finish.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.core.close_group(self.group, true);
     }
 }
 
 impl Drop for TcpReceiver {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.core.close_group(self.group, false);
+    }
+}
+
+/// Listener state machine: drains the kernel backlog into registered
+/// [`RxConn`]s and runs the idle-teardown clock on poller ticks.
+struct RxListener {
+    listener: TcpListener,
+    addr: std::net::SocketAddr,
+    route: Arc<RxRoute>,
+    stop: Arc<AtomicBool>,
+    idle: Arc<IdleState>,
+    epoch: Instant,
+    group: u64,
+}
+
+impl RxListener {
+    /// Drain the kernel backlog, registering one connection state
+    /// machine per accepted socket.
+    fn accept_ready(&mut self, core: &IoCore) -> Serve {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    self.idle.active.fetch_add(1, Ordering::SeqCst);
+                    let fd = source_fd(&stream);
+                    let conn = RxConn {
+                        stream,
+                        route: Arc::clone(&self.route),
+                        stop: Arc::clone(&self.stop),
+                        idle: Arc::clone(&self.idle),
+                        epoch: self.epoch,
+                        acc: Vec::with_capacity(READ_CHUNK),
+                        chunk: vec![0u8; READ_CHUNK],
+                        deliveries: Vec::new(),
+                    };
+                    // A failed registration drops the state machine,
+                    // whose Drop keeps the idle accounting balanced.
+                    let _ = core.register(
+                        self.group,
+                        fd,
+                        false,
+                        Box::new(conn),
+                    );
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return Serve::Continue;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted =>
+                {
+                    continue;
+                }
+                Err(_) => return Serve::Close,
+            }
+        }
+    }
+}
+
+impl Conn for RxListener {
+    fn wake(&mut self, _w: Wake, core: &IoCore) -> Serve {
+        if self.stop.load(Ordering::SeqCst) {
+            return Serve::Close;
+        }
+        // Accept *before* the idle-expiry decision: a sender whose
+        // connection is still sitting unaccepted in the kernel
+        // backlog at the deadline must be served, not severed (the
+        // old accept loop checked the idle clock first and could
+        // drop the listener over a non-empty backlog).
+        if let Serve::Close = self.accept_ready(core) {
+            return Serve::Close;
+        }
+        let timeout_ms = self.idle.timeout_ms.load(Ordering::SeqCst);
+        if timeout_ms > 0
+            && self.idle.active.load(Ordering::SeqCst) == 0
+        {
+            let now_ms = self.epoch.elapsed().as_millis() as u64;
+            let last =
+                self.idle.last_close_ms.load(Ordering::SeqCst);
+            if now_ms.saturating_sub(last) >= timeout_ms {
+                // Final backlog drain: a connect racing the deadline
+                // itself is served (keeping the receiver alive)
+                // instead of being severed by the teardown.
+                if let Serve::Close = self.accept_ready(core) {
+                    return Serve::Close;
+                }
+                if self.idle.active.load(Ordering::SeqCst) == 0 {
+                    self.idle
+                        .torn_down
+                        .store(true, Ordering::SeqCst);
+                    let addr = self.addr;
+                    crate::log_info!(
+                        "tcp: receiver {addr} idle for {timeout_ms} \
+                         ms with every sender rebound; tearing down"
+                    );
+                    return Serve::Close; // retires the listener slot
+                }
+            }
+        }
+        Serve::Continue
+    }
+}
+
+/// How many chunks one wake may read before yielding the worker: the
+/// level-triggered poller re-offers a socket that still has bytes, so
+/// one firehose connection cannot starve the rest of the pool.
+const READ_BUDGET: usize = 16;
+
+/// Per-connection state machine: owns the socket and the reusable
+/// decode buffers; a partial frame simply stays in `acc` between
+/// readiness events.
+struct RxConn {
+    stream: TcpStream,
+    route: Arc<RxRoute>,
+    stop: Arc<AtomicBool>,
+    idle: Arc<IdleState>,
+    epoch: Instant,
+    /// Undecoded byte accumulator (partial frames carry across wakes).
+    acc: Vec<u8>,
+    /// Reusable read chunk.
+    chunk: Vec<u8>,
+    /// Reusable per-port delivery groups.
+    deliveries: Vec<(String, Vec<Message>)>,
+}
+
+impl Conn for RxConn {
+    fn wake(&mut self, _w: Wake, _core: &IoCore) -> Serve {
+        if self.stop.load(Ordering::SeqCst) {
+            return Serve::Close;
+        }
+        for _ in 0..READ_BUDGET {
+            let n = match self.stream.read(&mut self.chunk) {
+                Ok(0) => {
+                    // Peer closed.  Bytes left in the accumulator
+                    // mean the peer died mid-frame — surface the
+                    // data loss instead of treating it as a clean
+                    // shutdown.
+                    if !self.acc.is_empty() {
+                        crate::log_warn!(
+                            "tcp: peer closed mid-frame ({} byte(s) \
+                             undecoded)",
+                            self.acc.len()
+                        );
+                    }
+                    return Serve::Close;
+                }
+                Ok(n) => n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return Serve::Continue;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted =>
+                {
+                    continue;
+                }
+                Err(_) => return Serve::Close, // peer reset
+            };
+            self.acc.extend_from_slice(&self.chunk[..n]);
+            if crate::telemetry::enabled() {
+                crate::telemetry::ctr_tcp_rx_bytes().add(n as u64);
+            }
+            match decode_and_deliver(
+                &mut self.acc,
+                &mut self.deliveries,
+                &self.route,
+                &self.stop,
+            ) {
+                Ok(true) => {}
+                Ok(false) => return Serve::Close, // sink gone
+                Err(e) => {
+                    crate::log_warn!(
+                        "tcp: closing connection on corrupt \
+                         frame: {e}"
+                    );
+                    return Serve::Close;
+                }
+            }
+        }
+        Serve::Continue
+    }
+}
+
+impl Drop for RxConn {
+    fn drop(&mut self) {
+        // Close stamp *before* the decrement: the idle check only
+        // reads the clock when active == 0, so it must already be
+        // fresh by then.  Drop runs on every retire path (EOF,
+        // error, close_group), so the accounting is exactly-once.
+        self.idle.last_close_ms.store(
+            self.epoch.elapsed().as_millis() as u64,
+            Ordering::SeqCst,
+        );
+        self.idle.active.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -361,9 +525,93 @@ fn deliver(
     }
 }
 
-/// Per-connection read loop: accumulate raw bytes, decode every complete
-/// frame, deliver frames grouped per port with one batch push each.
-fn serve_stream(
+/// Decode every complete frame in `acc`, grouping consecutive
+/// messages per port so each group lands in the sink queue through
+/// one batch push, then deliver the groups.  Consumed bytes are
+/// drained from `acc`; a partial trailing frame stays for the next
+/// read.  Returns `Ok(true)` to keep the connection, `Ok(false)` when
+/// the sink is gone, or `Err` on a corrupt frame — everything decoded
+/// before the corruption is still delivered.
+fn decode_and_deliver(
+    acc: &mut Vec<u8>,
+    deliveries: &mut Vec<(String, Vec<Message>)>,
+    route: &RxRoute,
+    stop: &AtomicBool,
+) -> Result<bool> {
+    let mut consumed = 0usize;
+    let mut decoded_frames = 0u64;
+    let mut frame_err: Option<FloeError> = None;
+    loop {
+        let avail = acc.len() - consumed;
+        if avail < 4 {
+            break;
+        }
+        let total = u32::from_le_bytes(
+            acc[consumed..consumed + 4].try_into().expect("4 bytes"),
+        ) as usize;
+        if total < 2 || total > MAX_FRAME {
+            frame_err = Some(FloeError::Channel(format!(
+                "tcp: bad frame length {total}"
+            )));
+            break;
+        }
+        if avail < 4 + total {
+            break; // incomplete frame; wait for more bytes
+        }
+        let frame = &acc[consumed + 4..consumed + 4 + total];
+        let port_len =
+            u16::from_le_bytes([frame[0], frame[1]]) as usize;
+        if 2 + port_len > frame.len() {
+            frame_err = Some(FloeError::Channel(
+                "tcp: bad port length".into(),
+            ));
+            break;
+        }
+        let port = &frame[2..2 + port_len];
+        let msg = match Message::decode(&frame[2 + port_len..]) {
+            Ok(m) => m,
+            Err(e) => {
+                frame_err = Some(e);
+                break;
+            }
+        };
+        // The port name String is allocated once per run of
+        // same-port frames, not once per frame.
+        let same_port = matches!(
+            deliveries.last(), Some((p, _)) if p.as_bytes() == port
+        );
+        if same_port {
+            deliveries.last_mut().expect("non-empty").1.push(msg);
+        } else {
+            let port = String::from_utf8_lossy(port).into_owned();
+            deliveries.push((port, vec![msg]));
+        }
+        consumed += 4 + total;
+        decoded_frames += 1;
+    }
+    if decoded_frames > 0 && crate::telemetry::enabled() {
+        crate::telemetry::ctr_tcp_rx_frames().add(decoded_frames);
+    }
+    if consumed > 0 {
+        acc.drain(..consumed);
+    }
+    for (port, batch) in deliveries.drain(..) {
+        match deliver(route, &port, batch, stop) {
+            Delivered::Ok => {}
+            Delivered::SinkGone => return Ok(false),
+        }
+    }
+    if let Some(e) = frame_err {
+        return Err(e);
+    }
+    Ok(true)
+}
+
+/// Blocking read loop over the same decode/deliver machinery —
+/// test-only stand-in for a served connection (production
+/// connections run as [`RxConn`] state machines on the I/O core).
+#[cfg(test)]
+fn serve_blocking(
     mut stream: TcpStream,
     route: &RxRoute,
     stop: &AtomicBool,
@@ -371,22 +619,10 @@ fn serve_stream(
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     let mut acc: Vec<u8> = Vec::with_capacity(READ_CHUNK);
     let mut chunk = vec![0u8; READ_CHUNK];
-    // Reused across reads: per-port delivery groups for this chunk.
     let mut deliveries: Vec<(String, Vec<Message>)> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         let n = match stream.read(&mut chunk) {
-            Ok(0) => {
-                // Peer closed.  Bytes left in the accumulator mean the
-                // peer died mid-frame — surface the data loss instead of
-                // treating it as a clean shutdown.
-                if acc.is_empty() {
-                    return Ok(());
-                }
-                return Err(FloeError::Channel(format!(
-                    "tcp: peer closed mid-frame ({} byte(s) undecoded)",
-                    acc.len()
-                )));
-            }
+            Ok(0) => return Ok(()),
             Ok(n) => n,
             Err(e)
                 if matches!(
@@ -400,82 +636,9 @@ fn serve_stream(
             Err(_) => return Ok(()), // peer reset
         };
         acc.extend_from_slice(&chunk[..n]);
-        let telemetry_on = crate::telemetry::enabled();
-        if telemetry_on {
-            crate::telemetry::ctr_tcp_rx_bytes().add(n as u64);
-        }
-
-        // Decode every complete frame in the accumulator, grouping
-        // consecutive messages per port so each group lands in the sink
-        // queue through one push_batch.  A corrupt frame poisons the
-        // connection, but everything decoded before it is still
-        // delivered below.
-        let mut consumed = 0usize;
-        let mut decoded_frames = 0u64;
-        let mut frame_err: Option<FloeError> = None;
-        loop {
-            let avail = acc.len() - consumed;
-            if avail < 4 {
-                break;
-            }
-            let total = u32::from_le_bytes(
-                acc[consumed..consumed + 4].try_into().expect("4 bytes"),
-            ) as usize;
-            if total < 2 || total > MAX_FRAME {
-                frame_err = Some(FloeError::Channel(format!(
-                    "tcp: bad frame length {total}"
-                )));
-                break;
-            }
-            if avail < 4 + total {
-                break; // incomplete frame; wait for more bytes
-            }
-            let frame = &acc[consumed + 4..consumed + 4 + total];
-            let port_len =
-                u16::from_le_bytes([frame[0], frame[1]]) as usize;
-            if 2 + port_len > frame.len() {
-                frame_err = Some(FloeError::Channel(
-                    "tcp: bad port length".into(),
-                ));
-                break;
-            }
-            let port = &frame[2..2 + port_len];
-            let msg = match Message::decode(&frame[2 + port_len..]) {
-                Ok(m) => m,
-                Err(e) => {
-                    frame_err = Some(e);
-                    break;
-                }
-            };
-            // The port name String is allocated once per run of
-            // same-port frames, not once per frame.
-            let same_port = matches!(
-                deliveries.last(), Some((p, _)) if p.as_bytes() == port
-            );
-            if same_port {
-                deliveries.last_mut().expect("non-empty").1.push(msg);
-            } else {
-                let port =
-                    String::from_utf8_lossy(port).into_owned();
-                deliveries.push((port, vec![msg]));
-            }
-            consumed += 4 + total;
-            decoded_frames += 1;
-        }
-        if telemetry_on && decoded_frames > 0 {
-            crate::telemetry::ctr_tcp_rx_frames().add(decoded_frames);
-        }
-        if consumed > 0 {
-            acc.drain(..consumed);
-        }
-        for (port, batch) in deliveries.drain(..) {
-            match deliver(route, &port, batch, stop) {
-                Delivered::Ok => {}
-                Delivered::SinkGone => return Ok(()),
-            }
-        }
-        if let Some(e) = frame_err {
-            return Err(e);
+        if !decode_and_deliver(&mut acc, &mut deliveries, route, stop)?
+        {
+            return Ok(());
         }
     }
     Ok(())
@@ -907,7 +1070,7 @@ mod tests {
             drop(first);
             // Second connection: served properly.
             let (stream, _) = listener.accept().unwrap();
-            let _ = serve_stream(stream, &route, &stop2);
+            let _ = serve_blocking(stream, &route, &stop2);
         });
 
         let tx = TcpSender::connect(&ep, "in").unwrap();
@@ -936,7 +1099,7 @@ mod tests {
             got.iter().filter(|t| t.starts_with('r')).collect();
         assert_eq!(retried, vec!["r0", "r1", "r2", "r3"], "{got:?}");
         stop.store(true, Ordering::SeqCst);
-        drop(tx); // closes the connection; serve_stream returns
+        drop(tx); // closes the connection; serve_blocking returns
         server.join().unwrap();
     }
 
@@ -1106,6 +1269,60 @@ mod tests {
             thread::sleep(Duration::from_millis(5));
         }
         rx.shutdown();
+    }
+
+    /// Regression (backlog severing): the idle teardown must drain
+    /// the kernel backlog before dropping the listener, so a sender
+    /// whose connect raced the teardown deadline is served, not
+    /// severed.  The checkable invariant uses the FIN/EOF drain
+    /// handshake: a sender that wrote its frame, shut down its write
+    /// half, and then read a clean EOF was *served* — the receiver
+    /// decodes and delivers everything before closing — so every
+    /// EOF-confirmed message must be in the queue.  A reset instead
+    /// of EOF means the connection lost the race outright (the
+    /// sender sees the error and, in production, rebinds) and makes
+    /// no delivery claim.
+    #[test]
+    fn idle_teardown_drains_backlog_at_deadline() {
+        for round in 0..10 {
+            let (mut rx, q, ep) = start_pair();
+            rx.enable_idle_teardown(Duration::from_millis(10));
+            let mut confirmed = 0usize;
+            for i in 0..40 {
+                // Jittered pacing so some connects land right on the
+                // 10ms deadline (an accepted connection resets the
+                // idle clock at close, re-arming the race each time).
+                thread::sleep(Duration::from_millis((i % 4) * 5));
+                let Ok(mut s) = TcpStream::connect(&ep) else {
+                    break; // torn down: the race is over
+                };
+                let msg = Message::text(format!("r{round}-c{i}"));
+                let mut buf = Vec::new();
+                TcpSender::frame_into("in", &msg, &mut buf);
+                if s.write_all(&buf).is_err() {
+                    continue; // severed mid-write: no claim
+                }
+                let _ = s.shutdown(Shutdown::Write);
+                let _ = s.set_read_timeout(Some(
+                    Duration::from_secs(5),
+                ));
+                let mut b = [0u8; 8];
+                if matches!(s.read(&mut b), Ok(0)) {
+                    confirmed += 1; // clean EOF: it was served
+                }
+            }
+            let mut got = 0usize;
+            while q.try_pop().is_some() {
+                got += 1;
+            }
+            assert!(
+                got >= confirmed,
+                "round {round}: {} EOF-confirmed message(s) lost \
+                 ({got} delivered, {confirmed} confirmed)",
+                confirmed - got
+            );
+            rx.shutdown();
+        }
     }
 
     /// Logical delivery follows a republication that happens while the

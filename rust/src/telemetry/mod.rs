@@ -83,6 +83,16 @@ macro_rules! static_counter {
     };
 }
 
+macro_rules! static_gauge {
+    ($(#[$doc:meta])* $fn_name:ident, $name:expr, $help:expr) => {
+        $(#[$doc])*
+        pub fn $fn_name() -> &'static Arc<Gauge> {
+            static I: OnceLock<Arc<Gauge>> = OnceLock::new();
+            I.get_or_init(|| metrics().gauge($name, $help))
+        }
+    };
+}
+
 macro_rules! static_histogram {
     ($(#[$doc:meta])* $fn_name:ident, $name:expr, $help:expr) => {
         $(#[$doc])*
@@ -136,6 +146,27 @@ static_counter!(
     ctr_tcp_rebinds,
     "floe_channel_tcp_rebinds_total",
     "TCP sender rebinds to a republished endpoint"
+);
+
+// -- net I/O core family ----------------------------------------------------
+
+static_gauge!(
+    /// Connections registered with the event-driven I/O core.
+    gauge_net_registered,
+    "floe_net_connections_registered",
+    "Connections registered with the event-driven I/O core"
+);
+static_gauge!(
+    /// Connections being served by a worker right now.
+    gauge_net_active,
+    "floe_net_connections_active",
+    "Connections currently being served by an I/O worker"
+);
+static_gauge!(
+    /// Fixed I/O worker-pool size.
+    gauge_net_workers,
+    "floe_net_workers",
+    "Fixed worker-pool size of the event-driven I/O core"
 );
 
 // -- recompose family -------------------------------------------------------
@@ -276,6 +307,9 @@ pub fn touch() {
     ctr_tcp_rx_frames();
     ctr_tcp_reconnects();
     ctr_tcp_rebinds();
+    gauge_net_registered();
+    gauge_net_active();
+    gauge_net_workers();
     ctr_recompose();
     hist_recompose_phase("downtime");
     ctr_elasticity_decision("hold");
@@ -298,6 +332,7 @@ mod tests {
         let text = metrics().render();
         for family in [
             "floe_channel_",
+            "floe_net_",
             "floe_recompose_",
             "floe_elasticity_",
             "floe_failover_",

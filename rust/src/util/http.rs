@@ -2,20 +2,50 @@
 //!
 //! The paper's coordinator, manager, container and flake "expose REST web
 //! service endpoints for these management interactions" (§III).  This module
-//! is that substrate: a thread-per-connection server dispatching to a handler
-//! closure, and a blocking client for control calls.  Bodies are JSON (see
+//! is that substrate: a server dispatching to a handler closure, and a
+//! blocking client for control calls.  Bodies are JSON (see
 //! [`crate::util::json`]).  Connections are not kept alive — control-plane
 //! traffic is low-rate by design.
+//!
+//! The server runs on the process-wide event-driven I/O core
+//! ([`IoCore::global`]): the listener and every in-flight request are
+//! state machines on the shared worker pool, so a scraped `/metrics`
+//! plane costs zero dedicated threads instead of one per request.
+//!
+//! Peer input is bounded everywhere it is read: header block and
+//! per-line size, header count and declared body length are all capped
+//! (431/413 server-side, [`FloeError::Parse`] client-side), so a
+//! misbehaving peer cannot OOM the coordinator by claiming a huge
+//! `Content-Length` or streaming an endless header line.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::{FloeError, Result};
+use crate::util::netpoll::{source_fd, Conn, IoCore, Serve, Wake};
+
+/// Cap on the request/response head (request line + all headers).
+const MAX_HEAD_BYTES: usize = 16 << 10;
+
+/// Cap on one header line (client-side line reads).
+const MAX_HEAD_LINE: usize = 8 << 10;
+
+/// Cap on the number of headers, both directions.
+const MAX_HEADERS: usize = 64;
+
+/// Cap on a request body the server will buffer (413 beyond).
+const MAX_BODY: usize = 4 << 20;
+
+/// Cap on a response body the client will buffer.
+const MAX_CLIENT_BODY: usize = 16 << 20;
+
+/// How long a connection may take to deliver its request and accept
+/// the response before the server hangs up on it.
+const REQUEST_DEADLINE: Duration = Duration::from_secs(10);
 
 /// Parsed HTTP request.
 #[derive(Debug, Clone)]
@@ -80,23 +110,27 @@ impl Response {
             400 => "Bad Request",
             404 => "Not Found",
             409 => "Conflict",
+            413 => "Payload Too Large",
+            431 => "Request Header Fields Too Large",
             500 => "Internal Server Error",
             _ => "Unknown",
         }
     }
 }
 
-/// A running HTTP server; dropping the handle does NOT stop it — call
-/// [`HttpServer::shutdown`].
+/// A running HTTP server on the shared I/O core.  Dropping the handle
+/// stops accepting; [`HttpServer::shutdown`] additionally waits for
+/// in-flight requests to retire.
 pub struct HttpServer {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    join: Option<thread::JoinHandle<()>>,
+    core: Arc<IoCore>,
+    group: u64,
 }
 
 impl HttpServer {
-    /// Bind to `127.0.0.1:port` (0 picks a free port) and serve requests on a
-    /// background thread via `handler`.
+    /// Bind to `127.0.0.1:port` (0 picks a free port) and serve
+    /// requests through `handler` on the process-wide I/O core.
     pub fn start<F>(port: u16, handler: F) -> Result<HttpServer>
     where
         F: Fn(&Request) -> Response + Send + Sync + 'static,
@@ -105,31 +139,17 @@ impl HttpServer {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = Arc::clone(&stop);
-        let handler = Arc::new(handler);
-        let join = thread::Builder::new()
-            .name(format!("http-{}", addr.port()))
-            .spawn(move || {
-                while !stop2.load(Ordering::SeqCst) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let h = Arc::clone(&handler);
-                            thread::spawn(move || {
-                                let _ = serve_connection(stream, &*h);
-                            });
-                        }
-                        Err(e)
-                            if e.kind()
-                                == std::io::ErrorKind::WouldBlock =>
-                        {
-                            thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn http thread");
-        Ok(HttpServer { addr, stop, join: Some(join) })
+        let core = Arc::clone(IoCore::global());
+        let group = core.new_group();
+        let fd = source_fd(&listener);
+        let sm = HttpListener {
+            listener,
+            handler: Arc::new(handler),
+            stop: Arc::clone(&stop),
+            group,
+        };
+        core.register(group, fd, false, Box::new(sm))?;
+        Ok(HttpServer { addr, stop, core, group })
     }
 
     /// `host:port` this server is bound to.
@@ -141,77 +161,221 @@ impl HttpServer {
         self.addr.port()
     }
 
-    /// Stop accepting and join the accept loop.
+    /// Stop accepting and wait (bounded) for in-flight requests.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.core.close_group(self.group, true);
     }
 }
 
 impl Drop for HttpServer {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.core.close_group(self.group, false);
     }
 }
 
-fn serve_connection<F>(mut stream: TcpStream, handler: &F) -> Result<()>
+/// Accepts connections and registers one [`HttpConn`] per request.
+struct HttpListener<F> {
+    listener: TcpListener,
+    handler: Arc<F>,
+    stop: Arc<AtomicBool>,
+    group: u64,
+}
+
+impl<F> Conn for HttpListener<F>
+where
+    F: Fn(&Request) -> Response + Send + Sync + 'static,
+{
+    fn wake(&mut self, _w: Wake, core: &IoCore) -> Serve {
+        if self.stop.load(Ordering::SeqCst) {
+            return Serve::Close;
+        }
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let fd = source_fd(&stream);
+                    let conn = HttpConn {
+                        stream,
+                        handler: Arc::clone(&self.handler),
+                        buf: Vec::new(),
+                        deadline: Instant::now() + REQUEST_DEADLINE,
+                    };
+                    // tick = true: the poller's ticks enforce the
+                    // request deadline on stalled clients.
+                    let _ = core.register(
+                        self.group,
+                        fd,
+                        true,
+                        Box::new(conn),
+                    );
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return Serve::Continue;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted =>
+                {
+                    continue;
+                }
+                Err(_) => return Serve::Close,
+            }
+        }
+    }
+}
+
+/// One in-flight request: buffers incrementally across readiness
+/// events, serves the handler once the (capped) head and body are
+/// complete, writes the response and closes.
+struct HttpConn<F> {
+    stream: TcpStream,
+    handler: Arc<F>,
+    buf: Vec<u8>,
+    deadline: Instant,
+}
+
+impl<F> HttpConn<F>
 where
     F: Fn(&Request) -> Response,
 {
-    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
-    let req = match read_request(&mut stream) {
-        Ok(r) => r,
-        Err(e) => {
-            let resp = Response::error(400, format!("bad request: {e}"));
-            write_response(&mut stream, &resp)?;
-            return Ok(());
+    /// Write `resp` and end the connection.  The write flips back to
+    /// blocking with a timeout: responses are small and the request
+    /// is already over, so occupying the worker briefly is fine.
+    fn respond(&mut self, resp: &Response) -> Serve {
+        let _ = self.stream.set_nonblocking(false);
+        let _ = self
+            .stream
+            .set_write_timeout(Some(REQUEST_DEADLINE));
+        let _ = write_response(&mut self.stream, resp);
+        Serve::Close
+    }
+
+    /// Try to serve what is buffered so far.  `None` means the
+    /// request is still incomplete (within its caps) — keep reading.
+    fn try_serve(&mut self) -> Option<Serve> {
+        let head_end = self
+            .buf
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n");
+        let Some(head_end) = head_end else {
+            if self.buf.len() > MAX_HEAD_BYTES {
+                return Some(self.respond(&Response::error(
+                    431,
+                    "header block too large",
+                )));
+            }
+            return None;
+        };
+        if head_end > MAX_HEAD_BYTES {
+            return Some(self.respond(&Response::error(
+                431,
+                "header block too large",
+            )));
         }
-    };
-    let resp = handler(&req);
-    write_response(&mut stream, &resp)
+        let head =
+            String::from_utf8_lossy(&self.buf[..head_end])
+                .into_owned();
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let Some(method) = parts.next() else {
+            return Some(self.respond(&Response::error(
+                400,
+                "bad request: empty request line",
+            )));
+        };
+        let Some(target) = parts.next() else {
+            return Some(self.respond(&Response::error(
+                400,
+                "bad request: missing target",
+            )));
+        };
+        let mut headers = BTreeMap::new();
+        for line in lines {
+            if headers.len() >= MAX_HEADERS {
+                return Some(self.respond(&Response::error(
+                    431,
+                    "too many headers",
+                )));
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                headers.insert(
+                    k.trim().to_ascii_lowercase(),
+                    v.trim().to_string(),
+                );
+            }
+        }
+        let len: usize = headers
+            .get("content-length")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        if len > MAX_BODY {
+            // Rejected from the *declared* length — the body is
+            // never buffered, let alone allocated up front.
+            return Some(self.respond(&Response::error(
+                413,
+                format!("body exceeds {MAX_BODY} bytes"),
+            )));
+        }
+        let body_start = head_end + 4;
+        if self.buf.len() < body_start + len {
+            return None; // body still arriving (bounded by the cap)
+        }
+        let (path, query) = split_target(target);
+        let req = Request {
+            method: method.to_string(),
+            path,
+            query,
+            headers,
+            body: self.buf[body_start..body_start + len].to_vec(),
+        };
+        let resp = (self.handler)(&req);
+        Some(self.respond(&resp))
+    }
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<Request> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts
-        .next()
-        .ok_or_else(|| FloeError::Parse("http: empty request line".into()))?
-        .to_string();
-    let target = parts
-        .next()
-        .ok_or_else(|| FloeError::Parse("http: missing target".into()))?
-        .to_string();
-    let (path, query) = split_target(&target);
-
-    let mut headers = BTreeMap::new();
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
+impl<F> Conn for HttpConn<F>
+where
+    F: Fn(&Request) -> Response + Send + Sync + 'static,
+{
+    fn wake(&mut self, w: Wake, _core: &IoCore) -> Serve {
+        if w == Wake::Tick {
+            if Instant::now() >= self.deadline {
+                return Serve::Close; // stalled client: hang up
+            }
+            return Serve::Continue;
         }
-        if let Some((k, v)) = h.split_once(':') {
-            headers.insert(
-                k.trim().to_ascii_lowercase(),
-                v.trim().to_string(),
-            );
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Serve::Close, // EOF before complete
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    if let Some(s) = self.try_serve() {
+                        return s;
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    return Serve::Continue;
+                }
+                Err(e)
+                    if e.kind()
+                        == std::io::ErrorKind::Interrupted =>
+                {
+                    continue;
+                }
+                Err(_) => return Serve::Close,
+            }
         }
     }
-    let len: usize = headers
-        .get("content-length")
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
-    let mut body = vec![0u8; len];
-    if len > 0 {
-        reader.read_exact(&mut body)?;
-    }
-    Ok(Request { method, path, query, headers, body })
 }
 
 fn split_target(target: &str) -> (String, BTreeMap<String, String>) {
@@ -237,16 +401,18 @@ fn url_decode(s: &str) -> String {
     let mut i = 0;
     while i < bytes.len() {
         match bytes[i] {
-            b'%' if i + 2 < bytes.len() + 1 && i + 2 < bytes.len() + 1 => {
-                let hex = std::str::from_utf8(&bytes[i + 1..(i + 3).min(bytes.len())])
-                    .ok()
-                    .and_then(|h| u8::from_str_radix(h, 16).ok());
-                match hex {
-                    Some(b) => {
-                        out.push(b);
+            // A percent escape needs two hex digits after it; a
+            // truncated trailing escape ("%" or "%2") passes through
+            // literally instead of mis-decoding.
+            b'%' if i + 3 <= bytes.len() => {
+                let hi = (bytes[i + 1] as char).to_digit(16);
+                let lo = (bytes[i + 2] as char).to_digit(16);
+                match (hi, lo) {
+                    (Some(h), Some(l)) => {
+                        out.push((h * 16 + l) as u8);
                         i += 3;
                     }
-                    None => {
+                    _ => {
                         out.push(b'%');
                         i += 1;
                     }
@@ -279,6 +445,25 @@ fn write_response(stream: &mut TcpStream, resp: &Response) -> Result<()> {
     Ok(())
 }
 
+/// Read one header line, erroring instead of buffering without bound
+/// when the peer never sends a newline.
+fn read_line_capped(
+    reader: &mut BufReader<TcpStream>,
+    cap: usize,
+) -> Result<String> {
+    let mut line = String::new();
+    let n = reader
+        .by_ref()
+        .take(cap as u64)
+        .read_line(&mut line)?;
+    if n >= cap && !line.ends_with('\n') {
+        return Err(FloeError::Parse(format!(
+            "http: header line exceeds {cap} bytes"
+        )));
+    }
+    Ok(line)
+}
+
 /// Blocking HTTP client call. `addr` is `host:port`; returns (status, body).
 pub fn http_call(
     method: &str,
@@ -297,8 +482,8 @@ pub fn http_call(
     stream.flush()?;
 
     let mut reader = BufReader::new(stream);
-    let mut status_line = String::new();
-    reader.read_line(&mut status_line)?;
+    let status_line =
+        read_line_capped(&mut reader, MAX_HEAD_LINE)?;
     let status: u16 = status_line
         .split_whitespace()
         .nth(1)
@@ -307,18 +492,30 @@ pub fn http_call(
             FloeError::Parse(format!("http: bad status line {status_line:?}"))
         })?;
     let mut len = 0usize;
+    let mut header_count = 0usize;
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+        let h = read_line_capped(&mut reader, MAX_HEAD_LINE)?;
         let h = h.trim_end();
         if h.is_empty() {
             break;
+        }
+        header_count += 1;
+        if header_count > MAX_HEADERS {
+            return Err(FloeError::Parse(format!(
+                "http: more than {MAX_HEADERS} response headers"
+            )));
         }
         if let Some((k, v)) = h.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
                 len = v.trim().parse().unwrap_or(0);
             }
         }
+    }
+    // Bound the allocation by the *cap*, not the peer's claim.
+    if len > MAX_CLIENT_BODY {
+        return Err(FloeError::Parse(format!(
+            "http: response body {len} exceeds {MAX_CLIENT_BODY} bytes"
+        )));
     }
     let mut body = vec![0u8; len];
     if len > 0 {
@@ -354,6 +551,7 @@ pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::net::Shutdown;
 
     #[test]
     fn get_roundtrip() {
@@ -417,10 +615,120 @@ mod tests {
         srv.shutdown();
     }
 
+    /// Write raw bytes, read the whole (close-delimited) response.
+    fn raw_call(addr: &str, req: &[u8]) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(req).unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        String::from_utf8_lossy(&buf).into_owned()
+    }
+
+    /// A request arriving in many small packets (head split mid-line,
+    /// body split) is reassembled across readiness events.
+    #[test]
+    fn request_split_across_packets_is_served() {
+        let mut srv = HttpServer::start(0, |req| {
+            Response::ok_text(format!("got:{}", req.body_str()))
+        })
+        .unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let req =
+            b"POST /x HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        for piece in req.chunks(7) {
+            s.write_all(piece).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        let resp = String::from_utf8_lossy(&buf);
+        assert!(resp.contains("got:hello"), "{resp}");
+        srv.shutdown();
+    }
+
+    /// An endless header line (no newline, no head terminator) is cut
+    /// off with 431 instead of buffering without bound.
+    #[test]
+    fn oversized_header_line_rejected_431() {
+        let mut srv =
+            HttpServer::start(0, |_req| Response::ok_text("?"))
+                .unwrap();
+        let mut req = b"GET / HTTP/1.1\r\nX-Big: ".to_vec();
+        req.extend(vec![b'a'; MAX_HEAD_BYTES + 1]);
+        let resp = raw_call(&srv.addr(), &req);
+        assert!(resp.starts_with("HTTP/1.1 431"), "{resp}");
+        srv.shutdown();
+    }
+
+    /// More headers than the cap → 431.
+    #[test]
+    fn too_many_headers_rejected_431() {
+        let mut srv =
+            HttpServer::start(0, |_req| Response::ok_text("?"))
+                .unwrap();
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..(MAX_HEADERS + 8) {
+            req.extend(format!("X-H{i}: v\r\n").into_bytes());
+        }
+        req.extend(b"\r\n");
+        let resp = raw_call(&srv.addr(), &req);
+        assert!(resp.starts_with("HTTP/1.1 431"), "{resp}");
+        srv.shutdown();
+    }
+
+    /// A huge declared Content-Length is rejected with 413 up front —
+    /// nothing is allocated from the peer's claim.
+    #[test]
+    fn oversized_body_rejected_413() {
+        let mut srv =
+            HttpServer::start(0, |_req| Response::ok_text("?"))
+                .unwrap();
+        let req = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        );
+        let resp = raw_call(&srv.addr(), req.as_bytes());
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+        srv.shutdown();
+    }
+
+    /// The client refuses to allocate a response body bigger than its
+    /// cap, failing with a parse error instead of trusting the peer.
+    #[test]
+    fn client_rejects_oversized_response_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Drain the request head, then claim a giant body.
+            let mut buf = [0u8; 1024];
+            let _ = s.read(&mut buf);
+            let _ = s.write_all(
+                b"HTTP/1.1 200 OK\r\nContent-Length: 999999999\r\n\r\n",
+            );
+            let _ = s.shutdown(Shutdown::Write);
+        });
+        let err = http_call("GET", &addr, "/", &[]).unwrap_err();
+        assert!(
+            matches!(err, FloeError::Parse(_)),
+            "want Parse error, got {err}"
+        );
+        server.join().unwrap();
+    }
+
     #[test]
     fn url_decode_cases() {
         assert_eq!(url_decode("a%20b+c"), "a b c");
         assert_eq!(url_decode("plain"), "plain");
-        assert_eq!(url_decode("bad%zz"), "bad%zz".replace("%zz", "%zz"));
+        // Truncated or malformed escapes pass through literally —
+        // "%2" used to mis-decode into byte 0x02.
+        assert_eq!(url_decode("trail%"), "trail%");
+        assert_eq!(url_decode("trail%2"), "trail%2");
+        assert_eq!(url_decode("bad%zz"), "bad%zz");
+        assert_eq!(url_decode("%%20"), "% ");
+        assert_eq!(url_decode("%2+"), "%2 ");
     }
 }

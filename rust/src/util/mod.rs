@@ -6,6 +6,7 @@ pub mod csv;
 pub mod http;
 pub mod json;
 pub mod logging;
+pub mod netpoll;
 pub mod rng;
 pub mod testkit;
 pub mod time;

@@ -1,0 +1,895 @@
+//! Event-driven network I/O core: a readiness-polled multiplexer with
+//! a **fixed worker pool**, replacing thread-per-connection ingress.
+//!
+//! # Why
+//!
+//! The TCP data plane ([`crate::channel::TcpReceiver`]) and the REST
+//! control plane ([`crate::util::http::HttpServer`]) used to burn one
+//! blocking OS thread per accepted connection, capping one ingress
+//! flake at thousands — not millions — of senders.  This module gives
+//! both a shared core whose thread count is bounded by the pool size,
+//! not the connection count:
+//!
+//! * **Poller** — one thread watching every registered socket for
+//!   readiness.  On Linux it uses `epoll` (level-triggered +
+//!   `EPOLLONESHOT`), declared via direct `extern "C"` bindings so the
+//!   crate stays dependency-free; this is deliberately the one
+//!   unsafe/libc corner of the codebase.  Everywhere else — or when
+//!   `FLOE_NET_POLLER=sweep`, or if `epoll_create1` fails — it falls
+//!   back to a portable **rotating nonblocking sweep**: every
+//!   registered connection is offered to the pool each round and a
+//!   worker's nonblocking read simply returns `WouldBlock` when there
+//!   is nothing to do (the same pattern the old accept loops used).
+//! * **Workers** — a fixed pool (`FLOE_NET_WORKERS`, default
+//!   `max(4, min(cores/2, 8))`) draining a shared ready queue.  Each
+//!   connection is a [`Conn`] state machine that owns its socket and
+//!   decode buffers; partial frames simply stay buffered in the state
+//!   machine between readiness events.
+//!
+//! # Correctness notes
+//!
+//! * At most one worker serves a connection at a time: a `queued` flag
+//!   claims the slot before it enters the ready queue, and epoll's
+//!   `ONESHOT` re-arm happens only after the worker drained the socket
+//!   to `WouldBlock` — so per-connection ordering (and therefore
+//!   per-producer FIFO on the data plane) is preserved.
+//! * Re-arming happens **under the slot's state-machine lock**, the
+//!   same lock retirement takes before closing the fd — so a re-arm
+//!   can never race a close and poison a recycled fd number.
+//! * A state machine that returns [`Serve::Close`] (or whose group is
+//!   closed) is retired exactly once: the slot's `Box<dyn Conn>` is
+//!   taken under its lock, which drops the socket and (on Linux)
+//!   auto-deregisters the fd from epoll.
+//! * Workers may block inside a state machine (sink-queue
+//!   backpressure, an HTTP handler): that is the same behavior the old
+//!   per-connection threads had, but now it occupies one of N workers,
+//!   which is why the pool floor is 4.
+//!
+//! Listeners register with `tick = true`: the poll thread offers them
+//! a [`Wake::Tick`] every few milliseconds even when no readiness
+//! event fires, which is how idle-teardown deadlines and accept-path
+//! housekeeping run without a dedicated timer thread.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::channel::SyncQueue;
+use crate::error::{FloeError, Result};
+
+/// Poll-thread cadence: epoll wait timeout / sweep round pause, which
+/// also bounds how late a [`Wake::Tick`] can fire.
+const POLL_PAUSE: Duration = Duration::from_millis(2);
+
+/// How long [`IoCore::close_group`] waits for slots claimed by a
+/// worker to finish their current serve before giving up (the worker
+/// still retires them on release; only the *wait* is bounded).
+const CLOSE_WAIT: Duration = Duration::from_secs(2);
+
+/// Max epoll events drained per wait.
+#[cfg(target_os = "linux")]
+const EVENT_BATCH: usize = 1024;
+
+/// What the core should do with a connection after a wake.
+pub enum Serve {
+    /// Keep the registration; wake again on the next readiness event.
+    Continue,
+    /// Retire the slot: drop the state machine and close its socket.
+    Close,
+}
+
+/// Why a state machine is being woken.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wake {
+    /// The socket is (probably) readable — drain it to `WouldBlock`.
+    Ready,
+    /// Periodic housekeeping tick (only for `tick = true` slots).
+    Tick,
+}
+
+/// A registered connection state machine.  Owns its socket; must use
+/// nonblocking reads and return [`Serve::Continue`] on `WouldBlock`,
+/// keeping any partial frame buffered for the next wake.
+pub trait Conn: Send {
+    fn wake(&mut self, wake: Wake, core: &IoCore) -> Serve;
+}
+
+/// Which readiness engine drives the core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PollMode {
+    /// Linux `epoll` (falls back to `Sweep` off-Linux or on error).
+    Epoll,
+    /// Portable rotating nonblocking sweep over every registration.
+    Sweep,
+}
+
+/// One registration: the state machine plus the claim/teardown flags
+/// the poller, workers and `close_group` coordinate through.
+struct Slot {
+    token: u64,
+    group: u64,
+    /// Raw fd for the epoll backend (unused by the sweep backend and
+    /// on non-unix targets, where it is `-1`).
+    fd: i32,
+    tick: bool,
+    /// Claim flag: set before the slot enters the ready queue (or is
+    /// ticked, or retired by `close_group`), cleared by the serving
+    /// worker after the socket is drained.  Guarantees single-worker
+    /// service and at most one ready-queue entry per slot.
+    queued: AtomicBool,
+    /// Set by `close_group`; the next release point retires the slot.
+    closing: AtomicBool,
+    sm: Mutex<Option<Box<dyn Conn>>>,
+}
+
+/// The shared event-driven I/O core (see module docs).  One global
+/// instance serves every `TcpReceiver` and `HttpServer` in the
+/// process; tests may start private cores to pin a poll mode.
+pub struct IoCore {
+    mode: PollMode,
+    #[cfg(target_os = "linux")]
+    epoll: Option<epoll::Epoll>,
+    registry: Mutex<HashMap<u64, Arc<Slot>>>,
+    /// Slots that want periodic `Wake::Tick`s (listeners).
+    tickers: Mutex<Vec<Weak<Slot>>>,
+    ready: SyncQueue<Arc<Slot>>,
+    next_token: AtomicU64,
+    next_group: AtomicU64,
+    workers: usize,
+    shutdown: AtomicBool,
+    serving: AtomicUsize,
+}
+
+/// Fixed worker-pool size: `FLOE_NET_WORKERS` when set, else
+/// `max(4, min(cores / 2, 8))`.  The floor of 4 keeps one blocked
+/// state machine (sink backpressure, a slow REST handler) from
+/// starving the rest of the plane.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("FLOE_NET_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if (1..=256).contains(&n) {
+                return n;
+            }
+        }
+    }
+    let cores = thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(8);
+    (cores / 2).clamp(4, 8)
+}
+
+fn default_mode() -> PollMode {
+    match std::env::var("FLOE_NET_POLLER").as_deref() {
+        Ok("sweep") => PollMode::Sweep,
+        _ => PollMode::Epoll,
+    }
+}
+
+/// Raw fd of a socket for the epoll backend.
+#[cfg(unix)]
+pub fn source_fd<T: std::os::fd::AsRawFd>(s: &T) -> i32 {
+    s.as_raw_fd()
+}
+
+/// Non-unix targets run the sweep backend, which never looks at fds.
+#[cfg(not(unix))]
+pub fn source_fd<T>(_s: &T) -> i32 {
+    -1
+}
+
+impl IoCore {
+    /// The process-wide core used by `TcpReceiver` and `HttpServer`.
+    /// Threads spawn on first use and live for the process.
+    pub fn global() -> &'static Arc<IoCore> {
+        static CORE: OnceLock<Arc<IoCore>> = OnceLock::new();
+        CORE.get_or_init(|| {
+            IoCore::start(default_mode(), default_workers())
+        })
+    }
+
+    /// Start a core with its own poll thread and `workers` workers.
+    /// `PollMode::Epoll` silently degrades to the sweep backend when
+    /// epoll is unavailable (non-Linux, or `epoll_create1` failed).
+    pub fn start(mode: PollMode, workers: usize) -> Arc<IoCore> {
+        let workers = workers.max(1);
+        #[cfg(target_os = "linux")]
+        let (mode, ep) = match mode {
+            PollMode::Epoll => match epoll::Epoll::new() {
+                Ok(ep) => (PollMode::Epoll, Some(ep)),
+                Err(e) => {
+                    crate::log_warn!(
+                        "netpoll: epoll unavailable ({e}); using the \
+                         sweep backend"
+                    );
+                    (PollMode::Sweep, None)
+                }
+            },
+            PollMode::Sweep => (PollMode::Sweep, None),
+        };
+        #[cfg(not(target_os = "linux"))]
+        let mode = {
+            let _ = mode;
+            PollMode::Sweep
+        };
+        let core = Arc::new(IoCore {
+            mode,
+            #[cfg(target_os = "linux")]
+            epoll: ep,
+            registry: Mutex::new(HashMap::new()),
+            tickers: Mutex::new(Vec::new()),
+            // The `queued` claim flag bounds the queue at one entry
+            // per registration, so the capacity is never the limit.
+            ready: SyncQueue::new(usize::MAX),
+            next_token: AtomicU64::new(1),
+            next_group: AtomicU64::new(1),
+            workers,
+            shutdown: AtomicBool::new(false),
+            serving: AtomicUsize::new(0),
+        });
+        let c = Arc::clone(&core);
+        thread::Builder::new()
+            .name("floe-net-poll".into())
+            .spawn(move || c.poll_loop())
+            .expect("spawn net poller");
+        for i in 0..workers {
+            let c = Arc::clone(&core);
+            thread::Builder::new()
+                .name(format!("floe-net-w{i}"))
+                .spawn(move || c.worker_loop())
+                .expect("spawn net worker");
+        }
+        crate::telemetry::gauge_net_workers().set(workers as u64);
+        core
+    }
+
+    /// Fixed worker-pool size of this core.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The readiness backend actually in use.
+    pub fn mode(&self) -> PollMode {
+        self.mode
+    }
+
+    /// Currently registered connections (diagnostics / tests).
+    pub fn registered(&self) -> usize {
+        self.registry.lock().expect("netpoll registry").len()
+    }
+
+    /// Allocate a registration group (one per receiver/server, so its
+    /// shutdown can retire exactly its own slots).
+    pub fn new_group(&self) -> u64 {
+        self.next_group.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Register a nonblocking socket's state machine.  `fd` comes from
+    /// [`source_fd`]; `tick` requests periodic [`Wake::Tick`]s.  The
+    /// state machine is woken immediately when the socket is already
+    /// readable (epoll is level-triggered; the sweep offers every
+    /// registration each round).
+    pub fn register(
+        &self,
+        group: u64,
+        fd: i32,
+        tick: bool,
+        sm: Box<dyn Conn>,
+    ) -> Result<u64> {
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        let slot = Arc::new(Slot {
+            token,
+            group,
+            fd,
+            tick,
+            queued: AtomicBool::new(false),
+            closing: AtomicBool::new(false),
+            sm: Mutex::new(Some(sm)),
+        });
+        let registered = {
+            let mut reg =
+                self.registry.lock().expect("netpoll registry");
+            reg.insert(token, Arc::clone(&slot));
+            reg.len()
+        };
+        if tick {
+            self.tickers
+                .lock()
+                .expect("netpoll tickers")
+                .push(Arc::downgrade(&slot));
+        }
+        #[cfg(target_os = "linux")]
+        if let Some(ep) = &self.epoll {
+            if let Err(e) = ep.add(fd, token) {
+                self.registry
+                    .lock()
+                    .expect("netpoll registry")
+                    .remove(&token);
+                return Err(FloeError::Channel(format!(
+                    "netpoll: epoll add failed: {e}"
+                )));
+            }
+        }
+        crate::telemetry::gauge_net_registered()
+            .set(registered as u64);
+        Ok(token)
+    }
+
+    /// Retire every slot in `group`: unclaimed slots are dropped
+    /// inline; slots a worker currently holds are flagged and retired
+    /// at the worker's release point.  With `wait`, blocks (bounded by
+    /// [`CLOSE_WAIT`]) until the claimed ones are gone too, so a
+    /// receiver's `shutdown()` returns with no delivery still running.
+    pub fn close_group(&self, group: u64, wait: bool) {
+        let members: Vec<Arc<Slot>> = self
+            .registry
+            .lock()
+            .expect("netpoll registry")
+            .values()
+            .filter(|s| s.group == group)
+            .cloned()
+            .collect();
+        for slot in &members {
+            slot.closing.store(true, Ordering::SeqCst);
+            if slot
+                .queued
+                .compare_exchange(
+                    false,
+                    true,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                )
+                .is_ok()
+            {
+                self.retire(slot);
+            }
+        }
+        if !wait {
+            return;
+        }
+        let deadline = Instant::now() + CLOSE_WAIT;
+        loop {
+            let live = {
+                let reg =
+                    self.registry.lock().expect("netpoll registry");
+                members.iter().any(|s| reg.contains_key(&s.token))
+            };
+            if !live {
+                return;
+            }
+            if Instant::now() >= deadline {
+                crate::log_warn!(
+                    "netpoll: close_group({group}) timed out waiting \
+                     for in-flight connection(s); they retire on \
+                     worker release"
+                );
+                return;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Stop a private core's threads (tests).  The global core is
+    /// never stopped.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Drop a slot's state machine (closing its socket) exactly once
+    /// and remove it from the registry.  Idempotent; callers must hold
+    /// the slot's claim.
+    fn retire(&self, slot: &Arc<Slot>) {
+        let taken =
+            slot.sm.lock().expect("netpoll slot").take();
+        if taken.is_some() {
+            let registered = {
+                let mut reg =
+                    self.registry.lock().expect("netpoll registry");
+                reg.remove(&slot.token);
+                reg.len()
+            };
+            crate::telemetry::gauge_net_registered()
+                .set(registered as u64);
+        }
+        // `taken` drops here, outside both locks: closing the socket
+        // (and on Linux auto-deregistering the fd) is the last step.
+        drop(taken);
+    }
+
+    /// Serve one claimed slot.  The claim (`queued == true`) is ours;
+    /// release order matters: clear the claim, then re-arm — both
+    /// under the state-machine lock so retirement (which closes the
+    /// fd under the same lock) can never interleave with a re-arm.
+    fn serve_slot(&self, slot: &Arc<Slot>, wake: Wake) {
+        if slot.closing.load(Ordering::SeqCst) {
+            self.retire(slot);
+            return;
+        }
+        let active = self.serving.fetch_add(1, Ordering::Relaxed) + 1;
+        crate::telemetry::gauge_net_active().set(active as u64);
+        let mut close = false;
+        {
+            let mut g = slot.sm.lock().expect("netpoll slot");
+            // A `None` here means close_group already retired the
+            // slot; nothing to serve.
+            if let Some(sm) = g.as_mut() {
+                match sm.wake(wake, self) {
+                    Serve::Continue => {
+                        slot.queued.store(false, Ordering::SeqCst);
+                        if !slot.closing.load(Ordering::SeqCst) {
+                            self.rearm(slot);
+                        }
+                    }
+                    Serve::Close => close = true,
+                }
+            }
+        }
+        let active = self.serving.fetch_sub(1, Ordering::Relaxed) - 1;
+        crate::telemetry::gauge_net_active().set(active as u64);
+        if close || slot.closing.load(Ordering::SeqCst) {
+            self.retire(slot);
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    fn rearm(&self, slot: &Slot) {
+        if let Some(ep) = &self.epoll {
+            // ENOENT here is benign: the fd raced a retirement.  A
+            // recycled fd number is impossible — retirement closes
+            // the fd under the same lock this call runs under.
+            let _ = ep.rearm(slot.fd, slot.token);
+        }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    fn rearm(&self, _slot: &Slot) {}
+
+    /// Claim `slot` and hand it to the worker pool.
+    fn enqueue(&self, slot: &Arc<Slot>) {
+        if slot
+            .queued
+            .compare_exchange(
+                false,
+                true,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            )
+            .is_ok()
+        {
+            let _ = self.ready.push(Arc::clone(slot));
+        }
+    }
+
+    /// Poll thread: dispatch readiness (epoll) or offer every slot
+    /// (sweep), and run ticks, until shutdown.
+    fn poll_loop(&self) {
+        let mut scan: Vec<Arc<Slot>> = Vec::new();
+        #[cfg(target_os = "linux")]
+        let mut events: Vec<epoll::Event> =
+            Vec::with_capacity(EVENT_BATCH);
+        let mut last_tick = Instant::now();
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.mode {
+                #[cfg(target_os = "linux")]
+                PollMode::Epoll => {
+                    let ep =
+                        self.epoll.as_ref().expect("epoll backend");
+                    let n = ep.wait(
+                        &mut events,
+                        EVENT_BATCH,
+                        POLL_PAUSE.as_millis() as i32,
+                    );
+                    for ev in events.iter().take(n) {
+                        let token = ev.token();
+                        let slot = self
+                            .registry
+                            .lock()
+                            .expect("netpoll registry")
+                            .get(&token)
+                            .cloned();
+                        if let Some(slot) = slot {
+                            self.enqueue(&slot);
+                        }
+                    }
+                }
+                #[cfg(not(target_os = "linux"))]
+                PollMode::Epoll => unreachable!("epoll off-linux"),
+                PollMode::Sweep => {
+                    scan.clear();
+                    scan.extend(
+                        self.registry
+                            .lock()
+                            .expect("netpoll registry")
+                            .values()
+                            .cloned(),
+                    );
+                    for slot in &scan {
+                        self.enqueue(slot);
+                    }
+                    thread::sleep(POLL_PAUSE);
+                }
+            }
+            if last_tick.elapsed() >= POLL_PAUSE {
+                last_tick = Instant::now();
+                self.run_ticks();
+            }
+        }
+    }
+
+    /// Offer a `Wake::Tick` to every live ticker not currently being
+    /// served.  Runs on the poll thread; tickers (listeners) must keep
+    /// their tick work short.
+    fn run_ticks(&self) {
+        let mut tickers =
+            self.tickers.lock().expect("netpoll tickers");
+        tickers.retain(|w| w.strong_count() > 0);
+        let live: Vec<Arc<Slot>> =
+            tickers.iter().filter_map(Weak::upgrade).collect();
+        drop(tickers);
+        for slot in live {
+            if slot
+                .queued
+                .compare_exchange(
+                    false,
+                    true,
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                )
+                .is_ok()
+            {
+                self.serve_slot(&slot, Wake::Tick);
+            }
+        }
+    }
+
+    fn worker_loop(&self) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.ready.pop_timeout(Duration::from_millis(100)) {
+                Ok(Some(slot)) => {
+                    self.serve_slot(&slot, Wake::Ready)
+                }
+                Ok(None) => {}       // idle; re-check shutdown
+                Err(_) => return,    // queue closed (never happens)
+            }
+        }
+    }
+}
+
+/// Linux epoll bindings: the crate's one libc/unsafe corner.  Declared
+/// directly (`extern "C"`) because the crate is dependency-free by
+/// design; std already links libc on every supported target.
+#[cfg(target_os = "linux")]
+mod epoll {
+    use std::io;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLLONESHOT: u32 = 1 << 30;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    /// `struct epoll_event`.  Packed on x86-64 only, matching the
+    /// kernel/glibc ABI (`__EPOLL_PACKED`).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    pub struct Event {
+        events: u32,
+        data: u64,
+    }
+
+    impl Event {
+        pub fn token(&self) -> u64 {
+            // Field access copies out of the (possibly packed)
+            // struct; no reference to the unaligned field is taken.
+            self.data
+        }
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(
+            epfd: i32,
+            op: i32,
+            fd: i32,
+            event: *mut Event,
+        ) -> i32;
+        fn epoll_wait(
+            epfd: i32,
+            events: *mut Event,
+            maxevents: i32,
+            timeout_ms: i32,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    // The epfd is used from the poll thread (wait) and registering
+    // threads (ctl) concurrently; the kernel allows exactly that, so
+    // the auto Send/Sync for a plain fd wrapper is sound.
+    pub struct Epoll {
+        epfd: i32,
+    }
+
+    impl Epoll {
+        pub fn new() -> io::Result<Epoll> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Epoll { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: i32, token: u64) -> io::Result<()> {
+            let mut ev = Event {
+                events: EPOLLIN | EPOLLRDHUP | EPOLLONESHOT,
+                data: token,
+            };
+            let rc =
+                unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Register interest (level-triggered, one-shot).
+        pub fn add(&self, fd: i32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token)
+        }
+
+        /// Re-arm a one-shot registration after a drain.
+        pub fn rearm(&self, fd: i32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token)
+        }
+
+        /// Wait for events; returns how many landed in `buf`.
+        /// `EINTR` and errors report as zero events (the caller loops
+        /// on a short timeout anyway).
+        pub fn wait(
+            &self,
+            buf: &mut Vec<Event>,
+            max: usize,
+            timeout_ms: i32,
+        ) -> usize {
+            buf.clear();
+            buf.reserve(max);
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    buf.as_mut_ptr(),
+                    max as i32,
+                    timeout_ms,
+                )
+            };
+            if n <= 0 {
+                return 0;
+            }
+            // SAFETY: the kernel initialized the first n events.
+            unsafe { buf.set_len(n as usize) };
+            n as usize
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe {
+                let _ = close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    /// Counts every byte read; closes on EOF.
+    struct CountConn {
+        stream: TcpStream,
+        total: Arc<AtomicUsize>,
+    }
+
+    impl Conn for CountConn {
+        fn wake(&mut self, _w: Wake, _core: &IoCore) -> Serve {
+            let mut buf = [0u8; 4096];
+            loop {
+                match self.stream.read(&mut buf) {
+                    Ok(0) => return Serve::Close,
+                    Ok(n) => {
+                        self.total.fetch_add(n, Ordering::SeqCst);
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        return Serve::Continue;
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::Interrupted =>
+                    {
+                        continue;
+                    }
+                    Err(_) => return Serve::Close,
+                }
+            }
+        }
+    }
+
+    /// Accepts and registers `CountConn`s.
+    struct CountListener {
+        listener: TcpListener,
+        total: Arc<AtomicUsize>,
+        group: u64,
+        ticks: Arc<AtomicUsize>,
+    }
+
+    impl Conn for CountListener {
+        fn wake(&mut self, w: Wake, core: &IoCore) -> Serve {
+            if w == Wake::Tick {
+                self.ticks.fetch_add(1, Ordering::SeqCst);
+            }
+            loop {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(true).unwrap();
+                        let fd = source_fd(&stream);
+                        let conn = CountConn {
+                            stream,
+                            total: Arc::clone(&self.total),
+                        };
+                        core.register(
+                            self.group,
+                            fd,
+                            false,
+                            Box::new(conn),
+                        )
+                        .unwrap();
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        return Serve::Continue;
+                    }
+                    Err(_) => return Serve::Close,
+                }
+            }
+        }
+    }
+
+    /// End-to-end on one backend: N clients' bytes all arrive, slots
+    /// retire on EOF, close_group empties the registry, ticks fire.
+    fn roundtrip_on(mode: PollMode) {
+        let core = IoCore::start(mode, 2);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let total = Arc::new(AtomicUsize::new(0));
+        let ticks = Arc::new(AtomicUsize::new(0));
+        let group = core.new_group();
+        let fd = source_fd(&listener);
+        core.register(
+            group,
+            fd,
+            true,
+            Box::new(CountListener {
+                listener,
+                total: Arc::clone(&total),
+                group,
+                ticks: Arc::clone(&ticks),
+            }),
+        )
+        .unwrap();
+
+        const CLIENTS: usize = 8;
+        const PER: usize = 10_000;
+        let mut streams = Vec::new();
+        for _ in 0..CLIENTS {
+            streams.push(TcpStream::connect(addr).unwrap());
+        }
+        for s in &mut streams {
+            s.write_all(&vec![7u8; PER]).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while total.load(Ordering::SeqCst) < CLIENTS * PER {
+            assert!(
+                Instant::now() < deadline,
+                "bytes missing: {} of {}",
+                total.load(Ordering::SeqCst),
+                CLIENTS * PER
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+        // EOF retires the data slots.
+        drop(streams);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while core.registered() > 1 {
+            assert!(
+                Instant::now() < deadline,
+                "conn slots never retired ({})",
+                core.registered()
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(
+            ticks.load(Ordering::SeqCst) > 0,
+            "listener never ticked"
+        );
+        core.close_group(group, true);
+        assert_eq!(core.registered(), 0);
+        core.stop();
+    }
+
+    #[test]
+    fn sweep_backend_roundtrip() {
+        roundtrip_on(PollMode::Sweep);
+    }
+
+    #[test]
+    fn epoll_backend_roundtrip() {
+        // Off-Linux this degrades to a second sweep run.
+        roundtrip_on(PollMode::Epoll);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_mode_actually_selected_on_linux() {
+        let core = IoCore::start(PollMode::Epoll, 1);
+        assert_eq!(core.mode(), PollMode::Epoll);
+        core.stop();
+    }
+
+    #[test]
+    fn close_group_only_touches_its_own_group() {
+        let core = IoCore::start(PollMode::Sweep, 1);
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l2 = TcpListener::bind("127.0.0.1:0").unwrap();
+        l1.set_nonblocking(true).unwrap();
+        l2.set_nonblocking(true).unwrap();
+        let (g1, g2) = (core.new_group(), core.new_group());
+        let t = Arc::new(AtomicUsize::new(0));
+        let k = Arc::new(AtomicUsize::new(0));
+        let fd1 = source_fd(&l1);
+        let fd2 = source_fd(&l2);
+        core.register(
+            g1,
+            fd1,
+            false,
+            Box::new(CountListener {
+                listener: l1,
+                total: Arc::clone(&t),
+                group: g1,
+                ticks: Arc::clone(&k),
+            }),
+        )
+        .unwrap();
+        core.register(
+            g2,
+            fd2,
+            false,
+            Box::new(CountListener {
+                listener: l2,
+                total: Arc::clone(&t),
+                group: g2,
+                ticks: Arc::clone(&k),
+            }),
+        )
+        .unwrap();
+        assert_eq!(core.registered(), 2);
+        core.close_group(g1, true);
+        assert_eq!(core.registered(), 1);
+        core.close_group(g2, true);
+        assert_eq!(core.registered(), 0);
+        core.stop();
+    }
+
+    #[test]
+    fn default_workers_is_bounded() {
+        let w = default_workers();
+        assert!((1..=256).contains(&w), "{w}");
+    }
+}

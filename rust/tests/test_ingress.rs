@@ -1,0 +1,139 @@
+//! Connection-churn contract tests for the event-driven ingress I/O
+//! core (`util::netpoll`): senders connect/send/disconnect in waves
+//! while the receiver-side thread count stays bounded by the fixed
+//! worker pool, every message arrives exactly once, and per-producer
+//! FIFO holds within each connection.  The per-route decode/delivery
+//! contracts themselves are covered by the `channel::tcp` unit tests
+//! and `test_recompose`'s TCP relocation suite, which run on the same
+//! core.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use floe::channel::{ShardedQueue, TcpReceiver, TcpSender, Transport};
+use floe::message::Message;
+use floe::util::netpoll::IoCore;
+
+/// Threads of the net I/O core, by name (`floe-net-poll`,
+/// `floe-net-w*`), via the kernel's per-task comm files.
+#[cfg(target_os = "linux")]
+fn net_thread_count() -> usize {
+    let mut n = 0;
+    if let Ok(entries) = std::fs::read_dir("/proc/self/task") {
+        for e in entries.flatten() {
+            let comm = e.path().join("comm");
+            if let Ok(name) = std::fs::read_to_string(comm) {
+                if name.trim_end().starts_with("floe-net") {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+#[test]
+fn churn_waves_bounded_threads_fifo_zero_loss() {
+    const WAVES: usize = 3;
+    const SENDERS: usize = 48;
+    const MSGS: usize = 40;
+
+    let q = Arc::new(ShardedQueue::with_default_shards(16384));
+    let mut ports = HashMap::new();
+    ports.insert("in".to_string(), Arc::clone(&q));
+    let mut rx = TcpReceiver::start(0, ports).unwrap();
+    let ep = rx.endpoint();
+
+    // Poll thread + fixed worker pool; connection count must never
+    // show up in the thread count.
+    let bound = IoCore::global().workers() + 1;
+
+    for wave in 0..WAVES {
+        let handles: Vec<_> = (0..SENDERS)
+            .map(|s| {
+                let ep = ep.clone();
+                thread::spawn(move || {
+                    let tx = TcpSender::connect(&ep, "in").unwrap();
+                    for i in 0..MSGS {
+                        tx.send(Message::text(format!(
+                            "{wave}-{s}-{i}"
+                        )))
+                        .unwrap();
+                    }
+                    // Dropping tx disconnects: the wave churns the
+                    // whole connection set.
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        #[cfg(target_os = "linux")]
+        {
+            let n = net_thread_count();
+            assert!(
+                n <= bound,
+                "wave {wave}: {n} floe-net thread(s), bound {bound} \
+                 (thread count must track the pool, not connections)"
+            );
+        }
+    }
+
+    // Zero loss: every message of every wave arrives.
+    let total = WAVES * SENDERS * MSGS;
+    let mut texts = Vec::with_capacity(total);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while texts.len() < total {
+        if let Some(m) = q.try_pop() {
+            texts.push(m.as_text().unwrap().to_string());
+        } else {
+            assert!(
+                Instant::now() < deadline,
+                "delivery stalled at {}/{}",
+                texts.len(),
+                total
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    // FIFO per producer: each (wave, sender)'s indices arrive in
+    // order with nothing skipped or duplicated.
+    let mut last: HashMap<(usize, usize), usize> = HashMap::new();
+    for t in &texts {
+        let mut it = t.split('-');
+        let w: usize = it.next().unwrap().parse().unwrap();
+        let s: usize = it.next().unwrap().parse().unwrap();
+        let i: usize = it.next().unwrap().parse().unwrap();
+        match last.insert((w, s), i) {
+            None => assert_eq!(i, 0, "first message of {w}-{s}"),
+            Some(p) => assert_eq!(
+                i,
+                p + 1,
+                "per-producer FIFO violated for {w}-{s}"
+            ),
+        }
+    }
+    assert_eq!(last.len(), WAVES * SENDERS, "missing producers");
+    for ((w, s), p) in last {
+        assert_eq!(p, MSGS - 1, "missing tail for {w}-{s}");
+    }
+    rx.shutdown();
+}
+
+/// The core's telemetry gauges are registered and scrapable.
+#[test]
+fn ingress_core_gauges_exposed() {
+    let _ = IoCore::global();
+    floe::telemetry::touch();
+    let text = floe::telemetry::metrics().render();
+    for gauge in [
+        "floe_net_workers",
+        "floe_net_connections_registered",
+        "floe_net_connections_active",
+    ] {
+        assert!(text.contains(gauge), "missing {gauge} in:\n{text}");
+    }
+}

@@ -54,6 +54,11 @@ REQUIRED = {
         "ring_vs_mutex.batched.p8.speedup",
         "tcp_msgs_per_sec.single",
         "tcp_msgs_per_sec.batched",
+        "connection_sweep.workers",
+        "connection_sweep.s256.msgs_per_sec",
+        "connection_sweep.s256.net_threads",
+        "connection_sweep.s1024.msgs_per_sec",
+        "connection_sweep.s1024.net_threads",
         "codec_msgs_per_sec.encode",
         "codec_msgs_per_sec.decode",
         "telemetry_overhead.off",
