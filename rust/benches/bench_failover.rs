@@ -1,26 +1,31 @@
 //! Macro: self-healing cost.  A three-stage pipeline (src → work →
 //! sink) runs under fault tolerance with the worker isolated on its
-//! own container; the bench checkpoints, kills that container
-//! mid-stream and records the repair timeline:
+//! own container; the bench runs the repair timeline twice — once for
+//! a clean container **kill**, once for a 2 s heartbeat **partition**
+//! injected through the chaos layer — and records per scenario:
 //!
-//! * **detection** — kill to the lease expiry that files the
+//! * **detection** — failure onset to the lease expiry that files the
 //!   `FailureEvent` (bounded by `lease_interval × lease_missed_k`);
 //! * **repair** — lease expiry to the `ReplaceFailed` recomposition
 //!   landing the replacement on a live container;
-//! * **heal** — kill to a healed topology (detection + repair), the
+//! * **heal** — onset to a healed topology (detection + repair), the
 //!   window upstream senders bridge with retry;
 //! * **replayed** — buffered input restored out of the checkpoint.
 //!
-//! Traffic injected before the kill is drained and checkpointed;
-//! traffic injected after it flows through the repair, so the
-//! delivered count doubles as a zero-loss check.  Writes
-//! `BENCH_failover.json` at the repo root (same convention as
-//! `bench_channels` / `bench_elasticity`).
+//! The partition scenario differs from the kill in one essential way:
+//! the "failed" container is still running — its flakes keep
+//! processing until the repair fences the husk — so it measures the
+//! split-brain window, not just respawn latency.  Traffic injected
+//! before the failure is drained and checkpointed; traffic injected
+//! after it flows through the repair, so the delivered count doubles
+//! as a zero-loss check.  Writes `BENCH_failover.json` at the repo
+//! root (same convention as `bench_channels` / `bench_elasticity`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use floe::chaos::{self, FaultPlan, FaultSpec};
 use floe::coordinator::{Coordinator, FaultToleranceConfig, RuntimeOptions};
 use floe::error::Result;
 use floe::graph::{GraphBuilder, SplitMode};
@@ -33,6 +38,10 @@ const LEASE_MISSED_K: u32 = 3;
 const CHECKPOINT_INTERVAL_MS: u64 = 40;
 const PRE_KILL_MSGS: usize = 2000;
 const POST_KILL_MSGS: usize = 2000;
+/// Partition-scenario window: long enough that detection + repair
+/// complete while the husk is still network-isolated.
+const PARTITION_MS: u64 = 2000;
+const CHAOS_SEED: u64 = 0xBE4C_F10E;
 
 /// Sink counting non-landmark deliveries.
 struct CountingSink {
@@ -55,7 +64,23 @@ impl Pellet for CountingSink {
     }
 }
 
-fn main() {
+#[derive(Clone, Copy)]
+enum Failure {
+    Kill,
+    Partition,
+}
+
+struct Outcome {
+    detection_ms: f64,
+    repair_ms: f64,
+    heal_ms: f64,
+    replayed: usize,
+    injected: usize,
+    delivered: usize,
+    lost: usize,
+}
+
+fn run_scenario(mode: Failure) -> Outcome {
     let cloud = SimulatedCloud::new(48, Duration::ZERO);
     let registry = PelletRegistry::with_builtins();
     let delivered = Arc::new(AtomicUsize::new(0));
@@ -66,7 +91,7 @@ fn main() {
     let coord = Coordinator::new(ResourceManager::new(cloud), registry);
 
     // src + sink pack onto one 8-core container; `work` asks for all
-    // 8 cores so best-fit isolates it on the container we kill.
+    // 8 cores so best-fit isolates it on the container that fails.
     let mut g = GraphBuilder::new("bench-failover");
     g.pellet("src", "floe.builtin.Identity")
         .in_port("in")
@@ -92,17 +117,31 @@ fn main() {
     let run = coord.launch(g.build().unwrap(), options).unwrap();
     let doomed = run.container("work").unwrap();
 
-    // Healthy prefix, drained and checkpointed: the kill finds an
+    // Healthy prefix, drained and checkpointed: the failure finds an
     // empty worker queue, so the repair window is what the bench
     // isolates (not backlog replay time).
     for i in 0..PRE_KILL_MSGS {
         run.inject("src", "in", Message::text(format!("m{i}"))).unwrap();
     }
-    assert!(run.drain(Duration::from_secs(60)), "pre-kill drain failed");
+    assert!(run.drain(Duration::from_secs(60)), "pre-fail drain failed");
     assert!(run.checkpoint_now() > 0, "no flake checkpointed");
 
-    let killed_at = Instant::now();
-    doomed.kill();
+    let failed_at = Instant::now();
+    let guard = match mode {
+        Failure::Kill => {
+            doomed.kill();
+            None
+        }
+        Failure::Partition => Some(chaos::arm(FaultPlan::compile(
+            CHAOS_SEED,
+            FaultSpec::new().partition(
+                &doomed.id,
+                chaos::COORDINATOR,
+                0,
+                PARTITION_MS,
+            ),
+        ))),
+    };
     // Keep the stream hot through the outage: src is alive and its
     // logical edge to `work` must bridge the repair window.
     for i in 0..POST_KILL_MSGS {
@@ -110,9 +149,9 @@ fn main() {
     }
     let mut detection_ms = f64::NAN;
     let mut heal_ms = f64::NAN;
-    while killed_at.elapsed() < Duration::from_secs(30) {
+    while failed_at.elapsed() < Duration::from_secs(30) {
         if detection_ms.is_nan() && !run.failures().is_empty() {
-            detection_ms = killed_at.elapsed().as_secs_f64() * 1e3;
+            detection_ms = failed_at.elapsed().as_secs_f64() * 1e3;
         }
         let healed = !run.repairs().is_empty()
             && run
@@ -120,7 +159,7 @@ fn main() {
                 .map(|c| c.id != doomed.id && !c.is_dead())
                 .unwrap_or(false);
         if healed {
-            heal_ms = killed_at.elapsed().as_secs_f64() * 1e3;
+            heal_ms = failed_at.elapsed().as_secs_f64() * 1e3;
             break;
         }
         std::thread::sleep(Duration::from_micros(200));
@@ -128,7 +167,8 @@ fn main() {
     assert!(!detection_ms.is_nan(), "failure never detected");
     assert!(!heal_ms.is_nan(), "container never repaired");
     let repair_ms = heal_ms - detection_ms;
-    assert!(run.drain(Duration::from_secs(60)), "post-kill drain failed");
+    drop(guard); // heal the partition (no-op for the kill scenario)
+    assert!(run.drain(Duration::from_secs(60)), "post-fail drain failed");
 
     let repairs = run.repairs();
     assert_eq!(repairs.len(), 1);
@@ -144,14 +184,37 @@ fn main() {
     let got = delivered.load(Ordering::Relaxed);
     let lost = injected.saturating_sub(got);
     run.stop();
+    Outcome {
+        detection_ms,
+        repair_ms,
+        heal_ms,
+        replayed,
+        injected,
+        delivered: got,
+        lost,
+    }
+}
 
+fn main() {
+    let kill = run_scenario(Failure::Kill);
     println!(
-        "# self-healing: detection {detection_ms:.1} ms, repair \
-         {repair_ms:.1} ms, heal {heal_ms:.1} ms"
+        "# kill: detection {:.1} ms, repair {:.1} ms, heal {:.1} ms",
+        kill.detection_ms, kill.repair_ms, kill.heal_ms
     );
     println!(
-        "replayed {replayed} checkpointed messages; {got}/{injected} \
-         delivered ({lost} lost)"
+        "replayed {} checkpointed messages; {}/{} delivered ({} lost)",
+        kill.replayed, kill.delivered, kill.injected, kill.lost
+    );
+
+    let part = run_scenario(Failure::Partition);
+    println!(
+        "# partition ({PARTITION_MS} ms): detection {:.1} ms, repair \
+         {:.1} ms, heal {:.1} ms",
+        part.detection_ms, part.repair_ms, part.heal_ms
+    );
+    println!(
+        "replayed {} checkpointed messages; {}/{} delivered ({} lost)",
+        part.replayed, part.delivered, part.injected, part.lost
     );
 
     let json = format!(
@@ -159,11 +222,29 @@ fn main() {
          \"lease_interval_ms\": {LEASE_INTERVAL_MS},\n    \
          \"lease_missed_k\": {LEASE_MISSED_K},\n    \
          \"checkpoint_interval_ms\": {CHECKPOINT_INTERVAL_MS},\n    \
-         \"dedup\": true\n  }},\n  \"detection_ms\": {detection_ms:.3},\n  \
-         \"repair_ms\": {repair_ms:.3},\n  \"heal_ms\": {heal_ms:.3},\n  \
-         \"replayed_messages\": {replayed},\n  \"messages\": {{\n    \
-         \"injected\": {injected},\n    \"delivered\": {got},\n    \
-         \"lost\": {lost}\n  }}\n}}\n"
+         \"dedup\": true\n  }},\n  \
+         \"detection_ms\": {:.3},\n  \
+         \"repair_ms\": {:.3},\n  \"heal_ms\": {:.3},\n  \
+         \"replayed_messages\": {},\n  \"messages\": {{\n    \
+         \"injected\": {},\n    \"delivered\": {},\n    \
+         \"lost\": {}\n  }},\n  \"partition_heal\": {{\n    \
+         \"partition_ms\": {PARTITION_MS},\n    \
+         \"detection_ms\": {:.3},\n    \"repair_ms\": {:.3},\n    \
+         \"heal_ms\": {:.3},\n    \"replayed_messages\": {},\n    \
+         \"delivered\": {},\n    \"lost\": {}\n  }}\n}}\n",
+        kill.detection_ms,
+        kill.repair_ms,
+        kill.heal_ms,
+        kill.replayed,
+        kill.injected,
+        kill.delivered,
+        kill.lost,
+        part.detection_ms,
+        part.repair_ms,
+        part.heal_ms,
+        part.replayed,
+        part.delivered,
+        part.lost,
     );
     let root = std::env::var("CARGO_MANIFEST_DIR")
         .map(|d| format!("{d}/.."))

@@ -330,6 +330,16 @@ impl EndpointTransport {
             let d = *deadline
                 .get_or_insert_with(|| Instant::now() + REPAIR_WAIT);
             if Instant::now() >= d {
+                // A sink still closed after the whole repair window
+                // is a suspected partition / wedged repair — surface
+                // it to the failure detector before erroring out.
+                crate::coordinator::report_endpoint_stall(
+                    &self.addr.flake_id,
+                    &format!(
+                        "{}: no repair within {REPAIR_WAIT:?}",
+                        self.label
+                    ),
+                );
                 return Err(FloeError::Channel(format!(
                     "{} closed (no repair within {REPAIR_WAIT:?})",
                     self.label

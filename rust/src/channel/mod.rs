@@ -65,7 +65,9 @@ pub use endpoint::{
 pub use queue::{QueueClosed, SyncQueue};
 pub use ring::RingQueue;
 pub use sharded::{ShardedQueue, DEFAULT_SHARDS};
-pub use tcp::{TcpReceiver, TcpSender};
+pub use tcp::{
+    set_rx_idle_limit, set_write_stall_timeout, TcpReceiver, TcpSender,
+};
 
 /// Which primitive backs each [`ShardedQueue`] shard on the data plane.
 ///

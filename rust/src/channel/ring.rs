@@ -159,7 +159,12 @@ impl<T> RingQueue<T> {
         while self.pushing.load(Ordering::SeqCst) > 0 {
             std::hint::spin_loop();
         }
-        let mut seq = self.signal.lock().expect("ring signal poisoned");
+        // The signal mutex only guards a wakeup counter, so a panic
+        // in another holder leaves nothing inconsistent — recover
+        // from poisoning rather than cascading the panic into every
+        // thread that touches the queue afterwards.
+        let mut seq =
+            self.signal.lock().unwrap_or_else(|e| e.into_inner());
         *seq = seq.wrapping_add(1);
         self.not_full.notify_all();
         self.not_empty.notify_all();
@@ -494,7 +499,10 @@ impl<T> RingQueue<T> {
     #[inline]
     fn wake_pop(&self) {
         if self.pop_waiters.load(Ordering::SeqCst) > 0 {
-            let mut seq = self.signal.lock().expect("ring signal poisoned");
+            let mut seq = self
+                .signal
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
             *seq = seq.wrapping_add(1);
             self.not_empty.notify_all();
         }
@@ -504,7 +512,10 @@ impl<T> RingQueue<T> {
     #[inline]
     fn wake_push(&self) {
         if self.push_waiters.load(Ordering::SeqCst) > 0 {
-            let mut seq = self.signal.lock().expect("ring signal poisoned");
+            let mut seq = self
+                .signal
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
             *seq = seq.wrapping_add(1);
             self.not_full.notify_all();
         }
@@ -516,12 +527,13 @@ impl<T> RingQueue<T> {
     /// to the wait itself; the lock-free fast path records nothing.
     fn park_push(&self) {
         let stamp = telemetry::enabled().then(Instant::now);
-        let guard = self.signal.lock().expect("ring signal poisoned");
+        let guard =
+            self.signal.lock().unwrap_or_else(|e| e.into_inner());
         self.push_waiters.fetch_add(1, Ordering::SeqCst);
         let (_g, _) = self
             .not_full
             .wait_timeout(guard, PARK)
-            .expect("ring signal poisoned");
+            .unwrap_or_else(|e| e.into_inner());
         self.push_waiters.fetch_sub(1, Ordering::SeqCst);
         if let Some(t) = stamp {
             telemetry::hist_ring_push_wait()
@@ -540,12 +552,13 @@ impl<T> RingQueue<T> {
             }
             wait = wait.min(d - now);
         }
-        let guard = self.signal.lock().expect("ring signal poisoned");
+        let guard =
+            self.signal.lock().unwrap_or_else(|e| e.into_inner());
         self.pop_waiters.fetch_add(1, Ordering::SeqCst);
         let (_g, _) = self
             .not_empty
             .wait_timeout(guard, wait)
-            .expect("ring signal poisoned");
+            .unwrap_or_else(|e| e.into_inner());
         self.pop_waiters.fetch_sub(1, Ordering::SeqCst);
         if let Some(t) = stamp {
             telemetry::hist_ring_pop_wait()
@@ -567,6 +580,27 @@ mod tests {
     use super::*;
     use std::sync::Arc;
     use std::thread;
+
+    /// A panic while holding the signal mutex (wakeup counter only)
+    /// must not brick the ring: push, pop and close all recover from
+    /// the poison and the queue still drains.
+    #[test]
+    fn ring_survives_signal_poisoning() {
+        let q = Arc::new(RingQueue::new(4));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let _ = thread::spawn(move || {
+            let _g = q2.signal.lock().unwrap();
+            panic!("poison the signal mutex");
+        })
+        .join();
+        assert!(q.signal.is_poisoned());
+        q.push(2).unwrap();
+        assert_eq!(q.pop().unwrap(), 1);
+        assert_eq!(q.pop().unwrap(), 2);
+        q.close();
+        assert_eq!(q.push(3), Err(QueueClosed));
+    }
 
     #[test]
     fn fifo_order_and_capacity_rounding() {

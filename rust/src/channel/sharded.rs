@@ -242,7 +242,14 @@ impl<T> ShardedQueue<T> {
     /// bounded wait, so a missed wakeup costs milliseconds, never a hang.
     fn bump(&self) {
         if self.waiters.load(Ordering::Acquire) > 0 {
-            let mut g = self.signal.lock().expect("sharded signal poisoned");
+            // The signal mutex only guards a wakeup counter — a
+            // panic in some other holder cannot leave it in a bad
+            // state, so recover from poisoning instead of cascading
+            // the panic into every producer.
+            let mut g = self
+                .signal
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
             *g = g.wrapping_add(1);
             self.not_empty.notify_all();
         }
@@ -372,7 +379,10 @@ impl<T> ShardedQueue<T> {
             // The wait is bounded: a producer may observe waiters == 0
             // just before this registration becomes visible and skip its
             // wakeup, so never sleep unboundedly on the condvar alone.
-            let guard = self.signal.lock().expect("sharded signal poisoned");
+            let guard = self
+                .signal
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
             self.waiters.fetch_add(1, Ordering::AcqRel);
             let taken = self.sweep_into(out, max);
             if taken > 0 {
@@ -391,7 +401,7 @@ impl<T> ShardedQueue<T> {
             let (reacquired, _timed_out) = self
                 .not_empty
                 .wait_timeout(guard, wait)
-                .expect("sharded signal poisoned");
+                .unwrap_or_else(|e| e.into_inner());
             drop(reacquired);
             self.waiters.fetch_sub(1, Ordering::AcqRel);
         }
@@ -467,7 +477,8 @@ impl<T> ShardedQueue<T> {
         for s in &self.shards {
             s.close();
         }
-        let mut g = self.signal.lock().expect("sharded signal poisoned");
+        let mut g =
+            self.signal.lock().unwrap_or_else(|e| e.into_inner());
         *g = g.wrapping_add(1);
         self.not_empty.notify_all();
     }
@@ -493,6 +504,31 @@ mod tests {
     use super::*;
     use std::sync::Arc;
     use std::thread;
+
+    /// A thread that panics while holding the signal mutex must not
+    /// brick the queue: the lock only guards a wakeup counter, so
+    /// later pushes, pops and close recover from the poison and the
+    /// queue still drains.
+    #[test]
+    fn queue_survives_signal_poisoning() {
+        let q = Arc::new(ShardedQueue::new(2, 64));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let _ = thread::spawn(move || {
+            let _g = q2.signal.lock().unwrap();
+            panic!("poison the signal mutex");
+        })
+        .join();
+        assert!(q.signal.is_poisoned());
+        q.push(2).unwrap();
+        assert_eq!(q.pop().unwrap(), 1);
+        assert_eq!(
+            q.pop_timeout(Duration::from_millis(200)).unwrap(),
+            Some(2)
+        );
+        q.close();
+        assert!(q.push(3).is_err());
+    }
 
     #[test]
     fn single_producer_fifo_order() {

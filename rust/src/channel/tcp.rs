@@ -1,10 +1,20 @@
 //! TCP transport between flakes on different VMs/containers.
 //!
-//! Wire format per message frame:
-//! `[u32 total_len][u16 port_len][port name bytes][message bytes]` with the
-//! message encoded by [`Message::encode`].  A [`TcpReceiver`] listens on the
-//! flake's endpoint, decodes frames and pushes them into the named input
-//! port queue; a [`TcpSender`] holds one connection per (sink, port) pair.
+//! Wire format per message frame (current, checksummed):
+//! `[u32 total_len][u16 flags|port_len][port name bytes][message
+//! bytes][u32 crc32]` with the message encoded by [`Message::encode`]
+//! and the CRC-32 (IEEE) covering everything between the length
+//! prefix and the trailer.  The high bit of the `u16` port-length
+//! field ([`CHECKSUM_FLAG`]) marks the checksummed format; frames
+//! with the bit clear are the legacy
+//! `[u32 total_len][u16 port_len][port][message]` layout and are
+//! still accepted, so mixed-version senders interoperate.  A
+//! checksum mismatch is counted, the frame is dropped, and the
+//! connection is closed — corruption surfaces as
+//! drop-frame-and-reconnect, never as a misparsed message.  A
+//! [`TcpReceiver`] listens on the flake's endpoint, decodes frames
+//! and pushes them into the named input port queue; a [`TcpSender`]
+//! holds one connection per (sink, port) pair.
 //!
 //! Both directions are batch-aware and allocation-slim:
 //! [`TcpSender::send_batch`] encodes every frame into a reusable
@@ -54,12 +64,19 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::channel::{EndpointAddr, EndpointTable, ShardedQueue, Transport};
+use crate::chaos::FrameFault;
 use crate::error::{FloeError, Result};
 use crate::message::Message;
+use crate::util::crc::crc32;
 use crate::util::netpoll::{source_fd, Conn, IoCore, Serve, Wake};
+use crate::util::rng::Rng;
 
 /// Hard ceiling on one frame (64 MiB) — rejects corrupt length prefixes.
 const MAX_FRAME: usize = 64 << 20;
+
+/// High bit of the wire `u16` port-length field: set on frames that
+/// carry the CRC-32 trailer.  Legacy frames (bit clear) still decode.
+const CHECKSUM_FLAG: u16 = 0x8000;
 
 /// Receive chunk size: one read syscall can carry many small frames.
 const READ_CHUNK: usize = 64 << 10;
@@ -85,6 +102,70 @@ const SEND_BACKOFF_CAP: Duration = Duration::from_millis(100);
 
 /// Bound on draining the old connection during a logical rebind.
 const REBIND_DRAIN_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Default read-side idle deadline for data connections (ms): a
+/// connection that delivers no bytes for this long is closed and its
+/// slot reclaimed, so a half-open peer (crashed without FIN, wedged
+/// mid-frame) cannot hold a registration forever.  Senders recover
+/// transparently: the reuse-time staleness probe below notices the
+/// close before the next batch is written.
+const RX_IDLE_DEFAULT_MS: u64 = 60_000;
+
+static RX_IDLE_LIMIT_MS: AtomicU64 = AtomicU64::new(RX_IDLE_DEFAULT_MS);
+
+/// Override the read-side idle deadline process-wide (`None`
+/// disables it).  Tests shrink it to exercise half-open reaping.
+pub fn set_rx_idle_limit(limit: Option<Duration>) {
+    let ms = limit.map_or(0, |d| (d.as_millis() as u64).max(1));
+    RX_IDLE_LIMIT_MS.store(ms, Ordering::SeqCst);
+}
+
+fn rx_idle_limit_ms() -> u64 {
+    RX_IDLE_LIMIT_MS.load(Ordering::Relaxed)
+}
+
+/// Default bound on a blocking batch write (ms).  A peer that
+/// accepted but never reads (half-open) eventually fills both kernel
+/// buffers and wedges `write_all` forever; this surfaces the stall as
+/// an ordinary retryable send error instead.  Generous, so genuine
+/// sink backpressure never trips it.
+const WRITE_STALL_DEFAULT_MS: u64 = 30_000;
+
+static WRITE_STALL_MS: AtomicU64 = AtomicU64::new(WRITE_STALL_DEFAULT_MS);
+
+/// Override the sender write-stall bound process-wide (`None`
+/// disables it).
+pub fn set_write_stall_timeout(limit: Option<Duration>) {
+    let ms = limit.map_or(0, |d| (d.as_millis() as u64).max(1));
+    WRITE_STALL_MS.store(ms, Ordering::SeqCst);
+}
+
+fn write_stall_timeout() -> Option<Duration> {
+    match WRITE_STALL_MS.load(Ordering::Relaxed) {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    }
+}
+
+/// Reusing a cached connection that has sat idle at least this long
+/// first probes the read side for a peer close (EOF/reset), so a
+/// batch is never written "successfully" into a socket the receiver
+/// already idle-closed — that write would be silently lost.  Busy
+/// senders never probe.
+const STALE_PROBE_IDLE: Duration = Duration::from_secs(1);
+
+/// Per-process sender counter: seeds each sender's retry-jitter
+/// stream, so jitter is deterministic in sender creation order (and,
+/// with a chaos plan armed, in the plan seed).
+static SENDER_SEQ: AtomicU64 = AtomicU64::new(1);
+
+fn sender_jitter_rng() -> Rng {
+    let n = SENDER_SEQ.fetch_add(1, Ordering::Relaxed);
+    let seed = crate::chaos::plan()
+        .map(|p| p.seed())
+        .unwrap_or(0x5EED_BAC0_FF5E_7u64);
+    Rng::new(seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
 
 /// How a receiver maps a frame's port name to a sink queue.
 enum RxRoute {
@@ -175,6 +256,8 @@ impl TcpReceiver {
             idle: Arc::clone(&idle),
             epoch,
             group,
+            accepts: 0,
+            link: addr.to_string(),
         };
         // tick = true: the idle-teardown clock runs on the poller's
         // housekeeping ticks, not on a dedicated timer thread.
@@ -236,6 +319,11 @@ struct RxListener {
     idle: Arc<IdleState>,
     epoch: Instant,
     group: u64,
+    /// Lifetime accept count — the index stream for chaos
+    /// connection-refusal decisions.
+    accepts: u64,
+    /// Stable link label (`host:port`) for chaos decisions.
+    link: String,
 }
 
 impl RxListener {
@@ -245,6 +333,16 @@ impl RxListener {
         loop {
             match self.listener.accept() {
                 Ok((stream, _)) => {
+                    let accept_idx = self.accepts;
+                    self.accepts += 1;
+                    // Chaos: refuse = accept-then-drop; the sender
+                    // sees an immediate close and retries.
+                    if crate::chaos::rx_refuse_fault(
+                        &self.link, accept_idx,
+                    ) {
+                        drop(stream);
+                        continue;
+                    }
                     if stream.set_nonblocking(true).is_err() {
                         continue;
                     }
@@ -259,13 +357,16 @@ impl RxListener {
                         acc: Vec::with_capacity(READ_CHUNK),
                         chunk: vec![0u8; READ_CHUNK],
                         deliveries: Vec::new(),
+                        last_read_ms: self.epoch.elapsed().as_millis()
+                            as u64,
                     };
                     // A failed registration drops the state machine,
                     // whose Drop keeps the idle accounting balanced.
-                    let _ = core.register(
+                    // Slow ticks drive the half-open idle deadline
+                    // without a per-connection rearm every poll round.
+                    let _ = core.register_slow(
                         self.group,
                         fd,
-                        false,
                         Box::new(conn),
                     );
                 }
@@ -350,12 +451,52 @@ struct RxConn {
     chunk: Vec<u8>,
     /// Reusable per-port delivery groups.
     deliveries: Vec<(String, Vec<Message>)>,
+    /// ms since `epoch` of the last successful read — the per
+    /// connection half-open idle clock, checked on slow ticks.
+    last_read_ms: u64,
+}
+
+impl RxConn {
+    /// Slow-tick housekeeping: reap the connection once it has
+    /// delivered no bytes for the process-wide idle limit.  A peer
+    /// that crashed without a FIN (half-open) or wedged mid-frame
+    /// otherwise holds its poll slot forever.
+    fn tick(&self) -> Serve {
+        let limit = rx_idle_limit_ms();
+        if limit == 0 {
+            return Serve::Continue;
+        }
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        if now_ms.saturating_sub(self.last_read_ms) >= limit {
+            crate::telemetry::ctr_tcp_idle_closes().inc();
+            crate::log_warn!(
+                "tcp: closing half-open connection (no bytes for \
+                 {limit} ms{})",
+                if self.acc.is_empty() {
+                    ""
+                } else {
+                    ", partial frame pending"
+                }
+            );
+            return Serve::Close;
+        }
+        Serve::Continue
+    }
 }
 
 impl Conn for RxConn {
-    fn wake(&mut self, _w: Wake, _core: &IoCore) -> Serve {
+    fn wake(&mut self, w: Wake, _core: &IoCore) -> Serve {
         if self.stop.load(Ordering::SeqCst) {
             return Serve::Close;
+        }
+        if let Wake::Tick = w {
+            return self.tick();
+        }
+        // Chaos: a read stall leaves the socket readable but unread —
+        // the injected half of a half-open link.
+        if crate::chaos::rx_read_stalled() {
+            thread::sleep(Duration::from_millis(1));
+            return Serve::Continue;
         }
         for _ in 0..READ_BUDGET {
             let n = match self.stream.read(&mut self.chunk) {
@@ -388,6 +529,8 @@ impl Conn for RxConn {
                 Err(_) => return Serve::Close, // peer reset
             };
             self.acc.extend_from_slice(&self.chunk[..n]);
+            self.last_read_ms =
+                self.epoch.elapsed().as_millis() as u64;
             if crate::telemetry::enabled() {
                 crate::telemetry::ctr_tcp_rx_bytes().add(n as u64);
             }
@@ -559,16 +702,42 @@ fn decode_and_deliver(
             break; // incomplete frame; wait for more bytes
         }
         let frame = &acc[consumed + 4..consumed + 4 + total];
-        let port_len =
-            u16::from_le_bytes([frame[0], frame[1]]) as usize;
-        if 2 + port_len > frame.len() {
+        let raw = u16::from_le_bytes([frame[0], frame[1]]);
+        let checked = raw & CHECKSUM_FLAG != 0;
+        let port_len = (raw & !CHECKSUM_FLAG) as usize;
+        // Checksummed frames verify the CRC-32 trailer before any
+        // byte is interpreted; legacy frames (flag clear) skip it.
+        let body_end = if checked {
+            if total < 2 + 4 {
+                frame_err = Some(FloeError::Channel(
+                    "tcp: checksummed frame too short".into(),
+                ));
+                break;
+            }
+            let end = frame.len() - 4;
+            let want = u32::from_le_bytes(
+                frame[end..].try_into().expect("4 bytes"),
+            );
+            if crc32(&frame[..end]) != want {
+                crate::telemetry::ctr_tcp_corrupt_frames().inc();
+                frame_err = Some(FloeError::Channel(
+                    "tcp: frame checksum mismatch".into(),
+                ));
+                break;
+            }
+            end
+        } else {
+            frame.len()
+        };
+        if 2 + port_len > body_end {
             frame_err = Some(FloeError::Channel(
                 "tcp: bad port length".into(),
             ));
             break;
         }
         let port = &frame[2..2 + port_len];
-        let msg = match Message::decode(&frame[2 + port_len..]) {
+        let msg = match Message::decode(&frame[2 + port_len..body_end])
+        {
             Ok(m) => m,
             Err(e) => {
                 frame_err = Some(e);
@@ -666,6 +835,36 @@ struct SenderInner {
     seen_version: u64,
     stream: Option<TcpStream>,
     scratch: Vec<u8>,
+    /// When the cached connection last carried a successful write —
+    /// drives the reuse-time staleness probe.
+    last_write: Instant,
+    /// Seeded retry-jitter stream (see [`sender_jitter_rng`]).
+    jitter: Rng,
+    /// Chaos frame / batch indices (monotone per sender) and the
+    /// stash of the previous clean frame for reorder replays.
+    chaos_frame: u64,
+    chaos_batch: u64,
+    chaos_stash: Vec<u8>,
+}
+
+impl SenderInner {
+    fn new(
+        endpoint: Option<String>,
+        seen_version: u64,
+        stream: Option<TcpStream>,
+    ) -> SenderInner {
+        SenderInner {
+            endpoint,
+            seen_version,
+            stream,
+            scratch: Vec::with_capacity(4096),
+            last_write: Instant::now(),
+            jitter: sender_jitter_rng(),
+            chaos_frame: 0,
+            chaos_batch: 0,
+            chaos_stash: Vec::new(),
+        }
+    }
 }
 
 /// Sends framed messages to one sink flake's input port over TCP.
@@ -680,15 +879,15 @@ impl TcpSender {
     pub fn connect(endpoint: &str, port_name: &str) -> Result<TcpSender> {
         let stream = TcpStream::connect(endpoint)?;
         stream.set_nodelay(true)?;
+        stream.set_write_timeout(write_stall_timeout())?;
         Ok(TcpSender {
             target: SenderTarget::Fixed(endpoint.to_string()),
             port_name: port_name.to_string(),
-            inner: Mutex::new(SenderInner {
-                endpoint: Some(endpoint.to_string()),
-                seen_version: 0,
-                stream: Some(stream),
-                scratch: Vec::with_capacity(4096),
-            }),
+            inner: Mutex::new(SenderInner::new(
+                Some(endpoint.to_string()),
+                0,
+                Some(stream),
+            )),
         })
     }
 
@@ -709,30 +908,36 @@ impl TcpSender {
             })?;
         let stream = TcpStream::connect(&endpoint)?;
         stream.set_nodelay(true)?;
+        stream.set_write_timeout(write_stall_timeout())?;
         Ok(TcpSender {
             target: SenderTarget::Logical {
                 table,
                 flake_id: addr.flake_id.clone(),
             },
             port_name: addr.port.clone(),
-            inner: Mutex::new(SenderInner {
-                endpoint: Some(endpoint),
+            inner: Mutex::new(SenderInner::new(
+                Some(endpoint),
                 seen_version,
-                stream: Some(stream),
-                scratch: Vec::with_capacity(4096),
-            }),
+                Some(stream),
+            )),
         })
     }
 
     /// Append one frame, encoding the message straight into `out`
     /// (no intermediate body buffer): the length prefix is written as a
     /// placeholder and backpatched once the encoded size is known.
+    /// Emits the checksummed format — [`CHECKSUM_FLAG`] set in the
+    /// port-length field, CRC-32 trailer over flags + port + message.
     fn frame_into(port_name: &str, msg: &Message, out: &mut Vec<u8>) {
         let len_at = out.len();
         out.extend_from_slice(&[0u8; 4]); // total-length placeholder
-        out.extend_from_slice(&(port_name.len() as u16).to_le_bytes());
+        out.extend_from_slice(
+            &(port_name.len() as u16 | CHECKSUM_FLAG).to_le_bytes(),
+        );
         out.extend_from_slice(port_name.as_bytes());
         msg.encode_into(out);
+        let crc = crc32(&out[len_at + 4..]);
+        out.extend_from_slice(&crc.to_le_bytes());
         let total = (out.len() - len_at - 4) as u32;
         out[len_at..len_at + 4].copy_from_slice(&total.to_le_bytes());
     }
@@ -744,10 +949,38 @@ impl TcpSender {
         let inner = &mut *g;
         refresh_endpoint(&self.target, inner, true)?;
         inner.scratch.clear();
-        for msg in msgs {
-            Self::frame_into(&self.port_name, msg, &mut inner.scratch);
+        let (cut_before, cut_after) = if crate::chaos::armed() {
+            self.frame_with_chaos(inner, msgs)
+        } else {
+            for msg in msgs {
+                Self::frame_into(
+                    &self.port_name,
+                    msg,
+                    &mut inner.scratch,
+                );
+            }
+            (false, false)
+        };
+        if cut_before {
+            // Injected drop/reset: sever the connection *before* the
+            // write so the retry path resends the whole batch in
+            // order.  The drain handshake keeps the old connection's
+            // tail from racing the retry's frames at the sink.
+            if let Some(s) = inner.stream.take() {
+                drain_connection(s);
+            }
         }
         let result = write_frames(&self.target, inner);
+        if cut_after && result.is_ok() {
+            // Injected corruption: the receiver closes on detection,
+            // so retire this connection in order (drain returns as
+            // soon as the receiver's close lands) and let the next
+            // batch reconnect fresh rather than write into a socket
+            // that is already reset-bound.
+            if let Some(s) = inner.stream.take() {
+                drain_connection(s);
+            }
+        }
         if result.is_ok() && crate::telemetry::enabled() {
             crate::telemetry::ctr_tcp_tx_bytes()
                 .add(inner.scratch.len() as u64);
@@ -758,6 +991,98 @@ impl TcpSender {
             inner.scratch.shrink_to(SCRATCH_KEEP);
         }
         result
+    }
+
+    /// Frame `msgs` while consulting the armed fault plan, mutating
+    /// the scratch buffer in place.  Returns `(cut_before,
+    /// cut_after)`: cut the connection before the write (drop /
+    /// reset — the retry resends the batch in order) and/or after it
+    /// (corruption — the receiver is about to close its end anyway).
+    ///
+    /// Fault mechanics, chosen so the system-level guarantees stay
+    /// checkable (zero loss, per-producer FIFO modulo duplicates):
+    ///
+    /// * **drop / reset** — drain-cut the connection; the whole batch
+    ///   is retried in order.  Loss would only occur if retries were
+    ///   also exhausted, which the tests treat as a failure.
+    /// * **delay** — sleep before the write (stretches the batch's
+    ///   latency, reordering it against *other* producers only).
+    /// * **duplicate** — the frame is appended twice; sinks dedupe on
+    ///   `Message::seq`.
+    /// * **reorder** — a *stale retransmit*: the previous clean frame
+    ///   is replayed before the current one, modelling a late
+    ///   duplicate from an earlier connection.  (Swapping two fresh
+    ///   frames instead would make the watermark dedup filter drop
+    ///   the older one — genuine loss, not reordering.)
+    /// * **corrupt** — a *corrupted extra copy* of the frame (one
+    ///   byte past its length prefix flipped after the CRC trailer
+    ///   was computed, so the checksum check is guaranteed to fire)
+    ///   is transmitted after the whole clean batch.  The receiver
+    ///   decodes every clean frame, detects the corruption and closes
+    ///   the connection; the sender drain-cuts afterwards so the next
+    ///   batch starts on a fresh connection.  Corrupting the frame
+    ///   *in place* instead would silently lose it: the write
+    ///   succeeds, so the sender never retries.
+    fn frame_with_chaos(
+        &self,
+        inner: &mut SenderInner,
+        msgs: &[Message],
+    ) -> (bool, bool) {
+        let link = self.describe();
+        let batch_idx = inner.chaos_batch;
+        inner.chaos_batch += 1;
+        let mut cut_before =
+            crate::chaos::tx_reset_fault(&link, batch_idx);
+        let mut corrupt_tail: Vec<u8> = Vec::new();
+        for msg in msgs {
+            let idx = inner.chaos_frame;
+            inner.chaos_frame += 1;
+            let start = inner.scratch.len();
+            Self::frame_into(&self.port_name, msg, &mut inner.scratch);
+            let flen = inner.scratch.len() - start;
+            let fault = crate::chaos::tx_frame_fault(&link, idx);
+            if let FrameFault::Reorder = fault {
+                if !inner.chaos_stash.is_empty() {
+                    // Splice the stale frame in *before* the current
+                    // one: take current out, append stash, restore.
+                    let cur = inner.scratch.split_off(start);
+                    inner
+                        .scratch
+                        .extend_from_slice(&inner.chaos_stash);
+                    inner.scratch.extend_from_slice(&cur);
+                }
+            }
+            // Stash the clean frame for a future reorder replay.
+            let end = inner.scratch.len();
+            inner.chaos_stash.clear();
+            inner
+                .chaos_stash
+                .extend_from_slice(&inner.scratch[end - flen..end]);
+            match fault {
+                FrameFault::None | FrameFault::Reorder => {}
+                FrameFault::Drop => cut_before = true,
+                FrameFault::Delay(ms) => {
+                    thread::sleep(Duration::from_millis(ms));
+                }
+                FrameFault::Duplicate => {
+                    inner.scratch.extend_from_within(end - flen..end);
+                }
+                FrameFault::Corrupt(salt) => {
+                    let at = corrupt_tail.len();
+                    corrupt_tail
+                        .extend_from_slice(&inner.scratch[end - flen..end]);
+                    // Flip a byte past the length prefix (corrupting
+                    // the prefix itself would desync framing — a
+                    // different failure mode).
+                    let span = flen - 4;
+                    corrupt_tail[at + 4 + (salt as usize % span)] ^=
+                        0x20;
+                }
+            }
+        }
+        let cut_after = !corrupt_tail.is_empty();
+        inner.scratch.extend_from_slice(&corrupt_tail);
+        (cut_before, cut_after)
     }
 }
 
@@ -874,15 +1199,27 @@ fn write_frames(
                 None => attempt >= SEND_ATTEMPTS,
             };
             if give_up {
+                // A logical sink still unreachable after the full
+                // repair-bridging deadline is a suspected partition:
+                // surface it to the failure detector (the lease path
+                // cannot see a sender-side stall on its own).
+                if let SenderTarget::Logical { flake_id, .. } = target
+                {
+                    crate::coordinator::report_endpoint_stall(
+                        flake_id,
+                        &format!(
+                            "send deadline expired after {attempt} \
+                             attempts: {last_err}"
+                        ),
+                    );
+                }
                 return Err(FloeError::Channel(format!(
                     "tcp: giving up after {attempt} attempts: \
                      {last_err}"
                 )));
             }
             crate::telemetry::ctr_tcp_reconnects().inc();
-            let backoff =
-                Duration::from_millis(1u64 << attempt.min(10));
-            thread::sleep(backoff.min(SEND_BACKOFF_CAP));
+            thread::sleep(retry_backoff(attempt, &mut inner.jitter));
             // The old connection is already dead; no drain handshake.
             inner.seen_version = 0; // force a fresh resolve
             if let Err(e) = refresh_endpoint(target, inner, false) {
@@ -896,10 +1233,28 @@ fn write_frames(
             last_err = "endpoint unresolved".to_string();
             continue;
         };
+        if let Some(s) = inner.stream.as_mut() {
+            // Reuse-time staleness probe: an idle connection may have
+            // been closed by the receiver (idle deadline, restart) —
+            // a write into it would "succeed" into a reset-bound
+            // socket and be lost.  One nonblocking read detects the
+            // EOF/reset first.
+            if attempt == 1
+                && inner.last_write.elapsed() >= STALE_PROBE_IDLE
+                && stream_stale(s)
+            {
+                crate::log_debug!(
+                    "tcp: cached connection to {endpoint} went stale \
+                     while idle; reconnecting"
+                );
+                inner.stream = None;
+            }
+        }
         if inner.stream.is_none() {
             match TcpStream::connect(&endpoint) {
                 Ok(s) => {
                     let _ = s.set_nodelay(true);
+                    let _ = s.set_write_timeout(write_stall_timeout());
                     inner.stream = Some(s);
                 }
                 Err(e) => {
@@ -911,7 +1266,10 @@ fn write_frames(
         }
         let s = inner.stream.as_mut().expect("just set");
         match s.write_all(&inner.scratch).and_then(|_| s.flush()) {
-            Ok(()) => return Ok(()),
+            Ok(()) => {
+                inner.last_write = Instant::now();
+                return Ok(());
+            }
             Err(e) => {
                 crate::log_debug!(
                     "tcp send to {endpoint} failed ({e}), retrying"
@@ -921,6 +1279,41 @@ fn write_frames(
             }
         }
     }
+}
+
+/// Exponential backoff with equal jitter: `base/2 + uniform(0 ..=
+/// base/2)` where `base` doubles per attempt up to
+/// [`SEND_BACKOFF_CAP`].  Unjittered, every sender cut by the same
+/// event retries in lockstep and hammers the recovering sink in
+/// synchronized waves; the per-sender seeded stream keeps runs
+/// reproducible under a fixed chaos seed.
+fn retry_backoff(attempt: usize, jitter: &mut Rng) -> Duration {
+    let cap = SEND_BACKOFF_CAP.as_millis() as u64;
+    let base = (1u64 << attempt.min(10)).min(cap);
+    let half = base / 2;
+    Duration::from_millis(half + jitter.below(base - half + 1))
+}
+
+/// Probe a cached idle connection for a silent peer close: a
+/// nonblocking read returns `WouldBlock` on a healthy idle socket,
+/// `Ok(0)` after a FIN and an error after a reset.  (Receivers never
+/// send application bytes, so `Ok(n)` only occurs on protocol abuse —
+/// treated as healthy and left to the write path.)
+fn stream_stale(s: &mut TcpStream) -> bool {
+    if s.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 16];
+    let stale = match s.read(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    if s.set_nonblocking(false).is_err() {
+        return true;
+    }
+    stale
 }
 
 impl Transport for TcpSender {
@@ -982,6 +1375,64 @@ mod tests {
         assert_eq!(a.key.as_deref(), Some("k"));
         let b = q.pop().unwrap();
         assert_eq!(b.as_f32s(), Some(&[1.0f32, 2.0, 3.0][..]));
+        rx.shutdown();
+    }
+
+    /// Wire compatibility: a legacy frame (no [`CHECKSUM_FLAG`], no
+    /// CRC trailer) hand-built over a raw socket still decodes and
+    /// delivers — mixed-version senders interoperate.
+    #[test]
+    fn legacy_unchecksummed_frame_still_decodes() {
+        let (mut rx, q, ep) = start_pair();
+        let body = Message::text("old-wire").encode();
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&[0u8; 4]);
+        frame.extend_from_slice(&(2u16).to_le_bytes()); // no flag
+        frame.extend_from_slice(b"in");
+        frame.extend_from_slice(&body);
+        let total = (frame.len() - 4) as u32;
+        frame[..4].copy_from_slice(&total.to_le_bytes());
+        let mut s = TcpStream::connect(&ep).unwrap();
+        s.write_all(&frame).unwrap();
+        s.flush().unwrap();
+        let m = q.pop().unwrap();
+        assert_eq!(m.as_text(), Some("old-wire"));
+        rx.shutdown();
+    }
+
+    /// A corrupted checksummed frame is detected (counter bumped),
+    /// dropped before any byte is interpreted, and the connection is
+    /// closed; frames decoded before the corruption still deliver and
+    /// a fresh connection keeps working.
+    #[test]
+    fn corrupt_frame_detected_and_dropped() {
+        let (mut rx, q, ep) = start_pair();
+        let before =
+            crate::telemetry::ctr_tcp_corrupt_frames().get();
+        let mut buf = Vec::new();
+        TcpSender::frame_into("in", &Message::text("good"), &mut buf);
+        let cut = buf.len();
+        TcpSender::frame_into("in", &Message::text("evil"), &mut buf);
+        // Flip a payload byte of the second frame, past its prefix.
+        buf[cut + 4 + 2] ^= 0xFF;
+        let mut s = TcpStream::connect(&ep).unwrap();
+        s.write_all(&buf).unwrap();
+        s.flush().unwrap();
+        // The clean prefix frame delivers...
+        assert_eq!(q.pop().unwrap().as_text(), Some("good"));
+        // ...the corrupt one never does, and is counted.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while crate::telemetry::ctr_tcp_corrupt_frames().get()
+            == before
+        {
+            assert!(Instant::now() < deadline, "corruption uncounted");
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(q.is_empty(), "corrupt frame was delivered");
+        // The receiver cut the connection; a new one still serves.
+        let tx = TcpSender::connect(&ep, "in").unwrap();
+        tx.send(Message::text("after")).unwrap();
+        assert_eq!(q.pop().unwrap().as_text(), Some("after"));
         rx.shutdown();
     }
 

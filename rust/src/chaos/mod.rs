@@ -1,0 +1,651 @@
+//! Deterministic fault injection over the network substrate.
+//!
+//! Every failover test before this module killed a container cleanly;
+//! nothing ever dropped, delayed, duplicated, corrupted, or
+//! partitioned a byte in flight.  This module is the adversary: a
+//! [`FaultPlan`] compiled from a seed + [`FaultSpec`] into an *exact*
+//! schedule of faults, consulted by the transport seams
+//! ([`crate::channel::TcpSender`], the `RxConn`/`RxListener` state
+//! machines, [`crate::container::Container::heartbeat`]) through the
+//! process-global hook below.
+//!
+//! Determinism is the whole point: every frame-level decision is a
+//! pure function of `(seed, link, frame_index)` — independent of
+//! thread interleaving, wall clock, and batch boundaries — so a
+//! failing run reproduces from its printed seed alone, and the
+//! schedule byte-serializes for property tests
+//! ([`FaultPlan::schedule_bytes`]).  Time-window faults (partitions,
+//! read stalls) are relative to the instant the plan was armed.
+//!
+//! The hook costs one relaxed atomic load when no plan is armed; the
+//! hot path stays untouched in production.
+//!
+//! Fault semantics (chosen so the suite can assert *exact* outcomes
+//! against the at-least-once + dedup delivery contract):
+//!
+//! * **drop** — the frame's first transmission is lost with its
+//!   connection: the sender cuts (with a drain handshake, so earlier
+//!   frames finish delivery first) and the retry loop resends the
+//!   frame on a fresh connection.  Zero loss, per-producer FIFO.
+//! * **delay** — the sender stalls `delay_ms` before the write.
+//! * **duplicate** — the frame is transmitted twice back-to-back; the
+//!   receiver-side dedup watermark drops the echo.
+//! * **reorder** — a stale copy of the *previous* frame is
+//!   retransmitted after the current one (the only reordering a
+//!   connection-oriented transport can exhibit: a late replay across
+//!   a reconnect).  The dedup watermark absorbs it.
+//! * **corrupt** — one byte of the framed bytes is flipped after the
+//!   checksum trailer is computed; the receiver detects the mismatch,
+//!   counts it, drops the frame, and closes the connection
+//!   (drop-frame-and-reconnect, never a misparse).
+//! * **reset** — the sender's connection is torn down abruptly before
+//!   a batch; the retry loop reconnects.
+//! * **refuse** — the listener accepts and immediately closes (a
+//!   crashing peer); the sender's write fails and retries.
+//! * **read stall** — receivers stop reading for a window (a
+//!   half-open peer: accepted, never reads); kernel buffers absorb
+//!   in-flight bytes and the sender's write-stall timeout bounds the
+//!   blocking write.
+//! * **partition** — a container-pair window during which heartbeats
+//!   between the pair freeze (the coordinator side is
+//!   [`COORDINATOR`]): lease expiry driven by *delayed* beats from a
+//!   live husk, not only dead ones.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+use crate::util::rng::Rng;
+
+/// Wildcard endpoint for partition windows: matches any container.
+pub const ANY: &str = "*";
+
+/// The coordinator's identity in a partition window — pairing a
+/// container with this stalls its heartbeat as observed by the
+/// failure detector.
+pub const COORDINATOR: &str = "@coordinator";
+
+// ---------------------------------------------------------------------------
+// Spec
+// ---------------------------------------------------------------------------
+
+/// A container-pair partition window, in milliseconds since the plan
+/// was armed.  Sides match unordered; [`ANY`] is a wildcard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionSpec {
+    pub a: String,
+    pub b: String,
+    pub start_ms: u64,
+    pub dur_ms: u64,
+}
+
+/// Declarative fault mix.  Probabilities are per-frame (or per-batch
+/// for `reset`, per-accept for `refuse`); windows are relative to arm
+/// time.  Build with the chained setters:
+///
+/// ```
+/// use floe::chaos::FaultSpec;
+/// let spec = FaultSpec::new()
+///     .drop(0.05)
+///     .delay(0.10, 2)
+///     .duplicate(0.05)
+///     .reorder(0.05);
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    pub drop_p: f64,
+    pub delay_p: f64,
+    pub delay_ms: u64,
+    pub duplicate_p: f64,
+    pub reorder_p: f64,
+    pub corrupt_p: f64,
+    pub reset_p: f64,
+    pub refuse_p: f64,
+    /// Read-stall (half-open) windows: receivers stop reading.
+    pub stalls: Vec<(u64, u64)>,
+    /// Heartbeat partition windows.
+    pub partitions: Vec<PartitionSpec>,
+}
+
+impl FaultSpec {
+    pub fn new() -> FaultSpec {
+        FaultSpec::default()
+    }
+
+    pub fn drop(mut self, p: f64) -> Self {
+        self.drop_p = p;
+        self
+    }
+
+    pub fn delay(mut self, p: f64, ms: u64) -> Self {
+        self.delay_p = p;
+        self.delay_ms = ms;
+        self
+    }
+
+    pub fn duplicate(mut self, p: f64) -> Self {
+        self.duplicate_p = p;
+        self
+    }
+
+    pub fn reorder(mut self, p: f64) -> Self {
+        self.reorder_p = p;
+        self
+    }
+
+    pub fn corrupt(mut self, p: f64) -> Self {
+        self.corrupt_p = p;
+        self
+    }
+
+    pub fn reset(mut self, p: f64) -> Self {
+        self.reset_p = p;
+        self
+    }
+
+    pub fn refuse(mut self, p: f64) -> Self {
+        self.refuse_p = p;
+        self
+    }
+
+    /// Receivers stop reading during `[start_ms, start_ms + dur_ms)`.
+    pub fn read_stall(mut self, start_ms: u64, dur_ms: u64) -> Self {
+        self.stalls.push((start_ms, dur_ms));
+        self
+    }
+
+    /// Heartbeats between `a` and `b` freeze during the window.
+    pub fn partition(
+        mut self,
+        a: &str,
+        b: &str,
+        start_ms: u64,
+        dur_ms: u64,
+    ) -> Self {
+        self.partitions.push(PartitionSpec {
+            a: a.to_string(),
+            b: b.to_string(),
+            start_ms,
+            dur_ms,
+        });
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan
+// ---------------------------------------------------------------------------
+
+/// One frame-level fault decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameFault {
+    None,
+    /// Lose the frame's first transmission (retry resends it).
+    Drop,
+    /// Stall the sender this many milliseconds before the write.
+    Delay(u64),
+    /// Transmit the frame twice back-to-back.
+    Duplicate,
+    /// Retransmit a stale copy of the previous frame after this one.
+    Reorder,
+    /// Transmit an extra copy of the frame with the byte at
+    /// `salt % span` past the length prefix flipped — guaranteed to
+    /// trip the receiver's checksum check and cut the connection.
+    Corrupt(u32),
+}
+
+impl FrameFault {
+    /// Stable short name (labels, logs, schedule dumps).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrameFault::None => "none",
+            FrameFault::Drop => "drop",
+            FrameFault::Delay(_) => "delay",
+            FrameFault::Duplicate => "duplicate",
+            FrameFault::Reorder => "reorder",
+            FrameFault::Corrupt(_) => "corrupt",
+        }
+    }
+}
+
+/// Injected-fault tallies, bumped by the hook as faults fire (not as
+/// they are scheduled): two runs of the same seed over the same
+/// traffic must produce identical snapshots.
+#[derive(Debug, Default)]
+pub struct FaultCounts {
+    pub drops: AtomicU64,
+    pub delays: AtomicU64,
+    pub duplicates: AtomicU64,
+    pub reorders: AtomicU64,
+    pub corrupts: AtomicU64,
+    pub resets: AtomicU64,
+    pub refusals: AtomicU64,
+}
+
+/// Point-in-time copy of [`FaultCounts`] (comparable across runs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultCountsSnapshot {
+    pub drops: u64,
+    pub delays: u64,
+    pub duplicates: u64,
+    pub reorders: u64,
+    pub corrupts: u64,
+    pub resets: u64,
+    pub refusals: u64,
+}
+
+impl FaultCounts {
+    pub fn snapshot(&self) -> FaultCountsSnapshot {
+        let ld = |a: &AtomicU64| a.load(Ordering::SeqCst);
+        FaultCountsSnapshot {
+            drops: ld(&self.drops),
+            delays: ld(&self.delays),
+            duplicates: ld(&self.duplicates),
+            reorders: ld(&self.reorders),
+            corrupts: ld(&self.corrupts),
+            resets: ld(&self.resets),
+            refusals: ld(&self.refusals),
+        }
+    }
+
+    fn record_frame(&self, f: &FrameFault) {
+        let c = match f {
+            FrameFault::None => return,
+            FrameFault::Drop => &self.drops,
+            FrameFault::Delay(_) => &self.delays,
+            FrameFault::Duplicate => &self.duplicates,
+            FrameFault::Reorder => &self.reorders,
+            FrameFault::Corrupt(_) => &self.corrupts,
+        };
+        c.fetch_add(1, Ordering::SeqCst);
+        crate::telemetry::ctr_chaos_injected(f.name()).inc();
+    }
+}
+
+/// SplitMix64 finalizer — the same mixer [`Rng`] seeds through, kept
+/// local so plan derivation is self-contained and stable.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// FNV-1a over the link name: folds the textual identity of a sender
+/// or listener into the per-decision seed.
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Derive the decision stream for `(seed, link, index)` under a
+/// per-seam `salt` so sender-frame, sender-reset, and listener-accept
+/// decisions never correlate.
+fn decision_rng(seed: u64, salt: u64, link: &str, index: u64) -> Rng {
+    let mut z = splitmix(seed ^ salt);
+    z = splitmix(z ^ fnv64(link));
+    z = splitmix(z ^ index);
+    Rng::new(z)
+}
+
+const SALT_FRAME: u64 = 0xF1A7;
+const SALT_RESET: u64 = 0x2E5E;
+const SALT_REFUSE: u64 = 0x3EF5;
+
+/// A compiled fault schedule: seed + spec + the arm instant the time
+/// windows are measured from.  All per-frame queries are pure — the
+/// plan carries no mutable schedule state, only outcome tallies.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+    epoch: Instant,
+    /// Tallies of faults actually injected (see [`FaultCounts`]).
+    pub counts: FaultCounts,
+}
+
+impl FaultPlan {
+    pub fn compile(seed: u64, spec: FaultSpec) -> FaultPlan {
+        FaultPlan {
+            seed,
+            spec,
+            epoch: Instant::now(),
+            counts: FaultCounts::default(),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Milliseconds since the plan was armed.
+    pub fn elapsed_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// The fault (if any) for frame `index` on `link`.  Pure: depends
+    /// only on `(seed, spec, link, index)`.
+    pub fn frame_fault(&self, link: &str, index: u64) -> FrameFault {
+        let mut rng = decision_rng(self.seed, SALT_FRAME, link, index);
+        // Fixed draw order: each probability consumes one draw, so a
+        // spec change reshuffles later categories but a fixed spec is
+        // byte-stable forever.
+        if rng.chance(self.spec.drop_p) {
+            return FrameFault::Drop;
+        }
+        if rng.chance(self.spec.corrupt_p) {
+            return FrameFault::Corrupt(rng.next_u64() as u32);
+        }
+        if rng.chance(self.spec.duplicate_p) {
+            return FrameFault::Duplicate;
+        }
+        if rng.chance(self.spec.reorder_p) {
+            return FrameFault::Reorder;
+        }
+        if rng.chance(self.spec.delay_p) {
+            return FrameFault::Delay(self.spec.delay_ms);
+        }
+        FrameFault::None
+    }
+
+    /// Whether the sender's connection resets before batch `index`.
+    pub fn reset_at(&self, link: &str, index: u64) -> bool {
+        decision_rng(self.seed, SALT_RESET, link, index)
+            .chance(self.spec.reset_p)
+    }
+
+    /// Whether the listener refuses accepted connection `index`.
+    pub fn refuse_at(&self, link: &str, index: u64) -> bool {
+        decision_rng(self.seed, SALT_REFUSE, link, index)
+            .chance(self.spec.refuse_p)
+    }
+
+    /// Whether receivers are read-stalled right now.
+    pub fn read_stalled(&self) -> bool {
+        let now = self.elapsed_ms();
+        self.spec
+            .stalls
+            .iter()
+            .any(|&(s, d)| now >= s && now < s.saturating_add(d))
+    }
+
+    /// Whether a partition window between `x` and `y` is active.
+    pub fn partition_active(&self, x: &str, y: &str) -> bool {
+        let now = self.elapsed_ms();
+        self.spec.partitions.iter().any(|p| {
+            let side = |a: &str, b: &str| {
+                (a == ANY || a == x) && (b == ANY || b == y)
+            };
+            (side(&p.a, &p.b) || side(&p.b, &p.a))
+                && now >= p.start_ms
+                && now < p.start_ms.saturating_add(p.dur_ms)
+        })
+    }
+
+    /// The first `n` frame faults for `link`.
+    pub fn schedule(&self, link: &str, n: u64) -> Vec<FrameFault> {
+        (0..n).map(|i| self.frame_fault(link, i)).collect()
+    }
+
+    /// Byte-serialized schedule (tag + params per frame) — the unit
+    /// the determinism properties compare.
+    pub fn schedule_bytes(&self, link: &str, n: u64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n as usize);
+        for f in self.schedule(link, n) {
+            match f {
+                FrameFault::None => out.push(0),
+                FrameFault::Drop => out.push(1),
+                FrameFault::Delay(ms) => {
+                    out.push(2);
+                    out.extend_from_slice(&ms.to_le_bytes());
+                }
+                FrameFault::Duplicate => out.push(3),
+                FrameFault::Reorder => out.push(4),
+                FrameFault::Corrupt(salt) => {
+                    out.push(5);
+                    out.extend_from_slice(&salt.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global hook
+// ---------------------------------------------------------------------------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn slot() -> &'static RwLock<Option<Arc<FaultPlan>>> {
+    static SLOT: OnceLock<RwLock<Option<Arc<FaultPlan>>>> =
+        OnceLock::new();
+    SLOT.get_or_init(|| RwLock::new(None))
+}
+
+/// Whether a plan is armed.  One relaxed load — the entire hot-path
+/// cost of this module when chaos is off.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// The armed plan, if any.
+pub fn plan() -> Option<Arc<FaultPlan>> {
+    if !armed() {
+        return None;
+    }
+    slot().read().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Disarms the plan armed alongside it when dropped, so a panicking
+/// test cannot leak faults into the rest of the suite.
+pub struct ArmGuard {
+    plan: Arc<FaultPlan>,
+}
+
+impl ArmGuard {
+    /// The armed plan (outcome tallies, schedule queries).
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+}
+
+impl Drop for ArmGuard {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// Arm `plan` process-wide.  The plan's time windows restart at this
+/// instant.  Prints the seed so any failure reproduces by pinning it.
+pub fn arm(mut plan: FaultPlan) -> ArmGuard {
+    plan.epoch = Instant::now();
+    let seed = plan.seed;
+    let plan = Arc::new(plan);
+    *slot().write().unwrap_or_else(|e| e.into_inner()) =
+        Some(Arc::clone(&plan));
+    ARMED.store(true, Ordering::SeqCst);
+    crate::telemetry::ctr_chaos_arms().inc();
+    crate::log_info!("chaos: plan armed (seed {seed:#x})");
+    ArmGuard { plan }
+}
+
+/// Drop the armed plan; hooks return to their no-op fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+    *slot().write().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+// Seam-facing consults.  Each takes the one-relaxed-load early exit
+// before touching the plan slot, and tallies the faults it hands out.
+
+pub(crate) fn tx_frame_fault(link: &str, index: u64) -> FrameFault {
+    if !armed() {
+        return FrameFault::None;
+    }
+    match plan() {
+        Some(p) => {
+            let f = p.frame_fault(link, index);
+            p.counts.record_frame(&f);
+            f
+        }
+        None => FrameFault::None,
+    }
+}
+
+pub(crate) fn tx_reset_fault(link: &str, index: u64) -> bool {
+    if !armed() {
+        return false;
+    }
+    match plan() {
+        Some(p) if p.reset_at(link, index) => {
+            p.counts.resets.fetch_add(1, Ordering::SeqCst);
+            crate::telemetry::ctr_chaos_injected("reset").inc();
+            true
+        }
+        _ => false,
+    }
+}
+
+pub(crate) fn rx_refuse_fault(link: &str, index: u64) -> bool {
+    if !armed() {
+        return false;
+    }
+    match plan() {
+        Some(p) if p.refuse_at(link, index) => {
+            p.counts.refusals.fetch_add(1, Ordering::SeqCst);
+            crate::telemetry::ctr_chaos_injected("refuse").inc();
+            true
+        }
+        _ => false,
+    }
+}
+
+pub(crate) fn rx_read_stalled() -> bool {
+    if !armed() {
+        return false;
+    }
+    plan().is_some_and(|p| p.read_stalled())
+}
+
+pub(crate) fn heartbeat_stalled(container: &str) -> bool {
+    if !armed() {
+        return false;
+    }
+    plan().is_some_and(|p| p.partition_active(container, COORDINATOR))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixed_spec() -> FaultSpec {
+        FaultSpec::new()
+            .drop(0.1)
+            .delay(0.1, 3)
+            .duplicate(0.1)
+            .reorder(0.1)
+            .corrupt(0.1)
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultPlan::compile(42, mixed_spec());
+        let b = FaultPlan::compile(42, mixed_spec());
+        assert_eq!(
+            a.schedule_bytes("tcp://x:1/in", 512),
+            b.schedule_bytes("tcp://x:1/in", 512)
+        );
+    }
+
+    #[test]
+    fn different_seed_different_schedule() {
+        let a = FaultPlan::compile(42, mixed_spec());
+        let b = FaultPlan::compile(43, mixed_spec());
+        assert_ne!(
+            a.schedule_bytes("tcp://x:1/in", 512),
+            b.schedule_bytes("tcp://x:1/in", 512)
+        );
+    }
+
+    #[test]
+    fn links_decorrelated() {
+        let p = FaultPlan::compile(7, mixed_spec());
+        assert_ne!(
+            p.schedule_bytes("link-a", 512),
+            p.schedule_bytes("link-b", 512)
+        );
+    }
+
+    #[test]
+    fn empty_spec_is_all_none() {
+        let p = FaultPlan::compile(9, FaultSpec::new());
+        assert!(p
+            .schedule("any", 256)
+            .iter()
+            .all(|f| *f == FrameFault::None));
+        assert!(!p.reset_at("any", 0));
+        assert!(!p.refuse_at("any", 0));
+    }
+
+    #[test]
+    fn rates_roughly_match_spec() {
+        let p = FaultPlan::compile(1, FaultSpec::new().drop(0.2));
+        let n = 4000u64;
+        let drops = p
+            .schedule("l", n)
+            .iter()
+            .filter(|f| **f == FrameFault::Drop)
+            .count();
+        let rate = drops as f64 / n as f64;
+        assert!((0.15..0.25).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn partition_windows_match_unordered_and_wildcard() {
+        let p = FaultPlan::compile(
+            0,
+            FaultSpec::new()
+                .partition("c-1", COORDINATOR, 0, 60_000)
+                .partition("c-9", ANY, 0, 60_000),
+        );
+        assert!(p.partition_active("c-1", COORDINATOR));
+        assert!(p.partition_active(COORDINATOR, "c-1"));
+        assert!(p.partition_active("c-9", "anything"));
+        assert!(!p.partition_active("c-2", COORDINATOR));
+    }
+
+    #[test]
+    fn windows_respect_start_offset() {
+        let p = FaultPlan::compile(
+            0,
+            FaultSpec::new()
+                .partition("c-1", COORDINATOR, 3_600_000, 1_000)
+                .read_stall(3_600_000, 1_000),
+        );
+        assert!(!p.partition_active("c-1", COORDINATOR));
+        assert!(!p.read_stalled());
+    }
+
+    #[test]
+    fn arm_guard_disarms_on_drop() {
+        // Serialized against nothing: this is the only in-crate test
+        // that arms, and integration suites run in their own process.
+        {
+            let g = arm(FaultPlan::compile(5, FaultSpec::new()));
+            assert!(armed());
+            assert_eq!(g.plan().seed(), 5);
+        }
+        assert!(!armed());
+        assert!(plan().is_none());
+    }
+}

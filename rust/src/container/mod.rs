@@ -35,6 +35,13 @@ pub struct Container {
     heart: Arc<Heart>,
     hb_join: Mutex<Option<thread::JoinHandle<()>>>,
     dead: AtomicBool,
+    /// Chaos partition latch: `u64::MAX` = delivering live beats;
+    /// anything else is the frozen value [`Container::heartbeat`]
+    /// keeps reporting while a partition window covers this
+    /// container.  The heartbeat *thread* keeps running — only the
+    /// coordinator's view stalls, exactly like heartbeats delayed in
+    /// a partitioned network.
+    hb_frozen: AtomicU64,
 }
 
 struct Inner {
@@ -58,6 +65,7 @@ impl Container {
             }),
             hb_join: Mutex::new(None),
             dead: AtomicBool::new(false),
+            hb_frozen: AtomicU64::new(u64::MAX),
         })
     }
 
@@ -89,9 +97,25 @@ impl Container {
     }
 
     /// Current heartbeat counter (frozen forever once the container
-    /// dies).
+    /// dies).  While an armed chaos plan partitions this container
+    /// from the coordinator, the value observed here freezes — the
+    /// beats are "in flight but undelivered" — and resumes live once
+    /// the window closes.
     pub fn heartbeat(&self) -> u64 {
-        self.heart.beat.load(Ordering::SeqCst)
+        let live = self.heart.beat.load(Ordering::SeqCst);
+        if crate::chaos::heartbeat_stalled(&self.id) {
+            let frozen = self.hb_frozen.load(Ordering::SeqCst);
+            if frozen == u64::MAX {
+                // Window onset: latch the last delivered value.
+                self.hb_frozen.store(live, Ordering::SeqCst);
+                return live;
+            }
+            return frozen;
+        }
+        if self.hb_frozen.load(Ordering::SeqCst) != u64::MAX {
+            self.hb_frozen.store(u64::MAX, Ordering::SeqCst);
+        }
+        live
     }
 
     /// Stop the heartbeat thread (graceful shutdown path; does not

@@ -30,13 +30,57 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use super::DataflowInner;
 use crate::container::Container;
 use crate::util::json::Json;
+
+/// One sender-side stall report: a logical TCP sender (or a live
+/// endpoint wait) exhausted its repair-bridging deadline against
+/// `target` — the symmetric-partition signal the lease path cannot
+/// see on its own (a partitioned container's heartbeat thread is
+/// in-process here, so its lease never expires; the *senders* are who
+/// notice).
+#[derive(Debug, Clone)]
+pub struct StallReport {
+    /// The unreachable flake / endpoint label.
+    pub target: String,
+    /// Human-readable cause (last send error, deadline).
+    pub detail: String,
+}
+
+fn stall_registry() -> &'static Mutex<Vec<StallReport>> {
+    static REG: OnceLock<Mutex<Vec<StallReport>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Record that `target` stayed unreachable past a sender's full retry
+/// deadline.  Called from the channel layer; drained by the failure
+/// detector each tick, which logs and traces the suspicion.  Cheap
+/// and non-blocking enough for a send error path.
+pub fn report_endpoint_stall(target: &str, detail: &str) {
+    crate::telemetry::ctr_endpoint_stalls().inc();
+    let mut reg =
+        stall_registry().lock().unwrap_or_else(|e| e.into_inner());
+    // Bounded: a hot broken link must not grow this without limit
+    // between detector ticks (or in runs with no detector at all).
+    if reg.len() < 1024 {
+        reg.push(StallReport {
+            target: target.to_string(),
+            detail: detail.to_string(),
+        });
+    }
+}
+
+/// Drain every stall reported since the last call.
+pub(crate) fn drain_endpoint_stalls() -> Vec<StallReport> {
+    let mut reg =
+        stall_registry().lock().unwrap_or_else(|e| e.into_inner());
+    std::mem::take(&mut *reg)
+}
 
 /// Fault-tolerance knobs (set through
 /// [`crate::coordinator::RuntimeOptions::fault_tolerance`]).
@@ -273,6 +317,25 @@ fn detector_loop(
             break;
         }
         tick += 1;
+
+        // Surface sender-reported endpoint stalls (suspected
+        // partitions).  Surfacing only — the lease path stays the
+        // single authority on declaring death, because a stall report
+        // can be a sender-side problem (e.g. its own link) and a
+        // forced kill on it would turn one slow link into an outage.
+        for stall in drain_endpoint_stalls() {
+            crate::log_warn!(
+                "failure detector: endpoint '{}' suspected \
+                 partitioned: {}",
+                stall.target,
+                stall.detail
+            );
+            crate::telemetry::tracelog().instant(
+                "suspect",
+                &stall.target,
+                &stall.detail,
+            );
+        }
 
         // Periodic checkpoints, serialized with surgeries (the store
         // is what a later repair restores from).

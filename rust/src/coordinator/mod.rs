@@ -12,7 +12,8 @@ mod server;
 mod stats;
 
 pub use failure::{
-    FailureEvent, FaultToleranceConfig, LeaseTracker, RepairEvent,
+    report_endpoint_stall, FailureEvent, FaultToleranceConfig,
+    LeaseTracker, RepairEvent, StallReport,
 };
 pub(crate) use failure::FailureDetector;
 pub use server::CoordinatorServer;

@@ -42,6 +42,7 @@
 pub mod adaptation;
 pub mod apps;
 pub mod channel;
+pub mod chaos;
 pub mod container;
 pub mod coordinator;
 pub mod error;

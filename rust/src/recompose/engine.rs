@@ -483,7 +483,13 @@ fn cut_over(
     // capture.  No receiver adoption — the dead host's sockets died
     // with it; remote senders reconnect through the republished
     // endpoint.
-    for (id, _, husk_c) in failed.iter() {
+    for (id, old, husk_c) in failed.iter() {
+        // Fence the old incarnation first.  After a genuine crash
+        // this is an idempotent no-op, but a container declared dead
+        // across a network *partition* is still running — without the
+        // fence its flakes would keep processing alongside the
+        // replacement (split-brain double-processing).
+        old.crash();
         let cp = {
             let store =
                 run.checkpoints.lock().expect("checkpoints poisoned");

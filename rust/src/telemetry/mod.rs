@@ -147,6 +147,18 @@ static_counter!(
     "floe_channel_tcp_rebinds_total",
     "TCP sender rebinds to a republished endpoint"
 );
+static_counter!(
+    /// Frames whose checksum trailer failed verification.
+    ctr_tcp_corrupt_frames,
+    "floe_channel_tcp_corrupt_frames_total",
+    "Frames dropped after a wire-checksum mismatch"
+);
+static_counter!(
+    /// Data connections closed by the read-side idle deadline.
+    ctr_tcp_idle_closes,
+    "floe_channel_tcp_idle_closes_total",
+    "Data connections closed by the read-side idle deadline"
+);
 
 // -- net I/O core family ----------------------------------------------------
 
@@ -241,6 +253,32 @@ static_histogram!(
     "floe_failover_heal_nanos",
     "Nanoseconds from failure detection to completed repair"
 );
+static_counter!(
+    /// Endpoint-deadline expiries surfaced to the failure detector.
+    ctr_endpoint_stalls,
+    "floe_failover_endpoint_stalls_total",
+    "Endpoint send deadlines expired and surfaced as partition \
+     suspicions"
+);
+
+// -- chaos family (deterministic fault injection) ---------------------------
+
+static_counter!(
+    /// Fault plans armed over this process's lifetime.
+    ctr_chaos_arms,
+    "floe_chaos_plans_armed_total",
+    "Fault-injection plans armed"
+);
+
+/// Injected fault counter by kind (`{fault="drop"|"delay"|...}`).
+pub fn ctr_chaos_injected(fault: &str) -> Arc<Counter> {
+    metrics().counter_for(
+        "floe_chaos_injected_faults_total",
+        "fault",
+        fault,
+        "Faults injected by the armed chaos plan, by kind",
+    )
+}
 
 // -- flake / e2e families (per-pellet, resolved at flake spawn) -------------
 
@@ -307,6 +345,8 @@ pub fn touch() {
     ctr_tcp_rx_frames();
     ctr_tcp_reconnects();
     ctr_tcp_rebinds();
+    ctr_tcp_corrupt_frames();
+    ctr_tcp_idle_closes();
     gauge_net_registered();
     gauge_net_active();
     gauge_net_workers();
@@ -320,6 +360,8 @@ pub fn touch() {
     ctr_checkpoint_messages();
     ctr_replayed();
     hist_failover_heal();
+    ctr_endpoint_stalls();
+    ctr_chaos_arms();
 }
 
 #[cfg(test)]
@@ -336,6 +378,7 @@ mod tests {
             "floe_recompose_",
             "floe_elasticity_",
             "floe_failover_",
+            "floe_chaos_",
         ] {
             assert!(text.contains(family), "missing family {family}");
         }

@@ -2,6 +2,7 @@
 //! no serde/tokio/hyper/rand): PRNG, logging, JSON, XML, HTTP/1.1, CSV,
 //! clocks and a mini property-testing harness.
 
+pub mod crc;
 pub mod csv;
 pub mod http;
 pub mod json;

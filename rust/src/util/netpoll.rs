@@ -63,6 +63,10 @@ use crate::error::{FloeError, Result};
 /// also bounds how late a [`Wake::Tick`] can fire.
 const POLL_PAUSE: Duration = Duration::from_millis(2);
 
+/// Slow tickers ([`IoCore::register_slow`]) are offered a tick every
+/// this many tick rounds — about every 256 ms at the 2 ms pause.
+const SLOW_TICK_EVERY: u64 = 128;
+
 /// How long [`IoCore::close_group`] waits for slots claimed by a
 /// worker to finish their current serve before giving up (the worker
 /// still retires them on release; only the *wait* is bounded).
@@ -114,6 +118,13 @@ struct Slot {
     /// on non-unix targets, where it is `-1`).
     fd: i32,
     tick: bool,
+    /// Slow ticker: offered a `Wake::Tick` only every
+    /// [`SLOW_TICK_EVERY`]-th tick round (~every 256 ms), not every
+    /// poll pause.  Data-plane connections use this for their idle
+    /// deadline: at a thousand connections, fast ticks would cost a
+    /// rearm syscall per connection per pause; coarse deadlines don't
+    /// need that resolution.
+    slow: bool,
     /// Claim flag: set before the slot enters the ready queue (or is
     /// ticked, or retired by `close_group`), cleared by the serving
     /// worker after the socket is drained.  Guarantees single-worker
@@ -132,7 +143,8 @@ pub struct IoCore {
     #[cfg(target_os = "linux")]
     epoll: Option<epoll::Epoll>,
     registry: Mutex<HashMap<u64, Arc<Slot>>>,
-    /// Slots that want periodic `Wake::Tick`s (listeners).
+    /// Slots that want periodic `Wake::Tick`s (listeners, HTTP
+    /// request deadlines; data connections as slow tickers).
     tickers: Mutex<Vec<Weak<Slot>>>,
     ready: SyncQueue<Arc<Slot>>,
     next_token: AtomicU64,
@@ -277,12 +289,38 @@ impl IoCore {
         tick: bool,
         sm: Box<dyn Conn>,
     ) -> Result<u64> {
+        self.register_opts(group, fd, tick, false, sm)
+    }
+
+    /// Like [`register`](IoCore::register) with `tick = true`, but the
+    /// slot is a *slow* ticker: `Wake::Tick` arrives only every
+    /// [`SLOW_TICK_EVERY`]-th tick round.  For coarse per-connection
+    /// deadlines (idle/keepalive) on the data plane, where fast ticks
+    /// would cost a rearm syscall per connection per poll pause.
+    pub fn register_slow(
+        &self,
+        group: u64,
+        fd: i32,
+        sm: Box<dyn Conn>,
+    ) -> Result<u64> {
+        self.register_opts(group, fd, true, true, sm)
+    }
+
+    fn register_opts(
+        &self,
+        group: u64,
+        fd: i32,
+        tick: bool,
+        slow: bool,
+        sm: Box<dyn Conn>,
+    ) -> Result<u64> {
         let token = self.next_token.fetch_add(1, Ordering::Relaxed);
         let slot = Arc::new(Slot {
             token,
             group,
             fd,
             tick,
+            slow,
             queued: AtomicBool::new(false),
             closing: AtomicBool::new(false),
             sm: Mutex::new(Some(sm)),
@@ -469,6 +507,7 @@ impl IoCore {
         let mut events: Vec<epoll::Event> =
             Vec::with_capacity(EVENT_BATCH);
         let mut last_tick = Instant::now();
+        let mut tick_round: u64 = 0;
         while !self.shutdown.load(Ordering::SeqCst) {
             match self.mode {
                 #[cfg(target_os = "linux")]
@@ -512,15 +551,18 @@ impl IoCore {
             }
             if last_tick.elapsed() >= POLL_PAUSE {
                 last_tick = Instant::now();
-                self.run_ticks();
+                self.run_ticks(tick_round);
+                tick_round = tick_round.wrapping_add(1);
             }
         }
     }
 
     /// Offer a `Wake::Tick` to every live ticker not currently being
     /// served.  Runs on the poll thread; tickers (listeners) must keep
-    /// their tick work short.
-    fn run_ticks(&self) {
+    /// their tick work short.  Slow tickers are offered only every
+    /// [`SLOW_TICK_EVERY`]-th round.
+    fn run_ticks(&self, round: u64) {
+        let slow_due = round % SLOW_TICK_EVERY == 0;
         let mut tickers =
             self.tickers.lock().expect("netpoll tickers");
         tickers.retain(|w| w.strong_count() > 0);
@@ -528,6 +570,9 @@ impl IoCore {
             tickers.iter().filter_map(Weak::upgrade).collect();
         drop(tickers);
         for slot in live {
+            if slot.slow && !slow_due {
+                continue;
+            }
             if slot
                 .queued
                 .compare_exchange(

@@ -1,0 +1,530 @@
+//! Deterministic fault-injection suite over the network substrate.
+//!
+//! Every test compiles a seeded [`floe::chaos::FaultPlan`] and arms
+//! it process-wide; the TCP senders/receivers consult the plan at
+//! well-defined injection points, so a given seed reproduces the
+//! exact same fault schedule — the seed is printed on entry and any
+//! failure reproduces with
+//! `FLOE_CHAOS_SEED=0x<seed> cargo test --test test_chaos`.
+//!
+//! The invariants under test are the transport's real guarantees:
+//! zero loss and per-producer FIFO (modulo duplicates) under drop +
+//! delay + reorder, bounded duplication, corrupt frames detected and
+//! never delivered, half-open connections reaped, and lease repair
+//! driven by a heartbeat *partition* rather than a process kill.
+
+use std::collections::HashSet;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use floe::channel::{
+    set_rx_idle_limit, EndpointAddr, EndpointTable, ShardedQueue,
+    TcpReceiver, TcpSender, Transport,
+};
+use floe::chaos::{self, FaultPlan, FaultSpec};
+use floe::coordinator::{
+    Coordinator, FaultToleranceConfig, RuntimeOptions,
+};
+use floe::graph::{GraphBuilder, SplitMode};
+use floe::manager::{ResourceManager, SimulatedCloud};
+use floe::message::Message;
+use floe::pellet::builtins::CollectSink;
+use floe::pellet::PelletRegistry;
+
+/// The chaos plan is process-global, so tests in this binary must not
+/// overlap; each takes this lock for its whole body.
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Suite seed: `FLOE_CHAOS_SEED` (hex with `0x`, or decimal) when
+/// set, a fixed default otherwise.  Printed so any failure is a
+/// one-command repro.
+fn chaos_seed() -> u64 {
+    let seed = match std::env::var("FLOE_CHAOS_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse::<u64>(),
+            };
+            parsed.unwrap_or_else(|_| {
+                panic!("unparsable FLOE_CHAOS_SEED {s:?}")
+            })
+        }
+        Err(_) => 0xF10E_CA05_0000_0001,
+    };
+    eprintln!(
+        "chaos seed: {seed:#x} (repro: FLOE_CHAOS_SEED={seed:#x} \
+         cargo test --test test_chaos)"
+    );
+    seed
+}
+
+fn port_map(
+    q: &Arc<ShardedQueue<Message>>,
+) -> std::collections::HashMap<String, Arc<ShardedQueue<Message>>> {
+    let mut m = std::collections::HashMap::new();
+    m.insert("in".to_string(), Arc::clone(q));
+    m
+}
+
+/// Logical receiver/sender pair: the sender's chaos link label is
+/// derived from the *logical* address (`tcp:floe://sink/in`), which
+/// is stable across runs — an ephemeral physical port would change
+/// the fault schedule between two runs of the same seed.
+fn logical_pair(
+    flake: &str,
+) -> (TcpReceiver, Arc<ShardedQueue<Message>>, TcpSender) {
+    let table = EndpointTable::new();
+    let q = Arc::new(ShardedQueue::with_default_shards(65_536));
+    let rx = TcpReceiver::start_logical(0, flake, Arc::clone(&table))
+        .unwrap();
+    table.publish(flake, port_map(&q), Some(rx.endpoint()));
+    let tx = TcpSender::logical(
+        Arc::clone(&table),
+        &EndpointAddr::new(flake, "in"),
+    )
+    .unwrap();
+    (rx, q, tx)
+}
+
+/// Pop until `n` *distinct* texts arrived (duplicates allowed), or
+/// panic at the deadline.  Returns every received text in arrival
+/// order.
+fn collect_distinct(
+    q: &ShardedQueue<Message>,
+    n: usize,
+    deadline: Duration,
+) -> Vec<String> {
+    let end = Instant::now() + deadline;
+    let mut got: Vec<String> = Vec::new();
+    let mut distinct: HashSet<String> = HashSet::new();
+    while distinct.len() < n {
+        assert!(
+            Instant::now() < end,
+            "only {}/{n} distinct messages arrived ({} total)",
+            distinct.len(),
+            got.len()
+        );
+        match q.try_pop() {
+            Some(m) => {
+                let t = m.as_text().unwrap().to_string();
+                distinct.insert(t.clone());
+                got.push(t);
+            }
+            None => std::thread::sleep(Duration::from_millis(1)),
+        }
+    }
+    // Grab any trailing duplicates that already landed.
+    while let Some(m) = q.try_pop() {
+        got.push(m.as_text().unwrap().to_string());
+    }
+    got
+}
+
+/// First occurrence of each text, in arrival order.
+fn first_occurrences(got: &[String]) -> Vec<String> {
+    let mut seen = HashSet::new();
+    got.iter()
+        .filter(|t| seen.insert(t.as_str()))
+        .cloned()
+        .collect()
+}
+
+#[test]
+fn zero_loss_fifo_under_drop_delay_reorder() {
+    let _g = serial();
+    let seed = chaos_seed();
+    let spec = FaultSpec::new()
+        .drop(0.05)
+        .delay(0.05, 2)
+        .reorder(0.10);
+    let guard = chaos::arm(FaultPlan::compile(seed, spec));
+    let (mut rx, q, tx) = logical_pair("sink-fifo");
+
+    const N: usize = 500;
+    let mut i = 0usize;
+    // Mixed single sends and batches, so batch-level faults fire too.
+    while i < N {
+        let take = [1usize, 3, 7][i % 3].min(N - i);
+        let batch: Vec<Message> = (i..i + take)
+            .map(|k| Message::text(format!("m{k:04}")))
+            .collect();
+        if take == 1 {
+            tx.send(batch.into_iter().next().unwrap()).unwrap();
+        } else {
+            tx.send_batch(batch).unwrap();
+        }
+        i += take;
+    }
+
+    let got = collect_distinct(&q, N, Duration::from_secs(30));
+    let want: Vec<String> =
+        (0..N).map(|k| format!("m{k:04}")).collect();
+    // Zero loss + per-producer FIFO: the first occurrence of every
+    // message arrives in send order; reorder faults only add stale
+    // *duplicates* behind the original.
+    assert_eq!(first_occurrences(&got), want);
+
+    let counts = guard.plan().counts.snapshot();
+    eprintln!("injected: {counts:?}");
+    assert!(
+        counts.drops + counts.delays + counts.reorders > 0,
+        "spec injected nothing — schedule suspiciously empty: \
+         {counts:?}"
+    );
+    drop(guard);
+    rx.shutdown();
+}
+
+#[test]
+fn duplicates_are_bounded() {
+    let _g = serial();
+    let seed = chaos_seed();
+    let spec = FaultSpec::new().duplicate(0.2);
+    let guard = chaos::arm(FaultPlan::compile(seed, spec));
+    let (mut rx, q, tx) = logical_pair("sink-dup");
+
+    const N: usize = 300;
+    for k in 0..N {
+        tx.send(Message::text(format!("d{k:04}"))).unwrap();
+    }
+    let got = collect_distinct(&q, N, Duration::from_secs(30));
+    let want: Vec<String> =
+        (0..N).map(|k| format!("d{k:04}")).collect();
+    assert_eq!(first_occurrences(&got), want);
+    // A duplicate fault transmits the frame exactly twice, so the
+    // total is bounded by N + injected duplicates.
+    let counts = guard.plan().counts.snapshot();
+    assert!(
+        got.len() as u64 <= (N as u64) + counts.duplicates,
+        "{} received > {} sent + {} duplicated",
+        got.len(),
+        N,
+        counts.duplicates
+    );
+    assert!(counts.duplicates > 0, "no duplicates injected");
+    drop(guard);
+    rx.shutdown();
+}
+
+#[test]
+fn corrupt_frames_counted_dropped_and_never_delivered() {
+    let _g = serial();
+    let seed = chaos_seed();
+    let spec = FaultSpec::new().corrupt(0.15);
+    let guard = chaos::arm(FaultPlan::compile(seed, spec));
+    let (mut rx, q, tx) = logical_pair("sink-crc");
+    let detected_before = floe::telemetry::ctr_tcp_corrupt_frames().get();
+
+    const N: usize = 200;
+    for k in 0..N {
+        tx.send(Message::text(format!("c{k:04}"))).unwrap();
+    }
+    let got = collect_distinct(&q, N, Duration::from_secs(30));
+    let want: Vec<String> =
+        (0..N).map(|k| format!("c{k:04}")).collect();
+    // Zero loss: the clean copy of every message delivers (the
+    // corrupted extra copy is dropped at the checksum check), in
+    // order, and nothing garbled ever reaches the sink.
+    assert_eq!(first_occurrences(&got), want);
+    for t in &got {
+        assert!(
+            want.binary_search(t).is_ok(),
+            "garbled message reached the sink: {t:?}"
+        );
+    }
+
+    let counts = guard.plan().counts.snapshot();
+    assert!(counts.corrupts > 0, "no corruption injected");
+    // Every injected corruption is detected by the receiver's CRC
+    // check (single-message batches: one corrupt tail per batch).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let detected = floe::telemetry::ctr_tcp_corrupt_frames().get()
+            - detected_before;
+        if detected >= counts.corrupts {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "only {detected}/{} corruptions detected",
+            counts.corrupts
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(guard);
+    rx.shutdown();
+}
+
+/// Refused (accept-then-drop) connections: the sender must keep
+/// making progress through reconnects — no hang, no panic, FIFO
+/// preserved on what arrives.  A refusal can swallow the write that
+/// was already in flight toward the doomed socket (plain TCP has no
+/// app-level ack), so loss is asserted *bounded by* the refusal
+/// count, not zero.
+#[test]
+fn refused_connections_retry_with_bounded_loss() {
+    let _g = serial();
+    let seed = chaos_seed();
+    let spec = FaultSpec::new().refuse(0.3).drop(0.2);
+    let guard = chaos::arm(FaultPlan::compile(seed, spec));
+    let (mut rx, q, tx) = logical_pair("sink-refuse");
+
+    const N: usize = 200;
+    for k in 0..N {
+        tx.send(Message::text(format!("r{k:04}"))).unwrap();
+    }
+    // Settle: wait until arrivals stop growing.
+    let mut got: Vec<String> = Vec::new();
+    let mut quiet = 0u32;
+    while quiet < 40 {
+        match q.try_pop() {
+            Some(m) => {
+                got.push(m.as_text().unwrap().to_string());
+                quiet = 0;
+            }
+            None => {
+                quiet += 1;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    let counts = guard.plan().counts.snapshot();
+    eprintln!("refusals={} got={}", counts.refusals, got.len());
+    let firsts = first_occurrences(&got);
+    let distinct: HashSet<&String> = firsts.iter().collect();
+    assert!(
+        distinct.len() as u64 >= N as u64 - counts.refusals,
+        "lost {} messages with only {} refusals",
+        N - distinct.len(),
+        counts.refusals
+    );
+    // Whatever arrived did so in send order.
+    let mut sorted = firsts.clone();
+    sorted.sort();
+    assert_eq!(firsts, sorted, "FIFO violated across refusals");
+    drop(guard);
+    rx.shutdown();
+}
+
+/// Same seed, same spec, same traffic → byte-identical fault schedule
+/// *and* identical delivered sequence + injected-fault counters
+/// across two full runs.
+#[test]
+fn same_seed_reproduces_schedule_and_outcome() {
+    let _g = serial();
+    let seed = chaos_seed();
+    let spec = FaultSpec::new()
+        .drop(0.08)
+        .delay(0.05, 1)
+        .duplicate(0.08)
+        .reorder(0.08)
+        .corrupt(0.08);
+
+    let run = |label: &str| {
+        let guard =
+            chaos::arm(FaultPlan::compile(seed, spec.clone()));
+        let (mut rx, q, tx) = logical_pair("sink-det");
+        const N: usize = 150;
+        let mut i = 0usize;
+        while i < N {
+            let take = [1usize, 4][i % 2].min(N - i);
+            let batch: Vec<Message> = (i..i + take)
+                .map(|k| Message::text(format!("s{k:04}")))
+                .collect();
+            tx.send_batch(batch).unwrap();
+            i += take;
+        }
+        let got = collect_distinct(&q, N, Duration::from_secs(30));
+        let counts = guard.plan().counts.snapshot();
+        let sched = guard.plan().schedule_bytes(
+            "tcp:floe://sink-det/in",
+            N as u64,
+        );
+        eprintln!("{label}: counts={counts:?}");
+        drop(guard);
+        rx.shutdown();
+        (first_occurrences(&got), counts, sched)
+    };
+
+    let (firsts_a, counts_a, sched_a) = run("run A");
+    let (firsts_b, counts_b, sched_b) = run("run B");
+    assert_eq!(sched_a, sched_b, "fault schedule not deterministic");
+    assert_eq!(counts_a, counts_b, "injected-fault counters diverged");
+    assert_eq!(firsts_a, firsts_b, "delivered sequence diverged");
+}
+
+/// Half-open hardening: a connection that stops delivering bytes
+/// (here: a raw socket parked mid-frame) is reaped once the read-side
+/// idle deadline passes, and the receiver keeps serving fresh
+/// connections afterwards.
+#[test]
+fn half_open_connection_reaped_by_idle_deadline() {
+    let _g = serial();
+    set_rx_idle_limit(Some(Duration::from_millis(300)));
+    let q = Arc::new(ShardedQueue::with_default_shards(1024));
+    let mut rx = TcpReceiver::start(0, port_map(&q)).unwrap();
+    let ep = rx.endpoint();
+    let closes_before = floe::telemetry::ctr_tcp_idle_closes().get();
+
+    // Park a half-open peer: claim a 100-byte frame, send 10 bytes,
+    // go silent (socket stays open).
+    let mut wedged = TcpStream::connect(&ep).unwrap();
+    wedged.write_all(&100u32.to_le_bytes()).unwrap();
+    wedged.write_all(&[0u8; 10]).unwrap();
+    wedged.flush().unwrap();
+
+    // The slow-tick housekeeping (~every 256 ms) plus the 300 ms
+    // deadline reap it well within a few seconds.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while floe::telemetry::ctr_tcp_idle_closes().get()
+        == closes_before
+    {
+        assert!(
+            Instant::now() < deadline,
+            "half-open connection never reaped"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // The receiver still serves new connections.
+    let tx = TcpSender::connect(&ep, "in").unwrap();
+    tx.send(Message::text("alive")).unwrap();
+    assert_eq!(q.pop().unwrap().as_text(), Some("alive"));
+
+    set_rx_idle_limit(Some(Duration::from_millis(60_000)));
+    rx.shutdown();
+}
+
+/// Repair under *partition*, not crash: the work container's
+/// heartbeats freeze (chaos partition window) while its process keeps
+/// running.  The lease must expire, `ReplaceFailed` must fence the
+/// live husk and re-spawn its flake from checkpoint, and post-heal
+/// traffic must flow with exact counts.
+#[test]
+fn partition_triggers_repair_and_fences_the_husk() {
+    let _g = serial();
+    let seed = chaos_seed();
+
+    let registry = PelletRegistry::with_builtins();
+    let collected = Arc::new(Mutex::new(Vec::new()));
+    let c2 = Arc::clone(&collected);
+    registry.register("test.Collect", move || {
+        Box::new(CollectSink { collected: Arc::clone(&c2) })
+    });
+    let cloud = SimulatedCloud::new(48, Duration::ZERO);
+    let coord = Coordinator::new(ResourceManager::new(cloud), registry);
+    let mut g = GraphBuilder::new("chaos-partition");
+    g.pellet("src", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .cores(2);
+    g.pellet("work", "floe.builtin.Identity")
+        .in_port("in")
+        .out_port("out", SplitMode::RoundRobin)
+        .cores(8);
+    g.pellet("sink", "test.Collect").in_port("in").cores(2).stateful();
+    g.edge("src", "out", "work", "in");
+    g.edge("work", "out", "sink", "in");
+    let graph = g.build().unwrap();
+
+    let opts = RuntimeOptions::new().input_shards(1).dedup(true);
+    let run = coord
+        .launch(
+            graph,
+            opts.fault_tolerance(FaultToleranceConfig {
+                lease_interval: Duration::from_millis(20),
+                lease_missed_k: 3,
+                checkpoint_interval: Some(Duration::from_millis(30)),
+            }),
+        )
+        .unwrap();
+    let victim = run.container("work").unwrap();
+
+    // Phase A: a healthy, drained, checkpointed prefix.
+    for i in 0..100 {
+        run.inject("src", "in", Message::text(format!("p{i:03}")))
+            .unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(20)));
+    assert!(run.checkpoint_now() > 0);
+
+    // Partition the victim from the coordinator for 5 s, starting
+    // now.  Its heartbeat *thread* keeps running — only delivery to
+    // the detector stalls — so this is a genuine partition, not a
+    // kill.
+    let spec = FaultSpec::new().partition(
+        &victim.id,
+        chaos::COORDINATOR,
+        0,
+        5_000,
+    );
+    let guard = chaos::arm(FaultPlan::compile(seed, spec));
+
+    // Lease expiry (3 × 20 ms) + ReplaceFailed repair, all while the
+    // window is still open.
+    let start = Instant::now();
+    let healed = loop {
+        let healed = !run.repairs().is_empty()
+            && run
+                .container("work")
+                .map(|c| c.id != victim.id && !c.is_dead())
+                .unwrap_or(false);
+        if healed {
+            break start.elapsed();
+        }
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "no repair within 10s of partition onset"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    eprintln!("partition healed in {healed:?}");
+    assert!(
+        healed < Duration::from_secs(5),
+        "repair did not complete inside the partition window"
+    );
+    // The husk was *declared* dead and fenced — never process-killed
+    // by the test — and the ledgers recorded a partition repair.
+    assert!(victim.is_dead());
+    let failures = run.failures();
+    assert_eq!(failures.len(), 1);
+    assert_eq!(failures[0].container, victim.id);
+    let repairs = run.repairs();
+    assert_eq!(repairs.len(), 1);
+    assert_eq!(repairs[0].flake, "work");
+    assert!(repairs[0].restored_from_checkpoint);
+    drop(guard); // heal the network before phase B
+
+    // Phase B: exact accounting on the healed topology.
+    for i in 0..100 {
+        run.inject("src", "in", Message::text(format!("q{i:03}")))
+            .unwrap();
+    }
+    assert!(run.drain(Duration::from_secs(20)));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let n = collected.lock().unwrap().len();
+        if n >= 200 || Instant::now() >= deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let got: Vec<String> = collected
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|m| m.as_text().unwrap().to_string())
+        .collect();
+    let distinct: HashSet<&String> = got.iter().collect();
+    assert_eq!(distinct.len(), 200, "lost messages across partition");
+    assert_eq!(got.len(), 200, "duplicates despite dedup");
+    run.stop();
+}

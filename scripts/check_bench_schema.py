@@ -118,6 +118,13 @@ REQUIRED = {
         "messages.injected",
         "messages.delivered",
         "messages.lost",
+        "partition_heal.partition_ms",
+        "partition_heal.detection_ms",
+        "partition_heal.repair_ms",
+        "partition_heal.heal_ms",
+        "partition_heal.replayed_messages",
+        "partition_heal.delivered",
+        "partition_heal.lost",
     ],
 }
 
