@@ -15,6 +15,12 @@
 //! (`util::netpoll`), asserting zero loss with receiver-side threads
 //! bounded by the fixed worker pool.
 //!
+//! Plus an egress A/B: the pre-pipeline blocking send (frame +
+//! `write_all` inline on the driver thread) vs the event-driven
+//! egress pipeline at 1/8/64 peers on the same driver-thread budget,
+//! and a deliberately slow peer measuring how long the *fast* peers
+//! take when one sink lags — head-of-line blocking made a number.
+//!
 //! Plus a telemetry A/B: the batched ring workload with the crate's
 //! observability instruments off (default) vs on, pinning the
 //! "off-path costs nothing" claim to a number.
@@ -23,15 +29,19 @@
 //! so successive PRs can track the perf trajectory.
 
 use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use floe::channel::{
-    EndpointAddr, EndpointTable, RingQueue, ShardedQueue, SyncQueue,
-    TcpReceiver, TcpSender, Transport,
+    set_egress_queue_cap, EndpointAddr, EndpointTable, RingQueue,
+    ShardedQueue, SyncQueue, TcpReceiver, TcpSender, Transport,
 };
 use floe::message::Message;
+use floe::util::crc::crc32;
 use floe::util::netpoll::IoCore;
 
 const MPMC_PRODUCERS: usize = 4;
@@ -48,6 +58,25 @@ const SWEEP_SENDERS: [usize; 2] = [256, 1024];
 /// Messages each sweep sender delivers (one per round, so every
 /// connection stays concurrently active for the whole run).
 const SWEEP_MSGS_PER_SENDER: usize = 20;
+
+/// Peer counts for the egress blocking-vs-pipelined comparison.
+const EGRESS_PEERS: [usize; 3] = [1, 8, 64];
+
+/// Messages delivered to every egress peer, and their payload.
+const EGRESS_MSGS_PER_PEER: usize = 8_000;
+const EGRESS_PAYLOAD: usize = 256;
+
+/// Driver threads shared by both egress paths — the comparison holds
+/// the thread budget fixed and varies only where the socket write
+/// happens (inline on the driver vs on the I/O core).
+const EGRESS_DRIVERS: usize = 8;
+
+/// Slow-peer scenario: messages per peer and payload (~2 MiB per
+/// peer), and the throttle of the deliberately slow reader.
+const SLOW_MSGS_PER_PEER: usize = 2_000;
+const SLOW_PAYLOAD: usize = 1024;
+const SLOW_READ_CHUNK: usize = 4096;
+const SLOW_READ_PAUSE: Duration = Duration::from_millis(2);
 
 /// One ring-vs-mutex cell: both backends at the same producer count and
 /// mode, plus the ratio.
@@ -450,6 +479,261 @@ fn bench_connection_sweep(senders: usize) -> SweepCell {
     }
 }
 
+/// One egress cell: blocking-baseline vs pipelined sends at the same
+/// peer count and driver-thread budget, messages/second.
+struct EgressCell {
+    peers: usize,
+    blocking: f64,
+    pipelined: f64,
+}
+
+impl EgressCell {
+    fn speedup(&self) -> f64 {
+        self.pipelined / self.blocking.max(1.0)
+    }
+}
+
+/// Hand-rolled checksummed frame, byte-identical to the sender's
+/// wire format, so the blocking baseline writes exactly the bytes
+/// the pipelined path writes.
+fn frame_msg(port: &str, msg: &Message, out: &mut Vec<u8>) {
+    const CHECKSUM_FLAG: u16 = 0x8000;
+    let len_at = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    out.extend_from_slice(
+        &(port.len() as u16 | CHECKSUM_FLAG).to_le_bytes(),
+    );
+    out.extend_from_slice(port.as_bytes());
+    msg.encode_into(out);
+    let crc = crc32(&out[len_at + 4..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    let total = (out.len() - len_at - 4) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&total.to_le_bytes());
+}
+
+/// `n` receivers all delivering into one shared queue, so a single
+/// drain loop counts every peer's traffic.
+fn start_egress_peers(
+    n: usize,
+    q: &Arc<ShardedQueue<Message>>,
+) -> (Vec<TcpReceiver>, Vec<String>) {
+    let mut rxs = Vec::with_capacity(n);
+    let mut eps = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut ports = HashMap::new();
+        ports.insert("in".to_string(), Arc::clone(q));
+        let rx = TcpReceiver::start(0, ports).unwrap();
+        eps.push(rx.endpoint());
+        rxs.push(rx);
+    }
+    (rxs, eps)
+}
+
+/// Pop until `total` messages arrived (bounded by a generous
+/// deadline, so a pipeline bug fails loudly instead of hanging).
+fn drain_count(q: &Arc<ShardedQueue<Message>>, total: usize) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut got = 0usize;
+    while got < total {
+        let wait = Duration::from_millis(100);
+        if let Ok(b) = q.pop_batch_timeout(1024, wait) {
+            got += b.len();
+        }
+        assert!(
+            Instant::now() < deadline,
+            "egress drain stalled at {got}/{total}"
+        );
+    }
+}
+
+/// Blocking baseline vs pipelined egress at `peers` peers: identical
+/// framing, batching and driver-thread budget; only the send path
+/// differs.
+fn bench_egress(peers: usize) -> EgressCell {
+    let total = peers * EGRESS_MSGS_PER_PEER;
+    let msg = Message::f32s(vec![0.5; EGRESS_PAYLOAD / 4]);
+    let drivers = EGRESS_DRIVERS.min(peers);
+
+    // Blocking baseline: frame + `write_all` inline on the driver
+    // thread — the pre-pipeline sender, minus its retry machinery.
+    let q = Arc::new(ShardedQueue::with_default_shards(1 << 16));
+    let (rxs, eps) = start_egress_peers(peers, &q);
+    let start = Instant::now();
+    let handles: Vec<_> = (0..drivers)
+        .map(|t| {
+            let eps = eps.clone();
+            let msg = msg.clone();
+            thread::spawn(move || {
+                let lo = peers * t / drivers;
+                let hi = peers * (t + 1) / drivers;
+                let mut streams: Vec<TcpStream> = eps[lo..hi]
+                    .iter()
+                    .map(|ep| {
+                        let s = TcpStream::connect(ep).unwrap();
+                        s.set_nodelay(true).unwrap();
+                        s
+                    })
+                    .collect();
+                let mut buf = Vec::new();
+                let mut sent = 0usize;
+                while sent < EGRESS_MSGS_PER_PEER {
+                    let k = BATCH.min(EGRESS_MSGS_PER_PEER - sent);
+                    for s in streams.iter_mut() {
+                        buf.clear();
+                        for _ in 0..k {
+                            frame_msg("in", &msg, &mut buf);
+                        }
+                        s.write_all(&buf).unwrap();
+                    }
+                    sent += k;
+                }
+            })
+        })
+        .collect();
+    drain_count(&q, total);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let blocking = total as f64 / start.elapsed().as_secs_f64();
+    for mut rx in rxs {
+        rx.shutdown();
+    }
+
+    // Pipelined: same batches through `TcpSender::send_batch` —
+    // framing on the driver, socket writes on the I/O core.
+    let q = Arc::new(ShardedQueue::with_default_shards(1 << 16));
+    let (rxs, eps) = start_egress_peers(peers, &q);
+    let start = Instant::now();
+    let handles: Vec<_> = (0..drivers)
+        .map(|t| {
+            let eps = eps.clone();
+            let msg = msg.clone();
+            thread::spawn(move || {
+                let lo = peers * t / drivers;
+                let hi = peers * (t + 1) / drivers;
+                let txs: Vec<TcpSender> = eps[lo..hi]
+                    .iter()
+                    .map(|ep| TcpSender::connect(ep, "in").unwrap())
+                    .collect();
+                let mut sent = 0usize;
+                while sent < EGRESS_MSGS_PER_PEER {
+                    let k = BATCH.min(EGRESS_MSGS_PER_PEER - sent);
+                    for tx in &txs {
+                        let msgs: Vec<Message> =
+                            (0..k).map(|_| msg.clone()).collect();
+                        tx.send_batch(msgs).unwrap();
+                    }
+                    sent += k;
+                }
+            })
+        })
+        .collect();
+    drain_count(&q, total);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let pipelined = total as f64 / start.elapsed().as_secs_f64();
+    for mut rx in rxs {
+        rx.shutdown();
+    }
+
+    EgressCell { peers, blocking, pipelined }
+}
+
+/// One driver thread feeding 7 fast peers plus one deliberately slow
+/// one (a raw listener that sips [`SLOW_READ_CHUNK`] bytes every
+/// [`SLOW_READ_PAUSE`]).  Returns how long the *fast* peers' full
+/// traffic took to deliver: the blocking path head-of-line-blocks
+/// the driver on the slow socket, the pipelined path only queues.
+fn bench_slow_peer(pipelined: bool) -> f64 {
+    const FAST: usize = 7;
+    let q = Arc::new(ShardedQueue::with_default_shards(1 << 16));
+    let (rxs, mut eps) = start_egress_peers(FAST, &q);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    eps.push(listener.local_addr().unwrap().to_string());
+    let hurry = Arc::new(AtomicBool::new(false));
+    let h2 = Arc::clone(&hurry);
+    let reader = thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut buf = vec![0u8; SLOW_READ_CHUNK];
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    if !h2.load(Ordering::SeqCst) {
+                        thread::sleep(SLOW_READ_PAUSE);
+                    }
+                }
+            }
+        }
+    });
+    let msg = Message::f32s(vec![0.5; SLOW_PAYLOAD / 4]);
+    let total_fast = FAST * SLOW_MSGS_PER_PEER;
+    let start = Instant::now();
+    let driver = thread::spawn(move || {
+        if pipelined {
+            let txs: Vec<TcpSender> = eps
+                .iter()
+                .map(|ep| TcpSender::connect(ep, "in").unwrap())
+                .collect();
+            let mut sent = 0usize;
+            while sent < SLOW_MSGS_PER_PEER {
+                let k = BATCH.min(SLOW_MSGS_PER_PEER - sent);
+                for tx in &txs {
+                    let msgs: Vec<Message> =
+                        (0..k).map(|_| msg.clone()).collect();
+                    tx.send_batch(msgs).unwrap();
+                }
+                sent += k;
+            }
+        } else {
+            let mut streams: Vec<TcpStream> = eps
+                .iter()
+                .map(|ep| {
+                    let s = TcpStream::connect(ep).unwrap();
+                    s.set_nodelay(true).unwrap();
+                    s
+                })
+                .collect();
+            let mut buf = Vec::new();
+            let mut sent = 0usize;
+            while sent < SLOW_MSGS_PER_PEER {
+                let k = BATCH.min(SLOW_MSGS_PER_PEER - sent);
+                for s in streams.iter_mut() {
+                    buf.clear();
+                    for _ in 0..k {
+                        frame_msg("in", &msg, &mut buf);
+                    }
+                    s.write_all(&buf).unwrap();
+                }
+                sent += k;
+            }
+        }
+    });
+    drain_count(&q, total_fast);
+    let fast_ms = start.elapsed().as_secs_f64() * 1000.0;
+    // Let the slow peer catch up so the teardown is quick and the
+    // pipelined sender's shutdown drain can finish.
+    hurry.store(true, Ordering::SeqCst);
+    driver.join().unwrap();
+    reader.join().unwrap();
+    for mut rx in rxs {
+        rx.shutdown();
+    }
+    fast_ms
+}
+
+/// Slow-peer A/B: the pipelined pass widens the egress queue bound
+/// so the slow peer's whole backlog fits in queued buffers instead
+/// of blocking the driver — that is the scenario's point.
+fn bench_egress_slow_peer() -> (f64, f64) {
+    let blocking_ms = bench_slow_peer(false);
+    set_egress_queue_cap(Some(8 << 20));
+    let pipelined_ms = bench_slow_peer(true);
+    set_egress_queue_cap(None);
+    (blocking_ms, pipelined_ms)
+}
+
 /// Telemetry cost on the hottest primitive: the batched ring at
 /// `MPMC_PRODUCERS` producers, instruments off (the default) vs on.
 /// Same workload, same queue — the delta is the gated park/latency
@@ -499,6 +783,33 @@ fn sweep_json(cells: &[SweepCell]) -> String {
         .join(",\n")
 }
 
+fn egress_json(cells: &[EgressCell], slow: (f64, f64)) -> String {
+    let mut parts: Vec<String> = vec![
+        format!("    \"msgs_per_peer\": {EGRESS_MSGS_PER_PEER}"),
+        format!("    \"payload_bytes\": {EGRESS_PAYLOAD}"),
+    ];
+    for c in cells {
+        parts.push(format!(
+            "    \"p{}\": {{ \"blocking\": {:.0}, \"pipelined\": \
+             {:.0}, \"speedup\": {:.2} }}",
+            c.peers,
+            c.blocking,
+            c.pipelined,
+            c.speedup()
+        ));
+    }
+    let (blk, pip) = slow;
+    parts.push(format!(
+        "    \"slow_peer\": {{ \"blocking_ms\": {blk:.0}, \
+         \"pipelined_ms\": {pip:.0}, \"speedup\": {:.2} }}",
+        blk / pip.max(1.0)
+    ));
+    format!(
+        "  \"egress_pipeline\": {{\n{}\n  }}",
+        parts.join(",\n")
+    )
+}
+
 #[allow(clippy::too_many_arguments)]
 fn write_baseline(
     single: f64,
@@ -507,6 +818,7 @@ fn write_baseline(
     rvm_batched: &[RvmCell],
     tcp_single: f64,
     tcp_batched: f64,
+    egress: &str,
     sweep: &[SweepCell],
     enc: f64,
     dec: f64,
@@ -524,7 +836,7 @@ fn write_baseline(
          \"batch_size\": {BATCH},\n    \"single\": {{\n{}\n    }},\n    \
          \"batched\": {{\n{}\n    }}\n  }},\n  \
          \"tcp_msgs_per_sec\": {{\n    \"single\": {tcp_single:.0},\n    \
-         \"batched\": {tcp_batched:.0}\n  }},\n  \
+         \"batched\": {tcp_batched:.0}\n  }},\n{egress},\n  \
          \"connection_sweep\": {{\n    \"workers\": {},\n{}\n  }},\n  \
          \"codec_msgs_per_sec\": \
          {{\n    \"encode\": {enc:.0},\n    \"decode\": {dec:.0}\n  }},\n  \
@@ -610,6 +922,37 @@ fn main() {
         );
     }
     println!(
+        "\n# Egress pipeline — blocking vs pipelined sends — \
+         messages/second"
+    );
+    println!(
+        "{:>10} {:>14} {:>14} {:>9}",
+        "peers", "blocking", "pipelined", "speedup"
+    );
+    let egress: Vec<EgressCell> = EGRESS_PEERS
+        .iter()
+        .map(|&p| {
+            let c = bench_egress(p);
+            println!(
+                "{:>10} {:>14.0} {:>14.0} {:>8.2}x",
+                c.peers,
+                c.blocking,
+                c.pipelined,
+                c.speedup()
+            );
+            c
+        })
+        .collect();
+    let slow = bench_egress_slow_peer();
+    println!(
+        "{:>10} {:>12.0}ms {:>12.0}ms {:>8.2}x",
+        "slow-peer",
+        slow.0,
+        slow.1,
+        slow.0 / slow.1.max(1.0)
+    );
+
+    println!(
         "\n# Connection sweep — concurrent logical senders against one \
          ingress flake ({} worker(s) + 1 poll thread)",
         IoCore::global().workers()
@@ -650,6 +993,7 @@ fn main() {
         &rvm_batched,
         tcp_single_64,
         tcp_batched_64,
+        &egress_json(&egress, slow),
         &sweep,
         enc_64,
         dec_64,

@@ -17,7 +17,10 @@
 //! [`EndpointTransport`]s, remote [`crate::channel::TcpSender`]s in
 //! logical mode, and the table-resolving delivery path of
 //! [`crate::channel::TcpReceiver`] — re-resolves and carries on.  No
-//! sender ever needs to be told where a flake went.
+//! sender ever needs to be told where a flake went.  Pipelined TCP
+//! senders re-resolve from their I/O-core state machines via
+//! [`EndpointTable::resolve_tcp_versioned`], which pairs the endpoint
+//! with the version to cache it under in the race-safe order.
 //!
 //! Publication is token-guarded: [`EndpointTable::publish`] returns a
 //! token, and [`EndpointTable::unpublish_if`] removes the entry only
@@ -211,6 +214,21 @@ impl EndpointTable {
             .get(flake_id)?
             .tcp
             .clone()
+    }
+
+    /// Resolve a flake's TCP endpoint together with the version to
+    /// cache it under.  The version is read *before* the entry, so a
+    /// racing publish can only make the cached pairing stale (the
+    /// next version check re-resolves), never let a resolver cache
+    /// the *old* endpoint under the *new* version and miss a rebind.
+    /// This is the lookup the pipelined egress path uses from its
+    /// I/O-core state machines.
+    pub fn resolve_tcp_versioned(
+        &self,
+        flake_id: &str,
+    ) -> Option<(u64, String)> {
+        let version = self.version();
+        Some((version, self.resolve_tcp(flake_id)?))
     }
 
     /// Whether a flake is currently published at all — lets delivery

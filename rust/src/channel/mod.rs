@@ -66,7 +66,8 @@ pub use queue::{QueueClosed, SyncQueue};
 pub use ring::RingQueue;
 pub use sharded::{ShardedQueue, DEFAULT_SHARDS};
 pub use tcp::{
-    set_rx_idle_limit, set_write_stall_timeout, TcpReceiver, TcpSender,
+    set_egress_queue_cap, set_rx_idle_limit, set_write_stall_timeout,
+    TcpReceiver, TcpSender,
 };
 
 /// Which primitive backs each [`ShardedQueue`] shard on the data plane.

@@ -16,11 +16,16 @@
 //! and pushes them into the named input port queue; a [`TcpSender`]
 //! holds one connection per (sink, port) pair.
 //!
-//! Both directions are batch-aware and allocation-slim:
-//! [`TcpSender::send_batch`] encodes every frame into a reusable
-//! per-connection scratch buffer ([`Message::encode_into`] — no
-//! per-message `Vec`) and issues a single `write_all` (one syscall per
-//! batch instead of one per message); the receiver reads
+//! Both directions are batch-aware, allocation-slim and
+//! event-driven on the shared I/O core.  [`TcpSender::send_batch`]
+//! encodes every frame into a pooled buffer
+//! ([`Message::encode_into`] — no per-message `Vec`), pushes it onto
+//! a bounded per-sender egress queue and returns: a [`TxConn`] state
+//! machine drains the queue on writability events with vectored
+//! writes (adaptively coalescing multiple queued batches into one
+//! syscall under load), so framing overlaps the kernel writes and a
+//! slow peer blocks its producers only through the bounded queue —
+//! never an OS thread per link.  The receiver reads
 //! socket-buffer-sized chunks into one reusable accumulator, decodes
 //! every complete frame, and delivers them per port with one
 //! [`ShardedQueue::push_batch`].
@@ -51,15 +56,19 @@
 //!   instead of erroring into it.
 //!
 //! Delivery is at-least-once across reconnects: a connection that
-//! breaks mid-buffer resends the whole scratch buffer, so frames the
-//! receiver already consumed may arrive again.  Sinks that cannot
-//! tolerate duplicates dedupe on `Message::seq`.
+//! breaks mid-buffer resends the in-flight batch buffers from the
+//! start, so frames the receiver already consumed may arrive again.
+//! Sinks that cannot tolerate duplicates dedupe on `Message::seq`.
+//! When a sender's bounded retries are exhausted the pipeline drops
+//! what it still holds and surfaces one error on the producer's next
+//! send — the same contract the old synchronous path expressed by
+//! erroring the batch it was carrying.
 
-use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{IoSlice, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -816,6 +825,82 @@ fn serve_blocking(
 /// Don't let one giant batch pin a huge scratch buffer forever.
 const SCRATCH_KEEP: usize = 1 << 20;
 
+/// Shrink an oversized recycled egress buffer only after this many
+/// *consecutive* batches framed below [`SCRATCH_KEEP`].  A steady
+/// large-batch workload keeps its capacity (the old policy shrank
+/// after every oversized send, reallocating each cycle), while a
+/// workload that genuinely shrank gives the memory back after a
+/// short streak.
+const SHRINK_AFTER: u32 = 8;
+
+/// Recycled egress buffers kept per sender: the producer frames into
+/// one buffer while the I/O core writes the previous ones — double
+/// buffering, generalized to a small pool.
+const POOL_KEEP: usize = 4;
+
+/// Default per-sender egress queue bound in bytes (queued plus
+/// in-flight).  A full queue blocks the producer inside
+/// [`TcpSender::send_all`] — zero-loss backpressure, never dropping.
+/// A single batch larger than the cap is admitted alone (the queue
+/// momentarily overshoots by one batch rather than deadlocking).
+const EGRESS_CAP_DEFAULT: usize = 4 << 20;
+
+static EGRESS_CAP: AtomicUsize = AtomicUsize::new(EGRESS_CAP_DEFAULT);
+
+/// Override the per-sender egress queue byte bound process-wide
+/// (`None` restores the default).  Tests shrink it to exercise
+/// backpressure; benches widen it to measure pipelining.
+pub fn set_egress_queue_cap(cap: Option<usize>) {
+    EGRESS_CAP.store(
+        cap.unwrap_or(EGRESS_CAP_DEFAULT).max(1),
+        Ordering::SeqCst,
+    );
+}
+
+fn egress_queue_cap() -> usize {
+    EGRESS_CAP.load(Ordering::Relaxed)
+}
+
+/// Bounds on one coalesced flush: at most this many queued batch
+/// buffers gathered into a single vectored write, and at most
+/// [`COALESCE_BYTES`] bytes in flight at once.  When the queue is
+/// shallow each batch flushes immediately (no added latency); when
+/// producers outrun the peer, batches accumulate and each
+/// writability event drains up to the bound — adaptive coalescing.
+const TX_VECTORS: usize = 16;
+const COALESCE_BYTES: usize = 1 << 20;
+
+/// Vectored flushes one egress state machine performs per wake
+/// before yielding its worker (fairness across connections sharing
+/// the I/O core pool).
+const WRITE_BUDGET: usize = 16;
+
+/// Process-wide count of queued / in-flight egress batch buffers,
+/// mirrored into the `floe_channel_tcp_egress_queue_depth` gauge
+/// (the registry gauge is set-only, so the true count lives here).
+static EGRESS_DEPTH: AtomicU64 = AtomicU64::new(0);
+
+fn egress_depth_add(n: u64) {
+    if n == 0 {
+        return;
+    }
+    let d = EGRESS_DEPTH.fetch_add(n, Ordering::Relaxed) + n;
+    if crate::telemetry::enabled() {
+        crate::telemetry::gauge_tcp_egress_queue().set(d);
+    }
+}
+
+fn egress_depth_sub(n: u64) {
+    if n == 0 {
+        return;
+    }
+    let d =
+        EGRESS_DEPTH.fetch_sub(n, Ordering::Relaxed).saturating_sub(n);
+    if crate::telemetry::enabled() {
+        crate::telemetry::gauge_tcp_egress_queue().set(d);
+    }
+}
+
 /// Where a sender finds its peer.
 enum SenderTarget {
     /// Physical `host:port`, fixed for the sender's lifetime.
@@ -825,21 +910,43 @@ enum SenderTarget {
     Logical { table: Arc<EndpointTable>, flake_id: String },
 }
 
-/// Connection state behind one lock: the resolved endpoint, the table
-/// version it was resolved at, the socket and the reusable frame
-/// scratch buffer (framing and writing happen under the same critical
-/// section anyway, so sharing the lock costs nothing and saves an
-/// allocation per batch).
-struct SenderInner {
-    endpoint: Option<String>,
-    seen_version: u64,
-    stream: Option<TcpStream>,
-    scratch: Vec<u8>,
-    /// When the cached connection last carried a successful write —
-    /// drives the reuse-time staleness probe.
-    last_write: Instant,
-    /// Seeded retry-jitter stream (see [`sender_jitter_rng`]).
-    jitter: Rng,
+/// One entry in a sender's egress queue.
+enum TxItem {
+    /// A framed batch: the buffer and how many logical messages it
+    /// carries (for the tx-frames counter on flush).
+    Data { buf: Vec<u8>, frames: u64 },
+    /// Chaos cut marker: sever the connection at exactly this point
+    /// in the byte stream (drain the old socket in order, reconnect
+    /// fresh) so injected drops / resets / corruption keep their
+    /// position relative to the batches around them.
+    Cut,
+}
+
+/// Producer-visible state of one egress pipeline, shared between the
+/// `TcpSender` handle and its [`TxConn`] state machine.
+struct TxState {
+    items: VecDeque<TxItem>,
+    /// Bytes enqueued plus in flight — the backpressure meter.
+    queued_bytes: usize,
+    /// Drained buffers recycled back to producers (see [`POOL_KEEP`]).
+    pool: Vec<Vec<u8>>,
+    /// Consecutive drained batches below [`SCRATCH_KEEP`].
+    shrink_streak: u32,
+    /// The TxConn parked on an empty queue: the next producer to
+    /// enqueue must kick it awake.
+    parked: bool,
+    /// A TxConn state machine currently owns this state.
+    live: bool,
+    /// The sender handle was dropped: drain the queue fully, then
+    /// FIN and retire.
+    shutdown: bool,
+    /// The TxConn gave up (bounded retries exhausted).  The next
+    /// `send_all` surfaces this error once, then respawns a fresh
+    /// pipeline.
+    broken: Option<String>,
+    /// Spawn generation: lets a retiring TxConn tell whether the
+    /// state still belongs to it (a respawn may have taken over).
+    epoch: u64,
     /// Chaos frame / batch indices (monotone per sender) and the
     /// stash of the previous clean frame for reorder replays.
     chaos_frame: u64,
@@ -847,19 +954,18 @@ struct SenderInner {
     chaos_stash: Vec<u8>,
 }
 
-impl SenderInner {
-    fn new(
-        endpoint: Option<String>,
-        seen_version: u64,
-        stream: Option<TcpStream>,
-    ) -> SenderInner {
-        SenderInner {
-            endpoint,
-            seen_version,
-            stream,
-            scratch: Vec::with_capacity(4096),
-            last_write: Instant::now(),
-            jitter: sender_jitter_rng(),
+impl TxState {
+    fn new() -> TxState {
+        TxState {
+            items: VecDeque::new(),
+            queued_bytes: 0,
+            pool: Vec::new(),
+            shrink_streak: 0,
+            parked: false,
+            live: false,
+            shutdown: false,
+            broken: None,
+            epoch: 0,
             chaos_frame: 0,
             chaos_batch: 0,
             chaos_stash: Vec::new(),
@@ -867,11 +973,53 @@ impl SenderInner {
     }
 }
 
+/// Handle shared between a `TcpSender` (producer side) and its
+/// [`TxConn`] (I/O-core side).
+struct TxShared {
+    state: Mutex<TxState>,
+    /// Signaled whenever queue space frees up or the pipeline dies.
+    space: Condvar,
+    /// The TxConn's netpoll token (0 until registration completes —
+    /// the spawner kicks once the token is published).
+    token: AtomicU64,
+}
+
+/// Return a drained buffer to the producer pool, shrinking an
+/// oversized one only after [`SHRINK_AFTER`] consecutive batches
+/// below the [`SCRATCH_KEEP`] watermark.
+fn recycle_buf(st: &mut TxState, mut buf: Vec<u8>) {
+    if buf.capacity() > SCRATCH_KEEP {
+        if buf.len() >= SCRATCH_KEEP {
+            st.shrink_streak = 0;
+        } else {
+            st.shrink_streak += 1;
+            if st.shrink_streak >= SHRINK_AFTER {
+                buf.shrink_to(SCRATCH_KEEP);
+                st.shrink_streak = 0;
+            }
+        }
+    }
+    buf.clear();
+    if st.pool.len() < POOL_KEEP {
+        st.pool.push(buf);
+    }
+}
+
 /// Sends framed messages to one sink flake's input port over TCP.
+///
+/// Since the egress-pipeline rewrite this is the *producer half*
+/// only: `send_all` frames the batch into a pooled buffer, pushes it
+/// onto a bounded per-sender egress queue and returns without
+/// touching the socket.  A [`TxConn`] state machine on the shared
+/// [`IoCore`] owns the connection and drains the queue on
+/// writability events, so framing the next batch overlaps the kernel
+/// write of the previous one.  A full queue blocks the producer
+/// (zero-loss backpressure); connection failures surface on a later
+/// `send_all` once the TxConn's bounded retries are exhausted.
 pub struct TcpSender {
-    target: SenderTarget,
+    target: Arc<SenderTarget>,
     port_name: String,
-    inner: Mutex<SenderInner>,
+    shared: Arc<TxShared>,
 }
 
 impl TcpSender {
@@ -879,16 +1027,14 @@ impl TcpSender {
     pub fn connect(endpoint: &str, port_name: &str) -> Result<TcpSender> {
         let stream = TcpStream::connect(endpoint)?;
         stream.set_nodelay(true)?;
-        stream.set_write_timeout(write_stall_timeout())?;
-        Ok(TcpSender {
-            target: SenderTarget::Fixed(endpoint.to_string()),
-            port_name: port_name.to_string(),
-            inner: Mutex::new(SenderInner::new(
-                Some(endpoint.to_string()),
-                0,
-                Some(stream),
-            )),
-        })
+        stream.set_nonblocking(true)?;
+        Self::with_pipeline(
+            SenderTarget::Fixed(endpoint.to_string()),
+            port_name,
+            Some(endpoint.to_string()),
+            0,
+            Some(stream),
+        )
     }
 
     /// Connect to the logical address `floe://<flake-id>/<port>`,
@@ -899,27 +1045,49 @@ impl TcpSender {
         table: Arc<EndpointTable>,
         addr: &EndpointAddr,
     ) -> Result<TcpSender> {
-        let seen_version = table.version();
-        let endpoint =
-            table.resolve_tcp(&addr.flake_id).ok_or_else(|| {
+        let (seen_version, endpoint) = table
+            .resolve_tcp_versioned(&addr.flake_id)
+            .ok_or_else(|| {
                 FloeError::Channel(format!(
                     "tcp: {addr} has no published tcp endpoint"
                 ))
             })?;
         let stream = TcpStream::connect(&endpoint)?;
         stream.set_nodelay(true)?;
-        stream.set_write_timeout(write_stall_timeout())?;
-        Ok(TcpSender {
-            target: SenderTarget::Logical {
+        stream.set_nonblocking(true)?;
+        Self::with_pipeline(
+            SenderTarget::Logical {
                 table,
                 flake_id: addr.flake_id.clone(),
             },
-            port_name: addr.port.clone(),
-            inner: Mutex::new(SenderInner::new(
-                Some(endpoint),
-                seen_version,
-                Some(stream),
-            )),
+            &addr.port,
+            Some(endpoint),
+            seen_version,
+            Some(stream),
+        )
+    }
+
+    /// Common tail of the constructors: build the shared egress
+    /// state and hand the (already connected, nonblocking) socket to
+    /// a fresh [`TxConn`] on the I/O core.
+    fn with_pipeline(
+        target: SenderTarget,
+        port_name: &str,
+        endpoint: Option<String>,
+        seen_version: u64,
+        stream: Option<TcpStream>,
+    ) -> Result<TcpSender> {
+        let target = Arc::new(target);
+        let shared = Arc::new(TxShared {
+            state: Mutex::new(TxState::new()),
+            space: Condvar::new(),
+            token: AtomicU64::new(0),
+        });
+        spawn_tx_conn(&target, &shared, endpoint, seen_version, stream)?;
+        Ok(TcpSender {
+            target,
+            port_name: port_name.to_string(),
+            shared,
         })
     }
 
@@ -942,62 +1110,99 @@ impl TcpSender {
         out[len_at..len_at + 4].copy_from_slice(&total.to_le_bytes());
     }
 
-    /// Frame `msgs` into the per-connection scratch buffer and write
-    /// them with one syscall, rebinding / reconnecting as needed.
+    /// Frame `msgs` into a pooled buffer and enqueue it on the
+    /// egress pipeline — nonblocking in the common case.  The only
+    /// waits are backpressure (bounded queue full) and surfacing a
+    /// previous pipeline failure; the socket syscalls themselves all
+    /// happen on the I/O core.
     fn send_all(&self, msgs: &[Message]) -> Result<()> {
-        let mut g = self.inner.lock().expect("tcp sender poisoned");
-        let inner = &mut *g;
-        refresh_endpoint(&self.target, inner, true)?;
-        inner.scratch.clear();
+        let mut st = self.admit()?;
+        let mut buf = st.pool.pop().unwrap_or_default();
+        buf.clear();
         let (cut_before, cut_after) = if crate::chaos::armed() {
-            self.frame_with_chaos(inner, msgs)
+            self.frame_with_chaos(&mut st, &mut buf, msgs)
         } else {
             for msg in msgs {
-                Self::frame_into(
-                    &self.port_name,
-                    msg,
-                    &mut inner.scratch,
-                );
+                Self::frame_into(&self.port_name, msg, &mut buf);
             }
             (false, false)
         };
         if cut_before {
-            // Injected drop/reset: sever the connection *before* the
-            // write so the retry path resends the whole batch in
-            // order.  The drain handshake keeps the old connection's
-            // tail from racing the retry's frames at the sink.
-            if let Some(s) = inner.stream.take() {
-                drain_connection(s);
+            // Injected drop/reset: a cut marker *before* the batch —
+            // the TxConn severs (drain handshake included) and then
+            // transmits the batch on a fresh connection, so the
+            // injected fault keeps its position in the stream and
+            // the resend stays in order.
+            st.items.push_back(TxItem::Cut);
+        }
+        st.queued_bytes += buf.len();
+        st.items.push_back(TxItem::Data {
+            buf,
+            frames: msgs.len() as u64,
+        });
+        if cut_after {
+            // Injected corruption: the receiver closes on detecting
+            // the bad trailer copy, so retire the connection in
+            // order right after this batch flushes.
+            st.items.push_back(TxItem::Cut);
+        }
+        egress_depth_add(1);
+        let kick = st.parked;
+        if kick {
+            st.parked = false;
+        }
+        drop(st);
+        if kick {
+            IoCore::global()
+                .kick(self.shared.token.load(Ordering::SeqCst));
+        }
+        Ok(())
+    }
+
+    /// Gate a producer into the egress queue: surface a pipeline
+    /// failure exactly once (a fresh pipeline respawns on the next
+    /// call), and block while the bounded queue is full — zero-loss
+    /// backpressure, never dropping.
+    fn admit(&self) -> Result<MutexGuard<'_, TxState>> {
+        loop {
+            let mut st =
+                self.shared.state.lock().expect("tcp sender poisoned");
+            if let Some(e) = st.broken.take() {
+                return Err(FloeError::Channel(e));
             }
-        }
-        let result = write_frames(&self.target, inner);
-        if cut_after && result.is_ok() {
-            // Injected corruption: the receiver closes on detection,
-            // so retire this connection in order (drain returns as
-            // soon as the receiver's close lands) and let the next
-            // batch reconnect fresh rather than write into a socket
-            // that is already reset-bound.
-            if let Some(s) = inner.stream.take() {
-                drain_connection(s);
+            if !st.live {
+                // Spawning locks the state itself, so release first.
+                drop(st);
+                spawn_tx_conn(&self.target, &self.shared, None, 0, None)?;
+                continue;
             }
+            while st.live
+                && st.broken.is_none()
+                && st.queued_bytes >= egress_queue_cap()
+            {
+                let (g, _) = self
+                    .shared
+                    .space
+                    .wait_timeout(st, Duration::from_millis(100))
+                    .expect("tcp sender poisoned");
+                st = g;
+            }
+            if st.broken.is_some() || !st.live {
+                continue; // handled at the top of the loop
+            }
+            return Ok(st);
         }
-        if result.is_ok() && crate::telemetry::enabled() {
-            crate::telemetry::ctr_tcp_tx_bytes()
-                .add(inner.scratch.len() as u64);
-            crate::telemetry::ctr_tcp_tx_frames()
-                .add(msgs.len() as u64);
-        }
-        if inner.scratch.capacity() > SCRATCH_KEEP {
-            inner.scratch.shrink_to(SCRATCH_KEEP);
-        }
-        result
     }
 
     /// Frame `msgs` while consulting the armed fault plan, mutating
-    /// the scratch buffer in place.  Returns `(cut_before,
-    /// cut_after)`: cut the connection before the write (drop /
-    /// reset — the retry resends the batch in order) and/or after it
+    /// the batch buffer in place.  Returns `(cut_before,
+    /// cut_after)`: cut the connection before the batch transmits
+    /// (drop / reset — the resend stays in order) and/or after it
     /// (corruption — the receiver is about to close its end anyway).
+    /// On the pipelined path the cuts travel through the egress
+    /// queue as [`TxItem::Cut`] markers, so faults are decided at
+    /// framing/enqueue time but applied at exactly the right point
+    /// in the byte stream.
     ///
     /// Fault mechanics, chosen so the system-level guarantees stay
     /// checkable (zero loss, per-producer FIFO modulo duplicates):
@@ -1025,39 +1230,36 @@ impl TcpSender {
     ///   succeeds, so the sender never retries.
     fn frame_with_chaos(
         &self,
-        inner: &mut SenderInner,
+        st: &mut TxState,
+        out: &mut Vec<u8>,
         msgs: &[Message],
     ) -> (bool, bool) {
         let link = self.describe();
-        let batch_idx = inner.chaos_batch;
-        inner.chaos_batch += 1;
+        let batch_idx = st.chaos_batch;
+        st.chaos_batch += 1;
         let mut cut_before =
             crate::chaos::tx_reset_fault(&link, batch_idx);
         let mut corrupt_tail: Vec<u8> = Vec::new();
         for msg in msgs {
-            let idx = inner.chaos_frame;
-            inner.chaos_frame += 1;
-            let start = inner.scratch.len();
-            Self::frame_into(&self.port_name, msg, &mut inner.scratch);
-            let flen = inner.scratch.len() - start;
+            let idx = st.chaos_frame;
+            st.chaos_frame += 1;
+            let start = out.len();
+            Self::frame_into(&self.port_name, msg, out);
+            let flen = out.len() - start;
             let fault = crate::chaos::tx_frame_fault(&link, idx);
             if let FrameFault::Reorder = fault {
-                if !inner.chaos_stash.is_empty() {
+                if !st.chaos_stash.is_empty() {
                     // Splice the stale frame in *before* the current
                     // one: take current out, append stash, restore.
-                    let cur = inner.scratch.split_off(start);
-                    inner
-                        .scratch
-                        .extend_from_slice(&inner.chaos_stash);
-                    inner.scratch.extend_from_slice(&cur);
+                    let cur = out.split_off(start);
+                    out.extend_from_slice(&st.chaos_stash);
+                    out.extend_from_slice(&cur);
                 }
             }
             // Stash the clean frame for a future reorder replay.
-            let end = inner.scratch.len();
-            inner.chaos_stash.clear();
-            inner
-                .chaos_stash
-                .extend_from_slice(&inner.scratch[end - flen..end]);
+            let end = out.len();
+            st.chaos_stash.clear();
+            st.chaos_stash.extend_from_slice(&out[end - flen..end]);
             match fault {
                 FrameFault::None | FrameFault::Reorder => {}
                 FrameFault::Drop => cut_before = true,
@@ -1065,12 +1267,12 @@ impl TcpSender {
                     thread::sleep(Duration::from_millis(ms));
                 }
                 FrameFault::Duplicate => {
-                    inner.scratch.extend_from_within(end - flen..end);
+                    out.extend_from_within(end - flen..end);
                 }
                 FrameFault::Corrupt(salt) => {
                     let at = corrupt_tail.len();
                     corrupt_tail
-                        .extend_from_slice(&inner.scratch[end - flen..end]);
+                        .extend_from_slice(&out[end - flen..end]);
                     // Flip a byte past the length prefix (corrupting
                     // the prefix itself would desync framing — a
                     // different failure mode).
@@ -1081,52 +1283,612 @@ impl TcpSender {
             }
         }
         let cut_after = !corrupt_tail.is_empty();
-        inner.scratch.extend_from_slice(&corrupt_tail);
+        out.extend_from_slice(&corrupt_tail);
         (cut_before, cut_after)
     }
 }
 
-/// Logical targets: notice a table version bump, re-resolve the
-/// physical endpoint, and when it moved, hand the old connection off
-/// **in order** (`drain` = shutdown write half + wait for the receiver
-/// to finish decoding and close) before pointing at the new endpoint.
-/// Fixed targets never rebind.
-fn refresh_endpoint(
-    target: &SenderTarget,
-    inner: &mut SenderInner,
-    drain: bool,
-) -> Result<()> {
-    let SenderTarget::Logical { table, flake_id } = target else {
-        return Ok(());
-    };
-    let version = table.version();
-    if version == inner.seen_version && inner.endpoint.is_some() {
-        return Ok(());
-    }
-    let endpoint = table.resolve_tcp(flake_id).ok_or_else(|| {
-        FloeError::Channel(format!(
-            "tcp: flake '{flake_id}' has no published tcp endpoint"
-        ))
-    })?;
-    inner.seen_version = version;
-    if inner.endpoint.as_deref() != Some(endpoint.as_str()) {
-        crate::log_debug!(
-            "tcp: rebinding to {endpoint} (flake '{flake_id}' moved)"
-        );
-        if inner.endpoint.is_some() {
-            // A genuine rebind (not the first resolve): audit it.
-            crate::telemetry::ctr_tcp_rebinds().inc();
-            crate::telemetry::tracelog()
-                .instant("rebind", flake_id, &endpoint);
+impl Drop for TcpSender {
+    /// Flag the pipeline for shutdown and wake the TxConn: it drains
+    /// everything still queued, then drops the socket — so the FIN
+    /// the receiver sees always trails the last queued frame.
+    fn drop(&mut self) {
+        let live = match self.shared.state.lock() {
+            Ok(mut st) => {
+                st.shutdown = true;
+                st.parked = false;
+                st.live
+            }
+            Err(_) => false,
+        };
+        if live {
+            IoCore::global()
+                .kick(self.shared.token.load(Ordering::SeqCst));
         }
-        if let Some(stream) = inner.stream.take() {
-            if drain {
-                drain_connection(stream);
+    }
+}
+
+/// Register a fresh [`TxConn`] on the global I/O core, taking over
+/// the shared egress state (bumping its spawn epoch).  With no
+/// stream the slot starts detached (`fd = -1`) and connects on its
+/// first wake; the unconditional kick below guarantees that wake —
+/// and closes the window where a connected socket's first writable
+/// event fires before the token is published (the TxConn parks on
+/// `token == 0` and the kick re-delivers).
+///
+/// Must not be called with the shared state lock held: both this
+/// function and the error-path drop of the boxed TxConn take it.
+fn spawn_tx_conn(
+    target: &Arc<SenderTarget>,
+    shared: &Arc<TxShared>,
+    endpoint: Option<String>,
+    seen_version: u64,
+    stream: Option<TcpStream>,
+) -> Result<()> {
+    let core = IoCore::global();
+    let fd = stream.as_ref().map_or(-1, source_fd);
+    let epoch = {
+        let mut st =
+            shared.state.lock().expect("tcp sender poisoned");
+        st.epoch += 1;
+        st.live = true;
+        st.parked = false;
+        st.epoch
+    };
+    let conn = TxConn {
+        shared: Arc::clone(shared),
+        target: Arc::clone(target),
+        epoch,
+        endpoint,
+        seen_version,
+        stream,
+        inflight: Vec::new(),
+        head_written: 0,
+        pending_cut: false,
+        last_write: Instant::now(),
+        jitter: sender_jitter_rng(),
+        attempt: 0,
+        episode_deadline: None,
+        last_err: String::new(),
+        backoff_until: None,
+        stall_since: None,
+    };
+    let group = core.new_group();
+    let token = core.register_writable(group, fd, Box::new(conn))?;
+    shared.token.store(token, Ordering::SeqCst);
+    core.kick(token);
+    Ok(())
+}
+
+/// What [`TxConn::gather`] found at the head of the egress queue.
+enum Gathered {
+    /// Batches were moved into the in-flight window.
+    Data,
+    /// A chaos cut marker is next: sever before writing further.
+    Cut,
+    /// Nothing queued; `shutdown` says whether to retire or park.
+    Empty { shutdown: bool },
+}
+
+/// Result of one vectored flush attempt.
+enum FlushOutcome {
+    /// Bytes were handed to the kernel.
+    Progress,
+    /// Kernel buffer full (`EWOULDBLOCK`).
+    Blocked,
+    /// `EINTR` — retry immediately.
+    Retry,
+    /// The connection is dead.
+    Broken(String),
+}
+
+/// The I/O-core state machine owning one egress connection: it pops
+/// framed buffers off the shared queue and writes them with vectored
+/// syscalls on writability events, and it owns every slow path the
+/// old blocking sender ran inline — reconnect with jittered backoff
+/// (via poll-thread timers, so no worker ever sleeps), logical
+/// re-resolve + the in-order rebind drain, stale-socket probing,
+/// write-stall deadlines, chaos cuts and the final give-up.
+struct TxConn {
+    shared: Arc<TxShared>,
+    target: Arc<SenderTarget>,
+    /// Spawn generation (see [`TxState::epoch`]).
+    epoch: u64,
+    endpoint: Option<String>,
+    seen_version: u64,
+    stream: Option<TcpStream>,
+    /// Buffers popped from the queue but not yet fully written,
+    /// owned here so a broken connection resends them in order.
+    inflight: Vec<(Vec<u8>, u64)>,
+    /// Bytes of `inflight[0]` already handed to the kernel.
+    head_written: usize,
+    /// A [`TxItem::Cut`] was popped: sever before the next write.
+    pending_cut: bool,
+    /// When this connection last carried a successful write —
+    /// drives the reuse-time staleness probe.
+    last_write: Instant,
+    /// Seeded retry-jitter stream (see [`sender_jitter_rng`]).
+    jitter: Rng,
+    /// Consecutive failures in the current reconnect episode.
+    attempt: usize,
+    /// Logical targets: wall-clock bound on the current episode.
+    episode_deadline: Option<Instant>,
+    last_err: String,
+    /// Backoff gate: park (spurious wakes included) until this
+    /// instant; a `kick_in` timer re-delivers the wake.
+    backoff_until: Option<Instant>,
+    /// First `EWOULDBLOCK` of the current stall, if any.
+    stall_since: Option<Instant>,
+}
+
+impl Conn for TxConn {
+    fn wake(&mut self, _w: Wake, core: &IoCore) -> Serve {
+        if self.token() == 0 {
+            // Registration still completing; the spawner kicks once
+            // the token is published.
+            return Serve::Park;
+        }
+        let mut budget = WRITE_BUDGET;
+        loop {
+            if let Some(until) = self.backoff_until {
+                if Instant::now() < until {
+                    // Still backing off — the kick_in timer already
+                    // scheduled re-wakes us; spurious wakes (e.g. a
+                    // producer kick) land here and park again.
+                    return Serve::Park;
+                }
+                self.backoff_until = None;
+            }
+            if self.inflight.is_empty() && !self.pending_cut {
+                match self.gather() {
+                    Gathered::Cut => self.pending_cut = true,
+                    Gathered::Data => {}
+                    Gathered::Empty { shutdown: true } => {
+                        // Fully drained after the sender dropped:
+                        // retiring drops the socket, so the FIN the
+                        // receiver sees trails the last frame.
+                        return Serve::Close;
+                    }
+                    Gathered::Empty { shutdown: false } => {
+                        return Serve::Park;
+                    }
+                }
+            }
+            if self.pending_cut {
+                self.sever(core);
+                self.pending_cut = false;
+            }
+            if let Err(e) = self.refresh(core) {
+                return self.retry_or_give_up(core, e);
+            }
+            if self.stream.is_none() {
+                if let Err(e) = self.reconnect(core) {
+                    return self.retry_or_give_up(core, e);
+                }
+            } else if self.head_written == 0
+                && self.last_write.elapsed() >= STALE_PROBE_IDLE
+                && stream_stale(self.stream.as_mut().expect("probed"))
+            {
+                // Reuse-time staleness probe: an idle connection may
+                // have been closed by the receiver (idle deadline,
+                // restart) — a write into it would "succeed" into a
+                // reset-bound socket and be lost.
+                crate::log_debug!(
+                    "tcp: cached egress connection went stale while \
+                     idle; reconnecting"
+                );
+                self.drop_stream(core);
+                continue;
+            }
+            match self.flush_inflight() {
+                FlushOutcome::Progress => {
+                    budget -= 1;
+                    if budget == 0 {
+                        // Yield the worker for fairness; writable
+                        // interest re-arms and the next event
+                        // resumes the drain.
+                        return Serve::Continue;
+                    }
+                }
+                FlushOutcome::Retry => {}
+                FlushOutcome::Blocked => {
+                    return self.on_blocked(core);
+                }
+                FlushOutcome::Broken(err) => {
+                    let ep =
+                        self.endpoint.clone().unwrap_or_default();
+                    crate::log_debug!(
+                        "tcp send to {ep} failed ({err}), retrying"
+                    );
+                    self.drop_stream(core);
+                    let e = FloeError::Channel(format!(
+                        "tcp send to {ep}: {err}"
+                    ));
+                    return self.retry_or_give_up(core, e);
+                }
             }
         }
-        inner.endpoint = Some(endpoint);
     }
-    Ok(())
+}
+
+impl TxConn {
+    fn token(&self) -> u64 {
+        self.shared.token.load(Ordering::SeqCst)
+    }
+
+    /// Move queued batches into the in-flight window, bounded by
+    /// [`TX_VECTORS`] buffers / [`COALESCE_BYTES`] bytes.  Stops at
+    /// a [`TxItem::Cut`], which is only consumed once everything
+    /// before it has flushed.  Parking is decided under the state
+    /// lock, so a concurrent enqueue either sees `parked` (and
+    /// kicks) or pushed in time to be gathered here.
+    fn gather(&mut self) -> Gathered {
+        let mut st =
+            self.shared.state.lock().expect("tcp sender poisoned");
+        if self.inflight.is_empty() {
+            if let Some(TxItem::Cut) = st.items.front() {
+                st.items.pop_front();
+                return Gathered::Cut;
+            }
+        }
+        let mut bytes: usize =
+            self.inflight.iter().map(|(b, _)| b.len()).sum();
+        while self.inflight.len() < TX_VECTORS
+            && bytes < COALESCE_BYTES
+            && matches!(st.items.front(), Some(TxItem::Data { .. }))
+        {
+            let Some(TxItem::Data { buf, frames }) =
+                st.items.pop_front()
+            else {
+                unreachable!("front() was Data");
+            };
+            bytes += buf.len();
+            self.inflight.push((buf, frames));
+        }
+        if !self.inflight.is_empty() {
+            return Gathered::Data;
+        }
+        if st.shutdown {
+            return Gathered::Empty { shutdown: true };
+        }
+        st.parked = true;
+        Gathered::Empty { shutdown: false }
+    }
+
+    /// Detach and drop the current socket.  `update_fd(-1)` happens
+    /// *before* the close so a concurrent re-arm can never touch a
+    /// recycled fd.
+    fn drop_stream(&mut self, core: &IoCore) {
+        let _ = core.update_fd(self.token(), -1);
+        self.stream = None;
+        self.head_written = 0; // resend the head buffer in full
+    }
+
+    /// Chaos cut / rebind handoff: sever the connection at this
+    /// point in the stream — drain it in order (FIN, then wait for
+    /// the receiver's close), and let the normal path reconnect.
+    fn sever(&mut self, core: &IoCore) {
+        let _ = core.update_fd(self.token(), -1);
+        self.head_written = 0;
+        if let Some(stream) = self.stream.take() {
+            drain_connection(stream);
+        }
+    }
+
+    /// Logical targets: notice a table version bump, re-resolve, and
+    /// when the endpoint moved, drain the old connection **in
+    /// order** before pointing at the new one.  Fixed targets never
+    /// rebind.
+    fn refresh(&mut self, core: &IoCore) -> Result<()> {
+        let SenderTarget::Logical { table, flake_id } = &*self.target
+        else {
+            return Ok(());
+        };
+        if table.version() == self.seen_version
+            && self.endpoint.is_some()
+        {
+            return Ok(());
+        }
+        let (version, endpoint) = table
+            .resolve_tcp_versioned(flake_id)
+            .ok_or_else(|| {
+                FloeError::Channel(format!(
+                    "tcp: flake '{flake_id}' has no published tcp \
+                     endpoint"
+                ))
+            })?;
+        self.seen_version = version;
+        if self.endpoint.as_deref() != Some(endpoint.as_str()) {
+            crate::log_debug!(
+                "tcp: rebinding to {endpoint} (flake '{flake_id}' \
+                 moved)"
+            );
+            if self.endpoint.is_some() {
+                // A genuine rebind (not the first resolve).
+                crate::telemetry::ctr_tcp_rebinds().inc();
+                crate::telemetry::tracelog()
+                    .instant("rebind", flake_id, &endpoint);
+            }
+            self.sever(core);
+            self.endpoint = Some(endpoint);
+        }
+        Ok(())
+    }
+
+    /// Establish a connection to the resolved endpoint and attach
+    /// its fd to the slot.  The connect itself blocks — acceptable
+    /// on an I/O worker, like every other slow path here.
+    fn reconnect(&mut self, core: &IoCore) -> Result<()> {
+        let Some(endpoint) = self.endpoint.clone() else {
+            return Err(FloeError::Channel(
+                "tcp: endpoint unresolved".to_string(),
+            ));
+        };
+        let stream = TcpStream::connect(&endpoint).map_err(|e| {
+            FloeError::Channel(format!(
+                "tcp reconnect to {endpoint}: {e}"
+            ))
+        })?;
+        let _ = stream.set_nodelay(true);
+        stream.set_nonblocking(true).map_err(|e| {
+            FloeError::Channel(format!("tcp: set_nonblocking: {e}"))
+        })?;
+        core.update_fd(self.token(), source_fd(&stream))?;
+        self.stream = Some(stream);
+        self.head_written = 0;
+        Ok(())
+    }
+
+    /// One vectored flush of the in-flight window.
+    fn flush_inflight(&mut self) -> FlushOutcome {
+        let (res, coalesced) = {
+            let head = self.head_written;
+            let slices: Vec<IoSlice<'_>> = self
+                .inflight
+                .iter()
+                .enumerate()
+                .map(|(i, (buf, _))| {
+                    if i == 0 {
+                        IoSlice::new(&buf[head..])
+                    } else {
+                        IoSlice::new(&buf[..])
+                    }
+                })
+                .collect();
+            let coalesced = slices.len() > 1;
+            let stream =
+                self.stream.as_mut().expect("flush: connected");
+            (stream.write_vectored(&slices), coalesced)
+        };
+        match res {
+            Ok(0) => {
+                FlushOutcome::Broken("wrote 0 bytes".to_string())
+            }
+            Ok(n) => {
+                if crate::telemetry::enabled() {
+                    crate::telemetry::hist_tcp_egress_flush()
+                        .record(n as u64);
+                    if coalesced {
+                        crate::telemetry::ctr_tcp_egress_coalesced()
+                            .inc();
+                    }
+                }
+                if let Some(t0) = self.stall_since.take() {
+                    if crate::telemetry::enabled() {
+                        crate::telemetry::hist_tcp_egress_stall()
+                            .record(t0.elapsed().as_nanos() as u64);
+                    }
+                }
+                self.consume(n);
+                self.last_write = Instant::now();
+                self.attempt = 0;
+                self.episode_deadline = None;
+                FlushOutcome::Progress
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock =>
+            {
+                FlushOutcome::Blocked
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                FlushOutcome::Retry
+            }
+            Err(e) => FlushOutcome::Broken(e.to_string()),
+        }
+    }
+
+    /// Advance the in-flight window by `n` written bytes: fully
+    /// written buffers are recycled to the producer pool and their
+    /// bytes / frames counted; a partial head keeps its offset.
+    fn consume(&mut self, mut n: usize) {
+        let mut done: Vec<(Vec<u8>, u64)> = Vec::new();
+        while n > 0 {
+            let remaining =
+                self.inflight[0].0.len() - self.head_written;
+            if n >= remaining {
+                n -= remaining;
+                self.head_written = 0;
+                done.push(self.inflight.remove(0));
+            } else {
+                self.head_written += n;
+                n = 0;
+            }
+        }
+        if done.is_empty() {
+            return;
+        }
+        let count = done.len() as u64;
+        let mut bytes = 0u64;
+        let mut frames = 0u64;
+        {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .expect("tcp sender poisoned");
+            for (buf, f) in done {
+                st.queued_bytes =
+                    st.queued_bytes.saturating_sub(buf.len());
+                bytes += buf.len() as u64;
+                frames += f;
+                recycle_buf(&mut st, buf);
+            }
+        }
+        egress_depth_sub(count);
+        self.shared.space.notify_all();
+        if crate::telemetry::enabled() {
+            crate::telemetry::ctr_tcp_tx_bytes().add(bytes);
+            crate::telemetry::ctr_tcp_tx_frames().add(frames);
+        }
+    }
+
+    /// The kernel buffer is full.  Arm the stall clock on the first
+    /// block (plus a timer backstop — a wedged peer may never
+    /// produce another writability event) and declare the
+    /// connection broken once the stall bound expires.
+    fn on_blocked(&mut self, core: &IoCore) -> Serve {
+        let limit = write_stall_timeout();
+        match self.stall_since {
+            None => {
+                self.stall_since = Some(Instant::now());
+                if let Some(limit) = limit {
+                    core.kick_in(self.token(), limit);
+                }
+                Serve::Continue
+            }
+            Some(t0) => match limit {
+                Some(limit) if t0.elapsed() >= limit => {
+                    if crate::telemetry::enabled() {
+                        crate::telemetry::hist_tcp_egress_stall()
+                            .record(t0.elapsed().as_nanos() as u64);
+                    }
+                    self.stall_since = None;
+                    self.drop_stream(core);
+                    let e = FloeError::Channel(format!(
+                        "tcp send to {}: write stalled for \
+                         {limit:?}",
+                        self.endpoint
+                            .as_deref()
+                            .unwrap_or("<unresolved>")
+                    ));
+                    self.retry_or_give_up(core, e)
+                }
+                _ => Serve::Continue,
+            },
+        }
+    }
+
+    /// One failure in the current episode: give up (bounded attempts
+    /// for fixed targets; the repair-bridging [`LOGICAL_SEND_DEADLINE`]
+    /// wall clock for logical ones — wide enough to cover a
+    /// `ReplaceFailed` repair, with the re-resolve between attempts
+    /// picking up the replacement's endpoint) or schedule a jittered
+    /// backoff retry via a poll timer — no worker ever sleeps.
+    fn retry_or_give_up(
+        &mut self,
+        core: &IoCore,
+        err: FloeError,
+    ) -> Serve {
+        self.last_err = err.to_string();
+        self.attempt += 1;
+        if self.episode_deadline.is_none() {
+            if let SenderTarget::Logical { .. } = &*self.target {
+                self.episode_deadline =
+                    Some(Instant::now() + LOGICAL_SEND_DEADLINE);
+            }
+        }
+        let give_up = match self.episode_deadline {
+            Some(d) => Instant::now() >= d,
+            None => self.attempt >= SEND_ATTEMPTS,
+        };
+        if give_up {
+            // A logical sink still unreachable after the full
+            // repair-bridging deadline is a suspected partition:
+            // surface it to the failure detector (the lease path
+            // cannot see a sender-side stall on its own).
+            if let SenderTarget::Logical { flake_id, .. } =
+                &*self.target
+            {
+                crate::coordinator::report_endpoint_stall(
+                    flake_id,
+                    &format!(
+                        "send deadline expired after {} attempts: {}",
+                        self.attempt, self.last_err
+                    ),
+                );
+            }
+            self.fail_pending();
+            return Serve::Close;
+        }
+        crate::telemetry::ctr_tcp_reconnects().inc();
+        self.seen_version = 0; // force a fresh resolve next attempt
+        let delay = retry_backoff(self.attempt, &mut self.jitter);
+        self.backoff_until = Some(Instant::now() + delay);
+        core.kick_in(self.token(), delay);
+        Serve::Park
+    }
+
+    /// Retries exhausted: drop everything queued, mark the pipeline
+    /// broken (the next `send_all` surfaces the error once and
+    /// respawns) and free any blocked producers.  Delivery stays
+    /// at-least-once *with error surfacing*: batches pending at
+    /// give-up are reported lost to the producer, exactly as the old
+    /// synchronous path errored the batch it was carrying.
+    fn fail_pending(&mut self) {
+        let mut dropped = self.inflight.len() as u64;
+        self.inflight.clear();
+        self.head_written = 0;
+        let err = format!(
+            "tcp: giving up after {} attempts: {}",
+            self.attempt, self.last_err
+        );
+        crate::log_warn!("{err}");
+        {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .expect("tcp sender poisoned");
+            for item in st.items.drain(..) {
+                if let TxItem::Data { .. } = item {
+                    dropped += 1;
+                }
+            }
+            st.queued_bytes = 0;
+            st.parked = false;
+            st.live = false;
+            st.broken = Some(err);
+        }
+        egress_depth_sub(dropped);
+        self.shared.space.notify_all();
+    }
+}
+
+impl Drop for TxConn {
+    /// Runs when the slot retires (give-up, shutdown drain, or group
+    /// close).  Clean the shared state only if it still belongs to
+    /// this spawn generation — a respawned pipeline's queue must not
+    /// be clobbered by its predecessor's teardown.
+    fn drop(&mut self) {
+        let mut dropped = self.inflight.len() as u64;
+        self.inflight.clear();
+        if let Ok(mut st) = self.shared.state.lock() {
+            if st.epoch == self.epoch {
+                for item in st.items.drain(..) {
+                    if let TxItem::Data { .. } = item {
+                        dropped += 1;
+                    }
+                }
+                st.queued_bytes = 0;
+                st.parked = false;
+                st.live = false;
+            }
+        }
+        egress_depth_sub(dropped);
+        self.shared.space.notify_all();
+    }
 }
 
 /// In-order rebind handshake: stop sending (FIN via write-half
@@ -1135,6 +1897,10 @@ fn refresh_endpoint(
 /// caller write to the *new* endpoint, so bytes on the old connection
 /// can never be overtaken by bytes on the new one.
 fn drain_connection(mut stream: TcpStream) {
+    // Egress sockets run nonblocking on the I/O core; the bounded
+    // read loop below relies on read timeouts, which nonblocking
+    // sockets ignore — restore blocking mode first.
+    let _ = stream.set_nonblocking(false);
     let _ = stream.shutdown(Shutdown::Write);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
     let deadline = Instant::now() + REBIND_DRAIN_TIMEOUT;
@@ -1167,120 +1933,6 @@ fn drain_connection(mut stream: TcpStream) {
     );
 }
 
-/// Write the framed scratch buffer with retries: every failed attempt
-/// drops the connection, re-resolves the endpoint (logical targets —
-/// the sink may have just moved) and backs off briefly before
-/// reconnecting.  Fixed targets give up after [`SEND_ATTEMPTS`];
-/// logical targets retry until [`LOGICAL_SEND_DEADLINE`], wide enough
-/// to bridge a `ReplaceFailed` repair of a dead sink (the re-resolve
-/// between attempts picks up the replacement's republished endpoint).
-///
-/// Delivery is at-least-once across reconnects: if the connection
-/// breaks mid-buffer, the retry resends the whole buffer, so frames
-/// the receiver already consumed may arrive again.  With batching
-/// the duplication window is the batch, not one message — sinks that
-/// cannot tolerate duplicates should dedupe on `Message::seq`.
-fn write_frames(
-    target: &SenderTarget,
-    inner: &mut SenderInner,
-) -> Result<()> {
-    let deadline = match target {
-        SenderTarget::Fixed(_) => None,
-        SenderTarget::Logical { .. } => {
-            Some(Instant::now() + LOGICAL_SEND_DEADLINE)
-        }
-    };
-    let mut last_err = String::new();
-    let mut attempt = 0usize;
-    loop {
-        if attempt > 0 {
-            let give_up = match deadline {
-                Some(d) => Instant::now() >= d,
-                None => attempt >= SEND_ATTEMPTS,
-            };
-            if give_up {
-                // A logical sink still unreachable after the full
-                // repair-bridging deadline is a suspected partition:
-                // surface it to the failure detector (the lease path
-                // cannot see a sender-side stall on its own).
-                if let SenderTarget::Logical { flake_id, .. } = target
-                {
-                    crate::coordinator::report_endpoint_stall(
-                        flake_id,
-                        &format!(
-                            "send deadline expired after {attempt} \
-                             attempts: {last_err}"
-                        ),
-                    );
-                }
-                return Err(FloeError::Channel(format!(
-                    "tcp: giving up after {attempt} attempts: \
-                     {last_err}"
-                )));
-            }
-            crate::telemetry::ctr_tcp_reconnects().inc();
-            thread::sleep(retry_backoff(attempt, &mut inner.jitter));
-            // The old connection is already dead; no drain handshake.
-            inner.seen_version = 0; // force a fresh resolve
-            if let Err(e) = refresh_endpoint(target, inner, false) {
-                last_err = e.to_string();
-                attempt += 1;
-                continue;
-            }
-        }
-        attempt += 1;
-        let Some(endpoint) = inner.endpoint.clone() else {
-            last_err = "endpoint unresolved".to_string();
-            continue;
-        };
-        if let Some(s) = inner.stream.as_mut() {
-            // Reuse-time staleness probe: an idle connection may have
-            // been closed by the receiver (idle deadline, restart) —
-            // a write into it would "succeed" into a reset-bound
-            // socket and be lost.  One nonblocking read detects the
-            // EOF/reset first.
-            if attempt == 1
-                && inner.last_write.elapsed() >= STALE_PROBE_IDLE
-                && stream_stale(s)
-            {
-                crate::log_debug!(
-                    "tcp: cached connection to {endpoint} went stale \
-                     while idle; reconnecting"
-                );
-                inner.stream = None;
-            }
-        }
-        if inner.stream.is_none() {
-            match TcpStream::connect(&endpoint) {
-                Ok(s) => {
-                    let _ = s.set_nodelay(true);
-                    let _ = s.set_write_timeout(write_stall_timeout());
-                    inner.stream = Some(s);
-                }
-                Err(e) => {
-                    last_err =
-                        format!("tcp reconnect to {endpoint}: {e}");
-                    continue;
-                }
-            }
-        }
-        let s = inner.stream.as_mut().expect("just set");
-        match s.write_all(&inner.scratch).and_then(|_| s.flush()) {
-            Ok(()) => {
-                inner.last_write = Instant::now();
-                return Ok(());
-            }
-            Err(e) => {
-                crate::log_debug!(
-                    "tcp send to {endpoint} failed ({e}), retrying"
-                );
-                last_err = format!("tcp send to {endpoint}: {e}");
-                inner.stream = None;
-            }
-        }
-    }
-}
-
 /// Exponential backoff with equal jitter: `base/2 + uniform(0 ..=
 /// base/2)` where `base` doubles per attempt up to
 /// [`SEND_BACKOFF_CAP`].  Unjittered, every sender cut by the same
@@ -1294,26 +1946,20 @@ fn retry_backoff(attempt: usize, jitter: &mut Rng) -> Duration {
     Duration::from_millis(half + jitter.below(base - half + 1))
 }
 
-/// Probe a cached idle connection for a silent peer close: a
-/// nonblocking read returns `WouldBlock` on a healthy idle socket,
-/// `Ok(0)` after a FIN and an error after a reset.  (Receivers never
-/// send application bytes, so `Ok(n)` only occurs on protocol abuse —
+/// Probe a cached idle connection for a silent peer close.  Egress
+/// sockets are already nonblocking, so a plain read suffices: it
+/// returns `WouldBlock` on a healthy idle socket, `Ok(0)` after a
+/// FIN and an error after a reset.  (Receivers never send
+/// application bytes, so `Ok(n)` only occurs on protocol abuse —
 /// treated as healthy and left to the write path.)
 fn stream_stale(s: &mut TcpStream) -> bool {
-    if s.set_nonblocking(true).is_err() {
-        return true;
-    }
     let mut probe = [0u8; 16];
-    let stale = match s.read(&mut probe) {
+    match s.read(&mut probe) {
         Ok(0) => true,
         Ok(_) => false,
         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
         Err(_) => true,
-    };
-    if s.set_nonblocking(false).is_err() {
-        return true;
     }
-    stale
 }
 
 impl Transport for TcpSender {
@@ -1321,8 +1967,9 @@ impl Transport for TcpSender {
         self.send_all(std::slice::from_ref(&msg))
     }
 
-    /// Frame the whole batch into the reusable scratch buffer and write
-    /// it with a single syscall.
+    /// Frame the whole batch into one pooled buffer — it travels the
+    /// egress queue as one unit and flushes with (at most) a single
+    /// vectored syscall.
     fn send_batch(&self, msgs: Vec<Message>) -> Result<()> {
         if msgs.is_empty() {
             return Ok(());
@@ -1331,7 +1978,7 @@ impl Transport for TcpSender {
     }
 
     fn describe(&self) -> String {
-        match &self.target {
+        match &*self.target {
             SenderTarget::Fixed(ep) => {
                 format!("tcp:{ep}#{}", self.port_name)
             }
@@ -1555,21 +2202,29 @@ mod tests {
     }
 
     /// A sender that exhausts its attempts (nobody listening) reports
-    /// a channel error instead of hanging.
+    /// a channel error instead of hanging.  On the pipelined path the
+    /// failure is asynchronous: the TxConn burns its bounded attempts
+    /// in the background and a *later* send surfaces the error.
     #[test]
     fn sender_gives_up_after_bounded_attempts() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let ep = listener.local_addr().unwrap().to_string();
         let tx = TcpSender::connect(&ep, "in").unwrap();
-        drop(listener); // no listener from here on
-        // Poison the live connection so every retry reconnects.
-        {
-            let mut g = tx.inner.lock().unwrap();
-            if let Some(s) = g.stream.take() {
-                let _ = s.shutdown(Shutdown::Both);
+        // Closing the listener resets the backlogged connection and
+        // refuses every reconnect, so the pipeline's retries are
+        // guaranteed to exhaust.
+        drop(listener);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let err = loop {
+            assert!(
+                Instant::now() < deadline,
+                "sender never surfaced the give-up error"
+            );
+            match tx.send(Message::text("x")) {
+                Ok(()) => thread::sleep(Duration::from_millis(10)),
+                Err(e) => break e,
             }
-        }
-        let err = tx.send(Message::text("x")).unwrap_err();
+        };
         assert!(err.to_string().contains("giving up"), "{err}");
     }
 

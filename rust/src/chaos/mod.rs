@@ -27,7 +27,8 @@
 //!   connection: the sender cuts (with a drain handshake, so earlier
 //!   frames finish delivery first) and the retry loop resends the
 //!   frame on a fresh connection.  Zero loss, per-producer FIFO.
-//! * **delay** — the sender stalls `delay_ms` before the write.
+//! * **delay** — the sender stalls `delay_ms` while framing, before
+//!   the batch is enqueued for transmission.
 //! * **duplicate** — the frame is transmitted twice back-to-back; the
 //!   receiver-side dedup watermark drops the echo.
 //! * **reorder** — a stale copy of the *previous* frame is
@@ -44,12 +45,22 @@
 //!   crashing peer); the sender's write fails and retries.
 //! * **read stall** — receivers stop reading for a window (a
 //!   half-open peer: accepted, never reads); kernel buffers absorb
-//!   in-flight bytes and the sender's write-stall timeout bounds the
-//!   blocking write.
+//!   in-flight bytes and the sender's write-stall deadline bounds
+//!   how long the egress pipeline waits for writability.
 //! * **partition** — a container-pair window during which heartbeats
 //!   between the pair freeze (the coordinator side is
 //!   [`COORDINATOR`]): lease expiry driven by *delayed* beats from a
 //!   live husk, not only dead ones.
+//!
+//! On the pipelined egress path, sender-side faults are *decided* at
+//! framing/enqueue time — the decision indices
+//! (per-sender monotone frame and batch counters) are identical to
+//! the old synchronous path, so pinned seeds replay the same fault
+//! schedule — and *applied* at the right point in the byte stream:
+//! drop/reset cuts travel through the egress queue as cut markers
+//! that sever the connection (drain handshake included) exactly
+//! between the batches they were injected between, before anything
+//! later is enqueued to the kernel, so the resend stays in order.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock, RwLock};
@@ -182,7 +193,7 @@ pub enum FrameFault {
     None,
     /// Lose the frame's first transmission (retry resends it).
     Drop,
-    /// Stall the sender this many milliseconds before the write.
+    /// Stall the sender this many milliseconds while framing.
     Delay(u64),
     /// Transmit the frame twice back-to-back.
     Duplicate,

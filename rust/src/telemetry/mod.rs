@@ -159,6 +159,34 @@ static_counter!(
     "floe_channel_tcp_idle_closes_total",
     "Data connections closed by the read-side idle deadline"
 );
+static_gauge!(
+    /// Framed batch buffers sitting in (or in flight from) TCP
+    /// sender egress queues right now, process-wide.
+    gauge_tcp_egress_queue,
+    "floe_channel_tcp_egress_queue_depth",
+    "Framed batch buffers queued in TCP sender egress pipelines"
+);
+static_histogram!(
+    /// Bytes handed to the kernel per egress flush syscall — shows
+    /// how well the pipeline coalesces queued batches under load.
+    hist_tcp_egress_flush,
+    "floe_channel_tcp_egress_flush_bytes",
+    "Bytes written per TCP egress flush syscall"
+);
+static_histogram!(
+    /// Nanoseconds an egress connection spent unwritable (kernel
+    /// buffer full) before progress resumed or the stall bound fired.
+    hist_tcp_egress_stall,
+    "floe_channel_tcp_egress_stall_nanos",
+    "Nanoseconds TCP egress spent blocked on writability"
+);
+static_counter!(
+    /// Egress flushes that coalesced more than one queued batch
+    /// buffer into a single vectored write.
+    ctr_tcp_egress_coalesced,
+    "floe_channel_tcp_egress_coalesced_flushes_total",
+    "TCP egress flushes that coalesced multiple queued batches"
+);
 
 // -- net I/O core family ----------------------------------------------------
 
@@ -347,6 +375,10 @@ pub fn touch() {
     ctr_tcp_rebinds();
     ctr_tcp_corrupt_frames();
     ctr_tcp_idle_closes();
+    gauge_tcp_egress_queue();
+    hist_tcp_egress_flush();
+    hist_tcp_egress_stall();
+    ctr_tcp_egress_coalesced();
     gauge_net_registered();
     gauge_net_active();
     gauge_net_workers();

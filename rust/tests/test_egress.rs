@@ -1,0 +1,534 @@
+//! Contract tests for the event-driven egress pipeline
+//! (`channel::tcp`): `send`/`send_batch` enqueue into a bounded
+//! per-connection queue drained by the shared I/O core, so the
+//! invariants under test are the ones the rewrite must not bend —
+//! zero loss and per-producer FIFO through a mid-stream republish,
+//! the same guarantees under a pinned chaos schedule, bounded
+//! producer-side memory against a reader that never drains, a lagging
+//! peer never stalling its siblings, and sender-side threads tracking
+//! the fixed worker pool rather than the connection count.
+
+use std::collections::{HashMap, HashSet};
+use std::io::Read;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex, OnceLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use floe::channel::{
+    set_egress_queue_cap, EndpointAddr, EndpointTable, ShardedQueue,
+    TcpReceiver, TcpSender, Transport,
+};
+use floe::chaos::{self, FaultPlan, FaultSpec};
+use floe::message::Message;
+use floe::util::netpoll::IoCore;
+
+/// The chaos plan and the egress-queue cap are process-global, so
+/// tests in this binary must not overlap; each takes this lock for
+/// its whole body.
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+/// Suite seed: `FLOE_CHAOS_SEED` (hex with `0x`, or decimal) when
+/// set, a fixed default otherwise.  Printed so any failure is a
+/// one-command repro.
+fn chaos_seed() -> u64 {
+    let seed = match std::env::var("FLOE_CHAOS_SEED") {
+        Ok(s) => {
+            let s = s.trim();
+            let parsed = match s.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse::<u64>(),
+            };
+            parsed.unwrap_or_else(|_| {
+                panic!("unparsable FLOE_CHAOS_SEED {s:?}")
+            })
+        }
+        Err(_) => 0xF10E_CA05_0000_0001,
+    };
+    eprintln!(
+        "chaos seed: {seed:#x} (repro: FLOE_CHAOS_SEED={seed:#x} \
+         cargo test --test test_egress)"
+    );
+    seed
+}
+
+fn port_map(
+    q: &Arc<ShardedQueue<Message>>,
+) -> HashMap<String, Arc<ShardedQueue<Message>>> {
+    let mut m = HashMap::new();
+    m.insert("in".to_string(), Arc::clone(q));
+    m
+}
+
+/// Threads of the net I/O core, by name (`floe-net-poll`,
+/// `floe-net-w*`), via the kernel's per-task comm files.
+#[cfg(target_os = "linux")]
+fn net_thread_count() -> usize {
+    let mut n = 0;
+    if let Ok(entries) = std::fs::read_dir("/proc/self/task") {
+        for e in entries.flatten() {
+            let comm = e.path().join("comm");
+            if let Ok(name) = std::fs::read_to_string(comm) {
+                if name.trim_end().starts_with("floe-net") {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+/// Pop from both queues until `total` messages arrived (or panic at
+/// the deadline), returning each queue's texts in arrival order.
+fn drain_two(
+    q1: &ShardedQueue<Message>,
+    q2: &ShardedQueue<Message>,
+    total: usize,
+) -> (Vec<String>, Vec<String>) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    while a.len() + b.len() < total {
+        let mut idle = true;
+        if let Some(m) = q1.try_pop() {
+            a.push(m.as_text().unwrap().to_string());
+            idle = false;
+        }
+        if let Some(m) = q2.try_pop() {
+            b.push(m.as_text().unwrap().to_string());
+            idle = false;
+        }
+        if idle {
+            assert!(
+                Instant::now() < deadline,
+                "delivery stalled at {}/{total}",
+                a.len() + b.len()
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+    (a, b)
+}
+
+/// Multi-producer zero loss + per-producer FIFO through a mid-stream
+/// republish: every producer's messages arrive exactly once, the old
+/// endpoint's deliveries form a per-producer prefix (the pipeline
+/// drains the old connection before rebinding — PR 5's ordering), and
+/// the new endpoint carries the rest in order.
+#[test]
+fn republish_keeps_producer_fifo_and_zero_loss() {
+    let _g = serial();
+    const PRODUCERS: usize = 6;
+    const MSGS: usize = 400;
+
+    let table = EndpointTable::new();
+    let q1 = Arc::new(ShardedQueue::with_default_shards(65_536));
+    let mut rx1 =
+        TcpReceiver::start_logical(0, "sink-rb", Arc::clone(&table))
+            .unwrap();
+    table.publish("sink-rb", port_map(&q1), Some(rx1.endpoint()));
+
+    // Producers pause at the barrier while the main thread moves the
+    // flake; the second half of every stream crosses the rebind.
+    let barrier = Arc::new(Barrier::new(PRODUCERS + 1));
+    let handles: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let table = Arc::clone(&table);
+            let barrier = Arc::clone(&barrier);
+            thread::spawn(move || {
+                let tx = TcpSender::logical(
+                    table,
+                    &EndpointAddr::new("sink-rb", "in"),
+                )
+                .unwrap();
+                for i in 0..MSGS / 2 {
+                    let m = Message::text(format!("{p}-{i}"));
+                    tx.send(m).unwrap();
+                }
+                barrier.wait();
+                barrier.wait();
+                for i in MSGS / 2..MSGS {
+                    let m = Message::text(format!("{p}-{i}"));
+                    tx.send(m).unwrap();
+                }
+            })
+        })
+        .collect();
+
+    barrier.wait();
+    let q2 = Arc::new(ShardedQueue::with_default_shards(65_536));
+    let mut rx2 =
+        TcpReceiver::start_logical(0, "sink-rb", Arc::clone(&table))
+            .unwrap();
+    table.publish("sink-rb", port_map(&q2), Some(rx2.endpoint()));
+    barrier.wait();
+
+    let total = PRODUCERS * MSGS;
+    let (old, new) = drain_two(&q1, &q2, total);
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        !new.is_empty(),
+        "republish never took effect ({} via old endpoint)",
+        old.len()
+    );
+
+    // Per producer: old-endpoint indices are 0..k in order, then the
+    // new endpoint continues k..MSGS in order — nothing lost, nothing
+    // duplicated, nothing out of order across the rebind.
+    for p in 0..PRODUCERS {
+        let prefix = format!("{p}-");
+        let idx = |texts: &[String]| -> Vec<usize> {
+            texts
+                .iter()
+                .filter_map(|t| t.strip_prefix(&prefix))
+                .map(|i| i.parse().unwrap())
+                .collect()
+        };
+        let before = idx(&old);
+        let after = idx(&new);
+        for (want, got) in before.iter().enumerate() {
+            assert_eq!(*got, want, "old-endpoint order, producer {p}");
+        }
+        for (off, got) in after.iter().enumerate() {
+            assert_eq!(
+                *got,
+                before.len() + off,
+                "new-endpoint order, producer {p}"
+            );
+        }
+        assert_eq!(
+            before.len() + after.len(),
+            MSGS,
+            "producer {p} lost messages"
+        );
+    }
+    rx1.shutdown();
+    rx2.shutdown();
+}
+
+/// First occurrence of each text, in arrival order.
+fn first_occurrences(got: &[String]) -> Vec<String> {
+    let mut seen = HashSet::new();
+    got.iter()
+        .filter(|t| seen.insert(t.as_str()))
+        .cloned()
+        .collect()
+}
+
+/// A pinned chaos schedule on the pipelined path: drops, delays,
+/// duplicates and reorders injected at framing/enqueue time must
+/// yield the same transport guarantees as the old inline sender —
+/// zero loss, per-producer FIFO on first occurrences, dupes allowed.
+#[test]
+fn pinned_chaos_schedule_zero_loss_fifo() {
+    let _g = serial();
+    const PRODUCERS: usize = 4;
+    const MSGS: usize = 250;
+
+    let seed = chaos_seed();
+    let spec = FaultSpec::new()
+        .drop(0.05)
+        .delay(0.05, 2)
+        .duplicate(0.10)
+        .reorder(0.10);
+    let guard = chaos::arm(FaultPlan::compile(seed, spec));
+
+    let table = EndpointTable::new();
+    let q = Arc::new(ShardedQueue::with_default_shards(65_536));
+    let mut rx =
+        TcpReceiver::start_logical(0, "sink-ec", Arc::clone(&table))
+            .unwrap();
+    table.publish("sink-ec", port_map(&q), Some(rx.endpoint()));
+
+    let handles: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let table = Arc::clone(&table);
+            thread::spawn(move || {
+                let tx = TcpSender::logical(
+                    table,
+                    &EndpointAddr::new("sink-ec", "in"),
+                )
+                .unwrap();
+                let mut i = 0usize;
+                // Mixed single sends and batches, so batch-level
+                // faults fire too.
+                while i < MSGS {
+                    let take = [1usize, 3, 7][i % 3].min(MSGS - i);
+                    let batch: Vec<Message> = (i..i + take)
+                        .map(|k| {
+                            Message::text(format!("{p}-{k:04}"))
+                        })
+                        .collect();
+                    if take == 1 {
+                        let m = batch.into_iter().next().unwrap();
+                        tx.send(m).unwrap();
+                    } else {
+                        tx.send_batch(batch).unwrap();
+                    }
+                    i += take;
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // All distinct messages arrive (dupes allowed), within a bound.
+    let total = PRODUCERS * MSGS;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut got: Vec<String> = Vec::new();
+    let mut distinct: HashSet<String> = HashSet::new();
+    while distinct.len() < total {
+        assert!(
+            Instant::now() < deadline,
+            "only {}/{total} distinct arrived ({} total)",
+            distinct.len(),
+            got.len()
+        );
+        match q.try_pop() {
+            Some(m) => {
+                let t = m.as_text().unwrap().to_string();
+                distinct.insert(t.clone());
+                got.push(t);
+            }
+            None => thread::sleep(Duration::from_millis(1)),
+        }
+    }
+
+    // Per-producer FIFO on first occurrences: reorder faults may add
+    // stale duplicates behind the original, never overtakes.
+    let first = first_occurrences(&got);
+    for p in 0..PRODUCERS {
+        let prefix = format!("{p}-");
+        let seq: Vec<&String> = first
+            .iter()
+            .filter(|t| t.starts_with(&prefix))
+            .collect();
+        assert_eq!(seq.len(), MSGS, "producer {p} lost messages");
+        for (i, t) in seq.iter().enumerate() {
+            assert_eq!(**t, format!("{p}-{i:04}"), "producer {p}");
+        }
+    }
+
+    let counts = guard.plan().counts.snapshot();
+    eprintln!("injected: {counts:?}");
+    assert!(
+        counts.drops
+            + counts.delays
+            + counts.duplicates
+            + counts.reorders
+            > 0,
+        "spec injected nothing — schedule suspiciously empty: \
+         {counts:?}"
+    );
+    drop(guard);
+    rx.shutdown();
+}
+
+/// A peer that accepts but never reads must block its *own* producer
+/// (bounded queue — memory does not grow with the backlog) while a
+/// sibling flow on the same I/O core runs to completion untouched.
+#[test]
+fn slow_reader_bounds_memory_and_spares_siblings() {
+    let _g = serial();
+    const SLOW_TARGET: usize = 16_384;
+    const SIBLING_MSGS: usize = 2_000;
+
+    set_egress_queue_cap(Some(64 * 1024));
+
+    // The slow peer: accepts, then sits on the socket until told to
+    // drain, so the sender's queue and the kernel buffers fill.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let slow_ep = listener.local_addr().unwrap().to_string();
+    let drain = Arc::new(AtomicBool::new(false));
+    let d2 = Arc::clone(&drain);
+    let reader = thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        while !d2.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(5));
+        }
+        let mut buf = vec![0u8; 65_536];
+        let mut total = 0u64;
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => total += n as u64,
+            }
+        }
+        total
+    });
+
+    // ~17 MiB of payload against a 64 KiB queue cap: if the queue
+    // were unbounded the producer would finish immediately; with the
+    // cap it must still be mid-stream when the sibling completes.
+    let slow_sent = Arc::new(AtomicUsize::new(0));
+    let slow_done = Arc::new(AtomicBool::new(false));
+    let sent2 = Arc::clone(&slow_sent);
+    let done2 = Arc::clone(&slow_done);
+    let slow = thread::spawn(move || {
+        let tx = TcpSender::connect(&slow_ep, "in").unwrap();
+        let payload = "x".repeat(1024);
+        for _ in 0..SLOW_TARGET {
+            tx.send(Message::text(payload.clone())).unwrap();
+            sent2.fetch_add(1, Ordering::SeqCst);
+        }
+        done2.store(true, Ordering::SeqCst);
+    });
+
+    // Sibling flow: same I/O core, healthy peer — must not notice.
+    let q = Arc::new(ShardedQueue::with_default_shards(16_384));
+    let mut rx = TcpReceiver::start(0, port_map(&q)).unwrap();
+    let tx = TcpSender::connect(&rx.endpoint(), "in").unwrap();
+    for i in 0..SIBLING_MSGS {
+        tx.send(Message::text(format!("s-{i}"))).unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut got = 0usize;
+    while got < SIBLING_MSGS {
+        if q.try_pop().is_some() {
+            got += 1;
+        } else {
+            assert!(
+                Instant::now() < deadline,
+                "sibling stalled at {got}/{SIBLING_MSGS} behind a \
+                 slow peer"
+            );
+            thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    assert!(
+        !slow_done.load(Ordering::SeqCst),
+        "slow-peer producer finished {SLOW_TARGET} sends against a \
+         64 KiB queue — egress queue is not bounded"
+    );
+
+    // Unblock the slow peer, let everything flush, and verify the
+    // backlog really was queued, not dropped.
+    drain.store(true, Ordering::SeqCst);
+    slow.join().unwrap();
+    let bytes = reader.join().unwrap();
+    assert!(
+        bytes as usize > SLOW_TARGET * 1024,
+        "slow peer drained only {bytes} bytes"
+    );
+    assert_eq!(slow_sent.load(Ordering::SeqCst), SLOW_TARGET);
+    rx.shutdown();
+    set_egress_queue_cap(None);
+}
+
+/// 64 concurrent outbound peers driven from 8 producer threads: the
+/// pipeline multiplexes every connection onto the fixed worker pool
+/// (no thread per link), with zero loss and per-sender FIFO.
+#[test]
+fn sixty_four_peers_bounded_threads_zero_loss() {
+    let _g = serial();
+    const RECEIVERS: usize = 8;
+    const SENDERS: usize = 64;
+    const DRIVERS: usize = 8;
+    const MSGS: usize = 50;
+
+    let q = Arc::new(ShardedQueue::with_default_shards(65_536));
+    let mut rxs = Vec::with_capacity(RECEIVERS);
+    let mut eps = Vec::with_capacity(RECEIVERS);
+    for _ in 0..RECEIVERS {
+        let rx = TcpReceiver::start(0, port_map(&q)).unwrap();
+        eps.push(rx.endpoint());
+        rxs.push(rx);
+    }
+
+    let handles: Vec<_> = (0..DRIVERS)
+        .map(|t| {
+            let eps = eps.clone();
+            thread::spawn(move || {
+                let lo = SENDERS * t / DRIVERS;
+                let hi = SENDERS * (t + 1) / DRIVERS;
+                let txs: Vec<TcpSender> = (lo..hi)
+                    .map(|s| {
+                        let ep = &eps[s % RECEIVERS];
+                        TcpSender::connect(ep, "in").unwrap()
+                    })
+                    .collect();
+                // Round-robin so all 64 links stay concurrently
+                // active for the whole run.
+                for i in 0..MSGS {
+                    for (k, tx) in txs.iter().enumerate() {
+                        let s = lo + k;
+                        let m = Message::text(format!("{s}-{i}"));
+                        tx.send(m).unwrap();
+                    }
+                }
+                txs
+            })
+        })
+        .collect();
+
+    // Sample the thread count mid-flight, with all 64 pipelines
+    // registered: poll thread + fixed worker pool, nothing per link.
+    let bound = IoCore::global().workers() + 1;
+    let total = SENDERS * MSGS;
+    let mut texts = Vec::with_capacity(total);
+    let mut sampled = false;
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while texts.len() < total {
+        if let Some(m) = q.try_pop() {
+            texts.push(m.as_text().unwrap().to_string());
+        } else {
+            assert!(
+                Instant::now() < deadline,
+                "delivery stalled at {}/{total}",
+                texts.len()
+            );
+            thread::sleep(Duration::from_millis(1));
+        }
+        #[cfg(target_os = "linux")]
+        {
+            if !sampled && texts.len() >= total / 2 {
+                sampled = true;
+                let n = net_thread_count();
+                assert!(
+                    n <= bound,
+                    "{n} floe-net thread(s) at 64 peers, bound \
+                     {bound} (egress must ride the pool, not spawn \
+                     per link)"
+                );
+            }
+        }
+    }
+    let _ = sampled;
+    for h in handles {
+        drop(h.join().unwrap());
+    }
+
+    // Zero loss + strict per-sender FIFO.
+    let mut last: HashMap<usize, usize> = HashMap::new();
+    for t in &texts {
+        let mut it = t.split('-');
+        let s: usize = it.next().unwrap().parse().unwrap();
+        let i: usize = it.next().unwrap().parse().unwrap();
+        match last.insert(s, i) {
+            None => assert_eq!(i, 0, "first message of sender {s}"),
+            Some(p) => assert_eq!(
+                i,
+                p + 1,
+                "per-sender FIFO violated for sender {s}"
+            ),
+        }
+    }
+    assert_eq!(last.len(), SENDERS, "missing senders");
+    for (s, p) in last {
+        assert_eq!(p, MSGS - 1, "missing tail for sender {s}");
+    }
+    for mut rx in rxs {
+        rx.shutdown();
+    }
+}

@@ -54,6 +54,20 @@ REQUIRED = {
         "ring_vs_mutex.batched.p8.speedup",
         "tcp_msgs_per_sec.single",
         "tcp_msgs_per_sec.batched",
+        "egress_pipeline.msgs_per_peer",
+        "egress_pipeline.payload_bytes",
+        "egress_pipeline.p1.blocking",
+        "egress_pipeline.p1.pipelined",
+        "egress_pipeline.p1.speedup",
+        "egress_pipeline.p8.blocking",
+        "egress_pipeline.p8.pipelined",
+        "egress_pipeline.p8.speedup",
+        "egress_pipeline.p64.blocking",
+        "egress_pipeline.p64.pipelined",
+        "egress_pipeline.p64.speedup",
+        "egress_pipeline.slow_peer.blocking_ms",
+        "egress_pipeline.slow_peer.pipelined_ms",
+        "egress_pipeline.slow_peer.speedup",
         "connection_sweep.workers",
         "connection_sweep.s256.msgs_per_sec",
         "connection_sweep.s256.net_threads",

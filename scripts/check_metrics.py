@@ -14,7 +14,12 @@ covers the metric families the observability layer promises:
 * no series (name + label set) is emitted twice;
 * counters end in `_total` (Prometheus naming convention);
 * the four required families are present: `floe_channel_`,
-  `floe_recompose_`, `floe_elasticity_`, `floe_failover_`.
+  `floe_recompose_`, `floe_elasticity_`, `floe_failover_`;
+* the egress-pipeline instruments are individually present
+  (queue-depth gauge, flush-size and writability-stall histograms,
+  coalesced-flush counter) — they are the observable surface of the
+  nonblocking TCP send path, so losing one silently would blind the
+  dashboards that watch sender backpressure.
 
 CI runs `cargo run --release --example metrics_smoke` and pipes the
 output through this script, so a regression in the hand-rolled
@@ -33,6 +38,13 @@ REQUIRED_FAMILIES = [
     "floe_recompose_",
     "floe_elasticity_",
     "floe_failover_",
+]
+
+REQUIRED_METRICS = [
+    "floe_channel_tcp_egress_queue_depth",
+    "floe_channel_tcp_egress_flush_bytes",
+    "floe_channel_tcp_egress_stall_nanos",
+    "floe_channel_tcp_egress_coalesced_flushes_total",
 ]
 
 TYPE_KINDS = {"counter", "gauge", "summary"}
@@ -136,6 +148,9 @@ def check(text):
     for fam in REQUIRED_FAMILIES:
         if not any(name.startswith(fam) for name in typed):
             errors.append(f"required family missing: {fam}*")
+    for metric in REQUIRED_METRICS:
+        if metric not in typed:
+            errors.append(f"required metric missing: {metric}")
     return errors, samples, len(typed)
 
 
